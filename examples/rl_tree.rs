@@ -1,0 +1,94 @@
+//! Agentic RL on trajectory trees: per-token advantage-weighted policy
+//! gradients (the paper's RL objective, §3.1) trained with Tree Training.
+//!
+//! Rollout trees carry per-token advantages A_t; the loss is
+//! ell_t = -A_t log p(y_t | x_<t), which folds into the same lambda_t
+//! weighting machinery (lambda_t = g_t/K * A_t).  Branches with positive
+//! advantage are reinforced, negative-advantage branches suppressed — here
+//! we verify that on a two-branch bandit-style tree the model shifts
+//! probability mass toward the rewarded branch.
+//!
+//!     cargo run --release --example rl_tree -- [steps]
+
+use std::sync::Arc;
+
+use tree_train::runtime::Runtime;
+use tree_train::trainer::grads::GradBuffer;
+use tree_train::trainer::{AdamWConfig, TreeTrainer};
+use tree_train::tree::{gen, NodeSpec, TrajectoryTree};
+
+/// A rollout: shared prompt, two candidate continuations; the "good" branch
+/// gets advantage +1, the "bad" branch -1 (GRPO-style group baseline).
+fn rollout(seed: u64, vocab: i32) -> (TrajectoryTree, Vec<i32>, Vec<i32>) {
+    let mut r = gen::rng(seed);
+    let mut state = r.i32(0, vocab);
+    let prompt = gen::markov_segments(&mut r, vocab, 8, &mut state);
+    let good: Vec<i32> = (0..6).map(|i| (100 + i) % vocab).collect();
+    let bad: Vec<i32> = (0..6).map(|i| (200 + i * 3) % vocab).collect();
+    let n = prompt.len();
+    let tree = TrajectoryTree::new(vec![
+        NodeSpec::new(-1, prompt).with_trainable(vec![0.0; n]),
+        NodeSpec::new(0, good.clone()).with_advantage(vec![1.0; 6]),
+        NodeSpec::new(0, bad.clone()).with_advantage(vec![-1.0; 6]),
+    ])
+    .unwrap();
+    (tree, good, bad)
+}
+
+/// Mean logprob of a continuation given the prompt (uses eval_loss with
+/// weight 1 on the continuation tokens).
+fn branch_logprob(
+    tr: &TreeTrainer,
+    prompt_tree: &TrajectoryTree,
+    branch: usize,
+) -> anyhow::Result<f64> {
+    let mut t = prompt_tree.clone();
+    // keep only the chosen branch, weight 1, advantage +1
+    let keep = [0usize, branch];
+    let nodes: Vec<NodeSpec> = keep
+        .iter()
+        .enumerate()
+        .map(|(d, &n)| NodeSpec {
+            parent: d as i32 - 1,
+            advantage: vec![1.0; t.nodes[n].tokens.len()],
+            ..t.nodes[n].clone()
+        })
+        .collect();
+    t = TrajectoryTree::new(nodes)?;
+    let mut gb = GradBuffer::zeros(&tr.params);
+    tr.accumulate_tree(&t, &mut gb)?;
+    Ok(-gb.mean_loss()) // mean logprob of trained tokens
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Arc::new(Runtime::from_dir(&artifacts)?);
+    let mut tr = TreeTrainer::new(rt, "tiny", AdamWConfig { lr: 2e-3, ..Default::default() })?;
+    let vocab = 256;
+
+    let (probe, _, _) = rollout(999, vocab);
+    let lp_good_0 = branch_logprob(&tr, &probe, 1)?;
+    let lp_bad_0 = branch_logprob(&tr, &probe, 2)?;
+
+    println!("RL on trajectory trees: {} steps, tiny model", steps);
+    for step in 0..steps {
+        let (tree, _, _) = rollout(step % 8, vocab);
+        let m = tr.train_step(std::slice::from_ref(&tree))?;
+        if step % 10 == 0 {
+            println!("  step {:>3}: pg-loss {:+.4}, grad norm {:.3}", step, m.loss, m.grad_norm);
+        }
+    }
+
+    let lp_good = branch_logprob(&tr, &probe, 1)?;
+    let lp_bad = branch_logprob(&tr, &probe, 2)?;
+    println!("\nmean logprob of rewarded branch:   {lp_good_0:.4} -> {lp_good:.4}");
+    println!("mean logprob of penalized branch:  {lp_bad_0:.4} -> {lp_bad:.4}");
+    assert!(lp_good > lp_good_0, "policy must reinforce the +A branch");
+    assert!(
+        lp_good - lp_bad > lp_good_0 - lp_bad_0,
+        "margin toward the rewarded branch must grow"
+    );
+    println!("RL objective drives probability mass toward the rewarded branch. OK");
+    Ok(())
+}

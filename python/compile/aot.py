@@ -1,0 +1,307 @@
+"""AOT export: lower every training program to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile()``/serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported per model config and shape bucket (DESIGN.md §2):
+
+  step_<model>_c<C>            whole-tree / packed-baseline train step
+  fwd_<model>_c<C>_a<A>        partition forward (emits per-layer KV)
+  bwd_<model>_c<C>_a<A>        partition backward (chains KV cotangents)
+  logprob_<model>_c<C>         per-token logprobs (eval scoring)
+
+Also written:
+  manifest.json                program table: exact flat input/output order
+  params_<model>.bin           f32 initial parameters (manifest order)
+  fixtures/*.json              serializer parity fixtures for the Rust tests
+
+Python runs ONCE (``make artifacts``); the rust coordinator never imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+BATCH_KEYS_BASE = ["tokens", "prev_idx", "pos_ids", "weights",
+                   "q_exit", "k_order", "k_exit", "k_bias"]
+BATCH_KEYS_HYBRID = BATCH_KEYS_BASE + ["chunk_parent_map", "ssm_pad", "conv_idx"]
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def batch_keys(cfg: M.ModelConfig) -> List[str]:
+    return BATCH_KEYS_HYBRID if cfg.kind == "hybrid" else BATCH_KEYS_BASE
+
+
+def batch_specs(cfg: M.ModelConfig, C: int, A: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    T = A + C
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((C,), I32),
+        "prev_idx": jax.ShapeDtypeStruct((C,), I32),
+        "pos_ids": jax.ShapeDtypeStruct((C,), I32),
+        "weights": jax.ShapeDtypeStruct((C,), F32),
+        "q_exit": jax.ShapeDtypeStruct((C,), I32),
+        "k_order": jax.ShapeDtypeStruct((T,), I32),
+        "k_exit": jax.ShapeDtypeStruct((T,), I32),
+        "k_bias": jax.ShapeDtypeStruct((T,), F32),
+    }
+    if cfg.kind == "hybrid":
+        spec["chunk_parent_map"] = jax.ShapeDtypeStruct((C // cfg.chunk_size,), I32)
+        spec["ssm_pad"] = jax.ShapeDtypeStruct((C,), F32)
+        spec["conv_idx"] = jax.ShapeDtypeStruct((C, cfg.conv_kernel), I32)
+    return spec
+
+
+def param_entries(cfg: M.ModelConfig):
+    """Deterministic flat (name, leaf) list for params (manifest order)."""
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    entries = []
+    for path, leaf in flat:
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        entries.append((name, leaf))
+    return entries, treedef, params
+
+
+def n_attn_layers(cfg: M.ModelConfig) -> int:
+    return sum(0 if cfg.is_gdn_layer(i) else 1 for i in range(cfg.n_layers))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_program(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.programs = []
+        self.models = {}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "fixtures"), exist_ok=True)
+
+    def add_model(self, cfg: M.ModelConfig):
+        entries, treedef, params = param_entries(cfg)
+        self.models[cfg.name] = {
+            "config": {k: v for k, v in cfg.__dict__.items()},
+            "n_attn_layers": n_attn_layers(cfg),
+            "n_gdn_layers": cfg.n_layers - n_attn_layers(cfg),
+            "params": [{"name": n, "shape": list(l.shape)} for n, l in entries],
+            "n_params": int(sum(np.prod(l.shape) for _, l in entries)),
+        }
+        # initial parameters: concatenated f32 (manifest order)
+        path = os.path.join(self.out, f"params_{cfg.name}.bin")
+        with open(path, "wb") as f:
+            for _, leaf in entries:
+                f.write(np.asarray(leaf, dtype=np.float32).tobytes())
+        return entries, treedef
+
+    def _emit(self, name: str, hlo: str, meta: dict):
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        meta["name"] = name
+        meta["file"] = f"{name}.hlo.txt"
+        meta["sha256"] = hashlib.sha256(hlo.encode()).hexdigest()[:16]
+        self.programs.append(meta)
+        print(f"  wrote {name}: {len(hlo) / 1e6:.2f} MB HLO text")
+
+    def export_step(self, cfg: M.ModelConfig, C: int):
+        entries, treedef = self.add_model(cfg) if cfg.name not in self.models \
+            else (param_entries(cfg)[0], param_entries(cfg)[1])
+        keys = batch_keys(cfg)
+        specs = batch_specs(cfg, C, 0)
+        run = M.step_program(cfg)
+        leaves = [l for _, l in entries]
+        _, pdef = jax.tree_util.tree_flatten(
+            M.init_params(jax.random.PRNGKey(0), cfg))
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(pdef, args[:len(leaves)])
+            batch = dict(zip(keys, args[len(leaves):]))
+            loss, wsum, grads = run(params, batch)
+            gflat, _ = jax.tree_util.tree_flatten(grads)
+            return (loss, wsum, *gflat)
+
+        arg_specs = ([jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+                     + [specs[k] for k in keys])
+        hlo = lower_program(fn, arg_specs)
+        self._emit(f"step_{cfg.name}_c{C}", hlo, {
+            "kind": "step", "model": cfg.name, "capacity": C, "past": 0,
+            "inputs": [f"param:{n}" for n, _ in entries] + [f"batch:{k}" for k in keys],
+            "outputs": ["loss_sum", "weight_sum"] + [f"grad:{n}" for n, _ in entries],
+        })
+
+    def export_logprob(self, cfg: M.ModelConfig, C: int):
+        entries, _ = param_entries(cfg)[:2]
+        leaves = [l for _, l in entries]
+        _, pdef = jax.tree_util.tree_flatten(
+            M.init_params(jax.random.PRNGKey(0), cfg))
+        keys = batch_keys(cfg)
+        specs = batch_specs(cfg, C, 0)
+        run = M.logprob_program(cfg)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(pdef, args[:len(leaves)])
+            batch = dict(zip(keys, args[len(leaves):]))
+            return (run(params, batch),)
+
+        arg_specs = ([jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+                     + [specs[k] for k in keys])
+        hlo = lower_program(fn, arg_specs)
+        self._emit(f"logprob_{cfg.name}_c{C}", hlo, {
+            "kind": "logprob", "model": cfg.name, "capacity": C, "past": 0,
+            "inputs": [f"param:{n}" for n, _ in entries] + [f"batch:{k}" for k in keys],
+            "outputs": ["logprobs"],
+        })
+
+    def export_partition(self, cfg: M.ModelConfig, C: int, A: int):
+        assert cfg.kind != "hybrid", "partitioned hybrid export: see DESIGN.md"
+        entries, _ = param_entries(cfg)[:2]
+        leaves = [l for _, l in entries]
+        _, pdef = jax.tree_util.tree_flatten(
+            M.init_params(jax.random.PRNGKey(0), cfg))
+        keys = batch_keys(cfg)
+        specs = batch_specs(cfg, C, A)
+        na, H, hd = n_attn_layers(cfg), cfg.n_heads, cfg.head_dim
+        kv_spec = jax.ShapeDtypeStruct((na, A, H, hd), F32)
+        kvp_spec = jax.ShapeDtypeStruct((na, C, H, hd), F32)
+
+        fwd = M.part_fwd_program(cfg)
+
+        def fn_fwd(*args):
+            params = jax.tree_util.tree_unflatten(pdef, args[:len(leaves)])
+            batch = dict(zip(keys, args[len(leaves):len(leaves) + len(keys)]))
+            k_in, v_in = args[len(leaves) + len(keys):]
+            loss, wsum, k_part, v_part = fwd(params, batch, k_in, v_in)
+            return (loss, wsum, k_part, v_part)
+
+        arg_specs = ([jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+                     + [specs[k] for k in keys] + [kv_spec, kv_spec])
+        self._emit(f"fwd_{cfg.name}_c{C}_a{A}", lower_program(fn_fwd, arg_specs), {
+            "kind": "part_fwd", "model": cfg.name, "capacity": C, "past": A,
+            "inputs": [f"param:{n}" for n, _ in entries]
+            + [f"batch:{k}" for k in keys] + ["k_in", "v_in"],
+            "outputs": ["loss_sum", "weight_sum", "k_part", "v_part"],
+        })
+
+        bwd = M.part_bwd_program(cfg)
+
+        def fn_bwd(*args):
+            params = jax.tree_util.tree_unflatten(pdef, args[:len(leaves)])
+            batch = dict(zip(keys, args[len(leaves):len(leaves) + len(keys)]))
+            k_in, v_in, d_k, d_v, cot = args[len(leaves) + len(keys):]
+            loss, wsum, grads, d_k_in, d_v_in = bwd(
+                params, batch, k_in, v_in, d_k, d_v, cot)
+            gflat, _ = jax.tree_util.tree_flatten(grads)
+            return (loss, wsum, *gflat, d_k_in, d_v_in)
+
+        arg_specs = ([jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+                     + [specs[k] for k in keys]
+                     + [kv_spec, kv_spec, kvp_spec, kvp_spec,
+                        jax.ShapeDtypeStruct((), F32)])
+        self._emit(f"bwd_{cfg.name}_c{C}_a{A}", lower_program(fn_bwd, arg_specs), {
+            "kind": "part_bwd", "model": cfg.name, "capacity": C, "past": A,
+            "inputs": [f"param:{n}" for n, _ in entries]
+            + [f"batch:{k}" for k in keys]
+            + ["k_in", "v_in", "d_k_part", "d_v_part", "loss_cot"],
+            "outputs": ["loss_sum", "weight_sum"]
+            + [f"grad:{n}" for n, _ in entries] + ["d_k_in", "d_v_in"],
+        })
+
+    def write_manifest(self):
+        manifest = {"programs": self.programs, "models": self.models,
+                    "format": 1}
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.programs)} programs, "
+              f"{len(self.models)} models")
+
+
+def write_fixtures(out_dir: str):
+    """Serializer parity fixtures: random trees + expected metadata, consumed
+    by rust/tests/serializer_parity.rs."""
+    from compile import batching, treemeta
+    fixtures = []
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=int(rng.integers(1, 14)))
+        meta = treemeta.dfs_serialize(nodes)
+        cap = int(np.ceil((meta.size + 1) / 16) * 16)
+        batch = batching.build_batch(meta, cap, numpy=True)
+        fixtures.append({
+            "seed": seed,
+            "nodes": [{"parent": int(n.parent),
+                       "tokens": n.tokens.tolist(),
+                       "trainable": n.trainable.tolist()} for n in nodes],
+            "capacity": cap,
+            "num_paths": meta.num_paths,
+            "expected": {k: np.asarray(v).reshape(-1).tolist()
+                         for k, v in batch.items()},
+        })
+    path = os.path.join(out_dir, "fixtures", "serializer_parity.json")
+    with open(path, "w") as f:
+        json.dump(fixtures, f)
+    print(f"  wrote fixtures: {len(fixtures)} trees")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny,tiny-moe,tiny-hybrid,small,small-moe,small-hybrid")
+    ap.add_argument("--full", action="store_true", help="also export m100")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out)
+    wanted = args.models.split(",")
+    if args.full:
+        wanted.append("m100")
+
+    # bucket table: (capacity C, gateway capacity A or None)
+    BUCKETS = {
+        "tiny": dict(step=[64], part=[(64, 64)], logprob=[64]),
+        "tiny-moe": dict(step=[64], part=[(64, 64)], logprob=[]),
+        "tiny-hybrid": dict(step=[64], part=[], logprob=[64]),
+        "small": dict(step=[256], part=[(256, 256)], logprob=[256]),
+        "small-moe": dict(step=[256], part=[], logprob=[]),
+        "small-hybrid": dict(step=[256], part=[], logprob=[]),
+        "m100": dict(step=[512], part=[(512, 512)], logprob=[]),
+    }
+
+    for name in wanted:
+        cfg = M.CONFIGS[name]
+        b = BUCKETS[name]
+        print(f"[{name}] kind={cfg.kind} d={cfg.d_model} L={cfg.n_layers}")
+        ex.add_model(cfg)
+        for C in b["step"]:
+            ex.export_step(cfg, C)
+        for C in b["logprob"]:
+            ex.export_logprob(cfg, C)
+        for C, A in b["part"]:
+            ex.export_partition(cfg, C, A)
+    write_fixtures(args.out)
+    ex.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

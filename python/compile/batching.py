@@ -1,0 +1,121 @@
+"""Host-side batch construction: DfsMeta -> model input dict.
+
+This is the python mirror of the Rust coordinator's batch builder
+(rust/src/trainer/batch.rs); the pytest suite uses it to verify the model
+programs end-to-end, and JSON fixtures cross-check the two implementations.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import treemeta
+from compile.kernels import gdn as gdn_k
+from compile.kernels import tree_attention as ta
+
+
+def prev_indices(meta: treemeta.DfsMeta) -> np.ndarray:
+    """Per-token path-predecessor DFS slot (-1 = none: root firsts, pads).
+
+    The per-token loss ell_t = -log p(y_t | x_<t) gathers logits at this
+    slot; a branching node's last token is the predecessor of several
+    children's first tokens, so its logits row feeds multiple losses.
+    """
+    S = meta.size
+    prev = np.full(S, -1, dtype=np.int32)
+    node_last_real: dict[int, int] = {-1: -1}
+    for n in range(len(meta.node_start)):
+        s, ln = int(meta.node_start[n]), int(meta.node_len[n])
+        last = node_last_real[int(meta.node_parent[n])]
+        for t in range(s, s + ln):
+            if meta.pad_mask[t]:
+                continue
+            prev[t] = last
+            last = t
+        node_last_real[n] = last
+    return prev
+
+
+def build_batch(meta: treemeta.DfsMeta, capacity: int,
+                chunk_size: Optional[int] = None,
+                conv_kernel: Optional[int] = None,
+                past_len: int = 0,
+                past_bias: Optional[np.ndarray] = None,
+                gateway_ctx: bool = False,
+                numpy: bool = False) -> dict:
+    """Pad a serialized tree to ``capacity`` and assemble the model batch.
+
+    ``past_len`` > 0 builds the gateway (child-partition) variant: keys
+    0..past_len-1 are ancestor KV rows with additive ``past_bias``.
+    """
+    S = meta.size
+    if S > capacity:
+        raise ValueError(f"tree ({S} tokens) exceeds capacity {capacity}")
+    pad = capacity - S
+
+    exit_p, pos_p, w_p, tok_p = treemeta.pad_meta(
+        meta.subtree_exit, meta.pos_ids, meta.weights, meta.tokens, capacity)
+    prev = np.concatenate([prev_indices(meta), np.full(pad, -1, np.int32)])
+    pad_mask = np.concatenate([meta.pad_mask, np.ones(pad, bool)])
+
+    q_exit = exit_p
+    cur_order = np.arange(capacity, dtype=np.int32)
+    if past_len:
+        k_order = np.concatenate([np.full(past_len, -1, np.int32), cur_order])
+        k_exit = np.concatenate([np.full(past_len, ta.PAST_EXIT, np.int32), q_exit])
+        pb = past_bias if past_bias is not None else np.zeros(past_len, np.float32)
+        k_bias = np.concatenate([pb.astype(np.float32), np.zeros(capacity, np.float32)])
+    else:
+        k_order, k_exit = cur_order, q_exit
+        k_bias = np.zeros(capacity, np.float32)
+
+    batch = {
+        "tokens": tok_p,
+        "prev_idx": prev,
+        "pos_ids": pos_p,
+        "weights": w_p,
+        "q_exit": q_exit.astype(np.int32),
+        "k_order": k_order.astype(np.int32),
+        "k_exit": k_exit.astype(np.int32),
+        "k_bias": k_bias.astype(np.float32),
+    }
+
+    if chunk_size is not None:
+        cpm = treemeta.chunk_parent_map(meta, chunk_size) if S else np.zeros(0, np.int32)
+        n_pad_chunks = pad // chunk_size
+        assert pad % chunk_size == 0, "capacity and tree must be chunk-aligned"
+        # pad chunks chain among themselves, isolated from the tree
+        pad_cpm = np.arange(len(cpm), len(cpm) + n_pad_chunks, dtype=np.int32) - 1
+        if n_pad_chunks:
+            pad_cpm[0] = -1
+        batch["chunk_parent_map"] = np.concatenate([cpm, pad_cpm]).astype(np.int32)
+        batch["ssm_pad"] = pad_mask.astype(np.float32)
+    if conv_kernel is not None:
+        idx = gdn_k.conv_gather_indices(
+            meta.node_start, meta.node_len, meta.node_parent, conv_kernel,
+            pad_mask=meta.pad_mask, has_ctx=gateway_ctx)
+        base = conv_kernel
+        pad_idx = np.zeros((pad, conv_kernel), np.int32)
+        pad_idx[:, conv_kernel - 1] = base + S + np.arange(pad)
+        batch["conv_idx"] = np.concatenate([idx, pad_idx]).astype(np.int32)
+
+    if numpy:
+        return batch
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def batch_for_path(nodes: Sequence[treemeta.NodeSpec], path: list[int],
+                   capacity: int, **kw) -> dict:
+    """Sep-avg baseline helper: one root-to-leaf path as a chain tree."""
+    chain = []
+    for d, n in enumerate(path):
+        nd = nodes[n]
+        chain.append(treemeta.NodeSpec(
+            parent=d - 1, tokens=nd.tokens[:nd.real_len],
+            trainable=nd.trainable[:nd.real_len],
+            advantage=nd.advantage[:nd.real_len]))
+    meta = treemeta.dfs_serialize(chain)
+    return build_batch(meta, capacity, **kw), meta

@@ -1,0 +1,298 @@
+"""Gated Delta Net (GDN) with tree-routed state (paper §3.2, Appendix A.2/A.3).
+
+Two implementations of the chunked gated delta rule with **tree state
+routing** (each chunk reads its *parent* chunk's output state, Eq. 10):
+
+  * ``gdn_tree_chunked``  -- jnp `lax.scan` over chunks carrying the
+    ``all_states`` buffer (the paper's Appendix A.2 translated to JAX with the
+    O(L^2) row loop replaced by a UT forward-substitution inverse).
+  * ``gdn_tree_pallas``   -- the same math as a Pallas kernel: sequential grid
+    over chunks, states buffer resident in the output ref (on TPU this is the
+    VMEM-resident state of §3.3; per-node processing would bounce it through
+    HBM every boundary).
+
+plus the **tree-correct causal convolution** (Appendix A.3) expressed as a
+per-token gather: token t's conv window is its K-1 *path predecessors* (never
+DFS-adjacent sibling tokens), precomputed host-side as gather indices.
+
+Chunk convention: the serializer pads every node segment to a multiple of
+``chunk_size`` so each fixed-size chunk belongs to exactly one node;
+``chunk_parent_map[i]`` is the chunk whose output state chunk i reads (-1 =
+initial state).  Padding tokens carry g = 0 and beta = 0, which makes the
+recurrence state-transparent:  S_t = exp(0) * (I - 0) S_{t-1} + 0 = S_{t-1}.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Shared within-chunk math (paper Appendix A.2, batched over heads)
+# ---------------------------------------------------------------------------
+
+def _ut_inverse(t_mat):
+    """(I - T)^{-1} for strictly-lower-triangular T, by forward substitution.
+
+    t_mat: [H, L, L].  Row recurrence (the paper's attn_rows loop):
+        M[j] = T[j] + T[j] @ M      (T[j,k] = 0 for k >= j makes this exact)
+    """
+    H, L, _ = t_mat.shape
+
+    def body(j, m):
+        row = t_mat[:, j] + jnp.einsum("hk,hkl->hl", t_mat[:, j], m)
+        return m.at[:, j].set(row)
+
+    m = jax.lax.fori_loop(0, L, body, t_mat)
+    return m + jnp.eye(L, dtype=t_mat.dtype)[None]
+
+
+def gdn_chunk_math(q, k, v, g, beta, state):
+    """One chunk of the tree-routed gated delta rule.
+
+    q, k: [L, H, Dk]; v: [L, H, Dv]; g, beta: [L, H];
+    state: [H, Dk, Dv] = parent chunk's output state.
+    Returns (out [L, H, Dv], new_state [H, Dk, Dv]).
+    """
+    L = q.shape[0]
+    # head-major
+    qh = jnp.transpose(q, (1, 0, 2))            # [H, L, Dk]
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))            # [H, L, Dv]
+    gh = jnp.transpose(g, (1, 0))               # [H, L]
+    bh = jnp.transpose(beta, (1, 0))
+
+    g_cum = jnp.cumsum(gh, axis=-1)             # [H, L]
+    # decay[i, j] = exp(g_cum[i] - g_cum[j]) for j <= i else 0
+    decay = jnp.exp(g_cum[:, :, None] - g_cum[:, None, :])
+    tril = jnp.tril(jnp.ones((L, L), dtype=bool))
+    decay = jnp.where(tril[None], decay, 0.0)
+    strict = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)
+
+    k_beta = kh * bh[..., None]                 # [H, L, Dk]
+    v_beta = vh * bh[..., None]                 # [H, L, Dv]
+
+    t_mat = -(jnp.einsum("hid,hjd->hij", k_beta, kh) * decay)
+    t_mat = jnp.where(strict[None], t_mat, 0.0)
+    attn = _ut_inverse(t_mat)                   # [H, L, L]
+
+    value_corr = jnp.einsum("hij,hjd->hid", attn, v_beta)                 # [H,L,Dv]
+    k_cumdecay = jnp.einsum("hij,hjd->hid", attn, k_beta * jnp.exp(g_cum)[..., None])
+
+    v_prime = jnp.einsum("hid,hde->hie", k_cumdecay, state)               # [H,L,Dv]
+    v_new = value_corr - v_prime
+
+    attn_within = jnp.einsum("hid,hjd->hij", qh, kh) * decay              # incl diag
+    attn_inter = jnp.einsum("hid,hde->hie", qh * jnp.exp(g_cum)[..., None], state)
+    out_h = attn_inter + jnp.einsum("hij,hjd->hid", attn_within, v_new)   # [H,L,Dv]
+
+    last = g_cum[:, -1]                          # [H]
+    k_decay = kh * jnp.exp(last[:, None, None] - g_cum[..., None])        # [H,L,Dk]
+    new_state = state * jnp.exp(last)[:, None, None] + \
+        jnp.einsum("hid,hie->hde", k_decay, v_new)
+    return jnp.transpose(out_h, (1, 0, 2)), new_state
+
+
+# ---------------------------------------------------------------------------
+# jnp scan implementation (used by the exported model)
+# ---------------------------------------------------------------------------
+
+def gdn_tree_chunked(q, k, v, g, beta, chunk_parent_map, chunk_size,
+                     initial_state=None):
+    """Tree-routed chunked GDN over a DFS-serialized sequence.
+
+    q, k: [S, H, Dk]; v: [S, H, Dv]; g (log decay), beta: [S, H];
+    chunk_parent_map: [N] i32, N = S / chunk_size (-1 -> initial state).
+    Returns (out [S, H, Dv], all_states [N+1, H, Dk, Dv]) — all_states[c+1]
+    is the state after chunk c (the partition gateway reads these, App. B.7).
+    """
+    S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    L = chunk_size
+    assert S % L == 0, (S, L)
+    N = S // L
+    if initial_state is None:
+        initial_state = jnp.zeros((H, Dk, Dv), dtype=jnp.float32)
+
+    qc = q.reshape(N, L, H, Dk)
+    kc = k.reshape(N, L, H, Dk)
+    vc = v.reshape(N, L, H, Dv)
+    gc = g.reshape(N, L, H)
+    bc = beta.reshape(N, L, H)
+
+    states0 = jnp.zeros((N + 1, H, Dk, Dv), dtype=jnp.float32)
+    states0 = states0.at[0].set(initial_state)
+
+    def body(carry, xs):
+        states, i = carry
+        qi, ki, vi, gi, bi, parent = xs
+        ps = jax.lax.dynamic_index_in_dim(states, parent + 1, axis=0, keepdims=False)
+        out_i, new_s = gdn_chunk_math(qi, ki, vi, gi, bi, ps)
+        states = jax.lax.dynamic_update_index_in_dim(
+            states, new_s.astype(states.dtype), i + 1, axis=0)
+        return (states, i + 1), out_i
+
+    (states, _), outs = jax.lax.scan(
+        body, (states0, jnp.int32(0)),
+        (qc, kc, vc, gc, bc, chunk_parent_map.astype(jnp.int32)))
+    return outs.reshape(S, H, Dv), states
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel implementation
+# ---------------------------------------------------------------------------
+
+def _gdn_kernel(parent_ref, init_ref, q_ref, k_ref, v_ref, g_ref, b_ref,
+                o_ref, states_ref, *, chunk_size):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        states_ref[0] = init_ref[...]
+
+    # index dtype must match the platform default (int64 when x64 is on)
+    idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    parent = parent_ref[i].astype(idt)
+    state = states_ref[parent + 1]               # [H, Dk, Dv]
+    out, new_state = gdn_chunk_math(
+        q_ref[0], k_ref[0], v_ref[0], g_ref[0], b_ref[0], state)
+    o_ref[0] = out
+    states_ref[(i + 1).astype(idt) if hasattr(i, "astype") else i + 1] = new_state
+
+
+def gdn_tree_pallas(q, k, v, g, beta, chunk_parent_map, chunk_size,
+                    initial_state=None):
+    """Pallas version of ``gdn_tree_chunked`` (same signature/returns).
+
+    Sequential grid over chunks; the states buffer lives in the (revisited)
+    output ref, so on TPU it is VMEM-resident across the whole partition —
+    the §3.3 argument for DFS packing over per-node processing.
+    """
+    S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    L = chunk_size
+    assert S % L == 0, (S, L)
+    N = S // L
+    if initial_state is None:
+        initial_state = jnp.zeros((H, Dk, Dv), dtype=jnp.float32)
+
+    kernel = functools.partial(_gdn_kernel, chunk_size=L)
+    out, states = pl.pallas_call(
+        kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((N,), lambda i: (0,)),
+            pl.BlockSpec((H, Dk, Dv), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, L, H, Dk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, L, H, Dk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, L, H, Dv), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, L, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L, H), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, H, Dv), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((N + 1, H, Dk, Dv), lambda i: (0, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, L, H, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((N + 1, H, Dk, Dv), jnp.float32),
+        ],
+        interpret=True,
+    )(chunk_parent_map.astype(jnp.int32), initial_state,
+      q.reshape(N, L, H, Dk), k.reshape(N, L, H, Dk), v.reshape(N, L, H, Dv),
+      g.reshape(N, L, H), beta.reshape(N, L, H))
+    return out.reshape(S, H, Dv), states
+
+
+# ---------------------------------------------------------------------------
+# Tree-correct causal convolution (Appendix A.3) as a host-indexed gather
+# ---------------------------------------------------------------------------
+
+def tree_conv(x, w, b, conv_idx, ctx=None, activation=True):
+    """Depthwise causal conv1d whose window follows the *tree path*.
+
+    x: [S, C]; w: [C, K] (w[:, K-1] taps the current token); b: [C];
+    conv_idx: [S, K] i32 gather indices into the extended input
+        xx = concat([zeros(1, C), ctx (K-1 rows, optional), x]);
+      index 0 is the zero row (missing history), 1..K-1 the gateway conv
+      context from the parent partition (App. B.7), K-1+1+t the t-th token.
+      Host-side the serializer guarantees conv_idx[t, K-1] == t's own slot and
+      earlier taps point at *path predecessors*, skipping pads and sibling
+      branches (Fig. 4).
+    """
+    S, C = x.shape
+    K = w.shape[1]
+    zero = jnp.zeros((1, C), dtype=x.dtype)
+    if ctx is None:
+        ctx = jnp.zeros((K - 1, C), dtype=x.dtype)
+    xx = jnp.concatenate([zero, ctx, x], axis=0)         # [K + S, C]
+    gathered = xx[conv_idx]                               # [S, K, C]
+    out = jnp.einsum("skc,ck->sc", gathered, w) + b[None, :]
+    if activation:
+        out = out * jax.nn.sigmoid(out)                   # silu
+    return out
+
+
+MISSING = None  # tap sentinel: no history -> zero row
+
+
+def conv_gather_indices(node_start, node_len, node_parent, kernel_size,
+                        pad_mask=None, has_ctx=False):
+    """Host-side builder for ``tree_conv``'s gather indices (numpy).
+
+    For each DFS token t, tap j = K-1 is t itself and taps j < K-1 are its
+    path predecessors (most recent at j = K-2), *skipping* tokens flagged in
+    ``pad_mask`` and never crossing into sibling branches (Fig. 4).  Missing
+    history resolves to the zero row; with ``has_ctx`` the first K-1 rows of
+    the extended input are the parent partition's saved conv context
+    (chronological order: row K-1 is the most recent predecessor), App. B.7.
+    Mirrored in rust/src/tree/dfs.rs (cross-checked by fixture tests).
+    """
+    K = kernel_size
+    S = int(node_start[-1] + node_len[-1])
+    if pad_mask is None:
+        pad_mask = np.zeros(S, dtype=bool)
+    base = K  # xx layout: [zero row, ctx rows 1..K-1, tokens base..base+S-1]
+
+    def slot(tap):
+        if tap is MISSING:
+            return 0
+        if tap >= 0:
+            return base + tap
+        return K + tap  # tap = -d (d-th most recent ctx row) -> row K-d
+
+    if has_ctx:
+        root_chain = [-(d + 1) for d in range(K - 1)]  # most recent first
+    else:
+        root_chain = [MISSING] * (K - 1)
+
+    idx = np.zeros((S, K), dtype=np.int32)
+    entry_chain = {-1: root_chain}
+    for n in range(len(node_start)):
+        s, ln = int(node_start[n]), int(node_len[n])
+        chain = list(entry_chain[int(node_parent[n])])
+        for t in range(s, s + ln):
+            idx[t, K - 1] = base + t
+            for d in range(K - 1):  # d-th most recent predecessor -> tap K-2-d
+                idx[t, K - 2 - d] = slot(chain[d])
+            if not pad_mask[t]:
+                chain = [t] + chain[:K - 2]
+        entry_chain[n] = chain
+    return idx
+
+
+def conv_context_tail(x_slots, activation_input, kernel_size):
+    """Last K-1 effective rows for a gateway conv context (host helper).
+
+    ``x_slots``: [>=K-1, C] the pre-activation conv *inputs* at the cut node's
+    last effective positions, chronological order.  Appendix A.3 saves the
+    tail of the concatenated [parent_ctx; chunk] tensor; the gather
+    formulation makes that exactly "the K-1 most recent real path tokens".
+    """
+    K = kernel_size
+    return x_slots[-(K - 1):]

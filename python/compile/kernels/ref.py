@@ -1,0 +1,170 @@
+"""Pure-jnp oracles for the Tree Training kernels.
+
+Three independent references:
+
+  * ``attention_per_path``   -- the paper's sep-avg baseline (Eq. 1): run plain
+    causal attention on every root-to-leaf path independently, scatter the
+    outputs back to DFS token positions.  Forward equivalence (Eq. 6) demands
+    the tree kernel match this exactly for every path.
+  * ``attention_dense_mask`` -- dense-masked softmax attention over the DFS
+    sequence using an explicit boolean tree mask.
+  * ``gdn_recurrent_tree``   -- token-level recurrent Gated Delta Net with
+    tree-routed state (the per-token form of the paper's Eq. 10), plus the
+    per-path causal conv reference for Appendix A.3.
+
+All oracles are deliberately simple/O(S^2) — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention references
+# ---------------------------------------------------------------------------
+
+def attention_dense_mask(q, k, v, mask, sm_scale=None, bias=None):
+    """Softmax attention with an explicit boolean mask.
+
+    q: [S, H, D]; k,v: [T, H, D] (T >= S for the gateway case); mask: [S, T].
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("qhd,khd->hqk", q, k) * sm_scale
+    if bias is not None:
+        s = s + bias[None, None, :]
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, v)
+
+
+def attention_per_path(q, k, v, meta, node_specs, sm_scale=None):
+    """Sep-avg baseline: per-path causal attention, scattered back to DFS slots.
+
+    Shared-prefix tokens get identical outputs on every path through them
+    (verified by the caller), so the scatter is well-defined.
+    Returns [S, H, D] in DFS order.
+    """
+    from compile import treemeta
+
+    out = np.zeros(q.shape, dtype=np.float64)
+    for path in treemeta.paths(node_specs):
+        idx = treemeta.path_token_indices(meta, path)
+        qp, kp, vp = q[idx], k[idx], v[idx]
+        L = len(idx)
+        causal = np.tril(np.ones((L, L), dtype=bool))
+        op = attention_dense_mask(qp, kp, vp, jnp.asarray(causal), sm_scale)
+        out[idx] = np.asarray(op, dtype=np.float64)
+    return jnp.asarray(out, dtype=q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated Delta Net references
+# ---------------------------------------------------------------------------
+
+def gdn_token_step(state, q_t, k_t, v_t, g_t, beta_t):
+    """One token of the gated delta rule.
+
+    state: [H, Dk, Dv].  Recurrence (paper §2 / Yang et al. 2025c):
+        S_t = exp(g_t) * (I - beta_t k_t k_t^T) S_{t-1} + beta_t k_t v_t^T
+        o_t = S_t^T q_t
+    """
+    decay = jnp.exp(g_t)[:, None, None]                       # [H,1,1]
+    kT_S = jnp.einsum("hi,hij->hj", k_t, state)               # k^T S : [H, Dv]
+    state = decay * (state - beta_t[:, None, None] * jnp.einsum("hi,hj->hij", k_t, kT_S))
+    state = state + beta_t[:, None, None] * jnp.einsum("hi,hj->hij", k_t, v_t)
+    o_t = jnp.einsum("hij,hi->hj", state, q_t)                # [H, Dv]
+    return state, o_t
+
+
+def gdn_recurrent_tree(q, k, v, g, beta, node_start, node_len, node_parent):
+    """Token-level recurrent GDN with tree state routing.
+
+    q,k: [S,H,Dk]; v: [S,H,Dv]; g,beta: [S,H].
+    Each node's first token reads its parent node's *last-token* state
+    (Eq. 10); within a node the state flows token-to-token.
+    Returns out [S,H,Dv].
+    """
+    S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    out = np.zeros((S, H, Dv), dtype=np.float64)
+    end_state = {}
+    zero = jnp.zeros((H, Dk, Dv), dtype=jnp.float64)
+    for n in range(len(node_start)):
+        s, ln = int(node_start[n]), int(node_len[n])
+        par = int(node_parent[n])
+        state = end_state[par] if par != -1 else zero
+        for t in range(s, s + ln):
+            state, o_t = gdn_token_step(
+                state,
+                q[t].astype(jnp.float64), k[t].astype(jnp.float64),
+                v[t].astype(jnp.float64), g[t].astype(jnp.float64),
+                beta[t].astype(jnp.float64),
+            )
+            out[t] = np.asarray(o_t)
+        end_state[n] = state
+    return jnp.asarray(out)
+
+
+def gdn_per_path(q, k, v, g, beta, meta, node_specs):
+    """Sep-avg GDN baseline: run the sequential recurrence per path, scatter back."""
+    from compile import treemeta
+
+    S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    out = np.zeros((S, H, Dv), dtype=np.float64)
+    zero = jnp.zeros((H, Dk, Dv), dtype=jnp.float64)
+    for path in treemeta.paths(node_specs):
+        idx = treemeta.path_token_indices(meta, path)
+        state = zero
+        for t in idx:
+            state, o_t = gdn_token_step(
+                state,
+                q[t].astype(jnp.float64), k[t].astype(jnp.float64),
+                v[t].astype(jnp.float64), g[t].astype(jnp.float64),
+                beta[t].astype(jnp.float64),
+            )
+            out[t] = np.asarray(o_t)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Causal conv references (Appendix A.3)
+# ---------------------------------------------------------------------------
+
+def silu(x):
+    return x * (1.0 / (1.0 + np.exp(-x)))
+
+
+def conv_per_path(x, w, b, meta, node_specs, activation=True):
+    """Per-path causal conv1d oracle.
+
+    x: [S, C] channels-last; w: [C, K] depthwise kernel; b: [C].
+    Each path is convolved independently with zero left-padding, outputs
+    scattered back to DFS slots.
+    """
+    from compile import treemeta
+
+    S, C = x.shape
+    K = w.shape[1]
+    out = np.zeros((S, C), dtype=np.float64)
+    w64 = np.asarray(w, dtype=np.float64)
+    b64 = np.asarray(b, dtype=np.float64)
+    for path in treemeta.paths(node_specs):
+        idx = treemeta.path_token_indices(meta, path)
+        xp = np.asarray(x[idx], dtype=np.float64)          # [L, C]
+        L = len(idx)
+        xp_pad = np.concatenate([np.zeros((K - 1, C)), xp], axis=0)
+        o = np.zeros((L, C))
+        for t in range(L):
+            o[t] = np.sum(xp_pad[t:t + K] * w64.T, axis=0)
+        o = o + b64[None, :]
+        if activation:
+            o = silu(o)
+        out[idx] = o
+    return jnp.asarray(out)

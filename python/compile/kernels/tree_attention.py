@@ -1,0 +1,385 @@
+"""Pallas tree-attention kernel (paper §3.2 + Appendix A.1, FlashMask-style).
+
+The tree attention mask on a DFS-serialized trajectory tree ("query i attends
+key j iff j <= i and node(j) is an ancestor-or-self of node(i)") reduces to an
+interval test on O(S) integer metadata (DESIGN.md §2):
+
+    mask[i, j] = (k_order[j] <= i)  AND  (k_exit[j] >= q_exit[i])
+
+plus an additive per-key bias ``k_bias`` used for (a) gateway ancestor
+filtering at partition boundaries (App. B.3, Eq. 16) and (b) masking padded
+key slots.  The same kernel therefore serves:
+
+  * whole-tree DFS attention          (k_order = iota, k_exit = subtree_exit)
+  * packed-linear baseline attention  (each packed segment = a chain tree)
+  * child-partition attention over a gateway KV prefix
+    (past keys: k_order = -1, k_exit = INT32_MAX, k_bias from Eq. 16)
+
+Layout convention: q [S, H, D]; k, v [T, H, D] with T = A + S (A = gateway
+length, 0 when none).  All metadata is host-computed (Rust serializer).
+
+Hardware adaptation (DESIGN.md §4): on TPU the per-block min/max exit test is
+the FlashMask block-skip; here each KV block is wrapped in ``lax.cond`` so the
+skip survives in the lowered HLO.  ``interpret=True`` everywhere — CPU PJRT
+cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+PAST_EXIT = np.int32(2**31 - 1)
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (kernel block size)."""
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_exit_ref, k_order_ref, k_exit_ref, k_bias_ref,
+                q_ref, k_ref, v_ref, o_ref, lse_ref,
+                *, sm_scale, block_q, block_k, kv_len, past_len):
+    qb = pl.program_id(1)
+    q = q_ref[0]                                   # [bq, D]
+    q_exit = q_exit_ref[...]                       # [bq] i32
+    qi = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+    q_exit_min = jnp.min(q_exit)
+    q_max = qb * block_q + (block_q - 1)
+
+    bq, d = q.shape
+    m = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    for kb in range(kv_len // block_k):
+        ks = kb * block_k
+        k_order = k_order_ref[ks:ks + block_k]
+        k_exit = k_exit_ref[ks:ks + block_k]
+        k_bias = k_bias_ref[ks:ks + block_k]
+
+        def compute(carry, ks=ks, k_order=k_order, k_exit=k_exit, k_bias=k_bias):
+            m, l, acc = carry
+            kblk = k_ref[0, ks:ks + block_k]       # [bk, D]
+            vblk = v_ref[0, ks:ks + block_k]
+            s = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * sm_scale
+            s = s + k_bias[None, :]
+            mask = (k_order[None, :] <= qi[:, None]) & (k_exit[None, :] >= q_exit[:, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1))
+            p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=1)
+            acc_new = acc * alpha[:, None] + jnp.dot(p, vblk, preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        # Block skipping (FlashMask): causal skip for blocks fully past the
+        # query block; cross-branch skip when no key subtree reaches any query.
+        skip = jnp.max(k_exit) < q_exit_min
+        if ks >= past_len:  # block contains no gateway keys -> causal skip valid
+            skip = skip | (jnp.min(k_order) > q_max)
+        m, l, acc = jax.lax.cond(skip, lambda c: c, compute, (m, l, acc))
+
+    o_ref[0] = acc / l[:, None]
+    lse_ref[0] = m + jnp.log(l)
+
+
+def _fwd(q, k, v, q_exit, k_order, k_exit, k_bias, sm_scale, block_q, block_k):
+    """q: [H, S, D]; k,v: [H, T, D] -> (o [H,S,D], lse [H,S])."""
+    H, S, D = q.shape
+    T = k.shape[1]
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(T, block_k)
+    past_len = T - S
+    grid = (H, S // bq)
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, block_q=bq, block_k=bk,
+        kv_len=T, past_len=past_len)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda h, qb: (qb,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((1, bq, D), lambda h, qb: (h, qb, 0)),
+            pl.BlockSpec((1, T, D), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((1, T, D), lambda h, qb: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qb: (h, qb, 0)),
+            pl.BlockSpec((1, bq), lambda h, qb: (h, qb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((H, S), jnp.float32),
+        ],
+        interpret=True,
+    )(q_exit, k_order, k_exit, k_bias, q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (FlashAttention-2 style, recompute p from lse)
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(q_exit_ref, k_order_ref, k_exit_ref, k_bias_ref,
+               q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               *, sm_scale, block_q, block_k, kv_len, past_len):
+    qb = pl.program_id(1)
+    q = q_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    q_exit = q_exit_ref[...]
+    qi = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+    q_exit_min = jnp.min(q_exit)
+    q_max = qb * block_q + (block_q - 1)
+
+    bq, d = q.shape
+    dq = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    for kb in range(kv_len // block_k):
+        ks = kb * block_k
+        k_order = k_order_ref[ks:ks + block_k]
+        k_exit = k_exit_ref[ks:ks + block_k]
+        k_bias = k_bias_ref[ks:ks + block_k]
+
+        def compute(dq, ks=ks, k_order=k_order, k_exit=k_exit, k_bias=k_bias):
+            kblk = k_ref[0, ks:ks + block_k]
+            vblk = v_ref[0, ks:ks + block_k]
+            s = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * sm_scale
+            s = s + k_bias[None, :]
+            mask = (k_order[None, :] <= qi[:, None]) & (k_exit[None, :] >= q_exit[:, None])
+            p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+            dp = jnp.dot(do, vblk.T, preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[:, None]) * sm_scale
+            return dq + jnp.dot(ds, kblk, preferred_element_type=jnp.float32)
+
+        skip = jnp.max(k_exit) < q_exit_min
+        if ks >= past_len:
+            skip = skip | (jnp.min(k_order) > q_max)
+        dq = jax.lax.cond(skip, lambda c: c, compute, dq)
+
+    dq_ref[0] = dq
+
+
+def _dkv_kernel(q_exit_ref, k_order_ref, k_exit_ref, k_bias_ref,
+                 q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                 dk_ref, dv_ref,
+                 *, sm_scale, block_q, block_k, q_len, past_len):
+    kb = pl.program_id(1)
+    kblk = k_ref[0]                                 # [bk, D] (blocked over kv)
+    vblk = v_ref[0]
+    k_order = k_order_ref[...]                      # [bk]
+    k_exit = k_exit_ref[...]
+    k_bias = k_bias_ref[...]
+    k_exit_max = jnp.max(k_exit)
+    k_order_min = jnp.min(k_order)
+
+    bk, d = kblk.shape
+    dk = jnp.zeros((bk, d), dtype=jnp.float32)
+    dv = jnp.zeros((bk, d), dtype=jnp.float32)
+
+    for qb in range(q_len // block_q):
+        qs = qb * block_q
+
+        def compute(carry, qs=qs):
+            dk, dv = carry
+            q = q_ref[0, qs:qs + block_q]           # full-length q ref
+            do = do_ref[0, qs:qs + block_q]
+            lse = lse_ref[0, qs:qs + block_q]
+            delta = delta_ref[0, qs:qs + block_q]
+            q_exit = q_exit_ref[qs:qs + block_q]
+            qi = qs + jax.lax.iota(jnp.int32, block_q)
+            s = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * sm_scale
+            s = s + k_bias[None, :]
+            mask = (k_order[None, :] <= qi[:, None]) & (k_exit[None, :] >= q_exit[:, None])
+            p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+            dv_new = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+            dp = jnp.dot(do, vblk.T, preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[:, None]) * sm_scale
+            dk_new = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+            return dk_new, dv_new
+
+        q_exit_blk = q_exit_ref[qs:qs + block_q]
+        skip = k_exit_max < jnp.min(q_exit_blk)
+        # causal: all queries in this block precede every key in the kv block
+        skip = skip | (k_order_min > qs + block_q - 1)
+        dk, dv = jax.lax.cond(skip, lambda c: c, compute, (dk, dv))
+
+    dk_ref[0] = dk
+    dv_ref[0] = dv
+
+
+def _bwd(q, k, v, q_exit, k_order, k_exit, k_bias, o, lse, do,
+         sm_scale, block_q, block_k):
+    H, S, D = q.shape
+    T = k.shape[1]
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(T, block_k)
+    past_len = T - S
+    delta = jnp.sum(do * o, axis=-1)                # [H, S]
+
+    dq_kernel = functools.partial(
+        _dq_kernel, sm_scale=sm_scale, block_q=bq, block_k=bk,
+        kv_len=T, past_len=past_len)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(H, S // bq),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda h, qb: (qb,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((T,), lambda h, qb: (0,)),
+            pl.BlockSpec((1, bq, D), lambda h, qb: (h, qb, 0)),
+            pl.BlockSpec((1, T, D), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((1, T, D), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((1, bq, D), lambda h, qb: (h, qb, 0)),
+            pl.BlockSpec((1, bq), lambda h, qb: (h, qb)),
+            pl.BlockSpec((1, bq), lambda h, qb: (h, qb)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, S, D), jnp.float32),
+        interpret=True,
+    )(q_exit, k_order, k_exit, k_bias, q, k, v, do, lse, delta)
+
+    dkv_kernel = functools.partial(
+        _dkv_kernel, sm_scale=sm_scale, block_q=bq, block_k=bk,
+        q_len=S, past_len=past_len)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(H, T // bk),
+        in_specs=[
+            pl.BlockSpec((S,), lambda h, kb: (0,)),
+            pl.BlockSpec((bk,), lambda h, kb: (kb,)),
+            pl.BlockSpec((bk,), lambda h, kb: (kb,)),
+            pl.BlockSpec((bk,), lambda h, kb: (kb,)),
+            pl.BlockSpec((1, S, D), lambda h, kb: (h, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, kb: (h, kb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, kb: (h, kb, 0)),
+            pl.BlockSpec((1, S, D), lambda h, kb: (h, 0, 0)),
+            pl.BlockSpec((1, S), lambda h, kb: (h, 0)),
+            pl.BlockSpec((1, S), lambda h, kb: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, D), lambda h, kb: (h, kb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, kb: (h, kb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, T, D), jnp.float32),
+            jax.ShapeDtypeStruct((H, T, D), jnp.float32),
+        ],
+        interpret=True,
+    )(q_exit, k_order, k_exit, k_bias, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _tree_attention_hsd(q, k, v, q_exit, k_order, k_exit, k_bias,
+                        sm_scale, block_q, block_k):
+    o, _ = _fwd(q, k, v, q_exit, k_order, k_exit, k_bias, sm_scale, block_q, block_k)
+    return o
+
+
+def _tree_attention_fwd(q, k, v, q_exit, k_order, k_exit, k_bias,
+                        sm_scale, block_q, block_k):
+    o, lse = _fwd(q, k, v, q_exit, k_order, k_exit, k_bias, sm_scale, block_q, block_k)
+    return o, (q, k, v, q_exit, k_order, k_exit, k_bias, o, lse)
+
+
+def _tree_attention_bwd(sm_scale, block_q, block_k, res, do):
+    q, k, v, q_exit, k_order, k_exit, k_bias, o, lse = res
+    dq, dk, dv = _bwd(q, k, v, q_exit, k_order, k_exit, k_bias, o, lse, do,
+                      sm_scale, block_q, block_k)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dq, dk, dv, f0(q_exit), f0(k_order), f0(k_exit),
+            jnp.zeros_like(k_bias))
+
+
+_tree_attention_hsd.defvjp(_tree_attention_fwd, _tree_attention_bwd)
+
+
+def tree_attention(q, k, v, q_exit, k_order, k_exit, k_bias,
+                   sm_scale=None,
+                   block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Tree-masked flash attention on a DFS-serialized sequence.
+
+    Args:
+      q: [S, H, D] queries (current tokens).
+      k, v: [T, H, D] keys/values, T = past_len + S; the first ``past_len``
+        rows are gateway KV from the parent partition (App. B), already
+        RoPE-rotated at their true path positions.
+      q_exit: [S] i32 subtree-exit of each query token's node (current space).
+      k_order: [T] i32 -1 for gateway keys, DFS index for current keys.
+      k_exit: [T] i32 PAST_EXIT sentinel for gateway keys, subtree-exit else.
+      k_bias: [T] f32 additive bias: Eq. 16 ancestor filter on gateway keys,
+        0 on current keys, NEG_INF on padded gateway slots.
+    Returns: [S, H, D].
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(q.shape[-1])
+    qh = jnp.transpose(q, (1, 0, 2)).astype(jnp.float32)
+    kh = jnp.transpose(k, (1, 0, 2)).astype(jnp.float32)
+    vh = jnp.transpose(v, (1, 0, 2)).astype(jnp.float32)
+    o = _tree_attention_hsd(qh, kh, vh,
+                            q_exit.astype(jnp.int32), k_order.astype(jnp.int32),
+                            k_exit.astype(jnp.int32), k_bias.astype(jnp.float32),
+                            float(sm_scale), int(block_q), int(block_k))
+    return jnp.transpose(o, (1, 0, 2))
+
+
+def tree_attention_jnp(q, k, v, q_exit, k_order, k_exit, k_bias, sm_scale=None):
+    """Dense-masked jnp fallback with identical semantics (XLA autodiff).
+
+    Used for the ``--attn-impl=jnp`` AOT variant and as an in-test cross-check
+    of the metadata convention (NOT the oracle — ref.py is built from first
+    principles).
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(q.shape[-1])
+    S = q.shape[0]
+    qi = jnp.arange(S, dtype=jnp.int32)
+    mask = (k_order[None, :] <= qi[:, None]) & (k_exit[None, :] >= q_exit[:, None])
+    s = jnp.einsum("qhd,khd->hqk", q, k) * sm_scale + k_bias[None, None, :]
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask[None], jnp.exp(s - m), 0.0)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, v)
+
+
+def whole_tree_meta(subtree_exit, past_len=0, past_bias=None):
+    """Build (q_exit, k_order, k_exit, k_bias) for a whole-tree (no-gateway
+    or gateway) call from the serializer's subtree_exit vector."""
+    S = len(subtree_exit)
+    q_exit = jnp.asarray(subtree_exit, dtype=jnp.int32)
+    cur_order = jnp.arange(S, dtype=jnp.int32)
+    if past_len == 0:
+        return q_exit, cur_order, q_exit, jnp.zeros((S,), jnp.float32)
+    k_order = jnp.concatenate([jnp.full((past_len,), -1, jnp.int32), cur_order])
+    k_exit = jnp.concatenate([jnp.full((past_len,), PAST_EXIT, jnp.int32), q_exit])
+    if past_bias is None:
+        past_bias = jnp.zeros((past_len,), jnp.float32)
+    k_bias = jnp.concatenate([past_bias, jnp.zeros((S,), jnp.float32)])
+    return q_exit, k_order, k_exit, k_bias

@@ -1,0 +1,457 @@
+"""Layer-2: the JAX model family (dense / MoE / hybrid-GDN transformers).
+
+Every variant shares one *tree-metadata calling convention* so a single
+exported program serves whole-tree training, the packed-linear baseline
+("a sequence is a special case of a prefix tree", §2), and partitioned
+training with differentiable gateways (App. B):
+
+  tokens [C] i32      DFS-serialized token ids (padded to capacity C)
+  prev_idx [C] i32    DFS slot of each token's *path predecessor* (-1 = no
+                      loss: root first tokens, pads).  The per-token loss
+                      gathers logits at prev_idx — a branching node's last
+                      token thereby predicts one target per child branch.
+  pos_ids [C] i32     per-path positions (Eq. 9), RoPE inputs
+  q_exit [C] i32      subtree-exit interval encoding of the tree mask
+  weights [C] f32     lambda_t = g_t/K * trainable * advantage (Eq. 4);
+                      per-token advantages make the same program serve RL
+  hybrid extras: chunk_parent_map [C/chunk] i32, conv_idx [C, K_conv] i32
+
+Gateway convention (partitioned training, dense/moe):
+  k_in, v_in [n_layers, A, H, hd] f32   ancestor KV, already RoPE-rotated at
+                                        true path positions, host-compacted
+                                        to ancestors only (DESIGN.md §2)
+  past_bias [A] f32                     0 = valid row, -inf = padded slot
+Gateway outputs: the partition's own per-layer K/V (k_part, v_part), from
+which the Rust coordinator gathers each cut node's child gateway.
+
+The loss is returned as (loss_sum, weight_sum): loss_sum = sum_t lambda_t *
+CE_t.  Gradients of loss_sum are linear in the per-tree contributions, so the
+coordinator normalizes once per global batch (grads / weight_sum) — keeping
+partition chaining exact (App. B.6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import gdn as gdn_k
+from compile.kernels import tree_attention as ta
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    kind: str = "dense"          # dense | moe | hybrid
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    head_dim: int = 16
+    ffn_mult: int = 4
+    # moe
+    n_experts: int = 4
+    top_k: int = 2
+    aux_coef: float = 0.01
+    # hybrid (GDN)
+    gdn_every: int = 2           # layer i is GDN iff kind==hybrid and i%gdn_every==1
+    chunk_size: int = 16
+    conv_kernel: int = 4
+    gdn_head_dim: int = 16
+    # attention impl: pallas | jnp
+    attn_impl: str = "pallas"
+    rope_base: float = 10000.0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def is_gdn_layer(self, i: int) -> bool:
+        return self.kind == "hybrid" and (i % self.gdn_every == 1)
+
+    @property
+    def gdn_conv_dim(self) -> int:
+        # conv runs over the mixed q|k|v channels (Qwen3.5-style GDN)
+        return self.n_heads * (2 * self.gdn_head_dim + self.head_dim)
+
+    def n_params(self, p=None) -> int:
+        p = p or init_params(jax.random.PRNGKey(0), self)
+        return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(p))
+
+
+CONFIGS: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+TINY = register(ModelConfig(name="tiny"))
+TINY_MOE = register(ModelConfig(name="tiny-moe", kind="moe"))
+TINY_HYBRID = register(ModelConfig(name="tiny-hybrid", kind="hybrid",
+                                   chunk_size=4))
+# the e2e example model (~13M params at vocab 4096)
+SMALL = register(ModelConfig(
+    name="small", vocab=4096, d_model=256, n_layers=8, n_heads=8, head_dim=32))
+SMALL_MOE = register(ModelConfig(
+    name="small-moe", kind="moe", vocab=4096, d_model=256, n_layers=6,
+    n_heads=8, head_dim=32, n_experts=8, top_k=2))
+SMALL_HYBRID = register(ModelConfig(
+    name="small-hybrid", kind="hybrid", vocab=4096, d_model=256, n_layers=6,
+    n_heads=8, head_dim=32, chunk_size=32))
+# ~100M-parameter config (paper-scale shape at laptop vocab)
+M100 = register(ModelConfig(
+    name="m100", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+    head_dim=64))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    # float() keeps the scale weak-typed: numpy f64 scalars would otherwise
+    # promote the whole parameter tree under jax_enable_x64 (test mode)
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(shape[0]))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params: Dict[str, Any] = {
+        "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), 0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[i + 1], 12)
+        layer: Dict[str, Any] = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if cfg.is_gdn_layer(i):
+            H, dk, dv = cfg.n_heads, cfg.gdn_head_dim, cfg.head_dim
+            layer.update({
+                "gdn_qkv": _dense_init(lk[0], (cfg.d_model, cfg.gdn_conv_dim)),
+                "gdn_conv_w": _dense_init(lk[1], (cfg.gdn_conv_dim, cfg.conv_kernel), 0.3),
+                "gdn_conv_b": jnp.zeros((cfg.gdn_conv_dim,), jnp.float32),
+                "gdn_gate": _dense_init(lk[2], (cfg.d_model, H)),
+                "gdn_beta": _dense_init(lk[3], (cfg.d_model, H)),
+                "gdn_out": _dense_init(lk[4], (H * dv, cfg.d_model)),
+            })
+        else:
+            layer.update({
+                "wq": _dense_init(lk[0], (cfg.d_model, cfg.qkv_dim)),
+                "wk": _dense_init(lk[1], (cfg.d_model, cfg.qkv_dim)),
+                "wv": _dense_init(lk[2], (cfg.d_model, cfg.qkv_dim)),
+                "wo": _dense_init(lk[3], (cfg.qkv_dim, cfg.d_model)),
+            })
+        if cfg.kind == "moe" and i % 2 == 1:
+            f = cfg.d_model * cfg.ffn_mult // 2
+            layer.update({
+                "router": _dense_init(lk[4], (cfg.d_model, cfg.n_experts)),
+                "moe_w1": _dense_init(lk[5], (cfg.n_experts, cfg.d_model, f)),
+                "moe_w3": _dense_init(lk[6], (cfg.n_experts, cfg.d_model, f)),
+                "moe_w2": _dense_init(lk[7], (cfg.n_experts, f, cfg.d_model)),
+            })
+        else:
+            f = cfg.d_model * cfg.ffn_mult
+            layer.update({
+                "w1": _dense_init(lk[8], (cfg.d_model, f)),
+                "w3": _dense_init(lk[9], (cfg.d_model, f)),
+                "w2": _dense_init(lk[10], (f, cfg.d_model)),
+            })
+        params[f"layer_{i}"] = layer
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def apply_rope(x, pos, base):
+    """x: [S, H, D]; pos: [S] i32."""
+    S, H, D = x.shape
+    half = D // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    theta = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # [S, half]
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([
+        x1 * cos[:, None, :] - x2 * sin[:, None, :],
+        x1 * sin[:, None, :] + x2 * cos[:, None, :],
+    ], axis=-1)
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def _top_k_by_argmax(probs, k):
+    """Top-k values/indices via k argmax sweeps (HLO-parser-compatible)."""
+    vals, idxs = [], []
+    masked = probs
+    for _ in range(k):
+        i = jnp.argmax(masked, axis=-1)                   # [S]
+        v = jnp.take_along_axis(masked, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i)
+        masked = masked - jax.nn.one_hot(i, probs.shape[-1], dtype=probs.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_ffn(x, layer, cfg: ModelConfig):
+    """Top-k token-choice MoE with dense dispatch (small-E regime).
+
+    Returns (out, aux_loss).  Dense dispatch computes every expert on every
+    token and mixes by routing weight — O(E) compute but exact and
+    fixed-shape (the paper's 30B-MoE analog; see DESIGN.md §5).
+    """
+    S, D = x.shape
+    logits = x @ layer["router"]                          # [S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    # iterated argmax instead of lax.top_k: the `topk` HLO op (largest=...)
+    # postdates the xla_extension 0.5.1 text parser (see DESIGN.md §6)
+    topv, topi = _top_k_by_argmax(probs, cfg.top_k)       # [S, k]
+    gate = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=x.dtype)   # [S, k, E]
+    combine = jnp.einsum("sk,ske->se", gate, onehot)      # [S, E]
+    # all-experts compute
+    h = jnp.einsum("sd,edf->esf", x, layer["moe_w1"])
+    h3 = jnp.einsum("sd,edf->esf", x, layer["moe_w3"])
+    y = jnp.einsum("esf,efd->esd", jax.nn.silu(h) * h3, layer["moe_w2"])
+    out = jnp.einsum("esd,se->sd", y, combine)
+    # Switch-style load-balance aux: E * sum_e importance_e * load_e
+    importance = jnp.mean(probs, axis=0)
+    load = jnp.mean(combine > 0, axis=0).astype(x.dtype)
+    aux = cfg.n_experts * jnp.sum(importance * load)
+    return out, aux
+
+
+def attention_layer(x, layer, cfg: ModelConfig, pos_ids, attn_meta,
+                    k_in=None, v_in=None):
+    """Tree attention block.  Returns (out, k_rot, v_heads) — K already
+    RoPE-rotated (what the gateway caches, App. B.1)."""
+    S = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ layer["wq"]).reshape(S, H, hd)
+    k = (x @ layer["wk"]).reshape(S, H, hd)
+    v = (x @ layer["wv"]).reshape(S, H, hd)
+    q = apply_rope(q, pos_ids, cfg.rope_base)
+    k = apply_rope(k, pos_ids, cfg.rope_base)
+    if k_in is not None:
+        k_all = jnp.concatenate([k_in, k], axis=0)
+        v_all = jnp.concatenate([v_in, v], axis=0)
+    else:
+        k_all, v_all = k, v
+    q_exit, k_order, k_exit, k_bias = attn_meta
+    impl = ta.tree_attention if cfg.attn_impl == "pallas" else ta.tree_attention_jnp
+    o = impl(q, k_all, v_all, q_exit, k_order, k_exit, k_bias)
+    return o.reshape(S, H * hd) @ layer["wo"], k, v
+
+
+def gdn_layer(x, layer, cfg: ModelConfig, chunk_parent_map, conv_idx,
+              ssm_pad=None, ssm_state_in=None, conv_ctx_in=None):
+    """GDN SSM block with tree routing.  Returns (out, all_states, conv_x).
+
+    conv_x is the pre-conv mixed qkv (the gateway conv-context source,
+    App. B.7); all_states[c+1] is the recurrent state after chunk c.
+    ``ssm_pad`` (f32 0/1) makes alignment pads state-transparent:
+    g = 0, beta = 0  =>  S_t = S_{t-1}.
+    """
+    S = x.shape[0]
+    H, dk, dv = cfg.n_heads, cfg.gdn_head_dim, cfg.head_dim
+    conv_x = x @ layer["gdn_qkv"]                          # [S, conv_dim]
+    mixed = gdn_k.tree_conv(conv_x, layer["gdn_conv_w"], layer["gdn_conv_b"],
+                            conv_idx, ctx=conv_ctx_in)
+    qk, rest = jnp.split(mixed, [2 * H * dk], axis=-1)
+    q, k = jnp.split(qk.reshape(S, H, 2 * dk), 2, axis=-1)
+    v = rest.reshape(S, H, dv)
+    # l2-normalized q/k (GDN convention)
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    g = -jax.nn.softplus(x @ layer["gdn_gate"])            # [S, H] log-decay <= 0
+    beta = jax.nn.sigmoid(x @ layer["gdn_beta"])           # [S, H]
+    if ssm_pad is not None:
+        keep = (1.0 - ssm_pad)[:, None]
+        g = g * keep
+        beta = beta * keep
+    out, states = gdn_k.gdn_tree_chunked(
+        q, k, v, g, beta, chunk_parent_map, cfg.chunk_size,
+        initial_state=ssm_state_in)
+    return out.reshape(S, H * dv) @ layer["gdn_out"], states, conv_x
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, pos_ids, attn_meta,
+            chunk_parent_map=None, conv_idx=None, ssm_pad=None,
+            k_in=None, v_in=None, ssm_state_in=None, conv_ctx_in=None,
+            collect_kv=False):
+    """Shared trunk.  Returns (logits, aux_loss, cache_dict)."""
+    x = params["embed"][tokens]
+    aux_total = 0.0
+    k_parts, v_parts, ssm_states, conv_xs = [], [], [], []
+    attn_i = 0
+    gdn_i = 0
+    for i in range(cfg.n_layers):
+        layer = params[f"layer_{i}"]
+        h = rms_norm(x, layer["ln1"])
+        if cfg.is_gdn_layer(i):
+            o, states, conv_x = gdn_layer(
+                h, layer, cfg, chunk_parent_map, conv_idx, ssm_pad=ssm_pad,
+                ssm_state_in=None if ssm_state_in is None else ssm_state_in[gdn_i],
+                conv_ctx_in=None if conv_ctx_in is None else conv_ctx_in[gdn_i])
+            if collect_kv:
+                ssm_states.append(states)
+                conv_xs.append(conv_x)
+            gdn_i += 1
+        else:
+            o, k_rot, v_h = attention_layer(
+                h, layer, cfg, pos_ids, attn_meta,
+                k_in=None if k_in is None else k_in[attn_i],
+                v_in=None if v_in is None else v_in[attn_i])
+            if collect_kv:
+                k_parts.append(k_rot)
+                v_parts.append(v_h)
+            attn_i += 1
+        x = x + o
+        h = rms_norm(x, layer["ln2"])
+        if "router" in layer:
+            o, aux = moe_ffn(h, layer, cfg)
+            aux_total = aux_total + aux
+        else:
+            o = swiglu(h, layer["w1"], layer["w3"], layer["w2"])
+        x = x + o
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    cache = {}
+    if collect_kv:
+        if k_parts:
+            cache["k_part"] = jnp.stack(k_parts)   # [n_attn, S, H, hd]
+            cache["v_part"] = jnp.stack(v_parts)
+        if ssm_states:
+            cache["ssm_states"] = jnp.stack(ssm_states)  # [n_gdn, N+1, H, dk, dv]
+            cache["conv_x"] = jnp.stack(conv_xs)         # [n_gdn, S, conv_dim]
+    return logits, aux_total, cache
+
+
+def token_logprobs(logits, tokens, prev_idx):
+    """Per-token log p(y_t | x_<t)) gathered at each token's path predecessor.
+
+    Tokens with prev_idx < 0 (path roots, pads) get logprob 0 (excluded by
+    weight masking).
+    """
+    S = tokens.shape[0]
+    valid = prev_idx >= 0
+    safe = jnp.maximum(prev_idx, 0)
+    logp_rows = jax.nn.log_softmax(logits, axis=-1)[safe]        # [S, V]
+    lp = jnp.take_along_axis(logp_rows, tokens[:, None], axis=-1)[:, 0]
+    return jnp.where(valid, lp, 0.0), valid
+
+
+def loss_fn(params, cfg: ModelConfig, batch, k_in=None, v_in=None,
+            ssm_state_in=None, conv_ctx_in=None, collect_kv=False):
+    """(loss_sum, (weight_sum, cache)).  loss_sum = sum_t lambda_t * CE_t."""
+    attn_meta = (batch["q_exit"], batch["k_order"], batch["k_exit"], batch["k_bias"])
+    logits, aux, cache = forward(
+        params, cfg, batch["tokens"], batch["pos_ids"], attn_meta,
+        chunk_parent_map=batch.get("chunk_parent_map"),
+        conv_idx=batch.get("conv_idx"), ssm_pad=batch.get("ssm_pad"),
+        k_in=k_in, v_in=v_in, ssm_state_in=ssm_state_in,
+        conv_ctx_in=conv_ctx_in, collect_kv=collect_kv)
+    lp, valid = token_logprobs(logits, batch["tokens"], batch["prev_idx"])
+    w = batch["weights"] * valid.astype(jnp.float32)
+    loss_sum = -jnp.sum(w * lp) + cfg.aux_coef * aux
+    # |w|: RL advantages can be negative and must not cancel the
+    # normalization denominator (coordinator divides grads by weight_sum)
+    return loss_sum, (jnp.sum(jnp.abs(w)), cache)
+
+
+# ---------------------------------------------------------------------------
+# Exported program bodies (wrapped by aot.py)
+# ---------------------------------------------------------------------------
+
+def step_program(cfg: ModelConfig):
+    """(params, batch) -> (loss_sum, weight_sum, grads)."""
+
+    def run(params, batch):
+        (loss, (wsum, _)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        return loss, wsum, grads
+
+    return run
+
+
+def part_fwd_program(cfg: ModelConfig):
+    """(params, batch, k_in, v_in) -> (loss_sum, weight_sum, k_part, v_part).
+
+    Topological-order partition forward (App. B.2): emits the partition's
+    accumulated per-layer KV for its children's gateways.
+    """
+
+    def run(params, batch, k_in, v_in):
+        loss, (wsum, cache) = loss_fn(params, cfg, batch,
+                                      k_in=k_in, v_in=v_in, collect_kv=True)
+        return loss, wsum, cache["k_part"], cache["v_part"]
+
+    return run
+
+
+def part_bwd_program(cfg: ModelConfig):
+    """(params, batch, k_in, v_in, d_k_part, d_v_part, loss_cot)
+       -> (loss_sum, weight_sum, grads, d_k_in, d_v_in).
+
+    Reverse-order partition backward (App. B.6): recomputes the forward
+    (XLA remat — the AOT analog of the retained graph) and chains the
+    children's accumulated KV cotangents into parameter grads plus the
+    gateway cotangent for this partition's own parent.
+    """
+
+    def run(params, batch, k_in, v_in, d_k_part, d_v_part, loss_cot):
+        def f(params, k_in, v_in):
+            loss, (wsum, cache) = loss_fn(params, cfg, batch,
+                                          k_in=k_in, v_in=v_in, collect_kv=True)
+            return loss, wsum, cache["k_part"], cache["v_part"]
+
+        (loss, wsum, k_part, v_part), vjp = jax.vjp(f, params, k_in, v_in)
+        zeros_w = jnp.zeros_like(wsum)
+        grads, d_k_in, d_v_in = vjp((loss_cot, zeros_w, d_k_part, d_v_part))
+        return loss, wsum, grads, d_k_in, d_v_in
+
+    return run
+
+
+def logprob_program(cfg: ModelConfig):
+    """(params, batch) -> per-token weighted logprob [C] (eval scoring)."""
+
+    def run(params, batch):
+        attn_meta = (batch["q_exit"], batch["k_order"], batch["k_exit"],
+                     batch["k_bias"])
+        logits, _, _ = forward(params, cfg, batch["tokens"], batch["pos_ids"],
+                               attn_meta,
+                               chunk_parent_map=batch.get("chunk_parent_map"),
+                               conv_idx=batch.get("conv_idx"),
+                               ssm_pad=batch.get("ssm_pad"))
+        lp, valid = token_logprobs(logits, batch["tokens"], batch["prev_idx"])
+        return lp * valid.astype(jnp.float32)
+
+    return run

@@ -1,0 +1,194 @@
+"""Redundancy-Free Tree Partitioning — python mirror of the Rust planner
+(rust/src/partition/), used by the pytest suite to validate the exported
+part_fwd/part_bwd programs and as the reference for serializer parity.
+
+A partition is a *connected subtree* cut at node boundaries (§3.3).  The
+partition dependency graph is then a tree, and the backward pass chains
+KV-gateway cotangents child -> parent in reverse topological order with f32
+host accumulation (App. B.5/B.6).
+
+Boundary loss terms: a child partition's first token is predicted by the
+parent partition's cut-node last token, whose logits only the parent holds.
+The planner therefore appends *virtual boundary-target slots* to the parent
+batch: self-island tokens carrying (token = child-first-token, prev_idx =
+cut-last-slot, weight = lambda of the child token); their own logits row is
+never read.  This keeps  sum_partitions loss_sum == whole-tree loss_sum
+exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from compile import batching, treemeta
+from compile.kernels import tree_attention as ta
+from compile.treemeta import NodeSpec
+
+
+@dataclasses.dataclass
+class PartitionSpec:
+    """One partition: its nodes (original ids, pre-order), parent linkage."""
+    nodes: List[int]                  # original node ids, partition-local preorder
+    root: int                         # original id of the partition root
+    parent_part: int                  # -1 for the tree-root partition
+    cut_node: int                     # original id of the cut node in the parent
+                                      # (== parent of self.root); -1 for root part
+    # filled by plan():
+    meta: treemeta.DfsMeta = None     # partition-local serialization
+    weights: np.ndarray = None        # lambda from the FULL tree
+    pos_offset: int = 0               # full-tree depth of partition root
+    anc_slots: np.ndarray = None      # full-DFS slots of ancestor tokens (gateway)
+    virtual: list = None              # [(prev_local_slot, token, weight)]
+
+
+def partition_nodes(nodes: Sequence[NodeSpec], assignment: List[int]) -> List[PartitionSpec]:
+    """Build PartitionSpecs from a node->partition assignment.
+
+    Every partition must be a connected subtree; validated here (the Rust
+    bin-packer guarantees it by construction).
+    """
+    n_parts = max(assignment) + 1
+    parts: List[PartitionSpec] = []
+    for p in range(n_parts):
+        members = [i for i in range(len(nodes)) if assignment[i] == p]
+        roots = [i for i in members
+                 if nodes[i].parent == -1 or assignment[nodes[i].parent] != p]
+        if len(roots) != 1:
+            raise ValueError(f"partition {p} is not a connected subtree: roots={roots}")
+        root = roots[0]
+        for i in members:
+            if i != root and assignment[nodes[i].parent] != p:
+                raise ValueError(f"partition {p}: node {i} detached from root")
+        cut = nodes[root].parent
+        parts.append(PartitionSpec(
+            nodes=members, root=root,
+            parent_part=-1 if cut == -1 else assignment[cut],
+            cut_node=cut))
+    return parts
+
+
+def plan(nodes: Sequence[NodeSpec], assignment: List[int]):
+    """Full partition plan: per-partition metadata + gateway wiring."""
+    full_meta = treemeta.dfs_serialize(nodes)
+    parts = partition_nodes(nodes, assignment)
+
+    # ancestor slots (full-DFS token indices) of each node's path, root->node
+    def path_slots(n: int) -> np.ndarray:
+        chain = []
+        i = n
+        while i != -1:
+            chain.append(i)
+            i = int(full_meta.node_parent[i])
+        slots = []
+        for i in reversed(chain):
+            s, ln = int(full_meta.node_start[i]), int(full_meta.node_len[i])
+            slots.extend(t for t in range(s, s + ln) if not full_meta.pad_mask[t])
+        return np.array(slots, dtype=np.int64)
+
+    for p in parts:
+        local_ids = {orig: j for j, orig in enumerate(p.nodes)}
+        local_nodes = []
+        for orig in p.nodes:
+            nd = nodes[orig]
+            par = -1 if orig == p.root else local_ids[int(nd.parent)]
+            local_nodes.append(NodeSpec(par, nd.tokens, nd.trainable,
+                                        nd.advantage, nd.pad_tail))
+        p.meta = treemeta.dfs_serialize(local_nodes)
+        # full-tree lambda weights, sliced per node segment
+        w = np.zeros(p.meta.size, np.float32)
+        for orig in p.nodes:
+            ls = int(p.meta.node_start[local_ids[orig]])
+            fs = int(full_meta.node_start[orig])
+            ln = int(full_meta.node_len[orig])
+            w[ls:ls + ln] = full_meta.weights[fs:fs + ln]
+        p.weights = w
+        p.pos_offset = 0 if p.cut_node == -1 else (
+            int(full_meta.node_depth_tokens[p.root]))
+        p.anc_slots = (np.zeros(0, np.int64) if p.cut_node == -1
+                       else path_slots(p.cut_node))
+        p.virtual = []
+
+    # boundary virtual targets: child-first tokens land in the parent batch
+    for ci, c in enumerate(parts):
+        if c.parent_part == -1:
+            continue
+        parent = parts[c.parent_part]
+        lid = {orig: j for j, orig in enumerate(parent.nodes)}[c.cut_node]
+        # parent-local slot of the cut node's last real token
+        s = int(parent.meta.node_start[lid])
+        ln = int(parent.meta.node_len[lid])
+        last_real = None
+        for t in range(s + ln - 1, s - 1, -1):
+            if not parent.meta.pad_mask[t]:
+                last_real = t
+                break
+        assert last_real is not None, "cut node with empty segment unsupported"
+        # child's first real token + its full-tree weight
+        cs = int(c.meta.node_start[0])
+        first = None
+        for t in range(cs, cs + int(c.meta.node_len[0])):
+            if not c.meta.pad_mask[t]:
+                first = t
+                break
+        tok = int(c.meta.tokens[first])
+        wgt = float(c.weights[first])
+        parent.virtual.append((last_real, tok, wgt))
+        c.weights[first] = 0.0  # counted in the parent instead
+
+    return full_meta, parts
+
+
+def partition_batch(p: PartitionSpec, capacity: int, past_capacity: int,
+                    chunk_size=None, conv_kernel=None, numpy=False) -> dict:
+    """Assemble the padded model batch for one partition.
+
+    Layout: [partition tokens | virtual boundary slots | pads] up to
+    ``capacity``; gateway rows padded to ``past_capacity`` with -inf bias.
+    """
+    S = p.meta.size
+    nv = len(p.virtual)
+    if S + nv > capacity:
+        raise ValueError(f"partition needs {S}+{nv} slots > capacity {capacity}")
+    A = len(p.anc_slots)
+    if A > past_capacity:
+        raise ValueError(f"gateway needs {A} rows > capacity {past_capacity}")
+
+    past_bias = np.full(past_capacity, ta.NEG_INF, np.float32)
+    past_bias[:A] = 0.0
+    b = batching.build_batch(p.meta, capacity, chunk_size=chunk_size,
+                             conv_kernel=conv_kernel,
+                             past_len=past_capacity, past_bias=past_bias,
+                             gateway_ctx=p.cut_node != -1 and conv_kernel is not None,
+                             numpy=True)
+    # overwrite weights with full-tree lambdas (pads already 0)
+    w = np.zeros(capacity, np.float32)
+    w[:S] = p.weights
+    # true path positions
+    pos = np.array(b["pos_ids"], np.int32)
+    pos[:S] = pos[:S] + p.pos_offset
+    tok = np.array(b["tokens"], np.int32)
+    prev = np.array(b["prev_idx"], np.int32)
+    for j, (prev_slot, vtok, vw) in enumerate(p.virtual):
+        slot = S + j
+        tok[slot] = vtok
+        prev[slot] = prev_slot
+        w[slot] = vw
+    b["tokens"], b["prev_idx"], b["weights"], b["pos_ids"] = tok, prev, w, pos
+    if numpy:
+        return b
+    import jax.numpy as jnp
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def topo_order(parts: List[PartitionSpec]) -> List[int]:
+    order = []
+    done = set()
+    while len(order) < len(parts):
+        for i, p in enumerate(parts):
+            if i not in done and (p.parent_part == -1 or p.parent_part in done):
+                order.append(i)
+                done.add(i)
+    return order

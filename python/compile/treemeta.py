@@ -1,0 +1,382 @@
+"""Trajectory-tree metadata for DFS serialization (python mirror of the Rust serializer).
+
+A trajectory tree (paper §3.1) is a rooted tree of nodes, each holding a token
+segment.  DFS serialization (Eq. 8) lays every token out exactly once, in
+depth-first pre-order.  The model-side adaptations (§3.2) are all driven by
+per-token metadata vectors computed here:
+
+  pos_ids      -- per-path position (Eq. 9): ancestors' lengths + offset.
+  subtree_exit -- exclusive DFS-token-space end of the token's node's subtree.
+                  The tree attention mask reduces to an interval test
+                  (DESIGN.md §2):  mask[i,j] = (j <= i) and (exit[j] >= exit[i]).
+  g            -- number of root-to-leaf paths through the token's node.
+  lambda_t     -- loss weight  g_t/K * trainable_t  (Eq. 4).
+
+This module is build/test-time only; at runtime the Rust serializer
+(rust/src/tree/dfs.rs) produces identical vectors (cross-checked by
+rust/tests/serializer_parity.rs against JSON fixtures).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    """One tree node: ``parent`` is an index into the node list (-1 for root).
+
+    Nodes MUST be listed in DFS pre-order (parent before child, children of a
+    node contiguous in recursive order); this matches how agentic trajectories
+    are recorded and keeps the serializer allocation-free.
+
+    ``pad_tail`` marks that many *trailing* tokens of ``tokens`` as alignment
+    padding (used by the hybrid/SSM model to align node segments to the GDN
+    chunk size).  Pads are attention self-islands, carry zero loss weight,
+    zero position, and are skipped by the conv predecessor chain; the SSM
+    recurrence is made transparent to them via g = 0, beta = 0 (gdn.py).
+    """
+
+    parent: int
+    tokens: np.ndarray            # int32 [len]
+    # per-token trainable mask (1.0 = model output, 0.0 = user/env input).
+    trainable: Optional[np.ndarray] = None
+    # per-token RL advantage (1.0 for SFT).
+    advantage: Optional[np.ndarray] = None
+    pad_tail: int = 0
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, dtype=np.int32)
+        n = len(self.tokens)
+        if self.trainable is None:
+            self.trainable = np.ones(n, dtype=np.float32)
+        else:
+            self.trainable = np.asarray(self.trainable, dtype=np.float32)
+        if self.advantage is None:
+            self.advantage = np.ones(n, dtype=np.float32)
+        else:
+            self.advantage = np.asarray(self.advantage, dtype=np.float32)
+        assert 0 <= self.pad_tail <= n
+
+    @property
+    def real_len(self) -> int:
+        return len(self.tokens) - self.pad_tail
+
+
+@dataclasses.dataclass
+class DfsMeta:
+    """Per-token metadata of the DFS-serialized tree (all length S)."""
+
+    tokens: np.ndarray        # int32 [S]
+    pos_ids: np.ndarray       # int32 [S]  per-path positions (Eq. 9)
+    subtree_exit: np.ndarray  # int32 [S]  exclusive subtree end, token space
+    node_id: np.ndarray       # int32 [S]
+    g: np.ndarray             # int32 [S]  paths through the token's node
+    weights: np.ndarray       # float32 [S]  lambda_t = g/K * trainable * advantage
+    # node table (length = #nodes, DFS order)
+    node_start: np.ndarray    # int32 token-space start of node's own segment
+    node_len: np.ndarray      # int32
+    node_exit: np.ndarray     # int32 subtree end (exclusive)
+    node_parent: np.ndarray   # int32 (-1 root)
+    node_depth_tokens: np.ndarray  # int32 ancestor *real* token count
+    num_paths: int            # K
+    pad_mask: np.ndarray = None    # bool [S] alignment pads
+
+    @property
+    def size(self) -> int:
+        return len(self.tokens)
+
+
+def dfs_serialize(nodes: Sequence[NodeSpec]) -> DfsMeta:
+    """Serialize a pre-order node list into DFS token order with metadata."""
+    n_nodes = len(nodes)
+    if n_nodes == 0:
+        raise ValueError("empty tree")
+    for i, nd in enumerate(nodes):
+        if not (-1 <= nd.parent < i):
+            raise ValueError(f"node {i}: parent {nd.parent} not in pre-order")
+        if i == 0 and nd.parent != -1:
+            raise ValueError("node 0 must be the root (parent == -1)")
+        if i > 0 and nd.parent == -1:
+            raise ValueError(f"node {i}: forest not allowed (single root)")
+
+    seg_len = np.array([len(nd.tokens) for nd in nodes], dtype=np.int64)
+    children: list[list[int]] = [[] for _ in range(n_nodes)]
+    for i in range(1, n_nodes):
+        children[nodes[i].parent].append(i)
+
+    # leaves-under-node == paths through node (g_n), bottom-up.
+    g_node = np.zeros(n_nodes, dtype=np.int64)
+    for i in range(n_nodes - 1, -1, -1):
+        if not children[i]:
+            g_node[i] = 1
+        else:
+            g_node[i] = sum(g_node[c] for c in children[i])
+    num_paths = int(g_node[0])
+
+    # token-space start of each node's own segment, and subtree exit.
+    # Pre-order layout: node's own tokens first, then children subtrees.
+    node_start = np.zeros(n_nodes, dtype=np.int64)
+    node_exit = np.zeros(n_nodes, dtype=np.int64)
+    subtree_tokens = np.zeros(n_nodes, dtype=np.int64)
+    for i in range(n_nodes - 1, -1, -1):
+        subtree_tokens[i] = seg_len[i] + sum(subtree_tokens[c] for c in children[i])
+    cursor = 0
+
+    def assign(i: int):
+        nonlocal cursor
+        node_start[i] = cursor
+        cursor += seg_len[i]
+        for c in children[i]:
+            assign(c)
+        node_exit[i] = cursor
+
+    # iterative to avoid recursion limits on deep trees
+    stack = [(0, False)]
+    while stack:
+        i, done = stack.pop()
+        if done:
+            node_exit[i] = cursor
+            continue
+        node_start[i] = cursor
+        cursor += seg_len[i]
+        stack.append((i, True))
+        for c in reversed(children[i]):
+            stack.append((c, False))
+    total = cursor
+
+    # depth in *real* tokens (per-path position of node's first token, Eq. 9).
+    real_len = np.array([nd.real_len for nd in nodes], dtype=np.int64)
+    node_depth = np.zeros(n_nodes, dtype=np.int64)
+    for i in range(1, n_nodes):
+        p = nodes[i].parent
+        node_depth[i] = node_depth[p] + real_len[p]
+
+    tokens = np.zeros(total, dtype=np.int32)
+    pos_ids = np.zeros(total, dtype=np.int32)
+    subtree_exit = np.zeros(total, dtype=np.int32)
+    node_id = np.zeros(total, dtype=np.int32)
+    g = np.zeros(total, dtype=np.int32)
+    weights = np.zeros(total, dtype=np.float32)
+    pad_mask = np.zeros(total, dtype=bool)
+    for i, nd in enumerate(nodes):
+        s, e = node_start[i], node_start[i] + seg_len[i]
+        r = s + nd.real_len
+        tokens[s:e] = nd.tokens
+        pos_ids[s:r] = node_depth[i] + np.arange(nd.real_len)
+        subtree_exit[s:r] = node_exit[i]
+        # alignment pads: self-island attention, zero weight/position
+        subtree_exit[r:e] = np.arange(r, e) + 1
+        pad_mask[r:e] = True
+        node_id[s:e] = i
+        g[s:e] = g_node[i]
+        weights[s:r] = (g_node[i] / num_paths) * nd.trainable[:nd.real_len] \
+            * nd.advantage[:nd.real_len]
+
+    return DfsMeta(
+        tokens=tokens,
+        pos_ids=pos_ids,
+        subtree_exit=subtree_exit,
+        node_id=node_id,
+        g=g,
+        weights=weights,
+        node_start=node_start.astype(np.int32),
+        node_len=seg_len.astype(np.int32),
+        node_exit=node_exit.astype(np.int32),
+        node_parent=np.array([nd.parent for nd in nodes], dtype=np.int32),
+        node_depth_tokens=node_depth.astype(np.int32),
+        num_paths=num_paths,
+        pad_mask=pad_mask,
+    )
+
+
+def paths(nodes: Sequence[NodeSpec]) -> list[list[int]]:
+    """All root-to-leaf paths as node-index lists, DFS (leaf) order."""
+    n_nodes = len(nodes)
+    children: list[list[int]] = [[] for _ in range(n_nodes)]
+    for i in range(1, n_nodes):
+        children[nodes[i].parent].append(i)
+    out: list[list[int]] = []
+
+    def walk(i: int, acc: list[int]):
+        acc = acc + [i]
+        if not children[i]:
+            out.append(acc)
+        for c in children[i]:
+            walk(c, acc)
+
+    walk(0, [])
+    return out
+
+
+def path_token_indices(meta: DfsMeta, path: list[int]) -> np.ndarray:
+    """DFS-token-space indices of a root-to-leaf path (real tokens only)."""
+    idx = []
+    for n in path:
+        for t in range(meta.node_start[n], meta.node_start[n] + meta.node_len[n]):
+            if not meta.pad_mask[t]:
+                idx.append(t)
+    return np.array(idx, dtype=np.int64)
+
+
+def dense_tree_mask(meta: DfsMeta) -> np.ndarray:
+    """O(S^2) boolean tree attention mask (§3.2): for tests only.
+
+    mask[i, j] = (j <= i) and (node(j) is ancestor-or-self of node(i)).
+    Built from first principles (ancestor chain), NOT from the interval trick,
+    so tests can verify the interval reduction independently.
+    """
+    S = meta.size
+    n_nodes = len(meta.node_parent)
+    anc = np.zeros((n_nodes, n_nodes), dtype=bool)
+    for i in range(n_nodes):
+        j = i
+        while j != -1:
+            anc[i, j] = True
+            j = int(meta.node_parent[j])
+    mask = np.zeros((S, S), dtype=bool)
+    for i in range(S):
+        ni = meta.node_id[i]
+        for j in range(i):
+            # pads are never visible as keys (their exit is their own slot)
+            mask[i, j] = anc[ni, meta.node_id[j]] and not meta.pad_mask[j]
+        mask[i, i] = True              # diagonal always visible (incl. pads)
+    return mask
+
+
+def interval_tree_mask(subtree_exit: np.ndarray) -> np.ndarray:
+    """The O(S) interval encoding expanded to a dense mask (kernel semantics)."""
+    S = len(subtree_exit)
+    i = np.arange(S)
+    return (i[None, :] <= i[:, None]) & (subtree_exit[None, :] >= subtree_exit[:, None])
+
+
+def pad_meta(meta_vec_exit: np.ndarray, pos_ids: np.ndarray, weights: np.ndarray,
+             tokens: np.ndarray, capacity: int):
+    """Pad per-token vectors to ``capacity``.
+
+    Padding tokens are self-attending islands (exit = own index + 1), carry
+    zero loss weight and position 0, so they perturb nothing.
+    """
+    S = len(tokens)
+    if S > capacity:
+        raise ValueError(f"sequence {S} exceeds capacity {capacity}")
+    pad = capacity - S
+    exit_p = np.concatenate([meta_vec_exit, np.arange(S, capacity, dtype=np.int32) + 1])
+    pos_p = np.concatenate([pos_ids, np.zeros(pad, dtype=np.int32)])
+    w_p = np.concatenate([weights, np.zeros(pad, dtype=np.float32)])
+    tok_p = np.concatenate([tokens, np.zeros(pad, dtype=np.int32)])
+    return exit_p.astype(np.int32), pos_p.astype(np.int32), w_p.astype(np.float32), tok_p.astype(np.int32)
+
+
+def por(meta: DfsMeta, node_specs: Sequence[NodeSpec]) -> float:
+    """Potential Overlap Ratio (Eq. 12): 1 - N_tree / N_flat (real tokens)."""
+    flat = 0
+    for p in paths(node_specs):
+        flat += sum(node_specs[n].real_len for n in p)
+    n_tree = sum(nd.real_len for nd in node_specs)
+    return 1.0 - n_tree / flat
+
+
+def pad_nodes_for_chunks(nodes: Sequence[NodeSpec], chunk_size: int,
+                         pad_token: int = 0) -> list[NodeSpec]:
+    """Pad every node segment to a multiple of ``chunk_size`` (hybrid model).
+
+    Each GDN chunk must belong to exactly one node (the chunk is the unit of
+    SSM state transfer, §3.2); alignment pads are state-transparent.
+    """
+    out = []
+    for nd in nodes:
+        assert nd.pad_tail == 0, "already padded"
+        n = len(nd.tokens)
+        pad = (-n) % chunk_size
+        if n == 0:
+            pad = chunk_size  # empty segments still need one chunk slot
+        out.append(NodeSpec(
+            parent=nd.parent,
+            tokens=np.concatenate([nd.tokens, np.full(pad, pad_token, np.int32)]),
+            trainable=np.concatenate([nd.trainable, np.zeros(pad, np.float32)]),
+            advantage=np.concatenate([nd.advantage, np.ones(pad, np.float32)]),
+            pad_tail=pad,
+        ))
+    return out
+
+
+def chunk_parent_map(meta: DfsMeta, chunk_size: int) -> np.ndarray:
+    """Per-chunk parent index for GDN tree state routing (Eq. 10).
+
+    Chunk i reads the output state of chunk ``map[i]`` (-1 = initial state):
+    the previous chunk when it belongs to the same node, else the *last*
+    chunk of the parent node.  Requires chunk/node alignment
+    (``pad_nodes_for_chunks``).
+    """
+    S = meta.size
+    assert S % chunk_size == 0, (S, chunk_size)
+    n_chunks = S // chunk_size
+    chunk_node = meta.node_id[::chunk_size]
+    for i in range(n_chunks):
+        a = meta.node_id[i * chunk_size]
+        b = meta.node_id[(i + 1) * chunk_size - 1]
+        if a != b:
+            raise ValueError(f"chunk {i} spans nodes {a}..{b}; pad segments first")
+    cpm = np.zeros(n_chunks, dtype=np.int32)
+    node_last_chunk: dict[int, int] = {}
+    for i in range(n_chunks):
+        n = int(chunk_node[i])
+        if i > 0 and chunk_node[i - 1] == n:
+            cpm[i] = i - 1
+        else:
+            par = int(meta.node_parent[n])
+            cpm[i] = node_last_chunk[par] if par != -1 else -1
+        node_last_chunk[n] = i
+    return cpm
+
+
+def random_tree(rng: np.random.Generator, max_nodes: int = 12,
+                max_seg: int = 6, max_children: int = 3,
+                vocab: int = 64, branch_p: float = 0.6,
+                min_seg: int = 1) -> list[NodeSpec]:
+    """Random trajectory tree in DFS pre-order (test utility)."""
+    nodes = [NodeSpec(-1, rng.integers(0, vocab, rng.integers(min_seg, max_seg + 1)))]
+    # grow by DFS so the pre-order invariant holds by construction
+    frontier = [0]
+    while frontier and len(nodes) < max_nodes:
+        cur = frontier.pop()
+        if rng.random() > branch_p and cur != 0:
+            continue
+        n_child = int(rng.integers(1, max_children + 1))
+        for _ in range(n_child):
+            if len(nodes) >= max_nodes:
+                break
+            nodes_idx = len(nodes)
+            nodes.append(NodeSpec(cur, rng.integers(0, vocab, rng.integers(min_seg, max_seg + 1))))
+            frontier.append(nodes_idx)
+    # NOTE: frontier-pop order can violate pre-order (children must be
+    # contiguous); rebuild in DFS order.
+    return _reorder_preorder(nodes)
+
+
+def _reorder_preorder(nodes: list[NodeSpec]) -> list[NodeSpec]:
+    n = len(nodes)
+    children: list[list[int]] = [[] for _ in range(n)]
+    for i in range(1, n):
+        children[nodes[i].parent].append(i)
+    order: list[int] = []
+    stack = [0]
+    while stack:
+        i = stack.pop()
+        order.append(i)
+        for c in reversed(children[i]):
+            stack.append(c)
+    remap = {old: new for new, old in enumerate(order)}
+    out = []
+    for old in order:
+        nd = nodes[old]
+        out.append(NodeSpec(
+            parent=-1 if nd.parent == -1 else remap[nd.parent],
+            tokens=nd.tokens, trainable=nd.trainable,
+            advantage=nd.advantage, pad_tail=nd.pad_tail))
+    return out

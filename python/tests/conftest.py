@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests are run from python/ (``cd python && pytest tests``); make the
+# ``compile`` package importable regardless of invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# oracles accumulate in float64 (App. B.8 verifies against f32/f64 refs)
+jax.config.update("jax_enable_x64", True)

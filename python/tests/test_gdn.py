@@ -1,0 +1,237 @@
+"""GDN tree state routing (Eq. 10) + tree-correct causal conv (App. A.3)
+vs the per-token recurrent and per-path oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import treemeta
+from compile.kernels import gdn, ref
+from compile.treemeta import NodeSpec
+
+TOL = 2e-5  # paper App. B.8: SSM hybrid f32 max-relative < 2e-5
+
+
+def rand_inputs(rng, S, H, Dk, Dv):
+    q = rng.standard_normal((S, H, Dk)).astype(np.float32) * 0.5
+    k = rng.standard_normal((S, H, Dk)).astype(np.float32) * 0.5
+    v = rng.standard_normal((S, H, Dv)).astype(np.float32) * 0.5
+    g = -np.abs(rng.standard_normal((S, H))).astype(np.float32) * 0.3
+    beta = rng.uniform(0.1, 0.9, (S, H)).astype(np.float32)
+    return q, k, v, g, beta
+
+
+def padded_tree(rng, chunk, max_nodes=8, max_seg=7):
+    nodes = treemeta.pad_nodes_for_chunks(
+        treemeta.random_tree(rng, max_nodes=max_nodes, max_seg=max_seg), chunk)
+    meta = treemeta.dfs_serialize(nodes)
+    cpm = treemeta.chunk_parent_map(meta, chunk)
+    return nodes, meta, cpm
+
+
+def transparent_pads(g, beta, pad_mask):
+    """Pads must be state-transparent: g = 0, beta = 0 (gdn.py contract)."""
+    g = g * (1 - pad_mask[:, None])
+    beta = beta * (1 - pad_mask[:, None])
+    return g.astype(np.float32), beta.astype(np.float32)
+
+
+class TestChunkedGdn:
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]))
+    def test_matches_recurrent(self, seed, chunk):
+        rng = np.random.default_rng(seed)
+        nodes, meta, cpm = padded_tree(rng, chunk)
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 2, 4, 6)
+        g, beta = transparent_pads(g, beta, meta.pad_mask.astype(np.float32))
+        o_ref = ref.gdn_recurrent_tree(q, k, v, g, beta,
+                                       meta.node_start, meta.node_len,
+                                       meta.node_parent)
+        o, _ = gdn.gdn_tree_chunked(*map(jnp.asarray, (q, k, v, g, beta)),
+                                    jnp.asarray(cpm), chunk)
+        real = ~meta.pad_mask
+        np.testing.assert_allclose(np.asarray(o)[real], np.asarray(o_ref)[real],
+                                   atol=1e-4, rtol=1e-3)
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_matches_per_path(self, seed):
+        """Forward equivalence (Eq. 6) for the SSM layer."""
+        chunk = 4
+        rng = np.random.default_rng(seed)
+        nodes, meta, cpm = padded_tree(rng, chunk)
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 2, 4, 4)
+        g, beta = transparent_pads(g, beta, meta.pad_mask.astype(np.float32))
+        o_path = ref.gdn_per_path(q, k, v, g, beta, meta, nodes)
+        o, _ = gdn.gdn_tree_chunked(*map(jnp.asarray, (q, k, v, g, beta)),
+                                    jnp.asarray(cpm), chunk)
+        real = ~meta.pad_mask
+        np.testing.assert_allclose(np.asarray(o)[real], np.asarray(o_path)[real],
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_sequential_routing_would_be_wrong(self):
+        """Fig. 2: feeding the DFS-previous chunk's state into a sibling branch
+        must give a different (wrong) result than tree routing."""
+        rng = np.random.default_rng(9)
+        chunk = 4
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 4)),
+                 NodeSpec(0, rng.integers(0, 9, 4)),
+                 NodeSpec(0, rng.integers(0, 9, 4))]
+        meta = treemeta.dfs_serialize(nodes)
+        cpm_tree = treemeta.chunk_parent_map(meta, chunk)      # [-1, 0, 0]
+        cpm_seq = np.array([-1, 0, 1], np.int32)               # sequential
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 1, 4, 4)
+        o_tree, _ = gdn.gdn_tree_chunked(*map(jnp.asarray, (q, k, v, g, beta)),
+                                         jnp.asarray(cpm_tree), chunk)
+        o_seq, _ = gdn.gdn_tree_chunked(*map(jnp.asarray, (q, k, v, g, beta)),
+                                        jnp.asarray(cpm_seq), chunk)
+        o_ref = ref.gdn_recurrent_tree(q, k, v, g, beta, meta.node_start,
+                                       meta.node_len, meta.node_parent)
+        last = slice(8, 12)  # sibling branch n2
+        assert np.abs(np.asarray(o_tree)[last] - np.asarray(o_ref)[last]).max() < 1e-4
+        assert np.abs(np.asarray(o_seq)[last] - np.asarray(o_ref)[last]).max() > 1e-3
+
+    def test_state_gateway_injection(self):
+        """App. B.7: running the subtree with initial_state = captured parent
+        state reproduces the unsplit forward."""
+        rng = np.random.default_rng(11)
+        chunk = 4
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 8)),
+                 NodeSpec(0, rng.integers(0, 9, 4)),
+                 NodeSpec(1, rng.integers(0, 9, 4))]
+        meta = treemeta.dfs_serialize(nodes)
+        cpm = treemeta.chunk_parent_map(meta, chunk)
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 2, 4, 4)
+        o_full, states = gdn.gdn_tree_chunked(
+            *map(jnp.asarray, (q, k, v, g, beta)), jnp.asarray(cpm), chunk)
+        # cut after node 1 (chunks 0..2 in parent, chunk 3 in child)
+        cut_chunk = 2
+        init = states[cut_chunk + 1]
+        sl = slice(12, 16)
+        o_child, _ = gdn.gdn_tree_chunked(
+            jnp.asarray(q[sl]), jnp.asarray(k[sl]), jnp.asarray(v[sl]),
+            jnp.asarray(g[sl]), jnp.asarray(beta[sl]),
+            jnp.asarray(np.array([-1], np.int32)), chunk, initial_state=init)
+        np.testing.assert_allclose(np.asarray(o_child), np.asarray(o_full)[sl],
+                                   atol=1e-5)
+
+    def test_grads_flow_to_initial_state(self):
+        """The gateway state is a differentiable leaf (App. B.7 chaining)."""
+        rng = np.random.default_rng(12)
+        chunk = 4
+        S, H, Dk, Dv = 8, 1, 4, 4
+        q, k, v, g, beta = rand_inputs(rng, S, H, Dk, Dv)
+        init = jnp.asarray(rng.standard_normal((H, Dk, Dv)).astype(np.float32) * 0.1)
+        cpm = jnp.asarray(np.array([-1, 0], np.int32))
+
+        def loss(init):
+            o, _ = gdn.gdn_tree_chunked(*map(jnp.asarray, (q, k, v, g, beta)),
+                                        cpm, chunk, initial_state=init)
+            return jnp.sum(o ** 2)
+
+        gr = jax.grad(loss)(init)
+        assert np.abs(np.asarray(gr)).max() > 0
+        # finite-difference check on one element
+        eps = 1e-3
+        e = np.zeros((H, Dk, Dv), np.float32); e[0, 1, 2] = eps
+        fd = (loss(init + jnp.asarray(e)) - loss(init - jnp.asarray(e))) / (2 * eps)
+        assert abs(float(fd) - float(np.asarray(gr)[0, 1, 2])) < 5e-2 * max(1.0, abs(float(fd)))
+
+
+class TestPallasGdn:
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2, 4]))
+    def test_matches_chunked(self, seed, chunk):
+        rng = np.random.default_rng(seed)
+        nodes, meta, cpm = padded_tree(rng, chunk, max_nodes=6)
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 2, 4, 4)
+        g, beta = transparent_pads(g, beta, meta.pad_mask.astype(np.float32))
+        args = (*map(jnp.asarray, (q, k, v, g, beta)), jnp.asarray(cpm), chunk)
+        o_a, st_a = gdn.gdn_tree_chunked(*args)
+        o_b, st_b = gdn.gdn_tree_pallas(*args)
+        np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_b), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_a), np.asarray(st_b), atol=1e-5)
+
+    def test_matches_recurrent(self):
+        rng = np.random.default_rng(3)
+        chunk = 4
+        nodes, meta, cpm = padded_tree(rng, chunk)
+        q, k, v, g, beta = rand_inputs(rng, meta.size, 2, 4, 6)
+        g, beta = transparent_pads(g, beta, meta.pad_mask.astype(np.float32))
+        o_ref = ref.gdn_recurrent_tree(q, k, v, g, beta, meta.node_start,
+                                       meta.node_len, meta.node_parent)
+        o, _ = gdn.gdn_tree_pallas(*map(jnp.asarray, (q, k, v, g, beta)),
+                                   jnp.asarray(cpm), chunk)
+        real = ~meta.pad_mask
+        np.testing.assert_allclose(np.asarray(o)[real], np.asarray(o_ref)[real],
+                                   atol=1e-4, rtol=1e-3)
+
+
+class TestTreeConv:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2, 3, 4]))
+    def test_matches_per_path(self, seed, K):
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=int(rng.integers(1, 12)))
+        meta = treemeta.dfs_serialize(nodes)
+        C = 5
+        x = rng.standard_normal((meta.size, C)).astype(np.float32)
+        w = rng.standard_normal((C, K)).astype(np.float32) * 0.3
+        b = rng.standard_normal(C).astype(np.float32) * 0.1
+        o_ref = ref.conv_per_path(x, w, b, meta, nodes)
+        idx = gdn.conv_gather_indices(meta.node_start, meta.node_len,
+                                      meta.node_parent, K)
+        o = gdn.tree_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          jnp.asarray(idx))
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=1e-5, rtol=1e-4)
+
+    def test_pads_skipped_in_window(self):
+        """Fig. 4: the conv window crosses node boundaries via the *path*,
+        skipping alignment pads entirely."""
+        rng = np.random.default_rng(2)
+        K = 3
+        nodes = treemeta.pad_nodes_for_chunks(
+            [NodeSpec(-1, rng.integers(0, 9, 5)),
+             NodeSpec(0, rng.integers(0, 9, 3)),
+             NodeSpec(0, rng.integers(0, 9, 2))], 4)
+        meta = treemeta.dfs_serialize(nodes)
+        C = 4
+        x = rng.standard_normal((meta.size, C)).astype(np.float32)
+        w = rng.standard_normal((C, K)).astype(np.float32) * 0.3
+        b = np.zeros(C, np.float32)
+        o_ref = ref.conv_per_path(x, w, b, meta, nodes)
+        idx = gdn.conv_gather_indices(meta.node_start, meta.node_len,
+                                      meta.node_parent, K, pad_mask=meta.pad_mask)
+        o = gdn.tree_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          jnp.asarray(idx))
+        real = ~meta.pad_mask
+        np.testing.assert_allclose(np.asarray(o)[real], np.asarray(o_ref)[real],
+                                   atol=1e-5)
+
+    def test_gateway_ctx(self):
+        """App. B.7 conv-context injection: child partition sees the parent's
+        last K-1 effective tokens as left context."""
+        rng = np.random.default_rng(8)
+        K, C = 4, 3
+        # chain: root(6) -> leaf(4); cut between them.
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 6)),
+                 NodeSpec(0, rng.integers(0, 9, 4))]
+        meta = treemeta.dfs_serialize(nodes)
+        x = rng.standard_normal((meta.size, C)).astype(np.float32)
+        w = rng.standard_normal((C, K)).astype(np.float32) * 0.3
+        b = rng.standard_normal(C).astype(np.float32) * 0.1
+        idx_full = gdn.conv_gather_indices(meta.node_start, meta.node_len,
+                                           meta.node_parent, K)
+        o_full = gdn.tree_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                               jnp.asarray(idx_full))
+        # child partition: node 1 alone, ctx = last K-1 tokens of node 0
+        ctx = jnp.asarray(x[3:6])
+        idx_child = gdn.conv_gather_indices(
+            np.array([0]), np.array([4]), np.array([-1]), K, has_ctx=True)
+        o_child = gdn.tree_conv(jnp.asarray(x[6:]), jnp.asarray(w),
+                                jnp.asarray(b), jnp.asarray(idx_child), ctx=ctx)
+        np.testing.assert_allclose(np.asarray(o_child), np.asarray(o_full)[6:],
+                                    atol=1e-6)

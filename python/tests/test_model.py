@@ -1,0 +1,146 @@
+"""Model-level unit tests: building blocks, program shapes, and the
+manifest contract used by the Rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import batching, model, treemeta
+from compile.treemeta import NodeSpec
+
+
+def small_tree(rng):
+    return [NodeSpec(-1, rng.integers(0, 64, 4)),
+            NodeSpec(0, rng.integers(0, 64, 3)),
+            NodeSpec(0, rng.integers(0, 64, 2))]
+
+
+class TestBlocks:
+    def test_rope_rotation_is_norm_preserving(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((6, 2, 8)).astype(np.float32))
+        pos = jnp.arange(6, dtype=jnp.int32)
+        y = model.apply_rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_rope_position_zero_is_identity(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((3, 1, 8)).astype(np.float32))
+        y = model.apply_rope(x, jnp.zeros(3, jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+    def test_rope_relative_property(self):
+        """RoPE dot products depend only on relative positions."""
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.standard_normal((1, 1, 16)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 1, 16)).astype(np.float32))
+
+        def score(pq, pk):
+            qr = model.apply_rope(q, jnp.asarray([pq], jnp.int32), 10000.0)
+            kr = model.apply_rope(k, jnp.asarray([pk], jnp.int32), 10000.0)
+            return float(jnp.sum(qr * kr))
+
+        assert abs(score(5, 3) - score(9, 7)) < 1e-4
+        assert abs(score(5, 3) - score(6, 3)) > 1e-6
+
+    def test_top_k_by_argmax_matches_lax(self):
+        rng = np.random.default_rng(3)
+        probs = jnp.asarray(rng.random((16, 8)).astype(np.float32))
+        v1, i1 = model._top_k_by_argmax(probs, 2)
+        v2, i2 = jax.lax.top_k(probs, 2)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+        assert (np.asarray(i1) == np.asarray(i2)).all()
+
+    def test_moe_aux_positive_and_grads_flow(self):
+        cfg = model.TINY_MOE
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((8, cfg.d_model)).astype(np.float32))
+        layer = params["layer_1"]
+        assert "router" in layer
+        out, aux = model.moe_ffn(x, layer, cfg)
+        assert out.shape == (8, cfg.d_model)
+        assert float(aux) > 0.0
+
+        def loss(w):
+            o, _ = model.moe_ffn(x, {**layer, "moe_w1": w}, cfg)
+            return jnp.sum(o ** 2)
+
+        g = jax.grad(loss)(layer["moe_w1"])
+        assert float(jnp.abs(g).max()) > 0.0
+
+
+class TestPrograms:
+    @pytest.mark.parametrize("cfg", [model.TINY, model.TINY_MOE, model.TINY_HYBRID],
+                             ids=lambda c: c.name)
+    def test_step_program_runs(self, cfg):
+        rng = np.random.default_rng(5)
+        nodes = small_tree(rng)
+        kw = {}
+        if cfg.kind == "hybrid":
+            nodes = treemeta.pad_nodes_for_chunks(nodes, cfg.chunk_size)
+            kw = dict(chunk_size=cfg.chunk_size, conv_kernel=cfg.conv_kernel)
+        meta = treemeta.dfs_serialize(nodes)
+        cap = ((meta.size + 16) // 16 + 1) * 16
+        batch = batching.build_batch(meta, cap, **kw)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        loss, wsum, grads = model.step_program(cfg)(params, batch)
+        assert np.isfinite(float(loss))
+        assert float(wsum) > 0
+        flat = jax.tree_util.tree_leaves(grads)
+        assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+
+    def test_logprob_matches_loss(self):
+        cfg = model.TINY
+        rng = np.random.default_rng(6)
+        nodes = small_tree(rng)
+        meta = treemeta.dfs_serialize(nodes)
+        batch = batching.build_batch(meta, 16)
+        params = model.init_params(jax.random.PRNGKey(1), cfg)
+        lp = model.logprob_program(cfg)(params, batch)
+        loss, (wsum, _) = model.loss_fn(params, cfg, batch)
+        manual = -float(jnp.sum(batch["weights"] * lp))
+        assert abs(float(loss) - manual) < 1e-4 * max(1.0, abs(manual))
+
+    def test_weight_sum_uses_abs(self):
+        """RL advantages must not cancel the normalization denominator."""
+        cfg = model.TINY
+        rng = np.random.default_rng(7)
+        nodes = [NodeSpec(-1, rng.integers(0, 64, 4),
+                          advantage=np.array([1, 1, -1, -1], np.float32))]
+        meta = treemeta.dfs_serialize(nodes)
+        batch = batching.build_batch(meta, 8)
+        params = model.init_params(jax.random.PRNGKey(2), cfg)
+        _, (wsum, _) = model.loss_fn(params, cfg, batch)
+        assert float(wsum) > 0.5  # |w| sum, not the cancelling sum
+
+    def test_param_entry_order_deterministic(self):
+        from compile import aot
+        e1, _, _ = aot.param_entries(model.TINY)
+        e2, _, _ = aot.param_entries(model.TINY)
+        assert [n for n, _ in e1] == [n for n, _ in e2]
+        assert e1[0][0] == "embed"
+
+    def test_gateway_fwd_bwd_shapes(self):
+        cfg = model.TINY
+        rng = np.random.default_rng(8)
+        nodes = small_tree(rng)
+        meta = treemeta.dfs_serialize(nodes)
+        A, C = 8, 16
+        from compile.kernels import tree_attention as ta
+        bias = np.zeros(A, np.float32)
+        batch = batching.build_batch(meta, C, past_len=A, past_bias=bias)
+        params = model.init_params(jax.random.PRNGKey(3), cfg)
+        na, H, hd = 2, cfg.n_heads, cfg.head_dim
+        k_in = jnp.zeros((na, A, H, hd), jnp.float32)
+        loss, wsum, kp, vp = model.part_fwd_program(cfg)(params, batch, k_in, k_in)
+        assert kp.shape == (na, C, H, hd)
+        out = model.part_bwd_program(cfg)(
+            params, batch, k_in, k_in, jnp.zeros_like(kp), jnp.zeros_like(vp),
+            jnp.asarray(1.0, jnp.float32))
+        loss2, wsum2, grads, dk, dv = out
+        assert abs(float(loss) - float(loss2)) < 1e-5
+        assert dk.shape == (na, A, H, hd)

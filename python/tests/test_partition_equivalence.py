@@ -1,0 +1,190 @@
+"""App. B.8 numerical verification: Redundancy-Free Tree Partitioning must
+reproduce the unsplit whole-tree loss AND parameter gradients.
+
+The executor here mirrors the Rust coordinator exactly:
+  1. topological order:  part_fwd -> per-layer (k_part, v_part)
+  2. host gather: each child's gateway = ancestor token rows, collected from
+     whichever partition produced them (copy; chain rule through a copy is
+     the identity — the AOT equivalent of App. B's retained-graph relay)
+  3. reverse topological order: part_bwd with the f32-accumulated KV
+     cotangents scattered back from every descendant (App. B.5)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import batching, model, partplan, treemeta
+from compile.treemeta import NodeSpec
+
+
+def run_partitioned(cfg, params, nodes, assignment, capacity, past_capacity):
+    """Execute the partition plan; returns (loss_sum, grads)."""
+    full_meta, parts = partplan.plan(nodes, assignment)
+    n_attn = sum(0 if cfg.is_gdn_layer(i) else 1 for i in range(cfg.n_layers))
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    # map full-DFS slot -> (partition, local slot)
+    owner = {}
+    for pi, p in enumerate(parts):
+        lid = {orig: j for j, orig in enumerate(p.nodes)}
+        for orig in p.nodes:
+            fs, ls = int(full_meta.node_start[orig]), int(p.meta.node_start[lid[orig]])
+            for t in range(int(full_meta.node_len[orig])):
+                owner[fs + t] = (pi, ls + t)
+
+    fwd = model.part_fwd_program(cfg)
+    bwd = model.part_bwd_program(cfg)
+
+    order = partplan.topo_order(parts)
+    batches, kv_parts = {}, {}
+    kv_ins = {}
+    for pi in order:
+        p = parts[pi]
+        b = partition_batch_jnp(p, capacity, past_capacity, cfg)
+        k_in = np.zeros((n_attn, past_capacity, H, hd), np.float32)
+        v_in = np.zeros((n_attn, past_capacity, H, hd), np.float32)
+        for a, slot in enumerate(p.anc_slots):
+            src_pi, src_ls = owner[int(slot)]
+            k_in[:, a] = np.asarray(kv_parts[src_pi][0][:, src_ls])
+            v_in[:, a] = np.asarray(kv_parts[src_pi][1][:, src_ls])
+        kv_ins[pi] = (k_in, v_in)
+        loss, wsum, k_part, v_part = fwd(params, b, jnp.asarray(k_in),
+                                         jnp.asarray(v_in))
+        batches[pi] = b
+        kv_parts[pi] = (np.asarray(k_part), np.asarray(v_part))
+
+    # reverse topo: chain cotangents
+    d_kv = {pi: (np.zeros((n_attn, capacity, H, hd), np.float64),
+                 np.zeros((n_attn, capacity, H, hd), np.float64))
+            for pi in order}
+    total_loss = 0.0
+    grads_acc = None
+    for pi in reversed(order):
+        p = parts[pi]
+        k_in, v_in = kv_ins[pi]
+        dk_p, dv_p = d_kv[pi]
+        loss, wsum, grads, d_k_in, d_v_in = bwd(
+            params, batches[pi], jnp.asarray(k_in), jnp.asarray(v_in),
+            jnp.asarray(dk_p.astype(np.float32)),
+            jnp.asarray(dv_p.astype(np.float32)),
+            jnp.asarray(1.0, jnp.float32))
+        total_loss += float(loss)
+        grads_acc = grads if grads_acc is None else jax.tree_util.tree_map(
+            jnp.add, grads_acc, grads)
+        # scatter gateway cotangents to producer partitions (f64 accumulators
+        # stand in for the paper's f32 hooks — strictly tighter)
+        d_k_in, d_v_in = np.asarray(d_k_in), np.asarray(d_v_in)
+        for a, slot in enumerate(p.anc_slots):
+            src_pi, src_ls = owner[int(slot)]
+            d_kv[src_pi][0][:, src_ls] += d_k_in[:, a]
+            d_kv[src_pi][1][:, src_ls] += d_v_in[:, a]
+    return total_loss, grads_acc
+
+
+def partition_batch_jnp(p, capacity, past_capacity, cfg):
+    kw = {}
+    if cfg.kind == "hybrid":
+        kw = dict(chunk_size=cfg.chunk_size, conv_kernel=cfg.conv_kernel)
+    return partplan.partition_batch(p, capacity, past_capacity, **kw)
+
+
+def whole_tree(cfg, params, nodes, capacity):
+    meta = treemeta.dfs_serialize(nodes)
+    batch = batching.build_batch(meta, capacity)
+    (loss, (wsum, _)), grads = jax.value_and_grad(
+        model.loss_fn, has_aux=True)(params, cfg, batch)
+    return float(loss), grads
+
+
+TREE = None
+
+
+def three_part_tree(rng):
+    """root(5) -> [a(3) -> [b(4), c(2)], d(4)]; cut into 3 partitions."""
+    return [NodeSpec(-1, rng.integers(0, 64, 5)),
+            NodeSpec(0, rng.integers(0, 64, 3)),
+            NodeSpec(1, rng.integers(0, 64, 4)),
+            NodeSpec(1, rng.integers(0, 64, 2)),
+            NodeSpec(0, rng.integers(0, 64, 4))]
+
+
+class TestPartitionEquivalence:
+    @pytest.mark.parametrize("assignment,n_parts", [
+        ([0, 0, 0, 0, 0], 1),          # no cut (degenerate)
+        ([0, 1, 1, 1, 0], 2),          # cut below root: subtree of a
+        ([0, 0, 1, 2, 0], 3),          # two children of the same cut node
+        ([0, 1, 1, 2, 3], 4),          # aggressive: almost per-node
+    ])
+    def test_dense_grads_match_unsplit(self, assignment, n_parts):
+        cfg = model.TINY
+        rng = np.random.default_rng(42)
+        nodes = three_part_tree(rng)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        l_full, g_full = whole_tree(cfg, params, nodes, 32)
+        l_part, g_part = run_partitioned(cfg, params, nodes, assignment,
+                                         capacity=32, past_capacity=16)
+        # paper tolerance: max-relative < 1e-4 (f32)
+        assert abs(l_part - l_full) < 1e-4 * max(1.0, abs(l_full))
+        for a, b in zip(jax.tree_util.tree_leaves(g_part),
+                        jax.tree_util.tree_leaves(g_full)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_self_consistency_exact_zero(self):
+        """Two identical partitioned runs must agree EXACTLY (App. B.8)."""
+        cfg = model.TINY
+        rng = np.random.default_rng(1)
+        nodes = three_part_tree(rng)
+        params = model.init_params(jax.random.PRNGKey(1), cfg)
+        r1 = run_partitioned(cfg, params, nodes, [0, 0, 1, 2, 0], 32, 16)
+        r2 = run_partitioned(cfg, params, nodes, [0, 0, 1, 2, 0], 32, 16)
+        assert r1[0] == r2[0]
+        for a, b in zip(jax.tree_util.tree_leaves(r1[1]),
+                        jax.tree_util.tree_leaves(r2[1])):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_loss_conserved_across_partitions(self):
+        """sum of partition loss_sums == whole-tree loss_sum (boundary
+        virtual targets account for cut-edge losses)."""
+        cfg = model.TINY
+        rng = np.random.default_rng(3)
+        nodes = three_part_tree(rng)
+        params = model.init_params(jax.random.PRNGKey(3), cfg)
+        l_full, _ = whole_tree(cfg, params, nodes, 32)
+        l_part, _ = run_partitioned(cfg, params, nodes, [0, 1, 2, 1, 3], 32, 16)
+        assert abs(l_part - l_full) < 1e-4 * max(1.0, abs(l_full))
+
+    def test_moe_partitioned(self):
+        cfg = model.ModelConfig(**{**model.TINY_MOE.__dict__,
+                                   "aux_coef": 0.0, "name": "tiny-moe-part"})
+        rng = np.random.default_rng(5)
+        nodes = three_part_tree(rng)
+        params = model.init_params(jax.random.PRNGKey(5), cfg)
+        l_full, g_full = whole_tree(cfg, params, nodes, 32)
+        l_part, g_part = run_partitioned(cfg, params, nodes, [0, 1, 1, 1, 0], 32, 16)
+        assert abs(l_part - l_full) < 1e-4 * max(1.0, abs(l_full))
+        for a, b in zip(jax.tree_util.tree_leaves(g_part),
+                        jax.tree_util.tree_leaves(g_full)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_deep_chain_partitions(self):
+        """Long chain split at every node — sequence-packing degenerate case
+        (a sequence is a special case of a prefix tree, §2)."""
+        cfg = model.TINY
+        rng = np.random.default_rng(6)
+        nodes = [NodeSpec(-1, rng.integers(0, 64, 4)),
+                 NodeSpec(0, rng.integers(0, 64, 4)),
+                 NodeSpec(1, rng.integers(0, 64, 4)),
+                 NodeSpec(2, rng.integers(0, 64, 4))]
+        params = model.init_params(jax.random.PRNGKey(6), cfg)
+        l_full, g_full = whole_tree(cfg, params, nodes, 16)
+        l_part, g_part = run_partitioned(cfg, params, nodes, [0, 1, 2, 3],
+                                         capacity=16, past_capacity=16)
+        assert abs(l_part - l_full) < 1e-4 * max(1.0, abs(l_full))
+        for a, b in zip(jax.tree_util.tree_leaves(g_part),
+                        jax.tree_util.tree_leaves(g_full)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)

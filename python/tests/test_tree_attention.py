@@ -1,0 +1,242 @@
+"""Pallas tree-attention kernel vs per-branch oracles (Eq. 6 forward
+equivalence + backward match), incl. the gateway (partition) case."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import treemeta
+from compile.kernels import ref
+from compile.kernels import tree_attention as ta
+from compile.treemeta import NodeSpec
+
+FWD_TOL = 1e-5
+BWD_TOL = 1e-4
+
+
+def rand_qkv(rng, S, H, D):
+    q = rng.standard_normal((S, H, D)).astype(np.float32)
+    k = rng.standard_normal((S, H, D)).astype(np.float32)
+    v = rng.standard_normal((S, H, D)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+def run_kernel(q, k, v, meta, **kw):
+    q_exit, k_order, k_exit, k_bias = ta.whole_tree_meta(meta.subtree_exit)
+    return ta.tree_attention(q, k, v, q_exit, k_order, k_exit, k_bias, **kw)
+
+
+class TestForwardEquivalence:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_matches_per_path(self, seed):
+        """Eq. 6: every token's output equals its standalone per-path value."""
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=int(rng.integers(1, 14)))
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        o_ref = ref.attention_per_path(q, k, v, meta, nodes)
+        o_ker = run_kernel(q, k, v, meta)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   atol=FWD_TOL, rtol=1e-4)
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000),
+           st.sampled_from([(1, 4), (3, 16), (4, 32)]))
+    def test_shape_sweep(self, seed, hd):
+        H, D = hd
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=8, max_seg=9)
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, H, D)
+        o_ref = ref.attention_dense_mask(q, k, v, jnp.asarray(treemeta.dense_tree_mask(meta)))
+        o_ker = run_kernel(q, k, v, meta)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   atol=FWD_TOL, rtol=1e-4)
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([4, 16, 64, 128]))
+    def test_block_size_invariance(self, seed, blk):
+        """Output must not depend on the kernel block decomposition."""
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=10, max_seg=8)
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        o_a = run_kernel(q, k, v, meta, block_q=blk, block_k=blk)
+        o_b = run_kernel(q, k, v, meta, block_q=ta.DEFAULT_BLOCK_Q)
+        np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_b), atol=1e-5)
+
+    def test_chain_tree_is_causal_attention(self):
+        """A chain (single path) must reduce to plain causal attention."""
+        rng = np.random.default_rng(0)
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 5)),
+                 NodeSpec(0, rng.integers(0, 9, 4)),
+                 NodeSpec(1, rng.integers(0, 9, 3))]
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        causal = np.tril(np.ones((meta.size, meta.size), dtype=bool))
+        o_ref = ref.attention_dense_mask(q, k, v, jnp.asarray(causal))
+        o_ker = run_kernel(q, k, v, meta)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref), atol=FWD_TOL)
+
+    def test_packed_forest_blocks_cross_segment(self):
+        """Sequence packing as a forest-of-chains: segments must not attend
+        each other (Krell et al. packing without cross-contamination)."""
+        rng = np.random.default_rng(0)
+        # emulate a 2-segment pack: exit vectors end each segment
+        s1, s2 = 6, 10
+        exits = np.concatenate([np.full(s1, s1, np.int32),
+                                np.full(s2, s1 + s2, np.int32)])
+        S = s1 + s2
+        q, k, v = rand_qkv(rng, S, 2, 8)
+        q_exit, k_order, k_exit, k_bias = ta.whole_tree_meta(exits)
+        o = ta.tree_attention(q, k, v, q_exit, k_order, k_exit, k_bias)
+        # segment 2 output must equal standalone attention over segment 2
+        causal = np.tril(np.ones((s2, s2), dtype=bool))
+        o2 = ref.attention_dense_mask(q[s1:], k[s1:], v[s1:], jnp.asarray(causal))
+        np.testing.assert_allclose(np.asarray(o[s1:]), np.asarray(o2), atol=FWD_TOL)
+
+    def test_padded_tree(self):
+        rng = np.random.default_rng(5)
+        nodes = treemeta.pad_nodes_for_chunks(
+            treemeta.random_tree(rng, max_nodes=7), 4)
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        o_ref = ref.attention_dense_mask(q, k, v, jnp.asarray(treemeta.dense_tree_mask(meta)))
+        o_ker = run_kernel(q, k, v, meta)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref), atol=FWD_TOL)
+
+
+class TestBackward:
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_grads_match_dense_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        nodes = treemeta.random_tree(rng, max_nodes=int(rng.integers(1, 12)))
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        mask = jnp.asarray(treemeta.dense_tree_mask(meta))
+        w = jnp.asarray(rng.standard_normal((meta.size, 2, 8)).astype(np.float32))
+
+        def loss_ker(q, k, v):
+            return jnp.sum(w * run_kernel(q, k, v, meta))
+
+        def loss_ref(q, k, v):
+            return jnp.sum(w * ref.attention_dense_mask(q, k, v, mask))
+
+        g1 = jax.grad(loss_ker, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=BWD_TOL, rtol=1e-3)
+
+    def test_prefix_grads_aggregate_branches(self):
+        """The gradient of a shared-prefix token must sum contributions from
+        all branches through it — the property plain prefix caching lacks."""
+        rng = np.random.default_rng(1)
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 4)),
+                 NodeSpec(0, rng.integers(0, 9, 3)),
+                 NodeSpec(0, rng.integers(0, 9, 3))]
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 1, 4)
+
+        def branch_loss(v_, sel):
+            o = run_kernel(q, k, v_, meta)
+            w = np.zeros(meta.size, np.float32)
+            w[meta.node_start[sel]:meta.node_start[sel] + meta.node_len[sel]] = 1
+            return jnp.sum(jnp.asarray(w)[:, None, None] * o)
+
+        g_b1 = jax.grad(lambda v_: branch_loss(v_, 1))(v)
+        g_b2 = jax.grad(lambda v_: branch_loss(v_, 2))(v)
+        g_all = jax.grad(lambda v_: branch_loss(v_, 1) + branch_loss(v_, 2))(v)
+        np.testing.assert_allclose(np.asarray(g_all), np.asarray(g_b1 + g_b2),
+                                   atol=1e-5)
+        # and the prefix (root node keys) really receives grad from both
+        root = slice(0, meta.node_len[0])
+        assert np.abs(np.asarray(g_b1)[root]).sum() > 0
+        assert np.abs(np.asarray(g_b2)[root]).sum() > 0
+
+
+class TestGateway:
+    def test_child_partition_matches_unsplit(self):
+        """Child-partition attention over gateway KV == unsplit tree attention
+        (App. B.2/B.3 forward)."""
+        rng = np.random.default_rng(2)
+        # tree: root(4) -> [a(3) -> b(2), c(3)]; cut below node a.
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 4)),
+                 NodeSpec(0, rng.integers(0, 9, 3)),
+                 NodeSpec(1, rng.integers(0, 9, 2)),
+                 NodeSpec(0, rng.integers(0, 9, 3))]
+        meta = treemeta.dfs_serialize(nodes)
+        S = meta.size
+        q, k, v = rand_qkv(rng, S, 2, 8)
+        o_full = run_kernel(q, k, v, meta)
+
+        # child partition = node b's tokens (slots 7..9); gateway = slots 0..6
+        # (root + a: all ancestors of b — no sibling filtering needed here)
+        cs, ce = meta.node_start[2], meta.node_start[2] + meta.node_len[2]
+        past = ce - (ce - cs) - 0  # = cs
+        qc = q[cs:ce]
+        # child-local tree: single chain node of len 2 -> exit = 2
+        child_exit = jnp.asarray(np.full(ce - cs, ce - cs, np.int32))
+        k_all = jnp.concatenate([k[:cs], k[cs:ce]])
+        v_all = jnp.concatenate([v[:cs], v[cs:ce]])
+        q_exit, k_order, k_exit, k_bias = ta.whole_tree_meta(
+            np.asarray(child_exit), past_len=cs)
+        o_child = ta.tree_attention(qc, k_all, v_all, q_exit, k_order, k_exit, k_bias)
+        np.testing.assert_allclose(np.asarray(o_child), np.asarray(o_full[cs:ce]),
+                                   atol=FWD_TOL)
+
+    def test_ancestor_bias_blocks_siblings(self):
+        """Eq. 16: gateway slice containing sibling tokens must be filtered."""
+        rng = np.random.default_rng(4)
+        # root(3) -> [s1(2), s2(2) -> leaf(2)]; partition P = {root, s1, s2},
+        # child partition = {leaf}; gateway slice includes s1 (NOT an ancestor).
+        nodes = [NodeSpec(-1, rng.integers(0, 9, 3)),
+                 NodeSpec(0, rng.integers(0, 9, 2)),
+                 NodeSpec(0, rng.integers(0, 9, 2)),
+                 NodeSpec(2, rng.integers(0, 9, 2))]
+        meta = treemeta.dfs_serialize(nodes)
+        q, k, v = rand_qkv(rng, meta.size, 2, 8)
+        o_full = run_kernel(q, k, v, meta)
+
+        ls, le = meta.node_start[3], meta.node_start[3] + meta.node_len[3]
+        qc = q[ls:le]
+        child_exit = np.full(le - ls, le - ls, np.int32)
+        # bias: 0 on root(0..2) and s2(5..6), -inf on s1(3..4)
+        bias = np.zeros(ls, np.float32)
+        bias[3:5] = ta.NEG_INF
+        q_exit, k_order, k_exit, k_bias = ta.whole_tree_meta(
+            child_exit, past_len=ls, past_bias=jnp.asarray(bias))
+        o_child = ta.tree_attention(qc, k[:le], v[:le],
+                                    q_exit, k_order, k_exit, k_bias)
+        np.testing.assert_allclose(np.asarray(o_child), np.asarray(o_full[ls:le]),
+                                   atol=FWD_TOL)
+
+    def test_gateway_grads_flow(self):
+        """d(child loss)/d(gateway KV) is nonzero only at visible slots."""
+        rng = np.random.default_rng(6)
+        S_child, A = 4, 6
+        q = jnp.asarray(rng.standard_normal((S_child, 1, 4)).astype(np.float32))
+        kc = jnp.asarray(rng.standard_normal((S_child, 1, 4)).astype(np.float32))
+        vc = jnp.asarray(rng.standard_normal((S_child, 1, 4)).astype(np.float32))
+        k_past = jnp.asarray(rng.standard_normal((A, 1, 4)).astype(np.float32))
+        v_past = jnp.asarray(rng.standard_normal((A, 1, 4)).astype(np.float32))
+        bias = np.zeros(A, np.float32)
+        bias[2:4] = ta.NEG_INF  # blocked sibling slots
+        child_exit = np.full(S_child, S_child, np.int32)
+        q_exit, k_order, k_exit, k_bias = ta.whole_tree_meta(
+            child_exit, past_len=A, past_bias=jnp.asarray(bias))
+
+        def loss(k_past, v_past):
+            o = ta.tree_attention(q, jnp.concatenate([k_past, kc]),
+                                  jnp.concatenate([v_past, vc]),
+                                  q_exit, k_order, k_exit, k_bias)
+            return jnp.sum(o ** 2)
+
+        gk, gv = jax.grad(loss, argnums=(0, 1))(k_past, v_past)
+        gk, gv = np.asarray(gk), np.asarray(gv)
+        assert np.abs(gk[2:4]).max() == 0 and np.abs(gv[2:4]).max() == 0
+        assert np.abs(gk[:2]).max() > 0 and np.abs(gv[4:]).max() > 0

@@ -1,0 +1,154 @@
+"""Serializer invariants: DFS layout, Eq. 9 positions, interval-mask
+reduction, loss-weight algebra (Eq. 2-4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import treemeta
+from compile.treemeta import NodeSpec
+
+
+def fig1_tree(rng=None):
+    """The paper's Figure-1 tree: K=3 paths, shared root + one shared branch."""
+    rng = rng or np.random.default_rng(7)
+    return [
+        NodeSpec(-1, rng.integers(0, 64, 4)),   # n0 root
+        NodeSpec(0, rng.integers(0, 64, 3)),    # n1 (shared, g=2)
+        NodeSpec(1, rng.integers(0, 64, 2)),    # n3 leaf
+        NodeSpec(1, rng.integers(0, 64, 5)),    # n4 leaf
+        NodeSpec(0, rng.integers(0, 64, 3)),    # n2 leaf
+    ]
+
+
+def trees(draw_seed):
+    rng = np.random.default_rng(draw_seed)
+    return treemeta.random_tree(rng, max_nodes=int(rng.integers(1, 16)))
+
+
+class TestSerialize:
+    def test_fig1_counts(self):
+        nodes = fig1_tree()
+        meta = treemeta.dfs_serialize(nodes)
+        assert meta.num_paths == 3
+        assert meta.size == 4 + 3 + 2 + 5 + 3
+        # g: root counted on 3 paths, n1 on 2, leaves on 1
+        assert list(meta.g[:4]) == [3] * 4
+        assert list(meta.g[4:7]) == [2] * 3
+
+    def test_fig1_positions(self):
+        nodes = fig1_tree()
+        meta = treemeta.dfs_serialize(nodes)
+        # sibling nodes at the same depth share the same position range (§3.2)
+        # n3 starts after n0+n1 = 7; n4 too; n2 starts after n0 = 4
+        n3_first = meta.node_start[2]
+        n4_first = meta.node_start[3]
+        n2_first = meta.node_start[4]
+        assert meta.pos_ids[n3_first] == 7
+        assert meta.pos_ids[n4_first] == 7
+        assert meta.pos_ids[n2_first] == 4
+
+    def test_tokens_appear_once(self):
+        nodes = fig1_tree()
+        meta = treemeta.dfs_serialize(nodes)
+        # Eq. 8: DFS sequence holds each node segment exactly once
+        total = sum(len(n.tokens) for n in nodes)
+        assert meta.size == total
+
+    def test_preorder_validation(self):
+        with pytest.raises(ValueError):
+            treemeta.dfs_serialize([NodeSpec(-1, [1]), NodeSpec(1, [2])])
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_interval_mask_equals_ancestor_mask(self, seed):
+        nodes = trees(seed)
+        meta = treemeta.dfs_serialize(nodes)
+        dense = treemeta.dense_tree_mask(meta)
+        interval = treemeta.interval_tree_mask(meta.subtree_exit)
+        assert (dense == interval).all()
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_positions_match_paths(self, seed):
+        """Eq. 9: each token's pos equals its offset in every standalone path."""
+        nodes = trees(seed)
+        meta = treemeta.dfs_serialize(nodes)
+        for path in treemeta.paths(nodes):
+            idx = treemeta.path_token_indices(meta, path)
+            assert (meta.pos_ids[idx] == np.arange(len(idx))).all()
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_weight_algebra(self, seed):
+        """Eq. 2: sum_t g_t == sum over paths of path length."""
+        nodes = trees(seed)
+        meta = treemeta.dfs_serialize(nodes)
+        flat_tokens = sum(
+            len(treemeta.path_token_indices(meta, p)) for p in treemeta.paths(nodes))
+        assert meta.g.sum() == flat_tokens
+        # Eq. 4 with trainable == 1: lambda_t = g_t / K
+        np.testing.assert_allclose(meta.weights, meta.g / meta.num_paths, rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_g_equals_paths_through_node(self, seed):
+        nodes = trees(seed)
+        meta = treemeta.dfs_serialize(nodes)
+        all_paths = treemeta.paths(nodes)
+        assert meta.num_paths == len(all_paths)
+        for n in range(len(nodes)):
+            thru = sum(1 for p in all_paths if n in p)
+            s = meta.node_start[n]
+            if meta.node_len[n]:
+                assert meta.g[s] == thru
+
+    def test_por_fig5_example(self):
+        """Paper §4.1: POR = 1 - 83k/164k for the Fig. 5 tree (scaled down)."""
+        # two-leaf tree: root 52, children 15+16 -> tree 83, flat 52+15+52+16=135
+        nodes = [NodeSpec(-1, np.zeros(52, np.int32)),
+                 NodeSpec(0, np.zeros(15, np.int32)),
+                 NodeSpec(0, np.zeros(16, np.int32))]
+        meta = treemeta.dfs_serialize(nodes)
+        assert abs(treemeta.por(meta, nodes) - (1 - 83 / 135)) < 1e-9
+
+
+class TestPads:
+    def test_pad_alignment(self):
+        rng = np.random.default_rng(3)
+        nodes = fig1_tree(rng)
+        padded = treemeta.pad_nodes_for_chunks(nodes, 4)
+        meta = treemeta.dfs_serialize(padded)
+        assert meta.size % 4 == 0
+        cpm = treemeta.chunk_parent_map(meta, 4)
+        assert cpm[0] == -1
+        # every chunk's parent chunk precedes it (DFS guarantee, §3.2)
+        assert all(cpm[i] < i for i in range(len(cpm)))
+
+    def test_pads_zero_weight_and_islands(self):
+        rng = np.random.default_rng(3)
+        padded = treemeta.pad_nodes_for_chunks(fig1_tree(rng), 8)
+        meta = treemeta.dfs_serialize(padded)
+        assert meta.weights[meta.pad_mask].sum() == 0
+        dense = treemeta.dense_tree_mask(meta)
+        interval = treemeta.interval_tree_mask(meta.subtree_exit)
+        assert (dense == interval).all()
+        # pad rows: self plus real ancestors only; pad cols invisible elsewhere
+        for i in np.where(meta.pad_mask)[0]:
+            assert dense[i, i]
+        for j in np.where(meta.pad_mask)[0]:
+            col = dense[:, j].copy()
+            col[j] = False
+            assert not col.any()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]))
+    def test_padded_interval_mask(self, seed, chunk):
+        nodes = treemeta.pad_nodes_for_chunks(trees(seed), chunk)
+        meta = treemeta.dfs_serialize(nodes)
+        assert (treemeta.dense_tree_mask(meta)
+                == treemeta.interval_tree_mask(meta.subtree_exit)).all()
+        # positions still path-exact with pads skipped
+        for path in treemeta.paths(nodes):
+            idx = treemeta.path_token_indices(meta, path)
+            assert (meta.pos_ids[idx] == np.arange(len(idx))).all()

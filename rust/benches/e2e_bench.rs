@@ -1,0 +1,39 @@
+//! End-to-end tree vs baseline step on the small dense model — the
+//! Fig. 7/8 measurement in micro-bench form.  Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tree_train::runtime::Runtime;
+use tree_train::trainer::{AdamWConfig, BaselineTrainer, TreeTrainer};
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::from_dir(&artifacts()).expect("make artifacts"));
+    let cap = rt.manifest.find("step", "small", 0).unwrap().capacity;
+    // a high-POR tree filling the whole-tree bucket
+    let tree = gen::with_target_por(5, 0.85, 16, cap - cap / 8, 48, 512);
+    let por = tree_train::tree::metrics::por(&tree);
+    let mut tree_tr = TreeTrainer::new(rt.clone(), "small", AdamWConfig::default()).unwrap();
+    let mut base_tr = BaselineTrainer::new(rt, "small", AdamWConfig::default()).unwrap();
+    let batch = std::slice::from_ref(&tree);
+    println!("== e2e benches (small, POR {:.1}%, bound {:.2}x) ==", por * 100.0, 1.0 / (1.0 - por));
+    let t = bench("tree_train_step", Duration::from_secs(4), || {
+        tree_tr.train_step(batch).unwrap().loss
+    });
+    t.report();
+    let b = bench("baseline_step", Duration::from_secs(8), || {
+        base_tr.train_step(batch).unwrap().loss
+    });
+    b.report();
+    println!(
+        "measured speedup: {:.2}x (bound {:.2}x)",
+        b.mean.as_secs_f64() / t.mean.as_secs_f64(),
+        1.0 / (1.0 - por)
+    );
+}

@@ -1,0 +1,36 @@
+//! Bin packing + partition planning (Fig. 5 machinery).
+
+use std::time::Duration;
+
+use tree_train::partition::{greedy_pack, plan};
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("== partition benches ==");
+    for &tokens in &[10_000usize, 100_000] {
+        let tree = gen::with_target_por(1, 0.75, 16, tokens, 64, 512);
+        let n = tree.n_tree();
+        bench(&format!("greedy_pack_{tokens}"), budget, || {
+            greedy_pack(std::hint::black_box(&tree), tokens / 4).unwrap()
+        })
+        .report_throughput(n, "tok");
+    }
+    for &tokens in &[10_000usize, 100_000] {
+        let tree = gen::with_target_por(2, 0.75, 16, tokens, 64, 512);
+        let assign = greedy_pack(&tree, tokens / 4).unwrap();
+        let n = tree.n_tree();
+        bench(&format!("partition_plan_{tokens}"), budget, || {
+            plan(std::hint::black_box(&tree), &assign).unwrap()
+        })
+        .report_throughput(n, "tok");
+    }
+    // full Fig. 5 pipeline at paper scale (83k tokens, C = 60k)
+    bench("fig5_83k_pipeline", Duration::from_secs(1), || {
+        let tree = gen::with_target_por(3, 0.5, 4, 83_000, 3_000, 512);
+        let assign = greedy_pack(&tree, 60_000).unwrap();
+        plan(&tree, &assign).unwrap().total_real_tokens()
+    })
+    .report();
+}

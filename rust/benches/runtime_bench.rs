@@ -1,0 +1,41 @@
+//! PJRT program execution (step / partition relay on the tiny bucket) —
+//! isolates runtime dispatch + device compute from planning.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tree_train::runtime::{HostTensor, Runtime};
+use tree_train::trainer::grads::GradBuffer;
+use tree_train::trainer::{AdamWConfig, TreeTrainer};
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::from_dir(&artifacts()).expect("make artifacts"));
+    let tr = TreeTrainer::new(rt, "tiny", AdamWConfig::default()).unwrap();
+    let tree = gen::uniform(1, 9, 5, 0.6);
+    println!("== runtime benches (tiny c64) ==");
+    bench("step_whole_tree", Duration::from_secs(1), || {
+        let mut gb = GradBuffer::zeros(&tr.params);
+        tr.accumulate_tree(&tree, &mut gb).unwrap();
+        gb.loss_sum
+    })
+    .report();
+    bench("step_partitioned_relay", Duration::from_secs(1), || {
+        let mut gb = GradBuffer::zeros(&tr.params);
+        tr.accumulate_tree_partitioned(&tree, &mut gb).unwrap();
+        gb.loss_sum
+    })
+    .report();
+    let t = HostTensor::zeros_f32(vec![64, 1024]);
+    bench("literal_roundtrip_256kB", Duration::from_millis(400), || {
+        let l = t.to_literal().unwrap();
+        HostTensor::from_literal(&l).unwrap().len()
+    })
+    .report();
+}

@@ -1,0 +1,36 @@
+//! DFS serializer + batch-builder throughput (L3 hot path).
+//! Target (DESIGN.md §7): >= 10M tokens/s plan throughput.
+
+use std::time::Duration;
+
+use tree_train::trainer::batch::{build_batch, BatchOptions};
+use tree_train::tree::{dfs, gen, serialize};
+use tree_train::util::bench::bench;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("== serializer benches ==");
+    for &tokens in &[1_000usize, 10_000, 100_000] {
+        let tree = gen::with_target_por(1, 0.7, 8, tokens, 64, 512);
+        let n = tree.n_tree();
+        bench(&format!("serialize_{tokens}"), budget, || serialize(std::hint::black_box(&tree)))
+            .report_throughput(n, "tok");
+    }
+    for &tokens in &[1_000usize, 10_000] {
+        let tree = gen::with_target_por(2, 0.7, 8, tokens, 64, 512);
+        let meta = serialize(&tree);
+        let cap = meta.size() + 64;
+        bench(&format!("build_batch_{tokens}"), budget, || {
+            build_batch(std::hint::black_box(&meta), cap, &BatchOptions::default()).unwrap()
+        })
+        .report_throughput(meta.size(), "tok");
+    }
+    let tree = gen::with_target_por(3, 0.7, 8, 10_000, 64, 512);
+    let meta = serialize(&tree);
+    bench("prev_indices_10k", budget, || dfs::prev_indices(std::hint::black_box(&meta)))
+        .report_throughput(meta.size(), "tok");
+    bench("conv_gather_10k_k4", budget, || {
+        dfs::conv_gather_indices(std::hint::black_box(&meta), 4, false)
+    })
+    .report_throughput(meta.size(), "tok");
+}

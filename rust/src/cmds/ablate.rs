@@ -1,0 +1,75 @@
+//! Ablation: DFS packing vs per-node processing (§3.3).
+//!
+//! The differentiable-boundary mechanism works at *every* node boundary, so
+//! one could process the tree node-by-node (zero redundancy, like DFS
+//! packing) — but the paper argues DFS packing wins on kernel-launch count
+//! and GEMM density.  We reproduce that argument by sweeping the partition
+//! budget from "whole tree in one call" down to "almost one node per call"
+//! and measuring wall time + program calls at equal (zero) redundancy.
+//!
+//! Also reports the §4.1 token accounting per budget: all points process
+//! exactly N_tree unique tokens — the sweep isolates *coordination* cost.
+
+use std::io::Write;
+
+use tree_train::trainer::grads::GradBuffer;
+use tree_train::trainer::{AdamWConfig, TreeTrainer};
+use tree_train::tree::gen::with_target_por;
+
+pub fn run(
+    artifacts: &std::path::Path,
+    out: &std::path::Path,
+    model: &str,
+    reps: usize,
+) -> anyhow::Result<()> {
+    let rt = super::runtime(artifacts)?;
+    let cap = rt.manifest.find("part_fwd", model, 0)?.capacity;
+    let tree = with_target_por(11, 0.8, 16, cap - cap / 8, 12, 512);
+    println!(
+        "=== Ablation: DFS packing vs per-node processing [{model}] ===\n\
+         tree: {} unique tokens, {} nodes, C = {cap}\n\
+         every row computes each token exactly once; only the partition\n\
+         granularity changes (paper §3.3: fewer+denser calls win)\n",
+        tree.n_tree(),
+        tree.len()
+    );
+    println!("{:>10} {:>12} {:>12} {:>14}", "budget", "partitions", "calls", "ms/pass");
+
+    let csv_path = out.join(format!("ablate_{model}.csv"));
+    let mut csv = std::io::BufWriter::new(std::fs::File::create(&csv_path)?);
+    writeln!(csv, "budget,partitions,calls,ms_per_pass")?;
+
+    // cap/16 would leave no room for segments + boundary slots
+    let budgets = [cap, cap / 2, cap / 4, cap / 8];
+    for &budget in &budgets {
+        let mut tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+        tr.partition_budget = Some(budget);
+        // plan stats
+        let split = tree.split_long_segments(budget - budget / 8);
+        let assign = tree_train::partition::greedy_pack(&split, budget)?;
+        let n_parts = assign.iter().copied().max().unwrap() + 1;
+        // warmup + measure
+        let mut gb = GradBuffer::zeros(&tr.params);
+        if budget == cap && tree.n_slots() <= cap {
+            tr.accumulate_tree(&tree, &mut gb)?;
+        } else {
+            tr.accumulate_tree_partitioned(&tree, &mut gb)?;
+        }
+        let t0 = std::time::Instant::now();
+        let mut calls = 0u64;
+        for _ in 0..reps {
+            let mut gb = GradBuffer::zeros(&tr.params);
+            if budget == cap && tree.n_slots() <= cap {
+                tr.accumulate_tree(&tree, &mut gb)?;
+            } else {
+                tr.accumulate_tree_partitioned(&tree, &mut gb)?;
+            }
+            calls = gb.exec_calls;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("{budget:>10} {n_parts:>12} {calls:>12} {ms:>14.1}");
+        writeln!(csv, "{budget},{n_parts},{calls},{ms:.1}")?;
+    }
+    println!("\n-> {}", csv_path.display());
+    Ok(())
+}

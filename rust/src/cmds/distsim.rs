@@ -1,0 +1,67 @@
+//! Cluster-scale projection (`tree-train distsim`): map the measured
+//! single-host ratios onto the paper's 64xHopper testbed shape via the
+//! distsim cost model (DESIGN.md §5) — the absolute-shape sanity check.
+
+use tree_train::distsim::{simulate_step, simulated_speedup, ClusterSpec};
+use tree_train::tree::gen::{agentic, Overlap};
+use tree_train::tree::metrics;
+
+pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
+    // fig-7-like rollout mix at paper scale: long think-mode sessions
+    let trees: Vec<_> = (0..64)
+        .map(|i| agentic(500 + i, Overlap::High, 24, 32_000))
+        .collect();
+    let por = metrics::dataset_por(&trees);
+    let bound = 1.0 / (1.0 - por);
+
+    println!("=== distsim: projected 64xHopper step times (paper-scale shape) ===");
+    println!("dataset: {} trees, POR {:.1}%, bound {bound:.2}x\n", trees.len(), por * 100.0);
+    println!("{:<22} {:>10} {:>12} {:>12} {:>9}", "model", "params", "tree step", "flat step", "speedup");
+    let mut rows = Vec::new();
+    for (name, n_params) in [("Qwen3-32B-dense", 32e9 as usize), ("Qwen3-30B-MoE(act~3B)", 3e9 as usize)] {
+        let spec = ClusterSpec::paper_64xhopper(n_params);
+        let tree_tok: Vec<usize> = trees.iter().map(|t| t.n_tree()).collect();
+        let flat_tok: Vec<usize> = trees.iter().map(|t| t.n_flat()).collect();
+        let ts = simulate_step(&spec, &tree_tok);
+        let fs = simulate_step(&spec, &flat_tok);
+        let sp = simulated_speedup(&spec, &trees);
+        println!(
+            "{:<22} {:>10} {:>11.2}s {:>11.2}s {:>8.2}x",
+            name,
+            n_params / 1_000_000_000 * 1_000_000_000,
+            ts.total_s,
+            fs.total_s,
+            sp
+        );
+        rows.push((name, ts.total_s, fs.total_s, sp));
+    }
+    println!(
+        "\npaper fig. 7: 6.2-6.3x measured vs 6.5x bound; the projection should\n\
+         land in the same band when compute dominates the collectives."
+    );
+    use tree_train::util::json::Json;
+    std::fs::write(
+        out.join("distsim.json"),
+        Json::obj(vec![
+            ("por", Json::num(por)),
+            ("bound", Json::num(bound)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(n, t, f, s)| {
+                            Json::obj(vec![
+                                ("model", Json::str(*n)),
+                                ("tree_s", Json::num(*t)),
+                                ("flat_s", Json::num(*f)),
+                                ("speedup", Json::num(*s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string_pretty(),
+    )?;
+    Ok(())
+}

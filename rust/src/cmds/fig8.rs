@@ -1,0 +1,90 @@
+//! Fig. 8: end-to-end speedup across synthetic datasets with POR 20..92%,
+//! leaf count and unique tokens held constant.
+//!
+//! (a) `--partitioned=false`: trees sized to fit device capacity (one DFS
+//!     call) — the paper reports up to 8.7x at POR 92%.
+//! (b) `--partitioned=true`: trees larger than capacity, exercising
+//!     Redundancy-Free Tree Partitioning; speedup should still track
+//!     1/(1-POR) since the gateway adds no redundant compute.
+
+use std::io::Write;
+
+use tree_train::trainer::{AdamWConfig, BaselineTrainer, TreeTrainer};
+use tree_train::tree::gen::with_target_por;
+use tree_train::tree::metrics;
+
+const PORS: [f64; 6] = [0.20, 0.35, 0.50, 0.65, 0.80, 0.92];
+
+pub fn run(
+    artifacts: &std::path::Path,
+    out: &std::path::Path,
+    partitioned: bool,
+    steps: u64,
+    model: &str,
+) -> anyhow::Result<()> {
+    let rt = super::runtime(artifacts)?;
+    let cap = rt.manifest.find("step", model, 0)?.capacity;
+    // constant leaves and unique tokens across the sweep (§4.5); K = 16 so
+    // POR 92% is reachable (max POR = 1 - 1/K)
+    let k = 16usize;
+
+    let suffix = if partitioned { "partitioned" } else { "fit" };
+    let csv_path = out.join(format!("fig8_{suffix}_{model}.csv"));
+    let mut csv = std::io::BufWriter::new(std::fs::File::create(&csv_path)?);
+    writeln!(csv, "por_target,por,bound,speedup,tree_ms,base_ms,rel_err,partitions_used")?;
+
+    println!("=== Fig. 8{} [{model}] (K={k}, C={cap}) ===",
+             if partitioned { "b" } else { "a" });
+    println!("{:>6} {:>7} {:>7} {:>9} {:>9} {:>9}", "POR%", "bound", "speedup", "tree_ms", "base_ms", "rel_err");
+    for (pi, &por_t) in PORS.iter().enumerate() {
+        // longest path ~= total * f where f = trunk share + one branch share;
+        // cap it so the baseline can still sequence-pack every path
+        let trunk_share = (por_t / ((1.0 - por_t) * (k - 1) as f64)).min(1.0);
+        let f = trunk_share + (1.0 - trunk_share) / k as f64;
+        let max_total = ((cap - 24) as f64 / f) as usize;
+        let total = if partitioned {
+            (cap + cap / 4).min(max_total)
+        } else {
+            (cap - cap / 8).min(max_total)
+        };
+        let trees: Vec<_> = (0..steps as usize)
+            .map(|i| with_target_por(7_000 + (pi * 100 + i) as u64, por_t, k, total, 48, 512))
+            .collect();
+        let por = metrics::dataset_por(&trees);
+        let bound = 1.0 / (1.0 - por);
+        let mut tree_tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+        let mut base_tr = BaselineTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+        let (mut t_tree, mut t_base) = (0.0f64, 0.0f64);
+        let (mut loss_t, mut loss_b) = (0.0f64, 0.0f64);
+        let mut calls = 0u64;
+        for t in &trees {
+            let batch = std::slice::from_ref(t);
+            let mt = tree_tr.train_step(batch)?;
+            let mb = base_tr.train_step(batch)?;
+            t_tree += mt.wall.as_secs_f64();
+            t_base += mb.wall.as_secs_f64();
+            loss_t += mt.loss;
+            loss_b += mb.loss;
+            calls += mt.exec_calls;
+        }
+        let speed = t_base / t_tree;
+        let rel = (loss_t - loss_b).abs() / loss_b.abs().max(1e-9);
+        println!(
+            "{:>6.1} {:>7.2} {:>7.2} {:>9.1} {:>9.1} {:>9.2e}",
+            por * 100.0,
+            bound,
+            speed,
+            t_tree * 1e3 / steps as f64,
+            t_base * 1e3 / steps as f64,
+            rel
+        );
+        writeln!(
+            csv,
+            "{por_t},{por:.4},{bound:.3},{speed:.3},{:.1},{:.1},{rel:.2e},{calls}",
+            t_tree * 1e3,
+            t_base * 1e3
+        )?;
+    }
+    println!("-> {}", csv_path.display());
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! `tree-train gen-data` — synthetic agentic corpora (JSONL).
+
+use tree_train::tree::gen::{self, Overlap};
+use tree_train::tree::{io, metrics};
+
+pub fn run(
+    overlap: &str,
+    n_trees: usize,
+    turns: usize,
+    vocab: i32,
+    seed: u64,
+    out: &std::path::Path,
+) -> anyhow::Result<()> {
+    let trees: Vec<_> = (0..n_trees)
+        .map(|i| {
+            let s = seed.wrapping_add(i as u64);
+            if let Some(p) = overlap.strip_prefix("por:") {
+                gen::with_target_por(s, p.parse().unwrap(), 6, 600, 24, vocab)
+            } else {
+                let ov = match overlap {
+                    "low" => Overlap::Low,
+                    "medium" => Overlap::Medium,
+                    _ => Overlap::High,
+                };
+                gen::agentic(s, ov, turns, vocab)
+            }
+        })
+        .collect();
+    io::save_corpus(&trees, out)?;
+    println!(
+        "wrote {} trees to {} (dataset POR {:.1}%, bound {:.2}x)",
+        trees.len(),
+        out.display(),
+        metrics::dataset_por(&trees) * 100.0,
+        1.0 / (1.0 - metrics::dataset_por(&trees))
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! CLI subcommand implementations — one module per paper artifact
+//! (DESIGN.md §3 experiment index).
+
+pub mod ablate;
+pub mod distsim;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod gen_data;
+pub mod mem;
+pub mod quality;
+pub mod train;
+pub mod verify;
+
+use std::sync::Arc;
+
+use tree_train::runtime::Runtime;
+
+pub fn runtime(artifacts: &std::path::Path) -> anyhow::Result<Arc<Runtime>> {
+    Ok(Arc::new(Runtime::from_dir(artifacts)?))
+}

@@ -1,0 +1,127 @@
+//! §4.7: the gain of training on ALL tokens of the trajectory tree versus
+//! only the longest trajectory (common practice).
+//!
+//! Terminal-Bench + a 32B model are not runnable here; the substitution
+//! (DESIGN.md §5) isolates the paper's mechanism: off-longest-path branches
+//! carry training signal (distinct "skills") that longest-path-only training
+//! never sees.  Each task tree shares a prompt trunk and branches into K
+//! skill demonstrations — skill i is a deterministic token map
+//! x -> (a_i * x + b_i) mod V.  Eval = per-skill mean loss on held-out
+//! chains; the paper's avg@4 analog is mean exp(-loss) across skills.
+
+use tree_train::trainer::{AdamWConfig, TreeTrainer};
+use tree_train::tree::{gen, NodeSpec, TrajectoryTree};
+
+const SKILLS: [(i32, i32); 4] = [(31, 17), (13, 5), (7, 29), (19, 11)];
+/// Few distinct inputs per skill so the mapping is memorizable at tiny scale
+/// (the "skill" is knowing the branch's demonstrated tool behaviour).
+const XS_PER_SKILL: i32 = 10;
+
+fn skill_segment(r: &mut tree_train::util::rng::Rng, skill: usize, vocab: i32, pairs: usize) -> Vec<i32> {
+    let (a, b) = SKILLS[skill];
+    let marker = vocab - 1 - skill as i32; // reserved marker token
+    let mut seg = vec![marker];
+    for _ in 0..pairs {
+        let x = 16 + skill as i32 * XS_PER_SKILL + r.i32(0, XS_PER_SKILL);
+        seg.push(x);
+        seg.push((x * a + b).rem_euclid(vocab - 8));
+    }
+    seg
+}
+
+/// One task tree: untrained prompt trunk + one branch per skill.  Branch 0
+/// is longest (the "common practice" selection target).
+fn task_tree(seed: u64, vocab: i32) -> TrajectoryTree {
+    let mut r = gen::rng(seed);
+    let mut state = r.i32(0, vocab - 8);
+    let prompt = gen::markov_segments(&mut r, vocab - 8, 12, &mut state);
+    let n = prompt.len();
+    let mut nodes = vec![NodeSpec::new(-1, prompt).with_trainable(vec![0.0; n])];
+    for s in 0..SKILLS.len() {
+        let pairs = if s == 0 { 12 } else { 8 }; // branch 0 is the longest
+        nodes.push(NodeSpec::new(0, skill_segment(&mut r, s, vocab, pairs)));
+    }
+    TrajectoryTree::new(nodes).unwrap()
+}
+
+/// Held-out eval tree for one skill (a chain; loss on mapping tokens only).
+fn eval_tree(seed: u64, skill: usize, vocab: i32) -> TrajectoryTree {
+    let mut r = gen::rng(seed);
+    let seg = skill_segment(&mut r, skill, vocab, 7);
+    // train only the f(x) positions: weight 0 on marker and x tokens
+    let mut w = vec![0.0f32; seg.len()];
+    for (i, wi) in w.iter_mut().enumerate() {
+        if i >= 1 && i % 2 == 0 {
+            *wi = 1.0;
+        }
+    }
+    TrajectoryTree::new(vec![NodeSpec::new(-1, seg).with_trainable(w)]).unwrap()
+}
+
+pub fn run(
+    artifacts: &std::path::Path,
+    out: &std::path::Path,
+    steps: u64,
+    model: &str,
+) -> anyhow::Result<()> {
+    let rt = super::runtime(artifacts)?;
+    let info = rt.manifest.model(model)?;
+    let vocab = info.cfg_usize("vocab") as i32;
+
+    let train_full: Vec<_> = (0..steps).map(|i| task_tree(42 + i, vocab)).collect();
+    let train_longest: Vec<_> = train_full
+        .iter()
+        .map(|t| {
+            let path = t.longest_path();
+            tree_train::trainer::baseline::path_chain(t, &path)
+        })
+        .collect();
+    let evals: Vec<Vec<TrajectoryTree>> = (0..SKILLS.len())
+        .map(|s| (0..8).map(|i| eval_tree(9000 + i, s, vocab)).collect())
+        .collect();
+
+    let opt = AdamWConfig { lr: 3e-3, ..Default::default() };
+    let mut scores = Vec::new();
+    for (name, data) in [("full-tree", &train_full), ("longest-path", &train_longest)] {
+        let mut tr = TreeTrainer::new(rt.clone(), model, opt)?;
+        for (step, tree) in data.iter().enumerate() {
+            tr.set_lr(tree_train::trainer::adamw::cosine_lr(3e-3, step as u64, 5, steps));
+            tr.train_step(std::slice::from_ref(tree))?;
+        }
+        let mut per_skill = Vec::new();
+        for (s, ev) in evals.iter().enumerate() {
+            let (loss, _) = tr.eval_loss(ev)?;
+            per_skill.push(loss);
+            let _ = s;
+        }
+        let score = per_skill.iter().map(|l| (-l).exp()).sum::<f64>() / per_skill.len() as f64
+            * 100.0;
+        println!(
+            "[{name:<13}] per-skill eval loss: {:?}  score(avg@{}): {score:.1}",
+            per_skill.iter().map(|l| format!("{l:.3}")).collect::<Vec<_>>(),
+            SKILLS.len()
+        );
+        scores.push((name, per_skill, score));
+    }
+    println!(
+        "paper: full-tree 28.8 vs longest-path 20.9 on Terminal-Bench 2.0 \
+         (shape target: full-tree score > longest-path score)"
+    );
+    use tree_train::util::json::Json;
+    let skill_json = |v: &Vec<f64>| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
+    std::fs::write(
+        out.join(format!("quality_{model}.json")),
+        Json::obj(vec![
+            ("full_tree", Json::obj(vec![
+                ("per_skill_loss", skill_json(&scores[0].1)),
+                ("score", Json::num(scores[0].2)),
+            ])),
+            ("longest_path", Json::obj(vec![
+                ("per_skill_loss", skill_json(&scores[1].1)),
+                ("score", Json::num(scores[1].2)),
+            ])),
+        ])
+        .to_string_pretty(),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! `tree-train train <config.json>` — arbitrary runs from a JSON config.
+
+use tree_train::coordinator::{Coordinator, RunConfig};
+
+pub fn run(artifacts: &std::path::Path, config: &std::path::Path) -> anyhow::Result<()> {
+    let cfg = RunConfig::from_json(&tree_train::util::json::Json::parse(
+        &std::fs::read_to_string(config)?,
+    )?)?;
+    let rt = super::runtime(artifacts)?;
+    let mut coord = Coordinator::new(rt, cfg)?;
+    let metrics = coord.run()?;
+    let last = metrics.last().unwrap();
+    println!(
+        "done: {} steps, final loss {:.4}, {:.0} tree-tokens/s",
+        metrics.len(),
+        last.loss,
+        last.tokens_per_sec()
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! App. B.8-style runtime verification:
+//!   1. self-consistency — identical inputs give bit-identical loss+grads;
+//!   2. tree step vs sep-avg per-path baseline — loss parity (Eq. 1-5);
+//!   3. whole-tree vs forced partitioning — gateway-relay grad parity.
+
+use tree_train::trainer::grads::GradBuffer;
+use tree_train::trainer::{AdamWConfig, BaselineTrainer, TreeTrainer};
+use tree_train::tree::gen;
+
+pub fn run(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    let rt = super::runtime(artifacts)?;
+    let model = "tiny";
+    let tree_tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+    let base_tr = BaselineTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+
+    // trees sized for the tiny c64 bucket
+    let trees: Vec<_> = (0..6).map(|s| gen::uniform(s, 9, 5, 0.6)).collect();
+
+    // 1. self-consistency (paper: EXACT 0)
+    for t in &trees[..2] {
+        let mut g1 = GradBuffer::zeros(&tree_tr.params);
+        let mut g2 = GradBuffer::zeros(&tree_tr.params);
+        tree_tr.accumulate_tree(t, &mut g1)?;
+        tree_tr.accumulate_tree(t, &mut g2)?;
+        anyhow::ensure!(g1.loss_sum == g2.loss_sum, "self-consistency: loss differs");
+        for (a, b) in g1.grads.iter().zip(&g2.grads) {
+            anyhow::ensure!(a == b, "self-consistency: grads differ");
+        }
+    }
+    println!("[1/3] self-consistency: EXACT 0  OK");
+
+    // 2. tree vs sep-avg baseline loss parity
+    let mut max_rel = 0.0f64;
+    for t in &trees {
+        let (lt, wt) = tree_tr.eval_loss(std::slice::from_ref(t))?;
+        let (lb, wb) = base_tr.eval_loss(std::slice::from_ref(t))?;
+        let rel = (lt - lb).abs() / lb.abs().max(1e-9);
+        max_rel = max_rel.max(rel);
+        anyhow::ensure!(rel < 1e-4, "loss parity {rel} (tree {lt}/{wt} vs base {lb}/{wb})");
+    }
+    println!("[2/3] tree vs sep-avg loss parity: max rel err {max_rel:.2e}  OK (< 1e-4)");
+
+    // 3. whole vs partitioned grads (paper: max-relative < 1e-4 in f32).
+    // A small partition budget forces several partitions + real gateways.
+    let mut part_tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default())?;
+    part_tr.partition_budget = Some(24);
+    let mut worst = 0.0f64;
+    let mut n_parts_seen = 0u64;
+    for t in &trees[..3] {
+        let mut gw = GradBuffer::zeros(&tree_tr.params);
+        tree_tr.accumulate_tree(t, &mut gw)?;
+        let mut gp = GradBuffer::zeros(&part_tr.params);
+        part_tr.accumulate_tree_partitioned(t, &mut gp)?;
+        n_parts_seen += gp.exec_calls;
+        let rel_loss = (gw.loss_sum - gp.loss_sum).abs() / gw.loss_sum.abs().max(1e-9);
+        anyhow::ensure!(rel_loss < 1e-4, "partition loss parity {rel_loss}");
+        for (a, b) in gw.grads.iter().zip(&gp.grads) {
+            for (&x, &y) in a.iter().zip(b) {
+                let denom = x.abs().max(1e-3);
+                worst = worst.max((x - y).abs() / denom);
+            }
+        }
+    }
+    anyhow::ensure!(worst < 1e-3, "partitioned grad parity {worst}");
+    anyhow::ensure!(n_parts_seen > 3, "partitioning not exercised ({n_parts_seen} calls)");
+    println!(
+        "[3/3] whole vs partitioned grads ({n_parts_seen} partition calls): \
+         max rel err {worst:.2e}  OK (< 1e-3)"
+    );
+    println!("verify: ALL OK");
+    Ok(())
+}

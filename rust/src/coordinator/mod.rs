@@ -1,0 +1,207 @@
+//! Training-run orchestration: config, data pipeline, run loop.
+//!
+//! The global-batch discipline follows §3.4: each batch is a set of complete
+//! trees (a tree is one rollout's trajectory); shuffling permutes *trees*,
+//! never tokens inside a tree, so Tree Training introduces no gradient bias
+//! relative to the baseline order.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::trainer::{AdamWConfig, BaselineTrainer, CsvSink, StepMetrics, TreeTrainer};
+use crate::tree::TrajectoryTree;
+
+pub use crate::trainer::metrics::CsvSink as MetricsSink;
+
+/// Run configuration (JSON on disk; see configs/*.json).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub mode: Mode,
+    pub steps: u64,
+    pub trees_per_batch: usize,
+    pub lr: f64,
+    pub warmup: u64,
+    pub seed: u64,
+    /// JSONL corpus path; when absent, `synthetic` drives generation.
+    pub corpus: Option<PathBuf>,
+    pub synthetic: Option<SyntheticSpec>,
+    pub metrics_csv: Option<PathBuf>,
+}
+
+impl RunConfig {
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let mode = match v.get("mode").and_then(|m| m.as_str()).unwrap_or("tree") {
+            "tree" => Mode::Tree,
+            "baseline" => Mode::Baseline,
+            other => anyhow::bail!("unknown mode {other}"),
+        };
+        Ok(Self {
+            model: v.req_str("model")?.to_string(),
+            mode,
+            steps: v.req_usize("steps")? as u64,
+            trees_per_batch: v.get("trees_per_batch").and_then(|x| x.as_usize()).unwrap_or(1),
+            lr: v.get("lr").and_then(|x| x.as_f64()).unwrap_or(3e-4),
+            warmup: v.get("warmup").and_then(|x| x.as_u64()).unwrap_or(0),
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+            corpus: v.get("corpus").and_then(|x| x.as_str()).map(PathBuf::from),
+            synthetic: match v.get("synthetic") {
+                Some(s) => Some(SyntheticSpec::from_json(s)?),
+                None => None,
+            },
+            metrics_csv: v.get("metrics_csv").and_then(|x| x.as_str()).map(PathBuf::from),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Tree Training (the paper's method).
+    Tree,
+    /// Sep-avg linearization + sequence packing (Eq. 1).
+    Baseline,
+}
+
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub overlap: String, // low | medium | high | por:<x>
+    pub n_trees: usize,
+    pub turns: usize,
+    pub vocab: i32,
+}
+
+impl SyntheticSpec {
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            overlap: v.get("overlap").and_then(|x| x.as_str()).unwrap_or("high").to_string(),
+            n_trees: v.get("n_trees").and_then(|x| x.as_usize()).unwrap_or(64),
+            turns: v.get("turns").and_then(|x| x.as_usize()).unwrap_or(6),
+            vocab: v.get("vocab").and_then(|x| x.as_i64()).unwrap_or(256) as i32,
+        })
+    }
+}
+
+impl SyntheticSpec {
+    #[allow(clippy::wrong_self_convention)]
+    pub fn generate(&self, seed: u64) -> crate::Result<Vec<TrajectoryTree>> {
+        use crate::tree::gen::{self, Overlap};
+        let mut out = Vec::with_capacity(self.n_trees);
+        for i in 0..self.n_trees {
+            let s = seed.wrapping_add(i as u64);
+            let t = if let Some(p) = self.overlap.strip_prefix("por:") {
+                let por: f64 = p.parse()?;
+                gen::with_target_por(s, por, 6, 600, 24, self.vocab)
+            } else {
+                let ov = match self.overlap.as_str() {
+                    "low" => Overlap::Low,
+                    "medium" => Overlap::Medium,
+                    "high" => Overlap::High,
+                    other => anyhow::bail!("unknown overlap {other}"),
+                };
+                gen::agentic(s, ov, self.turns, self.vocab)
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// Either trainer behind one interface.
+pub enum AnyTrainer {
+    Tree(TreeTrainer),
+    Baseline(BaselineTrainer),
+}
+
+impl AnyTrainer {
+    pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
+        match self {
+            Self::Tree(t) => t.train_step(trees),
+            Self::Baseline(t) => t.train_step(trees),
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f64) {
+        match self {
+            Self::Tree(t) => t.set_lr(lr),
+            Self::Baseline(t) => t.set_lr(lr),
+        }
+    }
+
+    pub fn eval_loss(&self, trees: &[TrajectoryTree]) -> crate::Result<(f64, f64)> {
+        match self {
+            Self::Tree(t) => t.eval_loss(trees),
+            Self::Baseline(t) => t.eval_loss(trees),
+        }
+    }
+}
+
+/// The run loop: data -> trainer -> metrics.
+pub struct Coordinator {
+    pub cfg: RunConfig,
+    pub trainer: AnyTrainer,
+    pub data: Vec<TrajectoryTree>,
+    sink: Option<CsvSink>,
+}
+
+impl Coordinator {
+    pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> crate::Result<Self> {
+        let opt = AdamWConfig { lr: cfg.lr, ..Default::default() };
+        let trainer = match cfg.mode {
+            Mode::Tree => AnyTrainer::Tree(TreeTrainer::new(rt, &cfg.model, opt)?),
+            Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),
+        };
+        let data = if let Some(path) = &cfg.corpus {
+            crate::tree::io::load_corpus(path)?
+        } else if let Some(spec) = &cfg.synthetic {
+            spec.generate(cfg.seed)?
+        } else {
+            anyhow::bail!("config needs `corpus` or `synthetic`")
+        };
+        anyhow::ensure!(!data.is_empty(), "empty dataset");
+        let sink = match &cfg.metrics_csv {
+            Some(p) => Some(CsvSink::create(p)?),
+            None => None,
+        };
+        Ok(Self { cfg, trainer, data, sink })
+    }
+
+    /// Run the configured number of steps; returns per-step metrics.
+    pub fn run(&mut self) -> crate::Result<Vec<StepMetrics>> {
+        let mut rng = crate::tree::gen::rng(self.cfg.seed);
+        let mut order: Vec<usize> = (0..self.data.len()).collect();
+        let mut cursor = 0usize;
+        let mut all = Vec::with_capacity(self.cfg.steps as usize);
+        for step in 0..self.cfg.steps {
+            // epoch boundary: reshuffle between trees (§3.4)
+            if cursor + self.cfg.trees_per_batch > order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let batch: Vec<TrajectoryTree> = order[cursor..cursor + self.cfg.trees_per_batch]
+                .iter()
+                .map(|&i| self.data[i].clone())
+                .collect();
+            cursor += self.cfg.trees_per_batch;
+            let lr =
+                crate::trainer::adamw::cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
+            self.trainer.set_lr(lr);
+            let m = self.trainer.train_step(&batch)?;
+            if let Some(s) = &mut self.sink {
+                s.log(&m)?;
+            }
+            if step % 10 == 0 || step + 1 == self.cfg.steps {
+                crate::info!(
+                    "train step={} loss={:.4} tok/s={:.0} wall_ms={}",
+                    m.step,
+                    m.loss,
+                    m.tokens_per_sec(),
+                    m.wall.as_millis()
+                );
+            }
+            all.push(m);
+        }
+        Ok(all)
+    }
+}

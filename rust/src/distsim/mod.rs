@@ -1,0 +1,124 @@
+//! Cluster-scale cost model (DESIGN.md §5 substitution for the paper's
+//! 64x-Hopper Megatron testbed).
+//!
+//! The paper's headline metric is a *ratio* — tree vs baseline step time on
+//! identical hardware — which our single-host measurement preserves exactly
+//! (both sides run the same executables).  This module maps measured
+//! per-token costs onto a data-parallel cluster to sanity-check the paper's
+//! *absolute shape*: per-step time = max over ranks of (compute + exposed
+//! collective time), with trees sharded whole (the §3.4 constraint: a tree
+//! never splits across global batches or ranks).
+
+use crate::tree::TrajectoryTree;
+
+/// Hardware + parallelism description for one simulated rank.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub n_ranks: usize,
+    /// Sustained model FLOP/s per rank (Hopper bf16 dense ~ 4e14 achievable).
+    pub flops_per_rank: f64,
+    /// All-reduce bus bandwidth per rank (bytes/s), ring model.
+    pub allreduce_bw: f64,
+    /// Model parameter count (gradient bytes = 2x for bf16).
+    pub n_params: usize,
+    /// FLOPs per token per forward (6 * n_params for dense transformer).
+    pub flops_per_token: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed shape: 64 Hopper GPUs, 32B-dense-scale model.
+    pub fn paper_64xhopper(n_params: usize) -> Self {
+        Self {
+            n_ranks: 64,
+            flops_per_rank: 4.0e14,
+            allreduce_bw: 2.0e11,
+            n_params,
+            flops_per_token: 6.0 * n_params as f64,
+        }
+    }
+}
+
+/// Outcome of simulating one global batch.
+#[derive(Debug, Clone)]
+pub struct SimStep {
+    pub compute_s: f64,
+    pub allreduce_s: f64,
+    pub total_s: f64,
+    pub tokens: usize,
+}
+
+/// Greedy shard trees to ranks (whole trees only), return the critical path.
+pub fn simulate_step(spec: &ClusterSpec, token_counts: &[usize]) -> SimStep {
+    let mut rank_tokens = vec![0usize; spec.n_ranks];
+    let mut sorted: Vec<usize> = token_counts.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    for t in &sorted {
+        let r = rank_tokens
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap();
+        rank_tokens[r] += t;
+    }
+    let max_tokens = *rank_tokens.iter().max().unwrap_or(&0);
+    // fwd + bwd ~ 3x fwd FLOPs
+    let compute_s = 3.0 * max_tokens as f64 * spec.flops_per_token / spec.flops_per_rank;
+    // ring all-reduce: 2 * (n-1)/n * bytes / bw
+    let grad_bytes = 2.0 * spec.n_params as f64;
+    let allreduce_s =
+        2.0 * (spec.n_ranks as f64 - 1.0) / spec.n_ranks as f64 * grad_bytes / spec.allreduce_bw;
+    SimStep {
+        compute_s,
+        allreduce_s,
+        total_s: compute_s + allreduce_s,
+        tokens: token_counts.iter().sum(),
+    }
+}
+
+/// Simulated tree-vs-baseline speedup for a dataset of trees: the compute
+/// term scales with N_tree vs N_flat, the collective term is identical.
+pub fn simulated_speedup(spec: &ClusterSpec, trees: &[TrajectoryTree]) -> f64 {
+    let tree_steps: Vec<usize> = trees.iter().map(|t| t.n_tree()).collect();
+    let flat_steps: Vec<usize> = trees.iter().map(|t| t.n_flat()).collect();
+    let tree = simulate_step(spec, &tree_steps);
+    let flat = simulate_step(spec, &flat_steps);
+    flat.total_s / tree.total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::{gen, metrics};
+
+    #[test]
+    fn speedup_tracks_por_at_scale() {
+        // when compute dominates, simulated speedup approaches 1/(1-POR)
+        let spec = ClusterSpec::paper_64xhopper(32_000_000_000);
+        let trees: Vec<_> =
+            (0..64).map(|s| gen::with_target_por(s, 0.8, 8, 60_000, 512, 1024)).collect();
+        let sim = simulated_speedup(&spec, &trees);
+        let bound = 1.0 / (1.0 - metrics::dataset_por(&trees));
+        assert!(sim > 0.80 * bound, "sim {sim} vs bound {bound}");
+        assert!(sim <= bound * 1.02);
+    }
+
+    #[test]
+    fn collectives_damp_small_batches() {
+        // tiny batches are allreduce-bound: speedup collapses toward 1
+        let spec = ClusterSpec::paper_64xhopper(32_000_000_000);
+        let trees: Vec<_> = (0..2).map(|s| gen::with_target_por(s, 0.7, 4, 60, 16, 64)).collect();
+        let sim = simulated_speedup(&spec, &trees);
+        let bound = 1.0 / (1.0 - metrics::dataset_por(&trees));
+        assert!(sim < 1.5 && sim < bound / 2.0, "allreduce should dominate: {sim} (bound {bound})");
+    }
+
+    #[test]
+    fn sharding_balances() {
+        let spec = ClusterSpec { n_ranks: 4, ..ClusterSpec::paper_64xhopper(1_000_000) };
+        let s = simulate_step(&spec, &[100, 100, 100, 100, 400]);
+        // critical rank holds 400, not 800
+        let expect = 3.0 * 400.0 * spec.flops_per_token / spec.flops_per_rank;
+        assert!((s.compute_s - expect).abs() / expect < 1e-9);
+    }
+}

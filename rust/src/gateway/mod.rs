@@ -1,0 +1,141 @@
+//! Differentiable partition gateways (Appendix B), host side.
+//!
+//! The exported `part_fwd` programs return each partition's per-layer KV
+//! (`[n_layers, C, H, hd]`); the coordinator gathers each child's gateway
+//! rows from the owning partitions (a copy — chain rule through a copy is
+//! the identity) and, on the way back, scatters the child's `d_kv_in`
+//! cotangents into per-partition **f64 accumulators** before invoking the
+//! parent's `part_bwd`.  f64 host accumulation is the strict analog of the
+//! paper's float32 hooks (App. B.5) given our f32 device numerics.
+
+/// Per-layer KV rows for one partition, in `[layers, rows, heads, head_dim]`
+/// row-major layout (exactly the exported program's buffer layout).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub layers: usize,
+    pub rows: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn zeros(layers: usize, rows: usize, heads: usize, head_dim: usize) -> Self {
+        let n = layers * rows * heads * head_dim;
+        Self { layers, rows, heads, head_dim, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    fn row_range(&self, layer: usize, row: usize) -> std::ops::Range<usize> {
+        let re = self.row_elems();
+        let start = (layer * self.rows + row) * re;
+        start..start + re
+    }
+
+    /// Gather `src_rows` (indexed into `src`) into rows `0..n` of `self`
+    /// across every layer — building a child gateway from a parent KV.
+    pub fn gather_from(&mut self, src: &KvCache, src_rows: &[usize], dst_offset: usize) {
+        assert_eq!(self.layers, src.layers);
+        assert_eq!(self.row_elems(), src.row_elems());
+        for l in 0..self.layers {
+            for (d, &s) in src_rows.iter().enumerate() {
+                let dst = self.row_range(l, dst_offset + d);
+                let srcr = src.row_range(l, s);
+                self.k[dst.clone()].copy_from_slice(&src.k[srcr.clone()]);
+                self.v[dst].copy_from_slice(&src.v[srcr]);
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// f64 cotangent accumulator for one partition's `(d_k_part, d_v_part)`.
+#[derive(Debug, Clone)]
+pub struct KvGradAccumulator {
+    pub layers: usize,
+    pub rows: usize,
+    row_elems: usize,
+    pub d_k: Vec<f64>,
+    pub d_v: Vec<f64>,
+}
+
+impl KvGradAccumulator {
+    pub fn zeros(layers: usize, rows: usize, heads: usize, head_dim: usize) -> Self {
+        let n = layers * rows * heads * head_dim;
+        Self { layers, rows, row_elems: heads * head_dim, d_k: vec![0.0; n], d_v: vec![0.0; n] }
+    }
+
+    /// Scatter-add a child's `d_kv_in` (laid out `[layers, A, H, hd]`, first
+    /// `rows.len()` gateway rows meaningful) into this accumulator.
+    pub fn scatter_add(
+        &mut self,
+        d_k_in: &[f32],
+        d_v_in: &[f32],
+        gateway_capacity: usize,
+        rows: &[(usize, usize)], // (gateway row, local row in this partition)
+    ) {
+        let re = self.row_elems;
+        for l in 0..self.layers {
+            for &(a, local) in rows {
+                let src = (l * gateway_capacity + a) * re;
+                let dst = (l * self.rows + local) * re;
+                for e in 0..re {
+                    self.d_k[dst + e] += d_k_in[src + e] as f64;
+                    self.d_v[dst + e] += d_v_in[src + e] as f64;
+                }
+            }
+        }
+    }
+
+    /// Emit f32 cotangent buffers for the `part_bwd` call.
+    pub fn to_f32(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.d_k.iter().map(|&x| x as f32).collect(),
+            self.d_v.iter().map(|&x| x as f32).collect(),
+        )
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.d_k.iter().all(|&x| x == 0.0) && self.d_v.iter().all(|&x| x == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_roundtrip() {
+        let mut src = KvCache::zeros(2, 4, 1, 2);
+        for (i, x) in src.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let mut dst = KvCache::zeros(2, 3, 1, 2);
+        dst.gather_from(&src, &[2, 0], 0);
+        // layer 0 row 0 of dst == layer 0 row 2 of src
+        assert_eq!(&dst.k[0..2], &src.k[4..6]);
+        assert_eq!(&dst.k[2..4], &src.k[0..2]);
+        // layer 1 row 0 of dst == layer 1 row 2 of src
+        let l1 = 3 * 2; // dst layer stride
+        let s1 = 4 * 2;
+        assert_eq!(&dst.k[l1..l1 + 2], &src.k[s1 + 4..s1 + 6]);
+    }
+
+    #[test]
+    fn scatter_accumulates_f64() {
+        let mut acc = KvGradAccumulator::zeros(1, 2, 1, 2);
+        let d = vec![1e-8f32, 2e-8, 0.0, 0.0]; // [1 layer, 2 gateway rows, 1x2]
+        for _ in 0..1000 {
+            acc.scatter_add(&d, &d, 2, &[(0, 1)]);
+        }
+        // f64 accumulation keeps 1000 * 1e-8 exact-ish
+        assert!((acc.d_k[2] - 1e-5).abs() < 1e-12);
+    }
+}

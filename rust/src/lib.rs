@@ -1,0 +1,38 @@
+//! # tree-train
+//!
+//! Rust + JAX + Pallas reproduction of **"Tree Training: Accelerating Agentic
+//! LLMs Training via Shared Prefix Reuse"** (Kwai Inc., 2025).
+//!
+//! Agentic LLM training produces *tree-structured token trajectories*: one
+//! task branches into `K` root-to-leaf paths sharing prefixes.  Linearizing
+//! the tree recomputes every shared prefix `K` times.  This crate is the
+//! Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas tree-attention and GDN
+//!   kernels (build-time only).
+//! * **Layer 2** (`python/compile/model.py`): JAX transformer variants
+//!   (dense / MoE / hybrid-GDN) AOT-lowered to HLO text.
+//! * **Layer 3** (this crate): trajectory-tree data model, DFS serializer,
+//!   Redundancy-Free Tree Partitioning, the differentiable-gateway gradient
+//!   relay, PJRT runtime, optimizers and the training loop.  Python never
+//!   runs at training time.
+//!
+//! Entry points: [`trainer::TreeTrainer`] (the paper's method),
+//! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the
+//! `tree-train` binary whose subcommands regenerate every figure/table of
+//! the paper's evaluation (see DESIGN.md §3).
+
+pub mod coordinator;
+pub mod distsim;
+pub mod gateway;
+pub mod masks;
+pub mod partition;
+pub mod runtime;
+pub mod trainer;
+pub mod tree;
+pub mod util;
+
+pub use tree::{DfsMeta, NodeSpec, TrajectoryTree};
+
+/// Crate-wide result type (error chains via `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,148 @@
+//! `tree-train` — the Tree Training coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts
+//! (DESIGN.md §3): `fig5`, `fig6`, `fig7`, `fig8`, `mem`, `quality`, plus
+//! `train` (arbitrary runs from a JSON config), `gen-data` and `verify`.
+//!
+//! Arg parsing is in-tree (the vendored build has no clap): global flags
+//! `--artifacts <dir>` and `--out <dir>` precede the subcommand; per-command
+//! flags are `--key value`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+mod cmds;
+
+const USAGE: &str = "\
+tree-train — Tree Training: shared-prefix reuse for agentic LLM training
+
+USAGE: tree-train [--artifacts DIR] [--out DIR] <command> [flags]
+
+COMMANDS:
+  train <config.json>      train from a JSON run config
+  gen-data <out.jsonl>     synthetic agentic corpus
+                           [--overlap low|medium|high|por:X] [--n-trees N]
+                           [--turns N] [--vocab V] [--seed S]
+  fig5                     token accounting: flatten vs standard vs RF
+                           [--tree-tokens N] [--capacity C]
+  fig6                     agentic tree shapes + POR + depth profiles
+  fig7                     e2e speedup + loss error  [--steps N] [--models a,b]
+  fig8                     POR sweep  [--partitioned] [--steps N] [--model M]
+  mem                      metadata vs activation memory  [--model M]
+  quality                  full-tree vs longest-path  [--steps N] [--model M]
+  verify                   App. B.8-style runtime self-check
+  ablate                   DFS packing vs per-node processing (§3.3)
+                           [--model M] [--reps N]
+  distsim                  project measured ratios onto 64xHopper shape
+";
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                // boolean flags may be last or followed by another flag
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { flags, positional }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    // split global flags (before the command word) from the rest
+    let cmd_idx = argv
+        .iter()
+        .position(|a| !a.starts_with("--") && !is_global_value(&argv, a))
+        .ok_or_else(|| anyhow::anyhow!("no command given\n{USAGE}"))?;
+    let globals = Args::parse(&argv[..cmd_idx]);
+    let cmd = argv[cmd_idx].clone();
+    let rest = Args::parse(&argv[cmd_idx + 1..]);
+
+    let artifacts = PathBuf::from(globals.str("artifacts", "artifacts"));
+    let out = PathBuf::from(globals.str("out", "results"));
+    std::fs::create_dir_all(&out)?;
+
+    match cmd.as_str() {
+        "train" => {
+            let cfg = rest
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("train needs a config path"))?;
+            cmds::train::run(&artifacts, &PathBuf::from(cfg))
+        }
+        "gen-data" => {
+            let out_file = rest
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("gen-data needs an output path"))?;
+            cmds::gen_data::run(
+                &rest.str("overlap", "high"),
+                rest.get("n-trees", 64usize),
+                rest.get("turns", 6usize),
+                rest.get("vocab", 256i32),
+                rest.get("seed", 0u64),
+                &PathBuf::from(out_file),
+            )
+        }
+        "fig5" => cmds::fig5::run(&out, rest.get("tree-tokens", 83_000usize), rest.get("capacity", 60_000usize)),
+        "fig6" => cmds::fig6::run(&out),
+        "fig7" => cmds::fig7::run(&artifacts, &out, rest.get("steps", 30u64), &rest.str("models", "small,small-moe")),
+        "fig8" => cmds::fig8::run(
+            &artifacts,
+            &out,
+            rest.has("partitioned"),
+            rest.get("steps", 5u64),
+            &rest.str("model", "small"),
+        ),
+        "mem" => cmds::mem::run(&artifacts, &out, &rest.str("model", "small")),
+        "quality" => cmds::quality::run(&artifacts, &out, rest.get("steps", 60u64), &rest.str("model", "tiny")),
+        "verify" => cmds::verify::run(&artifacts),
+        "ablate" => cmds::ablate::run(&artifacts, &out, &rest.str("model", "small"),
+                                      rest.get("reps", 3usize)),
+        "distsim" => cmds::distsim::run(&out),
+        other => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+/// Is this token the value of a preceding global `--flag`?
+fn is_global_value(argv: &[String], tok: &String) -> bool {
+    if let Some(pos) = argv.iter().position(|a| a == tok) {
+        pos > 0 && argv[pos - 1].starts_with("--")
+    } else {
+        false
+    }
+}

@@ -1,0 +1,135 @@
+//! Tree attention mask utilities: the O(S) interval encoding, dense
+//! materialization (tests/debug), and the block-skip/FLOP accounting that
+//! drives the perf model (DESIGN.md §4).
+
+use crate::tree::DfsMeta;
+
+/// Expand the interval encoding to a dense boolean mask (tests only —
+/// O(S^2); the kernel never materializes this).
+pub fn dense_mask(subtree_exit: &[i32]) -> Vec<Vec<bool>> {
+    let s = subtree_exit.len();
+    (0..s)
+        .map(|i| (0..s).map(|j| j <= i && subtree_exit[j] >= subtree_exit[i]).collect())
+        .collect()
+}
+
+/// Fraction of attention score entries that are *live* under the tree mask
+/// (the paper's kernel-level compute saving vs full causal).
+pub fn mask_density(meta: &DfsMeta) -> f64 {
+    let s = meta.size();
+    let mut live = 0usize;
+    for i in 0..s {
+        for j in 0..=i {
+            if meta.subtree_exit[j] >= meta.subtree_exit[i] {
+                live += 1;
+            }
+        }
+    }
+    live as f64 / (s as f64 * (s as f64 + 1.0) / 2.0)
+}
+
+/// Block-skip statistics for a (bq x bk) kernel tiling — the FlashMask
+/// argument: how many KV blocks each query block can skip entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockSkipStats {
+    pub total_blocks: usize,
+    pub causal_skipped: usize,
+    pub branch_skipped: usize,
+    pub live_blocks: usize,
+}
+
+pub fn block_skip_stats(meta: &DfsMeta, bq: usize, bk: usize) -> BlockSkipStats {
+    let s = meta.size();
+    let nq = s.div_ceil(bq);
+    let nk = s.div_ceil(bk);
+    let mut stats =
+        BlockSkipStats { total_blocks: nq * nk, causal_skipped: 0, branch_skipped: 0, live_blocks: 0 };
+    for qb in 0..nq {
+        let q_lo = qb * bq;
+        let q_hi = ((qb + 1) * bq).min(s) - 1;
+        let q_exit_min =
+            (q_lo..=q_hi).map(|i| meta.subtree_exit[i]).min().unwrap_or(i32::MAX);
+        for kb in 0..nk {
+            let k_lo = kb * bk;
+            let k_hi = ((kb + 1) * bk).min(s) - 1;
+            if k_lo > q_hi {
+                stats.causal_skipped += 1;
+                continue;
+            }
+            let k_exit_max =
+                (k_lo..=k_hi).map(|j| meta.subtree_exit[j]).max().unwrap_or(0);
+            if k_exit_max < q_exit_min {
+                stats.branch_skipped += 1;
+            } else {
+                stats.live_blocks += 1;
+            }
+        }
+    }
+    stats
+}
+
+/// Attention FLOPs (qk + pv matmuls) under the tree mask vs the flattened
+/// per-path baseline — the quadratic-term component of the speedup.
+pub fn attention_flops_ratio(meta: &DfsMeta, tree: &crate::TrajectoryTree, head_dim: usize) -> f64 {
+    let d = head_dim as f64;
+    let mut tree_flops = 0f64;
+    for i in 0..meta.size() {
+        for j in 0..=i {
+            if meta.subtree_exit[j] >= meta.subtree_exit[i] {
+                tree_flops += 4.0 * d;
+            }
+        }
+    }
+    let mut flat_flops = 0f64;
+    for p in tree.paths() {
+        let l = meta.path_token_indices(&p).len() as f64;
+        flat_flops += 4.0 * d * l * (l + 1.0) / 2.0;
+    }
+    flat_flops / tree_flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::{gen, serialize};
+
+    #[test]
+    fn dense_matches_interval_semantics() {
+        let t = gen::uniform(3, 10, 5, 0.6);
+        let m = serialize(&t);
+        let mask = dense_mask(&m.subtree_exit);
+        // diagonal always live; nothing above it
+        for i in 0..m.size() {
+            assert!(mask[i][i]);
+            for j in i + 1..m.size() {
+                assert!(!mask[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_density_is_one() {
+        let t = crate::TrajectoryTree::new(vec![crate::NodeSpec::new(-1, vec![0; 16])]).unwrap();
+        let m = serialize(&t);
+        assert!((mask_density(&m) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_skip_accounts_all_blocks() {
+        let t = gen::uniform(5, 12, 6, 0.6);
+        let m = serialize(&t);
+        let st = block_skip_stats(&m, 8, 8);
+        assert_eq!(st.causal_skipped + st.branch_skipped + st.live_blocks, st.total_blocks);
+        assert!(st.live_blocks > 0);
+    }
+
+    #[test]
+    fn branchy_tree_attention_saving() {
+        // deep shared trunk with many leaves: flattened attention is much
+        // more expensive than tree attention
+        let t = gen::with_target_por(2, 0.8, 8, 2000, 32, 128);
+        let m = serialize(&t);
+        let ratio = attention_flops_ratio(&m, &t, 32);
+        assert!(ratio > 2.0, "expected >2x attention FLOP saving, got {ratio}");
+    }
+}

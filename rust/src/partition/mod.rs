@@ -1,0 +1,21 @@
+//! Redundancy-Free Tree Partitioning (§3.3, Appendix B).
+//!
+//! When a tree exceeds the device token capacity `C`, it is cut into
+//! *connected subtrees at node boundaries* — the only cut discipline under
+//! which the partition dependency graph is itself a tree, bounding backward
+//! peak memory by a single root-to-leaf path (§3.3 "Partitioning").
+//!
+//! * [`binpack`] — minimize the number of partitions subject to capacity
+//!   (the paper uses OR-Tools; we ship a bottom-up greedy packer plus an
+//!   exact branch-and-bound used to bound the greedy in tests).
+//! * [`plan`] — turns an assignment into executable metadata: per-partition
+//!   DFS serialization, full-tree loss weights, ancestor gateway slots,
+//!   depth-based position offsets (Eq. 17) and virtual boundary targets.
+
+pub mod binpack;
+pub mod plan;
+pub mod validate;
+
+pub use binpack::{exact_min_partitions, greedy_pack};
+pub use plan::{plan, PartitionSpec, Plan};
+pub use validate::validate_assignment;

@@ -1,0 +1,106 @@
+//! Partition-plan invariants (proptest targets):
+//! connectivity, single parent partition, capacity, token conservation.
+
+use crate::tree::TrajectoryTree;
+
+/// Validate that `assignment` forms connected subtrees with a tree-shaped
+/// partition dependency graph (§3.3's memory-bound requirement).
+pub fn validate_assignment(tree: &TrajectoryTree, assignment: &[usize]) -> crate::Result<()> {
+    anyhow::ensure!(assignment.len() == tree.nodes.len(), "assignment length");
+    let n_parts = assignment.iter().copied().max().unwrap_or(0) + 1;
+
+    let mut roots = vec![Vec::new(); n_parts];
+    for (i, nd) in tree.nodes.iter().enumerate() {
+        let p = assignment[i];
+        anyhow::ensure!(p < n_parts, "partition id gap");
+        if nd.parent < 0 || assignment[nd.parent as usize] != p {
+            roots[p].push(i);
+        }
+    }
+    for (p, r) in roots.iter().enumerate() {
+        anyhow::ensure!(
+            r.len() == 1,
+            "partition {p} must be a single connected subtree (roots: {r:?})"
+        );
+    }
+    // single parent partition (dependency graph is a tree): holds by
+    // construction given connectivity, but assert for belt and braces.
+    for (p, r) in roots.iter().enumerate() {
+        let root = r[0];
+        let par = tree.nodes[root].parent;
+        if par >= 0 {
+            let pp = assignment[par as usize];
+            anyhow::ensure!(pp != p, "partition {p} root not actually a boundary");
+        }
+    }
+    // token conservation
+    let per_part: usize = (0..n_parts)
+        .map(|p| {
+            (0..tree.nodes.len())
+                .filter(|&i| assignment[i] == p)
+                .map(|i| tree.nodes[i].len())
+                .sum::<usize>()
+        })
+        .sum();
+    anyhow::ensure!(per_part == tree.n_slots(), "token slots not conserved");
+    Ok(())
+}
+
+/// Peak-memory bound check (§3.3): the deepest chain of partitions must
+/// cover at most one root-to-leaf path of gateway rows.
+pub fn max_gateway_rows(tree: &TrajectoryTree, assignment: &[usize]) -> usize {
+    let n_parts = assignment.iter().copied().max().unwrap_or(0) + 1;
+    let mut max_rows = 0usize;
+    for p in 0..n_parts {
+        let root = (0..tree.nodes.len())
+            .find(|&i| {
+                assignment[i] == p
+                    && (tree.nodes[i].parent < 0
+                        || assignment[tree.nodes[i].parent as usize] != p)
+            })
+            .unwrap();
+        let mut rows = 0usize;
+        let mut j = tree.nodes[root].parent;
+        while j >= 0 {
+            rows += tree.nodes[j as usize].real_len();
+            j = tree.nodes[j as usize].parent;
+        }
+        max_rows = max_rows.max(rows);
+    }
+    max_rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::greedy_pack;
+    use crate::tree::gen;
+
+    #[test]
+    fn gateway_rows_bounded_by_longest_path() {
+        for seed in 0..20 {
+            let t = gen::uniform(seed, 14, 6, 0.6);
+            if let Ok(assign) = greedy_pack(&t, 20) {
+                let longest: usize = t
+                    .longest_path()
+                    .iter()
+                    .map(|&n| t.nodes[n].real_len())
+                    .sum();
+                assert!(max_gateway_rows(&t, &assign) <= longest);
+            }
+        }
+    }
+
+    #[test]
+    fn detects_disconnected() {
+        let t = TrajectoryTree::new(vec![
+            crate::NodeSpec::new(-1, vec![1]),
+            crate::NodeSpec::new(0, vec![2]),
+            crate::NodeSpec::new(0, vec![3]),
+        ])
+        .unwrap();
+        // {n1, n2} are siblings: not a connected subtree
+        assert!(validate_assignment(&t, &[0, 1, 1]).is_err());
+        assert!(validate_assignment(&t, &[0, 1, 2]).is_ok());
+    }
+}

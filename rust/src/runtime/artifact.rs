@@ -1,0 +1,234 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! coordinator.  Records every exported program's exact flat input/output
+//! order, every model's flattened parameter table, and content hashes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ProgramInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // step | part_fwd | part_bwd | logprob
+    pub model: String,
+    pub capacity: usize,
+    pub past: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub sha256: String,
+}
+
+impl ProgramInfo {
+    fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            file: v.req_str("file")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            model: v.req_str("model")?.to_string(),
+            capacity: v.req_usize("capacity")?,
+            past: v.req_usize("past")?,
+            inputs: str_vec(v.req_arr("inputs")?)?,
+            outputs: str_vec(v.req_arr("outputs")?)?,
+            sha256: v.req_str("sha256")?.to_string(),
+        })
+    }
+}
+
+fn str_vec(a: &[Json]) -> crate::Result<Vec<String>> {
+    a.iter()
+        .map(|x| {
+            x.as_str().map(str::to_string).ok_or_else(|| anyhow::anyhow!("expected string"))
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub config: Json,
+    pub n_attn_layers: usize,
+    pub n_gdn_layers: usize,
+    pub params: Vec<ParamInfo>,
+    pub n_params: usize,
+}
+
+impl ModelInfo {
+    fn from_json(v: &Json) -> crate::Result<Self> {
+        let params = v
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("shape dim")))
+                        .collect::<crate::Result<_>>()?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            config: v.req("config")?.clone(),
+            n_attn_layers: v.req_usize("n_attn_layers")?,
+            n_gdn_layers: v.req_usize("n_gdn_layers")?,
+            params,
+            n_params: v.req_usize("n_params")?,
+        })
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> usize {
+        self.config
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("config key {key}"))
+    }
+
+    pub fn kind(&self) -> &str {
+        self.config.get("kind").and_then(|v| v.as_str()).unwrap_or("dense")
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.cfg_usize("n_heads")
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg_usize("head_dim")
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.cfg_usize("chunk_size")
+    }
+
+    pub fn conv_kernel(&self) -> usize {
+        self.cfg_usize("conv_kernel")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub programs: Vec<ProgramInfo>,
+    pub models: HashMap<String, ModelInfo>,
+    pub format: u32,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("no manifest at {path:?} (run `make artifacts`): {e}"))?;
+        let v = Json::parse(&data)?;
+        let format = v.req_usize("format")? as u32;
+        anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+        let programs = v
+            .req_arr("programs")?
+            .iter()
+            .map(ProgramInfo::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let models = v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+            .iter()
+            .map(|(k, mv)| Ok((k.clone(), ModelInfo::from_json(mv)?)))
+            .collect::<crate::Result<HashMap<_, _>>>()?;
+        Ok(Self { programs, models, format, dir: dir.to_path_buf() })
+    }
+
+    pub fn program(&self, name: &str) -> crate::Result<&ProgramInfo> {
+        self.programs
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("program {name} not in manifest"))
+    }
+
+    /// Find a program by (kind, model) with capacity >= needed.
+    pub fn find(&self, kind: &str, model: &str, min_capacity: usize) -> crate::Result<&ProgramInfo> {
+        self.programs
+            .iter()
+            .filter(|p| p.kind == kind && p.model == model && p.capacity >= min_capacity)
+            .min_by_key(|p| p.capacity)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no {kind} program for model {model} with capacity >= {min_capacity}")
+            })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, prog: &ProgramInfo) -> PathBuf {
+        self.dir.join(&prog.file)
+    }
+
+    /// Load the initial parameters binary (f32, manifest order).
+    pub fn load_params(&self, model: &str) -> crate::Result<Vec<super::HostTensor>> {
+        let info = self.model(model)?;
+        let path = self.dir.join(format!("params_{model}.bin"));
+        let bytes = std::fs::read(&path)?;
+        let expect: usize = info.params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        anyhow::ensure!(
+            bytes.len() == expect * 4,
+            "params_{model}.bin has {} bytes, expected {}",
+            bytes.len(),
+            expect * 4
+        );
+        let mut out = Vec::with_capacity(info.params.len());
+        let mut off = 0usize;
+        for p in &info.params {
+            let n: usize = p.shape.iter().product();
+            let data: Vec<f32> = bytes[off * 4..(off + n) * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            out.push(super::HostTensor::f32(p.shape.clone(), data));
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.program("step_tiny_c64").is_ok());
+        let info = m.model("tiny").unwrap();
+        assert!(info.n_params > 0);
+        assert_eq!(info.n_attn_layers, 2);
+        assert_eq!(info.kind(), "dense");
+    }
+
+    #[test]
+    fn params_load_and_match_manifest() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let params = m.load_params("tiny").unwrap();
+        let info = m.model("tiny").unwrap();
+        assert_eq!(params.len(), info.params.len());
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        assert_eq!(total, info.n_params);
+    }
+
+    #[test]
+    fn find_selects_smallest_sufficient_capacity() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let p = m.find("step", "tiny", 10).unwrap();
+        assert_eq!(p.capacity, 64);
+        assert!(m.find("step", "tiny", 1_000_000).is_err());
+    }
+}

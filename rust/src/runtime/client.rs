@@ -1,0 +1,131 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{Manifest, ProgramInfo};
+use super::tensor::HostTensor;
+
+/// Execution statistics per program (feeds the bench harness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_us: u64,
+}
+
+/// A compiled program: executable + manifest signature.
+pub struct Program {
+    pub info: ProgramInfo,
+    exe: PjRtLoadedExecutable,
+    stats: Mutex<ExecStats>,
+}
+
+impl Program {
+    /// Execute with host tensors in manifest input order.
+    pub fn run(&self, inputs: &[HostTensor]) -> crate::Result<Vec<HostTensor>> {
+        let literals: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<crate::Result<_>>()?;
+        self.run_literals(&literals.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-converted literals (hot path: the trainers cache
+    /// parameter literals across calls and rebuild them only after optimizer
+    /// updates — EXPERIMENTS.md §Perf).
+    pub fn run_literals(&self, literals: &[&Literal]) -> crate::Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            literals.len() == self.info.inputs.len(),
+            "{}: got {} inputs, manifest says {}",
+            self.info.name,
+            literals.len(),
+            self.info.inputs.len()
+        );
+        let t0 = Instant::now();
+        let bufs = self.exe.execute::<&Literal>(literals)?;
+        // return_tuple=True at lowering: single tuple output
+        let result = bufs[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        let out: Vec<HostTensor> =
+            elems.iter().map(HostTensor::from_literal).collect::<crate::Result<_>>()?;
+        anyhow::ensure!(
+            out.len() == self.info.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.info.name,
+            out.len(),
+            self.info.outputs.len()
+        );
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_us += t0.elapsed().as_micros() as u64;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Index of a named output (e.g. "loss_sum", "grad:embed").
+    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow::anyhow!("{}: no output {name}", self.info.name))
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compiled-program cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> crate::Result<Self> {
+        let client = PjRtClient::cpu()?;
+        crate::info!(
+            "PJRT client ready: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn from_dir(dir: &std::path::Path) -> crate::Result<Self> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch cached) a program by manifest name.
+    pub fn program(&self, name: &str) -> crate::Result<std::sync::Arc<Program>> {
+        if let Some(p) = self.cache.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let info = self.manifest.program(name)?.clone();
+        let path = self.manifest.hlo_path(&info);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::info!("compiled {name} in {} ms", t0.elapsed().as_millis());
+        let prog =
+            std::sync::Arc::new(Program { info, exe, stats: Mutex::new(ExecStats::default()) });
+        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Compile the best-fitting program for (kind, model, capacity).
+    pub fn find_program(
+        &self,
+        kind: &str,
+        model: &str,
+        min_capacity: usize,
+    ) -> crate::Result<std::sync::Arc<Program>> {
+        let name = self.manifest.find(kind, model, min_capacity)?.name.clone();
+        self.program(&name)
+    }
+}

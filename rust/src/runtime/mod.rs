@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT).  HLO *text* is the
+//! interchange format — jax >= 0.5 serialized protos carry 64-bit ids this
+//! XLA rejects; the text parser reassigns ids (see DESIGN.md §2 and
+//! /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{Manifest, ModelInfo, ProgramInfo};
+pub use client::{Program, Runtime};
+pub use tensor::HostTensor;

@@ -1,0 +1,119 @@
+//! Host tensors: the coordinator-side buffer type fed to / read from PJRT.
+
+use xla::Literal;
+
+/// A host tensor (f32 or i32) with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Self::F32 { shape, .. } | Self::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F32 { data, .. } => data.len(),
+            Self::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Self::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            Self::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Self::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn first_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> crate::Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Self::F32 { data, .. } => Literal::vec1(data),
+            Self::I32 { data, .. } => Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Self::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Self::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Batch construction: `DfsMeta` -> the exported programs' input vectors.
+//!
+//! Exactly mirrors `python/compile/batching.py` (cross-checked by
+//! `rust/tests/serializer_parity.rs` against the AOT fixtures): one batch
+//! layout serves whole-tree training, the packed-linear baseline, and
+//! child-partition (gateway) calls.
+
+use crate::tree::dfs::{self, DfsMeta, NEG_INF, PAST_EXIT};
+
+/// Model input vectors for one (padded) DFS sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub capacity: usize,
+    pub past_len: usize,
+    pub tokens: Vec<i32>,
+    pub prev_idx: Vec<i32>,
+    pub pos_ids: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub q_exit: Vec<i32>,
+    pub k_order: Vec<i32>,  // [past + capacity]
+    pub k_exit: Vec<i32>,   // [past + capacity]
+    pub k_bias: Vec<f32>,   // [past + capacity]
+    // hybrid extras (empty when unused)
+    pub chunk_parent_map: Vec<i32>,
+    pub ssm_pad: Vec<f32>,
+    pub conv_idx: Vec<i32>, // [capacity * conv_kernel]
+}
+
+/// Options mirroring `batching.build_batch` keyword arguments.
+#[derive(Debug, Clone, Default)]
+pub struct BatchOptions {
+    pub chunk_size: Option<usize>,
+    pub conv_kernel: Option<usize>,
+    pub past_len: usize,
+    /// Additive bias over gateway rows (0 = visible ancestor, -inf = pad);
+    /// defaults to all-visible.
+    pub past_bias: Option<Vec<f32>>,
+    /// Conv gather taps reference gateway context rows (child partitions).
+    pub gateway_ctx: bool,
+}
+
+pub fn build_batch(meta: &DfsMeta, capacity: usize, opts: &BatchOptions) -> crate::Result<Batch> {
+    let s = meta.size();
+    if s > capacity {
+        anyhow::bail!("tree ({s} tokens) exceeds capacity {capacity}");
+    }
+    let pad = capacity - s;
+    let a = opts.past_len;
+
+    let mut tokens = meta.tokens.clone();
+    tokens.resize(capacity, 0);
+    let mut pos_ids = meta.pos_ids.clone();
+    pos_ids.resize(capacity, 0);
+    let mut weights = meta.weights.clone();
+    weights.resize(capacity, 0.0);
+    let mut q_exit = meta.subtree_exit.clone();
+    // capacity pads are attention self-islands
+    q_exit.extend((s..capacity).map(|t| (t + 1) as i32));
+    let mut prev_idx = dfs::prev_indices(meta);
+    prev_idx.resize(capacity, -1);
+
+    let cur_order: Vec<i32> = (0..capacity as i32).collect();
+    let (k_order, k_exit, k_bias) = if a > 0 {
+        let mut ko = vec![-1i32; a];
+        ko.extend(&cur_order);
+        let mut ke = vec![PAST_EXIT; a];
+        ke.extend(&q_exit);
+        let pb = opts.past_bias.clone().unwrap_or_else(|| vec![0.0; a]);
+        anyhow::ensure!(pb.len() == a, "past_bias length mismatch");
+        let mut kb = pb;
+        kb.extend(std::iter::repeat(0.0f32).take(capacity));
+        (ko, ke, kb)
+    } else {
+        (cur_order, q_exit.clone(), vec![0.0; capacity])
+    };
+
+    let mut batch = Batch {
+        capacity,
+        past_len: a,
+        tokens,
+        prev_idx,
+        pos_ids,
+        weights,
+        q_exit,
+        k_order,
+        k_exit,
+        k_bias,
+        chunk_parent_map: Vec::new(),
+        ssm_pad: Vec::new(),
+        conv_idx: Vec::new(),
+    };
+
+    if let Some(chunk) = opts.chunk_size {
+        anyhow::ensure!(pad % chunk == 0, "capacity and tree must be chunk-aligned");
+        let cpm = dfs::chunk_parent_map(meta, chunk)?;
+        let n_pad_chunks = pad / chunk;
+        let mut full = cpm;
+        // pad chunks chain among themselves, isolated from the tree
+        for i in 0..n_pad_chunks {
+            full.push(if i == 0 { -1 } else { (full.len() - 1) as i32 });
+        }
+        batch.chunk_parent_map = full;
+        let mut ssm_pad: Vec<f32> =
+            meta.pad_mask.iter().map(|&p| if p { 1.0 } else { 0.0 }).collect();
+        ssm_pad.resize(capacity, 1.0);
+        batch.ssm_pad = ssm_pad;
+    }
+    if let Some(k) = opts.conv_kernel {
+        let mut idx = dfs::conv_gather_indices(meta, k, opts.gateway_ctx);
+        let base = k as i32;
+        for t in s..capacity {
+            let mut row = vec![0i32; k];
+            row[k - 1] = base + t as i32;
+            idx.extend(row);
+        }
+        batch.conv_idx = idx;
+    }
+    Ok(batch)
+}
+
+impl Batch {
+    /// Overwrite a slot's loss wiring (used for virtual boundary targets).
+    pub fn set_virtual_target(&mut self, slot: usize, token: i32, prev_slot: i32, weight: f32) {
+        assert!(slot < self.capacity);
+        self.tokens[slot] = token;
+        self.prev_idx[slot] = prev_slot;
+        self.weights[slot] = weight;
+    }
+
+    /// Shift all positions by the partition's depth offset (Eq. 17).
+    pub fn offset_positions(&mut self, offset: i32, real_tokens: usize) {
+        for p in self.pos_ids.iter_mut().take(real_tokens) {
+            *p += offset;
+        }
+    }
+
+    /// Metadata bytes this batch adds on top of tokens (the §4.6 accounting).
+    pub fn metadata_bytes(&self) -> usize {
+        4 * (self.prev_idx.len()
+            + self.pos_ids.len()
+            + self.weights.len()
+            + self.q_exit.len()
+            + self.k_order.len()
+            + self.k_exit.len()
+            + self.k_bias.len()
+            + self.chunk_parent_map.len()
+            + self.ssm_pad.len()
+            + self.conv_idx.len())
+    }
+}
+
+/// Mask bias vector for a gateway: 0 on the first `valid` rows, -inf after.
+pub fn gateway_bias(valid: usize, capacity: usize) -> Vec<f32> {
+    let mut b = vec![NEG_INF; capacity];
+    for x in b.iter_mut().take(valid) {
+        *x = 0.0;
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::{gen, serialize};
+
+    #[test]
+    fn padded_slots_are_inert() {
+        let t = gen::uniform(1, 8, 5, 0.5);
+        let m = serialize(&t);
+        let b = build_batch(&m, m.size() + 7, &BatchOptions::default()).unwrap();
+        for t_pad in m.size()..b.capacity {
+            assert_eq!(b.weights[t_pad], 0.0);
+            assert_eq!(b.prev_idx[t_pad], -1);
+            assert_eq!(b.q_exit[t_pad], (t_pad + 1) as i32);
+        }
+    }
+
+    #[test]
+    fn gateway_layout() {
+        let t = gen::uniform(2, 8, 5, 0.5);
+        let m = serialize(&t);
+        let opts = BatchOptions {
+            past_len: 16,
+            past_bias: Some(gateway_bias(5, 16)),
+            ..Default::default()
+        };
+        let b = build_batch(&m, 32, &opts).unwrap();
+        assert_eq!(b.k_order.len(), 48);
+        assert_eq!(&b.k_order[..16], &[-1; 16]);
+        assert!(b.k_bias[4] == 0.0 && b.k_bias[5] < -1e29);
+        assert_eq!(b.k_exit[0], PAST_EXIT);
+    }
+
+    #[test]
+    fn hybrid_extras_aligned() {
+        let t = gen::uniform(3, 8, 5, 0.5).pad_for_chunks(4, 0);
+        let m = serialize(&t);
+        let cap = m.size() + (4 - m.size() % 4) % 4 + 8;
+        let opts = BatchOptions {
+            chunk_size: Some(4),
+            conv_kernel: Some(3),
+            ..Default::default()
+        };
+        let b = build_batch(&m, cap, &opts).unwrap();
+        assert_eq!(b.chunk_parent_map.len(), cap / 4);
+        assert_eq!(b.ssm_pad.len(), cap);
+        assert_eq!(b.conv_idx.len(), cap * 3);
+    }
+}

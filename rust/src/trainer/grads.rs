@@ -1,0 +1,73 @@
+//! f64 gradient accumulation across trees / partitions in one global batch.
+
+use crate::runtime::HostTensor;
+
+/// Flat per-parameter gradient accumulator (f64, App. B.5 discipline).
+pub struct GradBuffer {
+    pub grads: Vec<Vec<f64>>,
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub exec_calls: u64,
+}
+
+impl GradBuffer {
+    pub fn zeros(params: &[HostTensor]) -> Self {
+        Self {
+            grads: params.iter().map(|p| vec![0.0; p.len()]).collect(),
+            loss_sum: 0.0,
+            weight_sum: 0.0,
+            exec_calls: 0,
+        }
+    }
+
+    /// Add one program call's outputs: loss_sum, weight_sum and the grads
+    /// located at `grad_base..grad_base + n_params` in `outputs`.
+    pub fn add_outputs(&mut self, outputs: &[HostTensor], grad_base: usize) {
+        self.loss_sum += outputs[0].first_f32() as f64;
+        self.weight_sum += outputs[1].first_f32() as f64;
+        self.exec_calls += 1;
+        let n = self.grads.len();
+        for (acc, t) in self.grads.iter_mut().zip(&outputs[grad_base..grad_base + n]) {
+            for (a, &g) in acc.iter_mut().zip(t.as_f32()) {
+                *a += g as f64;
+            }
+        }
+    }
+
+    /// Normalized gradients (divide by the global-batch weight sum): makes
+    /// tree and sep-avg baselines directly comparable (see trainer docs).
+    pub fn normalized(&self) -> Vec<Vec<f64>> {
+        let z = if self.weight_sum > 0.0 { 1.0 / self.weight_sum } else { 0.0 };
+        self.grads.iter().map(|g| g.iter().map(|&x| x * z).collect()).collect()
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.weight_sum > 0.0 {
+            self.loss_sum / self.weight_sum
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_normalizes() {
+        let params = vec![HostTensor::zeros_f32(vec![2])];
+        let mut gb = GradBuffer::zeros(&params);
+        let outs = vec![
+            HostTensor::scalar_f32(2.0),
+            HostTensor::scalar_f32(4.0),
+            HostTensor::f32(vec![2], vec![1.0, 2.0]),
+        ];
+        gb.add_outputs(&outs, 2);
+        gb.add_outputs(&outs, 2);
+        assert_eq!(gb.loss_sum, 4.0);
+        assert_eq!(gb.weight_sum, 8.0);
+        assert_eq!(gb.normalized()[0], vec![0.25, 0.5]);
+        assert_eq!(gb.mean_loss(), 0.5);
+    }
+}

@@ -1,0 +1,61 @@
+//! Step metrics + CSV/JSON sinks for the bench harness and run loop.
+
+use std::io::Write;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    /// Mean per-token loss (loss_sum / weight_sum).
+    pub loss: f64,
+    pub weight_sum: f64,
+    /// Unique tokens processed on device this step (incl. pads).
+    pub device_tokens: usize,
+    /// Real (unique) tree tokens this step.
+    pub tree_tokens: usize,
+    /// Flattened baseline token count for the same data (speedup denom).
+    pub flat_tokens: usize,
+    pub wall: Duration,
+    pub exec_calls: u64,
+    pub grad_norm: f64,
+}
+
+impl StepMetrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tree_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Append-only CSV sink (one row per step).
+pub struct CsvSink {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvSink {
+    pub fn create(path: &std::path::Path) -> crate::Result<Self> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            w,
+            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,wall_ms,exec_calls,grad_norm"
+        )?;
+        Ok(Self { w })
+    }
+
+    pub fn log(&mut self, m: &StepMetrics) -> crate::Result<()> {
+        writeln!(
+            self.w,
+            "{},{:.6},{:.3},{},{},{},{:.3},{},{:.5}",
+            m.step,
+            m.loss,
+            m.weight_sum,
+            m.device_tokens,
+            m.tree_tokens,
+            m.flat_tokens,
+            m.wall.as_secs_f64() * 1e3,
+            m.exec_calls,
+            m.grad_norm
+        )?;
+        self.w.flush()?;
+        Ok(())
+    }
+}

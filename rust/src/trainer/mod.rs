@@ -1,0 +1,26 @@
+//! Training loop components.
+//!
+//! * [`TreeTrainer`] — the paper's method: one DFS pass per tree when it
+//!   fits the device capacity; Redundancy-Free Tree Partitioning with the
+//!   differentiable-gateway gradient relay when it does not (§3.3, App. B).
+//! * [`BaselineTrainer`] — the sep-avg baseline (Eq. 1): linearize every
+//!   root-to-leaf path and train with sequence packing (Krell et al.), the
+//!   "current standard practice" of §4.2.  Both trainers execute the *same*
+//!   exported programs — a packed batch of chains is just a prefix forest —
+//!   so the speedup comparison is apples-to-apples.
+//! * [`AdamW`] — host-side optimizer over f32 parameter tensors with f64
+//!   moments (master-weight style).
+
+pub mod adamw;
+pub mod baseline;
+pub mod batch;
+pub mod grads;
+pub mod metrics;
+pub mod tree_trainer;
+
+pub use adamw::{AdamW, AdamWConfig};
+pub use baseline::BaselineTrainer;
+pub use batch::{build_batch, Batch, BatchOptions};
+pub use grads::GradBuffer;
+pub use metrics::{CsvSink, StepMetrics};
+pub use tree_trainer::TreeTrainer;

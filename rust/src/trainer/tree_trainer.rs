@@ -1,0 +1,407 @@
+//! The Tree Training coordinator (the paper's method, end to end).
+//!
+//! Per tree in the global batch:
+//!
+//! * **whole-tree path** — the DFS-serialized tree fits the device capacity:
+//!   one `step` program call computes every token exactly once (§3.2).
+//! * **partitioned path** — Redundancy-Free Tree Partitioning (§3.3):
+//!   bin-pack into connected subtrees, run `part_fwd` in topological order
+//!   relaying ancestor KV through host gateways, then `part_bwd` in reverse
+//!   order chaining KV cotangents with f64 accumulation (App. B.5/B.6).
+//!   Leaf partitions skip the forward entirely (their KV is never read), so
+//!   each tree costs `N_fwd = #non-leaf partitions` + `N_bwd = #partitions`
+//!   program calls and **every token is computed exactly once per pass**.
+//!
+//! Gradients from all trees accumulate in f64 and are normalized once by the
+//! global-batch weight sum, keeping tree/baseline updates directly
+//! comparable (Eq. 5 equivalence).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::gateway::{KvCache, KvGradAccumulator};
+use crate::partition::{greedy_pack, plan, Plan};
+use crate::runtime::{HostTensor, Program, Runtime};
+use crate::tree::TrajectoryTree;
+use xla::Literal;
+
+use super::adamw::{AdamW, AdamWConfig};
+use super::batch::{Batch, BatchOptions};
+use super::grads::GradBuffer;
+use super::metrics::StepMetrics;
+
+pub struct TreeTrainer {
+    pub rt: Arc<Runtime>,
+    pub model: String,
+    pub params: Vec<HostTensor>,
+    /// Cached parameter literals (rebuilt after each optimizer update) —
+    /// avoids re-converting ~MBs of weights on every program call.
+    param_lits: Vec<Literal>,
+    pub opt: AdamW,
+    step_prog: Arc<Program>,
+    fwd_prog: Option<Arc<Program>>,
+    bwd_prog: Option<Arc<Program>>,
+    pub capacity: usize,
+    pub past_capacity: usize,
+    /// Partition-packing token budget (defaults to the exported capacity).
+    /// Setting it below the capacity forces more partitions — used by the
+    /// verify command and ablation benches.
+    pub partition_budget: Option<usize>,
+    n_attn: usize,
+    heads: usize,
+    head_dim: usize,
+    hybrid: Option<(usize, usize)>, // (chunk_size, conv_kernel)
+    step_count: u64,
+}
+
+impl TreeTrainer {
+    pub fn new(rt: Arc<Runtime>, model: &str, opt_cfg: AdamWConfig) -> crate::Result<Self> {
+        let info = rt.manifest.model(model)?.clone();
+        let params = rt.manifest.load_params(model)?;
+        let step_prog = rt.find_program("step", model, 0)?;
+        let capacity = step_prog.info.capacity;
+        let (fwd_prog, bwd_prog, past_capacity) =
+            match rt.manifest.find("part_fwd", model, 0) {
+                Ok(p) => {
+                    let a = p.past;
+                    (
+                        Some(rt.program(&p.name.clone())?),
+                        Some(rt.find_program("part_bwd", model, 0)?),
+                        a,
+                    )
+                }
+                Err(_) => (None, None, 0),
+            };
+        let hybrid = if info.kind() == "hybrid" {
+            Some((info.chunk_size(), info.conv_kernel()))
+        } else {
+            None
+        };
+        let opt = AdamW::new(opt_cfg, &params);
+        let param_lits = params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            rt,
+            model: model.to_string(),
+            params,
+            param_lits,
+            opt,
+            step_prog,
+            fwd_prog,
+            bwd_prog,
+            capacity,
+            past_capacity,
+            partition_budget: None,
+            n_attn: info.n_attn_layers,
+            heads: info.n_heads(),
+            head_dim: info.head_dim(),
+            hybrid,
+            step_count: 0,
+        })
+    }
+
+    pub fn batch_options(&self) -> BatchOptions {
+        BatchOptions {
+            chunk_size: self.hybrid.map(|(c, _)| c),
+            conv_kernel: self.hybrid.map(|(_, k)| k),
+            ..Default::default()
+        }
+    }
+
+    fn prepare(&self, tree: &TrajectoryTree) -> TrajectoryTree {
+        match self.hybrid {
+            Some((chunk, _)) => tree.pad_for_chunks(chunk, 0),
+            None => tree.clone(),
+        }
+    }
+
+    /// Run a program: cached parameter literals + freshly-built batch/extra
+    /// literals, in the program's recorded input order.
+    fn run_prog(
+        &self,
+        prog: &Program,
+        batch: &Batch,
+        extra: &[(&str, HostTensor)],
+    ) -> crate::Result<Vec<HostTensor>> {
+        let c = batch.capacity;
+        let t = batch.past_len + c;
+        let mut owned: Vec<Literal> = Vec::new();
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(prog.info.inputs.len());
+        let mut p_count = 0usize;
+        for name in &prog.info.inputs {
+            if name.starts_with("param:") {
+                slots.push(None);
+                p_count += 1;
+                continue;
+            }
+            let tensor = if let Some(key) = name.strip_prefix("batch:") {
+                match key {
+                    "tokens" => HostTensor::i32(vec![c], batch.tokens.clone()),
+                    "prev_idx" => HostTensor::i32(vec![c], batch.prev_idx.clone()),
+                    "pos_ids" => HostTensor::i32(vec![c], batch.pos_ids.clone()),
+                    "weights" => HostTensor::f32(vec![c], batch.weights.clone()),
+                    "q_exit" => HostTensor::i32(vec![c], batch.q_exit.clone()),
+                    "k_order" => HostTensor::i32(vec![t], batch.k_order.clone()),
+                    "k_exit" => HostTensor::i32(vec![t], batch.k_exit.clone()),
+                    "k_bias" => HostTensor::f32(vec![t], batch.k_bias.clone()),
+                    "chunk_parent_map" => HostTensor::i32(
+                        vec![batch.chunk_parent_map.len()],
+                        batch.chunk_parent_map.clone(),
+                    ),
+                    "ssm_pad" => HostTensor::f32(vec![c], batch.ssm_pad.clone()),
+                    "conv_idx" => {
+                        let k = batch.conv_idx.len() / c;
+                        HostTensor::i32(vec![c, k], batch.conv_idx.clone())
+                    }
+                    other => anyhow::bail!("unknown batch key {other}"),
+                }
+            } else {
+                extra
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, t)| t.clone())
+                    .ok_or_else(|| anyhow::anyhow!("missing extra input {name}"))?
+            };
+            owned.push(tensor.to_literal()?);
+            slots.push(Some(owned.len() - 1));
+        }
+        anyhow::ensure!(p_count == self.param_lits.len(), "param count mismatch");
+        let mut refs: Vec<&Literal> = Vec::with_capacity(slots.len());
+        let mut p_iter = self.param_lits.iter();
+        for s in &slots {
+            refs.push(match s {
+                None => p_iter.next().unwrap(),
+                Some(i) => &owned[*i],
+            });
+        }
+        prog.run_literals(&refs)
+    }
+
+    /// Rebuild cached parameter literals after an optimizer update.
+    fn refresh_param_lits(&mut self) -> crate::Result<()> {
+        self.param_lits =
+            self.params.iter().map(|p| p.to_literal()).collect::<crate::Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Whole-tree gradients: one `step` call (§3.2).
+    fn grads_whole_tree(&self, tree: &TrajectoryTree, gb: &mut GradBuffer) -> crate::Result<usize> {
+        let meta = crate::tree::serialize(tree);
+        let batch = super::batch::build_batch(&meta, self.capacity, &self.batch_options())?;
+        let outputs = self.run_prog(&self.step_prog, &batch, &[])?;
+        gb.add_outputs(&outputs, 2);
+        Ok(self.capacity)
+    }
+
+    /// Partitioned gradients with the differentiable-gateway relay (App. B).
+    fn grads_partitioned(
+        &self,
+        tree: &TrajectoryTree,
+        gb: &mut GradBuffer,
+    ) -> crate::Result<usize> {
+        let fwd = self
+            .fwd_prog
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("tree exceeds capacity and no part_fwd exported"))?;
+        let bwd = self.bwd_prog.as_ref().unwrap();
+        anyhow::ensure!(
+            self.hybrid.is_none(),
+            "partitioned hybrid models are not exported (DESIGN.md §2)"
+        );
+        let c = fwd.info.capacity;
+        let a = fwd.info.past;
+        let budget = self.partition_budget.unwrap_or(c).min(c);
+        // leave virtual-slot headroom: a node may cut several children
+        let tree = tree.split_long_segments(budget - budget / 8);
+        let assignment = greedy_pack(&tree, budget)?;
+        let plan = plan(&tree, &assignment)?;
+        let mut device_tokens = 0usize;
+
+        // topo forward: relay ancestor KV through host gateways
+        let n_parts = plan.parts.len();
+        let mut has_children = vec![false; n_parts];
+        for p in &plan.parts {
+            if p.parent_part >= 0 {
+                has_children[p.parent_part as usize] = true;
+            }
+        }
+        let (h, hd, na) = (self.heads, self.head_dim, self.n_attn);
+        // §3.3 peak-memory bound: a partition's KV cache lives only until
+        // every *descendant gateway row* referencing it has been gathered.
+        let mut pending_refs = vec![0usize; n_parts];
+        for p in &plan.parts {
+            let mut seen = std::collections::HashSet::new();
+            for &slot in &p.anc_slots {
+                let (op, _) = plan.owner[slot];
+                if seen.insert(op) {
+                    pending_refs[op as usize] += 1;
+                }
+            }
+        }
+        let mut kv_caches: Vec<Option<KvCache>> = vec![None; n_parts];
+        let mut batches: Vec<Option<Batch>> = vec![None; n_parts];
+        let mut kv_ins: Vec<Option<KvCache>> = vec![None; n_parts];
+        let mut peak_kv_bytes = 0usize;
+        for &pi in &plan.topo {
+            let batch = plan.partition_batch(pi, c, a, &self.batch_options())?;
+            let mut k_in = KvCache::zeros(na, a, h, hd);
+            self.gather_gateway(&plan, pi, &kv_caches, &mut k_in)?;
+            // release producer caches whose last reader this was
+            let mut seen = std::collections::HashSet::new();
+            for &slot in &plan.parts[pi].anc_slots {
+                let (op, _) = plan.owner[slot];
+                if seen.insert(op) {
+                    pending_refs[op as usize] -= 1;
+                    if pending_refs[op as usize] == 0 {
+                        kv_caches[op as usize] = None;
+                    }
+                }
+            }
+            if has_children[pi] {
+                let extras = [
+                    ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k.clone())),
+                    ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v.clone())),
+                ];
+                let outputs = self.run_prog(fwd, &batch, &extras)?;
+                gb.exec_calls += 1;
+                let mut cache = KvCache::zeros(na, c, h, hd);
+                cache.k.copy_from_slice(outputs[2].as_f32());
+                cache.v.copy_from_slice(outputs[3].as_f32());
+                kv_caches[pi] = Some(cache);
+                device_tokens += c;
+            }
+            peak_kv_bytes = peak_kv_bytes.max(
+                kv_caches.iter().flatten().map(|kc| kc.bytes()).sum::<usize>());
+            batches[pi] = Some(batch);
+            kv_ins[pi] = Some(k_in);
+        }
+        crate::debug_!("partition relay: peak gateway KV {} bytes", peak_kv_bytes);
+
+        // reverse topo backward: chain KV cotangents (f64 accumulation);
+        // accumulators are allocated lazily and freed once consumed, so peak
+        // host memory again tracks one root-to-leaf chain, not the tree.
+        let mut accs: std::collections::HashMap<usize, KvGradAccumulator> =
+            std::collections::HashMap::new();
+        for &pi in plan.topo.iter().rev() {
+            let batch = batches[pi].take().unwrap();
+            let k_in = kv_ins[pi].take().unwrap();
+            let (d_k, d_v) = match accs.remove(&pi) {
+                Some(acc) => acc.to_f32(),
+                None => {
+                    let n = na * c * h * hd;
+                    (vec![0.0; n], vec![0.0; n])
+                }
+            };
+            let extras = [
+                ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k)),
+                ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v)),
+                ("d_k_part", HostTensor::f32(vec![na, c, h, hd], d_k)),
+                ("d_v_part", HostTensor::f32(vec![na, c, h, hd], d_v)),
+                ("loss_cot", HostTensor::scalar_f32(1.0)),
+            ];
+            let outputs = self.run_prog(bwd, &batch, &extras)?;
+            gb.add_outputs(&outputs, 2);
+            device_tokens += c;
+            // scatter d_kv_in to producer partitions
+            let n_grads = self.params.len();
+            let d_k_in = outputs[2 + n_grads].as_f32();
+            let d_v_in = outputs[2 + n_grads + 1].as_f32();
+            // group gateway rows by producing partition
+            let mut by_owner: std::collections::HashMap<usize, Vec<(usize, usize)>> =
+                std::collections::HashMap::new();
+            for (row, &slot) in plan.parts[pi].anc_slots.iter().enumerate() {
+                let (op, ol) = plan.owner[slot];
+                by_owner.entry(op as usize).or_default().push((row, ol as usize));
+            }
+            for (op, rows) in by_owner {
+                accs.entry(op)
+                    .or_insert_with(|| KvGradAccumulator::zeros(na, c, h, hd))
+                    .scatter_add(d_k_in, d_v_in, a, &rows);
+            }
+        }
+        Ok(device_tokens)
+    }
+
+    fn gather_gateway(
+        &self,
+        plan: &Plan,
+        pi: usize,
+        kv_caches: &[Option<KvCache>],
+        k_in: &mut KvCache,
+    ) -> crate::Result<()> {
+        for (row, &slot) in plan.parts[pi].anc_slots.iter().enumerate() {
+            let (op, ol) = plan.owner[slot];
+            let src = kv_caches[op as usize]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("gateway producer {op} has no KV (topo bug)"))?;
+            k_in.gather_from(src, &[ol as usize], row);
+        }
+        Ok(())
+    }
+
+    /// Gradient contribution of one tree (whole or partitioned).
+    pub fn accumulate_tree(
+        &self,
+        tree: &TrajectoryTree,
+        gb: &mut GradBuffer,
+    ) -> crate::Result<usize> {
+        let prepared = self.prepare(tree);
+        if prepared.n_slots() <= self.capacity {
+            self.grads_whole_tree(&prepared, gb)
+        } else {
+            self.grads_partitioned(&prepared, gb)
+        }
+    }
+
+    /// Force the partitioned path even when the tree fits — used by the
+    /// `verify` command to check App. B.8 equivalence at runtime level.
+    pub fn accumulate_tree_partitioned(
+        &self,
+        tree: &TrajectoryTree,
+        gb: &mut GradBuffer,
+    ) -> crate::Result<usize> {
+        self.grads_partitioned(&self.prepare(tree), gb)
+    }
+
+    /// One optimizer step over a global batch of trees (§3.4: each batch is
+    /// tree-complete; shuffling happens between trees upstream).
+    pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let mut gb = GradBuffer::zeros(&self.params);
+        let mut device_tokens = 0usize;
+        for tree in trees {
+            device_tokens += self.accumulate_tree(tree, &mut gb)?;
+        }
+        let grads = gb.normalized();
+        let grad_norm = AdamW::grad_norm(&grads);
+        self.opt.update(&mut self.params, &grads);
+        self.refresh_param_lits()?;
+        self.step_count += 1;
+        Ok(StepMetrics {
+            step: self.step_count,
+            loss: gb.mean_loss(),
+            weight_sum: gb.weight_sum,
+            device_tokens,
+            tree_tokens: trees.iter().map(|t| t.n_tree()).sum(),
+            flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
+            wall: t0.elapsed(),
+            exec_calls: gb.exec_calls,
+            grad_norm,
+        })
+    }
+
+    /// Loss-only evaluation (no update); used for §4.7 scoring and tests.
+    pub fn eval_loss(&self, trees: &[TrajectoryTree]) -> crate::Result<(f64, f64)> {
+        let mut gb = GradBuffer::zeros(&self.params);
+        for tree in trees {
+            self.accumulate_tree(tree, &mut gb)?;
+        }
+        Ok((gb.mean_loss(), gb.weight_sum))
+    }
+
+    pub fn set_lr(&mut self, lr: f64) {
+        self.opt.cfg.lr = lr;
+    }
+}

@@ -1,0 +1,381 @@
+//! DFS serialization (Eq. 8) and per-token metadata (§3.2).
+//!
+//! The serializer walks the tree once and emits, for every token:
+//!
+//! * `pos_ids` — per-path position (Eq. 9): RoPE must see the same position
+//!   the token would have in its standalone path.
+//! * `subtree_exit` — exclusive DFS end of the token's node's subtree.  The
+//!   tree attention mask ("j attends-able by i iff j <= i and node(j) is an
+//!   ancestor-or-self of node(i)") reduces to the interval test
+//!   `(j <= i) && (exit[j] >= exit[i])`, so the kernel needs O(S) metadata.
+//! * `g` — number of root-to-leaf paths through the node, and the loss
+//!   weight `lambda_t = g_t/K * trainable * advantage` (Eq. 4).
+//! * `prev_idx` — path-predecessor slot: the per-token loss gathers logits
+//!   there, so a branching node's last token predicts one target per branch.
+//! * GDN extras: chunk parent map (Eq. 10 state routing) and causal-conv
+//!   gather taps (App. A.3).
+//!
+//! Exactly mirrored by `python/compile/treemeta.py` + `batching.py`
+//! (cross-checked by `rust/tests/serializer_parity.rs` against fixtures).
+
+use super::node::TrajectoryTree;
+
+/// Sentinel subtree-exit for gateway (past) keys: always visible modulo bias.
+pub const PAST_EXIT: i32 = i32::MAX;
+/// Additive mask bias for blocked attention entries.
+pub const NEG_INF: f32 = -1e30;
+
+/// Per-token metadata of the DFS-serialized tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DfsMeta {
+    pub tokens: Vec<i32>,
+    pub pos_ids: Vec<i32>,
+    pub subtree_exit: Vec<i32>,
+    pub node_id: Vec<i32>,
+    pub g: Vec<i32>,
+    /// `lambda_t = g_t/K * trainable_t * advantage_t` (0 on pads).
+    pub weights: Vec<f32>,
+    pub pad_mask: Vec<bool>,
+    // node table (DFS order)
+    pub node_start: Vec<i32>,
+    pub node_len: Vec<i32>,
+    pub node_exit: Vec<i32>,
+    pub node_parent: Vec<i32>,
+    /// Ancestor *real* token count = per-path position of the node's first
+    /// token (Eq. 9 / Eq. 17 depth-based offsets).
+    pub node_depth_tokens: Vec<i32>,
+    pub num_paths: usize,
+}
+
+impl DfsMeta {
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// DFS token slots of one root-to-leaf path (real tokens only).
+    pub fn path_token_indices(&self, path: &[usize]) -> Vec<usize> {
+        let mut idx = Vec::new();
+        for &n in path {
+            let s = self.node_start[n] as usize;
+            for t in s..s + self.node_len[n] as usize {
+                if !self.pad_mask[t] {
+                    idx.push(t);
+                }
+            }
+        }
+        idx
+    }
+}
+
+/// Serialize a trajectory tree into DFS token order with metadata.
+pub fn serialize(tree: &TrajectoryTree) -> DfsMeta {
+    let n_nodes = tree.nodes.len();
+    let children = tree.children();
+
+    // g_n = leaves under n == paths through n, bottom-up
+    let mut g_node = vec![0i64; n_nodes];
+    for i in (0..n_nodes).rev() {
+        g_node[i] = if children[i].is_empty() {
+            1
+        } else {
+            children[i].iter().map(|&c| g_node[c]).sum()
+        };
+    }
+    let num_paths = g_node[0] as usize;
+
+    // iterative pre-order: node_start + subtree exit
+    let mut node_start = vec![0i64; n_nodes];
+    let mut node_exit = vec![0i64; n_nodes];
+    let mut cursor = 0i64;
+    let mut stack: Vec<(usize, bool)> = vec![(0, false)];
+    while let Some((i, done)) = stack.pop() {
+        if done {
+            node_exit[i] = cursor;
+            continue;
+        }
+        node_start[i] = cursor;
+        cursor += tree.nodes[i].tokens.len() as i64;
+        stack.push((i, true));
+        for &c in children[i].iter().rev() {
+            stack.push((c, false));
+        }
+    }
+    let total = cursor as usize;
+
+    // depth in *real* tokens
+    let mut node_depth = vec![0i64; n_nodes];
+    for i in 1..n_nodes {
+        let p = tree.nodes[i].parent as usize;
+        node_depth[i] = node_depth[p] + tree.nodes[p].real_len() as i64;
+    }
+
+    let mut m = DfsMeta {
+        tokens: vec![0; total],
+        pos_ids: vec![0; total],
+        subtree_exit: vec![0; total],
+        node_id: vec![0; total],
+        g: vec![0; total],
+        weights: vec![0.0; total],
+        pad_mask: vec![false; total],
+        node_start: node_start.iter().map(|&x| x as i32).collect(),
+        node_len: tree.nodes.iter().map(|n| n.tokens.len() as i32).collect(),
+        node_exit: node_exit.iter().map(|&x| x as i32).collect(),
+        node_parent: tree.nodes.iter().map(|n| n.parent).collect(),
+        node_depth_tokens: node_depth.iter().map(|&x| x as i32).collect(),
+        num_paths,
+    };
+
+    for (i, nd) in tree.nodes.iter().enumerate() {
+        let s = node_start[i] as usize;
+        let real = nd.real_len();
+        for (j, &tok) in nd.tokens.iter().enumerate() {
+            let t = s + j;
+            m.tokens[t] = tok;
+            m.node_id[t] = i as i32;
+            m.g[t] = g_node[i] as i32;
+            if j < real {
+                m.pos_ids[t] = (node_depth[i] + j as i64) as i32;
+                m.subtree_exit[t] = node_exit[i] as i32;
+                m.weights[t] =
+                    (g_node[i] as f32 / num_paths as f32) * nd.trainable[j] * nd.advantage[j];
+            } else {
+                // alignment pads: self-island, zero weight/position
+                m.pos_ids[t] = 0;
+                m.subtree_exit[t] = (t + 1) as i32;
+                m.pad_mask[t] = true;
+            }
+        }
+    }
+    m
+}
+
+/// Per-token path-predecessor slots (-1 = none: root firsts, pads).
+pub fn prev_indices(meta: &DfsMeta) -> Vec<i32> {
+    let s_total = meta.size();
+    let mut prev = vec![-1i32; s_total];
+    // node -> last real slot on its path (incl. ancestors)
+    let mut node_last: Vec<i32> = vec![-1; meta.node_start.len()];
+    for n in 0..meta.node_start.len() {
+        let par = meta.node_parent[n];
+        let mut last = if par < 0 { -1 } else { node_last[par as usize] };
+        let s = meta.node_start[n] as usize;
+        for t in s..s + meta.node_len[n] as usize {
+            if meta.pad_mask[t] {
+                continue;
+            }
+            prev[t] = last;
+            last = t as i32;
+        }
+        node_last[n] = last;
+    }
+    prev
+}
+
+/// Per-chunk parent index for GDN tree state routing (Eq. 10).
+///
+/// Chunk `i` reads the output state of chunk `map[i]` (-1 = initial state):
+/// the previous chunk of the same node, else the parent node's last chunk.
+/// Requires chunk/node alignment (`TrajectoryTree::pad_for_chunks`).
+pub fn chunk_parent_map(meta: &DfsMeta, chunk: usize) -> crate::Result<Vec<i32>> {
+    let s_total = meta.size();
+    if s_total % chunk != 0 {
+        anyhow::bail!("sequence {s_total} not chunk-aligned ({chunk})");
+    }
+    let n_chunks = s_total / chunk;
+    let mut cpm = vec![0i32; n_chunks];
+    let mut node_last_chunk = vec![-1i32; meta.node_start.len()];
+    for i in 0..n_chunks {
+        let a = meta.node_id[i * chunk];
+        let b = meta.node_id[(i + 1) * chunk - 1];
+        if a != b {
+            anyhow::bail!("chunk {i} spans nodes {a}..{b}; pad segments first");
+        }
+        let n = a as usize;
+        cpm[i] = if i > 0 && meta.node_id[(i - 1) * chunk] == a {
+            (i - 1) as i32
+        } else {
+            let par = meta.node_parent[n];
+            if par < 0 { -1 } else { node_last_chunk[par as usize] }
+        };
+        node_last_chunk[n] = i as i32;
+    }
+    Ok(cpm)
+}
+
+/// Causal-conv gather taps (App. A.3): token `t`'s tap `j = K-1` is itself;
+/// taps `j < K-1` are its path predecessors (most recent at `K-2`), skipping
+/// pads and never crossing sibling branches.  Missing history -> zero row 0;
+/// with `has_ctx`, rows 1..K-1 are the parent partition's conv context
+/// (chronological; row K-1 most recent).  Mirrors `gdn.conv_gather_indices`.
+pub fn conv_gather_indices(meta: &DfsMeta, kernel: usize, has_ctx: bool) -> Vec<i32> {
+    let k = kernel;
+    let s_total = meta.size();
+    let base = k as i32; // xx layout: [zero | ctx 1..K-1 | tokens]
+    // tap encoding: >=0 token slot; -d = d-th most recent ctx row; i32::MIN missing
+    const MISSING: i64 = i64::MIN;
+    let slot = |tap: i64| -> i32 {
+        if tap == MISSING {
+            0
+        } else if tap >= 0 {
+            base + tap as i32
+        } else {
+            (k as i64 + tap) as i32 // -d -> row K-d
+        }
+    };
+    let root_chain: Vec<i64> = if has_ctx {
+        (1..k as i64).map(|d| -d).collect()
+    } else {
+        vec![MISSING; k - 1]
+    };
+    let mut idx = vec![0i32; s_total * k];
+    let mut entry_chain: Vec<Vec<i64>> = vec![Vec::new(); meta.node_start.len()];
+    for n in 0..meta.node_start.len() {
+        let par = meta.node_parent[n];
+        let mut chain =
+            if par < 0 { root_chain.clone() } else { entry_chain[par as usize].clone() };
+        let s = meta.node_start[n] as usize;
+        for t in s..s + meta.node_len[n] as usize {
+            idx[t * k + (k - 1)] = base + t as i32;
+            for d in 0..k - 1 {
+                idx[t * k + (k - 2 - d)] = slot(chain[d]);
+            }
+            if !meta.pad_mask[t] {
+                chain.insert(0, t as i64);
+                chain.truncate(k - 1);
+            }
+        }
+        entry_chain[n] = chain;
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::NodeSpec;
+
+    fn fig1() -> TrajectoryTree {
+        TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1, 2, 3, 4]),
+            NodeSpec::new(0, vec![5, 6, 7]),
+            NodeSpec::new(1, vec![8, 9]),
+            NodeSpec::new(1, vec![10, 11, 12, 13, 14]),
+            NodeSpec::new(0, vec![15, 16, 17]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn serialize_fig1() {
+        let t = fig1();
+        let m = serialize(&t);
+        assert_eq!(m.num_paths, 3);
+        assert_eq!(m.size(), 17);
+        // g: n0 on 3 paths, n1 on 2
+        assert_eq!(&m.g[0..4], &[3, 3, 3, 3]);
+        assert_eq!(&m.g[4..7], &[2, 2, 2]);
+        // sibling nodes share position ranges (§3.2)
+        let n3_first = m.node_start[2] as usize;
+        let n4_first = m.node_start[3] as usize;
+        assert_eq!(m.pos_ids[n3_first], 7);
+        assert_eq!(m.pos_ids[n4_first], 7);
+        assert_eq!(m.pos_ids[m.node_start[4] as usize], 4);
+    }
+
+    #[test]
+    fn interval_mask_matches_ancestor_mask() {
+        let t = fig1();
+        let m = serialize(&t);
+        let s = m.size();
+        // first-principles ancestor mask
+        let n_nodes = t.nodes.len();
+        let mut anc = vec![vec![false; n_nodes]; n_nodes];
+        for i in 0..n_nodes {
+            let mut j = i as i32;
+            while j >= 0 {
+                anc[i][j as usize] = true;
+                j = m.node_parent[j as usize];
+            }
+        }
+        for i in 0..s {
+            for j in 0..s {
+                let dense = if i == j {
+                    true
+                } else {
+                    j < i
+                        && anc[m.node_id[i] as usize][m.node_id[j] as usize]
+                        && !m.pad_mask[j]
+                };
+                let interval = j <= i && m.subtree_exit[j] >= m.subtree_exit[i];
+                assert_eq!(dense, interval, "mismatch at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn positions_match_paths() {
+        let t = fig1();
+        let m = serialize(&t);
+        for p in t.paths() {
+            for (k, t_idx) in m.path_token_indices(&p).iter().enumerate() {
+                assert_eq!(m.pos_ids[*t_idx], k as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_flat_over_k() {
+        let t = fig1();
+        let m = serialize(&t);
+        let sum: f32 = m.weights.iter().sum();
+        assert!((sum - t.n_flat() as f32 / t.num_paths() as f32).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prev_idx_crosses_node_boundary() {
+        let t = fig1();
+        let m = serialize(&t);
+        let prev = prev_indices(&m);
+        assert_eq!(prev[0], -1);
+        assert_eq!(prev[1], 0);
+        // n1's first token's predecessor is n0's last (slot 3)
+        assert_eq!(prev[m.node_start[1] as usize], 3);
+        // both n2's and n3's first tokens point at n1's last (slot 6)
+        assert_eq!(prev[m.node_start[2] as usize], 6);
+        assert_eq!(prev[m.node_start[3] as usize], 6);
+        // sibling branch n4's first points at n0's last (slot 3)
+        assert_eq!(prev[m.node_start[4] as usize], 3);
+    }
+
+    #[test]
+    fn chunk_map_tree_routing() {
+        let t = fig1().pad_for_chunks(4, 0);
+        let m = serialize(&t);
+        let cpm = chunk_parent_map(&m, 4).unwrap();
+        assert_eq!(cpm[0], -1);
+        for (i, &p) in cpm.iter().enumerate() {
+            assert!(p < i as i32, "parent chunk must precede (DFS pre-order)");
+        }
+    }
+
+    #[test]
+    fn chunk_map_rejects_unaligned() {
+        let t = fig1();
+        let m = serialize(&t);
+        assert!(chunk_parent_map(&m, 4).is_err());
+    }
+
+    #[test]
+    fn conv_taps_follow_path() {
+        let t = fig1();
+        let m = serialize(&t);
+        let k = 3;
+        let idx = conv_gather_indices(&m, k, false);
+        let base = k as i32;
+        // n4's first token (slot 14): taps = [n0 slot 2, n0 slot 3, self]
+        let s = m.node_start[4] as usize;
+        assert_eq!(&idx[s * k..(s + 1) * k], &[base + 2, base + 3, base + 14]);
+        // root's first token: missing history -> zero rows
+        assert_eq!(&idx[0..k], &[0, 0, base]);
+    }
+}

@@ -1,0 +1,297 @@
+//! Synthetic trajectory-tree generators.
+//!
+//! The paper's real rollouts (SWE-smith tasks under Claude Code scaffolds,
+//! Fig. 6) are proprietary; these generators reproduce the *shape* statistics
+//! that determine every evaluation quantity — POR, branching factor, depth
+//! profile, node-size distribution (DESIGN.md §5 substitution table):
+//!
+//! * [`with_target_por`] — controlled POR sweeps (Fig. 8): constant leaf
+//!   count and total unique tokens, POR set by the shared-prefix depth.
+//! * [`agentic`] — Fig. 6-style rollouts: multi-turn loops with concurrent
+//!   tool fanout, think-mode branching (reasoning discarded between turns)
+//!   and retokenization drift, giving sparse unbalanced trees.
+//! * [`markov_segments`] — fills segments from a learnable 2-gram language
+//!   so end-to-end training loss actually decreases (examples/agentic_sft).
+
+use super::node::{NodeSpec, TrajectoryTree};
+use crate::util::rng::Rng;
+
+pub fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// A learnable synthetic language: deterministic 2-gram transitions with
+/// noise.  `state` seeds the walk so different branches differ.
+pub fn markov_segments(r: &mut Rng, vocab: i32, len: usize, state: &mut i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        // mostly-deterministic successor: tok' = (a*tok + b) % vocab
+        let next = if r.gen_bool(0.85) {
+            (*state * 31 + 17).rem_euclid(vocab)
+        } else {
+            r.i32(0, vocab)
+        };
+        out.push(next);
+        *state = next;
+    }
+    out
+}
+
+/// Uniform random tree (tests, fuzzing).
+pub fn uniform(seed: u64, max_nodes: usize, max_seg: usize, branch_p: f64) -> TrajectoryTree {
+    let mut r = rng(seed);
+    let mut nodes = vec![NodeSpec::new(-1, seg(&mut r, max_seg))];
+    let mut frontier = vec![0usize];
+    while let Some(cur) = frontier.pop() {
+        if nodes.len() >= max_nodes {
+            break;
+        }
+        if cur != 0 && !r.gen_bool(branch_p) {
+            continue;
+        }
+        let n_child = r.usize(1, 4);
+        for _ in 0..n_child {
+            if nodes.len() >= max_nodes {
+                break;
+            }
+            nodes.push(NodeSpec::new(cur as i32, seg(&mut r, max_seg)));
+            frontier.push(nodes.len() - 1);
+        }
+    }
+    reorder_preorder(nodes)
+}
+
+fn seg(r: &mut Rng, max_seg: usize) -> Vec<i32> {
+    let n = r.usize(1, max_seg.max(1) + 1);
+    (0..n).map(|_| r.i32(0, 64)).collect()
+}
+
+/// Controlled-POR tree (Fig. 8 sweeps): `k_leaves` branches off a shared
+/// trunk; trunk depth chosen so POR(tree) == `target_por` while the unique
+/// token count stays `total_tokens`.
+///
+/// With trunk `P` and per-branch `B = (T - P) / K`:
+///   `POR = 1 - T / (T + P (K - 1))`  =>  `P = T * por / ((1 - por)(K - 1))`.
+pub fn with_target_por(
+    seed: u64,
+    target_por: f64,
+    k_leaves: usize,
+    total_tokens: usize,
+    node_len: usize,
+    vocab: i32,
+) -> TrajectoryTree {
+    assert!(k_leaves >= 2);
+    assert!((0.0..1.0).contains(&target_por));
+    let t = total_tokens as f64;
+    let p = (t * target_por / ((1.0 - target_por) * (k_leaves - 1) as f64))
+        .round()
+        .min(t - k_leaves as f64) as usize;
+    let branch_total = total_tokens - p;
+    let mut r = rng(seed);
+    let mut state = r.i32(0, vocab);
+    let mut nodes = Vec::new();
+
+    // trunk as a chain of `node_len` segments
+    let mut parent = -1i32;
+    let mut left = p.max(1);
+    while left > 0 {
+        let l = left.min(node_len);
+        nodes.push(NodeSpec::new(parent, markov_segments(&mut r, vocab, l, &mut state)));
+        parent = (nodes.len() - 1) as i32;
+        left -= l;
+    }
+    // K branches of ~equal length
+    let per = (branch_total / k_leaves).max(1);
+    for i in 0..k_leaves {
+        let l = if i + 1 == k_leaves { branch_total - per * (k_leaves - 1) } else { per };
+        let mut st = state.wrapping_add(i as i32 * 7 + 1).rem_euclid(vocab);
+        let mut bparent = parent;
+        let mut bleft = l.max(1);
+        while bleft > 0 {
+            let ll = bleft.min(node_len);
+            nodes.push(NodeSpec::new(bparent, markov_segments(&mut r, vocab, ll, &mut st)));
+            bparent = (nodes.len() - 1) as i32;
+            bleft -= ll;
+        }
+    }
+    reorder_preorder(nodes)
+}
+
+/// Overlap regimes of the paper's Fig. 6 rollouts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overlap {
+    /// POR ~ 0.28: early tool fanout, short shared context.
+    Low,
+    /// POR ~ 0.55: mixed tool fanout + drift re-branches.
+    Medium,
+    /// POR ~ 0.887: think-mode (long reasoning discarded every turn).
+    High,
+}
+
+/// Agentic multi-turn rollout generator (Fig. 6 substitution).
+///
+/// Simulates a task loop: each turn appends environment input (untrained) +
+/// model output (trained).  The overlap regime is governed by *where*
+/// branches attach and how much of each turn's output survives:
+///
+/// * **Low** (paper ~28%): concurrent tool calls fan out right after the
+///   prompt and each runs a long independent sub-trajectory — shared prefix
+///   is short relative to the branches.
+/// * **Medium** (~55%): think-mode with a moderate reasoning share — every
+///   turn's discarded reasoning becomes a deep-attached leaf.
+/// * **High** (paper ~88.7%): think-mode with a dominant reasoning share and
+///   many turns — nearly everything generated shares the full deep prefix
+///   (the paper notes high-POR trees come from long think-mode sessions).
+pub fn agentic(seed: u64, overlap: Overlap, turns: usize, vocab: i32) -> TrajectoryTree {
+    let mut r = rng(seed);
+    let mut state = r.i32(0, vocab);
+    let mut nodes: Vec<NodeSpec> = Vec::new();
+    // root: task prompt (environment input, untrained); tool-fanout tasks
+    // start from a larger shared context (files read up front)
+    let prompt_len =
+        if overlap == Overlap::Low { r.usize(64, 96) } else { r.usize(24, 48) };
+    let prompt = markov_segments(&mut r, vocab, prompt_len, &mut state);
+    let n = prompt.len();
+    nodes.push(NodeSpec::new(-1, prompt).with_trainable(vec![0.0; n]));
+
+    if overlap == Overlap::Low {
+        // early fanout: concurrent tool sub-trajectories off the prompt;
+        // POR ~ (W-1)*prompt / (W*(prompt+branch))
+        let width = 4;
+        for _ in 0..width {
+            let mut st = state.wrapping_add(r.i32(1, 97)).rem_euclid(vocab);
+            let mut branch_parent = 0i32;
+            for _t in 0..(turns / 4).max(1) {
+                let l = r.usize(18, 40);
+                let out = markov_segments(&mut r, vocab, l, &mut st);
+                nodes.push(NodeSpec::new(branch_parent, out));
+                branch_parent = (nodes.len() - 1) as i32;
+                let le = r.usize(4, 12);
+                let env = markov_segments(&mut r, vocab, le, &mut st);
+                let el = env.len();
+                nodes.push(NodeSpec::new(branch_parent, env).with_trainable(vec![0.0; el]));
+                branch_parent = (nodes.len() - 1) as i32;
+            }
+        }
+        return reorder_preorder(nodes);
+    }
+
+    // think-mode trunk: each turn emits [think ; answer]; the next turn
+    // keeps only the answer, so the full output forks off as a leaf.
+    // POR ~ R/(1+R) with R = kept_per_turn * turns / (2 * tokens_per_turn).
+    let (think_ratio, eff_turns) = match overlap {
+        Overlap::Medium => (0.55, (turns / 2).max(2)),
+        Overlap::High => (0.90, turns * 8),
+        Overlap::Low => unreachable!(),
+    };
+    let mut trunk = 0i32;
+    for _turn in 0..eff_turns {
+        let out_len = r.usize(32, 80);
+        let think_len = ((out_len as f64) * think_ratio) as usize;
+        let ans_len = (out_len - think_len).max(1);
+        let answer = markov_segments(&mut r, vocab, ans_len, &mut state);
+        let mut st2 = state;
+        let think = markov_segments(&mut r, vocab, think_len.max(1), &mut st2);
+        // think node is a sibling leaf; answer continues the trunk
+        nodes.push(NodeSpec::new(trunk, think));
+        nodes.push(NodeSpec::new(trunk, answer));
+        trunk = (nodes.len() - 1) as i32;
+        // brief environment response (untrained)
+        let le = r.usize(2, 8);
+        let env = markov_segments(&mut r, vocab, le, &mut state);
+        let el = env.len();
+        nodes.push(NodeSpec::new(trunk, env).with_trainable(vec![0.0; el]));
+        trunk = (nodes.len() - 1) as i32;
+    }
+    reorder_preorder(nodes)
+}
+
+/// Restore DFS pre-order after frontier-based growth (children contiguous).
+fn reorder_preorder(nodes: Vec<NodeSpec>) -> TrajectoryTree {
+    let n = nodes.len();
+    let mut children = vec![Vec::new(); n];
+    for (i, nd) in nodes.iter().enumerate().skip(1) {
+        children[nd.parent as usize].push(i);
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut stack = vec![0usize];
+    while let Some(i) = stack.pop() {
+        order.push(i);
+        for &c in children[i].iter().rev() {
+            stack.push(c);
+        }
+    }
+    let mut remap = vec![0usize; n];
+    for (new, &old) in order.iter().enumerate() {
+        remap[old] = new;
+    }
+    let out = order
+        .iter()
+        .map(|&old| {
+            let nd = &nodes[old];
+            NodeSpec {
+                parent: if nd.parent < 0 { -1 } else { remap[nd.parent as usize] as i32 },
+                ..nd.clone()
+            }
+        })
+        .collect();
+    TrajectoryTree::new(out).expect("reorder produced invalid tree")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::metrics::por;
+
+    #[test]
+    fn target_por_is_hit() {
+        // max reachable POR with K leaves is 1 - 1/K, so use K = 16
+        for &p in &[0.2, 0.4, 0.6, 0.8, 0.92] {
+            let t = with_target_por(1, p, 16, 4000, 32, 512);
+            let got = por(&t);
+            assert!(
+                (got - p).abs() < 0.03,
+                "target {p} got {got} (tree {} nodes)",
+                t.len()
+            );
+            // unique tokens held ~constant across the sweep
+            assert!((t.n_tree() as i64 - 4000).abs() < 64);
+        }
+    }
+
+    #[test]
+    fn agentic_overlap_regimes_ordered() {
+        let low = por(&agentic(3, Overlap::Low, 12, 512));
+        let med = por(&agentic(3, Overlap::Medium, 12, 512));
+        let high = por(&agentic(3, Overlap::High, 12, 512));
+        assert!(low < med && med < high, "low {low} med {med} high {high}");
+        assert!(high > 0.78, "think-mode should give high POR, got {high}");
+        assert!((0.35..0.72).contains(&med), "medium regime off: {med}");
+        assert!(low < 0.45, "tool fanout regime too overlapped: {low}");
+    }
+
+    #[test]
+    fn uniform_valid() {
+        for seed in 0..20 {
+            let t = uniform(seed, 14, 6, 0.6);
+            assert!(t.num_paths() >= 1);
+            let m = super::super::dfs::serialize(&t);
+            assert_eq!(m.size(), t.n_slots());
+        }
+    }
+
+    #[test]
+    fn markov_is_learnable() {
+        // 85% of transitions follow the deterministic rule
+        let mut r = rng(0);
+        let mut state = 5;
+        let seg = markov_segments(&mut r, 512, 4000, &mut state);
+        let mut hits = 0;
+        for w in seg.windows(2) {
+            if w[1] == (w[0] * 31 + 17).rem_euclid(512) {
+                hits += 1;
+            }
+        }
+        assert!(hits as f64 / seg.len() as f64 > 0.75);
+    }
+}

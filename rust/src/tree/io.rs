@@ -1,0 +1,91 @@
+//! Tree (de)serialization: JSON on disk, one tree per file or JSONL corpora.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use super::node::TrajectoryTree;
+use crate::util::json::Json;
+
+pub fn save_json(tree: &TrajectoryTree, path: &Path) -> crate::Result<()> {
+    std::fs::write(path, tree.to_json().to_string())?;
+    Ok(())
+}
+
+pub fn load_json(path: &Path) -> crate::Result<TrajectoryTree> {
+    let data = std::fs::read_to_string(path)?;
+    TrajectoryTree::from_json(&Json::parse(&data)?)
+}
+
+/// JSONL corpus: one tree per line (the global-batch unit of §3.4 — shuffle
+/// happens between trees, never inside one).
+pub fn save_corpus(trees: &[TrajectoryTree], path: &Path) -> crate::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    for t in trees {
+        writeln!(w, "{}", t.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+pub fn load_corpus(path: &Path) -> crate::Result<Vec<TrajectoryTree>> {
+    let f = std::fs::File::open(path)?;
+    let mut out = Vec::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(TrajectoryTree::from_json(&Json::parse(&line)?)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+pub fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "tree-train-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::gen;
+
+    #[test]
+    fn roundtrip() {
+        let dir = temp_dir("roundtrip");
+        let t = gen::uniform(7, 10, 5, 0.5);
+        let p = dir.join("tree.json");
+        save_json(&t, &p).unwrap();
+        assert_eq!(load_json(&p).unwrap(), t);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corpus_roundtrip() {
+        let dir = temp_dir("corpus");
+        let trees: Vec<_> = (0..5).map(|s| gen::uniform(s, 8, 5, 0.5)).collect();
+        let p = dir.join("corpus.jsonl");
+        save_corpus(&trees, &p).unwrap();
+        assert_eq!(load_corpus(&p).unwrap(), trees);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn supervision_preserved() {
+        let dir = temp_dir("sup");
+        let t = TrajectoryTree::new(vec![crate::NodeSpec::new(-1, vec![1, 2])
+            .with_trainable(vec![0.0, 1.0])
+            .with_advantage(vec![-1.0, 2.0])])
+        .unwrap();
+        let p = dir.join("t.json");
+        save_json(&t, &p).unwrap();
+        assert_eq!(load_json(&p).unwrap(), t);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,132 @@
+//! Tree overlap metrics: POR (Eq. 12) and the Fig. 6 depth profiles.
+
+use super::node::TrajectoryTree;
+
+/// Potential Overlap Ratio (Eq. 12): `1 - N_tree / N_flat` on real tokens.
+///
+/// The theoretical end-to-end speedup upper bound is `1 / (1 - POR)` (§4.1).
+pub fn por(tree: &TrajectoryTree) -> f64 {
+    let n_tree = tree.n_tree() as f64;
+    let n_flat = tree.n_flat() as f64;
+    if n_flat == 0.0 {
+        return 0.0;
+    }
+    1.0 - n_tree / n_flat
+}
+
+/// Theoretical speedup upper bound `1/(1-POR)` (§4.1).
+pub fn speedup_bound(tree: &TrajectoryTree) -> f64 {
+    1.0 / (1.0 - por(tree))
+}
+
+/// POR of a *set* of trees (token-weighted, as in the paper's datasets).
+pub fn dataset_por(trees: &[TrajectoryTree]) -> f64 {
+    let n_tree: usize = trees.iter().map(|t| t.n_tree()).sum();
+    let n_flat: usize = trees.iter().map(|t| t.n_flat()).sum();
+    if n_flat == 0 {
+        return 0.0;
+    }
+    1.0 - n_tree as f64 / n_flat as f64
+}
+
+/// Fig. 6 lower row: active trajectory count at every path depth.
+///
+/// `profile[d]` = number of root-to-leaf paths whose length exceeds `d`;
+/// the area under the curve equals `N_flat`, while the unique-token count at
+/// depth `d` is the number of distinct nodes covering that depth (area ratio
+/// = the theoretical token reuse ratio).
+pub fn active_trajectory_profile(tree: &TrajectoryTree) -> Vec<u32> {
+    let mut lens: Vec<usize> = tree
+        .paths()
+        .iter()
+        .map(|p| p.iter().map(|&n| tree.nodes[n].real_len()).sum())
+        .collect();
+    lens.sort_unstable();
+    let max = *lens.last().unwrap_or(&0);
+    let mut profile = vec![0u32; max];
+    for d in 0..max {
+        profile[d] = lens.iter().filter(|&&l| l > d).count() as u32;
+    }
+    profile
+}
+
+/// Unique-token coverage per depth (the denominator curve of Fig. 6).
+pub fn unique_token_profile(tree: &TrajectoryTree) -> Vec<u32> {
+    let meta = super::dfs::serialize(tree);
+    let mut max_depth = 0usize;
+    for t in 0..meta.size() {
+        if !meta.pad_mask[t] {
+            max_depth = max_depth.max(meta.pos_ids[t] as usize + 1);
+        }
+    }
+    let mut profile = vec![0u32; max_depth];
+    for t in 0..meta.size() {
+        if !meta.pad_mask[t] {
+            profile[meta.pos_ids[t] as usize] += 1;
+        }
+    }
+    profile
+}
+
+/// FLOP accounting for the Fig. 5 / Fig. 8 token-count comparisons.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenAccounting {
+    /// Unique tokens in the tree (what Tree Training computes).
+    pub n_tree: usize,
+    /// Flattened per-path tokens (what the sep-avg baseline computes).
+    pub n_flat: usize,
+    pub por: f64,
+    pub speedup_bound: f64,
+}
+
+pub fn accounting(tree: &TrajectoryTree) -> TokenAccounting {
+    TokenAccounting {
+        n_tree: tree.n_tree(),
+        n_flat: tree.n_flat(),
+        por: por(tree),
+        speedup_bound: speedup_bound(tree),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::NodeSpec;
+
+    #[test]
+    fn por_two_branch() {
+        // root 52, children 15/16: tree 83, flat 135 (§4.1 scaled example)
+        let t = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![0; 52]),
+            NodeSpec::new(0, vec![0; 15]),
+            NodeSpec::new(0, vec![0; 16]),
+        ])
+        .unwrap();
+        assert!((por(&t) - (1.0 - 83.0 / 135.0)).abs() < 1e-12);
+        assert!((speedup_bound(&t) - 135.0 / 83.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_has_zero_por() {
+        let t = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![0; 10]),
+            NodeSpec::new(0, vec![0; 5]),
+        ])
+        .unwrap();
+        assert_eq!(por(&t), 0.0);
+    }
+
+    #[test]
+    fn profile_area_is_n_flat() {
+        let t = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![0; 4]),
+            NodeSpec::new(0, vec![0; 3]),
+            NodeSpec::new(0, vec![0; 5]),
+        ])
+        .unwrap();
+        let p = active_trajectory_profile(&t);
+        assert_eq!(p.iter().map(|&x| x as usize).sum::<usize>(), t.n_flat());
+        let u = unique_token_profile(&t);
+        assert_eq!(u.iter().map(|&x| x as usize).sum::<usize>(), t.n_tree());
+    }
+}

@@ -1,0 +1,17 @@
+//! Trajectory trees (paper §3.1) and their DFS serialization (§3.2).
+//!
+//! A trajectory tree is a rooted tree whose nodes hold token segments; each
+//! root-to-leaf path spells a complete agentic trajectory.  Everything the
+//! model needs about the tree is reduced to per-token metadata vectors by
+//! [`dfs::serialize`] — the tree attention mask becomes a two-integer
+//! interval test, positions become explicit RoPE inputs, and the loss
+//! becomes a per-token weighted sum (Eq. 4).
+
+pub mod dfs;
+pub mod gen;
+pub mod io;
+pub mod metrics;
+pub mod node;
+
+pub use dfs::{serialize, DfsMeta};
+pub use node::{NodeSpec, TrajectoryTree};

@@ -1,0 +1,335 @@
+//! Tree node model: DFS pre-order node lists with per-token supervision.
+
+use crate::util::json::Json;
+
+/// One tree node.  `parent` indexes the node list (-1 for the root).
+///
+/// Nodes are stored in DFS pre-order (parent before child, each node's
+/// children contiguous in recursive order) — the natural order in which an
+/// agentic runtime records branching trajectories.
+///
+/// `pad_tail` marks that many trailing tokens as alignment padding (hybrid
+/// GDN models pad node segments to the SSM chunk size, §3.2).  Pads are
+/// attention self-islands with zero loss weight; the SSM recurrence is made
+/// transparent to them (g = 0, beta = 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub parent: i32,
+    pub tokens: Vec<i32>,
+    /// 1.0 = model output (trained), 0.0 = user/environment input.
+    pub trainable: Vec<f32>,
+    /// Per-token RL advantage (1.0 for SFT).
+    pub advantage: Vec<f32>,
+    pub pad_tail: usize,
+}
+
+impl NodeSpec {
+    pub fn new(parent: i32, tokens: Vec<i32>) -> Self {
+        let n = tokens.len();
+        Self { parent, tokens, trainable: vec![1.0; n], advantage: vec![1.0; n], pad_tail: 0 }
+    }
+
+    pub fn with_trainable(mut self, trainable: Vec<f32>) -> Self {
+        assert_eq!(trainable.len(), self.tokens.len());
+        self.trainable = trainable;
+        self
+    }
+
+    pub fn with_advantage(mut self, advantage: Vec<f32>) -> Self {
+        assert_eq!(advantage.len(), self.tokens.len());
+        self.advantage = advantage;
+        self
+    }
+
+    /// Segment length excluding alignment pads.
+    pub fn real_len(&self) -> usize {
+        self.tokens.len() - self.pad_tail
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+impl NodeSpec {
+    /// JSON encoding (corpus format): omits all-default supervision vectors.
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("parent", Json::num(self.parent as f64)),
+            ("tokens", Json::arr_i32(&self.tokens)),
+        ];
+        if self.trainable.iter().any(|&x| x != 1.0) {
+            kv.push(("trainable", Json::arr_f32(&self.trainable)));
+        }
+        if self.advantage.iter().any(|&x| x != 1.0) {
+            kv.push(("advantage", Json::arr_f32(&self.advantage)));
+        }
+        if self.pad_tail != 0 {
+            kv.push(("pad_tail", Json::num(self.pad_tail as f64)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let parent = v.req("parent")?.as_i64().ok_or_else(|| anyhow::anyhow!("parent"))? as i32;
+        let tokens = v.req("tokens")?.to_vec_i32()?;
+        let n = tokens.len();
+        let trainable = match v.get("trainable") {
+            Some(t) => t.to_vec_f32()?,
+            None => vec![1.0; n],
+        };
+        let advantage = match v.get("advantage") {
+            Some(t) => t.to_vec_f32()?,
+            None => vec![1.0; n],
+        };
+        let pad_tail = v.get("pad_tail").and_then(|x| x.as_usize()).unwrap_or(0);
+        anyhow::ensure!(trainable.len() == n && advantage.len() == n, "vector lengths");
+        Ok(Self { parent, tokens, trainable, advantage, pad_tail })
+    }
+}
+
+/// A trajectory tree: validated DFS pre-order node list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryTree {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl TrajectoryTree {
+    /// Build from a pre-order node list, validating the ordering invariants.
+    pub fn new(nodes: Vec<NodeSpec>) -> crate::Result<Self> {
+        if nodes.is_empty() {
+            anyhow::bail!("empty tree");
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            if i == 0 {
+                if n.parent != -1 {
+                    anyhow::bail!("node 0 must be the root");
+                }
+            } else if n.parent < 0 || n.parent as usize >= i {
+                anyhow::bail!("node {i}: parent {} violates pre-order", n.parent);
+            }
+            if n.trainable.len() != n.tokens.len() || n.advantage.len() != n.tokens.len() {
+                anyhow::bail!("node {i}: supervision vectors mismatch segment length");
+            }
+            if n.pad_tail > n.tokens.len() {
+                anyhow::bail!("node {i}: pad_tail exceeds segment");
+            }
+        }
+        Ok(Self { nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total token count (the paper's `N_tree`), excluding alignment pads.
+    pub fn n_tree(&self) -> usize {
+        self.nodes.iter().map(|n| n.real_len()).sum()
+    }
+
+    /// Total token count including alignment pads (device footprint).
+    pub fn n_slots(&self) -> usize {
+        self.nodes.iter().map(|n| n.len()).sum()
+    }
+
+    /// Children lists (index-based).
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut ch = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            ch[n.parent as usize].push(i);
+        }
+        ch
+    }
+
+    /// All root-to-leaf paths as node-index lists (DFS leaf order).
+    pub fn paths(&self) -> Vec<Vec<usize>> {
+        let ch = self.children();
+        let mut out = Vec::new();
+        let mut stack: Vec<(usize, Vec<usize>)> = vec![(0, vec![0])];
+        while let Some((i, acc)) = stack.pop() {
+            if ch[i].is_empty() {
+                out.push(acc.clone());
+            }
+            for &c in ch[i].iter().rev() {
+                let mut next = acc.clone();
+                next.push(c);
+                stack.push((c, next));
+            }
+        }
+        // stack-pop order reverses sibling order at the leaf level; restore
+        // DFS order by sorting on the path's node sequence (pre-order ids
+        // are DFS-monotone).
+        out.sort();
+        out
+    }
+
+    /// Number of root-to-leaf paths (`K`).
+    pub fn num_paths(&self) -> usize {
+        let ch = self.children();
+        ch.iter().filter(|c| c.is_empty()).count()
+    }
+
+    /// Flattened (sep-avg baseline) token count: every path independently.
+    pub fn n_flat(&self) -> usize {
+        self.paths()
+            .iter()
+            .map(|p| p.iter().map(|&n| self.nodes[n].real_len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Pad every node segment to a multiple of `chunk` (hybrid models).
+    pub fn pad_for_chunks(&self, chunk: usize, pad_token: i32) -> Self {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                assert_eq!(n.pad_tail, 0, "already padded");
+                let len = n.tokens.len();
+                let mut pad = (chunk - len % chunk) % chunk;
+                if len == 0 {
+                    pad = chunk;
+                }
+                let mut tokens = n.tokens.clone();
+                let mut trainable = n.trainable.clone();
+                let mut advantage = n.advantage.clone();
+                tokens.extend(std::iter::repeat(pad_token).take(pad));
+                trainable.extend(std::iter::repeat(0.0).take(pad));
+                advantage.extend(std::iter::repeat(1.0).take(pad));
+                NodeSpec { parent: n.parent, tokens, trainable, advantage, pad_tail: pad }
+            })
+            .collect();
+        Self { nodes }
+    }
+
+    /// Split any segment longer than `max_len` into a chain of nodes.
+    ///
+    /// Semantically the identity (a segment split into chained nodes spells
+    /// the same paths); required before bin packing when a single node
+    /// exceeds the partition capacity (§3.3).
+    pub fn split_long_segments(&self, max_len: usize) -> Self {
+        assert!(max_len > 0);
+        let mut nodes: Vec<NodeSpec> = Vec::with_capacity(self.nodes.len());
+        // old id -> new id of the *last* piece (children attach there)
+        let mut tail = vec![0usize; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            assert_eq!(n.pad_tail, 0, "split before chunk padding");
+            let parent = if i == 0 { -1i32 } else { tail[n.parent as usize] as i32 };
+            if n.tokens.len() <= max_len {
+                nodes.push(NodeSpec { parent, ..n.clone() });
+                tail[i] = nodes.len() - 1;
+                continue;
+            }
+            let mut prev = parent;
+            let mut s = 0;
+            while s < n.tokens.len() {
+                let e = (s + max_len).min(n.tokens.len());
+                nodes.push(NodeSpec {
+                    parent: prev,
+                    tokens: n.tokens[s..e].to_vec(),
+                    trainable: n.trainable[s..e].to_vec(),
+                    advantage: n.advantage[s..e].to_vec(),
+                    pad_tail: 0,
+                });
+                prev = (nodes.len() - 1) as i32;
+                s = e;
+            }
+            tail[i] = nodes.len() - 1;
+        }
+        Self { nodes }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("nodes", Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()))])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let nodes = v
+            .req_arr("nodes")?
+            .iter()
+            .map(NodeSpec::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Self::new(nodes)
+    }
+
+    /// Longest root-to-leaf path in real tokens (common-practice baseline
+    /// for §4.7, and the partition peak-memory bound).
+    pub fn longest_path(&self) -> Vec<usize> {
+        self.paths()
+            .into_iter()
+            .max_by_key(|p| p.iter().map(|&n| self.nodes[n].real_len()).sum::<usize>())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig1() -> TrajectoryTree {
+        // the paper's Figure-1 tree: K=3
+        TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1, 2, 3, 4]),
+            NodeSpec::new(0, vec![5, 6]),
+            NodeSpec::new(1, vec![7]),
+            NodeSpec::new(1, vec![8, 9]),
+            NodeSpec::new(0, vec![10, 11, 12]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn counts() {
+        let t = fig1();
+        assert_eq!(t.num_paths(), 3);
+        assert_eq!(t.n_tree(), 12);
+        // paths: [0,1,2]=7, [0,1,3]=8, [0,4]=7 -> 22
+        assert_eq!(t.n_flat(), 22);
+    }
+
+    #[test]
+    fn paths_in_dfs_order() {
+        let t = fig1();
+        assert_eq!(t.paths(), vec![vec![0, 1, 2], vec![0, 1, 3], vec![0, 4]]);
+    }
+
+    #[test]
+    fn rejects_non_preorder() {
+        assert!(TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1]),
+            NodeSpec::new(2, vec![2]),
+            NodeSpec::new(0, vec![3]),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn chunk_padding() {
+        let t = fig1().pad_for_chunks(4, 0);
+        assert!(t.nodes.iter().all(|n| n.len() % 4 == 0));
+        assert_eq!(t.n_tree(), 12); // real tokens unchanged
+        assert_eq!(t.nodes[1].pad_tail, 2);
+    }
+
+    #[test]
+    fn split_segments() {
+        let t = fig1().split_long_segments(2);
+        assert!(t.nodes.iter().all(|n| n.len() <= 2));
+        assert_eq!(t.n_tree(), 12);
+        assert_eq!(t.num_paths(), 3);
+        assert_eq!(t.n_flat(), 22); // identity on path token counts
+    }
+
+    #[test]
+    fn longest_path() {
+        let t = fig1();
+        assert_eq!(t.longest_path(), vec![0, 1, 3]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Micro-bench harness (criterion is not vendored): warmup + timed
+//! iterations, reporting mean / p50 / p90 and derived throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p90  ({} iters)",
+            self.name, self.mean, self.p50, self.p90, self.iters
+        );
+    }
+
+    pub fn report_throughput(&self, elems: usize, unit: &str) {
+        let per_sec = elems as f64 / self.mean.as_secs_f64();
+        println!(
+            "{:<44} {:>10.3?} mean  {:>12.0} {unit}/s  ({} iters)",
+            self.name, self.mean, per_sec, self.iters
+        );
+    }
+}
+
+/// Run `f` with auto-scaled iteration count (~`budget` total runtime).
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()) as usize).clamp(5, 10_000);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: times[iters / 2],
+        p90: times[iters * 9 / 10],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = bench("noop", Duration::from_millis(20), || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.p50 <= r.p90);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates (the vendored build has only the `xla` closure, so
+//! everything else a framework needs is implemented here):
+//!
+//! * [`json`]  — minimal JSON parser/writer (manifest, configs, corpora).
+//! * [`rng`]   — SplitMix64 deterministic PRNG (generators, shuffles).
+//! * [`bench`] — micro-bench harness (warmup + timed iterations, p50/mean).
+//! * [`logging`] — leveled stderr logging controlled by `TT_LOG`.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;

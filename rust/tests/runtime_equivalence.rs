@@ -1,0 +1,108 @@
+//! Runtime-level App. B.8 verification over the compiled artifacts:
+//! tree-vs-baseline equivalence (Eq. 1-5), partition-relay parity, and
+//! training-dynamics sanity on the tiny models.  Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use tree_train::runtime::Runtime;
+use tree_train::trainer::grads::GradBuffer;
+use tree_train::trainer::{AdamWConfig, BaselineTrainer, TreeTrainer};
+use tree_train::tree::{gen, NodeSpec, TrajectoryTree};
+
+fn runtime() -> Arc<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::from_dir(&dir).expect("run `make artifacts` first"))
+}
+
+#[test]
+fn tree_equals_sepavg_baseline_dense() {
+    let rt = runtime();
+    let tree_tr = TreeTrainer::new(rt.clone(), "tiny", AdamWConfig::default()).unwrap();
+    let base_tr = BaselineTrainer::new(rt, "tiny", AdamWConfig::default()).unwrap();
+    for seed in 0..4 {
+        let t = gen::uniform(seed, 9, 5, 0.6);
+        let (lt, wt) = tree_tr.eval_loss(std::slice::from_ref(&t)).unwrap();
+        let (lb, wb) = base_tr.eval_loss(std::slice::from_ref(&t)).unwrap();
+        assert!((lt - lb).abs() / lb.abs().max(1e-9) < 1e-4, "seed {seed}: {lt} vs {lb}");
+        // weight sums differ by exactly K (lambda = g/K vs 1 per path), so
+        // the normalized mean losses above are the equivalence check;
+        // verify the K ratio explicitly:
+        let k = t.num_paths() as f64;
+        assert!((wb / wt - k).abs() < 1e-4, "weight ratio {} != K {k}", wb / wt);
+    }
+}
+
+#[test]
+fn tree_equals_sepavg_baseline_moe_and_hybrid() {
+    let rt = runtime();
+    for model in ["tiny-moe", "tiny-hybrid"] {
+        let tree_tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default()).unwrap();
+        let base_tr = BaselineTrainer::new(rt.clone(), model, AdamWConfig::default()).unwrap();
+        let t = gen::uniform(2, 7, 4, 0.6);
+        let (lt, _) = tree_tr.eval_loss(std::slice::from_ref(&t)).unwrap();
+        let (lb, _) = base_tr.eval_loss(std::slice::from_ref(&t)).unwrap();
+        // MoE carries a non-decomposable aux loss term; hybrid is exact
+        let tol = if model == "tiny-moe" { 5e-2 } else { 1e-4 };
+        assert!((lt - lb).abs() / lb.abs().max(1e-9) < tol, "{model}: {lt} vs {lb}");
+    }
+}
+
+#[test]
+fn partition_relay_matches_whole_tree() {
+    let rt = runtime();
+    let whole = TreeTrainer::new(rt.clone(), "tiny", AdamWConfig::default()).unwrap();
+    let mut parted = TreeTrainer::new(rt, "tiny", AdamWConfig::default()).unwrap();
+    parted.partition_budget = Some(20);
+    for seed in [3u64, 8, 13] {
+        let t = gen::uniform(seed, 10, 5, 0.7);
+        let mut gw = GradBuffer::zeros(&whole.params);
+        whole.accumulate_tree(&t, &mut gw).unwrap();
+        let mut gp = GradBuffer::zeros(&parted.params);
+        parted.accumulate_tree_partitioned(&t, &mut gp).unwrap();
+        let rel = (gw.loss_sum - gp.loss_sum).abs() / gw.loss_sum.abs();
+        assert!(rel < 1e-4, "seed {seed}: loss rel {rel}");
+        for (a, b) in gw.grads.iter().zip(&gp.grads) {
+            for (&x, &y) in a.iter().zip(b) {
+                assert!((x - y).abs() / x.abs().max(1e-2) < 1e-3, "seed {seed}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rl_advantages_flow() {
+    // negative-advantage branches push probability down, positive up
+    let rt = runtime();
+    let mut tr = TreeTrainer::new(rt, "tiny", AdamWConfig { lr: 5e-3, ..Default::default() })
+        .unwrap();
+    let tree = TrajectoryTree::new(vec![
+        NodeSpec::new(-1, vec![5; 4]).with_trainable(vec![0.0; 4]),
+        NodeSpec::new(0, vec![7, 7, 7]).with_advantage(vec![1.0; 3]),
+        NodeSpec::new(0, vec![9, 9, 9]).with_advantage(vec![-1.0; 3]),
+    ])
+    .unwrap();
+    let m0 = tr.train_step(std::slice::from_ref(&tree)).unwrap();
+    assert!(m0.grad_norm > 0.0, "RL grads must not cancel (weight_sum uses |w|)");
+    assert!(m0.weight_sum > 0.0);
+}
+
+#[test]
+fn training_reduces_loss_tiny() {
+    let rt = runtime();
+    let mut tr = TreeTrainer::new(rt, "tiny", AdamWConfig { lr: 2e-3, ..Default::default() })
+        .unwrap();
+    let trees: Vec<_> = (0..4).map(|s| gen::uniform(s, 8, 5, 0.6)).collect();
+    let first = tr.train_step(&trees).unwrap().loss;
+    let mut last = first;
+    for _ in 0..15 {
+        last = tr.train_step(&trees).unwrap().loss;
+    }
+    assert!(last < first, "loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn logprob_program_scores_paths() {
+    let rt = runtime();
+    let prog = rt.find_program("logprob", "tiny", 0).unwrap();
+    assert_eq!(prog.info.outputs, vec!["logprobs".to_string()]);
+}

@@ -1,0 +1,63 @@
+//! Rust serializer/batch-builder parity against the python implementation.
+//!
+//! `python/compile/aot.py` dumps random trees + the batches that
+//! `treemeta.py`/`batching.py` produce for them (artifacts/fixtures/);
+//! the Rust pipeline must reproduce every vector bit-for-bit — the two
+//! implementations feed the same exported programs, so any divergence is a
+//! silent numerical bug.
+
+use tree_train::trainer::batch::{build_batch, BatchOptions};
+use tree_train::tree::{serialize, NodeSpec, TrajectoryTree};
+use tree_train::util::json::Json;
+
+fn fixtures() -> Json {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/fixtures/serializer_parity.json");
+    let data = std::fs::read_to_string(&path).expect("run `make artifacts` first");
+    Json::parse(&data).unwrap()
+}
+
+fn tree_from_fixture(v: &Json) -> TrajectoryTree {
+    let nodes = v
+        .req_arr("nodes")
+        .unwrap()
+        .iter()
+        .map(|n| {
+            let tokens = n.req("tokens").unwrap().to_vec_i32().unwrap();
+            let trainable = n.req("trainable").unwrap().to_vec_f32().unwrap();
+            NodeSpec::new(n.req("parent").unwrap().as_i64().unwrap() as i32, tokens)
+                .with_trainable(trainable)
+        })
+        .collect();
+    TrajectoryTree::new(nodes).unwrap()
+}
+
+#[test]
+fn batches_match_python_bit_for_bit() {
+    let fx = fixtures();
+    let cases = fx.as_arr().unwrap();
+    assert!(cases.len() >= 8);
+    for case in cases {
+        let tree = tree_from_fixture(case);
+        let cap = case.req_usize("capacity").unwrap();
+        let meta = serialize(&tree);
+        assert_eq!(meta.num_paths, case.req_usize("num_paths").unwrap());
+        let batch = build_batch(&meta, cap, &BatchOptions::default()).unwrap();
+        let exp = case.req("expected").unwrap();
+
+        let check_i32 = |key: &str, got: &[i32]| {
+            let want = exp.req(key).unwrap().to_vec_i32().unwrap();
+            assert_eq!(got, &want[..], "fixture seed {:?} key {key}", case.get("seed"));
+        };
+        check_i32("tokens", &batch.tokens);
+        check_i32("prev_idx", &batch.prev_idx);
+        check_i32("pos_ids", &batch.pos_ids);
+        check_i32("q_exit", &batch.q_exit);
+        check_i32("k_order", &batch.k_order);
+        check_i32("k_exit", &batch.k_exit);
+        let want_w = exp.req("weights").unwrap().to_vec_f32().unwrap();
+        assert_eq!(batch.weights, want_w, "weights mismatch");
+        let want_b = exp.req("k_bias").unwrap().to_vec_f32().unwrap();
+        assert_eq!(batch.k_bias, want_b, "k_bias mismatch");
+    }
+}

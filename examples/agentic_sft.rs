@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                 vocab: 512,
             }),
             metrics_csv: Some(results.join(format!("agentic_sft_{tag}.csv"))),
+            forest_packing: true,
         };
         let mut coord = Coordinator::new(rt.clone(), cfg)?;
         // the sep-avg baseline cannot pack paths longer than its bucket

@@ -46,9 +46,9 @@ fn main() -> anyhow::Result<()> {
     // run the relay with the same packing budget as the printed plan
     tr.partition_budget = Some(capacity);
 
-    let mut whole = GradBuffer::zeros(&tr.params);
+    let mut whole = GradBuffer::zeros(tr.params());
     tr.accumulate_tree(&tree, &mut whole)?;
-    let mut parted = GradBuffer::zeros(&tr.params);
+    let mut parted = GradBuffer::zeros(tr.params());
     tr.accumulate_tree_partitioned(&tree, &mut parted)?;
 
     let loss_rel = (whole.loss_sum - parted.loss_sum).abs() / whole.loss_sum.abs();

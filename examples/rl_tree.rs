@@ -55,7 +55,7 @@ fn branch_logprob(
         })
         .collect();
     t = TrajectoryTree::new(nodes)?;
-    let mut gb = GradBuffer::zeros(&tr.params);
+    let mut gb = GradBuffer::zeros(tr.params());
     tr.accumulate_tree(&t, &mut gb)?;
     Ok(-gb.mean_loss()) // mean logprob of trained tokens
 }

@@ -1,0 +1,124 @@
+//! Forest Packing accounting + planning throughput.
+//!
+//! Measures, on the same synthetic corpus, how many program calls one
+//! global batch costs with and without cross-tree Forest Packing (whole
+//! trees into `step` calls, partition specs into `part_fwd`/`part_bwd`
+//! calls), plus the host-side planning cost.  Device execution is not
+//! required: call counts and tokens-per-call are planning-level facts.
+//!
+//! Emits `BENCH_forest.json` next to the CSV outputs (results/ by default).
+
+use std::time::Duration;
+
+use tree_train::partition::forest;
+use tree_train::partition::{greedy_pack, plan};
+use tree_train::trainer::BatchOptions;
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+use tree_train::util::json::Json;
+
+const CAPACITY: usize = 1024;
+const PART_CAPACITY: usize = 1024;
+const GATEWAY_ROWS: usize = 1024;
+
+fn main() {
+    println!("== forest packing benches (C = {CAPACITY}) ==");
+
+    // fig-7-like global batch: mixed small/medium trees, all fitting C
+    let trees: Vec<_> = (0..64u64)
+        .map(|i| {
+            let total = 96 + (i as usize * 53) % (CAPACITY / 2);
+            gen::with_target_por(i, 0.6 + 0.3 * ((i % 10) as f64) / 10.0, 4, total, 24, 512)
+        })
+        .collect();
+    let metas: Vec<_> = trees.iter().map(tree_train::tree::serialize).collect();
+    let opts = BatchOptions::default();
+
+    let packed = forest::pack_forest(&metas, CAPACITY, &opts).unwrap();
+    let calls_unpacked = metas.len(); // seed path: one step call per tree
+    let calls_packed = packed.len();
+    let real_tokens: usize = trees.iter().map(|t| t.n_tree()).sum();
+    let tok_per_call_unpacked = real_tokens as f64 / calls_unpacked as f64;
+    let tok_per_call_packed = real_tokens as f64 / calls_packed as f64;
+    let fill: f64 = packed
+        .iter()
+        .map(|b| b.members.iter().map(|m| m.len).sum::<usize>() as f64 / CAPACITY as f64)
+        .sum::<f64>()
+        / calls_packed as f64;
+    println!(
+        "step calls per global batch: {calls_unpacked} -> {calls_packed} \
+         (packing factor {:.2}x, mean fill {:.0}%)",
+        calls_unpacked as f64 / calls_packed as f64,
+        fill * 100.0
+    );
+    println!(
+        "real tokens per step call:   {tok_per_call_unpacked:.0} -> {tok_per_call_packed:.0}"
+    );
+    assert!(
+        calls_packed < calls_unpacked,
+        "forest packing must strictly reduce program calls"
+    );
+
+    let budget = Duration::from_millis(300);
+    let r_pack = bench("pack_forest_64_trees", budget, || {
+        forest::pack_forest(std::hint::black_box(&metas), CAPACITY, &opts).unwrap().len()
+    });
+    r_pack.report_throughput(real_tokens, "tok");
+
+    // partition-call packing: several oversized trees
+    let big: Vec<_> = (0..6u64)
+        .map(|i| {
+            gen::with_target_por(100 + i, 0.7, 8, PART_CAPACITY * 2, 48, 512)
+                .split_long_segments(PART_CAPACITY / 2)
+        })
+        .collect();
+    let plans: Vec<_> = big
+        .iter()
+        .map(|t| {
+            let assign = greedy_pack(t, PART_CAPACITY / 2).unwrap();
+            plan(t, &assign).unwrap()
+        })
+        .collect();
+    let single =
+        forest::schedule_partition_calls(&plans, PART_CAPACITY, GATEWAY_ROWS, false).unwrap();
+    let packed_sched =
+        forest::schedule_partition_calls(&plans, PART_CAPACITY, GATEWAY_ROWS, true).unwrap();
+    println!(
+        "partition program calls:     {} -> {} (packing factor {:.2}x)",
+        single.program_calls(),
+        packed_sched.program_calls(),
+        single.program_calls() as f64 / packed_sched.program_calls() as f64
+    );
+    assert!(packed_sched.program_calls() < single.program_calls());
+    let r_sched = bench("schedule_partition_calls_6_trees", budget, || {
+        forest::schedule_partition_calls(
+            std::hint::black_box(&plans),
+            PART_CAPACITY,
+            GATEWAY_ROWS,
+            true,
+        )
+        .unwrap()
+        .n_calls()
+    });
+    r_sched.report();
+
+    let out = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out).ok();
+    let json = Json::obj(vec![
+        ("capacity", Json::num(CAPACITY as f64)),
+        ("trees", Json::num(metas.len() as f64)),
+        ("real_tokens", Json::num(real_tokens as f64)),
+        ("step_calls_unpacked", Json::num(calls_unpacked as f64)),
+        ("step_calls_packed", Json::num(calls_packed as f64)),
+        ("tokens_per_call_unpacked", Json::num(tok_per_call_unpacked)),
+        ("tokens_per_call_packed", Json::num(tok_per_call_packed)),
+        ("mean_fill", Json::num(fill)),
+        ("partition_calls_unpacked", Json::num(single.program_calls() as f64)),
+        ("partition_calls_packed", Json::num(packed_sched.program_calls() as f64)),
+        ("pack_forest_mean_us", Json::num(r_pack.mean.as_micros() as f64)),
+        ("schedule_mean_us", Json::num(r_sched.mean.as_micros() as f64)),
+    ]);
+    let path = out.join("BENCH_forest.json");
+    std::fs::write(&path, json.to_string_pretty()).unwrap();
+    println!("-> {}", path.display());
+}

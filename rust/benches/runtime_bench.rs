@@ -21,13 +21,13 @@ fn main() {
     let tree = gen::uniform(1, 9, 5, 0.6);
     println!("== runtime benches (tiny c64) ==");
     bench("step_whole_tree", Duration::from_secs(1), || {
-        let mut gb = GradBuffer::zeros(&tr.params);
+        let mut gb = GradBuffer::zeros(tr.params());
         tr.accumulate_tree(&tree, &mut gb).unwrap();
         gb.loss_sum
     })
     .report();
     bench("step_partitioned_relay", Duration::from_secs(1), || {
-        let mut gb = GradBuffer::zeros(&tr.params);
+        let mut gb = GradBuffer::zeros(tr.params());
         tr.accumulate_tree_partitioned(&tree, &mut gb).unwrap();
         gb.loss_sum
     })

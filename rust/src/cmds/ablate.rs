@@ -44,12 +44,15 @@ pub fn run(
     for &budget in &budgets {
         let mut tr = TreeTrainer::new(rt.clone(), model, AdamWConfig::default())?;
         tr.partition_budget = Some(budget);
+        // the sweep isolates per-partition coordination cost, so disable
+        // cross-partition call packing (it would mute the per-node penalty)
+        tr.forest_packing = false;
         // plan stats
         let split = tree.split_long_segments(budget - budget / 8);
         let assign = tree_train::partition::greedy_pack(&split, budget)?;
         let n_parts = assign.iter().copied().max().unwrap() + 1;
         // warmup + measure
-        let mut gb = GradBuffer::zeros(&tr.params);
+        let mut gb = GradBuffer::zeros(tr.params());
         if budget == cap && tree.n_slots() <= cap {
             tr.accumulate_tree(&tree, &mut gb)?;
         } else {
@@ -58,7 +61,7 @@ pub fn run(
         let t0 = std::time::Instant::now();
         let mut calls = 0u64;
         for _ in 0..reps {
-            let mut gb = GradBuffer::zeros(&tr.params);
+            let mut gb = GradBuffer::zeros(tr.params());
             if budget == cap && tree.n_slots() <= cap {
                 tr.accumulate_tree(&tree, &mut gb)?;
             } else {

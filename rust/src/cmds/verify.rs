@@ -18,8 +18,8 @@ pub fn run(artifacts: &std::path::Path) -> anyhow::Result<()> {
 
     // 1. self-consistency (paper: EXACT 0)
     for t in &trees[..2] {
-        let mut g1 = GradBuffer::zeros(&tree_tr.params);
-        let mut g2 = GradBuffer::zeros(&tree_tr.params);
+        let mut g1 = GradBuffer::zeros(tree_tr.params());
+        let mut g2 = GradBuffer::zeros(tree_tr.params());
         tree_tr.accumulate_tree(t, &mut g1)?;
         tree_tr.accumulate_tree(t, &mut g2)?;
         anyhow::ensure!(g1.loss_sum == g2.loss_sum, "self-consistency: loss differs");
@@ -47,9 +47,9 @@ pub fn run(artifacts: &std::path::Path) -> anyhow::Result<()> {
     let mut worst = 0.0f64;
     let mut n_parts_seen = 0u64;
     for t in &trees[..3] {
-        let mut gw = GradBuffer::zeros(&tree_tr.params);
+        let mut gw = GradBuffer::zeros(tree_tr.params());
         tree_tr.accumulate_tree(t, &mut gw)?;
-        let mut gp = GradBuffer::zeros(&part_tr.params);
+        let mut gp = GradBuffer::zeros(part_tr.params());
         part_tr.accumulate_tree_partitioned(t, &mut gp)?;
         n_parts_seen += gp.exec_calls;
         let rel_loss = (gw.loss_sum - gp.loss_sum).abs() / gw.loss_sum.abs().max(1e-9);

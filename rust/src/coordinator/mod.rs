@@ -4,6 +4,14 @@
 //! trees (a tree is one rollout's trajectory); shuffling permutes *trees*,
 //! never tokens inside a tree, so Tree Training introduces no gradient bias
 //! relative to the baseline order.
+//!
+//! The run loop no longer iterates trees one by one: each global batch is
+//! first *planned* into a stream of packed device batches (Forest Packing —
+//! whole trees and partition specs FFD-packed into shared program calls,
+//! `partition::forest`) and then executed.  Gradient normalization stays at
+//! the global-batch level (Eq. 5), so packing changes call count, never the
+//! update.  `forest_packing: false` in the run config restores the seed's
+//! one-call-per-tree behavior for ablations.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -29,6 +37,8 @@ pub struct RunConfig {
     pub corpus: Option<PathBuf>,
     pub synthetic: Option<SyntheticSpec>,
     pub metrics_csv: Option<PathBuf>,
+    /// Cross-tree Forest Packing (default on; off = seed's per-tree calls).
+    pub forest_packing: bool,
 }
 
 impl RunConfig {
@@ -52,6 +62,7 @@ impl RunConfig {
                 None => None,
             },
             metrics_csv: v.get("metrics_csv").and_then(|x| x.as_str()).map(PathBuf::from),
+            forest_packing: v.get("forest_packing").and_then(|x| x.as_bool()).unwrap_or(true),
         })
     }
 }
@@ -149,7 +160,11 @@ impl Coordinator {
     pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> crate::Result<Self> {
         let opt = AdamWConfig { lr: cfg.lr, ..Default::default() };
         let trainer = match cfg.mode {
-            Mode::Tree => AnyTrainer::Tree(TreeTrainer::new(rt, &cfg.model, opt)?),
+            Mode::Tree => {
+                let mut t = TreeTrainer::new(rt, &cfg.model, opt)?;
+                t.forest_packing = cfg.forest_packing;
+                AnyTrainer::Tree(t)
+            }
             Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),
         };
         let data = if let Some(path) = &cfg.corpus {
@@ -168,6 +183,9 @@ impl Coordinator {
     }
 
     /// Run the configured number of steps; returns per-step metrics.
+    ///
+    /// Each step: assemble the global batch of trees, *plan* it into packed
+    /// device batches (tree mode), then execute the stream and update.
     pub fn run(&mut self) -> crate::Result<Vec<StepMetrics>> {
         let mut rng = crate::tree::gen::rng(self.cfg.seed);
         let mut order: Vec<usize> = (0..self.data.len()).collect();
@@ -187,17 +205,31 @@ impl Coordinator {
             let lr =
                 crate::trainer::adamw::cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
             self.trainer.set_lr(lr);
-            let m = self.trainer.train_step(&batch)?;
+            let m = match &mut self.trainer {
+                AnyTrainer::Tree(t) => {
+                    let plan = t.plan_global_batch(&batch)?;
+                    if step == 0 {
+                        crate::info!(
+                            "forest packing: {} trees -> {} program calls per global batch",
+                            batch.len(),
+                            plan.program_calls()
+                        );
+                    }
+                    t.execute_plan(&plan)?
+                }
+                AnyTrainer::Baseline(t) => t.train_step(&batch)?,
+            };
             if let Some(s) = &mut self.sink {
                 s.log(&m)?;
             }
             if step % 10 == 0 || step + 1 == self.cfg.steps {
                 crate::info!(
-                    "train step={} loss={:.4} tok/s={:.0} wall_ms={}",
+                    "train step={} loss={:.4} tok/s={:.0} wall_ms={} calls={}",
                     m.step,
                     m.loss,
                     m.tokens_per_sec(),
-                    m.wall.as_millis()
+                    m.wall.as_millis(),
+                    m.exec_calls
                 );
             }
             all.push(m);

@@ -17,6 +17,22 @@
 //!   relay, PJRT runtime, optimizers and the training loop.  Python never
 //!   runs at training time.
 //!
+//! Layer 3 is itself split engine / packing / coordinator
+//! (see `docs/forest_packing.md`):
+//!
+//! * [`trainer::Engine`] — the unified execution core: parameters + cached
+//!   literals, manifest-ordered program dispatch, f64 gradient
+//!   accumulation, Eq. 5-normalized AdamW updates.
+//! * [`partition::forest`] — cross-tree **Forest Packing**: whole small
+//!   trees and partition specs from many trees are first-fit-decreasing
+//!   packed into capacity-`C` prefix-forest device batches, so one `step`
+//!   (or `part_fwd`/`part_bwd`) call trains several trees at once.  The
+//!   interval attention mask is host metadata, which makes packing
+//!   numerically free — proven by `tests/forest_equivalence.rs` against
+//!   the first-principles [`trainer::refmodel::RefModel`] executor.
+//! * [`coordinator`] — global batches (§3.4) planned into streams of packed
+//!   device batches, then executed and optimizer-stepped.
+//!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the
 //! `tree-train` binary whose subcommands regenerate every figure/table of

@@ -30,20 +30,25 @@ pub fn greedy_pack(tree: &TrajectoryTree, capacity: usize) -> crate::Result<Vec<
     // comp_size[c] = slots of the (packed) component rooted at c
     let mut comp_size = vec![0usize; n];
     let mut cut_edge = vec![false; n]; // cut_edge[c]: edge (parent(c), c) is cut
+    // per-child merge marker: each node is some parent's child exactly once,
+    // so one flat bool vec replaces the former O(fanout²) `Vec::contains`
+    // scan (quadratic on wide-fanout trees, e.g. concurrent tool fanout)
+    let mut is_merged = vec![false; n];
     for i in (0..n).rev() {
         let mut kids: Vec<usize> = children[i].clone();
         kids.sort_by_key(|&c| comp_size[c]);
         let mut size = tree.nodes[i].len();
-        let mut merged = Vec::new();
+        let mut n_merged = 0usize;
         for &c in &kids {
             // merging c costs comp_size[c]; cutting costs 1 virtual slot
-            if size + comp_size[c] + (kids.len() - merged.len() - 1) <= capacity {
+            if size + comp_size[c] + (kids.len() - n_merged - 1) <= capacity {
                 size += comp_size[c];
-                merged.push(c);
+                is_merged[c] = true;
+                n_merged += 1;
             }
         }
         for &c in &kids {
-            if !merged.contains(&c) {
+            if !is_merged[c] {
                 cut_edge[c] = true;
                 size += 1; // virtual boundary-target slot
             }
@@ -221,6 +226,36 @@ mod tests {
         for s in partition_slots(&split, &assign) {
             assert!(s <= 50);
         }
+    }
+
+    #[test]
+    fn wide_fanout_packs_fast_and_valid() {
+        // regression for the former O(fanout²) merged-membership scan: a
+        // root with tens of thousands of children must pack in
+        // linearithmic time and keep the capacity/connectivity invariants.
+        // (capacity must exceed the fanout: each cut child charges one
+        // virtual boundary slot to the parent partition.)
+        let fanout = 50_000usize;
+        let mut nodes = vec![crate::NodeSpec::new(-1, vec![0; 3])];
+        for _ in 0..fanout {
+            nodes.push(crate::NodeSpec::new(0, vec![1, 2]));
+        }
+        let t = crate::TrajectoryTree::new(nodes).unwrap();
+        let cap = 60_000;
+        let t0 = std::time::Instant::now();
+        let assign = greedy_pack(&t, cap).unwrap();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "wide-fanout packing took {:?}",
+            t0.elapsed()
+        );
+        for (p, &s) in partition_slots(&t, &assign).iter().enumerate() {
+            assert!(s <= cap, "partition {p} has {s} slots");
+        }
+        crate::partition::validate_assignment(&t, &assign).unwrap();
+        // the root merges what fits and cuts the rest into own partitions
+        let n_parts = assign.iter().copied().max().unwrap() + 1;
+        assert!(n_parts >= 2, "fanout beyond capacity must be cut: {n_parts}");
     }
 
     #[test]

@@ -11,11 +11,16 @@
 //! * [`plan`] — turns an assignment into executable metadata: per-partition
 //!   DFS serialization, full-tree loss weights, ancestor gateway slots,
 //!   depth-based position offsets (Eq. 17) and virtual boundary targets.
+//! * [`forest`] — cross-tree Forest Packing: FFD-packs whole small trees
+//!   and partition specs from many trees into capacity-`C` prefix-forest
+//!   device batches, so one program call trains several trees at once.
 
 pub mod binpack;
+pub mod forest;
 pub mod plan;
 pub mod validate;
 
 pub use binpack::{exact_min_partitions, greedy_pack};
+pub use forest::{concat_metas, pack_forest, ForestBatch, RelaySchedule};
 pub use plan::{plan, PartitionSpec, Plan};
 pub use validate::validate_assignment;

@@ -66,9 +66,14 @@ pub fn plan(tree: &TrajectoryTree, assignment: &[usize]) -> crate::Result<Plan> 
 
     let mut parts = Vec::with_capacity(n_parts);
     let mut owner = vec![(u32::MAX, u32::MAX); full_meta.size()];
+    // one pass over nodes (ascending => pre-order restriction per part),
+    // instead of the former O(n_parts · n) filter-per-partition scan
+    let mut members_by_part: Vec<Vec<usize>> = vec![Vec::new(); n_parts];
+    for (i, &p) in assignment.iter().enumerate() {
+        members_by_part[p].push(i);
+    }
     for p in 0..n_parts {
-        let members: Vec<usize> =
-            (0..tree.nodes.len()).filter(|&i| assignment[i] == p).collect();
+        let members: Vec<usize> = std::mem::take(&mut members_by_part[p]);
         let root = *members
             .iter()
             .find(|&&i| {

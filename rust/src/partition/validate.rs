@@ -33,16 +33,10 @@ pub fn validate_assignment(tree: &TrajectoryTree, assignment: &[usize]) -> crate
             anyhow::ensure!(pp != p, "partition {p} root not actually a boundary");
         }
     }
-    // token conservation
-    let per_part: usize = (0..n_parts)
-        .map(|p| {
-            (0..tree.nodes.len())
-                .filter(|&i| assignment[i] == p)
-                .map(|i| tree.nodes[i].len())
-                .sum::<usize>()
-        })
-        .sum();
-    anyhow::ensure!(per_part == tree.n_slots(), "token slots not conserved");
+    // token conservation (single pass — the former per-partition scan was
+    // O(n_parts · n), quadratic on wide-fanout trees)
+    let total: usize = tree.nodes.iter().map(|nd| nd.len()).sum();
+    anyhow::ensure!(total == tree.n_slots(), "token slots not conserved");
     Ok(())
 }
 

@@ -205,6 +205,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + native PJRT (make artifacts; vendored xla crate is host-only)"]
     fn manifest_loads() {
         let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
         assert!(m.program("step_tiny_c64").is_ok());
@@ -215,6 +216,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + native PJRT (make artifacts; vendored xla crate is host-only)"]
     fn params_load_and_match_manifest() {
         let m = Manifest::load(&artifacts_dir()).unwrap();
         let params = m.load_params("tiny").unwrap();
@@ -225,6 +227,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts + native PJRT (make artifacts; vendored xla crate is host-only)"]
     fn find_selects_smallest_sufficient_capacity() {
         let m = Manifest::load(&artifacts_dir()).unwrap();
         let p = m.find("step", "tiny", 10).unwrap();

@@ -1,36 +1,31 @@
-//! The sep-avg baseline (Eq. 1) with sequence packing (§4.2).
+//! The sep-avg baseline (Eq. 1) with sequence packing (§4.2), as a thin
+//! strategy on the shared execution [`Engine`].
 //!
 //! Every root-to-leaf path is linearized into an independent chain and
 //! chains are first-fit-decreasing packed into capacity-`C` batches.  A
 //! packed batch is a *prefix forest* — "a sequence is a special case of a
 //! prefix tree" (§2) — so it runs through the **same** exported `step`
 //! program as Tree Training, with metadata that simply never shares
-//! prefixes.  The speedup comparison is therefore kernel-for-kernel fair:
-//! the baseline pays `N_flat` tokens where Tree Training pays `N_tree`.
+//! prefixes.  Chain packing is literally [`crate::partition::forest`]'s
+//! whole-tree packing applied to chain trees, so the speedup comparison is
+//! kernel-for-kernel *and* packer-for-packer fair: the baseline pays
+//! `N_flat` tokens where Tree Training pays `N_tree`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::runtime::{HostTensor, Program, Runtime};
-use xla::Literal;
+use crate::partition::forest;
+use crate::runtime::{HostTensor, Runtime};
 use crate::tree::dfs::DfsMeta;
 use crate::tree::{NodeSpec, TrajectoryTree};
 
-use super::adamw::{AdamW, AdamWConfig};
+use super::adamw::AdamWConfig;
 use super::batch::{Batch, BatchOptions};
-use super::grads::GradBuffer;
+use super::engine::Engine;
 use super::metrics::StepMetrics;
 
 pub struct BaselineTrainer {
-    pub rt: Arc<Runtime>,
-    pub model: String,
-    pub params: Vec<HostTensor>,
-    param_lits: Vec<Literal>,
-    pub opt: AdamW,
-    step_prog: Arc<Program>,
-    pub capacity: usize,
-    hybrid: Option<(usize, usize)>,
-    step_count: u64,
+    pub engine: Engine,
 }
 
 /// One path of a tree as an independent chain tree.
@@ -53,236 +48,79 @@ pub fn path_chain(tree: &TrajectoryTree, path: &[usize]) -> TrajectoryTree {
     TrajectoryTree::new(nodes).expect("chain is a valid tree")
 }
 
-/// First-fit-decreasing packing of chain metas into capacity-C batches.
+/// First-fit-decreasing packing of chain metas into capacity-C batches
+/// (chains are trees; this is forest packing on degenerate trees).
 pub fn pack_chains(
     chains: &[DfsMeta],
     capacity: usize,
     opts: &BatchOptions,
 ) -> crate::Result<Vec<Batch>> {
-    let mut order: Vec<usize> = (0..chains.len()).collect();
-    order.sort_by_key(|&i| std::cmp::Reverse(chains[i].size()));
-    let mut bins: Vec<(usize, Vec<usize>)> = Vec::new(); // (used, chain ids)
-    for &i in &order {
-        let s = chains[i].size();
-        anyhow::ensure!(s <= capacity, "path of {s} tokens exceeds capacity {capacity}");
-        match bins.iter_mut().find(|(used, _)| used + s <= capacity) {
-            Some((used, ids)) => {
-                *used += s;
-                ids.push(i);
-            }
-            None => bins.push((s, vec![i])),
-        }
+    for m in chains {
+        anyhow::ensure!(
+            m.size() <= capacity,
+            "path of {} tokens exceeds capacity {capacity}",
+            m.size()
+        );
     }
-    bins.iter().map(|(_, ids)| concat_chains(chains, ids, capacity, opts)).collect()
-}
-
-/// Concatenate chain metas into one forest batch (offsets applied).
-fn concat_chains(
-    chains: &[DfsMeta],
-    ids: &[usize],
-    capacity: usize,
-    opts: &BatchOptions,
-) -> crate::Result<Batch> {
-    let hybrid = opts.chunk_size.is_some();
-    let chunk = opts.chunk_size.unwrap_or(1);
-    let kconv = opts.conv_kernel.unwrap_or(0);
-    let mut b = Batch {
-        capacity,
-        past_len: 0,
-        tokens: Vec::with_capacity(capacity),
-        prev_idx: Vec::with_capacity(capacity),
-        pos_ids: Vec::with_capacity(capacity),
-        weights: Vec::with_capacity(capacity),
-        q_exit: Vec::with_capacity(capacity),
-        k_order: (0..capacity as i32).collect(),
-        k_exit: Vec::new(),
-        k_bias: vec![0.0; capacity],
-        chunk_parent_map: Vec::new(),
-        ssm_pad: Vec::new(),
-        conv_idx: Vec::new(),
-    };
-    for &i in ids {
-        let m = &chains[i];
-        let o = b.tokens.len() as i32;
-        b.tokens.extend(&m.tokens);
-        b.pos_ids.extend(&m.pos_ids);
-        b.weights.extend(&m.weights);
-        b.q_exit.extend(m.subtree_exit.iter().map(|&e| e + o));
-        let prev = crate::tree::dfs::prev_indices(m);
-        b.prev_idx.extend(prev.iter().map(|&p| if p < 0 { -1 } else { p + o }));
-        if hybrid {
-            let chunk_off = (o as usize / chunk) as i32;
-            let cpm = crate::tree::dfs::chunk_parent_map(m, chunk)?;
-            b.chunk_parent_map
-                .extend(cpm.iter().map(|&p| if p < 0 { -1 } else { p + chunk_off }));
-            b.ssm_pad.extend(m.pad_mask.iter().map(|&x| if x { 1.0 } else { 0.0 }));
-        }
-        if kconv > 0 {
-            let idx = crate::tree::dfs::conv_gather_indices(m, kconv, false);
-            // token refs (>= base) shift by the pack offset; zero row stays
-            b.conv_idx.extend(idx.iter().map(|&x| if x >= kconv as i32 { x + o } else { x }));
-        }
-    }
-    // pad to capacity: self-islands, zero weight
-    let s = b.tokens.len();
-    anyhow::ensure!(s <= capacity, "packing overflow");
-    for t in s..capacity {
-        b.tokens.push(0);
-        b.pos_ids.push(0);
-        b.weights.push(0.0);
-        b.q_exit.push((t + 1) as i32);
-        b.prev_idx.push(-1);
-        if hybrid {
-            b.ssm_pad.push(1.0);
-        }
-        if kconv > 0 {
-            let mut row = vec![0i32; kconv];
-            row[kconv - 1] = kconv as i32 + t as i32;
-            b.conv_idx.extend(row);
-        }
-    }
-    if hybrid {
-        anyhow::ensure!(s % chunk == 0 && capacity % chunk == 0, "pack not chunk-aligned");
-        for i in s / chunk..capacity / chunk {
-            b.chunk_parent_map.push(if i == s / chunk { -1 } else { i as i32 - 1 });
-        }
-    }
-    b.k_exit = b.q_exit.clone();
-    Ok(b)
+    Ok(forest::pack_forest(chains, capacity, opts)?
+        .into_iter()
+        .map(|fb| fb.batch)
+        .collect())
 }
 
 impl BaselineTrainer {
     pub fn new(rt: Arc<Runtime>, model: &str, opt_cfg: AdamWConfig) -> crate::Result<Self> {
-        let info = rt.manifest.model(model)?.clone();
-        let params = rt.manifest.load_params(model)?;
-        let step_prog = rt.find_program("step", model, 0)?;
-        let capacity = step_prog.info.capacity;
-        let hybrid = if info.kind() == "hybrid" {
-            Some((info.chunk_size(), info.conv_kernel()))
-        } else {
-            None
-        };
-        let opt = AdamW::new(opt_cfg, &params);
-        let param_lits = params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<crate::Result<Vec<_>>>()?;
-        Ok(Self {
-            rt,
-            model: model.to_string(),
-            params,
-            param_lits,
-            opt,
-            step_prog,
-            capacity,
-            hybrid,
-            step_count: 0,
-        })
+        Ok(Self { engine: Engine::new(rt, model, opt_cfg)? })
     }
 
-    fn batch_options(&self) -> BatchOptions {
-        BatchOptions {
-            chunk_size: self.hybrid.map(|(c, _)| c),
-            conv_kernel: self.hybrid.map(|(_, k)| k),
-            ..Default::default()
-        }
+    pub fn params(&self) -> &[HostTensor] {
+        self.engine.params()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.engine.capacity()
     }
 
     /// Linearize the global batch into packed chain batches.
     pub fn pack_trees(&self, trees: &[TrajectoryTree]) -> crate::Result<Vec<Batch>> {
+        let capacity = self.engine.capacity();
         let mut chains = Vec::new();
         for tree in trees {
             for path in tree.paths() {
                 let mut chain = path_chain(tree, &path);
-                // long paths must still fit: split then chain is unchanged,
-                // so instead pack at capacity via segment splitting
-                if chain.n_tree() > self.capacity {
-                    chain = chain.split_long_segments(self.capacity);
+                if chain.n_tree() > capacity {
                     anyhow::bail!(
                         "path of {} tokens exceeds baseline capacity {} — the \
                          baseline cannot sequence-pack it (tree training would \
                          partition it); reduce path length or export a larger \
                          bucket ({} nodes)",
                         chain.n_tree(),
-                        self.capacity,
+                        capacity,
                         chain.len()
                     );
                 }
-                if let Some((chunk, _)) = self.hybrid {
+                if let Some((chunk, _)) = self.engine.hybrid() {
                     chain = chain.pad_for_chunks(chunk, 0);
                 }
                 chains.push(crate::tree::serialize(&chain));
             }
         }
-        pack_chains(&chains, self.capacity, &self.batch_options())
-    }
-
-    fn run_step(&self, batch: &Batch) -> crate::Result<Vec<HostTensor>> {
-        let c = batch.capacity;
-        let mut owned: Vec<Literal> = Vec::new();
-        let mut slots: Vec<Option<usize>> = Vec::with_capacity(self.step_prog.info.inputs.len());
-        for name in &self.step_prog.info.inputs {
-            if name.starts_with("param:") {
-                slots.push(None);
-                continue;
-            }
-            let tensor = if let Some(key) = name.strip_prefix("batch:") {
-                match key {
-                    "tokens" => HostTensor::i32(vec![c], batch.tokens.clone()),
-                    "prev_idx" => HostTensor::i32(vec![c], batch.prev_idx.clone()),
-                    "pos_ids" => HostTensor::i32(vec![c], batch.pos_ids.clone()),
-                    "weights" => HostTensor::f32(vec![c], batch.weights.clone()),
-                    "q_exit" => HostTensor::i32(vec![c], batch.q_exit.clone()),
-                    "k_order" => HostTensor::i32(vec![c], batch.k_order.clone()),
-                    "k_exit" => HostTensor::i32(vec![c], batch.k_exit.clone()),
-                    "k_bias" => HostTensor::f32(vec![c], batch.k_bias.clone()),
-                    "chunk_parent_map" => HostTensor::i32(
-                        vec![batch.chunk_parent_map.len()],
-                        batch.chunk_parent_map.clone(),
-                    ),
-                    "ssm_pad" => HostTensor::f32(vec![c], batch.ssm_pad.clone()),
-                    "conv_idx" => {
-                        let k = batch.conv_idx.len() / c;
-                        HostTensor::i32(vec![c, k], batch.conv_idx.clone())
-                    }
-                    other => anyhow::bail!("unknown batch key {other}"),
-                }
-            } else {
-                anyhow::bail!("unexpected step input {name}");
-            };
-            owned.push(tensor.to_literal()?);
-            slots.push(Some(owned.len() - 1));
-        }
-        let mut refs: Vec<&Literal> = Vec::with_capacity(slots.len());
-        let mut p_iter = self.param_lits.iter();
-        for s in &slots {
-            refs.push(match s {
-                None => p_iter.next().unwrap(),
-                Some(i) => &owned[*i],
-            });
-        }
-        self.step_prog.run_literals(&refs)
+        pack_chains(&chains, capacity, &self.engine.batch_options())
     }
 
     /// One optimizer step over the linearized global batch.
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
         let t0 = Instant::now();
         let batches = self.pack_trees(trees)?;
-        let mut gb = GradBuffer::zeros(&self.params);
+        let mut gb = self.engine.grad_buffer();
         let mut device_tokens = 0usize;
         for b in &batches {
-            let outputs = self.run_step(b)?;
-            gb.add_outputs(&outputs, 2);
+            self.engine.run_step_into(b, &mut gb)?;
             device_tokens += b.capacity;
         }
-        let grads = gb.normalized();
-        let grad_norm = AdamW::grad_norm(&grads);
-        self.opt.update(&mut self.params, &grads);
-        self.param_lits =
-            self.params.iter().map(|p| p.to_literal()).collect::<crate::Result<Vec<_>>>()?;
-        self.step_count += 1;
+        let grad_norm = self.engine.apply_update(&gb)?;
         Ok(StepMetrics {
-            step: self.step_count,
+            step: self.engine.step_count(),
             loss: gb.mean_loss(),
             weight_sum: gb.weight_sum,
             device_tokens,
@@ -290,6 +128,7 @@ impl BaselineTrainer {
             flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
             wall: t0.elapsed(),
             exec_calls: gb.exec_calls,
+            forest_batches: batches.len() as u64,
             grad_norm,
         })
     }
@@ -297,16 +136,15 @@ impl BaselineTrainer {
     /// Loss-only evaluation on packed chains.
     pub fn eval_loss(&self, trees: &[TrajectoryTree]) -> crate::Result<(f64, f64)> {
         let batches = self.pack_trees(trees)?;
-        let mut gb = GradBuffer::zeros(&self.params);
+        let mut gb = self.engine.grad_buffer();
         for b in &batches {
-            let outputs = self.run_step(b)?;
-            gb.add_outputs(&outputs, 2);
+            self.engine.run_step_into(b, &mut gb)?;
         }
         Ok((gb.mean_loss(), gb.weight_sum))
     }
 
     pub fn set_lr(&mut self, lr: f64) {
-        self.opt.cfg.lr = lr;
+        self.engine.set_lr(lr);
     }
 }
 
@@ -328,7 +166,7 @@ mod tests {
         let packed_w: f32 = batches.iter().flat_map(|b| b.weights.iter()).sum();
         let chain_w: f32 = chains.iter().flat_map(|m| m.weights.iter()).sum();
         assert!((packed_w - chain_w).abs() < 1e-4);
-        assert_eq!(batches.iter().map(|b| b.capacity).sum::<usize>() >= total, true);
+        assert!(batches.iter().map(|b| b.capacity).sum::<usize>() >= total);
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! The unified execution engine: parameter state, program dispatch and the
+//! optimizer step, shared by every training strategy.
+//!
+//! Before this layer existed, `TreeTrainer` and `BaselineTrainer` each
+//! carried their own copy of the parameter-literal cache, the
+//! manifest-ordered input marshalling, the f64 `GradBuffer` plumbing and the
+//! AdamW update.  The engine owns all of that once:
+//!
+//! * **params / param_lits** — host parameters plus their cached XLA
+//!   literals, rebuilt only after an optimizer update (the hot-path
+//!   optimization: ~MBs of weights are *not* re-converted per program call);
+//! * **program dispatch** — `step`, `part_fwd`, `part_bwd` handles resolved
+//!   from the manifest, with [`Engine::run_prog`] marshalling batch vectors
+//!   and extra tensors in each program's recorded input order;
+//! * **optimizer** — Eq. 5 global-batch weight normalization followed by an
+//!   AdamW update and a literal-cache refresh.
+//!
+//! Strategies ([`super::TreeTrainer`], [`super::BaselineTrainer`]) reduce to
+//! *planning*: they decide which batches exist (Forest Packing, partition
+//! relays, chain packing) and feed them through the engine.
+
+use std::sync::Arc;
+
+use crate::gateway::KvCache;
+use crate::runtime::{HostTensor, Program, Runtime};
+use xla::Literal;
+
+use super::adamw::{AdamW, AdamWConfig};
+use super::batch::{Batch, BatchOptions};
+use super::grads::GradBuffer;
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub model: String,
+    params: Vec<HostTensor>,
+    /// Cached parameter literals (rebuilt after each optimizer update).
+    param_lits: Vec<Literal>,
+    opt: AdamW,
+    step_prog: Arc<Program>,
+    fwd_prog: Option<Arc<Program>>,
+    bwd_prog: Option<Arc<Program>>,
+    capacity: usize,
+    past_capacity: usize,
+    n_attn: usize,
+    heads: usize,
+    head_dim: usize,
+    hybrid: Option<(usize, usize)>, // (chunk_size, conv_kernel)
+    step_count: u64,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<Runtime>, model: &str, opt_cfg: AdamWConfig) -> crate::Result<Self> {
+        let info = rt.manifest.model(model)?.clone();
+        let params = rt.manifest.load_params(model)?;
+        let step_prog = rt.find_program("step", model, 0)?;
+        let capacity = step_prog.info.capacity;
+        let (fwd_prog, bwd_prog, past_capacity) = match rt.manifest.find("part_fwd", model, 0) {
+            Ok(p) => {
+                let a = p.past;
+                (
+                    Some(rt.program(&p.name.clone())?),
+                    Some(rt.find_program("part_bwd", model, 0)?),
+                    a,
+                )
+            }
+            Err(_) => (None, None, 0),
+        };
+        let hybrid = if info.kind() == "hybrid" {
+            Some((info.chunk_size(), info.conv_kernel()))
+        } else {
+            None
+        };
+        let opt = AdamW::new(opt_cfg, &params);
+        let param_lits = params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            rt,
+            model: model.to_string(),
+            params,
+            param_lits,
+            opt,
+            step_prog,
+            fwd_prog,
+            bwd_prog,
+            capacity,
+            past_capacity,
+            n_attn: info.n_attn_layers,
+            heads: info.n_heads(),
+            head_dim: info.head_dim(),
+            hybrid,
+            step_count: 0,
+        })
+    }
+
+    // ── state accessors ────────────────────────────────────────────────
+
+    pub fn params(&self) -> &[HostTensor] {
+        &self.params
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Device token capacity of the `step` program.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// `(capacity, gateway rows)` of the partition programs, when exported.
+    pub fn part_caps(&self) -> Option<(usize, usize)> {
+        self.fwd_prog.as_ref().map(|p| (p.info.capacity, self.past_capacity))
+    }
+
+    pub fn has_part_programs(&self) -> bool {
+        self.fwd_prog.is_some()
+    }
+
+    /// `(chunk_size, conv_kernel)` for hybrid-GDN models.
+    pub fn hybrid(&self) -> Option<(usize, usize)> {
+        self.hybrid
+    }
+
+    pub fn kv_dims(&self) -> (usize, usize, usize) {
+        (self.n_attn, self.heads, self.head_dim)
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    pub fn batch_options(&self) -> BatchOptions {
+        BatchOptions {
+            chunk_size: self.hybrid.map(|(c, _)| c),
+            conv_kernel: self.hybrid.map(|(_, k)| k),
+            ..Default::default()
+        }
+    }
+
+    pub fn grad_buffer(&self) -> GradBuffer {
+        GradBuffer::zeros(&self.params)
+    }
+
+    // ── program dispatch ───────────────────────────────────────────────
+
+    /// Run a program: cached parameter literals + freshly-built batch/extra
+    /// literals, in the program's recorded input order.
+    pub fn run_prog(
+        &self,
+        prog: &Program,
+        batch: &Batch,
+        extra: &[(&str, HostTensor)],
+    ) -> crate::Result<Vec<HostTensor>> {
+        let c = batch.capacity;
+        let t = batch.past_len + c;
+        let mut owned: Vec<Literal> = Vec::new();
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(prog.info.inputs.len());
+        let mut p_count = 0usize;
+        for name in &prog.info.inputs {
+            if name.starts_with("param:") {
+                slots.push(None);
+                p_count += 1;
+                continue;
+            }
+            let tensor = if let Some(key) = name.strip_prefix("batch:") {
+                match key {
+                    "tokens" => HostTensor::i32(vec![c], batch.tokens.clone()),
+                    "prev_idx" => HostTensor::i32(vec![c], batch.prev_idx.clone()),
+                    "pos_ids" => HostTensor::i32(vec![c], batch.pos_ids.clone()),
+                    "weights" => HostTensor::f32(vec![c], batch.weights.clone()),
+                    "q_exit" => HostTensor::i32(vec![c], batch.q_exit.clone()),
+                    "k_order" => HostTensor::i32(vec![t], batch.k_order.clone()),
+                    "k_exit" => HostTensor::i32(vec![t], batch.k_exit.clone()),
+                    "k_bias" => HostTensor::f32(vec![t], batch.k_bias.clone()),
+                    "chunk_parent_map" => HostTensor::i32(
+                        vec![batch.chunk_parent_map.len()],
+                        batch.chunk_parent_map.clone(),
+                    ),
+                    "ssm_pad" => HostTensor::f32(vec![c], batch.ssm_pad.clone()),
+                    "conv_idx" => {
+                        let k = batch.conv_idx.len() / c;
+                        HostTensor::i32(vec![c, k], batch.conv_idx.clone())
+                    }
+                    other => anyhow::bail!("unknown batch key {other}"),
+                }
+            } else {
+                extra
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, t)| t.clone())
+                    .ok_or_else(|| anyhow::anyhow!("missing extra input {name}"))?
+            };
+            owned.push(tensor.to_literal()?);
+            slots.push(Some(owned.len() - 1));
+        }
+        anyhow::ensure!(p_count == self.param_lits.len(), "param count mismatch");
+        let mut refs: Vec<&Literal> = Vec::with_capacity(slots.len());
+        let mut p_iter = self.param_lits.iter();
+        for s in &slots {
+            refs.push(match s {
+                None => p_iter.next().unwrap(),
+                Some(i) => &owned[*i],
+            });
+        }
+        prog.run_literals(&refs)
+    }
+
+    /// One `step` call; accumulate its loss/weight/grad outputs.
+    pub fn run_step_into(&self, batch: &Batch, gb: &mut GradBuffer) -> crate::Result<()> {
+        let outputs = self.run_prog(self.step_prog.as_ref(), batch, &[])?;
+        gb.add_outputs(&outputs, 2);
+        Ok(())
+    }
+
+    /// One `part_fwd` call with the gathered gateway KV; returns the
+    /// partition-call KV cache (`[n_attn, capacity, heads, head_dim]`).
+    pub fn run_part_fwd(&self, batch: &Batch, k_in: &KvCache) -> crate::Result<KvCache> {
+        let fwd = self
+            .fwd_prog
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no part_fwd exported for {}", self.model))?;
+        let (na, h, hd) = (self.n_attn, self.heads, self.head_dim);
+        let a = self.past_capacity;
+        let c = fwd.info.capacity;
+        let extras = [
+            ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k.clone())),
+            ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v.clone())),
+        ];
+        let outputs = self.run_prog(fwd, batch, &extras)?;
+        let mut cache = KvCache::zeros(na, c, h, hd);
+        cache.k.copy_from_slice(outputs[2].as_f32());
+        cache.v.copy_from_slice(outputs[3].as_f32());
+        Ok(cache)
+    }
+
+    /// One `part_bwd` call: gateway KV + incoming KV cotangents; returns the
+    /// raw outputs `[loss_sum, weight_sum, grads.., d_k_in, d_v_in]`.
+    pub fn run_part_bwd(
+        &self,
+        batch: &Batch,
+        k_in: &KvCache,
+        d_k: Vec<f32>,
+        d_v: Vec<f32>,
+    ) -> crate::Result<Vec<HostTensor>> {
+        let bwd = self
+            .bwd_prog
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no part_bwd exported for {}", self.model))?;
+        let (na, h, hd) = (self.n_attn, self.heads, self.head_dim);
+        let a = self.past_capacity;
+        let c = bwd.info.capacity;
+        let extras = [
+            ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k.clone())),
+            ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v.clone())),
+            ("d_k_part", HostTensor::f32(vec![na, c, h, hd], d_k)),
+            ("d_v_part", HostTensor::f32(vec![na, c, h, hd], d_v)),
+            ("loss_cot", HostTensor::scalar_f32(1.0)),
+        ];
+        self.run_prog(bwd, batch, &extras)
+    }
+
+    // ── optimizer ──────────────────────────────────────────────────────
+
+    /// Eq. 5: normalize by the global-batch weight sum, clip/update with
+    /// AdamW, refresh the literal cache.  Returns the pre-clip grad norm.
+    pub fn apply_update(&mut self, gb: &GradBuffer) -> crate::Result<f64> {
+        let grads = gb.normalized();
+        let grad_norm = AdamW::grad_norm(&grads);
+        self.opt.update(&mut self.params, &grads);
+        self.param_lits = self
+            .params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.step_count += 1;
+        Ok(grad_norm)
+    }
+
+    pub fn set_lr(&mut self, lr: f64) {
+        self.opt.cfg.lr = lr;
+    }
+}

@@ -17,6 +17,9 @@ pub struct StepMetrics {
     pub flat_tokens: usize,
     pub wall: Duration,
     pub exec_calls: u64,
+    /// Packed `step` batches this step (Forest Packing): strictly fewer
+    /// than the tree count whenever packing merged trees into one call.
+    pub forest_batches: u64,
     pub grad_norm: f64,
 }
 
@@ -36,7 +39,7 @@ impl CsvSink {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             w,
-            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,wall_ms,exec_calls,grad_norm"
+            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,wall_ms,exec_calls,forest_batches,grad_norm"
         )?;
         Ok(Self { w })
     }
@@ -44,7 +47,7 @@ impl CsvSink {
     pub fn log(&mut self, m: &StepMetrics) -> crate::Result<()> {
         writeln!(
             self.w,
-            "{},{:.6},{:.3},{},{},{},{:.3},{},{:.5}",
+            "{},{:.6},{:.3},{},{},{},{:.3},{},{},{:.5}",
             m.step,
             m.loss,
             m.weight_sum,
@@ -53,6 +56,7 @@ impl CsvSink {
             m.flat_tokens,
             m.wall.as_secs_f64() * 1e3,
             m.exec_calls,
+            m.forest_batches,
             m.grad_norm
         )?;
         self.w.flush()?;

@@ -1,26 +1,37 @@
-//! Training loop components.
+//! Training loop components, layered as engine → strategies:
 //!
-//! * [`TreeTrainer`] — the paper's method: one DFS pass per tree when it
-//!   fits the device capacity; Redundancy-Free Tree Partitioning with the
-//!   differentiable-gateway gradient relay when it does not (§3.3, App. B).
+//! * [`Engine`] — the unified execution core: parameters + cached literals,
+//!   manifest-ordered program dispatch (`step`/`part_fwd`/`part_bwd`), the
+//!   f64 [`GradBuffer`] contract and the Eq. 5-normalized AdamW update.
+//! * [`TreeTrainer`] — the paper's method as a thin strategy: Forest Packing
+//!   of whole trees into shared `step` calls (§3.4), Redundancy-Free Tree
+//!   Partitioning with the differentiable-gateway gradient relay — packed
+//!   cross-tree — when a tree exceeds capacity (§3.3, App. B).
 //! * [`BaselineTrainer`] — the sep-avg baseline (Eq. 1): linearize every
 //!   root-to-leaf path and train with sequence packing (Krell et al.), the
-//!   "current standard practice" of §4.2.  Both trainers execute the *same*
-//!   exported programs — a packed batch of chains is just a prefix forest —
-//!   so the speedup comparison is apples-to-apples.
+//!   "current standard practice" of §4.2.  Both strategies execute the
+//!   *same* exported programs through the *same* engine and packer — a
+//!   packed batch of chains is just a prefix forest — so the speedup
+//!   comparison is apples-to-apples.
 //! * [`AdamW`] — host-side optimizer over f32 parameter tensors with f64
 //!   moments (master-weight style).
+//! * [`refmodel::RefModel`] — first-principles f64 reference executor over
+//!   batch metadata; powers the packing equivalence property tests in
+//!   environments without the native PJRT backend.
 
 pub mod adamw;
 pub mod baseline;
 pub mod batch;
+pub mod engine;
 pub mod grads;
 pub mod metrics;
+pub mod refmodel;
 pub mod tree_trainer;
 
 pub use adamw::{AdamW, AdamWConfig};
 pub use baseline::BaselineTrainer;
 pub use batch::{build_batch, Batch, BatchOptions};
+pub use engine::Engine;
 pub use grads::GradBuffer;
 pub use metrics::{CsvSink, StepMetrics};
-pub use tree_trainer::TreeTrainer;
+pub use tree_trainer::{GlobalPlan, TreeTrainer};

@@ -1,0 +1,290 @@
+//! A first-principles reference executor over [`Batch`] metadata.
+//!
+//! The exported `step` programs cannot run without the native PJRT backend
+//! and AOT artifacts, but the *contract* between the packing layers and the
+//! model is entirely in the batch metadata: the interval attention mask
+//! (`q_exit`/`k_order`/`k_exit`/`k_bias`), path positions, the `prev_idx`
+//! loss gather and the per-token λ weights.  `RefModel` is a tiny
+//! single-layer attention language model, forward **and** analytic backward
+//! in pure f64, that consumes exactly that contract:
+//!
+//! * `x_t = E[token_t] + pos(pos_ids_t)` (sinusoidal positions, no params);
+//! * masked softmax attention with the kernel's interval test
+//!   `(k_order[j] <= i) && (k_exit[j] >= q_exit[i])` plus additive `k_bias`;
+//! * per-token CE at `t` over the vocab from `o[prev_idx[t]] · E`, weighted
+//!   by `weights[t]` (skipped when `prev_idx < 0` or the weight is zero);
+//! * `loss_sum = Σ w_t · CE_t`, `weight_sum = Σ |w_t|` (RL advantages can
+//!   be negative), and `d_embed = ∂loss_sum/∂E` by manual backprop through
+//!   the CE head and the attention (query, key *and* value paths).
+//!
+//! Because every quantity is a deterministic function of the metadata, a
+//! packed prefix-forest batch must reproduce each member's per-token losses
+//! and gradients bit-for-bit-close to running the members one call at a
+//! time — the Forest Packing equivalence property
+//! (`rust/tests/forest_equivalence.rs`).  The XLA-level analog of the same
+//! property is checked by the `#[ignore]`d artifact tests.
+
+use crate::tree::dfs::NEG_INF;
+use crate::util::rng::Rng;
+
+use super::batch::Batch;
+
+pub struct RefModel {
+    pub vocab: usize,
+    pub dim: usize,
+    /// Embedding table, row-major `[vocab, dim]` — the model's only params.
+    pub embed: Vec<f64>,
+}
+
+/// Outputs of one reference `step` call.
+pub struct RefStep {
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    /// Per-slot CE loss (0 where no loss is wired) — *unweighted*.
+    pub per_token_loss: Vec<f64>,
+    /// f64 gradient of `loss_sum` w.r.t. the embedding table.
+    pub d_embed: Vec<f64>,
+}
+
+impl RefModel {
+    pub fn seeded(vocab: usize, dim: usize, seed: u64) -> Self {
+        let mut r = Rng::seed_from_u64(seed);
+        let embed = (0..vocab * dim).map(|_| 0.3 * r.normal()).collect();
+        Self { vocab, dim, embed }
+    }
+
+    fn pos_enc(&self, pos: i32) -> Vec<f64> {
+        let d = self.dim;
+        (0..d)
+            .map(|k| {
+                let freq = 1.0 / 10_000f64.powf(2.0 * (k / 2) as f64 / d as f64);
+                let x = pos as f64 * freq;
+                if k % 2 == 0 {
+                    x.sin()
+                } else {
+                    x.cos()
+                }
+            })
+            .collect()
+    }
+
+    /// Run one reference step over a (gateway-free) batch.
+    pub fn step(&self, batch: &Batch) -> crate::Result<RefStep> {
+        anyhow::ensure!(
+            batch.past_len == 0,
+            "RefModel::step covers gateway-free batches (past_len = 0)"
+        );
+        let c = batch.capacity;
+        let d = self.dim;
+        let scale = 1.0 / (d as f64).sqrt();
+
+        // x = embed[token] + pos_enc(pos)
+        let mut x = vec![0.0f64; c * d];
+        for t in 0..c {
+            let tok = batch.tokens[t] as usize;
+            anyhow::ensure!(tok < self.vocab, "token {tok} out of vocab {}", self.vocab);
+            let pe = self.pos_enc(batch.pos_ids[t]);
+            for k in 0..d {
+                x[t * d + k] = self.embed[tok * d + k] + pe[k];
+            }
+        }
+        let dot = |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(p, q)| p * q).sum() };
+
+        // masked softmax attention: o_i = sum_j p_ij x_j
+        let visible = |i: usize, j: usize| -> bool {
+            batch.k_order[j] <= i as i32 && batch.k_exit[j] >= batch.q_exit[i]
+        };
+        let mut probs: Vec<Vec<(usize, f64)>> = Vec::with_capacity(c);
+        let mut o = vec![0.0f64; c * d];
+        for i in 0..c {
+            let qi = &x[i * d..(i + 1) * d];
+            let mut entries: Vec<(usize, f64)> = Vec::new();
+            let mut m = f64::NEG_INFINITY;
+            for j in 0..c {
+                if !visible(i, j) || batch.k_bias[j] <= NEG_INF {
+                    continue;
+                }
+                let s = scale * dot(qi, &x[j * d..(j + 1) * d]) + batch.k_bias[j] as f64;
+                m = m.max(s);
+                entries.push((j, s));
+            }
+            let mut z = 0.0f64;
+            for e in entries.iter_mut() {
+                e.1 = (e.1 - m).exp();
+                z += e.1;
+            }
+            for e in entries.iter_mut() {
+                e.1 /= z;
+                for k in 0..d {
+                    o[i * d + k] += e.1 * x[e.0 * d + k];
+                }
+            }
+            probs.push(entries);
+        }
+
+        // CE head: loss at t gathers logits at prev_idx[t]
+        let mut loss_sum = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        let mut per_token_loss = vec![0.0f64; c];
+        let mut d_o = vec![0.0f64; c * d];
+        let mut d_embed = vec![0.0f64; self.vocab * d];
+        for t in 0..c {
+            let w = batch.weights[t] as f64;
+            weight_sum += w.abs();
+            let prev = batch.prev_idx[t];
+            if w == 0.0 || prev < 0 {
+                continue;
+            }
+            let p = prev as usize;
+            let op = &o[p * d..(p + 1) * d];
+            // logits over the vocab + stable logsumexp
+            let mut logits = vec![0.0f64; self.vocab];
+            let mut m = f64::NEG_INFINITY;
+            for (v, l) in logits.iter_mut().enumerate() {
+                *l = dot(op, &self.embed[v * d..(v + 1) * d]);
+                m = m.max(*l);
+            }
+            let z: f64 = logits.iter().map(|&l| (l - m).exp()).sum();
+            let lse = m + z.ln();
+            let target = batch.tokens[t] as usize;
+            let ce = lse - logits[target];
+            per_token_loss[t] = ce;
+            loss_sum += w * ce;
+            // dCE/dlogit = softmax - onehot; chain through logits = o_p · E
+            for v in 0..self.vocab {
+                let q = (logits[v] - lse).exp();
+                let dz = w * (q - if v == target { 1.0 } else { 0.0 });
+                if dz == 0.0 {
+                    continue;
+                }
+                for k in 0..d {
+                    d_o[p * d + k] += dz * self.embed[v * d + k];
+                    d_embed[v * d + k] += dz * op[k];
+                }
+            }
+        }
+
+        // attention backward: x is query, key and value at once
+        let mut d_x = vec![0.0f64; c * d];
+        for i in 0..c {
+            let doi = &d_o[i * d..(i + 1) * d];
+            if doi.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let entries = &probs[i];
+            // dp_ij = do_i · x_j ; ds_ij = p_ij (dp_ij - Σ_k p_ik dp_ik)
+            let dps: Vec<f64> =
+                entries.iter().map(|&(j, _)| dot(doi, &x[j * d..(j + 1) * d])).collect();
+            let mean: f64 = entries.iter().zip(&dps).map(|(&(_, p), &dp)| p * dp).sum();
+            for (&(j, p), &dp) in entries.iter().zip(&dps) {
+                // value path
+                for k in 0..d {
+                    d_x[j * d + k] += p * doi[k];
+                }
+                let ds = p * (dp - mean) * scale;
+                if ds == 0.0 {
+                    continue;
+                }
+                for k in 0..d {
+                    d_x[i * d + k] += ds * x[j * d + k];
+                    d_x[j * d + k] += ds * x[i * d + k];
+                }
+            }
+        }
+        for t in 0..c {
+            let tok = batch.tokens[t] as usize;
+            for k in 0..d {
+                d_embed[tok * d + k] += d_x[t * d + k];
+            }
+        }
+
+        Ok(RefStep { loss_sum, weight_sum, per_token_loss, d_embed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::batch::{build_batch, BatchOptions};
+    use crate::tree::{gen, serialize};
+
+    fn model() -> RefModel {
+        RefModel::seeded(64, 8, 42)
+    }
+
+    #[test]
+    fn losses_are_positive_and_pads_inert() {
+        let t = gen::uniform(1, 8, 5, 0.6);
+        let m = serialize(&t);
+        let b = build_batch(&m, m.size() + 9, &BatchOptions::default()).unwrap();
+        let out = model().step(&b).unwrap();
+        assert!(out.loss_sum > 0.0);
+        assert!(out.weight_sum > 0.0);
+        for t_pad in m.size()..b.capacity {
+            assert_eq!(out.per_token_loss[t_pad], 0.0);
+        }
+    }
+
+    #[test]
+    fn padding_is_invariant() {
+        // the same tree at two capacities gives identical loss and grads
+        let t = gen::uniform(2, 8, 5, 0.6);
+        let m = serialize(&t);
+        let rm = model();
+        let a = rm.step(&build_batch(&m, m.size(), &BatchOptions::default()).unwrap()).unwrap();
+        let b =
+            rm.step(&build_batch(&m, m.size() + 17, &BatchOptions::default()).unwrap()).unwrap();
+        assert_eq!(a.loss_sum, b.loss_sum);
+        assert_eq!(a.weight_sum, b.weight_sum);
+        assert_eq!(a.d_embed, b.d_embed);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let t = gen::uniform(3, 6, 4, 0.6);
+        let m = serialize(&t);
+        let b = build_batch(&m, m.size(), &BatchOptions::default()).unwrap();
+        let mut rm = model();
+        let base = rm.step(&b).unwrap();
+        let eps = 1e-6;
+        // probe a handful of embedding coordinates actually in use
+        for &probe in &[0usize, 7, 64, 129, 200] {
+            let probe = probe % rm.embed.len();
+            let orig = rm.embed[probe];
+            rm.embed[probe] = orig + eps;
+            let plus = rm.step(&b).unwrap().loss_sum;
+            rm.embed[probe] = orig - eps;
+            let minus = rm.step(&b).unwrap().loss_sum;
+            rm.embed[probe] = orig;
+            let numeric = (plus - minus) / (2.0 * eps);
+            let analytic = base.d_embed[probe];
+            assert!(
+                (numeric - analytic).abs() < 1e-4 * analytic.abs().max(1.0),
+                "coord {probe}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn advantage_sign_flips_gradient_direction() {
+        use crate::tree::{NodeSpec, TrajectoryTree};
+        let up = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![5; 3]).with_trainable(vec![0.0; 3]),
+            NodeSpec::new(0, vec![7, 7]).with_advantage(vec![1.0; 2]),
+        ])
+        .unwrap();
+        let down = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![5; 3]).with_trainable(vec![0.0; 3]),
+            NodeSpec::new(0, vec![7, 7]).with_advantage(vec![-1.0; 2]),
+        ])
+        .unwrap();
+        let rm = model();
+        let opts = BatchOptions::default();
+        let gu = rm.step(&build_batch(&serialize(&up), 8, &opts).unwrap()).unwrap();
+        let gd = rm.step(&build_batch(&serialize(&down), 8, &opts).unwrap()).unwrap();
+        assert!(gu.weight_sum > 0.0 && gd.weight_sum > 0.0);
+        for (a, b) in gu.d_embed.iter().zip(&gd.d_embed) {
+            assert!((a + b).abs() < 1e-12, "flip must negate grads: {a} vs {b}");
+        }
+    }
+}

@@ -1,322 +1,282 @@
-//! The Tree Training coordinator (the paper's method, end to end).
+//! The Tree Training strategy (the paper's method, end to end) on top of the
+//! shared execution [`Engine`].
 //!
-//! Per tree in the global batch:
+//! A global batch of trees becomes a stream of packed device batches:
 //!
-//! * **whole-tree path** — the DFS-serialized tree fits the device capacity:
-//!   one `step` program call computes every token exactly once (§3.2).
-//! * **partitioned path** — Redundancy-Free Tree Partitioning (§3.3):
-//!   bin-pack into connected subtrees, run `part_fwd` in topological order
-//!   relaying ancestor KV through host gateways, then `part_bwd` in reverse
-//!   order chaining KV cotangents with f64 accumulation (App. B.5/B.6).
-//!   Leaf partitions skip the forward entirely (their KV is never read), so
-//!   each tree costs `N_fwd = #non-leaf partitions` + `N_bwd = #partitions`
-//!   program calls and **every token is computed exactly once per pass**.
+//! * **forest path** — every tree whose DFS serialization fits the device
+//!   capacity is first-fit-decreasing packed with its batch-mates into
+//!   prefix-forest `step` batches ([`crate::partition::forest`]); one
+//!   program call computes every token of several trees exactly once
+//!   (§3.2 + §3.4 packing).  With `forest_packing` off, each tree gets its
+//!   own `step` call (the seed behavior).
+//! * **partitioned path** — Redundancy-Free Tree Partitioning (§3.3) for
+//!   trees exceeding the capacity: bin-pack into connected subtrees, pack
+//!   partition specs (cross-tree) into `part_fwd` calls executed in level
+//!   order relaying ancestor KV through host gateways, then `part_bwd` in
+//!   reverse order chaining KV cotangents with f64 accumulation
+//!   (App. B.5/B.6).  Calls whose members are all leaves skip the forward
+//!   entirely, and **every token is computed exactly once per pass**.
 //!
-//! Gradients from all trees accumulate in f64 and are normalized once by the
+//! Gradients from all calls accumulate in f64 and are normalized once by the
 //! global-batch weight sum, keeping tree/baseline updates directly
 //! comparable (Eq. 5 equivalence).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gateway::{KvCache, KvGradAccumulator};
+use crate::partition::forest::{self, ForestBatch, RelaySchedule};
 use crate::partition::{greedy_pack, plan, Plan};
-use crate::runtime::{HostTensor, Program, Runtime};
+use crate::runtime::{HostTensor, Runtime};
 use crate::tree::TrajectoryTree;
-use xla::Literal;
 
-use super::adamw::{AdamW, AdamWConfig};
-use super::batch::{Batch, BatchOptions};
+use super::adamw::AdamWConfig;
+use super::batch::Batch;
+use super::engine::Engine;
 use super::grads::GradBuffer;
 use super::metrics::StepMetrics;
 
 pub struct TreeTrainer {
-    pub rt: Arc<Runtime>,
-    pub model: String,
-    pub params: Vec<HostTensor>,
-    /// Cached parameter literals (rebuilt after each optimizer update) —
-    /// avoids re-converting ~MBs of weights on every program call.
-    param_lits: Vec<Literal>,
-    pub opt: AdamW,
-    step_prog: Arc<Program>,
-    fwd_prog: Option<Arc<Program>>,
-    bwd_prog: Option<Arc<Program>>,
-    pub capacity: usize,
-    pub past_capacity: usize,
+    pub engine: Engine,
     /// Partition-packing token budget (defaults to the exported capacity).
     /// Setting it below the capacity forces more partitions — used by the
     /// verify command and ablation benches.
     pub partition_budget: Option<usize>,
-    n_attn: usize,
-    heads: usize,
-    head_dim: usize,
-    hybrid: Option<(usize, usize)>, // (chunk_size, conv_kernel)
-    step_count: u64,
+    /// Cross-tree Forest Packing of whole trees and partition specs.
+    /// On by default; off reproduces the seed's one-call-per-tree path.
+    pub forest_packing: bool,
+}
+
+/// Everything one optimizer step will execute, fully planned up front: the
+/// packed `step` batches plus the partition-relay schedule.  Built by
+/// [`TreeTrainer::plan_global_batch`]; the coordinator treats it as an
+/// opaque stream of device batches.
+pub struct GlobalPlan {
+    pub forests: Vec<ForestBatch>,
+    pub relay: Option<RelayPlan>,
+    pub tree_tokens: usize,
+    pub flat_tokens: usize,
+}
+
+pub struct RelayPlan {
+    pub plans: Vec<Plan>,
+    pub schedule: RelaySchedule,
+}
+
+impl GlobalPlan {
+    /// Program calls this plan will execute (the packing metric).
+    pub fn program_calls(&self) -> usize {
+        self.forests.len()
+            + self.relay.as_ref().map_or(0, |r| r.schedule.program_calls())
+    }
 }
 
 impl TreeTrainer {
     pub fn new(rt: Arc<Runtime>, model: &str, opt_cfg: AdamWConfig) -> crate::Result<Self> {
-        let info = rt.manifest.model(model)?.clone();
-        let params = rt.manifest.load_params(model)?;
-        let step_prog = rt.find_program("step", model, 0)?;
-        let capacity = step_prog.info.capacity;
-        let (fwd_prog, bwd_prog, past_capacity) =
-            match rt.manifest.find("part_fwd", model, 0) {
-                Ok(p) => {
-                    let a = p.past;
-                    (
-                        Some(rt.program(&p.name.clone())?),
-                        Some(rt.find_program("part_bwd", model, 0)?),
-                        a,
-                    )
-                }
-                Err(_) => (None, None, 0),
-            };
-        let hybrid = if info.kind() == "hybrid" {
-            Some((info.chunk_size(), info.conv_kernel()))
-        } else {
-            None
-        };
-        let opt = AdamW::new(opt_cfg, &params);
-        let param_lits = params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<crate::Result<Vec<_>>>()?;
         Ok(Self {
-            rt,
-            model: model.to_string(),
-            params,
-            param_lits,
-            opt,
-            step_prog,
-            fwd_prog,
-            bwd_prog,
-            capacity,
-            past_capacity,
+            engine: Engine::new(rt, model, opt_cfg)?,
             partition_budget: None,
-            n_attn: info.n_attn_layers,
-            heads: info.n_heads(),
-            head_dim: info.head_dim(),
-            hybrid,
-            step_count: 0,
+            forest_packing: true,
         })
     }
 
-    pub fn batch_options(&self) -> BatchOptions {
-        BatchOptions {
-            chunk_size: self.hybrid.map(|(c, _)| c),
-            conv_kernel: self.hybrid.map(|(_, k)| k),
-            ..Default::default()
-        }
+    pub fn params(&self) -> &[HostTensor] {
+        self.engine.params()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.engine.capacity()
     }
 
     fn prepare(&self, tree: &TrajectoryTree) -> TrajectoryTree {
-        match self.hybrid {
+        match self.engine.hybrid() {
             Some((chunk, _)) => tree.pad_for_chunks(chunk, 0),
             None => tree.clone(),
         }
     }
 
-    /// Run a program: cached parameter literals + freshly-built batch/extra
-    /// literals, in the program's recorded input order.
-    fn run_prog(
-        &self,
-        prog: &Program,
-        batch: &Batch,
-        extra: &[(&str, HostTensor)],
-    ) -> crate::Result<Vec<HostTensor>> {
-        let c = batch.capacity;
-        let t = batch.past_len + c;
-        let mut owned: Vec<Literal> = Vec::new();
-        let mut slots: Vec<Option<usize>> = Vec::with_capacity(prog.info.inputs.len());
-        let mut p_count = 0usize;
-        for name in &prog.info.inputs {
-            if name.starts_with("param:") {
-                slots.push(None);
-                p_count += 1;
-                continue;
-            }
-            let tensor = if let Some(key) = name.strip_prefix("batch:") {
-                match key {
-                    "tokens" => HostTensor::i32(vec![c], batch.tokens.clone()),
-                    "prev_idx" => HostTensor::i32(vec![c], batch.prev_idx.clone()),
-                    "pos_ids" => HostTensor::i32(vec![c], batch.pos_ids.clone()),
-                    "weights" => HostTensor::f32(vec![c], batch.weights.clone()),
-                    "q_exit" => HostTensor::i32(vec![c], batch.q_exit.clone()),
-                    "k_order" => HostTensor::i32(vec![t], batch.k_order.clone()),
-                    "k_exit" => HostTensor::i32(vec![t], batch.k_exit.clone()),
-                    "k_bias" => HostTensor::f32(vec![t], batch.k_bias.clone()),
-                    "chunk_parent_map" => HostTensor::i32(
-                        vec![batch.chunk_parent_map.len()],
-                        batch.chunk_parent_map.clone(),
-                    ),
-                    "ssm_pad" => HostTensor::f32(vec![c], batch.ssm_pad.clone()),
-                    "conv_idx" => {
-                        let k = batch.conv_idx.len() / c;
-                        HostTensor::i32(vec![c, k], batch.conv_idx.clone())
-                    }
-                    other => anyhow::bail!("unknown batch key {other}"),
-                }
-            } else {
-                extra
-                    .iter()
-                    .find(|(n, _)| n == name)
-                    .map(|(_, t)| t.clone())
-                    .ok_or_else(|| anyhow::anyhow!("missing extra input {name}"))?
-            };
-            owned.push(tensor.to_literal()?);
-            slots.push(Some(owned.len() - 1));
-        }
-        anyhow::ensure!(p_count == self.param_lits.len(), "param count mismatch");
-        let mut refs: Vec<&Literal> = Vec::with_capacity(slots.len());
-        let mut p_iter = self.param_lits.iter();
-        for s in &slots {
-            refs.push(match s {
-                None => p_iter.next().unwrap(),
-                Some(i) => &owned[*i],
-            });
-        }
-        prog.run_literals(&refs)
-    }
-
-    /// Rebuild cached parameter literals after an optimizer update.
-    fn refresh_param_lits(&mut self) -> crate::Result<()> {
-        self.param_lits =
-            self.params.iter().map(|p| p.to_literal()).collect::<crate::Result<Vec<_>>>()?;
-        Ok(())
-    }
-
-    /// Whole-tree gradients: one `step` call (§3.2).
-    fn grads_whole_tree(&self, tree: &TrajectoryTree, gb: &mut GradBuffer) -> crate::Result<usize> {
-        let meta = crate::tree::serialize(tree);
-        let batch = super::batch::build_batch(&meta, self.capacity, &self.batch_options())?;
-        let outputs = self.run_prog(&self.step_prog, &batch, &[])?;
-        gb.add_outputs(&outputs, 2);
-        Ok(self.capacity)
-    }
-
-    /// Partitioned gradients with the differentiable-gateway relay (App. B).
-    fn grads_partitioned(
-        &self,
-        tree: &TrajectoryTree,
-        gb: &mut GradBuffer,
-    ) -> crate::Result<usize> {
-        let fwd = self
-            .fwd_prog
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("tree exceeds capacity and no part_fwd exported"))?;
-        let bwd = self.bwd_prog.as_ref().unwrap();
+    /// Partition one oversized (prepared) tree into an executable plan.
+    fn partition_tree(&self, tree: &TrajectoryTree) -> crate::Result<Plan> {
+        let (c, _) = self.engine.part_caps().ok_or_else(|| {
+            anyhow::anyhow!("tree exceeds capacity and no part_fwd exported")
+        })?;
         anyhow::ensure!(
-            self.hybrid.is_none(),
+            self.engine.hybrid().is_none(),
             "partitioned hybrid models are not exported (DESIGN.md §2)"
         );
-        let c = fwd.info.capacity;
-        let a = fwd.info.past;
         let budget = self.partition_budget.unwrap_or(c).min(c);
         // leave virtual-slot headroom: a node may cut several children
         let tree = tree.split_long_segments(budget - budget / 8);
         let assignment = greedy_pack(&tree, budget)?;
-        let plan = plan(&tree, &assignment)?;
+        plan(&tree, &assignment)
+    }
+
+    /// Plan the whole global batch as packed device batches (§3.4: each
+    /// batch is tree-complete; shuffling happens between trees upstream).
+    pub fn plan_global_batch(&self, trees: &[TrajectoryTree]) -> crate::Result<GlobalPlan> {
+        let capacity = self.engine.capacity();
+        let opts = self.engine.batch_options();
+        let mut metas = Vec::new();
+        let mut plans = Vec::new();
+        for tree in trees {
+            let prepared = self.prepare(tree);
+            if prepared.n_slots() <= capacity {
+                metas.push(crate::tree::serialize(&prepared));
+            } else {
+                plans.push(self.partition_tree(&prepared)?);
+            }
+        }
+        let forests = if self.forest_packing {
+            forest::pack_forest(&metas, capacity, &opts)?
+        } else {
+            (0..metas.len())
+                .map(|i| forest::concat_metas(&metas, &[i], capacity, &opts))
+                .collect::<crate::Result<Vec<_>>>()?
+        };
+        let relay = if plans.is_empty() {
+            None
+        } else {
+            let (c, a) = self.engine.part_caps().expect("partition_tree checked");
+            let schedule =
+                forest::schedule_partition_calls(&plans, c, a, self.forest_packing)?;
+            Some(RelayPlan { plans, schedule })
+        };
+        Ok(GlobalPlan {
+            forests,
+            relay,
+            tree_tokens: trees.iter().map(|t| t.n_tree()).sum(),
+            flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
+        })
+    }
+
+    /// Execute a plan's device batches, accumulating into `gb`.  Returns the
+    /// device token count (capacity slots actually dispatched).
+    pub fn run_plan(&self, plan: &GlobalPlan, gb: &mut GradBuffer) -> crate::Result<usize> {
+        let mut device_tokens = 0usize;
+        for fb in &plan.forests {
+            self.engine.run_step_into(&fb.batch, gb)?;
+            device_tokens += fb.batch.capacity;
+        }
+        if let Some(relay) = &plan.relay {
+            device_tokens += self.run_relay(relay, gb)?;
+        }
+        Ok(device_tokens)
+    }
+
+    /// The differentiable-gateway relay (App. B) over packed partition
+    /// calls.  Forward in level order, backward in reverse, KV cotangents
+    /// accumulated in f64 per producing call.
+    fn run_relay(&self, relay: &RelayPlan, gb: &mut GradBuffer) -> crate::Result<usize> {
+        let (c, a) = self.engine.part_caps().ok_or_else(|| {
+            anyhow::anyhow!("partitioned plan but no part programs exported")
+        })?;
+        let (na, h, hd) = self.engine.kv_dims();
+        let opts = self.engine.batch_options();
+        let plans = &relay.plans;
+        let sched = &relay.schedule;
+        let n_calls = sched.calls.len();
         let mut device_tokens = 0usize;
 
-        // topo forward: relay ancestor KV through host gateways
-        let n_parts = plan.parts.len();
-        let mut has_children = vec![false; n_parts];
-        for p in &plan.parts {
-            if p.parent_part >= 0 {
-                has_children[p.parent_part as usize] = true;
-            }
-        }
-        let (h, hd, na) = (self.heads, self.head_dim, self.n_attn);
-        // §3.3 peak-memory bound: a partition's KV cache lives only until
-        // every *descendant gateway row* referencing it has been gathered.
-        let mut pending_refs = vec![0usize; n_parts];
-        for p in &plan.parts {
-            let mut seen = std::collections::HashSet::new();
-            for &slot in &p.anc_slots {
-                let (op, _) = plan.owner[slot];
-                if seen.insert(op) {
-                    pending_refs[op as usize] += 1;
+        // §3.3 peak-memory discipline: a call's KV cache lives only until
+        // every consumer call referencing it has gathered its gateway rows.
+        let mut pending_refs = vec![0usize; n_calls];
+        for call in &sched.calls {
+            let mut producers = std::collections::HashSet::new();
+            for m in &call.members {
+                for &slot in &plans[m.tree].parts[m.part].anc_slots {
+                    let (op, _) = plans[m.tree].owner[slot];
+                    let (pc, _) = sched.location[m.tree][op as usize];
+                    producers.insert(pc);
                 }
             }
+            for pc in producers {
+                pending_refs[pc] += 1;
+            }
         }
-        let mut kv_caches: Vec<Option<KvCache>> = vec![None; n_parts];
-        let mut batches: Vec<Option<Batch>> = vec![None; n_parts];
-        let mut kv_ins: Vec<Option<KvCache>> = vec![None; n_parts];
+
+        let mut caches: Vec<Option<KvCache>> = (0..n_calls).map(|_| None).collect();
+        let mut batches: Vec<Option<Batch>> = (0..n_calls).map(|_| None).collect();
+        let mut kv_ins: Vec<Option<KvCache>> = (0..n_calls).map(|_| None).collect();
         let mut peak_kv_bytes = 0usize;
-        for &pi in &plan.topo {
-            let batch = plan.partition_batch(pi, c, a, &self.batch_options())?;
+
+        // forward: gather gateways from producer calls, run part_fwd where
+        // any member's KV will be read
+        for ci in 0..n_calls {
+            let call = &sched.calls[ci];
+            let batch = forest::packed_partition_batch(plans, call, c, a, &opts)?;
             let mut k_in = KvCache::zeros(na, a, h, hd);
-            self.gather_gateway(&plan, pi, &kv_caches, &mut k_in)?;
-            // release producer caches whose last reader this was
-            let mut seen = std::collections::HashSet::new();
-            for &slot in &plan.parts[pi].anc_slots {
-                let (op, _) = plan.owner[slot];
-                if seen.insert(op) {
-                    pending_refs[op as usize] -= 1;
-                    if pending_refs[op as usize] == 0 {
-                        kv_caches[op as usize] = None;
-                    }
+            let mut producers = std::collections::HashSet::new();
+            for m in &call.members {
+                let anc = &plans[m.tree].parts[m.part].anc_slots;
+                for (r, &slot) in anc.iter().enumerate() {
+                    let (op, ol) = plans[m.tree].owner[slot];
+                    let (pc, poff) = sched.location[m.tree][op as usize];
+                    let src = caches[pc].as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("producer call {pc} has no KV (schedule bug)")
+                    })?;
+                    k_in.gather_from(src, &[poff + ol as usize], m.gw_offset + r);
+                    producers.insert(pc);
                 }
             }
-            if has_children[pi] {
-                let extras = [
-                    ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k.clone())),
-                    ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v.clone())),
-                ];
-                let outputs = self.run_prog(fwd, &batch, &extras)?;
+            for pc in producers {
+                pending_refs[pc] -= 1;
+                if pending_refs[pc] == 0 {
+                    caches[pc] = None;
+                }
+            }
+            if call.needs_fwd {
+                caches[ci] = Some(self.engine.run_part_fwd(&batch, &k_in)?);
                 gb.exec_calls += 1;
-                let mut cache = KvCache::zeros(na, c, h, hd);
-                cache.k.copy_from_slice(outputs[2].as_f32());
-                cache.v.copy_from_slice(outputs[3].as_f32());
-                kv_caches[pi] = Some(cache);
                 device_tokens += c;
             }
-            peak_kv_bytes = peak_kv_bytes.max(
-                kv_caches.iter().flatten().map(|kc| kc.bytes()).sum::<usize>());
-            batches[pi] = Some(batch);
-            kv_ins[pi] = Some(k_in);
+            peak_kv_bytes = peak_kv_bytes
+                .max(caches.iter().flatten().map(|kc| kc.bytes()).sum::<usize>());
+            batches[ci] = Some(batch);
+            kv_ins[ci] = Some(k_in);
         }
-        crate::debug_!("partition relay: peak gateway KV {} bytes", peak_kv_bytes);
+        crate::debug_!(
+            "partition relay: {} calls, peak gateway KV {} bytes",
+            n_calls,
+            peak_kv_bytes
+        );
 
-        // reverse topo backward: chain KV cotangents (f64 accumulation);
-        // accumulators are allocated lazily and freed once consumed, so peak
-        // host memory again tracks one root-to-leaf chain, not the tree.
-        let mut accs: std::collections::HashMap<usize, KvGradAccumulator> =
-            std::collections::HashMap::new();
-        for &pi in plan.topo.iter().rev() {
-            let batch = batches[pi].take().unwrap();
-            let k_in = kv_ins[pi].take().unwrap();
-            let (d_k, d_v) = match accs.remove(&pi) {
+        // backward: reverse call order; cotangent accumulators are allocated
+        // lazily per producing call and freed once consumed
+        let n_grads = self.engine.n_params();
+        let mut accs: HashMap<usize, KvGradAccumulator> = HashMap::new();
+        for ci in (0..n_calls).rev() {
+            let call = &sched.calls[ci];
+            let batch = batches[ci].take().unwrap();
+            let k_in = kv_ins[ci].take().unwrap();
+            let (d_k, d_v) = match accs.remove(&ci) {
                 Some(acc) => acc.to_f32(),
                 None => {
                     let n = na * c * h * hd;
                     (vec![0.0; n], vec![0.0; n])
                 }
             };
-            let extras = [
-                ("k_in", HostTensor::f32(vec![na, a, h, hd], k_in.k)),
-                ("v_in", HostTensor::f32(vec![na, a, h, hd], k_in.v)),
-                ("d_k_part", HostTensor::f32(vec![na, c, h, hd], d_k)),
-                ("d_v_part", HostTensor::f32(vec![na, c, h, hd], d_v)),
-                ("loss_cot", HostTensor::scalar_f32(1.0)),
-            ];
-            let outputs = self.run_prog(bwd, &batch, &extras)?;
+            let outputs = self.engine.run_part_bwd(&batch, &k_in, d_k, d_v)?;
             gb.add_outputs(&outputs, 2);
             device_tokens += c;
-            // scatter d_kv_in to producer partitions
-            let n_grads = self.params.len();
+            // scatter every member's gateway cotangent rows to the calls
+            // that produced those KV rows
             let d_k_in = outputs[2 + n_grads].as_f32();
             let d_v_in = outputs[2 + n_grads + 1].as_f32();
-            // group gateway rows by producing partition
-            let mut by_owner: std::collections::HashMap<usize, Vec<(usize, usize)>> =
-                std::collections::HashMap::new();
-            for (row, &slot) in plan.parts[pi].anc_slots.iter().enumerate() {
-                let (op, ol) = plan.owner[slot];
-                by_owner.entry(op as usize).or_default().push((row, ol as usize));
+            let mut by_call: HashMap<usize, Vec<(usize, usize)>> = HashMap::new();
+            for m in &call.members {
+                let anc = &plans[m.tree].parts[m.part].anc_slots;
+                for (r, &slot) in anc.iter().enumerate() {
+                    let (op, ol) = plans[m.tree].owner[slot];
+                    let (pc, poff) = sched.location[m.tree][op as usize];
+                    by_call
+                        .entry(pc)
+                        .or_default()
+                        .push((m.gw_offset + r, poff + ol as usize));
+                }
             }
-            for (op, rows) in by_owner {
-                accs.entry(op)
+            for (pc, rows) in by_call {
+                accs.entry(pc)
                     .or_insert_with(|| KvGradAccumulator::zeros(na, c, h, hd))
                     .scatter_add(d_k_in, d_v_in, a, &rows);
             }
@@ -324,34 +284,27 @@ impl TreeTrainer {
         Ok(device_tokens)
     }
 
-    fn gather_gateway(
-        &self,
-        plan: &Plan,
-        pi: usize,
-        kv_caches: &[Option<KvCache>],
-        k_in: &mut KvCache,
-    ) -> crate::Result<()> {
-        for (row, &slot) in plan.parts[pi].anc_slots.iter().enumerate() {
-            let (op, ol) = plan.owner[slot];
-            let src = kv_caches[op as usize]
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("gateway producer {op} has no KV (topo bug)"))?;
-            k_in.gather_from(src, &[ol as usize], row);
-        }
-        Ok(())
-    }
-
-    /// Gradient contribution of one tree (whole or partitioned).
+    /// Gradient contribution of one tree (whole or partitioned) — the
+    /// single-tree entry point used by verify/benches; batch-level training
+    /// goes through [`Self::plan_global_batch`] for cross-tree packing.
     pub fn accumulate_tree(
         &self,
         tree: &TrajectoryTree,
         gb: &mut GradBuffer,
     ) -> crate::Result<usize> {
         let prepared = self.prepare(tree);
-        if prepared.n_slots() <= self.capacity {
-            self.grads_whole_tree(&prepared, gb)
+        if prepared.n_slots() <= self.engine.capacity() {
+            let meta = crate::tree::serialize(&prepared);
+            let fb = forest::concat_metas(
+                std::slice::from_ref(&meta),
+                &[0],
+                self.engine.capacity(),
+                &self.engine.batch_options(),
+            )?;
+            self.engine.run_step_into(&fb.batch, gb)?;
+            Ok(self.engine.capacity())
         } else {
-            self.grads_partitioned(&prepared, gb)
+            self.relay_prepared(&prepared, gb)
         }
     }
 
@@ -362,46 +315,52 @@ impl TreeTrainer {
         tree: &TrajectoryTree,
         gb: &mut GradBuffer,
     ) -> crate::Result<usize> {
-        self.grads_partitioned(&self.prepare(tree), gb)
+        self.relay_prepared(&self.prepare(tree), gb)
     }
 
-    /// One optimizer step over a global batch of trees (§3.4: each batch is
-    /// tree-complete; shuffling happens between trees upstream).
+    /// Partition-relay a single already-prepared tree.
+    fn relay_prepared(&self, prepared: &TrajectoryTree, gb: &mut GradBuffer) -> crate::Result<usize> {
+        let plans = vec![self.partition_tree(prepared)?];
+        let (c, a) = self.engine.part_caps().expect("partition_tree checked");
+        let schedule = forest::schedule_partition_calls(&plans, c, a, self.forest_packing)?;
+        self.run_relay(&RelayPlan { plans, schedule }, gb)
+    }
+
+    /// One optimizer step over a global batch of trees.
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
+        let plan = self.plan_global_batch(trees)?;
+        self.execute_plan(&plan)
+    }
+
+    /// Execute a pre-built [`GlobalPlan`] and apply the optimizer update.
+    pub fn execute_plan(&mut self, plan: &GlobalPlan) -> crate::Result<StepMetrics> {
         let t0 = Instant::now();
-        let mut gb = GradBuffer::zeros(&self.params);
-        let mut device_tokens = 0usize;
-        for tree in trees {
-            device_tokens += self.accumulate_tree(tree, &mut gb)?;
-        }
-        let grads = gb.normalized();
-        let grad_norm = AdamW::grad_norm(&grads);
-        self.opt.update(&mut self.params, &grads);
-        self.refresh_param_lits()?;
-        self.step_count += 1;
+        let mut gb = self.engine.grad_buffer();
+        let device_tokens = self.run_plan(plan, &mut gb)?;
+        let grad_norm = self.engine.apply_update(&gb)?;
         Ok(StepMetrics {
-            step: self.step_count,
+            step: self.engine.step_count(),
             loss: gb.mean_loss(),
             weight_sum: gb.weight_sum,
             device_tokens,
-            tree_tokens: trees.iter().map(|t| t.n_tree()).sum(),
-            flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
+            tree_tokens: plan.tree_tokens,
+            flat_tokens: plan.flat_tokens,
             wall: t0.elapsed(),
             exec_calls: gb.exec_calls,
+            forest_batches: plan.forests.len() as u64,
             grad_norm,
         })
     }
 
     /// Loss-only evaluation (no update); used for §4.7 scoring and tests.
     pub fn eval_loss(&self, trees: &[TrajectoryTree]) -> crate::Result<(f64, f64)> {
-        let mut gb = GradBuffer::zeros(&self.params);
-        for tree in trees {
-            self.accumulate_tree(tree, &mut gb)?;
-        }
+        let plan = self.plan_global_batch(trees)?;
+        let mut gb = self.engine.grad_buffer();
+        self.run_plan(&plan, &mut gb)?;
         Ok((gb.mean_loss(), gb.weight_sum))
     }
 
     pub fn set_lr(&mut self, lr: f64) {
-        self.opt.cfg.lr = lr;
+        self.engine.set_lr(lr);
     }
 }

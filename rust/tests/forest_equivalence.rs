@@ -1,0 +1,159 @@
+//! Forest Packing equivalence (the §3.4 packing invariant).
+//!
+//! Property: a packed prefix-forest `step` batch must produce **identical
+//! per-token losses and f64-accumulated gradients** to running its member
+//! trees one call at a time.  The model here is the first-principles
+//! [`RefModel`] reference executor (pure f64, same batch-metadata contract
+//! as the exported programs), so the property runs in any environment; the
+//! XLA-level analog lives in `runtime_equivalence.rs` behind `#[ignore]`.
+
+use tree_train::partition::forest::{self, ForestBatch};
+use tree_train::trainer::batch::{build_batch, BatchOptions};
+use tree_train::trainer::refmodel::RefModel;
+use tree_train::tree::dfs::DfsMeta;
+use tree_train::tree::{gen, serialize};
+
+const VOCAB: usize = 64;
+
+fn model(seed: u64) -> RefModel {
+    RefModel::seeded(VOCAB, 8, seed)
+}
+
+fn random_metas(seed: u64, n: usize) -> Vec<DfsMeta> {
+    (0..n as u64)
+        .map(|i| serialize(&gen::uniform(seed * 100 + i, 9, 5, 0.6)))
+        .collect()
+}
+
+/// Sum loss/weight/grads over a set of forest batches.
+fn run_packed(rm: &RefModel, batches: &[ForestBatch]) -> (f64, f64, Vec<f64>) {
+    let mut loss = 0.0;
+    let mut weight = 0.0;
+    let mut grads = vec![0.0f64; rm.embed.len()];
+    for fb in batches {
+        let out = rm.step(&fb.batch).unwrap();
+        loss += out.loss_sum;
+        weight += out.weight_sum;
+        for (g, d) in grads.iter_mut().zip(&out.d_embed) {
+            *g += d;
+        }
+    }
+    (loss, weight, grads)
+}
+
+/// Sum loss/weight/grads running every meta as its own `step` call.
+fn run_single(rm: &RefModel, metas: &[DfsMeta], capacity: usize) -> (f64, f64, Vec<f64>) {
+    let mut loss = 0.0;
+    let mut weight = 0.0;
+    let mut grads = vec![0.0f64; rm.embed.len()];
+    for m in metas {
+        let b = build_batch(m, capacity, &BatchOptions::default()).unwrap();
+        let out = rm.step(&b).unwrap();
+        loss += out.loss_sum;
+        weight += out.weight_sum;
+        for (g, d) in grads.iter_mut().zip(&out.d_embed) {
+            *g += d;
+        }
+    }
+    (loss, weight, grads)
+}
+
+#[test]
+fn packed_forest_matches_per_tree_execution() {
+    // property sweep: many random global batches, every one must pack at
+    // least two trees into one call and reproduce per-tree numerics
+    for seed in 0..12u64 {
+        let metas = random_metas(seed, 2 + (seed as usize % 4));
+        let max = metas.iter().map(|m| m.size()).max().unwrap();
+        let capacity = metas.iter().map(|m| m.size()).sum::<usize>().max(max) + 3;
+        let batches = forest::pack_forest(&metas, capacity, &BatchOptions::default()).unwrap();
+        assert!(
+            batches.iter().any(|b| b.members.len() >= 2),
+            "seed {seed}: capacity {capacity} must pack multiple trees"
+        );
+        assert!(batches.len() < metas.len(), "seed {seed}: packing must cut call count");
+
+        let rm = model(seed);
+        let (lp, wp, gp) = run_packed(&rm, &batches);
+        let (ls, ws, gs) = run_single(&rm, &metas, capacity);
+        assert!(
+            (lp - ls).abs() <= 1e-9 * ls.abs().max(1.0),
+            "seed {seed}: loss {lp} vs {ls}"
+        );
+        assert!(
+            (wp - ws).abs() <= 1e-9 * ws.abs().max(1.0),
+            "seed {seed}: weight {wp} vs {ws}"
+        );
+        for (i, (a, b)) in gp.iter().zip(&gs).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-9 * b.abs().max(1e-6),
+                "seed {seed}: grad[{i}] {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_forest_per_token_losses_identical() {
+    // per-token CE at member offset + t must equal the singleton CE at t —
+    // the visible key set and its iteration order are identical, so the
+    // floating-point computation is the same op sequence
+    for seed in 20..26u64 {
+        let metas = random_metas(seed, 3);
+        let capacity = metas.iter().map(|m| m.size()).sum::<usize>() + 7;
+        let fb =
+            forest::concat_metas(&metas, &[0, 1, 2], capacity, &BatchOptions::default()).unwrap();
+        let rm = model(seed);
+        let packed = rm.step(&fb.batch).unwrap();
+        for m in &fb.members {
+            let single = rm
+                .step(&build_batch(&metas[m.source], m.len, &BatchOptions::default()).unwrap())
+                .unwrap();
+            for t in 0..m.len {
+                let a = packed.per_token_loss[m.slot_offset + t];
+                let b = single.per_token_loss[t];
+                assert!(
+                    (a - b).abs() <= 1e-12 * b.abs().max(1e-12),
+                    "seed {seed} member {} token {t}: {a} vs {b}",
+                    m.source
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packing_order_does_not_change_the_update() {
+    // FFD reorders trees by size; the accumulated global-batch gradient
+    // must not depend on member order (Eq. 5 is a sum)
+    let metas = random_metas(7, 4);
+    let capacity = metas.iter().map(|m| m.size()).sum::<usize>() + 5;
+    let rm = model(7);
+    let fwd =
+        forest::concat_metas(&metas, &[0, 1, 2, 3], capacity, &BatchOptions::default()).unwrap();
+    let rev =
+        forest::concat_metas(&metas, &[3, 2, 1, 0], capacity, &BatchOptions::default()).unwrap();
+    let a = rm.step(&fwd.batch).unwrap();
+    let b = rm.step(&rev.batch).unwrap();
+    assert!((a.loss_sum - b.loss_sum).abs() <= 1e-9 * a.loss_sum.abs().max(1.0));
+    assert!((a.weight_sum - b.weight_sum).abs() <= 1e-9 * a.weight_sum.max(1.0));
+    for (x, y) in a.d_embed.iter().zip(&b.d_embed) {
+        assert!((x - y).abs() <= 1e-9 * y.abs().max(1e-6));
+    }
+}
+
+#[test]
+fn capacity_padding_is_inert_in_packed_batches() {
+    let metas = random_metas(31, 2);
+    let tight: usize = metas.iter().map(|m| m.size()).sum();
+    let rm = model(31);
+    let small =
+        forest::concat_metas(&metas, &[0, 1], tight, &BatchOptions::default()).unwrap();
+    let padded =
+        forest::concat_metas(&metas, &[0, 1], tight + 23, &BatchOptions::default()).unwrap();
+    let a = rm.step(&small.batch).unwrap();
+    let b = rm.step(&padded.batch).unwrap();
+    assert_eq!(a.loss_sum, b.loss_sum);
+    assert_eq!(a.weight_sum, b.weight_sum);
+    assert_eq!(a.d_embed, b.d_embed);
+}

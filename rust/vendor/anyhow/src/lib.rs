@@ -1,0 +1,198 @@
+//! Vendored API-compatible subset of the `anyhow` crate.
+//!
+//! The training container builds with no registry access, so the coordinator
+//! vendors the exact error-handling surface it uses:
+//!
+//! * [`Error`] — boxed dynamic error with a source chain, `Display`/`Debug`.
+//! * [`Result`] — `Result<T, Error>` alias with a default error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//! * blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts any standard error (mirrors upstream; like upstream, `Error`
+//!   itself deliberately does **not** implement `std::error::Error`, which
+//!   is what keeps the blanket impl coherent).
+//!
+//! Anything not listed (context methods, downcasting, backtraces) is out of
+//! scope; code in this workspace must not rely on it.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error (subset of `anyhow::Error`).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// String-message error used by the `anyhow!` family.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Build an error from a display-able message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Self { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap any standard error value.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Self { inner: Box::new(error) }
+    }
+
+    /// Iterate the source chain starting at this error.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> = Some(self.inner.as_ref());
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // upstream-style report: message, then the source chain
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Self { inner: Box::new(error) }
+    }
+}
+
+/// `Result` with a default boxed error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    fn guarded(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("bailed with code {}", 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert!(guarded(-1).unwrap_err().to_string().contains("-1"));
+        assert!(bails().unwrap_err().to_string().contains("code 7"));
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(e.to_string(), "plain message");
+    }
+
+    #[test]
+    fn error_chain_reported_in_debug() {
+        #[derive(Debug)]
+        struct Leaf;
+        impl fmt::Display for Leaf {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("leaf cause")
+            }
+        }
+        impl StdError for Leaf {}
+        #[derive(Debug)]
+        struct Mid(Leaf);
+        impl fmt::Display for Mid {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("mid layer")
+            }
+        }
+        impl StdError for Mid {
+            fn source(&self) -> Option<&(dyn StdError + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e = Error::new(Mid(Leaf));
+        let report = format!("{e:?}");
+        assert!(report.contains("mid layer") && report.contains("leaf cause"));
+        assert_eq!(e.chain().count(), 2);
+    }
+}

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use tree_train::coordinator::{Coordinator, Mode, RunConfig, SyntheticSpec};
+use tree_train::coordinator::{Coordinator, CorpusFormat, Mode, RunConfig, SyntheticSpec};
 use tree_train::runtime::Runtime;
 use tree_train::tree::metrics;
 
@@ -43,6 +43,8 @@ fn main() -> anyhow::Result<()> {
             warmup: steps / 10,
             seed: 7,
             corpus: None,
+            corpus_format: CorpusFormat::Trees,
+            ingest: Default::default(),
             synthetic: Some(SyntheticSpec {
                 overlap: "high".into(),
                 n_trees: 48,

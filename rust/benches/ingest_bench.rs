@@ -1,0 +1,118 @@
+//! Ingestion throughput + dedup accounting.
+//!
+//! Builds a synthetic agentic rollout corpus (linearized branches, shared
+//! prefixes repeated — what a runtime logs), folds it through the
+//! per-session radix trie, and reports tokens/sec plus the measured
+//! prefix-reuse ratio (rollout tokens in / tree tokens out).  Asserts the
+//! ratio is strictly above 1.0 — the acceptance gate for the ingestion
+//! subsystem — and writes `results/BENCH_ingest.json`.
+
+use std::time::Duration;
+
+use tree_train::ingest::{
+    ingest_stream, records_from_tree, IngestConfig, RolloutReader, RolloutRecord,
+};
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+use tree_train::util::json::Json;
+
+fn main() {
+    println!("== ingest benches ==");
+
+    // mixed-regime corpus: think-mode (high POR) + tool-fanout sessions
+    let trees: Vec<_> = (0..48u64)
+        .map(|i| {
+            let ov = match i % 3 {
+                0 => gen::Overlap::High,
+                1 => gen::Overlap::Medium,
+                _ => gen::Overlap::Low,
+            };
+            gen::agentic(i, ov, 8, 512)
+        })
+        .collect();
+    let records: Vec<RolloutRecord> = trees
+        .iter()
+        .enumerate()
+        .flat_map(|(i, t)| records_from_tree(t, &format!("sess-{i:04}")))
+        .collect();
+    let corpus: String = records.iter().map(|r| r.to_json().to_string() + "\n").collect();
+    let rollout_tokens: usize = records.iter().map(|r| r.len()).sum();
+
+    let cfg = IngestConfig::default();
+    let fold = || {
+        let mut n = 0usize;
+        let stats = ingest_stream(RolloutReader::new(corpus.as_bytes(), "mem"), &cfg, |t| {
+            n += t.len();
+            Ok(())
+        })
+        .unwrap();
+        (n, stats)
+    };
+
+    let (_, stats) = fold();
+    let reuse = stats.reuse_ratio();
+    println!(
+        "{} records / {} sessions: {} -> {} tokens ({} trees, {} nodes, \
+         {} splits, {} subsumed)",
+        stats.records_in,
+        stats.sessions,
+        stats.rollout_tokens_in,
+        stats.tree_tokens_out,
+        stats.trees_out,
+        stats.nodes_out,
+        stats.split_events,
+        stats.subsumed_records
+    );
+    println!("measured prefix-reuse ratio: {reuse:.2}x");
+    assert!(
+        reuse > 1.0,
+        "ingest must dedup a branching corpus (got {reuse})"
+    );
+    assert!(
+        stats.tree_tokens_out < stats.rollout_tokens_in,
+        "tree tokens out must be strictly below rollout tokens in"
+    );
+
+    // full pipeline: JSON parse + trie fold + tree emission
+    let budget = Duration::from_millis(400);
+    let r_fold = bench("ingest_stream_48_sessions", budget, || fold().0);
+    r_fold.report_throughput(rollout_tokens, "tok");
+    let tokens_per_sec = rollout_tokens as f64 / r_fold.mean.as_secs_f64();
+
+    // trie-only (pre-parsed records): isolates the radix-trie fold cost
+    let r_trie = bench("prefix_store_fold_only", budget, || {
+        use tree_train::ingest::PrefixStore;
+        let mut store = PrefixStore::new();
+        let mut session = "";
+        let mut total = 0usize;
+        for r in &records {
+            if r.session != session {
+                session = &r.session;
+                store = PrefixStore::new();
+            }
+            store.insert(&r.tokens, &r.trainable, &r.advantage).unwrap();
+            total += store.n_trees();
+        }
+        total
+    });
+    r_trie.report_throughput(rollout_tokens, "tok");
+
+    let out = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out).ok();
+    let json = Json::obj(vec![
+        ("sessions", Json::num(stats.sessions as f64)),
+        ("records", Json::num(stats.records_in as f64)),
+        ("rollout_tokens", Json::num(stats.rollout_tokens_in as f64)),
+        ("tree_tokens", Json::num(stats.tree_tokens_out as f64)),
+        ("trees", Json::num(stats.trees_out as f64)),
+        ("nodes", Json::num(stats.nodes_out as f64)),
+        ("split_events", Json::num(stats.split_events as f64)),
+        ("reuse_ratio", Json::num(reuse)),
+        ("tokens_per_sec", Json::num(tokens_per_sec)),
+        ("ingest_mean_us", Json::num(r_fold.mean.as_micros() as f64)),
+        ("trie_only_mean_us", Json::num(r_trie.mean.as_micros() as f64)),
+    ]);
+    let path = out.join("BENCH_ingest.json");
+    std::fs::write(&path, json.to_string_pretty()).unwrap();
+    println!("-> {}", path.display());
+}

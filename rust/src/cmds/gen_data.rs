@@ -1,7 +1,14 @@
 //! `tree-train gen-data` — synthetic agentic corpora (JSONL).
+//!
+//! Default output is the tree corpus format (`tree/io.rs`).  With
+//! `--linearize`, every generated tree is instead spelled as raw rollout
+//! records — one line per root-to-leaf branch, shared prefixes repeated,
+//! session id per tree — i.e. what an agentic runtime actually logs and
+//! what `tree-train ingest` folds back (the smoke-test inverse pair).
 
+use tree_train::ingest;
 use tree_train::tree::gen::{self, Overlap};
-use tree_train::tree::{io, metrics};
+use tree_train::tree::{io, metrics, TrajectoryTree};
 
 pub fn run(
     overlap: &str,
@@ -9,9 +16,10 @@ pub fn run(
     turns: usize,
     vocab: i32,
     seed: u64,
+    linearize: bool,
     out: &std::path::Path,
 ) -> anyhow::Result<()> {
-    let trees: Vec<_> = (0..n_trees)
+    let trees: Vec<TrajectoryTree> = (0..n_trees)
         .map(|i| {
             let s = seed.wrapping_add(i as u64);
             if let Some(p) = overlap.strip_prefix("por:") {
@@ -26,6 +34,27 @@ pub fn run(
             }
         })
         .collect();
+    if linearize {
+        let records: Vec<ingest::RolloutRecord> = trees
+            .iter()
+            .enumerate()
+            .flat_map(|(i, t)| ingest::records_from_tree(t, &format!("sess-{i:05}")))
+            .collect();
+        ingest::save_rollouts(&records, out)?;
+        let rollout_tokens: usize = records.iter().map(|r| r.len()).sum();
+        let tree_tokens: usize = trees.iter().map(|t| t.n_tree()).sum();
+        println!(
+            "wrote {} rollout records ({} sessions) to {} ({} linear tokens, \
+             {} unique — ingest should recover ~{:.2}x reuse)",
+            records.len(),
+            trees.len(),
+            out.display(),
+            rollout_tokens,
+            tree_tokens,
+            rollout_tokens as f64 / tree_tokens as f64
+        );
+        return Ok(());
+    }
     io::save_corpus(&trees, out)?;
     println!(
         "wrote {} trees to {} (dataset POR {:.1}%, bound {:.2}x)",

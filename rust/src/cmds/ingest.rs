@@ -1,0 +1,58 @@
+//! `tree-train ingest` — fold raw linear rollout logs into a tree corpus.
+//!
+//! Streams `--in rollouts.jsonl` (one [`RolloutRecord`] per line) through
+//! the per-session radix trie and writes `--out trees.jsonl` tree by tree,
+//! so neither side of the conversion is ever fully resident.  Prints the
+//! measured prefix-reuse ratio; `--stats` adds the full dedup breakdown and
+//! `--stats-json FILE` persists it for CI-style assertions.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use tree_train::ingest::{ingest_stream, IngestConfig, RolloutReader};
+
+pub fn run(
+    input: &Path,
+    output: &Path,
+    cfg: IngestConfig,
+    stats_flag: bool,
+    stats_json: Option<&Path>,
+) -> anyhow::Result<()> {
+    // open the input first: a bad --in must not truncate an existing --out
+    let reader = RolloutReader::open(input)?;
+    let f = std::fs::File::create(output)?;
+    let mut w = std::io::BufWriter::new(f);
+    let stats = ingest_stream(reader, &cfg, |tree| {
+        writeln!(w, "{}", tree.to_json().to_string())?;
+        Ok(())
+    })?;
+    w.flush()?;
+
+    println!(
+        "ingested {} rollouts ({} sessions) -> {} trees: {} -> {} tokens, \
+         measured prefix-reuse {:.2}x",
+        stats.records_in,
+        stats.sessions,
+        stats.trees_out,
+        stats.rollout_tokens_in,
+        stats.tree_tokens_out,
+        stats.reuse_ratio()
+    );
+    if stats.reuse_ratio() <= 1.0 {
+        println!(
+            "note: no prefix overlap found — rollouts never shared a prefix \
+             within a session (tree training will match baseline cost)"
+        );
+    }
+    if stats_flag {
+        println!(
+            "  nodes: {}  splits: {}  subsumed records: {}  trimmed tokens: {}",
+            stats.nodes_out, stats.split_events, stats.subsumed_records, stats.trimmed_tokens
+        );
+    }
+    if let Some(p) = stats_json {
+        std::fs::write(p, stats.to_json().to_string_pretty())?;
+        println!("-> {}", p.display());
+    }
+    Ok(())
+}

@@ -8,6 +8,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod gen_data;
+pub mod ingest;
 pub mod mem;
 pub mod quality;
 pub mod train;

@@ -73,7 +73,7 @@ pub fn run(
         .iter()
         .map(|t| {
             let path = t.longest_path();
-            tree_train::trainer::baseline::path_chain(t, &path)
+            tree_train::tree::path_chain(t, &path)
         })
         .collect();
     let evals: Vec<Vec<TrajectoryTree>> = (0..SKILLS.len())

@@ -35,6 +35,14 @@ pub struct RunConfig {
     pub seed: u64,
     /// JSONL corpus path; when absent, `synthetic` drives generation.
     pub corpus: Option<PathBuf>,
+    /// `"trees"` (default): the corpus is already tree-structured.
+    /// `"rollouts"`: raw linear rollout records, folded through the ingest
+    /// radix trie at load time so a run trains straight from agentic logs.
+    pub corpus_format: CorpusFormat,
+    /// Ingestion knobs for the rollouts format (JSON key `ingest`:
+    /// `{"max_seq_len": N, "max_open_sessions": N}`; defaults otherwise —
+    /// raise `max_open_sessions` for heavily interleaved logs).
+    pub ingest: crate::ingest::IngestConfig,
     pub synthetic: Option<SyntheticSpec>,
     pub metrics_csv: Option<PathBuf>,
     /// Cross-tree Forest Packing (default on; off = seed's per-tree calls).
@@ -57,6 +65,33 @@ impl RunConfig {
             warmup: v.get("warmup").and_then(|x| x.as_u64()).unwrap_or(0),
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
             corpus: v.get("corpus").and_then(|x| x.as_str()).map(PathBuf::from),
+            corpus_format: match v.get("corpus_format").and_then(|x| x.as_str()).unwrap_or("trees")
+            {
+                "trees" => CorpusFormat::Trees,
+                "rollouts" => CorpusFormat::Rollouts,
+                other => anyhow::bail!("unknown corpus_format {other} (trees|rollouts)"),
+            },
+            ingest: match v.get("ingest") {
+                Some(i) => {
+                    let cfg = crate::ingest::IngestConfig {
+                        max_seq_len: i.get("max_seq_len").and_then(|x| x.as_usize()),
+                        max_open_sessions: i
+                            .get("max_open_sessions")
+                            .and_then(|x| x.as_usize())
+                            .unwrap_or(crate::ingest::IngestConfig::default().max_open_sessions),
+                    };
+                    anyhow::ensure!(
+                        cfg.max_seq_len != Some(0),
+                        "ingest.max_seq_len must be >= 1"
+                    );
+                    anyhow::ensure!(
+                        cfg.max_open_sessions >= 1,
+                        "ingest.max_open_sessions must be >= 1"
+                    );
+                    cfg
+                }
+                None => Default::default(),
+            },
             synthetic: match v.get("synthetic") {
                 Some(s) => Some(SyntheticSpec::from_json(s)?),
                 None => None,
@@ -65,6 +100,15 @@ impl RunConfig {
             forest_packing: v.get("forest_packing").and_then(|x| x.as_bool()).unwrap_or(true),
         })
     }
+}
+
+/// On-disk layout of the `corpus` file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusFormat {
+    /// JSONL of `TrajectoryTree`s (`tree/io.rs`).
+    Trees,
+    /// JSONL of linear `RolloutRecord`s, ingested at load time.
+    Rollouts,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -168,7 +212,26 @@ impl Coordinator {
             Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),
         };
         let data = if let Some(path) = &cfg.corpus {
-            crate::tree::io::load_corpus(path)?
+            match cfg.corpus_format {
+                // line-by-line load with `path:line` parse errors; the tree
+                // set itself stays resident for cross-epoch shuffling (§3.4)
+                CorpusFormat::Trees => crate::tree::io::load_corpus_iter(path)?
+                    .collect::<crate::Result<Vec<_>>>()?,
+                CorpusFormat::Rollouts => {
+                    let (trees, stats) = crate::ingest::fold_corpus(path, &cfg.ingest)?;
+                    crate::info!(
+                        "ingest: {} rollouts ({} sessions) -> {} trees, measured \
+                         prefix-reuse {:.2}x ({} -> {} tokens)",
+                        stats.records_in,
+                        stats.sessions,
+                        stats.trees_out,
+                        stats.reuse_ratio(),
+                        stats.rollout_tokens_in,
+                        stats.tree_tokens_out
+                    );
+                    trees
+                }
+            }
         } else if let Some(spec) = &cfg.synthetic {
             spec.generate(cfg.seed)?
         } else {

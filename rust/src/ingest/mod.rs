@@ -1,0 +1,116 @@
+//! Trajectory ingestion: fold raw *linear* rollout logs into trees (§3's
+//! "ingest tree-structured data natively" input stage, see docs/ingest.md).
+//!
+//! Agentic runtimes log one record per executed branch
+//! ([`RolloutRecord`] JSONL: session id + token/trainable/advantage
+//! triples), recomputing nothing but *recording* every shared prefix K
+//! times.  This module is the front door that recovers the tree the
+//! downstream stack trains on:
+//!
+//! ```text
+//! rollouts.jsonl ──RolloutReader──> records ──SessionFolder──> trees.jsonl
+//!   (linear, N_flat tokens)          (radix trie per session)   (N_tree)
+//! ```
+//!
+//! * [`trie::PrefixStore`] — token-level radix trie; branches merge over a
+//!   prefix only while token *and* supervision channels agree bit-for-bit
+//!   (split at the first divergence), so gradient restoration over merged
+//!   prefixes is exact.  Single-child chains are compacted and paths can
+//!   be trimmed to a max sequence length at emission.
+//! * [`stream::SessionFolder`] — bounded-memory streaming: at most
+//!   [`IngestConfig::max_open_sessions`] tries live at once (LRU
+//!   eviction), so corpus size never bounds resident memory.
+//! * [`IngestStats`] — the measured outcome: `rollout_tokens_in /
+//!   tree_tokens_out` is the corpus' realized prefix-reuse ratio, the
+//!   ingestion-side counterpart of `N_flat / N_tree` (§4.1).
+//!
+//! Entry points: [`fold_corpus`] (in-memory), [`ingest_stream`]
+//! (tree-at-a-time sink), and the `tree-train ingest` subcommand.
+
+pub mod record;
+pub mod stream;
+pub mod trie;
+
+pub use record::{records_from_tree, save_rollouts, RolloutRecord};
+pub use stream::{fold_corpus, ingest_stream, RolloutReader, SessionFolder};
+pub use trie::PrefixStore;
+
+use crate::util::json::Json;
+
+/// Ingestion knobs.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Trim every root-to-leaf path to this many tokens (`None` = keep all).
+    pub max_seq_len: Option<usize>,
+    /// Bounded-memory cap on simultaneously open session tries; the
+    /// least-recently-touched session is flushed beyond it.
+    pub max_open_sessions: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self { max_seq_len: None, max_open_sessions: 64 }
+    }
+}
+
+/// Corpus-level dedup accounting (tokens in vs tree tokens out).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    pub records_in: u64,
+    pub rollout_tokens_in: u64,
+    /// Session flushes (a re-opened evicted session counts again).
+    pub sessions: u64,
+    pub trees_out: u64,
+    pub nodes_out: u64,
+    pub tree_tokens_out: u64,
+    /// Mid-segment divergences (token or supervision) that split a node.
+    pub split_events: u64,
+    /// Records fully covered by an existing branch (strict prefixes).
+    pub subsumed_records: u64,
+    /// Tokens dropped by `max_seq_len` trimming.
+    pub trimmed_tokens: u64,
+}
+
+impl IngestStats {
+    /// Measured prefix-reuse ratio: linear tokens logged per unique tree
+    /// token kept — the ingestion-side `N_flat / N_tree` (> 1.0 whenever
+    /// any prefix was shared; == 1.0 for branch-free corpora).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.tree_tokens_out == 0 {
+            return 1.0;
+        }
+        self.rollout_tokens_in as f64 / self.tree_tokens_out as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("records_in", Json::num(self.records_in as f64)),
+            ("rollout_tokens_in", Json::num(self.rollout_tokens_in as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("trees_out", Json::num(self.trees_out as f64)),
+            ("nodes_out", Json::num(self.nodes_out as f64)),
+            ("tree_tokens_out", Json::num(self.tree_tokens_out as f64)),
+            ("split_events", Json::num(self.split_events as f64)),
+            ("subsumed_records", Json::num(self.subsumed_records as f64)),
+            ("trimmed_tokens", Json::num(self.trimmed_tokens as f64)),
+            ("reuse_ratio", Json::num(self.reuse_ratio())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_ratio_guards_and_serializes() {
+        let mut s = IngestStats::default();
+        assert_eq!(s.reuse_ratio(), 1.0);
+        s.rollout_tokens_in = 300;
+        s.tree_tokens_out = 100;
+        assert!((s.reuse_ratio() - 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("reuse_ratio").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("tree_tokens_out").unwrap().as_u64(), Some(100));
+    }
+}

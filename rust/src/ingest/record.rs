@@ -1,0 +1,152 @@
+//! The raw rollout record format (ingestion input).
+//!
+//! One JSONL line per *executed branch*, exactly as an agentic runtime logs
+//! it: a session id plus parallel token / trainable / advantage vectors for
+//! the full linearized trajectory, shared prefixes repeated verbatim across
+//! the session's branches.  Supervision vectors are omitted on disk when
+//! they are all-1.0, mirroring the `NodeSpec` corpus encoding.
+//!
+//! ```json
+//! {"session": "task-42/try-3", "tokens": [1, 2, 3],
+//!  "trainable": [0.0, 1.0, 1.0], "advantage": [1.0, 1.0, 0.5]}
+//! ```
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::tree::TrajectoryTree;
+use crate::util::json::Json;
+
+/// One linearized branch of one rollout session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RolloutRecord {
+    /// Rollouts sharing a session id are prefix-merge candidates; distinct
+    /// sessions never merge even on identical tokens.
+    pub session: String,
+    pub tokens: Vec<i32>,
+    /// 1.0 = model output (trained), 0.0 = user/environment input.
+    pub trainable: Vec<f32>,
+    /// Per-token RL advantage (1.0 for SFT).
+    pub advantage: Vec<f32>,
+}
+
+impl RolloutRecord {
+    pub fn new(session: impl Into<String>, tokens: Vec<i32>) -> Self {
+        let n = tokens.len();
+        Self { session: session.into(), tokens, trainable: vec![1.0; n], advantage: vec![1.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Flatten a chain tree ([`crate::tree::linearize`] output) into one
+    /// record.  Panics if `chain` branches — a record is a single branch by
+    /// definition.
+    pub fn from_chain(session: impl Into<String>, chain: &TrajectoryTree) -> Self {
+        assert_eq!(chain.num_paths(), 1, "a rollout record is one branch");
+        let mut rec = Self::new(session, Vec::with_capacity(chain.n_tree()));
+        for n in &chain.nodes {
+            let real = n.real_len();
+            rec.tokens.extend_from_slice(&n.tokens[..real]);
+            rec.trainable.extend_from_slice(&n.trainable[..real]);
+            rec.advantage.extend_from_slice(&n.advantage[..real]);
+        }
+        rec
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("session", Json::str(self.session.clone())),
+            ("tokens", Json::arr_i32(&self.tokens)),
+        ];
+        if self.trainable.iter().any(|&x| x != 1.0) {
+            kv.push(("trainable", Json::arr_f32(&self.trainable)));
+        }
+        if self.advantage.iter().any(|&x| x != 1.0) {
+            kv.push(("advantage", Json::arr_f32(&self.advantage)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let session = v.req_str("session")?.to_string();
+        let tokens = v.req("tokens")?.to_vec_i32()?;
+        let n = tokens.len();
+        anyhow::ensure!(n > 0, "empty rollout record");
+        let trainable = match v.get("trainable") {
+            Some(t) => t.to_vec_f32()?,
+            None => vec![1.0; n],
+        };
+        let advantage = match v.get("advantage") {
+            Some(t) => t.to_vec_f32()?,
+            None => vec![1.0; n],
+        };
+        anyhow::ensure!(
+            trainable.len() == n && advantage.len() == n,
+            "supervision vectors mismatch token count"
+        );
+        Ok(Self { session, tokens, trainable, advantage })
+    }
+}
+
+/// Linearize a tree into one record per root-to-leaf branch — the exact
+/// inverse of ingestion, used by `gen-data --linearize`, the ingest bench
+/// and the round-trip property tests.
+pub fn records_from_tree(tree: &TrajectoryTree, session: &str) -> Vec<RolloutRecord> {
+    crate::tree::linearize(tree)
+        .iter()
+        .map(|chain| RolloutRecord::from_chain(session, chain))
+        .collect()
+}
+
+/// Write a rollout corpus (one record per line).
+pub fn save_rollouts(records: &[RolloutRecord], path: &Path) -> crate::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    for r in records {
+        writeln!(w, "{}", r.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::gen;
+
+    #[test]
+    fn json_roundtrip_with_defaults_omitted() {
+        let mut r = RolloutRecord::new("s", vec![1, 2, 3]);
+        let enc = r.to_json().to_string();
+        assert!(!enc.contains("trainable"), "all-default supervision omitted: {enc}");
+        assert_eq!(RolloutRecord::from_json(&Json::parse(&enc).unwrap()).unwrap(), r);
+        r.trainable[0] = 0.0;
+        r.advantage[2] = -1.5;
+        let enc = r.to_json().to_string();
+        assert_eq!(RolloutRecord::from_json(&Json::parse(&enc).unwrap()).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_bad_records() {
+        assert!(RolloutRecord::from_json(&Json::parse(r#"{"session":"s","tokens":[]}"#).unwrap())
+            .is_err());
+        assert!(RolloutRecord::from_json(
+            &Json::parse(r#"{"session":"s","tokens":[1,2],"trainable":[1.0]}"#).unwrap()
+        )
+        .is_err());
+        assert!(RolloutRecord::from_json(&Json::parse(r#"{"tokens":[1]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn records_cover_n_flat() {
+        let t = gen::uniform(11, 10, 6, 0.6);
+        let recs = records_from_tree(&t, "s0");
+        assert_eq!(recs.len(), t.num_paths());
+        assert_eq!(recs.iter().map(|r| r.len()).sum::<usize>(), t.n_flat());
+    }
+}

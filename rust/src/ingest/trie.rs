@@ -1,0 +1,435 @@
+//! Token-level radix trie that folds linear rollouts into trajectory trees.
+//!
+//! Each trie node holds a compressed segment (token run) plus its per-token
+//! supervision.  Insertion walks the trie matching the incoming record
+//! *position by position on all three channels* — token id, trainable
+//! weight, advantage — and splits at the first divergence: two branches are
+//! merged over a prefix only when every token of it is bit-identical in
+//! supervision, which is exactly the condition for gradient restoration
+//! over the shared prefix to be exact (Eq. 4 weights are per-token, so any
+//! supervision mismatch would silently retarget the other branch's loss).
+//!
+//! Emission ([`PrefixStore::emit`]) compacts single-child chains (they
+//! arise whenever one record extends another, i.e. prefix subsumption),
+//! optionally trims every path to `max_seq_len` tokens, and returns one
+//! [`TrajectoryTree`] per root-level divergence class — rollouts that share
+//! no leading token at all cannot share compute and become separate trees.
+
+use crate::tree::{NodeSpec, TrajectoryTree};
+
+/// Per-store insertion counters (aggregated into `IngestStats` on flush).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrieStats {
+    pub records: u64,
+    pub rollout_tokens: u64,
+    /// Mid-segment divergences (token or supervision) that split a node.
+    pub split_events: u64,
+    /// Records that were a strict prefix of an already-stored branch and
+    /// contributed no new tokens.
+    pub subsumed_records: u64,
+}
+
+/// Tree-emission counters for one store.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EmitStats {
+    pub trees: u64,
+    pub nodes: u64,
+    pub tree_tokens: u64,
+    /// Tokens dropped by `max_seq_len` trimming (segment tails + whole
+    /// subtrees past the limit).
+    pub trimmed_tokens: u64,
+}
+
+struct TrieNode {
+    tokens: Vec<i32>,
+    trainable: Vec<f32>,
+    advantage: Vec<f32>,
+    children: Vec<usize>,
+}
+
+impl TrieNode {
+    fn segment_of(tokens: &[i32], trainable: &[f32], advantage: &[f32]) -> Self {
+        Self {
+            tokens: tokens.to_vec(),
+            trainable: trainable.to_vec(),
+            advantage: advantage.to_vec(),
+            children: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// The radix-trie prefix store for one rollout session.
+pub struct PrefixStore {
+    /// Arena; `nodes[0]` is a sentinel root with an empty segment whose
+    /// children are the roots of the emitted trees.
+    nodes: Vec<TrieNode>,
+    pub stats: TrieStats,
+}
+
+impl Default for PrefixStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefixStore {
+    pub fn new() -> Self {
+        Self {
+            nodes: vec![TrieNode::segment_of(&[], &[], &[])],
+            stats: TrieStats::default(),
+        }
+    }
+
+    /// Number of distinct trees the store currently holds (root children).
+    pub fn n_trees(&self) -> usize {
+        self.nodes[0].children.len()
+    }
+
+    /// Unique tokens currently stored (what emission will produce before
+    /// any trimming).
+    pub fn stored_tokens(&self) -> usize {
+        self.nodes.iter().map(|n| n.len()).sum()
+    }
+
+    /// Fold one linearized branch into the trie.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        trainable: &[f32],
+        advantage: &[f32],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(!tokens.is_empty(), "empty rollout");
+        anyhow::ensure!(
+            trainable.len() == tokens.len() && advantage.len() == tokens.len(),
+            "supervision vectors mismatch token count"
+        );
+        self.stats.records += 1;
+        self.stats.rollout_tokens += tokens.len() as u64;
+
+        let matches = |node: &TrieNode, k: usize, pos: usize| {
+            node.tokens[k] == tokens[pos]
+                && node.trainable[k] == trainable[pos]
+                && node.advantage[k] == advantage[pos]
+        };
+
+        let mut cur = 0usize;
+        let mut pos = 0usize;
+        loop {
+            if pos == tokens.len() {
+                // exhausted exactly at a node boundary: strict prefix of
+                // (or identical to) an existing branch — nothing new.
+                self.stats.subsumed_records += 1;
+                return Ok(());
+            }
+            // siblings are pairwise distinct in their first (token,
+            // supervision) triple — see the split invariant below — so at
+            // most one child can continue the record.
+            let next = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| matches(&self.nodes[c], 0, pos));
+            let c = match next {
+                Some(c) => c,
+                None => {
+                    // no child continues the record: open a new branch
+                    let node = TrieNode::segment_of(
+                        &tokens[pos..],
+                        &trainable[pos..],
+                        &advantage[pos..],
+                    );
+                    self.nodes.push(node);
+                    let idx = self.nodes.len() - 1;
+                    self.nodes[cur].children.push(idx);
+                    return Ok(());
+                }
+            };
+            // walk the child's segment while all three channels agree
+            let mut k = 0usize;
+            while k < self.nodes[c].len() && pos < tokens.len() && matches(&self.nodes[c], k, pos)
+            {
+                k += 1;
+                pos += 1;
+            }
+            if k == self.nodes[c].len() {
+                cur = c; // segment fully matched, descend
+                continue;
+            }
+            if pos == tokens.len() {
+                // exhausted mid-segment: strict prefix, already covered
+                self.stats.subsumed_records += 1;
+                return Ok(());
+            }
+            // first divergence at offset k: split `c` into prefix + suffix,
+            // then branch.  The suffix and the new branch differ in their
+            // first triple by construction (that is the divergence), which
+            // maintains the sibling-distinctness invariant.
+            self.stats.split_events += 1;
+            let suffix = TrieNode {
+                tokens: self.nodes[c].tokens.split_off(k),
+                trainable: self.nodes[c].trainable.split_off(k),
+                advantage: self.nodes[c].advantage.split_off(k),
+                children: std::mem::take(&mut self.nodes[c].children),
+            };
+            self.nodes.push(suffix);
+            let suffix_idx = self.nodes.len() - 1;
+            let branch =
+                TrieNode::segment_of(&tokens[pos..], &trainable[pos..], &advantage[pos..]);
+            self.nodes.push(branch);
+            let branch_idx = self.nodes.len() - 1;
+            self.nodes[c].children = vec![suffix_idx, branch_idx];
+            return Ok(());
+        }
+    }
+
+    /// Total real tokens in the subtree rooted at `idx` (trim accounting).
+    fn subtree_tokens(&self, idx: usize) -> u64 {
+        let mut sum = 0u64;
+        let mut stack = vec![idx];
+        while let Some(i) = stack.pop() {
+            sum += self.nodes[i].len() as u64;
+            stack.extend_from_slice(&self.nodes[i].children);
+        }
+        sum
+    }
+
+    /// Emit the stored trees in insertion (DFS) order, compacting
+    /// single-child chains and trimming every path to `max_seq_len` tokens
+    /// when given.
+    pub fn emit(&self, max_seq_len: Option<usize>) -> (Vec<TrajectoryTree>, EmitStats) {
+        let max = max_seq_len.unwrap_or(usize::MAX);
+        assert!(max > 0, "max_seq_len must be positive");
+        let mut stats = EmitStats::default();
+        let mut out = Vec::with_capacity(self.nodes[0].children.len());
+        for &root in &self.nodes[0].children {
+            let nodes = self.emit_tree(root, max, &mut stats);
+            if nodes.is_empty() {
+                continue;
+            }
+            stats.trees += 1;
+            stats.nodes += nodes.len() as u64;
+            stats.tree_tokens += nodes.iter().map(|n| n.len() as u64).sum::<u64>();
+            out.push(TrajectoryTree::new(nodes).expect("trie emits valid pre-order"));
+        }
+        (out, stats)
+    }
+
+    fn emit_tree(&self, root: usize, max: usize, stats: &mut EmitStats) -> Vec<NodeSpec> {
+        let mut nodes: Vec<NodeSpec> = Vec::new();
+        // (trie node, parent index in `nodes`, tokens already on the path)
+        let mut stack: Vec<(usize, i32, usize)> = vec![(root, -1, 0)];
+        while let Some((idx, parent, depth)) = stack.pop() {
+            // compact: absorb single-child chains into one segment
+            let mut seg = NodeSpec {
+                parent,
+                tokens: self.nodes[idx].tokens.clone(),
+                trainable: self.nodes[idx].trainable.clone(),
+                advantage: self.nodes[idx].advantage.clone(),
+                pad_tail: 0,
+            };
+            let mut tail = idx;
+            while self.nodes[tail].children.len() == 1 {
+                tail = self.nodes[tail].children[0];
+                seg.tokens.extend_from_slice(&self.nodes[tail].tokens);
+                seg.trainable.extend_from_slice(&self.nodes[tail].trainable);
+                seg.advantage.extend_from_slice(&self.nodes[tail].advantage);
+            }
+            let budget = max - depth;
+            if seg.tokens.len() > budget {
+                // truncate the segment and drop everything below it
+                for &c in &self.nodes[tail].children {
+                    stats.trimmed_tokens += self.subtree_tokens(c);
+                }
+                stats.trimmed_tokens += (seg.tokens.len() - budget) as u64;
+                seg.tokens.truncate(budget);
+                seg.trainable.truncate(budget);
+                seg.advantage.truncate(budget);
+                nodes.push(seg);
+                continue;
+            }
+            let end_depth = depth + seg.tokens.len();
+            nodes.push(seg);
+            let me = (nodes.len() - 1) as i32;
+            if end_depth == max {
+                // children start exactly at the limit: drop them whole
+                for &c in &self.nodes[tail].children {
+                    stats.trimmed_tokens += self.subtree_tokens(c);
+                }
+                continue;
+            }
+            for &c in self.nodes[tail].children.iter().rev() {
+                stack.push((c, me, end_depth));
+            }
+        }
+        nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn insert_plain(store: &mut PrefixStore, tokens: &[i32]) {
+        let ones = vec![1.0f32; tokens.len()];
+        store.insert(tokens, &ones, &ones).unwrap();
+    }
+
+    /// Path signature: per root-to-leaf path, the (token, trainable,
+    /// advantage) sequence — the tree-structure-independent equivalence.
+    fn signature(t: &TrajectoryTree) -> Vec<Vec<(i32, u32, u32)>> {
+        let mut sig: Vec<Vec<(i32, u32, u32)>> = t
+            .paths()
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .flat_map(|&n| {
+                        let nd = &t.nodes[n];
+                        (0..nd.real_len()).map(move |i| {
+                            (nd.tokens[i], nd.trainable[i].to_bits(), nd.advantage[i].to_bits())
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+        sig.sort();
+        sig
+    }
+
+    #[test]
+    fn token_divergence_splits() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2, 3, 4]);
+        insert_plain(&mut s, &[1, 2, 9, 9]);
+        let (trees, es) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.nodes.len(), 3, "prefix + two branches");
+        assert_eq!(t.nodes[0].tokens, vec![1, 2]);
+        assert_eq!(t.num_paths(), 2);
+        assert_eq!(t.n_tree(), 6);
+        assert_eq!(es.tree_tokens, 6);
+        assert_eq!(s.stats.split_events, 1);
+        assert_eq!(s.stats.rollout_tokens, 8);
+    }
+
+    #[test]
+    fn supervision_divergence_splits_even_on_equal_tokens() {
+        let mut s = PrefixStore::new();
+        let toks = [1, 2, 3, 4];
+        let ones = vec![1.0f32; 4];
+        s.insert(&toks, &ones, &ones).unwrap();
+        // same tokens, trainable differs from index 2 on
+        s.insert(&toks, &[1.0, 1.0, 0.0, 0.0], &ones).unwrap();
+        let (trees, _) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.nodes[0].tokens, vec![1, 2]);
+        assert_eq!(t.num_paths(), 2, "supervision mismatch must fork, not merge");
+        // both branches carry identical tokens but distinct weights
+        assert_eq!(t.nodes[1].tokens, t.nodes[2].tokens);
+        assert_ne!(t.nodes[1].trainable, t.nodes[2].trainable);
+        assert_eq!(s.stats.split_events, 1);
+    }
+
+    #[test]
+    fn advantage_divergence_splits() {
+        let mut s = PrefixStore::new();
+        let toks = [5, 6, 7];
+        let ones = vec![1.0f32; 3];
+        s.insert(&toks, &ones, &ones).unwrap();
+        s.insert(&toks, &ones, &[1.0, 2.0, 2.0]).unwrap();
+        let (trees, _) = s.emit(None);
+        assert_eq!(trees[0].num_paths(), 2);
+        assert_eq!(trees[0].nodes[0].tokens, vec![5]);
+    }
+
+    #[test]
+    fn extension_compacts_into_one_segment() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2, 3]);
+        insert_plain(&mut s, &[1, 2, 3, 4, 5]);
+        let (trees, _) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        assert_eq!(trees[0].nodes.len(), 1, "chain must compact");
+        assert_eq!(trees[0].nodes[0].tokens, vec![1, 2, 3, 4, 5]);
+        assert_eq!(s.stats.subsumed_records, 0);
+    }
+
+    #[test]
+    fn strict_prefix_is_subsumed() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2, 3, 4, 5]);
+        insert_plain(&mut s, &[1, 2, 3]);
+        insert_plain(&mut s, &[1, 2, 3, 4, 5]); // exact duplicate
+        assert_eq!(s.stats.subsumed_records, 2);
+        let (trees, es) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        assert_eq!(es.tree_tokens, 5);
+    }
+
+    #[test]
+    fn root_divergence_yields_separate_trees() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2]);
+        insert_plain(&mut s, &[9, 2]);
+        let (trees, es) = s.emit(None);
+        assert_eq!(trees.len(), 2);
+        assert_eq!(es.trees, 2);
+    }
+
+    #[test]
+    fn deep_fanout_signature_roundtrip() {
+        let mut s = PrefixStore::new();
+        let recs: Vec<Vec<i32>> = vec![
+            vec![1, 2, 3, 4, 5],
+            vec![1, 2, 3, 7, 8, 9],
+            vec![1, 2, 3, 7, 8, 10],
+            vec![1, 6],
+        ];
+        for r in &recs {
+            insert_plain(&mut s, r);
+        }
+        let (trees, _) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        let sig = signature(&trees[0]);
+        let mut want: Vec<Vec<(i32, u32, u32)>> = recs
+            .iter()
+            .map(|r| r.iter().map(|&t| (t, 1.0f32.to_bits(), 1.0f32.to_bits())).collect())
+            .collect();
+        want.sort();
+        assert_eq!(sig, want);
+    }
+
+    #[test]
+    fn max_seq_len_trims_paths() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2, 3, 4, 5, 6]);
+        insert_plain(&mut s, &[1, 2, 3, 9, 9]);
+        let (trees, es) = s.emit(Some(4));
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        for p in t.paths() {
+            let len: usize = p.iter().map(|&n| t.nodes[n].real_len()).sum();
+            assert!(len <= 4, "path of {len} tokens survived trim");
+        }
+        // 6-token branch loses 2, 5-token branch loses 1
+        assert_eq!(es.trimmed_tokens, 3);
+        assert_eq!(es.tree_tokens + es.trimmed_tokens, s.stored_tokens() as u64);
+    }
+
+    #[test]
+    fn trim_at_exact_boundary_drops_children_whole() {
+        let mut s = PrefixStore::new();
+        insert_plain(&mut s, &[1, 2, 3, 4]);
+        insert_plain(&mut s, &[1, 2, 5, 6]);
+        let (trees, es) = s.emit(Some(2));
+        assert_eq!(trees.len(), 1);
+        assert_eq!(trees[0].nodes.len(), 1);
+        assert_eq!(trees[0].nodes[0].tokens, vec![1, 2]);
+        assert_eq!(es.trimmed_tokens, 4);
+    }
+}

@@ -17,9 +17,17 @@
 //!   relay, PJRT runtime, optimizers and the training loop.  Python never
 //!   runs at training time.
 //!
-//! Layer 3 is itself split engine / packing / coordinator
-//! (see `docs/forest_packing.md`):
+//! Layer 3 is itself split ingest / engine / packing / coordinator
+//! (see `docs/forest_packing.md` and `docs/ingest.md`):
 //!
+//! * [`ingest`] — the input stage *in front of* everything below: agentic
+//!   runtimes log linearized branch rollouts (one JSONL record per executed
+//!   branch, shared prefixes repeated); a per-session token-level radix
+//!   trie folds them back into [`TrajectoryTree`]s, splitting at the first
+//!   token *or* supervision divergence so merged prefixes restore
+//!   gradients exactly, and reports the measured prefix-reuse ratio
+//!   (rollout tokens in / tree tokens out).  Streaming with a bounded
+//!   number of open sessions, so corpus size never bounds memory.
 //! * [`trainer::Engine`] — the unified execution core: parameters + cached
 //!   literals, manifest-ordered program dispatch, f64 gradient
 //!   accumulation, Eq. 5-normalized AdamW updates.
@@ -41,6 +49,7 @@
 pub mod coordinator;
 pub mod distsim;
 pub mod gateway;
+pub mod ingest;
 pub mod masks;
 pub mod partition;
 pub mod runtime;

@@ -22,7 +22,11 @@ COMMANDS:
   train <config.json>      train from a JSON run config
   gen-data <out.jsonl>     synthetic agentic corpus
                            [--overlap low|medium|high|por:X] [--n-trees N]
-                           [--turns N] [--vocab V] [--seed S]
+                           [--turns N] [--vocab V] [--seed S] [--linearize]
+  ingest                   fold linear rollout logs into a tree corpus
+                           --in rollouts.jsonl --out trees.jsonl [--stats]
+                           [--max-seq-len N] [--max-open-sessions N]
+                           [--stats-json FILE]
   fig5                     token accounting: flatten vs standard vs RF
                            [--tree-tokens N] [--capacity C]
   fig6                     agentic tree shapes + POR + depth profiles
@@ -115,7 +119,36 @@ fn main() -> anyhow::Result<()> {
                 rest.get("turns", 6usize),
                 rest.get("vocab", 256i32),
                 rest.get("seed", 0u64),
+                rest.has("linearize"),
                 &PathBuf::from(out_file),
+            )
+        }
+        "ingest" => {
+            let input = rest.str("in", "");
+            let output = rest.str("out", "");
+            anyhow::ensure!(
+                !input.is_empty() && !output.is_empty(),
+                "ingest needs --in <rollouts.jsonl> and --out <trees.jsonl>"
+            );
+            let max_seq_len = match rest.flags.get("max-seq-len") {
+                Some(v) => Some(v.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(
+                    || anyhow::anyhow!("--max-seq-len must be a positive integer, got `{v}`"),
+                )?),
+                None => None,
+            };
+            let max_open_sessions = match rest.flags.get("max-open-sessions") {
+                Some(v) => v.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                    anyhow::anyhow!("--max-open-sessions must be a positive integer, got `{v}`")
+                })?,
+                None => tree_train::ingest::IngestConfig::default().max_open_sessions,
+            };
+            let cfg = tree_train::ingest::IngestConfig { max_seq_len, max_open_sessions };
+            cmds::ingest::run(
+                &PathBuf::from(input),
+                &PathBuf::from(output),
+                cfg,
+                rest.has("stats"),
+                rest.flags.get("stats-json").map(PathBuf::from).as_deref(),
             )
         }
         "fig5" => cmds::fig5::run(&out, rest.get("tree-tokens", 83_000usize), rest.get("capacity", 60_000usize)),

@@ -17,7 +17,10 @@ use std::time::Instant;
 use crate::partition::forest;
 use crate::runtime::{HostTensor, Runtime};
 use crate::tree::dfs::DfsMeta;
-use crate::tree::{NodeSpec, TrajectoryTree};
+// The one linearization in the crate (shared with ingest round-trips and
+// `gen-data --linearize`): a chain is `tree::path_chain` output, nothing else.
+use crate::tree::linearize::path_chain;
+use crate::tree::TrajectoryTree;
 
 use super::adamw::AdamWConfig;
 use super::batch::{Batch, BatchOptions};
@@ -26,26 +29,6 @@ use super::metrics::StepMetrics;
 
 pub struct BaselineTrainer {
     pub engine: Engine,
-}
-
-/// One path of a tree as an independent chain tree.
-pub fn path_chain(tree: &TrajectoryTree, path: &[usize]) -> TrajectoryTree {
-    let nodes: Vec<NodeSpec> = path
-        .iter()
-        .enumerate()
-        .map(|(d, &n)| {
-            let nd = &tree.nodes[n];
-            let real = nd.real_len();
-            NodeSpec {
-                parent: d as i32 - 1,
-                tokens: nd.tokens[..real].to_vec(),
-                trainable: nd.trainable[..real].to_vec(),
-                advantage: nd.advantage[..real].to_vec(),
-                pad_tail: 0,
-            }
-        })
-        .collect();
-    TrajectoryTree::new(nodes).expect("chain is a valid tree")
 }
 
 /// First-fit-decreasing packing of chain metas into capacity-C batches

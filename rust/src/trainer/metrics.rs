@@ -27,6 +27,17 @@ impl StepMetrics {
     pub fn tokens_per_sec(&self) -> f64 {
         self.tree_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+
+    /// Realized prefix-reuse ratio of this step's data: flattened tokens the
+    /// sep-avg baseline would process per unique tree token (`N_flat /
+    /// N_tree`, ≥ 1.0; the per-step counterpart of the ingest-time corpus
+    /// reuse ratio).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.tree_tokens == 0 {
+            return 1.0;
+        }
+        self.flat_tokens as f64 / self.tree_tokens as f64
+    }
 }
 
 /// Append-only CSV sink (one row per step).
@@ -39,7 +50,7 @@ impl CsvSink {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             w,
-            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,wall_ms,exec_calls,forest_batches,grad_norm"
+            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,reuse_ratio,wall_ms,exec_calls,forest_batches,grad_norm"
         )?;
         Ok(Self { w })
     }
@@ -47,13 +58,14 @@ impl CsvSink {
     pub fn log(&mut self, m: &StepMetrics) -> crate::Result<()> {
         writeln!(
             self.w,
-            "{},{:.6},{:.3},{},{},{},{:.3},{},{},{:.5}",
+            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{},{},{:.5}",
             m.step,
             m.loss,
             m.weight_sum,
             m.device_tokens,
             m.tree_tokens,
             m.flat_tokens,
+            m.reuse_ratio(),
             m.wall.as_secs_f64() * 1e3,
             m.exec_calls,
             m.forest_batches,

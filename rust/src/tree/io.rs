@@ -1,6 +1,6 @@
 //! Tree (de)serialization: JSON on disk, one tree per file or JSONL corpora.
 
-use std::io::{BufRead, Write};
+use std::io::Write;
 use std::path::Path;
 
 use super::node::TrajectoryTree;
@@ -27,17 +27,28 @@ pub fn save_corpus(trees: &[TrajectoryTree], path: &Path) -> crate::Result<()> {
     Ok(())
 }
 
-pub fn load_corpus(path: &Path) -> crate::Result<Vec<TrajectoryTree>> {
-    let f = std::fs::File::open(path)?;
-    let mut out = Vec::new();
-    for line in std::io::BufReader::new(f).lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        out.push(TrajectoryTree::from_json(&Json::parse(&line)?)?);
+/// Streaming corpus reader: one tree per `next()` call, so million-tree
+/// corpora never sit fully in RAM.  Parse errors carry `path:line`
+/// (shared [`crate::util::jsonl::JsonlReader`] machinery).
+pub struct CorpusIter {
+    inner: crate::util::jsonl::JsonlReader<std::io::BufReader<std::fs::File>>,
+}
+
+impl Iterator for CorpusIter {
+    type Item = crate::Result<TrajectoryTree>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.inner.next_record(TrajectoryTree::from_json)
     }
-    Ok(out)
+}
+
+/// Open a JSONL corpus as a line-by-line iterator (bounded memory).
+pub fn load_corpus_iter(path: &Path) -> crate::Result<CorpusIter> {
+    Ok(CorpusIter { inner: crate::util::jsonl::JsonlReader::open(path)? })
+}
+
+pub fn load_corpus(path: &Path) -> crate::Result<Vec<TrajectoryTree>> {
+    load_corpus_iter(path)?.collect()
 }
 
 #[cfg(test)]
@@ -73,6 +84,33 @@ mod tests {
         let p = dir.join("corpus.jsonl");
         save_corpus(&trees, &p).unwrap();
         assert_eq!(load_corpus(&p).unwrap(), trees);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corpus_iter_streams_and_matches_eager_load() {
+        let dir = temp_dir("iter");
+        let trees: Vec<_> = (0..4).map(|s| gen::uniform(100 + s, 8, 5, 0.5)).collect();
+        let p = dir.join("corpus.jsonl");
+        save_corpus(&trees, &p).unwrap();
+        let streamed: Vec<_> =
+            load_corpus_iter(&p).unwrap().collect::<crate::Result<Vec<_>>>().unwrap();
+        assert_eq!(streamed, trees);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn parse_error_reports_line_number() {
+        let dir = temp_dir("badline");
+        let p = dir.join("corpus.jsonl");
+        let good = gen::uniform(0, 6, 4, 0.5).to_json().to_string();
+        std::fs::write(&p, format!("{good}\n\n{good}\nnot json at all\n")).unwrap();
+        let err = load_corpus(&p).unwrap_err().to_string();
+        assert!(err.contains(":4:"), "error should name line 4, got: {err}");
+        // structurally-invalid tree on a valid-JSON line also carries the line
+        std::fs::write(&p, format!("{good}\n{{\"nodes\":[]}}\n")).unwrap();
+        let err = load_corpus(&p).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "error should name line 2, got: {err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,0 +1,101 @@
+//! Branch linearization: trees -> independent root-to-leaf chains.
+//!
+//! The exact inverse of ingestion (`crate::ingest` folds linear rollouts
+//! back into trees): [`linearize`] spells every root-to-leaf path of a
+//! trajectory tree as a standalone chain tree, which is what an agentic
+//! runtime logs — one record per executed branch, shared prefixes repeated.
+//! This is the *single* linearization in the crate: the sep-avg baseline
+//! (`trainer::baseline`), the `quality` longest-path experiment,
+//! `gen-data --linearize` and the ingest round-trip tests all route through
+//! it, so "flatten" means the same thing everywhere (`N_flat` accounting,
+//! Eq. 1).
+
+use super::node::{NodeSpec, TrajectoryTree};
+
+/// One root-to-leaf path of `tree` as an independent chain tree.
+///
+/// Alignment pads are stripped (`real_len`): a linearized branch is the raw
+/// rollout, and chunk padding is re-applied downstream where needed.
+pub fn path_chain(tree: &TrajectoryTree, path: &[usize]) -> TrajectoryTree {
+    let nodes: Vec<NodeSpec> = path
+        .iter()
+        .enumerate()
+        .map(|(d, &n)| {
+            let nd = &tree.nodes[n];
+            let real = nd.real_len();
+            NodeSpec {
+                parent: d as i32 - 1,
+                tokens: nd.tokens[..real].to_vec(),
+                trainable: nd.trainable[..real].to_vec(),
+                advantage: nd.advantage[..real].to_vec(),
+                pad_tail: 0,
+            }
+        })
+        .collect();
+    TrajectoryTree::new(nodes).expect("chain is a valid tree")
+}
+
+/// Every root-to-leaf path of `tree` as a chain tree, in DFS leaf order.
+///
+/// The token total over the result is `tree.n_flat()` — the sep-avg
+/// baseline's cost — and feeding the chains back through `ingest` recovers
+/// a tree with the same path set (the round-trip property tested in
+/// `tests/ingest_roundtrip.rs`).
+pub fn linearize(tree: &TrajectoryTree) -> Vec<TrajectoryTree> {
+    tree.paths().iter().map(|p| path_chain(tree, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig1() -> TrajectoryTree {
+        TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1, 2, 3, 4]),
+            NodeSpec::new(0, vec![5, 6]),
+            NodeSpec::new(1, vec![7]),
+            NodeSpec::new(1, vec![8, 9]),
+            NodeSpec::new(0, vec![10, 11, 12]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chains_cover_n_flat() {
+        let t = fig1();
+        let chains = linearize(&t);
+        assert_eq!(chains.len(), t.num_paths());
+        assert_eq!(chains.iter().map(|c| c.n_tree()).sum::<usize>(), t.n_flat());
+        for c in &chains {
+            assert_eq!(c.num_paths(), 1);
+        }
+    }
+
+    #[test]
+    fn chain_spells_the_path() {
+        let t = fig1();
+        let chains = linearize(&t);
+        let toks: Vec<i32> = chains[1].nodes.iter().flat_map(|n| n.tokens.clone()).collect();
+        assert_eq!(toks, vec![1, 2, 3, 4, 5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn pads_are_stripped() {
+        let t = fig1().pad_for_chunks(4, 0);
+        let chains = linearize(&t);
+        assert!(chains.iter().all(|c| c.nodes.iter().all(|n| n.pad_tail == 0)));
+        assert_eq!(chains.iter().map(|c| c.n_tree()).sum::<usize>(), 22);
+    }
+
+    #[test]
+    fn supervision_travels_with_tokens() {
+        let t = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1, 2]).with_trainable(vec![0.0, 1.0]),
+            NodeSpec::new(0, vec![3]).with_advantage(vec![2.5]),
+        ])
+        .unwrap();
+        let c = &linearize(&t)[0];
+        assert_eq!(c.nodes[0].trainable, vec![0.0, 1.0]);
+        assert_eq!(c.nodes[1].advantage, vec![2.5]);
+    }
+}

@@ -10,8 +10,10 @@
 pub mod dfs;
 pub mod gen;
 pub mod io;
+pub mod linearize;
 pub mod metrics;
 pub mod node;
 
 pub use dfs::{serialize, DfsMeta};
+pub use linearize::{linearize, path_chain};
 pub use node::{NodeSpec, TrajectoryTree};

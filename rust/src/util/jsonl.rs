@@ -1,0 +1,86 @@
+//! Streaming JSONL line reader shared by the tree-corpus and rollout
+//! readers: skips blank lines, counts lines, and decorates every parse
+//! error with `label:line` so a bad record in a million-line corpus is
+//! findable.  Typed readers supply their record parser per `next_record`
+//! call and stay thin wrappers.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use super::json::Json;
+
+pub struct JsonlReader<R: BufRead> {
+    lines: std::io::Lines<R>,
+    label: String,
+    line_no: usize,
+}
+
+impl JsonlReader<std::io::BufReader<std::fs::File>> {
+    pub fn open(path: &Path) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(Self::new(std::io::BufReader::new(f), &path.display().to_string()))
+    }
+}
+
+impl<R: BufRead> JsonlReader<R> {
+    pub fn new(reader: R, label: &str) -> Self {
+        Self { lines: reader.lines(), label: label.to_string(), line_no: 0 }
+    }
+
+    /// Next non-blank line, JSON-parsed and fed to `parse`; errors from
+    /// either stage carry `label:line`.
+    pub fn next_record<T>(
+        &mut self,
+        parse: impl FnOnce(&Json) -> crate::Result<T>,
+    ) -> Option<crate::Result<T>> {
+        loop {
+            let line = match self.lines.next()? {
+                Ok(l) => l,
+                Err(e) => {
+                    return Some(Err(anyhow::anyhow!(
+                        "{}:{}: read error: {e}",
+                        self.label,
+                        self.line_no + 1
+                    )))
+                }
+            };
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(&line).and_then(|v| parse(&v));
+            return Some(
+                parsed.map_err(|e| anyhow::anyhow!("{}:{}: {e}", self.label, self.line_no)),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skips_blanks_counts_lines_and_decorates_errors() {
+        let src = "{\"x\": 1}\n\n  \n{\"x\": 2}\nnot json\n";
+        let mut r = JsonlReader::new(src.as_bytes(), "mem");
+        let get = |r: &mut JsonlReader<&[u8]>| {
+            r.next_record(|v| v.req("x").and_then(|x| x.as_i64().ok_or_else(|| anyhow::anyhow!("x"))))
+        };
+        assert_eq!(get(&mut r).unwrap().unwrap(), 1);
+        assert_eq!(get(&mut r).unwrap().unwrap(), 2);
+        let err = get(&mut r).unwrap().unwrap_err().to_string();
+        assert!(err.contains("mem:5:"), "expected mem:5: in {err}");
+        assert!(get(&mut r).is_none());
+    }
+
+    #[test]
+    fn record_parser_errors_also_carry_position() {
+        let src = "{\"x\": 1}\n{\"y\": 1}\n";
+        let mut r = JsonlReader::new(src.as_bytes(), "f.jsonl");
+        assert!(r.next_record(|v| v.req("x").cloned()).unwrap().is_ok());
+        let err = r.next_record(|v| v.req("x").cloned()).unwrap().unwrap_err().to_string();
+        assert!(err.contains("f.jsonl:2:"), "{err}");
+    }
+}

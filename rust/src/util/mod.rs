@@ -2,11 +2,13 @@
 //! everything else a framework needs is implemented here):
 //!
 //! * [`json`]  — minimal JSON parser/writer (manifest, configs, corpora).
+//! * [`jsonl`] — streaming JSONL line reader with `label:line` errors.
 //! * [`rng`]   — SplitMix64 deterministic PRNG (generators, shuffles).
 //! * [`bench`] — micro-bench harness (warmup + timed iterations, p50/mean).
 //! * [`logging`] — leveled stderr logging controlled by `TT_LOG`.
 
 pub mod bench;
 pub mod json;
+pub mod jsonl;
 pub mod logging;
 pub mod rng;

@@ -1,0 +1,219 @@
+//! The ingest round-trip property: `ingest(linearize(T)) ≡ T` up to child
+//! order and node-boundary placement — same (token, trainable, advantage)
+//! sequence per root-to-leaf path — on generated trees, plus
+//! divergence-split cases and the dedup guarantee (tree tokens out strictly
+//! below rollout tokens in whenever any prefix is shared).
+//!
+//! Equivalence is on *reduced* path sets: ingestion emits the canonical
+//! maximal-sharing tree, so a generated tree that happens to repeat a path
+//! verbatim (or contains a path that is a strict prefix of a sibling's)
+//! folds to one copy — exactly the trie's subsumption rule.  Reduction
+//! removes duplicates and strict-prefix paths from the *reference* side;
+//! ingested trees are already reduced by construction.
+
+use tree_train::ingest::{self, IngestConfig, PrefixStore, RolloutRecord};
+use tree_train::tree::{gen, TrajectoryTree};
+
+type PathSig = Vec<(i32, u32, u32)>;
+
+/// Per-path (token, trainable-bits, advantage-bits) sequences, sorted.
+fn raw_signature(t: &TrajectoryTree) -> Vec<PathSig> {
+    let mut sig: Vec<PathSig> = t
+        .paths()
+        .iter()
+        .map(|p| {
+            p.iter()
+                .flat_map(|&n| {
+                    let nd = &t.nodes[n];
+                    (0..nd.real_len()).map(move |i| {
+                        (nd.tokens[i], nd.trainable[i].to_bits(), nd.advantage[i].to_bits())
+                    })
+                })
+                .collect()
+        })
+        .collect();
+    sig.sort();
+    sig
+}
+
+/// Drop duplicate paths and paths that are strict prefixes of another path
+/// (the trie subsumes both).  Input must be sorted; in lexicographic order
+/// every extension of a path follows it contiguously, so one forward look
+/// suffices.
+fn reduce(mut sig: Vec<PathSig>) -> Vec<PathSig> {
+    sig.dedup();
+    (0..sig.len())
+        .filter(|&i| {
+            !(i + 1 < sig.len()
+                && sig[i + 1].len() > sig[i].len()
+                && sig[i + 1][..sig[i].len()] == sig[i][..])
+        })
+        .map(|i| sig[i].clone())
+        .collect()
+}
+
+/// Canonical signature of a reference tree (reduced).
+fn signature(t: &TrajectoryTree) -> Vec<PathSig> {
+    reduce(raw_signature(t))
+}
+
+/// Signature of a forest, reducing per tree (sessions never merge).
+fn forest_signature(trees: &[TrajectoryTree]) -> Vec<PathSig> {
+    let mut sig: Vec<PathSig> = trees.iter().flat_map(|t| signature(t)).collect();
+    sig.sort();
+    sig
+}
+
+/// Ingest one tree's linearization through a fresh store.
+fn roundtrip(t: &TrajectoryTree) -> (Vec<TrajectoryTree>, PrefixStore) {
+    let mut store = PrefixStore::new();
+    for rec in ingest::records_from_tree(t, "s") {
+        store.insert(&rec.tokens, &rec.trainable, &rec.advantage).unwrap();
+    }
+    let (trees, _) = store.emit(None);
+    (trees, store)
+}
+
+#[test]
+fn roundtrip_uniform_trees() {
+    for seed in 0..40u64 {
+        let t = gen::uniform(seed, 14, 6, 0.6);
+        let (trees, store) = roundtrip(&t);
+        assert_eq!(trees.len(), 1, "uniform trees share the root segment");
+        assert_eq!(
+            forest_signature(&trees),
+            signature(&t),
+            "seed {seed}: path signatures must survive linearize -> ingest"
+        );
+        assert_eq!(store.stats.rollout_tokens as usize, t.n_flat());
+        // canonical sharing can only be equal or tighter than the original
+        let out = trees[0].n_tree();
+        assert!(out <= t.n_tree(), "seed {seed}: ingest must never duplicate tokens");
+        if t.num_paths() > 1 {
+            assert!(out < t.n_flat(), "seed {seed}: shared prefixes must dedup");
+        }
+    }
+}
+
+#[test]
+fn roundtrip_agentic_trees_all_regimes() {
+    for (i, ov) in [gen::Overlap::Low, gen::Overlap::Medium, gen::Overlap::High]
+        .into_iter()
+        .enumerate()
+    {
+        for seed in 0..6u64 {
+            let t = gen::agentic(seed * 11 + i as u64, ov, 8, 256);
+            let (trees, _) = roundtrip(&t);
+            assert_eq!(forest_signature(&trees), signature(&t), "{ov:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn roundtrip_preserves_mixed_supervision() {
+    // untrained prompt + trained output: supervision must travel bit-exactly
+    let t = gen::agentic(5, gen::Overlap::Medium, 6, 128);
+    assert!(
+        t.nodes.iter().any(|n| n.trainable.iter().any(|&w| w == 0.0)),
+        "generator should emit untrained environment segments"
+    );
+    let (trees, _) = roundtrip(&t);
+    assert_eq!(forest_signature(&trees), signature(&t));
+}
+
+#[test]
+fn divergence_on_trainable_over_shared_tokens() {
+    // two branches agree on tokens [1,2,3,4] but disagree on trainable
+    // from index 2: the merged prefix must stop at index 2 exactly.
+    let mut store = PrefixStore::new();
+    let mut a = RolloutRecord::new("s", vec![1, 2, 3, 4]);
+    a.trainable = vec![0.0, 0.0, 1.0, 1.0];
+    let mut b = RolloutRecord::new("s", vec![1, 2, 3, 4]);
+    b.trainable = vec![0.0, 0.0, 0.0, 1.0];
+    store.insert(&a.tokens, &a.trainable, &a.advantage).unwrap();
+    store.insert(&b.tokens, &b.trainable, &b.advantage).unwrap();
+    let (trees, _) = store.emit(None);
+    assert_eq!(trees.len(), 1);
+    let t = &trees[0];
+    assert_eq!(t.nodes[0].tokens, vec![1, 2], "merge must stop at the supervision split");
+    assert_eq!(t.num_paths(), 2);
+    assert_eq!(t.n_tree(), 6, "2 shared + 2x2 diverged");
+    let w = |x: f32| x.to_bits();
+    let mut want = vec![
+        vec![(1, w(0.0), w(1.0)), (2, w(0.0), w(1.0)), (3, w(1.0), w(1.0)), (4, w(1.0), w(1.0))],
+        vec![(1, w(0.0), w(1.0)), (2, w(0.0), w(1.0)), (3, w(0.0), w(1.0)), (4, w(1.0), w(1.0))],
+    ];
+    want.sort();
+    assert_eq!(forest_signature(&trees), want);
+}
+
+#[test]
+fn divergence_on_advantage_over_shared_tokens() {
+    // RL: same sampled tokens, different per-branch advantage tail — the
+    // prefix with equal advantage merges, the tail forks.
+    let mut store = PrefixStore::new();
+    let mut a = RolloutRecord::new("s", vec![9, 8, 7]);
+    a.advantage = vec![1.0, 0.5, 0.5];
+    let mut b = RolloutRecord::new("s", vec![9, 8, 7]);
+    b.advantage = vec![1.0, -0.5, -0.5];
+    store.insert(&a.tokens, &a.trainable, &a.advantage).unwrap();
+    store.insert(&b.tokens, &b.trainable, &b.advantage).unwrap();
+    let (trees, _) = store.emit(None);
+    let t = &trees[0];
+    assert_eq!(t.nodes[0].tokens, vec![9]);
+    assert_eq!(t.num_paths(), 2);
+    assert_eq!(store.stats.split_events, 1);
+}
+
+#[test]
+fn full_pipeline_corpus_roundtrip() {
+    // gen -> linearize -> rollout JSONL -> fold_corpus -> signatures match
+    let dir = std::env::temp_dir().join(format!("ingest-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trees: Vec<TrajectoryTree> =
+        (0..8u64).map(|s| gen::agentic(s, gen::Overlap::High, 6, 128)).collect();
+    let records: Vec<RolloutRecord> = trees
+        .iter()
+        .enumerate()
+        .flat_map(|(i, t)| ingest::records_from_tree(t, &format!("sess-{i}")))
+        .collect();
+    let path = dir.join("rollouts.jsonl");
+    ingest::save_rollouts(&records, &path).unwrap();
+
+    let (folded, stats) = ingest::fold_corpus(&path, &IngestConfig::default()).unwrap();
+    assert_eq!(forest_signature(&folded), forest_signature(&trees));
+    assert_eq!(stats.records_in as usize, records.len());
+    assert_eq!(stats.rollout_tokens_in as usize, records.iter().map(|r| r.len()).sum::<usize>());
+    assert!(
+        stats.tree_tokens_out as usize <= trees.iter().map(|t| t.n_tree()).sum::<usize>(),
+        "canonical sharing is at least as tight as the source trees"
+    );
+    assert!(
+        stats.tree_tokens_out < stats.rollout_tokens_in,
+        "high-POR corpus must dedup strictly"
+    );
+    assert!(stats.reuse_ratio() > 1.0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn max_seq_len_bounds_every_emitted_path() {
+    let t = gen::agentic(3, gen::Overlap::High, 10, 128);
+    let records = ingest::records_from_tree(&t, "s");
+    let longest = records.iter().map(|r| r.len()).max().unwrap();
+    let cap = longest / 2;
+    let mut store = PrefixStore::new();
+    for r in &records {
+        store.insert(&r.tokens, &r.trainable, &r.advantage).unwrap();
+    }
+    let stored = store.stored_tokens() as u64;
+    let (trees, es) = store.emit(Some(cap));
+    for t in &trees {
+        for p in t.paths() {
+            let len: usize = p.iter().map(|&n| t.nodes[n].real_len()).sum();
+            assert!(len <= cap, "path of {len} tokens exceeds cap {cap}");
+        }
+    }
+    assert!(es.trimmed_tokens > 0);
+    assert_eq!(es.tree_tokens + es.trimmed_tokens, stored);
+}

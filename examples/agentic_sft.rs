@@ -34,6 +34,26 @@ fn main() -> anyhow::Result<()> {
             Mode::Tree => "tree",
             Mode::Baseline => "baseline",
         };
+        let synthetic = SyntheticSpec {
+            overlap: "high".into(),
+            n_trees: 48,
+            // eff. think-mode turns = 8x: keeps the deepest path inside
+            // the gateway bucket (ancestor rows <= A = 256)
+            turns: 2,
+            vocab: 512,
+        };
+        // the sep-avg baseline cannot pack paths longer than its bucket
+        // (tree training would simply partition them); keep the comparison
+        // on the common subset
+        let cap = 243usize;
+        let mut trees = synthetic.generate(7)?;
+        trees.retain(|t| {
+            t.paths()
+                .iter()
+                .all(|p| p.iter().map(|&n| t.nodes[n].real_len()).sum::<usize>() <= cap)
+        });
+        let por = metrics::dataset_por(&trees);
+        let n_trees = trees.len();
         let cfg = RunConfig {
             model: "small".into(),
             mode: m,
@@ -45,29 +65,17 @@ fn main() -> anyhow::Result<()> {
             corpus: None,
             corpus_format: CorpusFormat::Trees,
             ingest: Default::default(),
-            synthetic: Some(SyntheticSpec {
-                overlap: "high".into(),
-                n_trees: 48,
-                // eff. think-mode turns = 8x: keeps the deepest path inside
-                // the gateway bucket (ancestor rows <= A = 256)
-                turns: 2,
-                vocab: 512,
-            }),
+            synthetic: Some(synthetic),
             metrics_csv: Some(results.join(format!("agentic_sft_{tag}.csv"))),
             forest_packing: true,
+            pipeline_depth: 1,
+            shuffle_window: 0,
         };
-        let mut coord = Coordinator::new(rt.clone(), cfg)?;
-        // the sep-avg baseline cannot pack paths longer than its bucket
-        // (tree training would simply partition them); keep the comparison
-        // on the common subset
-        let cap = 243usize;
-        coord.data.retain(|t| {
-            t.paths()
-                .iter()
-                .all(|p| p.iter().map(|&n| t.nodes[n].real_len()).sum::<usize>() <= cap)
-        });
-        let por = metrics::dataset_por(&coord.data);
-        println!("\n=== agentic SFT [{tag}] — {} trees, dataset POR {:.1}% ===", coord.data.len(), por * 100.0);
+        let mut coord = Coordinator::with_corpus(rt.clone(), cfg, trees)?;
+        println!(
+            "\n=== agentic SFT [{tag}] — {n_trees} trees, dataset POR {:.1}% ===",
+            por * 100.0
+        );
         let t0 = std::time::Instant::now();
         let ms = coord.run()?;
         let total = t0.elapsed();

@@ -5,11 +5,49 @@
 //! records — one line per root-to-leaf branch, shared prefixes repeated,
 //! session id per tree — i.e. what an agentic runtime actually logs and
 //! what `tree-train ingest` folds back (the smoke-test inverse pair).
+//! `--interleave N` round-robins the records of `N` sessions at a time,
+//! emulating runtimes that log concurrent tasks — the shape that stresses
+//! `max_open_sessions` and the streaming-rollouts `shuffle_window`.
 
 use tree_train::ingest;
 use tree_train::tree::gen::{self, Overlap};
 use tree_train::tree::{io, metrics, TrajectoryTree};
 
+/// Round-robin the records of up to `group` adjacent sessions: with
+/// per-session record runs `[a a a] [b b] [c c c]` and `group = 2` the
+/// output is `a b a b a  c c c` — deterministic, so smoke tests stay
+/// reproducible.
+fn interleave_sessions(
+    per_session: Vec<Vec<ingest::RolloutRecord>>,
+    group: usize,
+) -> Vec<ingest::RolloutRecord> {
+    let group = group.max(1);
+    let mut out = Vec::new();
+    let mut sessions = per_session.into_iter();
+    loop {
+        // consume the next group of sessions by value (no record clones)
+        let mut queues: Vec<std::collections::VecDeque<_>> =
+            sessions.by_ref().take(group).map(Into::into).collect();
+        if queues.is_empty() {
+            break;
+        }
+        loop {
+            let mut emitted = false;
+            for q in &mut queues {
+                if let Some(r) = q.pop_front() {
+                    out.push(r);
+                    emitted = true;
+                }
+            }
+            if !emitted {
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     overlap: &str,
     n_trees: usize,
@@ -17,6 +55,7 @@ pub fn run(
     vocab: i32,
     seed: u64,
     linearize: bool,
+    interleave: usize,
     out: &std::path::Path,
 ) -> anyhow::Result<()> {
     let trees: Vec<TrajectoryTree> = (0..n_trees)
@@ -35,11 +74,12 @@ pub fn run(
         })
         .collect();
     if linearize {
-        let records: Vec<ingest::RolloutRecord> = trees
+        let per_session: Vec<Vec<ingest::RolloutRecord>> = trees
             .iter()
             .enumerate()
-            .flat_map(|(i, t)| ingest::records_from_tree(t, &format!("sess-{i:05}")))
+            .map(|(i, t)| ingest::records_from_tree(t, &format!("sess-{i:05}")))
             .collect();
+        let records = interleave_sessions(per_session, interleave);
         ingest::save_rollouts(&records, out)?;
         let rollout_tokens: usize = records.iter().map(|r| r.len()).sum();
         let tree_tokens: usize = trees.iter().map(|t| t.n_tree()).sum();

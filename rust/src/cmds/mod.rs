@@ -10,6 +10,7 @@ pub mod fig8;
 pub mod gen_data;
 pub mod ingest;
 pub mod mem;
+pub mod pipeline_smoke;
 pub mod quality;
 pub mod train;
 pub mod verify;

@@ -1,0 +1,104 @@
+//! `tree-train pipeline-smoke` — end-to-end exercise of the streaming data
+//! layer + pipelined run loop, hermetically (no artifacts, no PJRT).
+//!
+//! Runs the same corpus twice through the real pipeline driver — once
+//! synchronous (`depth 0`), once pipelined — executing every planned device
+//! batch with the pure-f64 [`RefModel`]-backed
+//! [`HostExecutor`](tree_train::coordinator::pipeline::HostExecutor)
+//! (including its per-step SGD update, so losses depend on step order),
+//! and **fails unless the two runs are bit-identical** in losses and batch
+//! composition.  This is the determinism contract of docs/pipeline.md as a
+//! CI gate: streaming + pipelining change wall-clock and memory, never the
+//! training run.
+
+use std::path::Path;
+
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::coordinator::Mode;
+use tree_train::data::{CorpusSource, StreamingRolloutSource, StreamingTreeSource};
+use tree_train::ingest::IngestConfig;
+use tree_train::trainer::PlanSpec;
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    corpus: &Path,
+    format: &str,
+    mode: &str,
+    steps: u64,
+    trees_per_batch: usize,
+    depth: usize,
+    window: usize,
+    capacity: usize,
+    vocab: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let mode = match mode {
+        "tree" => Mode::Tree,
+        "baseline" => Mode::Baseline,
+        other => anyhow::bail!("unknown mode {other} (tree|baseline)"),
+    };
+    anyhow::ensure!(depth >= 1, "--pipeline-depth must be >= 1 (0 is the reference run)");
+    let source = |path: &Path| -> anyhow::Result<Box<dyn CorpusSource>> {
+        Ok(match format {
+            "trees" => Box::new(StreamingTreeSource::open(path, window, seed)?),
+            "rollouts" => Box::new(StreamingRolloutSource::open(
+                path,
+                IngestConfig::default(),
+                window,
+                seed,
+            )?),
+            other => anyhow::bail!("unknown format {other} (trees|rollouts)"),
+        })
+    };
+    let cfg = |d: usize| PipelineConfig {
+        mode,
+        steps,
+        trees_per_batch,
+        depth: d,
+        lr: 1e-2,
+        warmup: 0,
+    };
+    let spec = PlanSpec::for_host(capacity);
+
+    let mut sync_exec = HostExecutor::new(vocab, 8, seed);
+    let (sync_metrics, sync_summary) =
+        pipeline::run(&cfg(0), spec.clone(), source(corpus)?, &mut sync_exec)?;
+    let mut piped_exec = HostExecutor::new(vocab, 8, seed);
+    let (piped_metrics, piped_summary) =
+        pipeline::run(&cfg(depth), spec, source(corpus)?, &mut piped_exec)?;
+
+    for (a, b) in sync_metrics.iter().zip(&piped_metrics) {
+        anyhow::ensure!(
+            a.loss.to_bits() == b.loss.to_bits(),
+            "loss diverged at step {}: sync {} vs pipelined {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    anyhow::ensure!(
+        sync_exec.fingerprints == piped_exec.fingerprints,
+        "batch composition diverged between sync and pipelined runs"
+    );
+    // memory-bound gate: exact for tree corpora (shards never exceed the
+    // window).  Rollout folding may overshoot by one session flush (one
+    // tree per root-divergence class), so there the peak is reported but
+    // the hard bound lives in the controlled-corpus test suite.
+    if format == "trees" {
+        anyhow::ensure!(
+            sync_summary.peak_resident_trees <= window,
+            "peak resident trees {} exceeds shuffle window {window}",
+            sync_summary.peak_resident_trees
+        );
+    }
+    println!(
+        "pipeline smoke OK: {} steps ({} corpus), final loss {:.4} \
+         (bit-identical sync vs depth-{depth})",
+        steps,
+        format,
+        sync_metrics.last().map(|m| m.loss).unwrap_or(0.0)
+    );
+    println!("  sync:      {}", sync_summary.log_line());
+    println!("  pipelined: {}", piped_summary.log_line());
+    Ok(())
+}

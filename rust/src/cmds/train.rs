@@ -16,5 +16,9 @@ pub fn run(artifacts: &std::path::Path, config: &std::path::Path) -> anyhow::Res
         last.loss,
         last.tokens_per_sec()
     );
+    // the per-run pipeline summary: is planning hidden behind execution?
+    if let Some(s) = &coord.summary {
+        println!("{}", s.log_line());
+    }
     Ok(())
 }

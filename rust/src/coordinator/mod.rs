@@ -12,16 +12,29 @@
 //! the global-batch level (Eq. 5), so packing changes call count, never the
 //! update.  `forest_packing: false` in the run config restores the seed's
 //! one-call-per-tree behavior for ablations.
+//!
+//! [`Coordinator::run`] itself is a thin [`pipeline`] driver over three
+//! decoupled layers (docs/pipeline.md): a [`crate::data::CorpusSource`]
+//! streams `Arc`-shared trees in epoch-shuffled order (resident, or
+//! shard-streamed under `shuffle_window` for corpora that must not be fully
+//! resident), a planner — on a background thread when `pipeline_depth > 0`
+//! — turns them into [`crate::trainer::StepPlan`]s, and the trainer
+//! executes plans in step order.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::data::{CorpusSource, ResidentSource, StreamingRolloutSource, StreamingTreeSource};
 use crate::runtime::Runtime;
-use crate::util::json::Json;
+use crate::trainer::planner::{PlanSpec, StepPlan};
 use crate::trainer::{AdamWConfig, BaselineTrainer, CsvSink, StepMetrics, TreeTrainer};
 use crate::tree::TrajectoryTree;
+use crate::util::json::Json;
+
+pub mod pipeline;
 
 pub use crate::trainer::metrics::CsvSink as MetricsSink;
+pub use pipeline::{PipelineConfig, PipelineSummary, PlannedStep, StepExecutor};
 
 /// Run configuration (JSON on disk; see configs/*.json).
 #[derive(Debug, Clone)]
@@ -47,6 +60,15 @@ pub struct RunConfig {
     pub metrics_csv: Option<PathBuf>,
     /// Cross-tree Forest Packing (default on; off = seed's per-tree calls).
     pub forest_packing: bool,
+    /// Plan-queue depth of the pipelined run loop (default 1: double
+    /// buffering — plan batch N+1 while batch N executes).  `0` restores
+    /// the synchronous loop; both are step-for-step identical
+    /// (docs/pipeline.md determinism contract).
+    pub pipeline_depth: usize,
+    /// `0` (default): the corpus stays resident.  `N > 0`: stream the
+    /// corpus shard-by-shard with at most `N` trees resident, re-reading
+    /// (rollouts: re-folding) the file each epoch.  Requires `corpus`.
+    pub shuffle_window: usize,
 }
 
 impl RunConfig {
@@ -56,7 +78,7 @@ impl RunConfig {
             "baseline" => Mode::Baseline,
             other => anyhow::bail!("unknown mode {other}"),
         };
-        Ok(Self {
+        let cfg = Self {
             model: v.req_str("model")?.to_string(),
             mode,
             steps: v.req_usize("steps")? as u64,
@@ -98,7 +120,15 @@ impl RunConfig {
             },
             metrics_csv: v.get("metrics_csv").and_then(|x| x.as_str()).map(PathBuf::from),
             forest_packing: v.get("forest_packing").and_then(|x| x.as_bool()).unwrap_or(true),
-        })
+            pipeline_depth: v.get("pipeline_depth").and_then(|x| x.as_usize()).unwrap_or(1),
+            shuffle_window: v.get("shuffle_window").and_then(|x| x.as_usize()).unwrap_or(0),
+        };
+        anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(
+            cfg.shuffle_window == 0 || cfg.corpus.is_some(),
+            "shuffle_window streams a corpus file; synthetic data is generated in memory"
+        );
+        Ok(cfg)
     }
 }
 
@@ -163,13 +193,34 @@ impl SyntheticSpec {
     }
 }
 
-/// Either trainer behind one interface.
+/// Either trainer behind one interface, split into explicit plan/execute
+/// halves: [`Self::plan_spec`] snapshots the engine-free planning data
+/// (what the pipeline's planner thread owns) and [`Self::execute`] consumes
+/// pre-built plans — both modes flow through the same pipeline, Baseline's
+/// "plan" being its linearized chain packing.
 pub enum AnyTrainer {
     Tree(TreeTrainer),
     Baseline(BaselineTrainer),
 }
 
 impl AnyTrainer {
+    /// The engine-free plan half (`Send`; see [`crate::trainer::PlanSpec`]).
+    pub fn plan_spec(&self) -> PlanSpec {
+        match self {
+            Self::Tree(t) => t.plan_spec(),
+            Self::Baseline(t) => t.plan_spec(),
+        }
+    }
+
+    /// Execute a pre-built step plan and apply the optimizer update.
+    pub fn execute(&mut self, plan: &StepPlan) -> crate::Result<StepMetrics> {
+        match (self, plan) {
+            (Self::Tree(t), StepPlan::Tree(p)) => t.execute_plan(p),
+            (Self::Baseline(t), StepPlan::Baseline(p)) => t.execute_plan(p),
+            _ => anyhow::bail!("plan/trainer mode mismatch (pipeline bug)"),
+        }
+    }
+
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
         match self {
             Self::Tree(t) => t.train_step(trees),
@@ -192,16 +243,130 @@ impl AnyTrainer {
     }
 }
 
-/// The run loop: data -> trainer -> metrics.
+/// Build the configured corpus source (the data layer of docs/pipeline.md).
+fn build_source(cfg: &RunConfig) -> crate::Result<Box<dyn CorpusSource>> {
+    if let Some(path) = &cfg.corpus {
+        match (cfg.corpus_format, cfg.shuffle_window) {
+            // line-by-line load with `path:line` parse errors
+            (CorpusFormat::Trees, 0) => {
+                let trees = crate::tree::io::load_corpus_iter(path)?
+                    .collect::<crate::Result<Vec<_>>>()?;
+                Ok(Box::new(ResidentSource::new(trees, cfg.seed)?))
+            }
+            (CorpusFormat::Trees, w) => {
+                Ok(Box::new(StreamingTreeSource::open(path, w, cfg.seed)?))
+            }
+            (CorpusFormat::Rollouts, 0) => {
+                let (trees, stats) = crate::ingest::fold_corpus(path, &cfg.ingest)?;
+                crate::info!(
+                    "ingest: {} rollouts ({} sessions) -> {} trees, measured \
+                     prefix-reuse {:.2}x ({} -> {} tokens)",
+                    stats.records_in,
+                    stats.sessions,
+                    stats.trees_out,
+                    stats.reuse_ratio(),
+                    stats.rollout_tokens_in,
+                    stats.tree_tokens_out
+                );
+                Ok(Box::new(ResidentSource::new(trees, cfg.seed)?))
+            }
+            (CorpusFormat::Rollouts, w) => Ok(Box::new(StreamingRolloutSource::open(
+                path,
+                cfg.ingest.clone(),
+                w,
+                cfg.seed,
+            )?)),
+        }
+    } else if let Some(spec) = &cfg.synthetic {
+        Ok(Box::new(ResidentSource::new(spec.generate(cfg.seed)?, cfg.seed)?))
+    } else {
+        anyhow::bail!("config needs `corpus` or `synthetic`")
+    }
+}
+
+/// Adapts the trainer + metric sinks to the pipeline's executor seam.
+struct TrainerExecutor<'a> {
+    trainer: &'a mut AnyTrainer,
+    sink: &'a mut Option<CsvSink>,
+    steps: u64,
+    /// 0-based count of executed steps — the log cadence (`m.step` is the
+    /// engine's 1-based post-update counter, and the seed loop's cadence
+    /// was 0-based: log the first step, every 10th, and the last).
+    done: u64,
+}
+
+impl StepExecutor for TrainerExecutor<'_> {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
+        if planned.step == 0 {
+            crate::info!(
+                "plan: {} trees -> {} program calls per global batch",
+                planned.trees,
+                planned.plan.program_calls()
+            );
+        }
+        self.trainer.set_lr(planned.lr);
+        self.trainer.execute(&planned.plan)
+    }
+
+    fn on_step(&mut self, m: &StepMetrics) -> crate::Result<()> {
+        if let Some(s) = self.sink.as_mut() {
+            s.log(m)?;
+        }
+        let idx = self.done;
+        self.done += 1;
+        if idx % 10 == 0 || idx + 1 == self.steps {
+            crate::info!(
+                "train step={} loss={:.4} tok/s={:.0} wall_ms={} plan_ms={:.1} \
+                 stall_ms={:.1} calls={}",
+                m.step,
+                m.loss,
+                m.tokens_per_sec(),
+                m.wall.as_millis(),
+                m.plan_ms,
+                m.stall_ms,
+                m.exec_calls
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The run loop: data layer -> pipeline -> trainer -> metrics.
 pub struct Coordinator {
     pub cfg: RunConfig,
     pub trainer: AnyTrainer,
-    pub data: Vec<TrajectoryTree>,
+    /// Consumed by [`Self::run`] (the pipeline's planner owns it while the
+    /// run is live).
+    source: Option<Box<dyn CorpusSource>>,
     sink: Option<CsvSink>,
+    /// Pipeline accounting of the last completed run.
+    pub summary: Option<PipelineSummary>,
 }
 
 impl Coordinator {
     pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> crate::Result<Self> {
+        let source = build_source(&cfg)?;
+        Self::with_source(rt, cfg, source)
+    }
+
+    /// Construct with an explicit in-memory tree set, served resident
+    /// under the run seed — for examples/tests that filter or synthesize
+    /// data outside the config surface (the config's `corpus`/`synthetic`
+    /// entries are then never loaded or generated).
+    pub fn with_corpus(
+        rt: Arc<Runtime>,
+        cfg: RunConfig,
+        trees: Vec<TrajectoryTree>,
+    ) -> crate::Result<Self> {
+        let source: Box<dyn CorpusSource> = Box::new(ResidentSource::new(trees, cfg.seed)?);
+        Self::with_source(rt, cfg, source)
+    }
+
+    fn with_source(
+        rt: Arc<Runtime>,
+        cfg: RunConfig,
+        source: Box<dyn CorpusSource>,
+    ) -> crate::Result<Self> {
         let opt = AdamWConfig { lr: cfg.lr, ..Default::default() };
         let trainer = match cfg.mode {
             Mode::Tree => {
@@ -211,92 +376,44 @@ impl Coordinator {
             }
             Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),
         };
-        let data = if let Some(path) = &cfg.corpus {
-            match cfg.corpus_format {
-                // line-by-line load with `path:line` parse errors; the tree
-                // set itself stays resident for cross-epoch shuffling (§3.4)
-                CorpusFormat::Trees => crate::tree::io::load_corpus_iter(path)?
-                    .collect::<crate::Result<Vec<_>>>()?,
-                CorpusFormat::Rollouts => {
-                    let (trees, stats) = crate::ingest::fold_corpus(path, &cfg.ingest)?;
-                    crate::info!(
-                        "ingest: {} rollouts ({} sessions) -> {} trees, measured \
-                         prefix-reuse {:.2}x ({} -> {} tokens)",
-                        stats.records_in,
-                        stats.sessions,
-                        stats.trees_out,
-                        stats.reuse_ratio(),
-                        stats.rollout_tokens_in,
-                        stats.tree_tokens_out
-                    );
-                    trees
-                }
-            }
-        } else if let Some(spec) = &cfg.synthetic {
-            spec.generate(cfg.seed)?
-        } else {
-            anyhow::bail!("config needs `corpus` or `synthetic`")
-        };
-        anyhow::ensure!(!data.is_empty(), "empty dataset");
+        crate::info!("data: {} (pipeline depth {})", source.describe(), cfg.pipeline_depth);
         let sink = match &cfg.metrics_csv {
             Some(p) => Some(CsvSink::create(p)?),
             None => None,
         };
-        Ok(Self { cfg, trainer, data, sink })
+        Ok(Self { cfg, trainer, source: Some(source), sink, summary: None })
     }
 
     /// Run the configured number of steps; returns per-step metrics.
     ///
-    /// Each step: assemble the global batch of trees, *plan* it into packed
-    /// device batches (tree mode), then execute the stream and update.
+    /// Planner side (background thread when `pipeline_depth > 0`): assemble
+    /// the global batch, compute the scheduled LR, plan packed device
+    /// batches.  Executor side (this thread): execute plans in step order
+    /// and update.  See [`pipeline`] for the determinism contract.
     pub fn run(&mut self) -> crate::Result<Vec<StepMetrics>> {
-        let mut rng = crate::tree::gen::rng(self.cfg.seed);
-        let mut order: Vec<usize> = (0..self.data.len()).collect();
-        let mut cursor = 0usize;
-        let mut all = Vec::with_capacity(self.cfg.steps as usize);
-        for step in 0..self.cfg.steps {
-            // epoch boundary: reshuffle between trees (§3.4)
-            if cursor + self.cfg.trees_per_batch > order.len() {
-                rng.shuffle(&mut order);
-                cursor = 0;
-            }
-            let batch: Vec<TrajectoryTree> = order[cursor..cursor + self.cfg.trees_per_batch]
-                .iter()
-                .map(|&i| self.data[i].clone())
-                .collect();
-            cursor += self.cfg.trees_per_batch;
-            let lr =
-                crate::trainer::adamw::cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
-            self.trainer.set_lr(lr);
-            let m = match &mut self.trainer {
-                AnyTrainer::Tree(t) => {
-                    let plan = t.plan_global_batch(&batch)?;
-                    if step == 0 {
-                        crate::info!(
-                            "forest packing: {} trees -> {} program calls per global batch",
-                            batch.len(),
-                            plan.program_calls()
-                        );
-                    }
-                    t.execute_plan(&plan)?
-                }
-                AnyTrainer::Baseline(t) => t.train_step(&batch)?,
-            };
-            if let Some(s) = &mut self.sink {
-                s.log(&m)?;
-            }
-            if step % 10 == 0 || step + 1 == self.cfg.steps {
-                crate::info!(
-                    "train step={} loss={:.4} tok/s={:.0} wall_ms={} calls={}",
-                    m.step,
-                    m.loss,
-                    m.tokens_per_sec(),
-                    m.wall.as_millis(),
-                    m.exec_calls
-                );
-            }
-            all.push(m);
-        }
-        Ok(all)
+        let source = self
+            .source
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("run() already consumed the corpus source"))?;
+        let pcfg = PipelineConfig {
+            mode: self.cfg.mode,
+            steps: self.cfg.steps,
+            trees_per_batch: self.cfg.trees_per_batch,
+            depth: self.cfg.pipeline_depth,
+            lr: self.cfg.lr,
+            warmup: self.cfg.warmup,
+        };
+        let spec = self.trainer.plan_spec();
+        let mut exec = TrainerExecutor {
+            trainer: &mut self.trainer,
+            sink: &mut self.sink,
+            steps: self.cfg.steps,
+            done: 0,
+        };
+        let (metrics, summary) = pipeline::run(&pcfg, spec, source, &mut exec)?;
+        // callers surface the one-line summary (`tree-train train` prints
+        // it; see PipelineSummary::log_line)
+        self.summary = Some(summary);
+        Ok(metrics)
     }
 }

@@ -1,0 +1,364 @@
+//! The pipelined run loop: plan batch N+1 while batch N executes.
+//!
+//! Host-side planning (global-batch assembly + Forest Packing + partition
+//! specs) used to sit on the critical path of every optimizer step.  This
+//! module double-buffers it: a background **planner thread** owns the
+//! [`CorpusSource`] (and with it the shuffle RNG) plus the LR schedule,
+//! assembles each step's batch, plans it through a [`PlanSpec`], and hands
+//! finished [`PlannedStep`]s to the main thread over a bounded channel of
+//! depth `pipeline_depth`.  The main thread only executes.
+//!
+//! **Determinism contract.**  Everything order-sensitive — epoch shuffling,
+//! batch assembly, the cosine LR schedule — lives on the planner side and
+//! is a pure function of `(seed, step)`.  Plans are tagged with their step
+//! id and the executor asserts it consumes them in order, so a pipelined
+//! run is *step-for-step identical* to the synchronous loop
+//! (`pipeline_depth: 0` runs the very same planner inline): same batches,
+//! same LR, same losses, same update — only wall-clock changes.  Verified
+//! by `tests/pipeline_equivalence.rs`.
+//!
+//! **Observability.**  Each step's [`StepMetrics`] gains `plan_ms` (host
+//! planning cost) and `stall_ms` (time the executor actually waited for the
+//! plan; equals `plan_ms` in synchronous mode, ~0 when the pipeline hides
+//! planning), and the run returns a [`PipelineSummary`] with the means, the
+//! prefetch hit rate and the corpus source's peak resident tree count.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::data::CorpusSource;
+use crate::trainer::adamw::cosine_lr;
+use crate::trainer::planner::{PlanSpec, StepPlan};
+use crate::trainer::refmodel::RefModel;
+use crate::trainer::StepMetrics;
+
+use super::Mode;
+
+/// Run-loop geometry handed to [`run`] (a mode-agnostic slice of
+/// [`super::RunConfig`]).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub mode: Mode,
+    pub steps: u64,
+    pub trees_per_batch: usize,
+    /// Bounded plan-queue depth; `0` = synchronous (plan inline on the
+    /// executor thread — the seed behavior, preserved for ablations).
+    pub depth: usize,
+    /// Base LR + warmup of the cosine schedule (computed planner-side so
+    /// the executor is a pure plan consumer).
+    pub lr: f64,
+    pub warmup: u64,
+}
+
+/// One fully-planned optimizer step, tagged with its step id.
+pub struct PlannedStep {
+    pub step: u64,
+    /// Cosine-schedule LR for this step.
+    pub lr: f64,
+    /// Trees in this global batch.
+    pub trees: usize,
+    pub plan: StepPlan,
+    /// Host planning time (batch assembly + packing) for this step.
+    pub plan_ms: f64,
+}
+
+/// The execute half of the loop: consumes plans in step order.
+pub trait StepExecutor {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics>;
+
+    /// Per-step observation hook (CSV sinks, progress logs); called after
+    /// the driver fills `plan_ms`/`stall_ms`.
+    fn on_step(&mut self, _m: &StepMetrics) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+/// Whole-run pipeline accounting.
+#[derive(Debug, Clone)]
+pub struct PipelineSummary {
+    pub depth: usize,
+    pub steps: u64,
+    pub mean_plan_ms: f64,
+    pub mean_stall_ms: f64,
+    /// Steps whose plan was already buffered when the executor asked.
+    pub prefetch_hits: u64,
+    /// Peak simultaneously-resident tree count in the corpus source.
+    pub peak_resident_trees: usize,
+}
+
+impl PipelineSummary {
+    pub fn hit_rate(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / self.steps as f64
+    }
+
+    /// The one-line per-run summary `tree-train train` logs.
+    pub fn log_line(&self) -> String {
+        format!(
+            "pipeline: depth={} mean plan {:.2} ms, mean stall {:.2} ms, \
+             prefetch hit rate {:.0}%, peak resident trees {}",
+            self.depth,
+            self.mean_plan_ms,
+            self.mean_stall_ms,
+            self.hit_rate() * 100.0,
+            self.peak_resident_trees
+        )
+    }
+}
+
+/// The planner half: source + spec + schedule, stepped in order.  Runs
+/// inline (synchronous mode) or on the background thread (pipelined) —
+/// the *same* code either way, which is what makes the two modes
+/// equivalent by construction.
+struct Planner {
+    cfg: PipelineConfig,
+    spec: PlanSpec,
+    source: Box<dyn CorpusSource>,
+    next_step: u64,
+}
+
+impl Planner {
+    fn plan_next(&mut self) -> crate::Result<PlannedStep> {
+        let step = self.next_step;
+        self.next_step += 1;
+        let t0 = Instant::now();
+        let batch = self.source.next_batch(self.cfg.trees_per_batch)?;
+        let lr = cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
+        let plan = match self.cfg.mode {
+            Mode::Tree => StepPlan::Tree(self.spec.plan_tree(&batch)?),
+            Mode::Baseline => StepPlan::Baseline(self.spec.plan_baseline(&batch)?),
+        };
+        Ok(PlannedStep {
+            step,
+            lr,
+            trees: batch.len(),
+            plan,
+            plan_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// Drive the run loop: `cfg.steps` steps of plan → execute, synchronous at
+/// `depth == 0`, double-buffered through a planner thread otherwise.
+pub fn run<E: StepExecutor>(
+    cfg: &PipelineConfig,
+    spec: PlanSpec,
+    source: Box<dyn CorpusSource>,
+    exec: &mut E,
+) -> crate::Result<(Vec<StepMetrics>, PipelineSummary)> {
+    anyhow::ensure!(cfg.trees_per_batch >= 1, "trees_per_batch must be >= 1");
+    let mut planner = Planner { cfg: cfg.clone(), spec, source, next_step: 0 };
+    let mut all = Vec::with_capacity(cfg.steps as usize);
+    let mut plan_total = 0.0f64;
+    let mut stall_total = 0.0f64;
+    let mut hits = 0u64;
+
+    let peak_resident = if cfg.depth == 0 {
+        // synchronous: the executor waits out every plan (stall == plan)
+        for _ in 0..cfg.steps {
+            let planned = planner.plan_next()?;
+            let mut m = exec.execute(&planned)?;
+            m.plan_ms = planned.plan_ms;
+            m.stall_ms = planned.plan_ms;
+            plan_total += m.plan_ms;
+            stall_total += m.stall_ms;
+            exec.on_step(&m)?;
+            all.push(m);
+        }
+        planner.source.peak_resident()
+    } else {
+        let (tx, rx) = mpsc::sync_channel::<crate::Result<PlannedStep>>(cfg.depth);
+        let steps = cfg.steps;
+        let handle = std::thread::Builder::new()
+            .name("tt-planner".into())
+            .spawn(move || {
+                for _ in 0..steps {
+                    let item = planner.plan_next();
+                    let failed = item.is_err();
+                    // receiver gone (executor error) or planner error: stop
+                    if tx.send(item).is_err() || failed {
+                        break;
+                    }
+                }
+                planner.source
+            })
+            .expect("spawn planner thread");
+        for expected in 0..cfg.steps {
+            // a buffered plan is a prefetch hit; otherwise the wait is the
+            // residual (non-overlapped) planning cost
+            let (item, stall_ms) = match rx.try_recv() {
+                Ok(item) => {
+                    hits += 1;
+                    (item, 0.0)
+                }
+                Err(mpsc::TryRecvError::Empty) => {
+                    let t0 = Instant::now();
+                    let item = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("planner thread exited early"))?;
+                    (item, t0.elapsed().as_secs_f64() * 1e3)
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    anyhow::bail!("planner thread exited early")
+                }
+            };
+            let planned = item?;
+            anyhow::ensure!(
+                planned.step == expected,
+                "pipeline step id mismatch: planned {} executed {expected}",
+                planned.step
+            );
+            let mut m = exec.execute(&planned)?;
+            m.plan_ms = planned.plan_ms;
+            m.stall_ms = stall_ms;
+            plan_total += m.plan_ms;
+            stall_total += m.stall_ms;
+            exec.on_step(&m)?;
+            all.push(m);
+        }
+        drop(rx);
+        let source = handle.join().map_err(|_| anyhow::anyhow!("planner thread panicked"))?;
+        source.peak_resident()
+    };
+
+    let n = (cfg.steps as f64).max(1.0);
+    Ok((
+        all,
+        PipelineSummary {
+            depth: cfg.depth,
+            steps: cfg.steps,
+            mean_plan_ms: plan_total / n,
+            mean_stall_ms: stall_total / n,
+            prefetch_hits: hits,
+            peak_resident_trees: peak_resident,
+        },
+    ))
+}
+
+/// A hermetic [`StepExecutor`] over the [`RefModel`] reference executor:
+/// runs every planned device batch in pure f64 and (optionally) applies a
+/// plain-SGD update to the embedding table, so end-to-end pipeline behavior
+/// — including the step/LR coupling — is testable in environments without
+/// the native PJRT backend.  Used by `tests/pipeline_equivalence.rs`,
+/// `benches/pipeline_bench.rs` and the `tree-train pipeline-smoke` command.
+pub struct HostExecutor {
+    pub model: RefModel,
+    /// Run the model for real (losses + gradients).  Overlap-timing
+    /// benches disable it — the per-step cost becomes exactly
+    /// `exec_floor` — and rely on fingerprints for equivalence.
+    pub run_model: bool,
+    /// Apply `embed -= lr * d_embed / weight_sum` each step (makes the
+    /// loss stream depend on execution order — a stricter equivalence).
+    pub sgd: bool,
+    /// Optional per-step execution-time floor (sleep) emulating device
+    /// latency — benches only: gives the planner something to overlap
+    /// with, without burning the core the planner needs.
+    pub exec_floor: Option<std::time::Duration>,
+    /// One fingerprint per executed step: a hash of the step id, LR bits
+    /// and every batch's metadata — "batch composition" as one number.
+    pub fingerprints: Vec<u64>,
+}
+
+impl HostExecutor {
+    pub fn new(vocab: usize, dim: usize, seed: u64) -> Self {
+        Self {
+            model: RefModel::seeded(vocab, dim, seed),
+            run_model: true,
+            sgd: true,
+            exec_floor: None,
+            fingerprints: Vec::new(),
+        }
+    }
+}
+
+/// FNV-1a over a byte stream (stable, dependency-free).
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+impl StepExecutor for HostExecutor {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let batches: Vec<&crate::trainer::Batch> = match &planned.plan {
+            StepPlan::Tree(p) => {
+                anyhow::ensure!(
+                    p.relay.is_none(),
+                    "HostExecutor covers gateway-free plans (tree exceeds host capacity)"
+                );
+                p.forests.iter().map(|fb| &fb.batch).collect()
+            }
+            StepPlan::Baseline(p) => p.batches.iter().collect(),
+        };
+        let mut h = 0xcbf29ce484222325u64;
+        fnv1a(&mut h, &planned.step.to_le_bytes());
+        fnv1a(&mut h, &planned.lr.to_bits().to_le_bytes());
+        let mut loss_sum = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        let mut d_embed = vec![0.0f64; self.model.embed.len()];
+        let mut device_tokens = 0usize;
+        for b in &batches {
+            if self.run_model {
+                let out = self.model.step(b)?;
+                loss_sum += out.loss_sum;
+                weight_sum += out.weight_sum;
+                for (g, d) in d_embed.iter_mut().zip(&out.d_embed) {
+                    *g += d;
+                }
+            }
+            device_tokens += b.capacity;
+            fnv1a(&mut h, &(b.capacity as u64).to_le_bytes());
+            // every metadata channel the programs consume: tokens and
+            // weights, but also the attention topology (prev_idx, k_order,
+            // k_exit, k_bias) and positions — a divergence in any of them
+            // is a composition change even if token order matches
+            for t in &b.tokens {
+                fnv1a(&mut h, &t.to_le_bytes());
+            }
+            for w in &b.weights {
+                fnv1a(&mut h, &w.to_bits().to_le_bytes());
+            }
+            for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
+                for x in v {
+                    fnv1a(&mut h, &x.to_le_bytes());
+                }
+            }
+            for kb in &b.k_bias {
+                fnv1a(&mut h, &kb.to_bits().to_le_bytes());
+            }
+        }
+        self.fingerprints.push(h);
+        if self.sgd && weight_sum > 0.0 {
+            for (e, g) in self.model.embed.iter_mut().zip(&d_embed) {
+                *e -= planned.lr * g / weight_sum;
+            }
+        }
+        if let Some(floor) = self.exec_floor {
+            // sleep, not spin: a real device wait blocks without burning
+            // the core, so the planner thread can actually overlap even
+            // on a 2-vCPU CI runner
+            let elapsed = t0.elapsed();
+            if elapsed < floor {
+                std::thread::sleep(floor - elapsed);
+            }
+        }
+        Ok(StepMetrics {
+            step: planned.step,
+            loss: if weight_sum > 0.0 { loss_sum / weight_sum } else { 0.0 },
+            weight_sum,
+            device_tokens,
+            tree_tokens: planned.plan.tree_tokens(),
+            flat_tokens: planned.plan.flat_tokens(),
+            wall: t0.elapsed(),
+            exec_calls: batches.len() as u64,
+            forest_batches: batches.len() as u64,
+            grad_norm: 0.0,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
+        })
+    }
+}

@@ -1,0 +1,69 @@
+//! Corpus sources: the data layer between on-disk corpora and the run loop.
+//!
+//! The run loop ([`crate::coordinator::pipeline`]) consumes one abstraction:
+//! an endless, epoch-shuffled stream of reference-counted trees.
+//! [`CorpusSource::next_tree`] hands out `Arc<TrajectoryTree>`, so global
+//! batches are O(1) per tree to assemble (no per-step deep clones) and the
+//! stream never drops an epoch tail — when `trees_per_batch` does not divide
+//! the corpus, a batch simply spans the epoch boundary and every tree still
+//! trains exactly once per epoch.
+//!
+//! Three implementations, one determinism contract:
+//!
+//! * [`ResidentSource`] — the whole corpus in memory (the seed behavior;
+//!   also serves synthetic corpora, which are generated in memory anyway).
+//! * [`StreamingTreeSource`] — a tree-format JSONL corpus read
+//!   shard-by-shard: at most `shuffle_window` trees are resident at once,
+//!   each epoch re-reads the file, so a multi-GB corpus trains in bounded
+//!   memory.
+//! * [`StreamingRolloutSource`] — raw linear rollout logs folded through
+//!   the ingest radix trie ([`crate::ingest`]) shard-by-shard: resident
+//!   memory is bounded by `shuffle_window` trees plus
+//!   `max_open_sessions` open tries, never by corpus size.
+//!
+//! **Determinism contract** (verified by `tests/pipeline_equivalence.rs`):
+//! epoch 0 is served in corpus order; every later epoch Fisher-Yates
+//! shuffles each shard (a window of at most `shuffle_window` consecutive
+//! trees; the whole corpus for the resident source) with the run-seed RNG.
+//! Each epoch's permutation is drawn fresh from the continuing RNG stream,
+//! so a streaming source whose window covers the corpus reproduces the
+//! resident order *exactly* — streaming is a memory knob, not a data-order
+//! change.  With a smaller window, shuffling is local to each shard: the
+//! trade is shuffle globality for memory, never epoch coverage.
+
+pub mod resident;
+pub mod streaming;
+
+pub use resident::ResidentSource;
+pub use streaming::{StreamingRolloutSource, StreamingTreeSource};
+
+use std::sync::Arc;
+
+use crate::tree::TrajectoryTree;
+
+/// An endless, epoch-shuffled stream of shared trees (see module docs for
+/// the determinism contract).  `Send`, so the pipeline's planner thread can
+/// own it.
+pub trait CorpusSource: Send {
+    /// Next tree in epoch-shuffled order; wraps to the next epoch at corpus
+    /// end (batches therefore carry epoch tails instead of dropping them).
+    fn next_tree(&mut self) -> crate::Result<Arc<TrajectoryTree>>;
+
+    /// Assemble one global batch — `n` consecutive stream trees.
+    fn next_batch(&mut self, n: usize) -> crate::Result<Vec<Arc<TrajectoryTree>>> {
+        (0..n).map(|_| self.next_tree()).collect()
+    }
+
+    /// Trees per epoch when known without a corpus scan (resident sources;
+    /// streaming sources learn it after the first full pass).
+    fn epoch_len(&self) -> Option<usize>;
+
+    /// Peak simultaneously-resident tree count observed so far — the
+    /// memory-bound claim the streaming sources exist to make
+    /// (≤ `shuffle_window` for tree corpora, ≤ `shuffle_window` + one
+    /// session flush for rollout corpora; the corpus size for resident).
+    fn peak_resident(&self) -> usize;
+
+    /// One-line description for run logs.
+    fn describe(&self) -> String;
+}

@@ -1,0 +1,438 @@
+//! Streaming corpus sources: bounded-memory shard-based epoch shuffling.
+//!
+//! Both sources serve the same contract as [`super::ResidentSource`] —
+//! an endless epoch stream of `Arc` trees — while keeping at most one
+//! *shard* (`shuffle_window` trees) resident.  An epoch is the file read
+//! front to back as a sequence of shards; shards are shuffled internally
+//! (epoch ≥ 1) with the continuing run-seed RNG and drained in order, so
+//! the stream is deterministic and, when the window covers the corpus,
+//! bit-identical to the resident source.  Each epoch re-reads (and for
+//! rollouts, re-folds) the file — the deliberate trade of the paper's
+//! "large trajectory trees in practice" regime: re-parsing is cheap and
+//! sequential; corpus-sized RAM is not.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::ingest::{IngestConfig, IngestStats, RolloutReader, SessionFolder};
+use crate::tree::io::{load_corpus_iter, CorpusIter};
+use crate::tree::TrajectoryTree;
+use crate::util::rng::Rng;
+
+use super::CorpusSource;
+
+/// Shared shard state: the drained-from queue, epoch/shuffle bookkeeping
+/// and the peak-resident accounting both streaming sources report.
+struct ShardState {
+    window: usize,
+    rng: Rng,
+    shard: VecDeque<Arc<TrajectoryTree>>,
+    /// Epochs *finished* (0 while the first pass is still streaming —
+    /// shards of epoch 0 are served in corpus order, later ones shuffled).
+    epochs_done: u64,
+    seen_this_epoch: usize,
+    epoch_len: Option<usize>,
+    peak_resident: usize,
+}
+
+impl ShardState {
+    fn new(window: usize, seed: u64) -> Self {
+        Self {
+            window,
+            rng: crate::tree::gen::rng(seed),
+            shard: VecDeque::new(),
+            epochs_done: 0,
+            seen_this_epoch: 0,
+            epoch_len: None,
+            peak_resident: 0,
+        }
+    }
+
+    /// Install `buf` as the live shard (shuffled from epoch 1 on).
+    fn install(&mut self, mut buf: Vec<Arc<TrajectoryTree>>) {
+        debug_assert!(!buf.is_empty());
+        self.seen_this_epoch += buf.len();
+        if self.epochs_done > 0 {
+            self.rng.shuffle(&mut buf);
+        }
+        self.peak_resident = self.peak_resident.max(buf.len());
+        self.shard = buf.into();
+    }
+
+    /// Record an end-of-file; errors on an empty corpus.
+    fn rollover(&mut self, path: &Path) -> crate::Result<()> {
+        anyhow::ensure!(self.seen_this_epoch > 0, "empty corpus {}", path.display());
+        self.epoch_len = Some(self.seen_this_epoch);
+        self.seen_this_epoch = 0;
+        self.epochs_done += 1;
+        Ok(())
+    }
+}
+
+/// Streaming source over a tree-format JSONL corpus (`tree/io.rs`): at most
+/// `shuffle_window` trees resident, each epoch re-reads the file.
+pub struct StreamingTreeSource {
+    path: PathBuf,
+    reader: Option<CorpusIter>,
+    state: ShardState,
+}
+
+impl StreamingTreeSource {
+    pub fn open(path: &Path, shuffle_window: usize, seed: u64) -> crate::Result<Self> {
+        anyhow::ensure!(shuffle_window >= 1, "shuffle_window must be >= 1");
+        let mut src = Self {
+            path: path.to_path_buf(),
+            reader: None,
+            state: ShardState::new(shuffle_window, seed),
+        };
+        src.refill()?; // surface open/parse/empty errors at construction
+        Ok(src)
+    }
+
+    fn refill(&mut self) -> crate::Result<()> {
+        debug_assert!(self.state.shard.is_empty());
+        loop {
+            if self.reader.is_none() {
+                self.reader = Some(load_corpus_iter(&self.path)?);
+            }
+            let reader = self.reader.as_mut().expect("just ensured");
+            let mut buf = Vec::new();
+            while buf.len() < self.state.window {
+                match reader.next() {
+                    Some(t) => buf.push(Arc::new(t?)),
+                    None => break,
+                }
+            }
+            if buf.is_empty() {
+                // end of epoch: close, account, reopen on the next loop
+                self.reader = None;
+                self.state.rollover(&self.path)?;
+                continue;
+            }
+            self.state.install(buf);
+            return Ok(());
+        }
+    }
+}
+
+impl CorpusSource for StreamingTreeSource {
+    fn next_tree(&mut self) -> crate::Result<Arc<TrajectoryTree>> {
+        if self.state.shard.is_empty() {
+            self.refill()?;
+        }
+        Ok(self.state.shard.pop_front().expect("refill leaves a non-empty shard"))
+    }
+
+    fn epoch_len(&self) -> Option<usize> {
+        self.state.epoch_len
+    }
+
+    fn peak_resident(&self) -> usize {
+        self.state.peak_resident
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "streaming trees: {} (window {})",
+            self.path.display(),
+            self.state.window
+        )
+    }
+}
+
+/// Streaming source over raw linear rollout logs: records fold through the
+/// ingest radix trie ([`crate::ingest::SessionFolder`]) as they are read,
+/// and completed trees are sharded/shuffled exactly like the tree source.
+/// Resident memory: ≤ `shuffle_window` trees (plus the trees of at most one
+/// session flush in flight) + `max_open_sessions` open tries — never the
+/// corpus.  Each epoch re-folds the file; the fold is deterministic, so so
+/// is the stream.
+pub struct StreamingRolloutSource {
+    path: PathBuf,
+    cfg: IngestConfig,
+    reader: Option<RolloutReader<BufReader<std::fs::File>>>,
+    folder: Option<SessionFolder>,
+    /// Folded trees not yet sharded (file order; carries the ≤ one-flush
+    /// overshoot between shards).
+    pending: VecDeque<Arc<TrajectoryTree>>,
+    /// The file is exhausted and `pending` holds the epoch tail: serve it
+    /// out as shards *before* accounting the epoch boundary and re-folding.
+    rollover_due: bool,
+    state: ShardState,
+    /// First-epoch ingest accounting (logged once at the first epoch end).
+    stats: Option<IngestStats>,
+}
+
+impl StreamingRolloutSource {
+    pub fn open(
+        path: &Path,
+        cfg: IngestConfig,
+        shuffle_window: usize,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(shuffle_window >= 1, "shuffle_window must be >= 1");
+        let mut src = Self {
+            path: path.to_path_buf(),
+            cfg,
+            reader: None,
+            folder: None,
+            pending: VecDeque::new(),
+            rollover_due: false,
+            state: ShardState::new(shuffle_window, seed),
+            stats: None,
+        };
+        src.refill()?;
+        Ok(src)
+    }
+
+    /// First-epoch ingest statistics, once the first full fold completed.
+    pub fn stats(&self) -> Option<&IngestStats> {
+        self.stats.as_ref()
+    }
+
+    fn track_peak(&mut self) {
+        let resident = self.pending.len() + self.state.shard.len();
+        self.state.peak_resident = self.state.peak_resident.max(resident);
+    }
+
+    /// Fold records into `pending` until a full window is buffered or the
+    /// epoch ends; `true` when the epoch ended.
+    fn pump(&mut self) -> crate::Result<bool> {
+        if self.folder.is_none() {
+            self.folder = Some(SessionFolder::new(self.cfg.clone()));
+            self.reader = Some(RolloutReader::open(&self.path)?);
+        }
+        let mut out = Vec::new();
+        while self.pending.len() < self.state.window {
+            match self.reader.as_mut().expect("set with folder").next() {
+                Some(rec) => {
+                    self.folder.as_mut().expect("set above").push(&rec?, &mut out)?;
+                }
+                None => {
+                    // end of file: drain open sessions one LRU flush at a
+                    // time so memory stays sharded even at the epoch tail
+                    if !self.folder.as_mut().expect("set above").flush_lru(&mut out) {
+                        let folder = self.folder.take().expect("checked above");
+                        self.reader = None;
+                        let mut tail = Vec::new();
+                        let stats = folder.finish(&mut tail);
+                        debug_assert!(tail.is_empty(), "drained folder has no sessions left");
+                        if self.stats.is_none() && stats.records_in > 0 {
+                            crate::info!(
+                                "ingest(stream): {} rollouts ({} sessions) -> {} trees, \
+                                 measured prefix-reuse {:.2}x ({} -> {} tokens)",
+                                stats.records_in,
+                                stats.sessions,
+                                stats.trees_out,
+                                stats.reuse_ratio(),
+                                stats.rollout_tokens_in,
+                                stats.tree_tokens_out
+                            );
+                            self.stats = Some(stats);
+                        }
+                        return Ok(true);
+                    }
+                }
+            }
+            self.pending.extend(out.drain(..).map(Arc::new));
+            self.track_peak();
+        }
+        Ok(false)
+    }
+
+    fn refill(&mut self) -> crate::Result<()> {
+        debug_assert!(self.state.shard.is_empty());
+        loop {
+            // top up the buffer — unless the epoch tail is still draining
+            if self.pending.len() < self.state.window && !self.rollover_due && self.pump()? {
+                self.rollover_due = true;
+            }
+            if self.pending.is_empty() {
+                // nothing buffered: the epoch just ended (or the corpus is
+                // empty, which rollover rejects)
+                self.state.rollover(&self.path)?;
+                self.rollover_due = false;
+                continue;
+            }
+            let take = self.pending.len().min(self.state.window);
+            let buf: Vec<Arc<TrajectoryTree>> = self.pending.drain(..take).collect();
+            self.state.install(buf);
+            self.track_peak();
+            return Ok(());
+        }
+    }
+}
+
+impl CorpusSource for StreamingRolloutSource {
+    fn next_tree(&mut self) -> crate::Result<Arc<TrajectoryTree>> {
+        if self.state.shard.is_empty() {
+            self.refill()?;
+        }
+        Ok(self.state.shard.pop_front().expect("refill leaves a non-empty shard"))
+    }
+
+    fn epoch_len(&self) -> Option<usize> {
+        self.state.epoch_len
+    }
+
+    fn peak_resident(&self) -> usize {
+        self.state.peak_resident
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "streaming rollouts: {} (window {}, max_open_sessions {})",
+            self.path.display(),
+            self.state.window,
+            self.cfg.max_open_sessions
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ResidentSource;
+    use crate::ingest::{records_from_tree, save_rollouts, RolloutRecord};
+    use crate::tree::gen;
+    use crate::tree::io::{save_corpus, temp_dir};
+
+    fn corpus(n: usize) -> Vec<TrajectoryTree> {
+        (0..n as u64).map(|s| gen::uniform(40 + s, 8, 5, 0.5)).collect()
+    }
+
+    fn drain(src: &mut dyn CorpusSource, n: usize) -> Vec<Arc<TrajectoryTree>> {
+        (0..n).map(|_| src.next_tree().unwrap()).collect()
+    }
+
+    #[test]
+    fn full_window_matches_resident_exactly() {
+        let dir = temp_dir("stream-full");
+        let trees = corpus(7);
+        let path = dir.join("corpus.jsonl");
+        save_corpus(&trees, &path).unwrap();
+        let mut resident = ResidentSource::new(trees.clone(), 11).unwrap();
+        // window > corpus: one shard per epoch, same Fisher-Yates stream
+        let mut streaming = StreamingTreeSource::open(&path, 64, 11).unwrap();
+        for step in 0..trees.len() * 3 {
+            assert_eq!(
+                resident.next_tree().unwrap(),
+                streaming.next_tree().unwrap(),
+                "diverged at stream position {step}"
+            );
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn small_window_bounds_memory_and_covers_epochs() {
+        let dir = temp_dir("stream-window");
+        let trees = corpus(12);
+        let path = dir.join("corpus.jsonl");
+        save_corpus(&trees, &path).unwrap();
+        let window = 4;
+        let mut src = StreamingTreeSource::open(&path, window, 5).unwrap();
+        for epoch in 0..3 {
+            let seen = drain(&mut src, trees.len());
+            for t in &trees {
+                assert_eq!(
+                    seen.iter().filter(|s| &***s == t).count(),
+                    1,
+                    "epoch {epoch}: every tree exactly once"
+                );
+            }
+        }
+        assert_eq!(src.epoch_len(), Some(trees.len()));
+        assert!(
+            src.peak_resident() <= window,
+            "peak resident {} must be bounded by the window {window}, not corpus {}",
+            src.peak_resident(),
+            trees.len()
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn epoch_zero_streams_in_file_order() {
+        let dir = temp_dir("stream-order");
+        let trees = corpus(9);
+        let path = dir.join("corpus.jsonl");
+        save_corpus(&trees, &path).unwrap();
+        let mut src = StreamingTreeSource::open(&path, 2, 0).unwrap();
+        for t in &trees {
+            assert_eq!(&*src.next_tree().unwrap(), t);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn empty_corpus_errors_at_open() {
+        let dir = temp_dir("stream-empty");
+        let path = dir.join("corpus.jsonl");
+        std::fs::write(&path, "").unwrap();
+        let err = StreamingTreeSource::open(&path, 4, 0).unwrap_err().to_string();
+        assert!(err.contains("empty corpus"), "got: {err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn rollout_corpus(dir: &Path) -> (PathBuf, Vec<RolloutRecord>) {
+        let trees = corpus(6);
+        let records: Vec<RolloutRecord> = trees
+            .iter()
+            .enumerate()
+            .flat_map(|(i, t)| records_from_tree(t, &format!("sess-{i:03}")))
+            .collect();
+        let path = dir.join("rollouts.jsonl");
+        save_rollouts(&records, &path).unwrap();
+        (path, records)
+    }
+
+    #[test]
+    fn rollouts_full_window_matches_resident_fold() {
+        let dir = temp_dir("stream-rollouts");
+        let (path, _) = rollout_corpus(&dir);
+        let cfg = IngestConfig::default();
+        let (folded, _) = crate::ingest::fold_corpus(&path, &cfg).unwrap();
+        let mut resident = ResidentSource::new(folded.clone(), 21).unwrap();
+        let mut streaming = StreamingRolloutSource::open(&path, cfg, 1024, 21).unwrap();
+        for step in 0..folded.len() * 3 {
+            assert_eq!(
+                resident.next_tree().unwrap(),
+                streaming.next_tree().unwrap(),
+                "diverged at stream position {step}"
+            );
+        }
+        assert!(streaming.stats().is_some(), "first epoch must record ingest stats");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rollouts_small_window_covers_each_epoch() {
+        let dir = temp_dir("stream-rollouts-win");
+        let (path, _) = rollout_corpus(&dir);
+        let cfg = IngestConfig::default();
+        let (folded, _) = crate::ingest::fold_corpus(&path, &cfg).unwrap();
+        let window = 2;
+        let mut src = StreamingRolloutSource::open(&path, cfg, window, 3).unwrap();
+        for epoch in 0..2 {
+            let seen = drain(&mut src, folded.len());
+            for t in &folded {
+                assert_eq!(
+                    seen.iter().filter(|s| &***s == t).count(),
+                    1,
+                    "epoch {epoch}: every folded tree exactly once"
+                );
+            }
+        }
+        // bound: window + at most one session flush in flight (sessions
+        // here are single-tree, so the overshoot is at most one tree)
+        assert!(
+            src.peak_resident() <= window + 1,
+            "peak {} too high for window {window}",
+            src.peak_resident()
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

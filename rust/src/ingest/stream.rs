@@ -82,14 +82,7 @@ impl SessionFolder {
             return store.insert(&rec.tokens, &rec.trainable, &rec.advantage);
         }
         if self.open.len() == self.cfg.max_open_sessions {
-            let lru_key = self
-                .open
-                .iter()
-                .min_by_key(|(_, (stamp, _))| *stamp)
-                .map(|(k, _)| k.clone())
-                .expect("capacity > 0 implies a nonempty map");
-            let (_, store) = self.open.remove(&lru_key).expect("key just found");
-            self.flush_store(store, out);
+            self.flush_lru(out);
         }
         let mut store = PrefixStore::new();
         let result = store.insert(&rec.tokens, &rec.trainable, &rec.advantage);
@@ -97,8 +90,35 @@ impl SessionFolder {
         result
     }
 
-    /// Flush every open session (in last-touch order, so output is
-    /// deterministic); returns the final corpus statistics.
+    /// Flush the single least-recently-touched open session into `out`;
+    /// `false` when no session is open.  Repeated calls drain sessions in
+    /// last-touch order — the same deterministic order as [`Self::finish`]
+    /// — which lets streaming corpus sources emit end-of-corpus trees
+    /// shard-by-shard instead of all at once.  Each call is an
+    /// O(open-sessions) min-stamp scan (same as eviction); to drain
+    /// *everything*, [`Self::finish`] sorts once instead.
+    pub fn flush_lru(&mut self, out: &mut Vec<TrajectoryTree>) -> bool {
+        let Some(lru_key) = self
+            .open
+            .iter()
+            .min_by_key(|(_, (stamp, _))| *stamp)
+            .map(|(k, _)| k.clone())
+        else {
+            return false;
+        };
+        let (_, store) = self.open.remove(&lru_key).expect("key just found");
+        self.flush_store(store, out);
+        true
+    }
+
+    /// Open sessions currently held (memory-bound observability).
+    pub fn open_sessions(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Flush every open session (in last-touch order — the same order as
+    /// draining via [`Self::flush_lru`], but one sort instead of repeated
+    /// min-scans); returns the final corpus statistics.
     pub fn finish(mut self, out: &mut Vec<TrajectoryTree>) -> IngestStats {
         let mut remaining: Vec<(u64, PrefixStore)> =
             std::mem::take(&mut self.open).into_values().collect();

@@ -28,6 +28,12 @@
 //!   gradients exactly, and reports the measured prefix-reuse ratio
 //!   (rollout tokens in / tree tokens out).  Streaming with a bounded
 //!   number of open sessions, so corpus size never bounds memory.
+//! * [`data`] — corpus sources: the run loop consumes one abstraction, an
+//!   endless epoch-shuffled stream of `Arc`-shared trees.  Resident (whole
+//!   corpus in memory) and streaming (shard-based epoch shuffling: at most
+//!   `shuffle_window` trees resident, re-reading/re-folding the file each
+//!   epoch) sources satisfy one determinism contract, so streaming is a
+//!   memory knob, never a data-order change.
 //! * [`trainer::Engine`] — the unified execution core: parameters + cached
 //!   literals, manifest-ordered program dispatch, f64 gradient
 //!   accumulation, Eq. 5-normalized AdamW updates.
@@ -39,7 +45,11 @@
 //!   numerically free — proven by `tests/forest_equivalence.rs` against
 //!   the first-principles [`trainer::refmodel::RefModel`] executor.
 //! * [`coordinator`] — global batches (§3.4) planned into streams of packed
-//!   device batches, then executed and optimizer-stepped.
+//!   device batches, then executed and optimizer-stepped.  The run loop is
+//!   *pipelined* ([`coordinator::pipeline`]): a planner thread assembles
+//!   and Forest-Packs batch N+1 while the engine executes batch N, with a
+//!   step-for-step determinism guarantee vs. the synchronous loop
+//!   (`pipeline_depth: 0`).
 //!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the
@@ -47,6 +57,7 @@
 //! the paper's evaluation (see DESIGN.md §3).
 
 pub mod coordinator;
+pub mod data;
 pub mod distsim;
 pub mod gateway;
 pub mod ingest;

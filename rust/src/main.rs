@@ -23,10 +23,17 @@ COMMANDS:
   gen-data <out.jsonl>     synthetic agentic corpus
                            [--overlap low|medium|high|por:X] [--n-trees N]
                            [--turns N] [--vocab V] [--seed S] [--linearize]
+                           [--interleave N  round-robin N sessions' records]
   ingest                   fold linear rollout logs into a tree corpus
                            --in rollouts.jsonl --out trees.jsonl [--stats]
                            [--max-seq-len N] [--max-open-sessions N]
                            [--stats-json FILE]
+  pipeline-smoke           streaming + pipelined run loop, hermetic (no
+                           artifacts): asserts sync ≡ pipelined bit-for-bit
+                           --corpus FILE [--format trees|rollouts]
+                           [--mode tree|baseline] [--steps N]
+                           [--trees-per-batch N] [--pipeline-depth D]
+                           [--shuffle-window W] [--capacity C] [--vocab V]
   fig5                     token accounting: flatten vs standard vs RF
                            [--tree-tokens N] [--capacity C]
   fig6                     agentic tree shapes + POR + depth profiles
@@ -120,7 +127,27 @@ fn main() -> anyhow::Result<()> {
                 rest.get("vocab", 256i32),
                 rest.get("seed", 0u64),
                 rest.has("linearize"),
+                rest.get("interleave", 1usize),
                 &PathBuf::from(out_file),
+            )
+        }
+        "pipeline-smoke" => {
+            let corpus = rest.str("corpus", "");
+            anyhow::ensure!(
+                !corpus.is_empty(),
+                "pipeline-smoke needs --corpus <file.jsonl>"
+            );
+            cmds::pipeline_smoke::run(
+                &PathBuf::from(corpus),
+                &rest.str("format", "rollouts"),
+                &rest.str("mode", "tree"),
+                rest.get("steps", 12u64),
+                rest.get("trees-per-batch", 4usize),
+                rest.get("pipeline-depth", 2usize),
+                rest.get("shuffle-window", 8usize),
+                rest.get("capacity", 8192usize),
+                rest.get("vocab", 256usize),
+                rest.get("seed", 0u64),
             )
         }
         "ingest" => {

@@ -17,15 +17,13 @@ use std::time::Instant;
 use crate::partition::forest;
 use crate::runtime::{HostTensor, Runtime};
 use crate::tree::dfs::DfsMeta;
-// The one linearization in the crate (shared with ingest round-trips and
-// `gen-data --linearize`): a chain is `tree::path_chain` output, nothing else.
-use crate::tree::linearize::path_chain;
 use crate::tree::TrajectoryTree;
 
 use super::adamw::AdamWConfig;
 use super::batch::{Batch, BatchOptions};
 use super::engine::Engine;
 use super::metrics::StepMetrics;
+use super::planner::{BaselinePlan, PlanSpec};
 
 pub struct BaselineTrainer {
     pub engine: Engine,
@@ -64,40 +62,39 @@ impl BaselineTrainer {
         self.engine.capacity()
     }
 
-    /// Linearize the global batch into packed chain batches.
-    pub fn pack_trees(&self, trees: &[TrajectoryTree]) -> crate::Result<Vec<Batch>> {
-        let capacity = self.engine.capacity();
-        let mut chains = Vec::new();
-        for tree in trees {
-            for path in tree.paths() {
-                let mut chain = path_chain(tree, &path);
-                if chain.n_tree() > capacity {
-                    anyhow::bail!(
-                        "path of {} tokens exceeds baseline capacity {} — the \
-                         baseline cannot sequence-pack it (tree training would \
-                         partition it); reduce path length or export a larger \
-                         bucket ({} nodes)",
-                        chain.n_tree(),
-                        capacity,
-                        chain.len()
-                    );
-                }
-                if let Some((chunk, _)) = self.engine.hybrid() {
-                    chain = chain.pad_for_chunks(chunk, 0);
-                }
-                chains.push(crate::tree::serialize(&chain));
-            }
-        }
-        pack_chains(&chains, capacity, &self.engine.batch_options())
+    /// Snapshot the engine-free planning half of this trainer.  Baseline
+    /// chain packing always packs (a packed batch of chains is just a
+    /// prefix forest that never shares), so `forest_packing` is fixed on.
+    pub fn plan_spec(&self) -> PlanSpec {
+        PlanSpec::from_engine(&self.engine, None, true)
     }
 
-    /// One optimizer step over the linearized global batch.
+    /// Linearize the global batch into packed chain batches.
+    pub fn pack_trees(&self, trees: &[TrajectoryTree]) -> crate::Result<Vec<Batch>> {
+        Ok(self.plan_spec().plan_baseline(trees)?.batches)
+    }
+
+    /// One optimizer step over the linearized global batch.  Outside the
+    /// pipeline there is nothing to overlap with, so planning is timed
+    /// here: `wall` covers plan + execute (the seed accounting the paper
+    /// figures compare on) and `plan_ms`/`stall_ms` record the plan share.
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
         let t0 = Instant::now();
-        let batches = self.pack_trees(trees)?;
+        let plan = self.plan_spec().plan_baseline(trees)?;
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut m = self.execute_plan(&plan)?;
+        m.wall = t0.elapsed();
+        m.plan_ms = plan_ms;
+        m.stall_ms = plan_ms;
+        Ok(m)
+    }
+
+    /// Execute a pre-built [`BaselinePlan`] and apply the optimizer update.
+    pub fn execute_plan(&mut self, plan: &BaselinePlan) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
         let mut gb = self.engine.grad_buffer();
         let mut device_tokens = 0usize;
-        for b in &batches {
+        for b in &plan.batches {
             self.engine.run_step_into(b, &mut gb)?;
             device_tokens += b.capacity;
         }
@@ -107,12 +104,14 @@ impl BaselineTrainer {
             loss: gb.mean_loss(),
             weight_sum: gb.weight_sum,
             device_tokens,
-            tree_tokens: trees.iter().map(|t| t.n_tree()).sum(),
-            flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
+            tree_tokens: plan.tree_tokens,
+            flat_tokens: plan.flat_tokens,
             wall: t0.elapsed(),
             exec_calls: gb.exec_calls,
-            forest_batches: batches.len() as u64,
+            forest_batches: plan.batches.len() as u64,
             grad_norm,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
         })
     }
 
@@ -135,6 +134,9 @@ impl BaselineTrainer {
 mod tests {
     use super::*;
     use crate::tree::gen;
+    // The one linearization in the crate (shared with ingest round-trips and
+    // `gen-data --linearize`): a chain is `tree::path_chain` output.
+    use crate::tree::linearize::path_chain;
 
     #[test]
     fn packing_preserves_tokens_and_weights() {

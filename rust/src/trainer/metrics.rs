@@ -21,6 +21,15 @@ pub struct StepMetrics {
     /// than the tree count whenever packing merged trees into one call.
     pub forest_batches: u64,
     pub grad_norm: f64,
+    /// Host-side planning time for this step's global batch (Forest
+    /// Packing + partition specs / chain packing).  Filled in by the
+    /// pipeline driver; 0 when the step was run outside the run loop.
+    pub plan_ms: f64,
+    /// Time the executor waited for this step's plan.  Synchronous loop
+    /// (`pipeline_depth: 0`): equals `plan_ms` — planning sits on the
+    /// critical path.  Pipelined: only the residual wait after overlap,
+    /// so `plan_ms - stall_ms` is the per-step win.
+    pub stall_ms: f64,
 }
 
 impl StepMetrics {
@@ -50,7 +59,7 @@ impl CsvSink {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             w,
-            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,reuse_ratio,wall_ms,exec_calls,forest_batches,grad_norm"
+            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm"
         )?;
         Ok(Self { w })
     }
@@ -58,7 +67,7 @@ impl CsvSink {
     pub fn log(&mut self, m: &StepMetrics) -> crate::Result<()> {
         writeln!(
             self.w,
-            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{},{},{:.5}",
+            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5}",
             m.step,
             m.loss,
             m.weight_sum,
@@ -67,6 +76,8 @@ impl CsvSink {
             m.flat_tokens,
             m.reuse_ratio(),
             m.wall.as_secs_f64() * 1e3,
+            m.plan_ms,
+            m.stall_ms,
             m.exec_calls,
             m.forest_batches,
             m.grad_norm

@@ -13,6 +13,11 @@
 //!   *same* exported programs through the *same* engine and packer — a
 //!   packed batch of chains is just a prefix forest — so the speedup
 //!   comparison is apples-to-apples.
+//! * [`PlanSpec`] — the *plan* half of both strategies as engine-free
+//!   `Send` data: Forest Packing, partitioning and chain packing consume
+//!   only a handful of engine scalars, so the pipeline
+//!   ([`crate::coordinator::pipeline`]) can plan batch N+1 on a background
+//!   thread while the engine executes batch N.
 //! * [`AdamW`] — host-side optimizer over f32 parameter tensors with f64
 //!   moments (master-weight style).
 //! * [`refmodel::RefModel`] — first-principles f64 reference executor over
@@ -25,6 +30,7 @@ pub mod batch;
 pub mod engine;
 pub mod grads;
 pub mod metrics;
+pub mod planner;
 pub mod refmodel;
 pub mod tree_trainer;
 
@@ -34,4 +40,5 @@ pub use batch::{build_batch, Batch, BatchOptions};
 pub use engine::Engine;
 pub use grads::GradBuffer;
 pub use metrics::{CsvSink, StepMetrics};
+pub use planner::{BaselinePlan, PlanSpec, StepPlan};
 pub use tree_trainer::{GlobalPlan, TreeTrainer};

@@ -1,0 +1,290 @@
+//! The *plan* half of both training strategies, as engine-free data.
+//!
+//! Planning a global batch — Forest Packing whole trees into `step` calls,
+//! partitioning oversized trees and packing their specs into relay calls
+//! (tree mode), or linearizing paths and sequence-packing the chains
+//! (baseline mode) — consumes nothing from the [`super::Engine`] but a
+//! handful of scalars: the device capacity, the partition-program caps, the
+//! hybrid chunking geometry.  [`PlanSpec`] captures exactly those scalars,
+//! so the whole planning layer is a pure `Send` function of
+//! `(spec, trees) -> StepPlan` that can run on a background thread while
+//! the engine executes the previous step's plan
+//! ([`crate::coordinator::pipeline`]).
+//!
+//! [`TreeTrainer`](super::TreeTrainer) and
+//! [`BaselineTrainer`](super::BaselineTrainer) keep their public planning
+//! entry points, now as thin delegates to their [`PlanSpec`].
+
+use std::borrow::{Borrow, Cow};
+
+use crate::partition::forest::{self, ForestBatch, RelaySchedule};
+use crate::partition::{greedy_pack, plan, Plan};
+use crate::tree::linearize::path_chain;
+use crate::tree::TrajectoryTree;
+
+use super::baseline::pack_chains;
+use super::batch::{Batch, BatchOptions};
+use super::engine::Engine;
+
+/// Everything one tree-mode optimizer step will execute, fully planned up
+/// front: the packed `step` batches plus the partition-relay schedule.
+/// Built by [`PlanSpec::plan_tree`]; the coordinator treats it as an opaque
+/// stream of device batches.
+pub struct GlobalPlan {
+    pub forests: Vec<ForestBatch>,
+    pub relay: Option<RelayPlan>,
+    pub tree_tokens: usize,
+    pub flat_tokens: usize,
+}
+
+pub struct RelayPlan {
+    pub plans: Vec<Plan>,
+    pub schedule: RelaySchedule,
+}
+
+impl GlobalPlan {
+    /// Program calls this plan will execute (the packing metric).
+    pub fn program_calls(&self) -> usize {
+        self.forests.len() + self.relay.as_ref().map_or(0, |r| r.schedule.program_calls())
+    }
+}
+
+/// A baseline-mode step, planned: every root-to-leaf path linearized and
+/// sequence-packed into capacity-`C` batches (Eq. 1 + §4.2 packing).
+pub struct BaselinePlan {
+    pub batches: Vec<Batch>,
+    pub tree_tokens: usize,
+    pub flat_tokens: usize,
+}
+
+/// One planned optimizer step, either mode — what flows from the planner
+/// side of the pipeline to the executor side.
+pub enum StepPlan {
+    Tree(GlobalPlan),
+    Baseline(BaselinePlan),
+}
+
+impl StepPlan {
+    pub fn program_calls(&self) -> usize {
+        match self {
+            Self::Tree(p) => p.program_calls(),
+            Self::Baseline(p) => p.batches.len(),
+        }
+    }
+
+    pub fn tree_tokens(&self) -> usize {
+        match self {
+            Self::Tree(p) => p.tree_tokens,
+            Self::Baseline(p) => p.tree_tokens,
+        }
+    }
+
+    pub fn flat_tokens(&self) -> usize {
+        match self {
+            Self::Tree(p) => p.flat_tokens,
+            Self::Baseline(p) => p.flat_tokens,
+        }
+    }
+}
+
+/// The engine-derived scalars planning needs — plain data, `Clone + Send`,
+/// valid for the lifetime of the exported programs (capacities never change
+/// after export, so a spec snapshot taken at run start stays correct).
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    /// Device token capacity of the `step` program.
+    pub capacity: usize,
+    /// `(capacity, gateway rows)` of the partition programs, when exported.
+    pub part_caps: Option<(usize, usize)>,
+    /// `(chunk_size, conv_kernel)` for hybrid-GDN models.
+    pub hybrid: Option<(usize, usize)>,
+    pub opts: BatchOptions,
+    /// Partition-packing token budget override (≤ partition capacity).
+    pub partition_budget: Option<usize>,
+    /// Cross-tree Forest Packing (off = seed's one-call-per-tree path).
+    pub forest_packing: bool,
+}
+
+impl PlanSpec {
+    /// Snapshot the planning-relevant scalars of an engine.
+    pub fn from_engine(
+        engine: &Engine,
+        partition_budget: Option<usize>,
+        forest_packing: bool,
+    ) -> Self {
+        Self {
+            capacity: engine.capacity(),
+            part_caps: engine.part_caps(),
+            hybrid: engine.hybrid(),
+            opts: engine.batch_options(),
+            partition_budget,
+            forest_packing,
+        }
+    }
+
+    /// A device-free spec (no partition programs, no hybrid chunking) —
+    /// the planning surface used by host-only tests, benches and the
+    /// `pipeline-smoke` command, where [`crate::trainer::refmodel::RefModel`]
+    /// stands in for the exported programs.
+    pub fn for_host(capacity: usize) -> Self {
+        Self {
+            capacity,
+            part_caps: None,
+            hybrid: None,
+            opts: BatchOptions::default(),
+            partition_budget: None,
+            forest_packing: true,
+        }
+    }
+
+    /// Chunk-pad a tree for hybrid models; borrows unchanged trees (no
+    /// per-tree deep clone on the dense/MoE planning path).
+    pub fn prepare<'a>(&self, tree: &'a TrajectoryTree) -> Cow<'a, TrajectoryTree> {
+        match self.hybrid {
+            Some((chunk, _)) => Cow::Owned(tree.pad_for_chunks(chunk, 0)),
+            None => Cow::Borrowed(tree),
+        }
+    }
+
+    /// Partition one oversized (prepared) tree into an executable plan.
+    pub fn partition_tree(&self, tree: &TrajectoryTree) -> crate::Result<Plan> {
+        let (c, _) = self.part_caps.ok_or_else(|| {
+            anyhow::anyhow!("tree exceeds capacity and no part_fwd exported")
+        })?;
+        anyhow::ensure!(
+            self.hybrid.is_none(),
+            "partitioned hybrid models are not exported (DESIGN.md §2)"
+        );
+        let budget = self.partition_budget.unwrap_or(c).min(c);
+        // leave virtual-slot headroom: a node may cut several children
+        let tree = tree.split_long_segments(budget - budget / 8);
+        let assignment = greedy_pack(&tree, budget)?;
+        plan(&tree, &assignment)
+    }
+
+    /// Plan a whole global batch of trees as packed device batches (§3.4:
+    /// each batch is tree-complete; shuffling happens between trees
+    /// upstream).  Accepts both `&[TrajectoryTree]` and the coordinator's
+    /// reference-counted `&[Arc<TrajectoryTree>]` batches.
+    pub fn plan_tree<T: Borrow<TrajectoryTree>>(&self, trees: &[T]) -> crate::Result<GlobalPlan> {
+        let mut metas = Vec::new();
+        let mut plans = Vec::new();
+        for tree in trees {
+            let prepared = self.prepare(tree.borrow());
+            if prepared.n_slots() <= self.capacity {
+                metas.push(crate::tree::serialize(&prepared));
+            } else {
+                plans.push(self.partition_tree(&prepared)?);
+            }
+        }
+        let forests = if self.forest_packing {
+            forest::pack_forest(&metas, self.capacity, &self.opts)?
+        } else {
+            (0..metas.len())
+                .map(|i| forest::concat_metas(&metas, &[i], self.capacity, &self.opts))
+                .collect::<crate::Result<Vec<_>>>()?
+        };
+        let relay = if plans.is_empty() {
+            None
+        } else {
+            let (c, a) = self.part_caps.expect("partition_tree checked");
+            let schedule = forest::schedule_partition_calls(&plans, c, a, self.forest_packing)?;
+            Some(RelayPlan { plans, schedule })
+        };
+        Ok(GlobalPlan {
+            forests,
+            relay,
+            tree_tokens: trees.iter().map(|t| t.borrow().n_tree()).sum(),
+            flat_tokens: trees.iter().map(|t| t.borrow().n_flat()).sum(),
+        })
+    }
+
+    /// Linearize a global batch into packed chain batches (the baseline's
+    /// "plan": sep-avg linearization + sequence packing).
+    pub fn plan_baseline<T: Borrow<TrajectoryTree>>(
+        &self,
+        trees: &[T],
+    ) -> crate::Result<BaselinePlan> {
+        let mut chains = Vec::new();
+        for tree in trees {
+            let tree = tree.borrow();
+            for path in tree.paths() {
+                let mut chain = path_chain(tree, &path);
+                if chain.n_tree() > self.capacity {
+                    anyhow::bail!(
+                        "path of {} tokens exceeds baseline capacity {} — the \
+                         baseline cannot sequence-pack it (tree training would \
+                         partition it); reduce path length or export a larger \
+                         bucket ({} nodes)",
+                        chain.n_tree(),
+                        self.capacity,
+                        chain.len()
+                    );
+                }
+                if let Some((chunk, _)) = self.hybrid {
+                    chain = chain.pad_for_chunks(chunk, 0);
+                }
+                chains.push(crate::tree::serialize(&chain));
+            }
+        }
+        Ok(BaselinePlan {
+            batches: pack_chains(&chains, self.capacity, &self.opts)?,
+            tree_tokens: trees.iter().map(|t| t.borrow().n_tree()).sum(),
+            flat_tokens: trees.iter().map(|t| t.borrow().n_flat()).sum(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::gen;
+    use std::sync::Arc;
+
+    fn spec(capacity: usize) -> PlanSpec {
+        PlanSpec::for_host(capacity)
+    }
+
+    #[test]
+    fn arc_and_owned_batches_plan_identically() {
+        let trees: Vec<TrajectoryTree> = (0..4).map(|s| gen::uniform(s, 9, 5, 0.6)).collect();
+        let shared: Vec<Arc<TrajectoryTree>> = trees.iter().cloned().map(Arc::new).collect();
+        let sp = spec(4096);
+        let a = sp.plan_tree(&trees).unwrap();
+        let b = sp.plan_tree(&shared).unwrap();
+        assert_eq!(a.tree_tokens, b.tree_tokens);
+        assert_eq!(a.flat_tokens, b.flat_tokens);
+        assert_eq!(a.forests.len(), b.forests.len());
+        for (x, y) in a.forests.iter().zip(&b.forests) {
+            assert_eq!(x.batch, y.batch);
+        }
+    }
+
+    #[test]
+    fn prepare_borrows_without_hybrid() {
+        let t = gen::uniform(1, 8, 5, 0.5);
+        match spec(1024).prepare(&t) {
+            Cow::Borrowed(_) => {}
+            Cow::Owned(_) => panic!("dense planning must not deep-clone the tree"),
+        }
+    }
+
+    #[test]
+    fn baseline_plan_counts_flat_tokens() {
+        let trees: Vec<TrajectoryTree> = (0..3).map(|s| gen::uniform(10 + s, 9, 5, 0.6)).collect();
+        let sp = spec(4096);
+        let p = sp.plan_baseline(&trees).unwrap();
+        assert_eq!(p.flat_tokens, trees.iter().map(|t| t.n_flat()).sum::<usize>());
+        assert_eq!(p.tree_tokens, trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        assert!(!p.batches.is_empty());
+        let packed_w: f32 = p.batches.iter().flat_map(|b| b.weights.iter()).sum();
+        assert!(packed_w > 0.0);
+    }
+
+    #[test]
+    fn oversized_tree_without_part_programs_is_an_error() {
+        let t = gen::with_target_por(3, 0.6, 4, 600, 24, 128);
+        let err = spec(64).plan_tree(std::slice::from_ref(&t)).unwrap_err().to_string();
+        assert!(err.contains("no part_fwd"), "got: {err}");
+    }
+}

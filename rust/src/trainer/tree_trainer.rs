@@ -26,8 +26,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gateway::{KvCache, KvGradAccumulator};
-use crate::partition::forest::{self, ForestBatch, RelaySchedule};
-use crate::partition::{greedy_pack, plan, Plan};
+use crate::partition::forest;
 use crate::runtime::{HostTensor, Runtime};
 use crate::tree::TrajectoryTree;
 
@@ -36,6 +35,10 @@ use super::batch::Batch;
 use super::engine::Engine;
 use super::grads::GradBuffer;
 use super::metrics::StepMetrics;
+// Planning lives in `planner.rs` as engine-free data (`PlanSpec`), so it can
+// run on the pipeline's background thread; re-exported here for the
+// historical import path.
+pub use super::planner::{GlobalPlan, PlanSpec, RelayPlan};
 
 pub struct TreeTrainer {
     pub engine: Engine,
@@ -46,30 +49,6 @@ pub struct TreeTrainer {
     /// Cross-tree Forest Packing of whole trees and partition specs.
     /// On by default; off reproduces the seed's one-call-per-tree path.
     pub forest_packing: bool,
-}
-
-/// Everything one optimizer step will execute, fully planned up front: the
-/// packed `step` batches plus the partition-relay schedule.  Built by
-/// [`TreeTrainer::plan_global_batch`]; the coordinator treats it as an
-/// opaque stream of device batches.
-pub struct GlobalPlan {
-    pub forests: Vec<ForestBatch>,
-    pub relay: Option<RelayPlan>,
-    pub tree_tokens: usize,
-    pub flat_tokens: usize,
-}
-
-pub struct RelayPlan {
-    pub plans: Vec<Plan>,
-    pub schedule: RelaySchedule,
-}
-
-impl GlobalPlan {
-    /// Program calls this plan will execute (the packing metric).
-    pub fn program_calls(&self) -> usize {
-        self.forests.len()
-            + self.relay.as_ref().map_or(0, |r| r.schedule.program_calls())
-    }
 }
 
 impl TreeTrainer {
@@ -89,65 +68,18 @@ impl TreeTrainer {
         self.engine.capacity()
     }
 
-    fn prepare(&self, tree: &TrajectoryTree) -> TrajectoryTree {
-        match self.engine.hybrid() {
-            Some((chunk, _)) => tree.pad_for_chunks(chunk, 0),
-            None => tree.clone(),
-        }
-    }
-
-    /// Partition one oversized (prepared) tree into an executable plan.
-    fn partition_tree(&self, tree: &TrajectoryTree) -> crate::Result<Plan> {
-        let (c, _) = self.engine.part_caps().ok_or_else(|| {
-            anyhow::anyhow!("tree exceeds capacity and no part_fwd exported")
-        })?;
-        anyhow::ensure!(
-            self.engine.hybrid().is_none(),
-            "partitioned hybrid models are not exported (DESIGN.md §2)"
-        );
-        let budget = self.partition_budget.unwrap_or(c).min(c);
-        // leave virtual-slot headroom: a node may cut several children
-        let tree = tree.split_long_segments(budget - budget / 8);
-        let assignment = greedy_pack(&tree, budget)?;
-        plan(&tree, &assignment)
+    /// Snapshot the engine-free planning half of this trainer (reflects the
+    /// current `partition_budget` / `forest_packing` settings).  The spec is
+    /// `Send`, so the pipeline can plan batch N+1 on a background thread
+    /// while this trainer executes batch N.
+    pub fn plan_spec(&self) -> PlanSpec {
+        PlanSpec::from_engine(&self.engine, self.partition_budget, self.forest_packing)
     }
 
     /// Plan the whole global batch as packed device batches (§3.4: each
     /// batch is tree-complete; shuffling happens between trees upstream).
     pub fn plan_global_batch(&self, trees: &[TrajectoryTree]) -> crate::Result<GlobalPlan> {
-        let capacity = self.engine.capacity();
-        let opts = self.engine.batch_options();
-        let mut metas = Vec::new();
-        let mut plans = Vec::new();
-        for tree in trees {
-            let prepared = self.prepare(tree);
-            if prepared.n_slots() <= capacity {
-                metas.push(crate::tree::serialize(&prepared));
-            } else {
-                plans.push(self.partition_tree(&prepared)?);
-            }
-        }
-        let forests = if self.forest_packing {
-            forest::pack_forest(&metas, capacity, &opts)?
-        } else {
-            (0..metas.len())
-                .map(|i| forest::concat_metas(&metas, &[i], capacity, &opts))
-                .collect::<crate::Result<Vec<_>>>()?
-        };
-        let relay = if plans.is_empty() {
-            None
-        } else {
-            let (c, a) = self.engine.part_caps().expect("partition_tree checked");
-            let schedule =
-                forest::schedule_partition_calls(&plans, c, a, self.forest_packing)?;
-            Some(RelayPlan { plans, schedule })
-        };
-        Ok(GlobalPlan {
-            forests,
-            relay,
-            tree_tokens: trees.iter().map(|t| t.n_tree()).sum(),
-            flat_tokens: trees.iter().map(|t| t.n_flat()).sum(),
-        })
+        self.plan_spec().plan_tree(trees)
     }
 
     /// Execute a plan's device batches, accumulating into `gb`.  Returns the
@@ -292,7 +224,7 @@ impl TreeTrainer {
         tree: &TrajectoryTree,
         gb: &mut GradBuffer,
     ) -> crate::Result<usize> {
-        let prepared = self.prepare(tree);
+        let prepared = self.plan_spec().prepare(tree).into_owned();
         if prepared.n_slots() <= self.engine.capacity() {
             let meta = crate::tree::serialize(&prepared);
             let fb = forest::concat_metas(
@@ -315,21 +247,30 @@ impl TreeTrainer {
         tree: &TrajectoryTree,
         gb: &mut GradBuffer,
     ) -> crate::Result<usize> {
-        self.relay_prepared(&self.prepare(tree), gb)
+        self.relay_prepared(&self.plan_spec().prepare(tree), gb)
     }
 
     /// Partition-relay a single already-prepared tree.
     fn relay_prepared(&self, prepared: &TrajectoryTree, gb: &mut GradBuffer) -> crate::Result<usize> {
-        let plans = vec![self.partition_tree(prepared)?];
+        let plans = vec![self.plan_spec().partition_tree(prepared)?];
         let (c, a) = self.engine.part_caps().expect("partition_tree checked");
         let schedule = forest::schedule_partition_calls(&plans, c, a, self.forest_packing)?;
         self.run_relay(&RelayPlan { plans, schedule }, gb)
     }
 
-    /// One optimizer step over a global batch of trees.
+    /// One optimizer step over a global batch of trees.  Outside the
+    /// pipeline there is nothing to overlap with, so planning is timed
+    /// here: `wall` covers plan + execute and `plan_ms`/`stall_ms` record
+    /// the plan share (inside the pipeline the driver overwrites both).
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
         let plan = self.plan_global_batch(trees)?;
-        self.execute_plan(&plan)
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut m = self.execute_plan(&plan)?;
+        m.wall = t0.elapsed();
+        m.plan_ms = plan_ms;
+        m.stall_ms = plan_ms;
+        Ok(m)
     }
 
     /// Execute a pre-built [`GlobalPlan`] and apply the optimizer update.
@@ -349,6 +290,8 @@ impl TreeTrainer {
             exec_calls: gb.exec_calls,
             forest_batches: plan.forests.len() as u64,
             grad_norm,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
         })
     }
 

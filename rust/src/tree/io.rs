@@ -51,7 +51,9 @@ pub fn load_corpus(path: &Path) -> crate::Result<Vec<TrajectoryTree>> {
     load_corpus_iter(path)?.collect()
 }
 
-#[cfg(test)]
+/// Fresh per-process scratch directory (test support — shared by the
+/// in-crate unit tests and the integration suites, which cannot see
+/// `#[cfg(test)]` items).
 pub fn temp_dir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!(
         "tree-train-{tag}-{}-{}",

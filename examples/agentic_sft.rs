@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             forest_packing: true,
             pipeline_depth: 1,
             shuffle_window: 0,
+            ranks: 1,
         };
         let mut coord = Coordinator::with_corpus(rt.clone(), cfg, trees)?;
         println!(

@@ -45,6 +45,7 @@ fn run(depth: usize) -> (Duration, f64, f64, Vec<u64>) {
         depth,
         lr: 1e-2,
         warmup: 0,
+        ranks: 1,
     };
     let source = Box::new(ResidentSource::new(corpus(), 7).unwrap());
     let mut exec = HostExecutor::new(VOCAB, 8, 7);

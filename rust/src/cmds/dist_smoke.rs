@@ -1,0 +1,109 @@
+//! `tree-train dist-smoke` — the sharded-execution determinism contract as
+//! a CI gate, hermetically (no artifacts, no PJRT).
+//!
+//! Runs the same corpus through the real pipeline driver three times with
+//! the pure-f64 [`HostExecutor`]:
+//!
+//! 1. `--ranks 1` — the seed single-executor reference;
+//! 2. `--ranks N` — per-rank worker threads + fixed-order reduction;
+//! 3. `--ranks N` again — a repeat run.
+//!
+//! and fails unless (a) the `--ranks N` loss stream matches the single-rank
+//! stream within f64 tolerance (same global batch, gradients summed in a
+//! different association), and (b) the two `--ranks N` runs are
+//! **bit-identical** in losses and batch-composition fingerprints — thread
+//! scheduling must never leak into the update (docs/distributed.md).
+
+use std::path::Path;
+
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::trainer::{PlanSpec, StepMetrics};
+
+/// Relative f64 tolerance for the cross-rank-count loss comparison: the
+/// per-step packing-reassociation error is ~1e-12, compounded through the
+/// executor's SGD updates over the run.  Far below any f32 effect.
+const LOSS_RTOL: f64 = 1e-8;
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    corpus: &Path,
+    format: &str,
+    mode: &str,
+    steps: u64,
+    trees_per_batch: usize,
+    ranks: usize,
+    depth: usize,
+    window: usize,
+    capacity: usize,
+    vocab: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let mode = super::parse_mode(mode)?;
+    anyhow::ensure!(ranks >= 2, "--ranks must be >= 2 (1 is the reference run)");
+    let source = |path: &Path| super::smoke_source(format, path, window, seed);
+    let cfg = |r: usize| PipelineConfig {
+        mode,
+        steps,
+        trees_per_batch,
+        depth,
+        lr: 1e-2,
+        warmup: 0,
+        ranks: r,
+    };
+    let spec = PlanSpec::for_host(capacity);
+    let run_once = |r: usize| -> anyhow::Result<(Vec<StepMetrics>, Vec<u64>)> {
+        let mut exec = HostExecutor::new(vocab, 8, seed);
+        let (metrics, _) = pipeline::run(&cfg(r), spec.clone(), source(corpus)?, &mut exec)?;
+        Ok((metrics, exec.fingerprints))
+    };
+
+    let (single, _) = run_once(1)?;
+    let (sharded_a, fp_a) = run_once(ranks)?;
+    let (sharded_b, fp_b) = run_once(ranks)?;
+
+    // (a) ranks-N loss stream tracks the single-rank stream to f64 tolerance
+    for (s, m) in single.iter().zip(&sharded_a) {
+        let err = (s.loss - m.loss).abs();
+        anyhow::ensure!(
+            err <= LOSS_RTOL * (s.loss.abs() + 1.0),
+            "step {}: ranks-{ranks} loss {} diverged from single-rank loss {} (|err| {err:e})",
+            s.step,
+            m.loss,
+            s.loss
+        );
+        anyhow::ensure!(
+            s.tree_tokens == m.tree_tokens && s.flat_tokens == m.flat_tokens,
+            "step {}: sharding changed the global batch itself",
+            s.step
+        );
+        anyhow::ensure!(m.ranks == ranks as u64, "step {}: ranks column", s.step);
+        anyhow::ensure!(
+            m.rank_imbalance >= 1.0,
+            "step {}: imbalance {} < 1",
+            s.step,
+            m.rank_imbalance
+        );
+    }
+    // (b) repeat runs are bit-identical: thread scheduling never leaks in
+    for (a, b) in sharded_a.iter().zip(&sharded_b) {
+        anyhow::ensure!(
+            a.loss.to_bits() == b.loss.to_bits(),
+            "step {}: ranks-{ranks} repeat run diverged ({} vs {})",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    anyhow::ensure!(
+        fp_a == fp_b,
+        "batch-composition fingerprints diverged between identical ranks-{ranks} runs"
+    );
+
+    let max_imb = sharded_a.iter().map(|m| m.rank_imbalance).fold(1.0f64, f64::max);
+    println!(
+        "dist smoke OK: {} steps ({format} corpus, {mode:?} mode), ranks 1 vs {ranks} \
+         within {LOSS_RTOL:e}, repeat bit-identical; max rank imbalance {max_imb:.3}",
+        steps
+    );
+    Ok(())
+}

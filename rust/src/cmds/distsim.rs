@@ -1,30 +1,67 @@
-//! Cluster-scale projection (`tree-train distsim`): map the measured
-//! single-host ratios onto the paper's 64xHopper testbed shape via the
-//! distsim cost model (DESIGN.md §5) — the absolute-shape sanity check.
+//! Cluster-scale projection (`tree-train distsim`): map *measured* sharded
+//! plans onto the paper's 64xHopper testbed shape via the distsim cost
+//! model (DESIGN.md §5) — the absolute-shape sanity check.
+//!
+//! Unlike the pre-dist versions of this command, the per-rank loads are not
+//! re-derived by a private sharder: the same `PlanSpec::plan_sharded_*`
+//! planning the training pipeline uses produces the packed (tree-mode,
+//! post-reuse) and linearized (baseline-mode, flattened) rank loads, and
+//! the simulator only prices them.  Emits `results/BENCH_distsim.json`
+//! comparing the two.
 
-use tree_train::distsim::{simulate_step, simulated_speedup, ClusterSpec};
+use tree_train::distsim::{simulate_rank_loads, ClusterSpec};
 use tree_train::tree::gen::{agentic, Overlap};
 use tree_train::tree::metrics;
+use tree_train::trainer::PlanSpec;
+use tree_train::util::json::Json;
 
 pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
-    // fig-7-like rollout mix at paper scale: long think-mode sessions
-    let trees: Vec<_> = (0..64)
-        .map(|i| agentic(500 + i, Overlap::High, 24, 32_000))
-        .collect();
+    // fig-7-like rollout mix at paper scale: long think-mode sessions,
+    // several trees per rank so LPT placement actually matters
+    const N_RANKS: usize = 64;
+    let trees: Vec<_> = (0..192).map(|i| agentic(500 + i, Overlap::High, 12, 32_000)).collect();
     let por = metrics::dataset_por(&trees);
     let bound = 1.0 / (1.0 - por);
 
-    println!("=== distsim: projected 64xHopper step times (paper-scale shape) ===");
-    println!("dataset: {} trees, POR {:.1}%, bound {bound:.2}x\n", trees.len(), por * 100.0);
-    println!("{:<22} {:>10} {:>12} {:>12} {:>9}", "model", "params", "tree step", "flat step", "speedup");
+    // one shared planner: capacity covers the largest tree so every tree
+    // takes the whole-tree (forest) path on its rank
+    let capacity = trees.iter().map(|t| t.n_slots()).max().unwrap();
+    let spec = PlanSpec::for_host(capacity);
+    let packed = spec.plan_sharded_tree(&trees, N_RANKS)?;
+    let linear = spec.plan_sharded_baseline(&trees, N_RANKS)?;
+
+    println!("=== distsim: projected 64xHopper step times (measured rank plans) ===");
+    println!(
+        "dataset: {} trees, POR {:.1}%, bound {bound:.2}x; {} ranks, \
+         packed imbalance {:.3}, linearized imbalance {:.3}\n",
+        trees.len(),
+        por * 100.0,
+        N_RANKS,
+        packed.rank_imbalance(),
+        linear.rank_imbalance()
+    );
+    println!(
+        "{:<22} {:>10} {:>12} {:>12} {:>9}",
+        "model", "params", "tree step", "flat step", "speedup"
+    );
     let mut rows = Vec::new();
-    for (name, n_params) in [("Qwen3-32B-dense", 32e9 as usize), ("Qwen3-30B-MoE(act~3B)", 3e9 as usize)] {
-        let spec = ClusterSpec::paper_64xhopper(n_params);
-        let tree_tok: Vec<usize> = trees.iter().map(|t| t.n_tree()).collect();
-        let flat_tok: Vec<usize> = trees.iter().map(|t| t.n_flat()).collect();
-        let ts = simulate_step(&spec, &tree_tok);
-        let fs = simulate_step(&spec, &flat_tok);
-        let sp = simulated_speedup(&spec, &trees);
+    for (name, n_params) in
+        [("Qwen3-32B-dense", 32e9 as usize), ("Qwen3-30B-MoE(act~3B)", 3e9 as usize)]
+    {
+        let cluster = ClusterSpec::paper_64xhopper(n_params);
+        // the compute term prices the measured loads, the all-reduce term
+        // prices cluster.n_ranks — they must describe the same cluster
+        anyhow::ensure!(
+            cluster.n_ranks == packed.loads.len() && cluster.n_ranks == linear.loads.len(),
+            "cluster shape ({} ranks) disagrees with the measured plans ({} packed / {} \
+             linearized ranks); keep N_RANKS in step with ClusterSpec",
+            cluster.n_ranks,
+            packed.loads.len(),
+            linear.loads.len()
+        );
+        let ts = simulate_rank_loads(&cluster, &packed.loads);
+        let fs = simulate_rank_loads(&cluster, &linear.loads);
+        let sp = fs.total_s / ts.total_s;
         println!(
             "{:<22} {:>10} {:>11.2}s {:>11.2}s {:>8.2}x",
             name,
@@ -39,12 +76,32 @@ pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
         "\npaper fig. 7: 6.2-6.3x measured vs 6.5x bound; the projection should\n\
          land in the same band when compute dominates the collectives."
     );
-    use tree_train::util::json::Json;
+    let loads_json = |loads: &[usize]| {
+        Json::Arr(loads.iter().map(|&l| Json::num(l as f64)).collect())
+    };
     std::fs::write(
-        out.join("distsim.json"),
+        out.join("BENCH_distsim.json"),
         Json::obj(vec![
+            ("n_trees", Json::num(trees.len() as f64)),
+            ("n_ranks", Json::num(N_RANKS as f64)),
             ("por", Json::num(por)),
             ("bound", Json::num(bound)),
+            (
+                "packed",
+                Json::obj(vec![
+                    ("tokens", Json::num(packed.tree_tokens() as f64)),
+                    ("imbalance", Json::num(packed.rank_imbalance())),
+                    ("rank_loads", loads_json(&packed.loads)),
+                ]),
+            ),
+            (
+                "linearized",
+                Json::obj(vec![
+                    ("tokens", Json::num(linear.flat_tokens() as f64)),
+                    ("imbalance", Json::num(linear.rank_imbalance())),
+                    ("rank_loads", loads_json(&linear.loads)),
+                ]),
+            ),
             (
                 "rows",
                 Json::Arr(
@@ -63,5 +120,6 @@ pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
         ])
         .to_string_pretty(),
     )?;
+    println!("-> {}", out.join("BENCH_distsim.json").display());
     Ok(())
 }

@@ -2,6 +2,7 @@
 //! (DESIGN.md §3 experiment index).
 
 pub mod ablate;
+pub mod dist_smoke;
 pub mod distsim;
 pub mod fig5;
 pub mod fig6;
@@ -15,10 +16,41 @@ pub mod quality;
 pub mod train;
 pub mod verify;
 
+use std::path::Path;
 use std::sync::Arc;
 
+use tree_train::coordinator::Mode;
+use tree_train::data::{CorpusSource, StreamingRolloutSource, StreamingTreeSource};
+use tree_train::ingest::IngestConfig;
 use tree_train::runtime::Runtime;
 
 pub fn runtime(artifacts: &std::path::Path) -> anyhow::Result<Arc<Runtime>> {
     Ok(Arc::new(Runtime::from_dir(artifacts)?))
+}
+
+/// `--mode tree|baseline` of the hermetic smoke commands.
+pub fn parse_mode(mode: &str) -> anyhow::Result<Mode> {
+    match mode {
+        "tree" => Ok(Mode::Tree),
+        "baseline" => Ok(Mode::Baseline),
+        other => anyhow::bail!("unknown mode {other} (tree|baseline)"),
+    }
+}
+
+/// `--format trees|rollouts` streaming corpus source of the hermetic smoke
+/// commands (`pipeline-smoke`, `dist-smoke`) — one builder so both CI gates
+/// exercise the exact same data wiring.
+pub fn smoke_source(
+    format: &str,
+    path: &Path,
+    window: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn CorpusSource>> {
+    Ok(match format {
+        "trees" => Box::new(StreamingTreeSource::open(path, window, seed)?),
+        "rollouts" => {
+            Box::new(StreamingRolloutSource::open(path, IngestConfig::default(), window, seed)?)
+        }
+        other => anyhow::bail!("unknown format {other} (trees|rollouts)"),
+    })
 }

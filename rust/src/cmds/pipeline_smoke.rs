@@ -14,9 +14,6 @@
 use std::path::Path;
 
 use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
-use tree_train::coordinator::Mode;
-use tree_train::data::{CorpusSource, StreamingRolloutSource, StreamingTreeSource};
-use tree_train::ingest::IngestConfig;
 use tree_train::trainer::PlanSpec;
 
 #[allow(clippy::too_many_arguments)]
@@ -32,24 +29,9 @@ pub fn run(
     vocab: usize,
     seed: u64,
 ) -> anyhow::Result<()> {
-    let mode = match mode {
-        "tree" => Mode::Tree,
-        "baseline" => Mode::Baseline,
-        other => anyhow::bail!("unknown mode {other} (tree|baseline)"),
-    };
+    let mode = super::parse_mode(mode)?;
     anyhow::ensure!(depth >= 1, "--pipeline-depth must be >= 1 (0 is the reference run)");
-    let source = |path: &Path| -> anyhow::Result<Box<dyn CorpusSource>> {
-        Ok(match format {
-            "trees" => Box::new(StreamingTreeSource::open(path, window, seed)?),
-            "rollouts" => Box::new(StreamingRolloutSource::open(
-                path,
-                IngestConfig::default(),
-                window,
-                seed,
-            )?),
-            other => anyhow::bail!("unknown format {other} (trees|rollouts)"),
-        })
-    };
+    let source = |path: &Path| super::smoke_source(format, path, window, seed);
     let cfg = |d: usize| PipelineConfig {
         mode,
         steps,
@@ -57,6 +39,7 @@ pub fn run(
         depth: d,
         lr: 1e-2,
         warmup: 0,
+        ranks: 1, // sharded determinism is `dist-smoke`'s gate
     };
     let spec = PlanSpec::for_host(capacity);
 

@@ -2,10 +2,18 @@
 
 use tree_train::coordinator::{Coordinator, RunConfig};
 
-pub fn run(artifacts: &std::path::Path, config: &std::path::Path) -> anyhow::Result<()> {
-    let cfg = RunConfig::from_json(&tree_train::util::json::Json::parse(
+pub fn run(
+    artifacts: &std::path::Path,
+    config: &std::path::Path,
+    ranks: Option<usize>,
+) -> anyhow::Result<()> {
+    let mut cfg = RunConfig::from_json(&tree_train::util::json::Json::parse(
         &std::fs::read_to_string(config)?,
     )?)?;
+    if let Some(r) = ranks {
+        anyhow::ensure!(r >= 1, "--ranks must be >= 1");
+        cfg.ranks = r; // CLI override of the config's `ranks` key
+    }
     let rt = super::runtime(artifacts)?;
     let mut coord = Coordinator::new(rt, cfg)?;
     let metrics = coord.run()?;

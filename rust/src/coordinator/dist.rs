@@ -1,0 +1,294 @@
+//! Rank-sharded execution with deterministic gradient reduction.
+//!
+//! The paper's testbed (§3.4) is data-parallel: each rank executes a
+//! disjoint set of whole trees and the gradients are all-reduced before one
+//! optimizer step.  This module is that layer for the single-host
+//! reproduction: a [`ShardedPlan`] (one [`StepPlan`] per rank, trees
+//! LPT-sharded whole by packed token cost) is executed by **one worker
+//! thread per rank**, each accumulating into its private buffer, and the
+//! rank buffers are reduced **in fixed rank order** into a single f64
+//! accumulation before `apply_update`.
+//!
+//! **Determinism contract** (docs/distributed.md):
+//!
+//! * `ranks == 1` executes inline on the caller thread — no worker, no
+//!   reduction — so it *is* the seed single-executor pipeline, bit-for-bit.
+//! * `ranks == N` is bit-identical run-to-run: each rank's accumulation
+//!   order is fixed by its plan, and the cross-rank reduction happens on
+//!   the caller thread in rank order `0, 1, .., N-1` after every worker
+//!   has joined — thread scheduling can change wall-clock, never bits.
+//! * `ranks == N` vs `ranks == 1` agree to f64 tolerance, not bitwise:
+//!   the same per-call gradients are summed in a different association
+//!   (per-rank subtotals first).  Verified by `tests/pipeline_equivalence`
+//!   and the CI `dist-smoke` job.
+//!
+//! [`execute_ranks`] is generic over the accumulator so the very same
+//! pool + fixed-order reduce drives the XLA trainers ([`GradBuffer`]
+//! buffers) and the hermetic [`super::pipeline::HostExecutor`] (RefModel
+//! embedding gradients) — the determinism property is tested on the exact
+//! code the real trainers run.
+//!
+//! **Thread-safety precondition.**  Rank workers share one engine by
+//! `&`-reference, so `ranks > 1` requires the trainer (hence `Engine`,
+//! hence the `xla` crate's client/executable handles) to be `Sync`.  The
+//! vendored host-only `xla` crate is plain data, so this holds today and
+//! `scope.spawn` *enforces* it at compile time: swapping in the real
+//! PJRT-backed `xla` crate (whose handles wrap raw pointers) will fail to
+//! compile here rather than race — the required fix is per-rank `Engine`
+//! replicas (own parameter literals + device handles), tracked as a
+//! ROADMAP open item.  Do not paper over that error with an unsafe `Sync`
+//! impl: concurrent `run_literals` on one PJRT executable is a data race.
+
+use std::time::Instant;
+
+use crate::trainer::planner::{ShardedPlan, StepPlan};
+use crate::trainer::{GradBuffer, StepMetrics};
+
+use super::AnyTrainer;
+
+/// Result of executing one sharded step's rank plans.
+pub struct RankReduce<B> {
+    /// The rank-order reduction of every rank's accumulator.
+    pub acc: B,
+    /// Device tokens dispatched across all ranks.
+    pub device_tokens: usize,
+    /// Wall time of the fixed-order reduction (0 for a single rank).
+    pub reduce_ms: f64,
+}
+
+/// Execute each rank's plan and reduce the per-rank accumulators in fixed
+/// rank order.  `run(rank, plan, acc)` must only touch its own `acc` (it
+/// runs on the rank's worker thread); `reduce(lhs, rhs)` folds rank `r+1`'s
+/// accumulator into the running reduction of ranks `0..=r`.
+///
+/// A single-rank plan short-circuits to an inline call — the seed
+/// single-executor path, byte-for-byte.
+pub fn execute_ranks<B, M, F, R>(
+    sharded: &ShardedPlan,
+    make: M,
+    run: F,
+    reduce: R,
+) -> crate::Result<RankReduce<B>>
+where
+    B: Send,
+    M: Fn() -> B + Sync,
+    F: Fn(usize, &StepPlan, &mut B) -> crate::Result<usize> + Sync,
+    R: Fn(&mut B, B),
+{
+    anyhow::ensure!(sharded.n_ranks() >= 1, "sharded plan has no ranks");
+    if sharded.n_ranks() == 1 {
+        let mut acc = make();
+        let device_tokens = run(0, &sharded.ranks[0], &mut acc)?;
+        return Ok(RankReduce { acc, device_tokens, reduce_ms: 0.0 });
+    }
+    let outcomes: Vec<crate::Result<(B, usize)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sharded
+            .ranks
+            .iter()
+            .enumerate()
+            .map(|(rank, plan)| {
+                let (run, make) = (&run, &make);
+                scope.spawn(move || -> crate::Result<(B, usize)> {
+                    let mut acc = make();
+                    let tokens = run(rank, plan, &mut acc)?;
+                    Ok((acc, tokens))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("rank executor thread panicked")),
+            })
+            .collect()
+    });
+    let mut acc: Option<B> = None;
+    let mut device_tokens = 0usize;
+    let mut reduce_ms = 0.0f64;
+    for outcome in outcomes {
+        let (rank_acc, tokens) = outcome?;
+        device_tokens += tokens;
+        match &mut acc {
+            None => acc = Some(rank_acc),
+            Some(a) => {
+                let t0 = Instant::now();
+                reduce(a, rank_acc);
+                reduce_ms += t0.elapsed().as_secs_f64() * 1e3;
+            }
+        }
+    }
+    Ok(RankReduce { acc: acc.expect("n_ranks >= 2"), device_tokens, reduce_ms })
+}
+
+/// One sharded optimizer step for either trainer: execute every rank plan
+/// on the worker pool, reduce the [`GradBuffer`]s in rank order, apply one
+/// Eq. 5-normalized update over the *global* (all-rank) weight sum.
+pub fn execute_sharded(
+    trainer: &mut AnyTrainer,
+    sharded: &ShardedPlan,
+) -> crate::Result<StepMetrics> {
+    let t0 = Instant::now();
+    let (reduced, grad_norm, step) = match trainer {
+        AnyTrainer::Tree(t) => {
+            let reduced = execute_ranks(
+                sharded,
+                || t.engine.grad_buffer(),
+                |_rank, plan, gb| match plan {
+                    StepPlan::Tree(p) => t.run_plan(p, gb),
+                    StepPlan::Baseline(_) => {
+                        anyhow::bail!("baseline rank plan handed to TreeTrainer (pipeline bug)")
+                    }
+                },
+                GradBuffer::merge_owned,
+            )?;
+            let grad_norm = t.engine.apply_update(&reduced.acc)?;
+            (reduced, grad_norm, t.engine.step_count())
+        }
+        AnyTrainer::Baseline(t) => {
+            let reduced = execute_ranks(
+                sharded,
+                || t.engine.grad_buffer(),
+                |_rank, plan, gb| match plan {
+                    StepPlan::Baseline(p) => t.run_plan(p, gb),
+                    StepPlan::Tree(_) => {
+                        anyhow::bail!("tree rank plan handed to BaselineTrainer (pipeline bug)")
+                    }
+                },
+                GradBuffer::merge_owned,
+            )?;
+            let grad_norm = t.engine.apply_update(&reduced.acc)?;
+            (reduced, grad_norm, t.engine.step_count())
+        }
+    };
+    Ok(StepMetrics {
+        step,
+        loss: reduced.acc.mean_loss(),
+        weight_sum: reduced.acc.weight_sum,
+        device_tokens: reduced.device_tokens,
+        tree_tokens: sharded.tree_tokens(),
+        flat_tokens: sharded.flat_tokens(),
+        wall: t0.elapsed(),
+        exec_calls: reduced.acc.exec_calls,
+        forest_batches: sharded.device_batches() as u64,
+        grad_norm,
+        plan_ms: 0.0,
+        stall_ms: 0.0,
+        ranks: sharded.n_ranks() as u64,
+        reduce_ms: reduced.reduce_ms,
+        rank_imbalance: sharded.rank_imbalance(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::planner::{BaselinePlan, PlanSpec};
+    use crate::tree::gen;
+    use crate::tree::TrajectoryTree;
+
+    fn sharded(n_trees: usize, n_ranks: usize) -> ShardedPlan {
+        let trees: Vec<TrajectoryTree> =
+            (0..n_trees as u64).map(|s| gen::uniform(90 + s, 9, 5, 0.6)).collect();
+        PlanSpec::for_host(4096).plan_sharded_tree(&trees, n_ranks).unwrap()
+    }
+
+    #[test]
+    fn reduction_order_is_rank_order_regardless_of_finish_order() {
+        // rank r sleeps inversely to its id, so worker *finish* order is
+        // reversed — the reduced trace must still be rank order
+        let plan = sharded(8, 4);
+        let reduced = execute_ranks(
+            &plan,
+            Vec::new,
+            |rank, _plan, acc: &mut Vec<usize>| {
+                std::thread::sleep(std::time::Duration::from_millis(5 * (4 - rank as u64)));
+                acc.push(rank);
+                Ok(1)
+            },
+            |a, b| a.extend(b),
+        )
+        .unwrap();
+        assert_eq!(reduced.acc, vec![0, 1, 2, 3]);
+        assert_eq!(reduced.device_tokens, 4);
+    }
+
+    #[test]
+    fn single_rank_runs_inline_with_zero_reduce() {
+        let plan = sharded(4, 1);
+        let main_thread = std::thread::current().id();
+        let reduced = execute_ranks(
+            &plan,
+            || 0usize,
+            |_r, _p, acc| {
+                assert_eq!(std::thread::current().id(), main_thread, "must run inline");
+                *acc += 1;
+                Ok(7)
+            },
+            |a, b| *a += b,
+        )
+        .unwrap();
+        assert_eq!(reduced.acc, 1);
+        assert_eq!(reduced.device_tokens, 7);
+        assert_eq!(reduced.reduce_ms, 0.0);
+    }
+
+    #[test]
+    fn rank_error_propagates() {
+        let plan = sharded(6, 3);
+        let err = execute_ranks(
+            &plan,
+            || (),
+            |rank, _p, _a| {
+                if rank == 1 {
+                    anyhow::bail!("rank 1 exploded")
+                }
+                Ok(0)
+            },
+            |_a, _b| {},
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("rank 1 exploded"));
+    }
+
+    #[test]
+    fn empty_rank_plans_are_benign() {
+        // more ranks than trees: empty rank plans execute as no-ops
+        let plan = sharded(2, 4);
+        let reduced = execute_ranks(
+            &plan,
+            || 0usize,
+            |_r, p, acc| {
+                let StepPlan::Tree(g) = p else { panic!() };
+                *acc += g.forests.len();
+                Ok(g.forests.iter().map(|f| f.batch.capacity).sum())
+            },
+            |a, b| *a += b,
+        )
+        .unwrap();
+        assert_eq!(reduced.acc, 2, "both trees execute exactly once");
+    }
+
+    #[test]
+    fn mode_mismatch_is_an_error_not_a_panic() {
+        // a baseline plan handed to a tree trainer must surface as an error
+        let plan = ShardedPlan {
+            ranks: vec![StepPlan::Baseline(BaselinePlan {
+                batches: vec![],
+                tree_tokens: 0,
+                flat_tokens: 0,
+            })],
+            loads: vec![0],
+        };
+        let r = execute_ranks(
+            &plan,
+            || (),
+            |_r, p, _a| match p {
+                StepPlan::Tree(_) => Ok(0),
+                StepPlan::Baseline(_) => anyhow::bail!("plan/trainer mode mismatch"),
+            },
+            |_a, _b| {},
+        );
+        assert!(r.unwrap_err().to_string().contains("mode mismatch"));
+    }
+}

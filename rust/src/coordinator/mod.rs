@@ -13,24 +13,28 @@
 //! update.  `forest_packing: false` in the run config restores the seed's
 //! one-call-per-tree behavior for ablations.
 //!
-//! [`Coordinator::run`] itself is a thin [`pipeline`] driver over three
-//! decoupled layers (docs/pipeline.md): a [`crate::data::CorpusSource`]
-//! streams `Arc`-shared trees in epoch-shuffled order (resident, or
-//! shard-streamed under `shuffle_window` for corpora that must not be fully
-//! resident), a planner — on a background thread when `pipeline_depth > 0`
-//! — turns them into [`crate::trainer::StepPlan`]s, and the trainer
-//! executes plans in step order.
+//! [`Coordinator::run`] itself is a thin [`pipeline`] driver over four
+//! decoupled layers (docs/pipeline.md, docs/distributed.md): a
+//! [`crate::data::CorpusSource`] streams `Arc`-shared trees in
+//! epoch-shuffled order (resident, or shard-streamed under
+//! `shuffle_window` for corpora that must not be fully resident), a
+//! planner — on a background thread when `pipeline_depth > 0` — LPT-shards
+//! each global batch across `ranks` whole-tree data-parallel ranks and
+//! turns each rank share into a [`crate::trainer::StepPlan`], the [`dist`]
+//! layer executes rank plans on per-rank worker threads, and the reduced
+//! (fixed rank order, f64) gradient feeds one optimizer step.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::data::{CorpusSource, ResidentSource, StreamingRolloutSource, StreamingTreeSource};
 use crate::runtime::Runtime;
-use crate::trainer::planner::{PlanSpec, StepPlan};
+use crate::trainer::planner::PlanSpec;
 use crate::trainer::{AdamWConfig, BaselineTrainer, CsvSink, StepMetrics, TreeTrainer};
 use crate::tree::TrajectoryTree;
 use crate::util::json::Json;
 
+pub mod dist;
 pub mod pipeline;
 
 pub use crate::trainer::metrics::CsvSink as MetricsSink;
@@ -69,6 +73,11 @@ pub struct RunConfig {
     /// corpus shard-by-shard with at most `N` trees resident, re-reading
     /// (rollouts: re-folding) the file each epoch.  Requires `corpus`.
     pub shuffle_window: usize,
+    /// Data-parallel ranks each global batch is sharded across (whole
+    /// trees, §3.4).  `1` (default) is the seed single-executor pipeline
+    /// byte-for-byte; `N` runs per-rank executor workers with
+    /// deterministic fixed-order gradient reduction (docs/distributed.md).
+    pub ranks: usize,
 }
 
 impl RunConfig {
@@ -122,8 +131,10 @@ impl RunConfig {
             forest_packing: v.get("forest_packing").and_then(|x| x.as_bool()).unwrap_or(true),
             pipeline_depth: v.get("pipeline_depth").and_then(|x| x.as_usize()).unwrap_or(1),
             shuffle_window: v.get("shuffle_window").and_then(|x| x.as_usize()).unwrap_or(0),
+            ranks: v.get("ranks").and_then(|x| x.as_usize()).unwrap_or(1),
         };
         anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
         anyhow::ensure!(
             cfg.shuffle_window == 0 || cfg.corpus.is_some(),
             "shuffle_window streams a corpus file; synthetic data is generated in memory"
@@ -195,9 +206,9 @@ impl SyntheticSpec {
 
 /// Either trainer behind one interface, split into explicit plan/execute
 /// halves: [`Self::plan_spec`] snapshots the engine-free planning data
-/// (what the pipeline's planner thread owns) and [`Self::execute`] consumes
-/// pre-built plans — both modes flow through the same pipeline, Baseline's
-/// "plan" being its linearized chain packing.
+/// (what the pipeline's planner thread owns) and [`dist::execute_sharded`]
+/// consumes pre-built rank plans — both modes flow through the same
+/// pipeline, Baseline's "plan" being its linearized chain packing.
 pub enum AnyTrainer {
     Tree(TreeTrainer),
     Baseline(BaselineTrainer),
@@ -209,15 +220,6 @@ impl AnyTrainer {
         match self {
             Self::Tree(t) => t.plan_spec(),
             Self::Baseline(t) => t.plan_spec(),
-        }
-    }
-
-    /// Execute a pre-built step plan and apply the optimizer update.
-    pub fn execute(&mut self, plan: &StepPlan) -> crate::Result<StepMetrics> {
-        match (self, plan) {
-            (Self::Tree(t), StepPlan::Tree(p)) => t.execute_plan(p),
-            (Self::Baseline(t), StepPlan::Baseline(p)) => t.execute_plan(p),
-            _ => anyhow::bail!("plan/trainer mode mismatch (pipeline bug)"),
         }
     }
 
@@ -299,13 +301,16 @@ impl StepExecutor for TrainerExecutor<'_> {
     fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
         if planned.step == 0 {
             crate::info!(
-                "plan: {} trees -> {} program calls per global batch",
+                "plan: {} trees -> {} program calls per global batch across {} rank(s) \
+                 (load imbalance {:.3})",
                 planned.trees,
-                planned.plan.program_calls()
+                planned.plan.program_calls(),
+                planned.plan.n_ranks(),
+                planned.plan.rank_imbalance()
             );
         }
         self.trainer.set_lr(planned.lr);
-        self.trainer.execute(&planned.plan)
+        dist::execute_sharded(self.trainer, &planned.plan)
     }
 
     fn on_step(&mut self, m: &StepMetrics) -> crate::Result<()> {
@@ -376,7 +381,12 @@ impl Coordinator {
             }
             Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),
         };
-        crate::info!("data: {} (pipeline depth {})", source.describe(), cfg.pipeline_depth);
+        crate::info!(
+            "data: {} (pipeline depth {}, ranks {})",
+            source.describe(),
+            cfg.pipeline_depth,
+            cfg.ranks
+        );
         let sink = match &cfg.metrics_csv {
             Some(p) => Some(CsvSink::create(p)?),
             None => None,
@@ -402,6 +412,7 @@ impl Coordinator {
             depth: self.cfg.pipeline_depth,
             lr: self.cfg.lr,
             warmup: self.cfg.warmup,
+            ranks: self.cfg.ranks,
         };
         let spec = self.trainer.plan_spec();
         let mut exec = TrainerExecutor {

@@ -22,17 +22,24 @@
 //! plan; equals `plan_ms` in synchronous mode, ~0 when the pipeline hides
 //! planning), and the run returns a [`PipelineSummary`] with the means, the
 //! prefetch hit rate and the corpus source's peak resident tree count.
+//!
+//! **Sharding.**  The planner shards every global batch across
+//! `cfg.ranks` data-parallel ranks (whole trees, LPT by packed token
+//! cost) and ships a [`ShardedPlan`]; executors run rank plans through
+//! [`super::dist`] with fixed-order gradient reduction.  `ranks: 1` is
+//! the seed single-executor pipeline byte-for-byte
+//! (docs/distributed.md).
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::data::CorpusSource;
 use crate::trainer::adamw::cosine_lr;
-use crate::trainer::planner::{PlanSpec, StepPlan};
+use crate::trainer::planner::{PlanSpec, ShardedPlan, StepPlan};
 use crate::trainer::refmodel::RefModel;
 use crate::trainer::StepMetrics;
 
-use super::Mode;
+use super::{dist, Mode};
 
 /// Run-loop geometry handed to [`run`] (a mode-agnostic slice of
 /// [`super::RunConfig`]).
@@ -48,6 +55,10 @@ pub struct PipelineConfig {
     /// the executor is a pure plan consumer).
     pub lr: f64,
     pub warmup: u64,
+    /// Data-parallel ranks each global batch is sharded across (whole
+    /// trees, [`PlanSpec::plan_sharded_tree`]); `1` = the seed
+    /// single-executor path, byte-for-byte.
+    pub ranks: usize,
 }
 
 /// One fully-planned optimizer step, tagged with its step id.
@@ -57,8 +68,9 @@ pub struct PlannedStep {
     pub lr: f64,
     /// Trees in this global batch.
     pub trees: usize,
-    pub plan: StepPlan,
-    /// Host planning time (batch assembly + packing) for this step.
+    /// The per-rank plans (one rank when unsharded).
+    pub plan: ShardedPlan,
+    /// Host planning time (batch assembly + sharding + packing).
     pub plan_ms: f64,
 }
 
@@ -127,8 +139,8 @@ impl Planner {
         let batch = self.source.next_batch(self.cfg.trees_per_batch)?;
         let lr = cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
         let plan = match self.cfg.mode {
-            Mode::Tree => StepPlan::Tree(self.spec.plan_tree(&batch)?),
-            Mode::Baseline => StepPlan::Baseline(self.spec.plan_baseline(&batch)?),
+            Mode::Tree => self.spec.plan_sharded_tree(&batch, self.cfg.ranks)?,
+            Mode::Baseline => self.spec.plan_sharded_baseline(&batch, self.cfg.ranks)?,
         };
         Ok(PlannedStep {
             step,
@@ -149,6 +161,7 @@ pub fn run<E: StepExecutor>(
     exec: &mut E,
 ) -> crate::Result<(Vec<StepMetrics>, PipelineSummary)> {
     anyhow::ensure!(cfg.trees_per_batch >= 1, "trees_per_batch must be >= 1");
+    anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
     let mut planner = Planner { cfg: cfg.clone(), spec, source, next_step: 0 };
     let mut all = Vec::with_capacity(cfg.steps as usize);
     let mut plan_total = 0.0f64;
@@ -281,10 +294,27 @@ fn fnv1a(h: &mut u64, bytes: &[u8]) {
     }
 }
 
-impl StepExecutor for HostExecutor {
-    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
-        let t0 = Instant::now();
-        let batches: Vec<&crate::trainer::Batch> = match &planned.plan {
+/// Per-rank accumulator of the hermetic executor — the RefModel analog of
+/// a rank's [`crate::trainer::GradBuffer`].
+struct HostRankAcc {
+    loss_sum: f64,
+    weight_sum: f64,
+    d_embed: Vec<f64>,
+    /// FNV digest of this rank's batch metadata (reduced cross-rank in
+    /// fixed rank order, so the step fingerprint is thread-schedule-free).
+    hash: u64,
+    batches: u64,
+}
+
+impl HostExecutor {
+    /// Run one rank's plan against the shared (read-only) model.
+    fn run_rank(
+        model: &RefModel,
+        run_model: bool,
+        plan: &StepPlan,
+        acc: &mut HostRankAcc,
+    ) -> crate::Result<usize> {
+        let batches: Vec<&crate::trainer::Batch> = match plan {
             StepPlan::Tree(p) => {
                 anyhow::ensure!(
                     p.relay.is_none(),
@@ -294,47 +324,81 @@ impl StepExecutor for HostExecutor {
             }
             StepPlan::Baseline(p) => p.batches.iter().collect(),
         };
-        let mut h = 0xcbf29ce484222325u64;
-        fnv1a(&mut h, &planned.step.to_le_bytes());
-        fnv1a(&mut h, &planned.lr.to_bits().to_le_bytes());
-        let mut loss_sum = 0.0f64;
-        let mut weight_sum = 0.0f64;
-        let mut d_embed = vec![0.0f64; self.model.embed.len()];
         let mut device_tokens = 0usize;
         for b in &batches {
-            if self.run_model {
-                let out = self.model.step(b)?;
-                loss_sum += out.loss_sum;
-                weight_sum += out.weight_sum;
-                for (g, d) in d_embed.iter_mut().zip(&out.d_embed) {
+            if run_model {
+                let out = model.step(b)?;
+                acc.loss_sum += out.loss_sum;
+                acc.weight_sum += out.weight_sum;
+                for (g, d) in acc.d_embed.iter_mut().zip(&out.d_embed) {
                     *g += d;
                 }
             }
             device_tokens += b.capacity;
-            fnv1a(&mut h, &(b.capacity as u64).to_le_bytes());
+            acc.batches += 1;
+            fnv1a(&mut acc.hash, &(b.capacity as u64).to_le_bytes());
             // every metadata channel the programs consume: tokens and
             // weights, but also the attention topology (prev_idx, k_order,
             // k_exit, k_bias) and positions — a divergence in any of them
             // is a composition change even if token order matches
             for t in &b.tokens {
-                fnv1a(&mut h, &t.to_le_bytes());
+                fnv1a(&mut acc.hash, &t.to_le_bytes());
             }
             for w in &b.weights {
-                fnv1a(&mut h, &w.to_bits().to_le_bytes());
+                fnv1a(&mut acc.hash, &w.to_bits().to_le_bytes());
             }
             for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
                 for x in v {
-                    fnv1a(&mut h, &x.to_le_bytes());
+                    fnv1a(&mut acc.hash, &x.to_le_bytes());
                 }
             }
             for kb in &b.k_bias {
-                fnv1a(&mut h, &kb.to_bits().to_le_bytes());
+                fnv1a(&mut acc.hash, &kb.to_bits().to_le_bytes());
             }
         }
+        Ok(device_tokens)
+    }
+}
+
+impl StepExecutor for HostExecutor {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
+        // per-rank accumulation + fixed-order reduction through the very
+        // same pool the XLA trainers use (dist::execute_ranks): one rank
+        // runs inline (the seed path), N ranks run on worker threads with
+        // rank-ordered f64 reduction
+        let (model, run_model, embed_len) =
+            (&self.model, self.run_model, self.model.embed.len());
+        let reduced = dist::execute_ranks(
+            &planned.plan,
+            || HostRankAcc {
+                loss_sum: 0.0,
+                weight_sum: 0.0,
+                d_embed: vec![0.0f64; embed_len],
+                hash: 0xcbf29ce484222325u64,
+                batches: 0,
+            },
+            |_rank, plan, acc| Self::run_rank(model, run_model, plan, acc),
+            |a, b| {
+                a.loss_sum += b.loss_sum;
+                a.weight_sum += b.weight_sum;
+                for (g, d) in a.d_embed.iter_mut().zip(&b.d_embed) {
+                    *g += d;
+                }
+                fnv1a(&mut a.hash, &b.hash.to_le_bytes());
+                a.batches += b.batches;
+            },
+        )?;
+        let acc = reduced.acc;
+        // step fingerprint: step id + LR bits + the rank-ordered digest
+        let mut h = 0xcbf29ce484222325u64;
+        fnv1a(&mut h, &planned.step.to_le_bytes());
+        fnv1a(&mut h, &planned.lr.to_bits().to_le_bytes());
+        fnv1a(&mut h, &acc.hash.to_le_bytes());
         self.fingerprints.push(h);
-        if self.sgd && weight_sum > 0.0 {
-            for (e, g) in self.model.embed.iter_mut().zip(&d_embed) {
-                *e -= planned.lr * g / weight_sum;
+        if self.sgd && acc.weight_sum > 0.0 {
+            for (e, g) in self.model.embed.iter_mut().zip(&acc.d_embed) {
+                *e -= planned.lr * g / acc.weight_sum;
             }
         }
         if let Some(floor) = self.exec_floor {
@@ -348,17 +412,20 @@ impl StepExecutor for HostExecutor {
         }
         Ok(StepMetrics {
             step: planned.step,
-            loss: if weight_sum > 0.0 { loss_sum / weight_sum } else { 0.0 },
-            weight_sum,
-            device_tokens,
+            loss: if acc.weight_sum > 0.0 { acc.loss_sum / acc.weight_sum } else { 0.0 },
+            weight_sum: acc.weight_sum,
+            device_tokens: reduced.device_tokens,
             tree_tokens: planned.plan.tree_tokens(),
             flat_tokens: planned.plan.flat_tokens(),
             wall: t0.elapsed(),
-            exec_calls: batches.len() as u64,
-            forest_batches: batches.len() as u64,
+            exec_calls: acc.batches,
+            forest_batches: acc.batches,
             grad_norm: 0.0,
             plan_ms: 0.0,
             stall_ms: 0.0,
+            ranks: planned.plan.n_ranks() as u64,
+            reduce_ms: reduced.reduce_ms,
+            rank_imbalance: planned.plan.rank_imbalance(),
         })
     }
 }

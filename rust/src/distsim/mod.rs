@@ -1,14 +1,24 @@
 //! Cluster-scale cost model (DESIGN.md §5 substitution for the paper's
-//! 64x-Hopper Megatron testbed).
+//! 64x-Hopper Megatron testbed) — a *calibration layer over real packing
+//! output*, not a parallel implementation of it.
 //!
 //! The paper's headline metric is a *ratio* — tree vs baseline step time on
 //! identical hardware — which our single-host measurement preserves exactly
 //! (both sides run the same executables).  This module maps measured
-//! per-token costs onto a data-parallel cluster to sanity-check the paper's
-//! *absolute shape*: per-step time = max over ranks of (compute + exposed
-//! collective time), with trees sharded whole (the §3.4 constraint: a tree
-//! never splits across global batches or ranks).
+//! per-rank loads onto a data-parallel cluster to sanity-check the paper's
+//! *absolute shape*: per-step time = max over ranks of compute + exposed
+//! collective time, with trees sharded whole (the §3.4 constraint).
+//!
+//! Sharding is **not** re-implemented here: [`simulate_step`] uses the one
+//! shared LPT sharder ([`crate::partition::forest::shard_by_cost`]) that
+//! the training planner itself uses, and [`simulate_rank_loads`] consumes
+//! per-rank loads taken straight from a measured
+//! [`crate::trainer::ShardedPlan`] — so the simulated critical path is the
+//! critical path the real sharded pipeline would execute.  (A private
+//! greedy sharder used to live here; it duplicated, and could disagree
+//! with, the planner's placement.)
 
+use crate::partition::forest::shard_by_cost;
 use crate::tree::TrajectoryTree;
 
 /// Hardware + parallelism description for one simulated rank.
@@ -45,23 +55,16 @@ pub struct SimStep {
     pub allreduce_s: f64,
     pub total_s: f64,
     pub tokens: usize,
+    /// The critical rank's token load (what `compute_s` is derived from).
+    pub max_rank_tokens: usize,
 }
 
-/// Greedy shard trees to ranks (whole trees only), return the critical path.
-pub fn simulate_step(spec: &ClusterSpec, token_counts: &[usize]) -> SimStep {
-    let mut rank_tokens = vec![0usize; spec.n_ranks];
-    let mut sorted: Vec<usize> = token_counts.to_vec();
-    sorted.sort_unstable_by(|a, b| b.cmp(a));
-    for t in &sorted {
-        let r = rank_tokens
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, &v)| v)
-            .map(|(i, _)| i)
-            .unwrap();
-        rank_tokens[r] += t;
-    }
-    let max_tokens = *rank_tokens.iter().max().unwrap_or(&0);
+/// Step time from **measured per-rank token loads** — the calibration entry
+/// point: feed it `ShardedPlan::loads` (packed, post-reuse) or the
+/// linearized counterpart and the simulated critical path is exactly the
+/// load the real per-rank executors would run.
+pub fn simulate_rank_loads(spec: &ClusterSpec, rank_loads: &[usize]) -> SimStep {
+    let max_tokens = *rank_loads.iter().max().unwrap_or(&0);
     // fwd + bwd ~ 3x fwd FLOPs
     let compute_s = 3.0 * max_tokens as f64 * spec.flops_per_token / spec.flops_per_rank;
     // ring all-reduce: 2 * (n-1)/n * bytes / bw
@@ -72,8 +75,18 @@ pub fn simulate_step(spec: &ClusterSpec, token_counts: &[usize]) -> SimStep {
         compute_s,
         allreduce_s,
         total_s: compute_s + allreduce_s,
-        tokens: token_counts.iter().sum(),
+        tokens: rank_loads.iter().sum(),
+        max_rank_tokens: max_tokens,
     }
+}
+
+/// Shard per-tree token costs with the planner's LPT sharder, then price
+/// the resulting rank loads.  Convenience for callers that have raw per-tree
+/// counts instead of a measured plan.
+pub fn simulate_step(spec: &ClusterSpec, token_counts: &[usize]) -> SimStep {
+    let shards = shard_by_cost(token_counts, spec.n_ranks)
+        .expect("ClusterSpec.n_ranks >= 1");
+    simulate_rank_loads(spec, &shards.loads)
 }
 
 /// Simulated tree-vs-baseline speedup for a dataset of trees: the compute
@@ -89,6 +102,7 @@ pub fn simulated_speedup(spec: &ClusterSpec, trees: &[TrajectoryTree]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trainer::planner::PlanSpec;
     use crate::tree::{gen, metrics};
 
     #[test]
@@ -118,7 +132,24 @@ mod tests {
         let spec = ClusterSpec { n_ranks: 4, ..ClusterSpec::paper_64xhopper(1_000_000) };
         let s = simulate_step(&spec, &[100, 100, 100, 100, 400]);
         // critical rank holds 400, not 800
+        assert_eq!(s.max_rank_tokens, 400);
         let expect = 3.0 * 400.0 * spec.flops_per_token / spec.flops_per_rank;
         assert!((s.compute_s - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn simulation_consumes_measured_plan_loads() {
+        // the calibration path: a real sharded plan's loads drive the sim,
+        // and simulate_step over the same per-tree costs agrees exactly
+        // (one sharder, no duplicate placement logic)
+        let trees: Vec<_> = (0..12).map(|s| gen::uniform(s, 9, 5, 0.6)).collect();
+        let plan = PlanSpec::for_host(8192).plan_sharded_tree(&trees, 4).unwrap();
+        let spec = ClusterSpec { n_ranks: 4, ..ClusterSpec::paper_64xhopper(1_000_000) };
+        let from_plan = simulate_rank_loads(&spec, &plan.loads);
+        let costs: Vec<usize> = trees.iter().map(|t| t.n_tree()).collect();
+        let from_costs = simulate_step(&spec, &costs);
+        assert_eq!(from_plan.max_rank_tokens, from_costs.max_rank_tokens);
+        assert_eq!(from_plan.tokens, from_costs.tokens);
+        assert_eq!(from_plan.total_s, from_costs.total_s);
     }
 }

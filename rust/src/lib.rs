@@ -50,6 +50,16 @@
 //!   and Forest-Packs batch N+1 while the engine executes batch N, with a
 //!   step-for-step determinism guarantee vs. the synchronous loop
 //!   (`pipeline_depth: 0`).
+//! * [`coordinator::dist`] — rank-aware sharded execution
+//!   (docs/distributed.md): each global batch is LPT-sharded *whole-tree*
+//!   across `ranks` data-parallel ranks by packed (post-reuse) token cost,
+//!   each rank plan runs on its own executor worker, and the per-rank
+//!   gradient buffers are reduced in **fixed rank order** (f64) before one
+//!   Eq. 5-normalized update.  `ranks: 1` is the seed single-executor
+//!   pipeline bit-for-bit; `ranks: N` matches it to f64 tolerance and is
+//!   bit-identical run-to-run.  [`distsim`] prices the *measured* per-rank
+//!   loads on the paper's 64xHopper shape instead of re-deriving its own
+//!   placement.
 //!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the

@@ -20,6 +20,7 @@ USAGE: tree-train [--artifacts DIR] [--out DIR] <command> [flags]
 
 COMMANDS:
   train <config.json>      train from a JSON run config
+                           [--ranks N  data-parallel rank count override]
   gen-data <out.jsonl>     synthetic agentic corpus
                            [--overlap low|medium|high|por:X] [--n-trees N]
                            [--turns N] [--vocab V] [--seed S] [--linearize]
@@ -32,6 +33,13 @@ COMMANDS:
                            artifacts): asserts sync ≡ pipelined bit-for-bit
                            --corpus FILE [--format trees|rollouts]
                            [--mode tree|baseline] [--steps N]
+                           [--trees-per-batch N] [--pipeline-depth D]
+                           [--shuffle-window W] [--capacity C] [--vocab V]
+  dist-smoke               sharded execution determinism gate, hermetic:
+                           --ranks N vs --ranks 1 loss streams within f64
+                           tolerance, repeat runs bit-identical
+                           --corpus FILE [--format trees|rollouts]
+                           [--mode tree|baseline] [--ranks N] [--steps N]
                            [--trees-per-batch N] [--pipeline-depth D]
                            [--shuffle-window W] [--capacity C] [--vocab V]
   fig5                     token accounting: flatten vs standard vs RF
@@ -113,7 +121,13 @@ fn main() -> anyhow::Result<()> {
                 .positional
                 .first()
                 .ok_or_else(|| anyhow::anyhow!("train needs a config path"))?;
-            cmds::train::run(&artifacts, &PathBuf::from(cfg))
+            let ranks = match rest.flags.get("ranks") {
+                Some(v) => Some(v.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(
+                    || anyhow::anyhow!("--ranks must be a positive integer, got `{v}`"),
+                )?),
+                None => None,
+            };
+            cmds::train::run(&artifacts, &PathBuf::from(cfg), ranks)
         }
         "gen-data" => {
             let out_file = rest
@@ -143,6 +157,23 @@ fn main() -> anyhow::Result<()> {
                 &rest.str("mode", "tree"),
                 rest.get("steps", 12u64),
                 rest.get("trees-per-batch", 4usize),
+                rest.get("pipeline-depth", 2usize),
+                rest.get("shuffle-window", 8usize),
+                rest.get("capacity", 8192usize),
+                rest.get("vocab", 256usize),
+                rest.get("seed", 0u64),
+            )
+        }
+        "dist-smoke" => {
+            let corpus = rest.str("corpus", "");
+            anyhow::ensure!(!corpus.is_empty(), "dist-smoke needs --corpus <file.jsonl>");
+            cmds::dist_smoke::run(
+                &PathBuf::from(corpus),
+                &rest.str("format", "trees"),
+                &rest.str("mode", "tree"),
+                rest.get("steps", 12u64),
+                rest.get("trees-per-batch", 6usize),
+                rest.get("ranks", 4usize),
                 rest.get("pipeline-depth", 2usize),
                 rest.get("shuffle-window", 8usize),
                 rest.get("capacity", 8192usize),

@@ -259,6 +259,57 @@ mod tests {
     }
 
     #[test]
+    fn greedy_pack_deterministic_on_duplicate_size_children() {
+        // every child component has the same size, so the smallest-first
+        // merge order is decided purely by tie-breaking: it must be the
+        // stable (input-order) one, identically on every call — sharded
+        // plans re-partition trees per rank and must reproduce bit-for-bit
+        let mut nodes = vec![crate::NodeSpec::new(-1, vec![0; 4])];
+        for _ in 0..12 {
+            nodes.push(crate::NodeSpec::new(0, vec![1; 5])); // 12 equal children
+        }
+        let t = crate::TrajectoryTree::new(nodes).unwrap();
+        let a = greedy_pack(&t, 30).unwrap();
+        for _ in 0..5 {
+            assert_eq!(greedy_pack(&t, 30).unwrap(), a, "tie-break must be stable");
+        }
+        crate::partition::validate_assignment(&t, &a).unwrap();
+        // merged set is the *first* children in input order: with stable
+        // smallest-first ordering, ids 1..=k merge and the rest are cut
+        let merged: Vec<usize> = (1..=12).filter(|&c| a[c] == a[0]).collect();
+        assert_eq!(merged, (1..=merged.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn greedy_pack_deterministic_on_zero_token_nodes() {
+        // zero-token segments (empty tool results, stripped messages) give
+        // zero-size components — every merge decision is a tie
+        let mut nodes = vec![crate::NodeSpec::new(-1, vec![0; 3])];
+        for i in 0..6 {
+            let parent = if i % 2 == 0 { 0 } else { i as i32 };
+            nodes.push(crate::NodeSpec::new(parent, vec![]));
+        }
+        let t = crate::TrajectoryTree::new(nodes).unwrap();
+        let a = greedy_pack(&t, 8).unwrap();
+        assert_eq!(greedy_pack(&t, 8).unwrap(), a);
+        crate::partition::validate_assignment(&t, &a).unwrap();
+        for s in partition_slots(&t, &a) {
+            assert!(s <= 8);
+        }
+    }
+
+    #[test]
+    fn greedy_pack_identical_trees_get_identical_assignments() {
+        // all-trees-identical: structurally equal trees must partition
+        // identically regardless of which rank (or call site) packs them
+        let proto = gen::uniform(11, 14, 6, 0.6);
+        let copy = crate::TrajectoryTree::new(proto.nodes.clone()).unwrap();
+        let a = greedy_pack(&proto, 24).unwrap();
+        let b = greedy_pack(&copy, 24).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn standard_partitioning_recomputes_boundaries() {
         // Fig. 5: standard partitioning pays ancestor recomputation;
         // redundancy-free pays exactly n_tree.

@@ -30,6 +30,72 @@ use crate::tree::dfs::{self, DfsMeta, NEG_INF};
 
 use super::plan::Plan;
 
+// ───────────────────────── rank-aware tree sharding ───────────────────────
+
+/// Deterministic assignment of whole trees to data-parallel ranks
+/// (§3.4: a tree never splits across ranks), produced by [`shard_by_cost`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankShards {
+    /// Item indices per rank, each rank's list in ascending input order —
+    /// so a 1-rank shard is the identity and per-rank planning sees trees
+    /// in exactly the order the unsharded planner would.
+    pub ranks: Vec<Vec<usize>>,
+    /// Summed cost per rank (the LPT load).
+    pub loads: Vec<usize>,
+}
+
+impl RankShards {
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Load-imbalance ratio: max rank load over mean rank load (`>= 1.0`;
+    /// `1.0` = perfectly balanced).  An empty batch reports `1.0`.
+    pub fn imbalance(&self) -> f64 {
+        load_imbalance(&self.loads)
+    }
+}
+
+/// Max-over-mean load ratio of a rank-load vector (`>= 1.0`; `1.0` =
+/// perfectly balanced, also the zero-total convention).  The one imbalance
+/// definition shared by [`RankShards`], the planner's sharded plans and the
+/// metrics CSV.
+pub fn load_imbalance(loads: &[usize]) -> f64 {
+    let total: usize = loads.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / loads.len() as f64;
+    *loads.iter().max().unwrap() as f64 / mean
+}
+
+/// LPT (longest-processing-time) shard items across `n_ranks` by cost:
+/// items in decreasing cost order each go to the currently least-loaded
+/// rank.  Tie-breaking is fully deterministic — equal costs keep input
+/// order (stable sort), equal loads pick the lowest rank id — so sharded
+/// plans are reproducible run-to-run and machine-to-machine.
+///
+/// Used for whole-tree data-parallel sharding (cost = packed post-reuse
+/// token count) and by [`crate::distsim`] as the one cluster sharder.
+pub fn shard_by_cost(costs: &[usize], n_ranks: usize) -> crate::Result<RankShards> {
+    anyhow::ensure!(n_ranks >= 1, "shard_by_cost needs n_ranks >= 1");
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    // stable: equal-cost items stay in input order
+    order.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
+    let mut ranks: Vec<Vec<usize>> = vec![Vec::new(); n_ranks];
+    let mut loads = vec![0usize; n_ranks];
+    for &i in &order {
+        // min_by_key returns the first minimum: lowest rank id wins ties
+        let r = (0..n_ranks).min_by_key(|&r| loads[r]).unwrap();
+        loads[r] += costs[i];
+        ranks[r].push(i);
+    }
+    for r in &mut ranks {
+        r.sort_unstable(); // restore input order within the rank
+    }
+    Ok(RankShards { ranks, loads })
+}
+
 // ───────────────────────── whole-tree forest packing ──────────────────────
 
 /// One packed tree inside a [`ForestBatch`].
@@ -456,6 +522,65 @@ mod tests {
 
     fn metas(n: usize) -> Vec<DfsMeta> {
         (0..n as u64).map(|s| serialize(&gen::uniform(s, 10, 5, 0.6))).collect()
+    }
+
+    #[test]
+    fn shard_single_rank_is_identity_order() {
+        let costs = [30usize, 7, 19, 19, 2];
+        let s = shard_by_cost(&costs, 1).unwrap();
+        assert_eq!(s.ranks, vec![vec![0, 1, 2, 3, 4]]);
+        assert_eq!(s.loads, vec![77]);
+        assert_eq!(s.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn shard_covers_every_item_exactly_once() {
+        let costs: Vec<usize> = (0..23).map(|i| (i * 37) % 11 + 1).collect();
+        let s = shard_by_cost(&costs, 4).unwrap();
+        let mut seen: Vec<usize> = s.ranks.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..costs.len()).collect::<Vec<_>>());
+        for (r, ids) in s.ranks.iter().enumerate() {
+            assert_eq!(s.loads[r], ids.iter().map(|&i| costs[i]).sum::<usize>());
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "rank {r} not input-ordered");
+        }
+        assert!(s.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn shard_is_deterministic_on_adversarial_costs() {
+        // duplicate-size, zero-token and all-identical items exercise every
+        // tie-break: the assignment must be bit-identical across calls
+        for costs in [
+            vec![5usize, 5, 5, 5, 5, 5, 5],          // all identical
+            vec![0, 0, 0, 0],                        // zero-token trees
+            vec![9, 3, 9, 0, 3, 9, 0, 3],            // duplicates + zeros
+        ] {
+            let a = shard_by_cost(&costs, 3).unwrap();
+            let b = shard_by_cost(&costs, 3).unwrap();
+            assert_eq!(a, b, "sharding of {costs:?} must be reproducible");
+        }
+        // all-zero costs: every placement sees equal (zero) loads, so the
+        // lowest-rank-id tie-break sends them all to rank 0 — degenerate
+        // but deterministic, which is the contract
+        let z = shard_by_cost(&[0, 0, 0, 0], 3).unwrap();
+        assert_eq!(z.ranks, vec![vec![0, 1, 2, 3], vec![], vec![]]);
+        assert_eq!(z.imbalance(), 1.0); // zero total defines balanced
+    }
+
+    #[test]
+    fn shard_lpt_balances_against_one_giant() {
+        // the distsim regression: 4 ranks, one 400-token tree + 4 x 100
+        let s = shard_by_cost(&[100, 100, 100, 100, 400], 4).unwrap();
+        assert_eq!(*s.loads.iter().max().unwrap(), 400);
+        assert_eq!(s.loads.iter().sum::<usize>(), 800);
+    }
+
+    #[test]
+    fn shard_more_ranks_than_trees_leaves_empty_ranks() {
+        let s = shard_by_cost(&[10, 20], 4).unwrap();
+        assert_eq!(s.ranks.iter().filter(|r| r.is_empty()).count(), 2);
+        assert_eq!(s.loads.iter().filter(|&&l| l == 0).count(), 2);
     }
 
     #[test]

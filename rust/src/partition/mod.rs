@@ -14,6 +14,9 @@
 //! * [`forest`] — cross-tree Forest Packing: FFD-packs whole small trees
 //!   and partition specs from many trees into capacity-`C` prefix-forest
 //!   device batches, so one program call trains several trees at once.
+//!   Also home of [`forest::shard_by_cost`], the deterministic LPT sharder
+//!   that places whole trees onto data-parallel ranks (§3.4) for both the
+//!   training planner and the `distsim` cost model.
 
 pub mod binpack;
 pub mod forest;
@@ -21,6 +24,9 @@ pub mod plan;
 pub mod validate;
 
 pub use binpack::{exact_min_partitions, greedy_pack};
-pub use forest::{concat_metas, pack_forest, ForestBatch, RelaySchedule};
+pub use forest::{
+    concat_metas, load_imbalance, pack_forest, shard_by_cost, ForestBatch, RankShards,
+    RelaySchedule,
+};
 pub use plan::{plan, PartitionSpec, Plan};
 pub use validate::validate_assignment;

@@ -22,6 +22,7 @@ use crate::tree::TrajectoryTree;
 use super::adamw::AdamWConfig;
 use super::batch::{Batch, BatchOptions};
 use super::engine::Engine;
+use super::grads::GradBuffer;
 use super::metrics::StepMetrics;
 use super::planner::{BaselinePlan, PlanSpec};
 
@@ -89,15 +90,23 @@ impl BaselineTrainer {
         Ok(m)
     }
 
+    /// Execute a plan's chain batches, accumulating into `gb`; returns the
+    /// device token count.  The per-rank unit of the distributed step
+    /// ([`crate::coordinator::dist`]) — mirrors `TreeTrainer::run_plan`.
+    pub fn run_plan(&self, plan: &BaselinePlan, gb: &mut GradBuffer) -> crate::Result<usize> {
+        let mut device_tokens = 0usize;
+        for b in &plan.batches {
+            self.engine.run_step_into(b, gb)?;
+            device_tokens += b.capacity;
+        }
+        Ok(device_tokens)
+    }
+
     /// Execute a pre-built [`BaselinePlan`] and apply the optimizer update.
     pub fn execute_plan(&mut self, plan: &BaselinePlan) -> crate::Result<StepMetrics> {
         let t0 = Instant::now();
         let mut gb = self.engine.grad_buffer();
-        let mut device_tokens = 0usize;
-        for b in &plan.batches {
-            self.engine.run_step_into(b, &mut gb)?;
-            device_tokens += b.capacity;
-        }
+        let device_tokens = self.run_plan(plan, &mut gb)?;
         let grad_norm = self.engine.apply_update(&gb)?;
         Ok(StepMetrics {
             step: self.engine.step_count(),
@@ -112,6 +121,9 @@ impl BaselineTrainer {
             grad_norm,
             plan_ms: 0.0,
             stall_ms: 0.0,
+            ranks: 1,
+            reduce_ms: 0.0,
+            rank_imbalance: 1.0,
         })
     }
 

@@ -34,6 +34,28 @@ impl GradBuffer {
         }
     }
 
+    /// Reduce another rank's accumulator into this one (f64, element-wise).
+    /// The distributed step ([`crate::coordinator::dist`]) folds rank
+    /// buffers in **fixed rank order**, so the reduced gradient is
+    /// bit-identical run-to-run regardless of executor thread scheduling.
+    pub fn merge(&mut self, other: &GradBuffer) {
+        debug_assert_eq!(self.grads.len(), other.grads.len());
+        self.loss_sum += other.loss_sum;
+        self.weight_sum += other.weight_sum;
+        self.exec_calls += other.exec_calls;
+        for (acc, g) in self.grads.iter_mut().zip(&other.grads) {
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x;
+            }
+        }
+    }
+
+    /// [`Self::merge`] in the owned-rhs fold shape
+    /// [`crate::coordinator::dist::execute_ranks`] consumes.
+    pub fn merge_owned(acc: &mut GradBuffer, other: GradBuffer) {
+        acc.merge(&other);
+    }
+
     /// Normalized gradients (divide by the global-batch weight sum): makes
     /// tree and sep-avg baselines directly comparable (see trainer docs).
     pub fn normalized(&self) -> Vec<Vec<f64>> {
@@ -69,5 +91,34 @@ mod tests {
         assert_eq!(gb.weight_sum, 8.0);
         assert_eq!(gb.normalized()[0], vec![0.25, 0.5]);
         assert_eq!(gb.mean_loss(), 0.5);
+    }
+
+    #[test]
+    fn merge_equals_accumulating_in_one_buffer() {
+        let params = vec![HostTensor::zeros_f32(vec![2])];
+        let outs_a = vec![
+            HostTensor::scalar_f32(2.0),
+            HostTensor::scalar_f32(4.0),
+            HostTensor::f32(vec![2], vec![1.0, 2.0]),
+        ];
+        let outs_b = vec![
+            HostTensor::scalar_f32(1.0),
+            HostTensor::scalar_f32(2.0),
+            HostTensor::f32(vec![2], vec![-0.5, 3.0]),
+        ];
+        // one buffer taking both calls...
+        let mut whole = GradBuffer::zeros(&params);
+        whole.add_outputs(&outs_a, 2);
+        whole.add_outputs(&outs_b, 2);
+        // ...vs two rank buffers reduced in order
+        let mut r0 = GradBuffer::zeros(&params);
+        r0.add_outputs(&outs_a, 2);
+        let mut r1 = GradBuffer::zeros(&params);
+        r1.add_outputs(&outs_b, 2);
+        r0.merge(&r1);
+        assert_eq!(r0.loss_sum, whole.loss_sum);
+        assert_eq!(r0.weight_sum, whole.weight_sum);
+        assert_eq!(r0.exec_calls, whole.exec_calls);
+        assert_eq!(r0.grads, whole.grads);
     }
 }

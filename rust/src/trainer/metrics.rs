@@ -30,6 +30,14 @@ pub struct StepMetrics {
     /// critical path.  Pipelined: only the residual wait after overlap,
     /// so `plan_ms - stall_ms` is the per-step win.
     pub stall_ms: f64,
+    /// Data-parallel ranks this step was sharded across (1 = unsharded).
+    pub ranks: u64,
+    /// Fixed-order gradient reduction time across rank buffers (0 for a
+    /// single rank: there is nothing to reduce).
+    pub reduce_ms: f64,
+    /// Max-over-mean per-rank packed token load (>= 1.0; 1.0 = balanced —
+    /// also the single-rank value).
+    pub rank_imbalance: f64,
 }
 
 impl StepMetrics {
@@ -47,7 +55,37 @@ impl StepMetrics {
         }
         self.flat_tokens as f64 / self.tree_tokens as f64
     }
+
+    /// One CSV row matching [`CSV_HEADER`] column-for-column.  Kept next to
+    /// the header (and arity-tested below) because the schema silently
+    /// drifted twice before the two were forced through one seam.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},{:.3},{:.4}",
+            self.step,
+            self.loss,
+            self.weight_sum,
+            self.device_tokens,
+            self.tree_tokens,
+            self.flat_tokens,
+            self.reuse_ratio(),
+            self.wall.as_secs_f64() * 1e3,
+            self.plan_ms,
+            self.stall_ms,
+            self.exec_calls,
+            self.forest_batches,
+            self.grad_norm,
+            self.ranks,
+            self.reduce_ms,
+            self.rank_imbalance
+        )
+    }
 }
+
+/// Column schema of the per-step CSV ([`StepMetrics::csv_row`] order).
+pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,\
+     reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
+     ranks,reduce_ms,rank_imbalance";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -57,32 +95,73 @@ pub struct CsvSink {
 impl CsvSink {
     pub fn create(path: &std::path::Path) -> crate::Result<Self> {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(
-            w,
-            "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm"
-        )?;
+        writeln!(w, "{CSV_HEADER}")?;
         Ok(Self { w })
     }
 
     pub fn log(&mut self, m: &StepMetrics) -> crate::Result<()> {
-        writeln!(
-            self.w,
-            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5}",
-            m.step,
-            m.loss,
-            m.weight_sum,
-            m.device_tokens,
-            m.tree_tokens,
-            m.flat_tokens,
-            m.reuse_ratio(),
-            m.wall.as_secs_f64() * 1e3,
-            m.plan_ms,
-            m.stall_ms,
-            m.exec_calls,
-            m.forest_batches,
-            m.grad_norm
-        )?;
+        writeln!(self.w, "{}", m.csv_row())?;
         self.w.flush()?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StepMetrics {
+        StepMetrics {
+            step: 3,
+            loss: 1.25,
+            weight_sum: 40.0,
+            device_tokens: 2048,
+            tree_tokens: 900,
+            flat_tokens: 2100,
+            wall: Duration::from_millis(17),
+            exec_calls: 5,
+            forest_batches: 4,
+            grad_norm: 0.5,
+            plan_ms: 2.0,
+            stall_ms: 0.5,
+            ranks: 4,
+            reduce_ms: 0.25,
+            rank_imbalance: 1.125,
+        }
+    }
+
+    #[test]
+    fn csv_header_and_row_arity_stay_in_sync() {
+        // the schema drifted silently twice across PRs 1-3: adding a field
+        // to the row but not the header (or vice versa) must fail here
+        let header_cols = CSV_HEADER.split(',').count();
+        let row = sample().csv_row();
+        let row_cols = row.split(',').count();
+        assert_eq!(
+            header_cols, row_cols,
+            "CSV schema drift: header has {header_cols} columns, row has {row_cols} ({row})"
+        );
+        assert!(CSV_HEADER.split(',').all(|c| !c.trim().is_empty()), "empty header column");
+        assert!(row.split(',').all(|c| !c.is_empty()), "empty row column: {row}");
+    }
+
+    #[test]
+    fn csv_schema_includes_the_dist_columns() {
+        for col in ["ranks", "reduce_ms", "rank_imbalance", "reuse_ratio"] {
+            assert!(
+                CSV_HEADER.split(',').any(|c| c.trim() == col),
+                "missing column {col}"
+            );
+        }
+        // and the row renders their values in header order
+        let row = sample().csv_row();
+        let cols: Vec<&str> = row.split(',').collect();
+        let idx = |name: &str| {
+            CSV_HEADER.split(',').position(|c| c.trim() == name).unwrap()
+        };
+        assert_eq!(cols[idx("ranks")], "4");
+        assert_eq!(cols[idx("reduce_ms")], "0.250");
+        assert_eq!(cols[idx("rank_imbalance")], "1.1250");
+        assert_eq!(cols[idx("step")], "3");
     }
 }

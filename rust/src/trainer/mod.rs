@@ -40,5 +40,5 @@ pub use batch::{build_batch, Batch, BatchOptions};
 pub use engine::Engine;
 pub use grads::GradBuffer;
 pub use metrics::{CsvSink, StepMetrics};
-pub use planner::{BaselinePlan, PlanSpec, StepPlan};
+pub use planner::{BaselinePlan, PlanSpec, ShardedPlan, StepPlan};
 pub use tree_trainer::{GlobalPlan, TreeTrainer};

@@ -57,8 +57,7 @@ pub struct BaselinePlan {
     pub flat_tokens: usize,
 }
 
-/// One planned optimizer step, either mode — what flows from the planner
-/// side of the pipeline to the executor side.
+/// One rank's planned optimizer-step share, either mode.
 pub enum StepPlan {
     Tree(GlobalPlan),
     Baseline(BaselinePlan),
@@ -84,6 +83,61 @@ impl StepPlan {
             Self::Tree(p) => p.flat_tokens,
             Self::Baseline(p) => p.flat_tokens,
         }
+    }
+
+    /// Packed device batches this rank plan executes (`step` calls for the
+    /// forest path, chain batches for the baseline).
+    pub fn device_batches(&self) -> usize {
+        match self {
+            Self::Tree(p) => p.forests.len(),
+            Self::Baseline(p) => p.batches.len(),
+        }
+    }
+}
+
+/// One global batch planned as `n_ranks` per-rank [`StepPlan`]s — what flows
+/// from the planner side of the pipeline to the executor side.
+///
+/// Trees are LPT-sharded whole across ranks by *packed* (post-reuse) token
+/// cost ([`forest::shard_by_cost`]), honoring the §3.4 constraint that a
+/// tree never splits across ranks, then each rank runs the ordinary Forest
+/// Packing over its own tree set.  Rank 0 of a 1-rank plan is byte-identical
+/// to the unsharded plan: sharding restores input order within each rank,
+/// so the single rank sees the exact tree sequence the unsharded planner
+/// would.
+pub struct ShardedPlan {
+    pub ranks: Vec<StepPlan>,
+    /// Per-rank packed token load the sharder balanced on.
+    pub loads: Vec<usize>,
+}
+
+impl ShardedPlan {
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Max-over-mean rank load (`>= 1.0`; `1.0` = perfectly balanced) —
+    /// the shared [`forest::load_imbalance`] definition.
+    pub fn rank_imbalance(&self) -> f64 {
+        forest::load_imbalance(&self.loads)
+    }
+
+    /// Program calls across every rank (the packing metric).
+    pub fn program_calls(&self) -> usize {
+        self.ranks.iter().map(|p| p.program_calls()).sum()
+    }
+
+    pub fn tree_tokens(&self) -> usize {
+        self.ranks.iter().map(|p| p.tree_tokens()).sum()
+    }
+
+    pub fn flat_tokens(&self) -> usize {
+        self.ranks.iter().map(|p| p.flat_tokens()).sum()
+    }
+
+    /// Packed device batches summed across ranks.
+    pub fn device_batches(&self) -> usize {
+        self.ranks.iter().map(|p| p.device_batches()).sum()
     }
 }
 
@@ -233,6 +287,51 @@ impl PlanSpec {
             flat_tokens: trees.iter().map(|t| t.borrow().n_flat()).sum(),
         })
     }
+
+    /// Plan a global batch as `n_ranks` per-rank tree-mode plans: LPT-shard
+    /// whole trees by packed (post-reuse, `n_tree`) token cost, then Forest
+    /// Pack each rank independently.  `n_ranks == 1` is byte-identical to
+    /// [`Self::plan_tree`] over the same trees.
+    pub fn plan_sharded_tree<T: Borrow<TrajectoryTree>>(
+        &self,
+        trees: &[T],
+        n_ranks: usize,
+    ) -> crate::Result<ShardedPlan> {
+        self.plan_sharded(trees, n_ranks, |t| t.n_tree(), |rt| {
+            Ok(StepPlan::Tree(self.plan_tree(rt)?))
+        })
+    }
+
+    /// Baseline counterpart of [`Self::plan_sharded_tree`]: the sep-avg
+    /// baseline pays flattened tokens, so ranks are balanced on `n_flat` —
+    /// the load a linearizing trainer would actually execute.
+    pub fn plan_sharded_baseline<T: Borrow<TrajectoryTree>>(
+        &self,
+        trees: &[T],
+        n_ranks: usize,
+    ) -> crate::Result<ShardedPlan> {
+        self.plan_sharded(trees, n_ranks, |t| t.n_flat(), |rt| {
+            Ok(StepPlan::Baseline(self.plan_baseline(rt)?))
+        })
+    }
+
+    fn plan_sharded<T: Borrow<TrajectoryTree>>(
+        &self,
+        trees: &[T],
+        n_ranks: usize,
+        cost: impl Fn(&TrajectoryTree) -> usize,
+        plan_rank: impl Fn(&[&TrajectoryTree]) -> crate::Result<StepPlan>,
+    ) -> crate::Result<ShardedPlan> {
+        let costs: Vec<usize> = trees.iter().map(|t| cost(t.borrow())).collect();
+        let shards = forest::shard_by_cost(&costs, n_ranks)?;
+        let mut ranks = Vec::with_capacity(n_ranks);
+        for ids in &shards.ranks {
+            let rank_trees: Vec<&TrajectoryTree> =
+                ids.iter().map(|&i| trees[i].borrow()).collect();
+            ranks.push(plan_rank(&rank_trees)?);
+        }
+        Ok(ShardedPlan { ranks, loads: shards.loads })
+    }
 }
 
 #[cfg(test)]
@@ -286,5 +385,71 @@ mod tests {
         let t = gen::with_target_por(3, 0.6, 4, 600, 24, 128);
         let err = spec(64).plan_tree(std::slice::from_ref(&t)).unwrap_err().to_string();
         assert!(err.contains("no part_fwd"), "got: {err}");
+    }
+
+    #[test]
+    fn one_rank_shard_is_byte_identical_to_unsharded_plan() {
+        let trees: Vec<TrajectoryTree> = (0..6).map(|s| gen::uniform(40 + s, 9, 5, 0.6)).collect();
+        let sp = spec(4096);
+        let flat = sp.plan_tree(&trees).unwrap();
+        let sharded = sp.plan_sharded_tree(&trees, 1).unwrap();
+        assert_eq!(sharded.n_ranks(), 1);
+        assert_eq!(sharded.loads, vec![trees.iter().map(|t| t.n_tree()).sum::<usize>()]);
+        let StepPlan::Tree(rank0) = &sharded.ranks[0] else { panic!("tree-mode rank plan") };
+        assert_eq!(rank0.forests.len(), flat.forests.len());
+        for (a, b) in rank0.forests.iter().zip(&flat.forests) {
+            assert_eq!(a.batch, b.batch, "rank 0 of a 1-rank plan must be the seed plan");
+        }
+        assert_eq!(sharded.tree_tokens(), flat.tree_tokens);
+        assert_eq!(sharded.flat_tokens(), flat.flat_tokens);
+        assert_eq!(sharded.rank_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn sharded_plan_conserves_tokens_and_is_reproducible() {
+        let trees: Vec<TrajectoryTree> = (0..9).map(|s| gen::uniform(50 + s, 9, 5, 0.6)).collect();
+        let sp = spec(4096);
+        let a = sp.plan_sharded_tree(&trees, 4).unwrap();
+        assert_eq!(a.n_ranks(), 4);
+        assert_eq!(a.tree_tokens(), trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        assert_eq!(a.flat_tokens(), trees.iter().map(|t| t.n_flat()).sum::<usize>());
+        assert_eq!(a.loads.iter().sum::<usize>(), a.tree_tokens());
+        assert!(a.rank_imbalance() >= 1.0);
+        // reproducible batch-for-batch (the determinism contract)
+        let b = sp.plan_sharded_tree(&trees, 4).unwrap();
+        assert_eq!(a.loads, b.loads);
+        for (x, y) in a.ranks.iter().zip(&b.ranks) {
+            let (StepPlan::Tree(px), StepPlan::Tree(py)) = (x, y) else { panic!("tree mode") };
+            assert_eq!(px.forests.len(), py.forests.len());
+            for (fx, fy) in px.forests.iter().zip(&py.forests) {
+                assert_eq!(fx.batch, fy.batch);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_baseline_balances_on_flat_tokens() {
+        let trees: Vec<TrajectoryTree> = (0..7).map(|s| gen::uniform(60 + s, 9, 5, 0.6)).collect();
+        let sp = spec(4096);
+        let p = sp.plan_sharded_baseline(&trees, 3).unwrap();
+        assert_eq!(p.loads.iter().sum::<usize>(), trees.iter().map(|t| t.n_flat()).sum::<usize>());
+        for r in &p.ranks {
+            assert!(matches!(r, StepPlan::Baseline(_)));
+        }
+        assert_eq!(p.flat_tokens(), trees.iter().map(|t| t.n_flat()).sum::<usize>());
+    }
+
+    #[test]
+    fn sharding_more_ranks_than_trees_yields_empty_rank_plans() {
+        let trees: Vec<TrajectoryTree> = (0..2).map(|s| gen::uniform(s, 8, 4, 0.5)).collect();
+        let p = spec(4096).plan_sharded_tree(&trees, 4).unwrap();
+        assert_eq!(p.n_ranks(), 4);
+        let empty = p
+            .ranks
+            .iter()
+            .filter(|r| matches!(r, StepPlan::Tree(g) if g.forests.is_empty()))
+            .count();
+        assert_eq!(empty, 2, "two ranks must carry no trees");
+        assert_eq!(p.tree_tokens(), trees.iter().map(|t| t.n_tree()).sum::<usize>());
     }
 }

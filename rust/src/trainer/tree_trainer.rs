@@ -292,6 +292,9 @@ impl TreeTrainer {
             grad_norm,
             plan_ms: 0.0,
             stall_ms: 0.0,
+            ranks: 1,
+            reduce_ms: 0.0,
+            rank_imbalance: 1.0,
         })
     }
 

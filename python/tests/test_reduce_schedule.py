@@ -1,0 +1,139 @@
+"""Python mirror of the Rust log-tree reduce pairing schedule.
+
+Mirrors ``rust/src/coordinator/dist.rs``: ``reduce_depth`` /
+``reduce_schedule`` / ``reduce_parent`` / ``reduce_children``.  The Rust
+unit tests (``schedule_brackets_match_python_mirror`` et al.) hardcode the
+exact brackets this mirror computes for ranks 1, 2, 3, 5, 8 — keep the two
+in lockstep, like the PR 4 sharder mirrors.
+
+Determinism contract being mirrored: the bracket is a pure function of
+rank ids (round ``d`` merges rank ``r`` with ``r + 2**d`` whenever
+``r % 2**(d+1) == 0`` and the partner exists), the destination is always
+the lower rank id, odd tails get byes, depth is ``ceil(log2(n))``, and the
+flattened merge order is exactly rank order ``0..n`` — the tree changes
+grouping, never ordering.
+"""
+
+import math
+
+
+def reduce_depth(n):
+    assert n >= 1
+    d = 0
+    while (1 << d) < n:
+        d += 1
+    return d
+
+
+def reduce_schedule(n):
+    """rounds[d] = list of (dst, src) merges; dst absorbs src."""
+    rounds = []
+    d = 0
+    while (1 << d) < n:
+        stride = 1 << (d + 1)
+        pairs = []
+        for dst in range(0, n, stride):
+            src = dst + (1 << d)
+            if src < n:
+                pairs.append((dst, src))
+        rounds.append(pairs)
+        d += 1
+    return rounds
+
+
+def reduce_parent(rank):
+    return None if rank == 0 else rank & (rank - 1)
+
+
+def reduce_children(rank, n):
+    out = []
+    for d in range(reduce_depth(n)):
+        if rank % (1 << (d + 1)) == 0:
+            src = rank + (1 << d)
+            if src < n:
+                out.append((d, src))
+    return out
+
+
+def test_brackets_match_rust_unit_tests():
+    # the exact expectations hardcoded in rust/src/coordinator/dist.rs
+    assert reduce_schedule(1) == []
+    assert reduce_schedule(2) == [[(0, 1)]]
+    assert reduce_schedule(3) == [[(0, 1)], [(0, 2)]]
+    assert reduce_schedule(5) == [[(0, 1), (2, 3)], [(0, 2)], [(0, 4)]]
+    assert reduce_schedule(8) == [
+        [(0, 1), (2, 3), (4, 5), (6, 7)],
+        [(0, 2), (4, 6)],
+        [(0, 4)],
+    ]
+
+
+def test_depth_is_ceil_log2():
+    for n in range(1, 65):
+        want = 0 if n == 1 else math.ceil(math.log2(n))
+        assert reduce_depth(n) == want, n
+        assert len(reduce_schedule(n)) == want, n
+
+
+def test_odd_rank_byes():
+    # n = 5: rank 4 has no partner until the final round
+    sched = reduce_schedule(5)
+    assert all(4 not in pair for rnd in sched[:2] for pair in rnd)
+    assert sched[2] == [(0, 4)]
+
+
+def test_every_rank_merges_exactly_once_into_its_parent():
+    for n in range(1, 65):
+        sched = reduce_schedule(n)
+        srcs = sorted(s for rnd in sched for (_, s) in rnd)
+        assert srcs == list(range(1, n)), n
+        for r in range(1, n):
+            tz = (r & -r).bit_length() - 1
+            assert (reduce_parent(r), r) in sched[tz], (n, r)
+
+
+def test_child_views_union_to_schedule():
+    for n in range(1, 65):
+        sched = reduce_schedule(n)
+        from_children = [[] for _ in sched]
+        for r in range(n):
+            for (d, src) in reduce_children(r, n):
+                from_children[d].append((r, src))
+        assert [sorted(x) for x in from_children] == [sorted(x) for x in sched], n
+
+
+def test_flattened_merge_order_is_rank_order():
+    # the tree reassociates the fold but never reorders it
+    for n in range(1, 65):
+        lab = [[i] for i in range(n)]
+        for rnd in reduce_schedule(n):
+            for (dst, src) in rnd:
+                lab[dst] = lab[dst] + lab[src]
+        assert lab[0] == list(range(n)), n
+
+
+def test_worst_case_reassociation_fixture():
+    # the fixture tests/dist_equivalence.rs uses: serial fold and tree fold
+    # produce *different bits* (1.0 vs 0.0) while both stay within f64
+    # reassociation tolerance of the accumulated magnitude
+    vals = [1.0, 1e16, -1e16, 1.0]
+    serial = 0.0
+    acc = vals[0]
+    for v in vals[1:]:
+        acc = acc + v
+    serial = acc
+    lab = list(vals)
+    for rnd in reduce_schedule(4):
+        for (dst, src) in rnd:
+            lab[dst] = lab[dst] + lab[src]
+    tree = lab[0]
+    assert serial == 1.0 and tree == 0.0
+    scale = sum(abs(v) for v in vals)
+    assert abs(serial - tree) <= 1e-12 * scale
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

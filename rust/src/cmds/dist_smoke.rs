@@ -1,28 +1,64 @@
 //! `tree-train dist-smoke` — the sharded-execution determinism contract as
-//! a CI gate, hermetically (no artifacts, no PJRT).
+//! a CI gate, hermetically (no artifacts, no PJRT), plus the measured
+//! imbalance-vs-speedup sweep ROADMAP asked for.
 //!
-//! Runs the same corpus through the real pipeline driver three times with
-//! the pure-f64 [`HostExecutor`]:
+//! `--ranks` and `--trees-per-batch` take comma-separated lists.  For every
+//! `trees_per_batch` value the same corpus is run through the real pipeline
+//! driver with the pure-f64 [`HostExecutor`]:
 //!
-//! 1. `--ranks 1` — the seed single-executor reference;
-//! 2. `--ranks N` — per-rank worker threads + fixed-order reduction;
-//! 3. `--ranks N` again — a repeat run.
+//! 1. `--ranks 1` (always, twice) — the seed single-executor reference and
+//!    the wall-clock baseline;
+//! 2. each `--ranks N >= 2`, twice — the persistent rank-worker pool with
+//!    the log-tree reduction.
 //!
-//! and fails unless (a) the `--ranks N` loss stream matches the single-rank
-//! stream within f64 tolerance (same global batch, gradients summed in a
-//! different association), and (b) the two `--ranks N` runs are
-//! **bit-identical** in losses and batch-composition fingerprints — thread
-//! scheduling must never leak into the update (docs/distributed.md).
+//! Hard gates, per `(N, trees_per_batch)` combination:
+//!
+//! * the `ranks N` loss stream matches the single-rank stream within f64
+//!   tolerance (same global batch, gradients reduced in a different
+//!   association — the log-tree bracket);
+//! * the two `ranks N` runs are **bit-identical** in losses and
+//!   batch-composition fingerprints — thread scheduling and reduce-message
+//!   arrival order must never leak into the update (docs/distributed.md);
+//! * the reported `reduce_depth` is exactly `ceil(log2(N))`.
+//!
+//! The *measured* (not simulated) sweep — per-combination wall clock,
+//! speedup over ranks-1, rank imbalance, reduce cost/overlap — is written
+//! into `results/BENCH_distsim.json` under the `measured_sweep` key,
+//! preserving `tree-train distsim`'s cluster projection section.
 
 use std::path::Path;
+use std::time::Instant;
 
+use tree_train::coordinator::dist;
 use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
 use tree_train::trainer::{PlanSpec, StepMetrics};
+use tree_train::util::json::{update_json_file_key, Json};
 
 /// Relative f64 tolerance for the cross-rank-count loss comparison: the
-/// per-step packing-reassociation error is ~1e-12, compounded through the
-/// executor's SGD updates over the run.  Far below any f32 effect.
+/// per-step reassociation error (per-rank subtotals folded by the log-tree
+/// bracket instead of one serial accumulation) is ~1e-12, compounded
+/// through the executor's SGD updates over the run.  Far below any f32
+/// effect.  Note the log-tree bracket reassociates the fold relative to
+/// the pre-pool serial rank-order reduce, so `ranks >= 3` streams moved
+/// within this band once when the tree reduce landed — the tolerance vs.
+/// ranks-1 is unchanged.
 const LOSS_RTOL: f64 = 1e-8;
+
+fn parse_list(flag: &str, s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let v: usize = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{flag}: `{part}` is not a positive integer"))?;
+        anyhow::ensure!(v >= 1, "--{flag} entries must be >= 1");
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "--{flag} needs at least one value");
+    Ok(out)
+}
 
 #[allow(clippy::too_many_arguments)]
 pub fn run(
@@ -30,80 +66,164 @@ pub fn run(
     format: &str,
     mode: &str,
     steps: u64,
-    trees_per_batch: usize,
-    ranks: usize,
+    trees_per_batch: &str,
+    ranks: &str,
     depth: usize,
     window: usize,
     capacity: usize,
     vocab: usize,
     seed: u64,
+    out: &Path,
 ) -> anyhow::Result<()> {
     let mode = super::parse_mode(mode)?;
-    anyhow::ensure!(ranks >= 2, "--ranks must be >= 2 (1 is the reference run)");
-    let source = |path: &Path| super::smoke_source(format, path, window, seed);
-    let cfg = |r: usize| PipelineConfig {
-        mode,
-        steps,
-        trees_per_batch,
-        depth,
-        lr: 1e-2,
-        warmup: 0,
-        ranks: r,
-    };
-    let spec = PlanSpec::for_host(capacity);
-    let run_once = |r: usize| -> anyhow::Result<(Vec<StepMetrics>, Vec<u64>)> {
-        let mut exec = HostExecutor::new(vocab, 8, seed);
-        let (metrics, _) = pipeline::run(&cfg(r), spec.clone(), source(corpus)?, &mut exec)?;
-        Ok((metrics, exec.fingerprints))
-    };
-
-    let (single, _) = run_once(1)?;
-    let (sharded_a, fp_a) = run_once(ranks)?;
-    let (sharded_b, fp_b) = run_once(ranks)?;
-
-    // (a) ranks-N loss stream tracks the single-rank stream to f64 tolerance
-    for (s, m) in single.iter().zip(&sharded_a) {
-        let err = (s.loss - m.loss).abs();
-        anyhow::ensure!(
-            err <= LOSS_RTOL * (s.loss.abs() + 1.0),
-            "step {}: ranks-{ranks} loss {} diverged from single-rank loss {} (|err| {err:e})",
-            s.step,
-            m.loss,
-            s.loss
-        );
-        anyhow::ensure!(
-            s.tree_tokens == m.tree_tokens && s.flat_tokens == m.flat_tokens,
-            "step {}: sharding changed the global batch itself",
-            s.step
-        );
-        anyhow::ensure!(m.ranks == ranks as u64, "step {}: ranks column", s.step);
-        anyhow::ensure!(
-            m.rank_imbalance >= 1.0,
-            "step {}: imbalance {} < 1",
-            s.step,
-            m.rank_imbalance
-        );
-    }
-    // (b) repeat runs are bit-identical: thread scheduling never leaks in
-    for (a, b) in sharded_a.iter().zip(&sharded_b) {
-        anyhow::ensure!(
-            a.loss.to_bits() == b.loss.to_bits(),
-            "step {}: ranks-{ranks} repeat run diverged ({} vs {})",
-            a.step,
-            a.loss,
-            b.loss
-        );
-    }
+    let rank_list = parse_list("ranks", ranks)?;
+    let tpb_list = parse_list("trees-per-batch", trees_per_batch)?;
     anyhow::ensure!(
-        fp_a == fp_b,
-        "batch-composition fingerprints diverged between identical ranks-{ranks} runs"
+        rank_list.iter().any(|&r| r >= 2),
+        "--ranks needs at least one value >= 2 (1 is the reference run)"
     );
+    let spec = PlanSpec::for_host(capacity);
 
-    let max_imb = sharded_a.iter().map(|m| m.rank_imbalance).fold(1.0f64, f64::max);
+    let mut rows = Vec::new();
+    for &tpb in &tpb_list {
+        let run_once = |r: usize| -> anyhow::Result<(Vec<StepMetrics>, Vec<u64>, f64)> {
+            let cfg = PipelineConfig {
+                mode,
+                steps,
+                trees_per_batch: tpb,
+                depth,
+                lr: 1e-2,
+                warmup: 0,
+                ranks: r,
+            };
+            let mut exec = HostExecutor::new(vocab, 8, seed);
+            let t0 = Instant::now();
+            let source = super::smoke_source(format, corpus, window, seed)?;
+            let (metrics, _) = pipeline::run(&cfg, spec.clone(), source, &mut exec)?;
+            Ok((metrics, exec.fingerprints, t0.elapsed().as_secs_f64() * 1e3))
+        };
+
+        // reference (and wall baseline): ranks 1, best of two
+        let (single, _, w1a) = run_once(1)?;
+        let (_, _, w1b) = run_once(1)?;
+        let wall1 = w1a.min(w1b);
+        for m in &single {
+            anyhow::ensure!(m.ranks == 1 && m.reduce_depth == 0, "ranks-1 metrics invariants");
+            anyhow::ensure!(m.rank_imbalance == 1.0, "ranks-1 is balanced by definition");
+        }
+        rows.push(sweep_row(tpb, 1, wall1, 1.0, &single));
+
+        for &r in rank_list.iter().filter(|&&r| r >= 2) {
+            let (sharded_a, fp_a, wall_a) = run_once(r)?;
+            let (sharded_b, fp_b, wall_b) = run_once(r)?;
+
+            // (a) ranks-N loss stream tracks the single-rank stream to f64
+            // tolerance, over the identical global batches
+            for (s, m) in single.iter().zip(&sharded_a) {
+                let err = (s.loss - m.loss).abs();
+                anyhow::ensure!(
+                    err <= LOSS_RTOL * (s.loss.abs() + 1.0),
+                    "tpb {tpb} step {}: ranks-{r} loss {} diverged from single-rank \
+                     loss {} (|err| {err:e})",
+                    s.step,
+                    m.loss,
+                    s.loss
+                );
+                anyhow::ensure!(
+                    s.tree_tokens == m.tree_tokens && s.flat_tokens == m.flat_tokens,
+                    "tpb {tpb} step {}: sharding changed the global batch itself",
+                    s.step
+                );
+                anyhow::ensure!(m.ranks == r as u64, "step {}: ranks column", s.step);
+                anyhow::ensure!(
+                    m.rank_imbalance >= 1.0,
+                    "step {}: imbalance {} < 1",
+                    s.step,
+                    m.rank_imbalance
+                );
+                anyhow::ensure!(
+                    m.reduce_depth == dist::reduce_depth(r) as u64,
+                    "step {}: reduce depth {} != ceil(log2({r}))",
+                    s.step,
+                    m.reduce_depth
+                );
+            }
+            // (b) repeat runs are bit-identical: neither worker-thread
+            // scheduling nor reduce-message arrival order leaks in
+            for (a, b) in sharded_a.iter().zip(&sharded_b) {
+                anyhow::ensure!(
+                    a.loss.to_bits() == b.loss.to_bits(),
+                    "tpb {tpb} step {}: ranks-{r} repeat run diverged ({} vs {})",
+                    a.step,
+                    a.loss,
+                    b.loss
+                );
+            }
+            anyhow::ensure!(
+                fp_a == fp_b,
+                "tpb {tpb}: batch-composition fingerprints diverged between identical \
+                 ranks-{r} runs"
+            );
+
+            let wall = wall_a.min(wall_b);
+            let max_imb =
+                sharded_a.iter().map(|m| m.rank_imbalance).fold(1.0f64, f64::max);
+            println!(
+                "dist smoke OK: tpb {tpb} ranks {r}: within {LOSS_RTOL:e} of ranks-1, \
+                 repeat bit-identical; wall {wall:.1} ms (ranks-1 {wall1:.1} ms, \
+                 speedup {:.2}x), max imbalance {max_imb:.3}, reduce depth {}",
+                wall1 / wall.max(1e-9),
+                dist::reduce_depth(r)
+            );
+            rows.push(sweep_row(tpb, r, wall, wall1 / wall.max(1e-9), &sharded_a));
+        }
+    }
+
+    std::fs::create_dir_all(out).ok();
+    let path = out.join("BENCH_distsim.json");
+    update_json_file_key(
+        &path,
+        "measured_sweep",
+        Json::obj(vec![
+            ("corpus_format", Json::str(format)),
+            ("mode", Json::str(format!("{mode:?}"))),
+            ("steps", Json::num(steps as f64)),
+            ("capacity", Json::num(capacity as f64)),
+            ("pipeline_depth", Json::num(depth as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("loss_rtol", Json::num(LOSS_RTOL)),
+            ("rows", Json::Arr(rows)),
+        ]),
+        // `projection` is tree-train distsim's sibling section; anything
+        // else (older schemas) is pruned
+        &["projection"],
+    )?;
     println!(
-        "dist smoke OK: {} steps ({format} corpus, {mode:?} mode), ranks 1 vs {ranks} \
-         within {LOSS_RTOL:e}, repeat bit-identical; max rank imbalance {max_imb:.3}",
-        steps
+        "dist smoke OK: {} steps ({format} corpus, {mode:?} mode), ranks {:?} x \
+         trees-per-batch {:?} -> {}",
+        steps,
+        rank_list,
+        tpb_list,
+        path.display()
     );
     Ok(())
+}
+
+/// One measured sweep entry: wall clock, speedup over the ranks-1 baseline
+/// and the reduce/imbalance columns averaged over the run.
+fn sweep_row(tpb: usize, ranks: usize, wall_ms: f64, speedup: f64, ms: &[StepMetrics]) -> Json {
+    let n = ms.len().max(1) as f64;
+    let max_imb = ms.iter().map(|m| m.rank_imbalance).fold(1.0f64, f64::max);
+    let mean_reduce = ms.iter().map(|m| m.reduce_ms).sum::<f64>() / n;
+    let mean_overlap = ms.iter().map(|m| m.reduce_overlap_ms).sum::<f64>() / n;
+    Json::obj(vec![
+        ("ranks", Json::num(ranks as f64)),
+        ("trees_per_batch", Json::num(tpb as f64)),
+        ("wall_ms", Json::num(wall_ms)),
+        ("speedup", Json::num(speedup)),
+        ("max_rank_imbalance", Json::num(max_imb)),
+        ("mean_reduce_ms", Json::num(mean_reduce)),
+        ("mean_reduce_overlap_ms", Json::num(mean_overlap)),
+        ("reduce_depth", Json::num(dist::reduce_depth(ranks) as f64)),
+    ])
 }

@@ -13,7 +13,7 @@ use tree_train::distsim::{simulate_rank_loads, ClusterSpec};
 use tree_train::tree::gen::{agentic, Overlap};
 use tree_train::tree::metrics;
 use tree_train::trainer::PlanSpec;
-use tree_train::util::json::Json;
+use tree_train::util::json::{update_json_file_key, Json};
 
 pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
     // fig-7-like rollout mix at paper scale: long think-mode sessions,
@@ -79,8 +79,11 @@ pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
     let loads_json = |loads: &[usize]| {
         Json::Arr(loads.iter().map(|&l| Json::num(l as f64)).collect())
     };
-    std::fs::write(
-        out.join("BENCH_distsim.json"),
+    // write under the `projection` key, preserving dist-smoke's
+    // `measured_sweep` section in the same results file
+    update_json_file_key(
+        &out.join("BENCH_distsim.json"),
+        "projection",
         Json::obj(vec![
             ("n_trees", Json::num(trees.len() as f64)),
             ("n_ranks", Json::num(N_RANKS as f64)),
@@ -117,8 +120,10 @@ pub fn run(out: &std::path::Path) -> anyhow::Result<()> {
                         .collect(),
                 ),
             ),
-        ])
-        .to_string_pretty(),
+        ]),
+        // `measured_sweep` is dist-smoke's sibling section; stale top-level
+        // keys from the pre-dist-smoke schema are pruned
+        &["measured_sweep"],
     )?;
     println!("-> {}", out.join("BENCH_distsim.json").display());
     Ok(())

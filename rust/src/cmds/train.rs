@@ -28,5 +28,17 @@ pub fn run(
     if let Some(s) = &coord.summary {
         println!("{}", s.log_line());
     }
+    // multi-rank runs: how much of the log-tree reduce stayed off the
+    // executor's critical path?
+    if metrics.iter().any(|m| m.ranks > 1) {
+        let n = metrics.len().max(1) as f64;
+        let mean_reduce = metrics.iter().map(|m| m.reduce_ms).sum::<f64>() / n;
+        let mean_overlap = metrics.iter().map(|m| m.reduce_overlap_ms).sum::<f64>() / n;
+        println!(
+            "reduce: depth {}, mean {mean_reduce:.2} ms/step ({mean_overlap:.2} ms \
+             overlapped off the critical path)",
+            last.reduce_depth
+        );
+    }
     Ok(())
 }

@@ -1,44 +1,69 @@
-//! Rank-sharded execution with deterministic gradient reduction.
+//! Rank-sharded execution: a persistent per-rank worker pool with an
+//! overlapped log-tree gradient reduction.
 //!
 //! The paper's testbed (§3.4) is data-parallel: each rank executes a
 //! disjoint set of whole trees and the gradients are all-reduced before one
 //! optimizer step.  This module is that layer for the single-host
-//! reproduction: a [`ShardedPlan`] (one [`StepPlan`] per rank, trees
-//! LPT-sharded whole by packed token cost) is executed by **one worker
-//! thread per rank**, each accumulating into its private buffer, and the
-//! rank buffers are reduced **in fixed rank order** into a single f64
-//! accumulation before `apply_update`.
+//! reproduction, rebuilt around two ideas:
+//!
+//! * **Persistent rank workers.**  A [`RankPool`] spawns one worker thread
+//!   per rank *once per run* (not per optimizer step, as the earlier
+//!   scoped-thread version did) and feeds it `Arc`-shared [`ShardedPlan`]s
+//!   over a per-rank channel.  Each worker owns its rank state outright —
+//!   for the XLA trainers a full per-rank trainer **replica** whose
+//!   [`crate::trainer::Engine`] holds its own parameter tensors, literal
+//!   cache, optimizer moments and program handles.  Nothing is shared by
+//!   `&`-reference across rank threads anymore, so the pool requires only
+//!   `W: Send` — the old `Sync`-on-`&Engine` precondition (which made
+//!   `ranks > 1` impossible to compile against a real PJRT backend whose
+//!   handles are not `Sync`) is gone by construction.
+//! * **Fixed-shape log-tree reduce.**  Rank accumulators are folded by the
+//!   binary bracket of [`reduce_schedule`]: at round `d`, rank `r` (with
+//!   `r % 2^(d+1) == 0`) absorbs rank `r + 2^d`.  Depth is
+//!   `ceil(log2(ranks))` ([`reduce_depth`]), the pairing is a pure function
+//!   of rank ids, and merges run *on the worker threads* (accumulators flow
+//!   child → parent over peer channels), so the reduction is off the
+//!   executor thread's critical path: early-round merges hide behind
+//!   still-executing ranks, and the executor thread blocks parked on a
+//!   channel — freeing its core for the pipeline's planner thread — instead
+//!   of spinning through an O(ranks) serial fold.
 //!
 //! **Determinism contract** (docs/distributed.md):
 //!
-//! * `ranks == 1` executes inline on the caller thread — no worker, no
-//!   reduction — so it *is* the seed single-executor pipeline, bit-for-bit.
+//! * `ranks == 1` executes inline on the caller thread against the caller's
+//!   own trainer — no worker threads, no replica, no reduction — so it *is*
+//!   the seed single-executor pipeline, bit-for-bit.
 //! * `ranks == N` is bit-identical run-to-run: each rank's accumulation
-//!   order is fixed by its plan, and the cross-rank reduction happens on
-//!   the caller thread in rank order `0, 1, .., N-1` after every worker
-//!   has joined — thread scheduling can change wall-clock, never bits.
-//! * `ranks == N` vs `ranks == 1` agree to f64 tolerance, not bitwise:
-//!   the same per-call gradients are summed in a different association
-//!   (per-rank subtotals first).  Verified by `tests/pipeline_equivalence`
-//!   and the CI `dist-smoke` job.
+//!   order is fixed by its plan, and the cross-rank fold is the fixed
+//!   bracket above — thread scheduling and message arrival order can change
+//!   wall-clock, never bits (out-of-round arrivals are stashed and merged
+//!   in round order).
+//! * `ranks == N` vs `ranks == 1` agree to f64 tolerance, not bitwise: the
+//!   same per-call gradients are summed in a different association.
+//! * **One-time bit change vs. PR 4:** the log-tree bracket *reassociates*
+//!   the fold relative to the old serial rank-order reduce
+//!   (`((g0+g1)+g2)+g3` became `(g0+g1)+(g2+g3)`), so `ranks >= 3` loss
+//!   streams differ from the serial-fold era in the last bits while staying
+//!   inside the same 1e-8 relative tolerance vs. `ranks == 1` that
+//!   `dist-smoke` has always enforced.  The flattened merge order is still
+//!   exactly rank order `0..N` — the tree changes grouping, never ordering.
 //!
-//! [`execute_ranks`] is generic over the accumulator so the very same
-//! pool + fixed-order reduce drives the XLA trainers ([`GradBuffer`]
-//! buffers) and the hermetic [`super::pipeline::HostExecutor`] (RefModel
-//! embedding gradients) — the determinism property is tested on the exact
-//! code the real trainers run.
+//! **Replica update discipline.**  After the primary engine applies the
+//! Eq. 5 update, the *same* reduced [`GradBuffer`] and LR are broadcast to
+//! every worker ([`RankPool::apply`]); each replica applies the identical
+//! f64 AdamW math, so replicas stay bit-identical to the primary without
+//! any parameter broadcast.  The apply runs asynchronously on the worker
+//! threads (jobs are ordered per worker, so the next step's execute sees
+//! the updated parameters) and overlaps the planner's next-step planning.
 //!
-//! **Thread-safety precondition.**  Rank workers share one engine by
-//! `&`-reference, so `ranks > 1` requires the trainer (hence `Engine`,
-//! hence the `xla` crate's client/executable handles) to be `Sync`.  The
-//! vendored host-only `xla` crate is plain data, so this holds today and
-//! `scope.spawn` *enforces* it at compile time: swapping in the real
-//! PJRT-backed `xla` crate (whose handles wrap raw pointers) will fail to
-//! compile here rather than race — the required fix is per-rank `Engine`
-//! replicas (own parameter literals + device handles), tracked as a
-//! ROADMAP open item.  Do not paper over that error with an unsafe `Sync`
-//! impl: concurrent `run_literals` on one PJRT executable is a data race.
+//! [`thread_spawns`] counts every worker thread the pool ever spawned — the
+//! probe `tests/dist_equivalence.rs` uses to assert the pool really is
+//! created once per run (`ranks` spawns total, zero per subsequent step).
 
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::trainer::planner::{ShardedPlan, StepPlan};
@@ -46,249 +71,961 @@ use crate::trainer::{GradBuffer, StepMetrics};
 
 use super::AnyTrainer;
 
-/// Result of executing one sharded step's rank plans.
-pub struct RankReduce<B> {
-    /// The rank-order reduction of every rank's accumulator.
-    pub acc: B,
-    /// Device tokens dispatched across all ranks.
-    pub device_tokens: usize,
-    /// Wall time of the fixed-order reduction (0 for a single rank).
-    pub reduce_ms: f64,
+// ───────────────────────── reduce pairing schedule ─────────────────────────
+
+/// Depth of the fixed binary log-tree reduce: `ceil(log2(n_ranks))`
+/// (`0` for a single rank — there is nothing to reduce).
+pub fn reduce_depth(n_ranks: usize) -> u32 {
+    let mut d = 0u32;
+    while (1usize << d) < n_ranks {
+        d += 1;
+    }
+    d
 }
 
-/// Execute each rank's plan and reduce the per-rank accumulators in fixed
-/// rank order.  `run(rank, plan, acc)` must only touch its own `acc` (it
-/// runs on the rank's worker thread); `reduce(lhs, rhs)` folds rank `r+1`'s
-/// accumulator into the running reduction of ranks `0..=r`.
-///
-/// A single-rank plan short-circuits to an inline call — the seed
-/// single-executor path, byte-for-byte.
-pub fn execute_ranks<B, M, F, R>(
-    sharded: &ShardedPlan,
-    make: M,
-    run: F,
-    reduce: R,
-) -> crate::Result<RankReduce<B>>
-where
-    B: Send,
-    M: Fn() -> B + Sync,
-    F: Fn(usize, &StepPlan, &mut B) -> crate::Result<usize> + Sync,
-    R: Fn(&mut B, B),
-{
-    anyhow::ensure!(sharded.n_ranks() >= 1, "sharded plan has no ranks");
-    if sharded.n_ranks() == 1 {
-        let mut acc = make();
-        let device_tokens = run(0, &sharded.ranks[0], &mut acc)?;
-        return Ok(RankReduce { acc, device_tokens, reduce_ms: 0.0 });
+/// The fixed reduce bracket for `n_ranks`: `rounds[d]` lists the
+/// `(dst, src)` merges of round `d` — `dst` absorbs `src`, and `dst` is
+/// always the lower rank id, so the flattened merge order is exactly rank
+/// order `0..n` while the grouping is a balanced binary tree.  Odd
+/// tails get byes: a rank whose round-`d` partner does not exist simply
+/// advances (e.g. `n = 5`: rank 4 waits until the final round).
+/// Deterministic in rank ids alone — never in thread timing.
+pub fn reduce_schedule(n_ranks: usize) -> Vec<Vec<(usize, usize)>> {
+    let mut rounds = Vec::new();
+    let mut d = 0usize;
+    while (1usize << d) < n_ranks {
+        let stride = 1usize << (d + 1);
+        let mut pairs = Vec::new();
+        for dst in (0..n_ranks).step_by(stride) {
+            let src = dst + (1usize << d);
+            if src < n_ranks {
+                pairs.push((dst, src));
+            }
+        }
+        rounds.push(pairs);
+        d += 1;
     }
-    let outcomes: Vec<crate::Result<(B, usize)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = sharded
-            .ranks
-            .iter()
-            .enumerate()
-            .map(|(rank, plan)| {
-                let (run, make) = (&run, &make);
-                scope.spawn(move || -> crate::Result<(B, usize)> {
-                    let mut acc = make();
-                    let tokens = run(rank, plan, &mut acc)?;
-                    Ok((acc, tokens))
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| match h.join() {
-                Ok(r) => r,
-                Err(_) => Err(anyhow::anyhow!("rank executor thread panicked")),
-            })
-            .collect()
-    });
-    let mut acc: Option<B> = None;
-    let mut device_tokens = 0usize;
-    let mut reduce_ms = 0.0f64;
-    for outcome in outcomes {
-        let (rank_acc, tokens) = outcome?;
-        device_tokens += tokens;
-        match &mut acc {
-            None => acc = Some(rank_acc),
-            Some(a) => {
-                let t0 = Instant::now();
-                reduce(a, rank_acc);
-                reduce_ms += t0.elapsed().as_secs_f64() * 1e3;
+    rounds
+}
+
+/// The rank `src` sends its (sub-)reduction to: `src & (src - 1)` (clear
+/// the lowest set bit).  Rank 0 is the root and never sends.
+pub fn reduce_parent(rank: usize) -> Option<usize> {
+    if rank == 0 {
+        None
+    } else {
+        Some(rank & (rank - 1))
+    }
+}
+
+/// The source ranks `rank` absorbs, as `(round, src)` in merge order.
+pub fn reduce_children(rank: usize, n_ranks: usize) -> Vec<(u32, usize)> {
+    let mut out = Vec::new();
+    for d in 0..reduce_depth(n_ranks) {
+        if rank % (1usize << (d + 1)) == 0 {
+            let src = rank + (1usize << d);
+            if src < n_ranks {
+                out.push((d, src));
             }
         }
     }
-    Ok(RankReduce { acc: acc.expect("n_ranks >= 2"), device_tokens, reduce_ms })
+    out
 }
 
-/// One sharded optimizer step for either trainer: execute every rank plan
-/// on the worker pool, reduce the [`GradBuffer`]s in rank order, apply one
-/// Eq. 5-normalized update over the *global* (all-rank) weight sum.
-pub fn execute_sharded(
-    trainer: &mut AnyTrainer,
-    sharded: &ShardedPlan,
-) -> crate::Result<StepMetrics> {
-    let t0 = Instant::now();
-    let (reduced, grad_norm, step) = match trainer {
-        AnyTrainer::Tree(t) => {
-            let reduced = execute_ranks(
-                sharded,
-                || t.engine.grad_buffer(),
-                |_rank, plan, gb| match plan {
-                    StepPlan::Tree(p) => t.run_plan(p, gb),
-                    StepPlan::Baseline(_) => {
-                        anyhow::bail!("baseline rank plan handed to TreeTrainer (pipeline bug)")
-                    }
-                },
-                GradBuffer::merge_owned,
-            )?;
-            let grad_norm = t.engine.apply_update(&reduced.acc)?;
-            (reduced, grad_norm, t.engine.step_count())
+// ─────────────────────────── spawn-count probe ──────────────────────────────
+
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Total rank worker threads ever spawned by [`RankPool`]s in this process.
+/// A pool spawns `n_ranks` threads at construction and none afterwards —
+/// the per-step delta must be zero (asserted by `tests/dist_equivalence.rs`;
+/// the old scoped-thread path spawned `n_ranks` *per optimizer step*).
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::SeqCst)
+}
+
+// ───────────────────────────── worker protocol ──────────────────────────────
+
+/// Per-rank executor state owned by one pool worker thread for the whole
+/// run.  Only `Send` is required: state is *moved* into the worker at pool
+/// construction, never shared by reference across rank threads.
+pub trait RankWorker: Send + 'static {
+    /// Per-step accumulator (gradients, losses, digests).
+    type Acc: Send + 'static;
+    /// The broadcast end-of-step update every replica applies.
+    type Update: Send + Sync + 'static;
+
+    /// Execute this rank's plan into a fresh accumulator; returns the
+    /// accumulator and the device tokens dispatched.
+    fn execute(&mut self, rank: usize, plan: &StepPlan) -> crate::Result<(Self::Acc, usize)>;
+
+    /// Fold a higher rank's accumulator into a lower rank's (the log-tree
+    /// merge; `acc` is always the lower rank id's side).
+    fn reduce(acc: &mut Self::Acc, other: Self::Acc);
+
+    /// Apply the broadcast update to this worker's replica state.
+    fn apply(&mut self, update: &Self::Update) -> crate::Result<()>;
+}
+
+/// One subtree of the in-flight reduction, flowing child → parent.
+struct Subtree<B> {
+    acc: B,
+    device_tokens: usize,
+    /// Total merge wall time accumulated inside this subtree.
+    merge_ms: f64,
+    /// Latest execute-finish instant inside this subtree (for the
+    /// overlap accounting: merges before this instant hid behind
+    /// still-executing ranks).
+    exec_end: Instant,
+}
+
+struct PeerMsg<B> {
+    seq: u64,
+    from: usize,
+    payload: crate::Result<Subtree<B>>,
+}
+
+struct RootMsg<B> {
+    seq: u64,
+    payload: crate::Result<Subtree<B>>,
+    reduce_done: Instant,
+}
+
+enum Job<U> {
+    Execute { seq: u64, plan: Arc<ShardedPlan> },
+    Apply { update: Arc<U> },
+}
+
+/// Result of one pooled step: the fully reduced accumulator plus the
+/// reduce-tree accounting surfaced into [`StepMetrics`].
+pub struct RankReduce<B> {
+    pub acc: B,
+    /// Device tokens dispatched across all ranks.
+    pub device_tokens: usize,
+    /// Total merge work across the reduce tree (sum of merge wall times on
+    /// every worker; 0 for a single rank).
+    pub reduce_ms: f64,
+    /// The share of `reduce_ms` that did *not* extend the step's critical
+    /// path: merge work finished before the slowest rank finished
+    /// executing, plus parallel-round work.  `reduce_ms -
+    /// reduce_overlap_ms` is the residual tail the step actually paid.
+    pub reduce_overlap_ms: f64,
+    /// `ceil(log2(ranks))` — rounds of the fixed reduce bracket.
+    pub reduce_depth: u32,
+}
+
+// ─────────────────────────────── the pool ───────────────────────────────────
+
+enum PoolInner<W: RankWorker> {
+    /// Single rank: the worker lives on the caller thread — the seed
+    /// single-executor path, byte-for-byte, with zero thread spawns.
+    Inline(W),
+    Threads {
+        job_txs: Vec<mpsc::Sender<Job<W::Update>>>,
+        root_rx: mpsc::Receiver<RootMsg<W::Acc>>,
+        handles: Vec<std::thread::JoinHandle<crate::Result<()>>>,
+    },
+}
+
+/// A persistent pool of per-rank executor workers, created once per run.
+///
+/// Dropping the pool disconnects the job channels; workers drain and exit
+/// on their own.  Call [`RankPool::finish`] for a clean join that surfaces
+/// deferred [`RankWorker::apply`] errors (applies run asynchronously, so an
+/// apply failure is reported at the next execute — or at `finish`).
+pub struct RankPool<W: RankWorker> {
+    inner: PoolInner<W>,
+    n_ranks: usize,
+    seq: u64,
+}
+
+impl<W: RankWorker> RankPool<W> {
+    /// Spawn one worker thread per rank (none for a single rank), moving
+    /// each worker's state onto its thread.  `workers[r]` becomes rank `r`.
+    pub fn new(mut workers: Vec<W>) -> crate::Result<Self> {
+        anyhow::ensure!(!workers.is_empty(), "rank pool needs at least one worker");
+        let n = workers.len();
+        if n == 1 {
+            let w = workers.pop().expect("one worker");
+            return Ok(Self { inner: PoolInner::Inline(w), n_ranks: 1, seq: 0 });
         }
-        AnyTrainer::Baseline(t) => {
-            let reduced = execute_ranks(
-                sharded,
-                || t.engine.grad_buffer(),
-                |_rank, plan, gb| match plan {
-                    StepPlan::Baseline(p) => t.run_plan(p, gb),
-                    StepPlan::Tree(_) => {
-                        anyhow::bail!("tree rank plan handed to BaselineTrainer (pipeline bug)")
-                    }
-                },
-                GradBuffer::merge_owned,
-            )?;
-            let grad_norm = t.engine.apply_update(&reduced.acc)?;
-            (reduced, grad_norm, t.engine.step_count())
+        // per-rank peer channels carry subtree accumulators child → parent
+        let (peer_txs, peer_rxs): (Vec<_>, Vec<_>) =
+            (0..n).map(|_| mpsc::channel::<PeerMsg<W::Acc>>()).unzip();
+        let (root_tx, root_rx) = mpsc::channel::<RootMsg<W::Acc>>();
+        let mut job_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (rank, (worker, peer_rx)) in workers.into_iter().zip(peer_rxs).enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<Job<W::Update>>();
+            job_txs.push(job_tx);
+            let parent_tx = reduce_parent(rank).map(|p| peer_txs[p].clone());
+            let root = if rank == 0 { Some(root_tx.clone()) } else { None };
+            let children: Vec<usize> =
+                reduce_children(rank, n).into_iter().map(|(_, src)| src).collect();
+            THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
+            let handle = std::thread::Builder::new()
+                .name(format!("tt-rank-{rank}"))
+                .spawn(move || worker_loop(worker, rank, job_rx, peer_rx, parent_tx, root, children))
+                .expect("spawn rank worker thread");
+            handles.push(handle);
         }
-    };
-    Ok(StepMetrics {
-        step,
-        loss: reduced.acc.mean_loss(),
-        weight_sum: reduced.acc.weight_sum,
-        device_tokens: reduced.device_tokens,
-        tree_tokens: sharded.tree_tokens(),
-        flat_tokens: sharded.flat_tokens(),
-        wall: t0.elapsed(),
-        exec_calls: reduced.acc.exec_calls,
-        forest_batches: sharded.device_batches() as u64,
-        grad_norm,
-        plan_ms: 0.0,
-        stall_ms: 0.0,
-        ranks: sharded.n_ranks() as u64,
-        reduce_ms: reduced.reduce_ms,
-        rank_imbalance: sharded.rank_imbalance(),
-    })
+        Ok(Self { inner: PoolInner::Threads { job_txs, root_rx, handles }, n_ranks: n, seq: 0 })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    /// Dispatch one sharded step to every rank and wait for the log-tree
+    /// reduced accumulator.  The caller thread blocks parked on a channel
+    /// while workers execute and merge — its core is free for the
+    /// pipeline's planner thread.
+    pub fn execute(&mut self, plan: &Arc<ShardedPlan>) -> crate::Result<RankReduce<W::Acc>> {
+        anyhow::ensure!(
+            plan.n_ranks() == self.n_ranks,
+            "plan has {} ranks but the pool was built for {} (rank count is fixed per run)",
+            plan.n_ranks(),
+            self.n_ranks
+        );
+        self.seq += 1;
+        let seq = self.seq;
+        match &mut self.inner {
+            PoolInner::Inline(w) => {
+                let (acc, device_tokens) = w.execute(0, &plan.ranks[0])?;
+                Ok(RankReduce {
+                    acc,
+                    device_tokens,
+                    reduce_ms: 0.0,
+                    reduce_overlap_ms: 0.0,
+                    reduce_depth: 0,
+                })
+            }
+            PoolInner::Threads { job_txs, root_rx, .. } => {
+                for tx in job_txs.iter() {
+                    tx.send(Job::Execute { seq, plan: Arc::clone(plan) })
+                        .map_err(|_| anyhow::anyhow!("rank worker exited before dispatch"))?;
+                }
+                let msg = loop {
+                    let m = root_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("rank 0 worker disconnected"))?;
+                    if m.seq == seq {
+                        break m;
+                    }
+                    // stale root result from an aborted earlier step
+                };
+                let sub = msg.payload?;
+                let tail_ms =
+                    msg.reduce_done.saturating_duration_since(sub.exec_end).as_secs_f64() * 1e3;
+                Ok(RankReduce {
+                    acc: sub.acc,
+                    device_tokens: sub.device_tokens,
+                    reduce_ms: sub.merge_ms,
+                    reduce_overlap_ms: (sub.merge_ms - tail_ms).max(0.0),
+                    reduce_depth: reduce_depth(plan.n_ranks()),
+                })
+            }
+        }
+    }
+
+    /// Broadcast the end-of-step update to every worker.  Asynchronous on a
+    /// threaded pool: jobs are ordered per worker, so the next execute sees
+    /// the applied update; an apply error surfaces at the next execute (or
+    /// at [`Self::finish`]).
+    pub fn apply(&mut self, update: W::Update) -> crate::Result<()> {
+        match &mut self.inner {
+            PoolInner::Inline(w) => w.apply(&update),
+            PoolInner::Threads { job_txs, .. } => {
+                let update = Arc::new(update);
+                for tx in job_txs.iter() {
+                    tx.send(Job::Apply { update: Arc::clone(&update) })
+                        .map_err(|_| anyhow::anyhow!("rank worker exited before update"))?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Shut the pool down and join every worker, surfacing any deferred
+    /// apply error or worker panic.
+    pub fn finish(self) -> crate::Result<()> {
+        match self.inner {
+            PoolInner::Inline(_) => Ok(()),
+            PoolInner::Threads { job_txs, root_rx, handles } => {
+                drop(job_txs);
+                drop(root_rx);
+                let mut first_err = None;
+                for h in handles {
+                    match h.join() {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => {
+                            first_err.get_or_insert(e);
+                        }
+                        Err(_) => {
+                            first_err.get_or_insert(anyhow::anyhow!("rank worker panicked"));
+                        }
+                    }
+                }
+                match first_err {
+                    None => Ok(()),
+                    Some(e) => Err(e),
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-round-order child results, stashed until their round comes up so
+/// the merge order is the fixed bracket regardless of arrival order.
+type ChildStash<B> = HashMap<usize, (u64, crate::Result<Subtree<B>>)>;
+
+fn recv_child<B>(
+    peer_rx: &mpsc::Receiver<PeerMsg<B>>,
+    stash: &mut ChildStash<B>,
+    src: usize,
+    seq: u64,
+) -> crate::Result<Subtree<B>> {
+    if let Some((s, payload)) = stash.remove(&src) {
+        if s == seq {
+            return payload;
+        }
+        // stale stash entry from an aborted step: fall through and wait
+    }
+    loop {
+        let msg = peer_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("reduce peer rank {src} disconnected"))?;
+        if msg.seq < seq {
+            continue; // stale message from an aborted earlier step
+        }
+        if msg.from == src {
+            return msg.payload;
+        }
+        stash.insert(msg.from, (msg.seq, msg.payload));
+    }
+}
+
+fn worker_loop<W: RankWorker>(
+    mut state: W,
+    rank: usize,
+    job_rx: mpsc::Receiver<Job<W::Update>>,
+    peer_rx: mpsc::Receiver<PeerMsg<W::Acc>>,
+    parent_tx: Option<mpsc::Sender<PeerMsg<W::Acc>>>,
+    root_tx: Option<mpsc::Sender<RootMsg<W::Acc>>>,
+    children: Vec<usize>,
+) -> crate::Result<()> {
+    let mut deferred: Option<anyhow::Error> = None;
+    let mut stash: ChildStash<W::Acc> = HashMap::new();
+    while let Ok(job) = job_rx.recv() {
+        match job {
+            Job::Apply { update } => {
+                if deferred.is_none() {
+                    deferred = match catch_unwind(AssertUnwindSafe(|| state.apply(&update))) {
+                        Ok(Ok(())) => None,
+                        Ok(Err(e)) => Some(e),
+                        Err(_) => Some(anyhow::anyhow!("rank {rank} update apply panicked")),
+                    };
+                }
+            }
+            Job::Execute { seq, plan } => {
+                let mut sub: crate::Result<Subtree<W::Acc>> = match deferred.take() {
+                    Some(e) => Err(e),
+                    None => {
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            state.execute(rank, &plan.ranks[rank])
+                        })) {
+                            Ok(Ok((acc, device_tokens))) => Ok(Subtree {
+                                acc,
+                                device_tokens,
+                                merge_ms: 0.0,
+                                exec_end: Instant::now(),
+                            }),
+                            Ok(Err(e)) => Err(e),
+                            Err(_) => Err(anyhow::anyhow!("rank {rank} executor panicked")),
+                        }
+                    }
+                };
+                // merge children in fixed round order; errors anywhere in a
+                // subtree propagate up, and the full receive schedule always
+                // runs so no peer message is left behind (deadlock-free)
+                for &src in &children {
+                    match recv_child(&peer_rx, &mut stash, src, seq) {
+                        Err(e) => {
+                            if sub.is_ok() {
+                                sub = Err(e);
+                            }
+                        }
+                        Ok(b) => {
+                            let Subtree {
+                                acc: b_acc,
+                                device_tokens: b_tokens,
+                                merge_ms: b_merge,
+                                exec_end: b_end,
+                            } = b;
+                            let mut panicked = false;
+                            if let Ok(a) = &mut sub {
+                                let t0 = Instant::now();
+                                if catch_unwind(AssertUnwindSafe(|| W::reduce(&mut a.acc, b_acc)))
+                                    .is_err()
+                                {
+                                    panicked = true;
+                                } else {
+                                    a.merge_ms += t0.elapsed().as_secs_f64() * 1e3 + b_merge;
+                                    a.device_tokens += b_tokens;
+                                    if b_end > a.exec_end {
+                                        a.exec_end = b_end;
+                                    }
+                                }
+                            }
+                            if panicked {
+                                sub = Err(anyhow::anyhow!("rank {rank} reduce panicked"));
+                            }
+                        }
+                    }
+                }
+                if let Some(tx) = &parent_tx {
+                    let _ = tx.send(PeerMsg { seq, from: rank, payload: sub });
+                } else if let Some(tx) = &root_tx {
+                    let _ = tx.send(RootMsg { seq, payload: sub, reduce_done: Instant::now() });
+                }
+            }
+        }
+    }
+    match deferred {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+// ───────────────────────── the XLA trainer workers ──────────────────────────
+
+/// Run one rank's plan against a trainer (replica on a worker thread, or
+/// the caller's own trainer on the inline single-rank path).
+fn run_rank(trainer: &AnyTrainer, plan: &StepPlan) -> crate::Result<(GradBuffer, usize)> {
+    match (trainer, plan) {
+        (AnyTrainer::Tree(t), StepPlan::Tree(p)) => {
+            let mut gb = t.engine.grad_buffer();
+            let tokens = t.run_plan(p, &mut gb)?;
+            Ok((gb, tokens))
+        }
+        (AnyTrainer::Baseline(t), StepPlan::Baseline(p)) => {
+            let mut gb = t.engine.grad_buffer();
+            let tokens = t.run_plan(p, &mut gb)?;
+            Ok((gb, tokens))
+        }
+        (AnyTrainer::Tree(_), StepPlan::Baseline(_)) => {
+            anyhow::bail!("baseline rank plan handed to TreeTrainer (pipeline bug)")
+        }
+        (AnyTrainer::Baseline(_), StepPlan::Tree(_)) => {
+            anyhow::bail!("tree rank plan handed to BaselineTrainer (pipeline bug)")
+        }
+    }
+}
+
+/// One rank's persistent executor state: a full trainer replica whose
+/// engine owns its own parameters, literal cache, optimizer moments and
+/// program handles ([`crate::trainer::Engine::replicate`]).
+pub struct TrainerWorker {
+    trainer: AnyTrainer,
+}
+
+/// The broadcast end-of-step update: every replica applies the identical
+/// reduced gradient with the identical LR, so replicas stay bit-identical
+/// to the primary engine without any parameter broadcast.
+pub struct TrainerUpdate {
+    pub lr: f64,
+    pub gb: GradBuffer,
+}
+
+impl RankWorker for TrainerWorker {
+    type Acc = GradBuffer;
+    type Update = TrainerUpdate;
+
+    fn execute(&mut self, _rank: usize, plan: &StepPlan) -> crate::Result<(GradBuffer, usize)> {
+        run_rank(&self.trainer, plan)
+    }
+
+    fn reduce(acc: &mut GradBuffer, other: GradBuffer) {
+        GradBuffer::merge_owned(acc, other);
+    }
+
+    fn apply(&mut self, update: &TrainerUpdate) -> crate::Result<()> {
+        self.trainer.set_lr(update.lr);
+        match &mut self.trainer {
+            AnyTrainer::Tree(t) => t.engine.apply_update(&update.gb)?,
+            AnyTrainer::Baseline(t) => t.engine.apply_update(&update.gb)?,
+        };
+        Ok(())
+    }
+}
+
+/// The distributed step driver for the XLA trainers, owned by the run loop
+/// for the whole run: `ranks == 1` executes inline on the caller's trainer
+/// (the seed single-executor path, byte-for-byte, zero spawns);
+/// `ranks >= 2` owns a [`RankPool`] of full trainer replicas created once.
+pub struct TrainerPool {
+    pool: Option<RankPool<TrainerWorker>>,
+    /// One-time pool construction cost (engine replication + thread
+    /// spawns), amortized across the run's steps
+    /// ([`super::PipelineSummary`] reports the per-step share).
+    pub spawn_ms: f64,
+}
+
+impl TrainerPool {
+    /// Build the pool: replicate the primary trainer once per rank
+    /// (`ranks >= 2`) or do nothing (`ranks == 1`).
+    pub fn new(trainer: &AnyTrainer, ranks: usize) -> crate::Result<Self> {
+        anyhow::ensure!(ranks >= 1, "ranks must be >= 1");
+        if ranks == 1 {
+            return Ok(Self { pool: None, spawn_ms: 0.0 });
+        }
+        let t0 = Instant::now();
+        let workers = (0..ranks)
+            .map(|_| Ok(TrainerWorker { trainer: trainer.replicate()? }))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let pool = RankPool::new(workers)?;
+        Ok(Self { pool: Some(pool), spawn_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    }
+
+    /// One sharded optimizer step: execute every rank plan (inline or on
+    /// the persistent pool), log-tree-reduce the [`GradBuffer`]s, apply one
+    /// Eq. 5-normalized update over the *global* (all-rank) weight sum on
+    /// the primary engine, and broadcast the identical update to the
+    /// replicas.
+    pub fn execute_step(
+        &mut self,
+        trainer: &mut AnyTrainer,
+        lr: f64,
+        sharded: &Arc<ShardedPlan>,
+    ) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
+        let reduced = match &mut self.pool {
+            None => {
+                anyhow::ensure!(
+                    sharded.n_ranks() == 1,
+                    "{}-rank plan on a single-rank pool (rank count is fixed per run)",
+                    sharded.n_ranks()
+                );
+                let (acc, device_tokens) = run_rank(trainer, &sharded.ranks[0])?;
+                RankReduce {
+                    acc,
+                    device_tokens,
+                    reduce_ms: 0.0,
+                    reduce_overlap_ms: 0.0,
+                    reduce_depth: 0,
+                }
+            }
+            Some(pool) => pool.execute(sharded)?,
+        };
+        let loss = reduced.acc.mean_loss();
+        let weight_sum = reduced.acc.weight_sum;
+        let exec_calls = reduced.acc.exec_calls;
+        let (grad_norm, step) = match trainer {
+            AnyTrainer::Tree(t) => (t.engine.apply_update(&reduced.acc)?, t.engine.step_count()),
+            AnyTrainer::Baseline(t) => {
+                (t.engine.apply_update(&reduced.acc)?, t.engine.step_count())
+            }
+        };
+        if let Some(pool) = &mut self.pool {
+            // asynchronous: workers apply while the caller returns metrics
+            // and the planner plans the next batch; per-worker job order
+            // guarantees the next execute sees the updated parameters
+            pool.apply(TrainerUpdate { lr, gb: reduced.acc })?;
+        }
+        Ok(StepMetrics {
+            step,
+            loss,
+            weight_sum,
+            device_tokens: reduced.device_tokens,
+            tree_tokens: sharded.tree_tokens(),
+            flat_tokens: sharded.flat_tokens(),
+            wall: t0.elapsed(),
+            exec_calls,
+            forest_batches: sharded.device_batches() as u64,
+            grad_norm,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
+            ranks: sharded.n_ranks() as u64,
+            reduce_ms: reduced.reduce_ms,
+            reduce_overlap_ms: reduced.reduce_overlap_ms,
+            reduce_depth: reduced.reduce_depth as u64,
+            rank_imbalance: sharded.rank_imbalance(),
+        })
+    }
+
+    /// Join the pool, surfacing deferred apply errors.
+    pub fn finish(self) -> crate::Result<()> {
+        match self.pool {
+            None => Ok(()),
+            Some(p) => p.finish(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trainer::planner::{BaselinePlan, PlanSpec};
+    use crate::trainer::planner::PlanSpec;
     use crate::tree::gen;
     use crate::tree::TrajectoryTree;
+    use std::time::Duration;
 
-    fn sharded(n_trees: usize, n_ranks: usize) -> ShardedPlan {
+    fn sharded(n_trees: usize, n_ranks: usize) -> Arc<ShardedPlan> {
         let trees: Vec<TrajectoryTree> =
             (0..n_trees as u64).map(|s| gen::uniform(90 + s, 9, 5, 0.6)).collect();
-        PlanSpec::for_host(4096).plan_sharded_tree(&trees, n_ranks).unwrap()
+        Arc::new(PlanSpec::for_host(4096).plan_sharded_tree(&trees, n_ranks).unwrap())
+    }
+
+    // ── pairing schedule (validated against the python mirror:
+    //    python/tests/test_reduce_schedule.py) ──
+
+    #[test]
+    fn schedule_brackets_match_python_mirror() {
+        assert_eq!(reduce_schedule(1), Vec::<Vec<(usize, usize)>>::new());
+        assert_eq!(reduce_schedule(2), vec![vec![(0, 1)]]);
+        assert_eq!(reduce_schedule(3), vec![vec![(0, 1)], vec![(0, 2)]]);
+        assert_eq!(
+            reduce_schedule(5),
+            vec![vec![(0, 1), (2, 3)], vec![(0, 2)], vec![(0, 4)]]
+        );
+        assert_eq!(
+            reduce_schedule(8),
+            vec![
+                vec![(0, 1), (2, 3), (4, 5), (6, 7)],
+                vec![(0, 2), (4, 6)],
+                vec![(0, 4)]
+            ]
+        );
     }
 
     #[test]
-    fn reduction_order_is_rank_order_regardless_of_finish_order() {
-        // rank r sleeps inversely to its id, so worker *finish* order is
-        // reversed — the reduced trace must still be rank order
+    fn depth_is_ceil_log2() {
+        for (n, d) in [(1, 0u32), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4), (16, 4)] {
+            assert_eq!(reduce_depth(n), d, "depth({n})");
+            assert_eq!(reduce_schedule(n).len(), d as usize, "rounds({n})");
+        }
+    }
+
+    #[test]
+    fn odd_rank_byes_advance_to_the_right_round() {
+        // n = 5: rank 4 has no partner in rounds 0/1 and is absorbed by
+        // rank 0 only in the final round
+        let sched = reduce_schedule(5);
+        assert!(!sched[0].iter().any(|&(a, b)| a == 4 || b == 4));
+        assert!(!sched[1].iter().any(|&(a, b)| a == 4 || b == 4));
+        assert_eq!(sched[2], vec![(0, 4)]);
+    }
+
+    #[test]
+    fn schedule_is_consistent_with_per_rank_views() {
+        for n in 1..=17usize {
+            let sched = reduce_schedule(n);
+            // every rank > 0 is merged exactly once, as src, into its parent
+            let mut srcs: Vec<usize> = sched.iter().flatten().map(|&(_, s)| s).collect();
+            srcs.sort_unstable();
+            assert_eq!(srcs, (1..n).collect::<Vec<_>>(), "n={n}");
+            for r in 1..n {
+                let round = r.trailing_zeros() as usize;
+                let p = reduce_parent(r).unwrap();
+                assert_eq!(p, r & (r - 1));
+                assert!(sched[round].contains(&(p, r)), "n={n} r={r}");
+            }
+            // the union of child views is the schedule
+            let mut from_children: Vec<Vec<(usize, usize)>> = vec![Vec::new(); sched.len()];
+            for r in 0..n {
+                for (d, src) in reduce_children(r, n) {
+                    from_children[d as usize].push((r, src));
+                }
+            }
+            for (a, b) in sched.iter().zip(&from_children) {
+                let mut a = a.clone();
+                let mut b = b.clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "n={n}");
+            }
+        }
+    }
+
+    // ── pool behavior ──
+
+    /// Bracket-tracing worker: the reduced string is the exact merge
+    /// association, regardless of worker finish order.
+    struct TraceWorker;
+
+    impl RankWorker for TraceWorker {
+        type Acc = String;
+        type Update = ();
+
+        fn execute(&mut self, rank: usize, _plan: &StepPlan) -> crate::Result<(String, usize)> {
+            // higher ranks finish *first*: arrival order is reversed
+            std::thread::sleep(Duration::from_millis(4 * (8u64.saturating_sub(rank as u64))));
+            Ok((rank.to_string(), 1))
+        }
+
+        fn reduce(acc: &mut String, other: String) {
+            *acc = format!("({acc}+{other})");
+        }
+
+        fn apply(&mut self, _u: &()) -> crate::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn reduction_bracket_is_fixed_regardless_of_finish_order() {
         let plan = sharded(8, 4);
-        let reduced = execute_ranks(
-            &plan,
-            Vec::new,
-            |rank, _plan, acc: &mut Vec<usize>| {
-                std::thread::sleep(std::time::Duration::from_millis(5 * (4 - rank as u64)));
-                acc.push(rank);
-                Ok(1)
-            },
-            |a, b| a.extend(b),
-        )
-        .unwrap();
-        assert_eq!(reduced.acc, vec![0, 1, 2, 3]);
-        assert_eq!(reduced.device_tokens, 4);
+        let mut pool = RankPool::new(vec![TraceWorker, TraceWorker, TraceWorker, TraceWorker])
+            .unwrap();
+        let r = pool.execute(&plan).unwrap();
+        assert_eq!(r.acc, "((0+1)+(2+3))");
+        assert_eq!(r.device_tokens, 4);
+        assert_eq!(r.reduce_depth, 2);
+        // and again on the same (persistent) pool
+        let r2 = pool.execute(&plan).unwrap();
+        assert_eq!(r2.acc, "((0+1)+(2+3))");
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn odd_rank_count_brackets_deterministically() {
+        let plan = sharded(6, 5);
+        let mut pool =
+            RankPool::new((0..5).map(|_| TraceWorker).collect::<Vec<_>>()).unwrap();
+        let r = pool.execute(&plan).unwrap();
+        assert_eq!(r.acc, "(((0+1)+(2+3))+4)");
+        assert_eq!(r.reduce_depth, 3);
+        pool.finish().unwrap();
+    }
+
+    struct CountWorker {
+        offset: f64,
+    }
+
+    impl RankWorker for CountWorker {
+        type Acc = f64;
+        type Update = f64;
+
+        fn execute(&mut self, _rank: usize, _plan: &StepPlan) -> crate::Result<(f64, usize)> {
+            Ok((self.offset, 7))
+        }
+
+        fn reduce(acc: &mut f64, other: f64) {
+            *acc += other;
+        }
+
+        fn apply(&mut self, u: &f64) -> crate::Result<()> {
+            self.offset += *u;
+            Ok(())
+        }
     }
 
     #[test]
     fn single_rank_runs_inline_with_zero_reduce() {
+        // (the zero-spawn property is asserted via the thread_spawns probe
+        // in tests/dist_equivalence.rs, where pool-creating tests are
+        // serialized — the global counter is racy across parallel #[test]s)
         let plan = sharded(4, 1);
         let main_thread = std::thread::current().id();
-        let reduced = execute_ranks(
-            &plan,
-            || 0usize,
-            |_r, _p, acc| {
-                assert_eq!(std::thread::current().id(), main_thread, "must run inline");
-                *acc += 1;
-                Ok(7)
-            },
-            |a, b| *a += b,
-        )
-        .unwrap();
-        assert_eq!(reduced.acc, 1);
-        assert_eq!(reduced.device_tokens, 7);
-        assert_eq!(reduced.reduce_ms, 0.0);
+
+        struct InlineProbe(std::thread::ThreadId);
+        impl RankWorker for InlineProbe {
+            type Acc = usize;
+            type Update = ();
+            fn execute(&mut self, _r: usize, _p: &StepPlan) -> crate::Result<(usize, usize)> {
+                assert_eq!(std::thread::current().id(), self.0, "must run inline");
+                Ok((1, 7))
+            }
+            fn reduce(acc: &mut usize, other: usize) {
+                *acc += other;
+            }
+            fn apply(&mut self, _u: &()) -> crate::Result<()> {
+                Ok(())
+            }
+        }
+
+        let mut pool = RankPool::new(vec![InlineProbe(main_thread)]).unwrap();
+        let r = pool.execute(&plan).unwrap();
+        assert_eq!(r.acc, 1);
+        assert_eq!(r.device_tokens, 7);
+        assert_eq!(r.reduce_ms, 0.0);
+        assert_eq!(r.reduce_overlap_ms, 0.0);
+        assert_eq!(r.reduce_depth, 0);
+        pool.finish().unwrap();
     }
 
     #[test]
-    fn rank_error_propagates() {
+    fn pool_applies_updates_between_steps() {
+        let plan = sharded(8, 4);
+        let mut pool =
+            RankPool::new((0..4).map(|_| CountWorker { offset: 1.0 }).collect::<Vec<_>>())
+                .unwrap();
+        assert_eq!(pool.execute(&plan).unwrap().acc, 4.0);
+        pool.apply(0.5).unwrap();
+        // job order per worker guarantees the apply lands before this
+        assert_eq!(pool.execute(&plan).unwrap().acc, 6.0);
+        pool.finish().unwrap();
+    }
+
+    struct FailWorker {
+        fail: bool,
+        fail_apply: bool,
+    }
+
+    impl RankWorker for FailWorker {
+        type Acc = usize;
+        type Update = ();
+
+        fn execute(&mut self, rank: usize, _plan: &StepPlan) -> crate::Result<(usize, usize)> {
+            if self.fail {
+                anyhow::bail!("rank {rank} exploded")
+            }
+            Ok((1, 0))
+        }
+
+        fn reduce(acc: &mut usize, other: usize) {
+            *acc += other;
+        }
+
+        fn apply(&mut self, _u: &()) -> crate::Result<()> {
+            if self.fail_apply {
+                anyhow::bail!("apply failed")
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn rank_error_propagates_through_the_reduce_tree() {
         let plan = sharded(6, 3);
-        let err = execute_ranks(
-            &plan,
-            || (),
-            |rank, _p, _a| {
-                if rank == 1 {
-                    anyhow::bail!("rank 1 exploded")
-                }
-                Ok(0)
-            },
-            |_a, _b| {},
-        )
-        .unwrap_err();
-        assert!(err.to_string().contains("rank 1 exploded"));
+        let workers = (0..3)
+            .map(|r| FailWorker { fail: r == 1, fail_apply: false })
+            .collect::<Vec<_>>();
+        let mut pool = RankPool::new(workers).unwrap();
+        let err = pool.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("rank 1 exploded"), "got: {err}");
+    }
+
+    #[test]
+    fn deferred_apply_error_surfaces_at_next_execute() {
+        let plan = sharded(4, 2);
+        let workers = (0..2)
+            .map(|r| FailWorker { fail: false, fail_apply: r == 1 })
+            .collect::<Vec<_>>();
+        let mut pool = RankPool::new(workers).unwrap();
+        pool.execute(&plan).unwrap();
+        pool.apply(()).unwrap(); // async: error is deferred
+        let err = pool.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("apply failed"), "got: {err}");
+    }
+
+    #[test]
+    fn deferred_apply_error_surfaces_at_finish() {
+        let plan = sharded(4, 2);
+        let workers = (0..2)
+            .map(|r| FailWorker { fail: false, fail_apply: r == 0 })
+            .collect::<Vec<_>>();
+        let mut pool = RankPool::new(workers).unwrap();
+        pool.execute(&plan).unwrap();
+        pool.apply(()).unwrap();
+        let err = pool.finish().unwrap_err();
+        assert!(err.to_string().contains("apply failed"), "got: {err}");
     }
 
     #[test]
     fn empty_rank_plans_are_benign() {
         // more ranks than trees: empty rank plans execute as no-ops
+        struct ForestCounter;
+        impl RankWorker for ForestCounter {
+            type Acc = usize;
+            type Update = ();
+            fn execute(&mut self, _r: usize, p: &StepPlan) -> crate::Result<(usize, usize)> {
+                let StepPlan::Tree(g) = p else { panic!("tree mode") };
+                Ok((g.forests.len(), g.forests.iter().map(|f| f.batch.capacity).sum()))
+            }
+            fn reduce(acc: &mut usize, other: usize) {
+                *acc += other;
+            }
+            fn apply(&mut self, _u: &()) -> crate::Result<()> {
+                Ok(())
+            }
+        }
         let plan = sharded(2, 4);
-        let reduced = execute_ranks(
-            &plan,
-            || 0usize,
-            |_r, p, acc| {
-                let StepPlan::Tree(g) = p else { panic!() };
-                *acc += g.forests.len();
-                Ok(g.forests.iter().map(|f| f.batch.capacity).sum())
-            },
-            |a, b| *a += b,
-        )
-        .unwrap();
-        assert_eq!(reduced.acc, 2, "both trees execute exactly once");
+        let mut pool = RankPool::new((0..4).map(|_| ForestCounter).collect::<Vec<_>>()).unwrap();
+        let r = pool.execute(&plan).unwrap();
+        assert_eq!(r.acc, 2, "both trees execute exactly once");
+        pool.finish().unwrap();
+    }
+
+    #[test]
+    fn rank_count_mismatch_is_an_error() {
+        let mut pool =
+            RankPool::new((0..3).map(|_| CountWorker { offset: 0.0 }).collect::<Vec<_>>())
+                .unwrap();
+        let err = pool.execute(&sharded(6, 4)).unwrap_err();
+        assert!(err.to_string().contains("fixed per run"), "got: {err}");
     }
 
     #[test]
     fn mode_mismatch_is_an_error_not_a_panic() {
-        // a baseline plan handed to a tree trainer must surface as an error
-        let plan = ShardedPlan {
+        // a baseline plan handed to a tree-mode worker must surface as an
+        // error through the pool, not poison it
+        use crate::trainer::planner::BaselinePlan;
+        struct TreeOnly;
+        impl RankWorker for TreeOnly {
+            type Acc = usize;
+            type Update = ();
+            fn execute(&mut self, _r: usize, p: &StepPlan) -> crate::Result<(usize, usize)> {
+                match p {
+                    StepPlan::Tree(_) => Ok((0, 0)),
+                    StepPlan::Baseline(_) => anyhow::bail!("plan/trainer mode mismatch"),
+                }
+            }
+            fn reduce(acc: &mut usize, other: usize) {
+                *acc += other;
+            }
+            fn apply(&mut self, _u: &()) -> crate::Result<()> {
+                Ok(())
+            }
+        }
+        let plan = Arc::new(ShardedPlan {
             ranks: vec![StepPlan::Baseline(BaselinePlan {
                 batches: vec![],
                 tree_tokens: 0,
                 flat_tokens: 0,
             })],
             loads: vec![0],
-        };
-        let r = execute_ranks(
-            &plan,
-            || (),
-            |_r, p, _a| match p {
-                StepPlan::Tree(_) => Ok(0),
-                StepPlan::Baseline(_) => anyhow::bail!("plan/trainer mode mismatch"),
-            },
-            |_a, _b| {},
-        );
-        assert!(r.unwrap_err().to_string().contains("mode mismatch"));
+        });
+        let mut pool = RankPool::new(vec![TreeOnly]).unwrap();
+        let err = pool.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("mode mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn worker_panic_is_an_error_not_a_deadlock() {
+        struct PanicWorker {
+            boom: bool,
+        }
+        impl RankWorker for PanicWorker {
+            type Acc = usize;
+            type Update = ();
+            fn execute(&mut self, _r: usize, _p: &StepPlan) -> crate::Result<(usize, usize)> {
+                if self.boom {
+                    panic!("worker panic")
+                }
+                Ok((1, 0))
+            }
+            fn reduce(acc: &mut usize, other: usize) {
+                *acc += other;
+            }
+            fn apply(&mut self, _u: &()) -> crate::Result<()> {
+                Ok(())
+            }
+        }
+        let plan = sharded(8, 4);
+        let workers = (0..4).map(|r| PanicWorker { boom: r == 2 }).collect::<Vec<_>>();
+        let mut pool = RankPool::new(workers).unwrap();
+        let err = pool.execute(&plan).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "got: {err}");
     }
 }

@@ -21,8 +21,11 @@
 //! planner — on a background thread when `pipeline_depth > 0` — LPT-shards
 //! each global batch across `ranks` whole-tree data-parallel ranks and
 //! turns each rank share into a [`crate::trainer::StepPlan`], the [`dist`]
-//! layer executes rank plans on per-rank worker threads, and the reduced
-//! (fixed rank order, f64) gradient feeds one optimizer step.
+//! layer executes rank plans on a *persistent* per-rank worker pool (one
+//! full trainer replica per rank, spawned once per run) whose fixed
+//! log-tree gradient reduction runs on the worker threads, and the reduced
+//! f64 gradient feeds one optimizer step on the primary engine — then the
+//! identical update is broadcast so every replica stays bit-identical.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -206,7 +209,7 @@ impl SyntheticSpec {
 
 /// Either trainer behind one interface, split into explicit plan/execute
 /// halves: [`Self::plan_spec`] snapshots the engine-free planning data
-/// (what the pipeline's planner thread owns) and [`dist::execute_sharded`]
+/// (what the pipeline's planner thread owns) and [`dist::TrainerPool`]
 /// consumes pre-built rank plans — both modes flow through the same
 /// pipeline, Baseline's "plan" being its linearized chain packing.
 pub enum AnyTrainer {
@@ -221,6 +224,16 @@ impl AnyTrainer {
             Self::Tree(t) => t.plan_spec(),
             Self::Baseline(t) => t.plan_spec(),
         }
+    }
+
+    /// Per-rank replica: an independent trainer whose engine owns its own
+    /// parameters, literal cache, optimizer moments and program handles —
+    /// the worker state of [`dist::TrainerPool`].
+    pub fn replicate(&self) -> crate::Result<Self> {
+        Ok(match self {
+            Self::Tree(t) => Self::Tree(t.replicate()?),
+            Self::Baseline(t) => Self::Baseline(t.replicate()?),
+        })
     }
 
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
@@ -287,8 +300,11 @@ fn build_source(cfg: &RunConfig) -> crate::Result<Box<dyn CorpusSource>> {
 }
 
 /// Adapts the trainer + metric sinks to the pipeline's executor seam.
+/// Owns the run's persistent [`dist::TrainerPool`]: per-rank trainer
+/// replicas spawned once, fed `Arc`-shared rank plans each step.
 struct TrainerExecutor<'a> {
     trainer: &'a mut AnyTrainer,
+    pool: dist::TrainerPool,
     sink: &'a mut Option<CsvSink>,
     steps: u64,
     /// 0-based count of executed steps — the log cadence (`m.step` is the
@@ -310,7 +326,11 @@ impl StepExecutor for TrainerExecutor<'_> {
             );
         }
         self.trainer.set_lr(planned.lr);
-        dist::execute_sharded(self.trainer, &planned.plan)
+        self.pool.execute_step(self.trainer, planned.lr, &planned.plan)
+    }
+
+    fn pool_spawn_ms(&self) -> f64 {
+        self.pool.spawn_ms
     }
 
     fn on_step(&mut self, m: &StepMetrics) -> crate::Result<()> {
@@ -415,13 +435,23 @@ impl Coordinator {
             ranks: self.cfg.ranks,
         };
         let spec = self.trainer.plan_spec();
+        // the run's persistent rank pool: replicas + worker threads are
+        // created HERE, once — never per optimizer step
+        let pool = dist::TrainerPool::new(&self.trainer, self.cfg.ranks)?;
         let mut exec = TrainerExecutor {
             trainer: &mut self.trainer,
+            pool,
             sink: &mut self.sink,
             steps: self.cfg.steps,
             done: 0,
         };
-        let (metrics, summary) = pipeline::run(&pcfg, spec, source, &mut exec)?;
+        let run_res = pipeline::run(&pcfg, spec, source, &mut exec);
+        // join the pool either way so deferred replica-update errors
+        // surface even when the run itself succeeded
+        let TrainerExecutor { pool, .. } = exec;
+        let finish_res = pool.finish();
+        let (metrics, summary) = run_res?;
+        finish_res?;
         // callers surface the one-line summary (`tree-train train` prints
         // it; see PipelineSummary::log_line)
         self.summary = Some(summary);

@@ -25,12 +25,15 @@
 //!
 //! **Sharding.**  The planner shards every global batch across
 //! `cfg.ranks` data-parallel ranks (whole trees, LPT by packed token
-//! cost) and ships a [`ShardedPlan`]; executors run rank plans through
-//! [`super::dist`] with fixed-order gradient reduction.  `ranks: 1` is
-//! the seed single-executor pipeline byte-for-byte
-//! (docs/distributed.md).
+//! cost) and ships an `Arc`-shared [`ShardedPlan`]; executors run rank
+//! plans on [`super::dist`]'s *persistent* rank-worker pool (per-rank
+//! replicas, created once per run) with a fixed log-tree gradient
+//! reduction that runs on the worker threads — off this executor
+//! thread's critical path, so it overlaps the planner's next-step
+//! planning.  `ranks: 1` is the seed single-executor pipeline
+//! byte-for-byte (docs/distributed.md).
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::data::CorpusSource;
@@ -39,7 +42,8 @@ use crate::trainer::planner::{PlanSpec, ShardedPlan, StepPlan};
 use crate::trainer::refmodel::RefModel;
 use crate::trainer::StepMetrics;
 
-use super::{dist, Mode};
+use super::dist::{self, RankPool, RankWorker};
+use super::Mode;
 
 /// Run-loop geometry handed to [`run`] (a mode-agnostic slice of
 /// [`super::RunConfig`]).
@@ -68,8 +72,10 @@ pub struct PlannedStep {
     pub lr: f64,
     /// Trees in this global batch.
     pub trees: usize,
-    /// The per-rank plans (one rank when unsharded).
-    pub plan: ShardedPlan,
+    /// The per-rank plans (one rank when unsharded), `Arc`-shared so the
+    /// executor can hand the same plan to every rank worker without a
+    /// copy.
+    pub plan: Arc<ShardedPlan>,
     /// Host planning time (batch assembly + sharding + packing).
     pub plan_ms: f64,
 }
@@ -82,6 +88,13 @@ pub trait StepExecutor {
     /// the driver fills `plan_ms`/`stall_ms`.
     fn on_step(&mut self, _m: &StepMetrics) -> crate::Result<()> {
         Ok(())
+    }
+
+    /// One-time rank-pool construction cost (replica + thread spawns),
+    /// reported by the run summary for spawn-cost amortization.  `0` when
+    /// the executor runs single-rank / poolless.
+    fn pool_spawn_ms(&self) -> f64 {
+        0.0
     }
 }
 
@@ -96,6 +109,10 @@ pub struct PipelineSummary {
     pub prefetch_hits: u64,
     /// Peak simultaneously-resident tree count in the corpus source.
     pub peak_resident_trees: usize,
+    /// One-time rank-pool construction cost (replicas + thread spawns; 0
+    /// when single-rank).  Paid once per run — the old scoped-thread path
+    /// paid a spawn/join per optimizer step instead.
+    pub pool_spawn_ms: f64,
 }
 
 impl PipelineSummary {
@@ -106,9 +123,14 @@ impl PipelineSummary {
         self.prefetch_hits as f64 / self.steps as f64
     }
 
+    /// The rank-pool spawn cost amortized per executed step.
+    pub fn spawn_amortized_ms(&self) -> f64 {
+        self.pool_spawn_ms / (self.steps.max(1) as f64)
+    }
+
     /// The one-line per-run summary `tree-train train` logs.
     pub fn log_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "pipeline: depth={} mean plan {:.2} ms, mean stall {:.2} ms, \
              prefetch hit rate {:.0}%, peak resident trees {}",
             self.depth,
@@ -116,7 +138,15 @@ impl PipelineSummary {
             self.mean_stall_ms,
             self.hit_rate() * 100.0,
             self.peak_resident_trees
-        )
+        );
+        if self.pool_spawn_ms > 0.0 {
+            line.push_str(&format!(
+                ", rank-pool spawn {:.2} ms once ({:.3} ms/step amortized)",
+                self.pool_spawn_ms,
+                self.spawn_amortized_ms()
+            ));
+        }
+        line
     }
 }
 
@@ -146,7 +176,7 @@ impl Planner {
             step,
             lr,
             trees: batch.len(),
-            plan,
+            plan: Arc::new(plan),
             plan_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -246,6 +276,7 @@ pub fn run<E: StepExecutor>(
             mean_stall_ms: stall_total / n,
             prefetch_hits: hits,
             peak_resident_trees: peak_resident,
+            pool_spawn_ms: exec.pool_spawn_ms(),
         },
     ))
 }
@@ -255,7 +286,16 @@ pub fn run<E: StepExecutor>(
 /// plain-SGD update to the embedding table, so end-to-end pipeline behavior
 /// — including the step/LR coupling — is testable in environments without
 /// the native PJRT backend.  Used by `tests/pipeline_equivalence.rs`,
-/// `benches/pipeline_bench.rs` and the `tree-train pipeline-smoke` command.
+/// `tests/dist_equivalence.rs`, `benches/pipeline_bench.rs` and the
+/// `tree-train pipeline-smoke` / `dist-smoke` commands.
+///
+/// Multi-rank plans run on the same persistent [`RankPool`] machinery the
+/// XLA trainers use: one [`RefModel`] *replica* per rank worker (created
+/// once, at the first multi-rank step), log-tree reduction on the worker
+/// threads, and the SGD update broadcast so replicas stay bit-identical to
+/// this primary model.  A single-rank plan executes inline on the caller
+/// thread against `self.model` — the seed path, byte-for-byte, zero
+/// spawns.
 pub struct HostExecutor {
     pub model: RefModel,
     /// Run the model for real (losses + gradients).  Overlap-timing
@@ -272,6 +312,10 @@ pub struct HostExecutor {
     /// One fingerprint per executed step: a hash of the step id, LR bits
     /// and every batch's metadata — "batch composition" as one number.
     pub fingerprints: Vec<u64>,
+    /// Persistent per-rank worker pool, created at the first multi-rank
+    /// step and reused for the rest of the run.
+    pool: Option<RankPool<HostWorker>>,
+    pool_spawn_ms: f64,
 }
 
 impl HostExecutor {
@@ -282,6 +326,8 @@ impl HostExecutor {
             sgd: true,
             exec_floor: None,
             fingerprints: Vec::new(),
+            pool: None,
+            pool_spawn_ms: 0.0,
         }
     }
 }
@@ -300,105 +346,175 @@ struct HostRankAcc {
     loss_sum: f64,
     weight_sum: f64,
     d_embed: Vec<f64>,
-    /// FNV digest of this rank's batch metadata (reduced cross-rank in
-    /// fixed rank order, so the step fingerprint is thread-schedule-free).
+    /// FNV digest of this rank's batch metadata (folded cross-rank by the
+    /// fixed log-tree bracket, so the step fingerprint is
+    /// thread-schedule-free).
     hash: u64,
     batches: u64,
 }
 
-impl HostExecutor {
-    /// Run one rank's plan against the shared (read-only) model.
-    fn run_rank(
-        model: &RefModel,
-        run_model: bool,
-        plan: &StepPlan,
-        acc: &mut HostRankAcc,
-    ) -> crate::Result<usize> {
-        let batches: Vec<&crate::trainer::Batch> = match plan {
-            StepPlan::Tree(p) => {
-                anyhow::ensure!(
-                    p.relay.is_none(),
-                    "HostExecutor covers gateway-free plans (tree exceeds host capacity)"
-                );
-                p.forests.iter().map(|fb| &fb.batch).collect()
-            }
-            StepPlan::Baseline(p) => p.batches.iter().collect(),
-        };
-        let mut device_tokens = 0usize;
-        for b in &batches {
-            if run_model {
-                let out = model.step(b)?;
-                acc.loss_sum += out.loss_sum;
-                acc.weight_sum += out.weight_sum;
-                for (g, d) in acc.d_embed.iter_mut().zip(&out.d_embed) {
-                    *g += d;
-                }
-            }
-            device_tokens += b.capacity;
-            acc.batches += 1;
-            fnv1a(&mut acc.hash, &(b.capacity as u64).to_le_bytes());
-            // every metadata channel the programs consume: tokens and
-            // weights, but also the attention topology (prev_idx, k_order,
-            // k_exit, k_bias) and positions — a divergence in any of them
-            // is a composition change even if token order matches
-            for t in &b.tokens {
-                fnv1a(&mut acc.hash, &t.to_le_bytes());
-            }
-            for w in &b.weights {
-                fnv1a(&mut acc.hash, &w.to_bits().to_le_bytes());
-            }
-            for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
-                for x in v {
-                    fnv1a(&mut acc.hash, &x.to_le_bytes());
-                }
-            }
-            for kb in &b.k_bias {
-                fnv1a(&mut acc.hash, &kb.to_bits().to_le_bytes());
+impl HostRankAcc {
+    fn fresh(embed_len: usize) -> Self {
+        Self {
+            loss_sum: 0.0,
+            weight_sum: 0.0,
+            d_embed: vec![0.0f64; embed_len],
+            hash: 0xcbf29ce484222325u64,
+            batches: 0,
+        }
+    }
+}
+
+/// One rank's persistent hermetic executor state: a [`RefModel`] replica —
+/// the RefModel analog of [`dist::TrainerWorker`]'s engine replica.
+struct HostWorker {
+    model: RefModel,
+    run_model: bool,
+}
+
+/// The broadcast SGD update every replica applies (identical f64 math to
+/// the primary's update, so replicas stay bit-identical).
+struct HostUpdate {
+    lr: f64,
+    weight_sum: f64,
+    d_embed: Vec<f64>,
+}
+
+impl RankWorker for HostWorker {
+    type Acc = HostRankAcc;
+    type Update = HostUpdate;
+
+    fn execute(&mut self, _rank: usize, plan: &StepPlan) -> crate::Result<(HostRankAcc, usize)> {
+        let mut acc = HostRankAcc::fresh(self.model.embed.len());
+        let tokens = run_host_rank(&self.model, self.run_model, plan, &mut acc)?;
+        Ok((acc, tokens))
+    }
+
+    fn reduce(a: &mut HostRankAcc, b: HostRankAcc) {
+        a.loss_sum += b.loss_sum;
+        a.weight_sum += b.weight_sum;
+        for (g, d) in a.d_embed.iter_mut().zip(&b.d_embed) {
+            *g += d;
+        }
+        fnv1a(&mut a.hash, &b.hash.to_le_bytes());
+        a.batches += b.batches;
+    }
+
+    fn apply(&mut self, u: &HostUpdate) -> crate::Result<()> {
+        if u.weight_sum > 0.0 {
+            for (e, g) in self.model.embed.iter_mut().zip(&u.d_embed) {
+                *e -= u.lr * g / u.weight_sum;
             }
         }
-        Ok(device_tokens)
+        Ok(())
     }
+}
+
+/// Run one rank's plan against a (read-only) model.
+fn run_host_rank(
+    model: &RefModel,
+    run_model: bool,
+    plan: &StepPlan,
+    acc: &mut HostRankAcc,
+) -> crate::Result<usize> {
+    let batches: Vec<&crate::trainer::Batch> = match plan {
+        StepPlan::Tree(p) => {
+            anyhow::ensure!(
+                p.relay.is_none(),
+                "HostExecutor covers gateway-free plans (tree exceeds host capacity)"
+            );
+            p.forests.iter().map(|fb| &fb.batch).collect()
+        }
+        StepPlan::Baseline(p) => p.batches.iter().collect(),
+    };
+    let mut device_tokens = 0usize;
+    for b in &batches {
+        if run_model {
+            let out = model.step(b)?;
+            acc.loss_sum += out.loss_sum;
+            acc.weight_sum += out.weight_sum;
+            for (g, d) in acc.d_embed.iter_mut().zip(&out.d_embed) {
+                *g += d;
+            }
+        }
+        device_tokens += b.capacity;
+        acc.batches += 1;
+        fnv1a(&mut acc.hash, &(b.capacity as u64).to_le_bytes());
+        // every metadata channel the programs consume: tokens and
+        // weights, but also the attention topology (prev_idx, k_order,
+        // k_exit, k_bias) and positions — a divergence in any of them
+        // is a composition change even if token order matches
+        for t in &b.tokens {
+            fnv1a(&mut acc.hash, &t.to_le_bytes());
+        }
+        for w in &b.weights {
+            fnv1a(&mut acc.hash, &w.to_bits().to_le_bytes());
+        }
+        for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
+            for x in v {
+                fnv1a(&mut acc.hash, &x.to_le_bytes());
+            }
+        }
+        for kb in &b.k_bias {
+            fnv1a(&mut acc.hash, &kb.to_bits().to_le_bytes());
+        }
+    }
+    Ok(device_tokens)
 }
 
 impl StepExecutor for HostExecutor {
     fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
         let t0 = Instant::now();
-        // per-rank accumulation + fixed-order reduction through the very
-        // same pool the XLA trainers use (dist::execute_ranks): one rank
-        // runs inline (the seed path), N ranks run on worker threads with
-        // rank-ordered f64 reduction
-        let (model, run_model, embed_len) =
-            (&self.model, self.run_model, self.model.embed.len());
-        let reduced = dist::execute_ranks(
-            &planned.plan,
-            || HostRankAcc {
-                loss_sum: 0.0,
-                weight_sum: 0.0,
-                d_embed: vec![0.0f64; embed_len],
-                hash: 0xcbf29ce484222325u64,
-                batches: 0,
-            },
-            |_rank, plan, acc| Self::run_rank(model, run_model, plan, acc),
-            |a, b| {
-                a.loss_sum += b.loss_sum;
-                a.weight_sum += b.weight_sum;
-                for (g, d) in a.d_embed.iter_mut().zip(&b.d_embed) {
-                    *g += d;
-                }
-                fnv1a(&mut a.hash, &b.hash.to_le_bytes());
-                a.batches += b.batches;
-            },
-        )?;
+        let n = planned.plan.n_ranks();
+        let reduced = if n == 1 {
+            // the seed single-executor path: inline on the caller thread
+            // against the primary model, byte-for-byte, zero spawns
+            let mut acc = HostRankAcc::fresh(self.model.embed.len());
+            let tokens =
+                run_host_rank(&self.model, self.run_model, &planned.plan.ranks[0], &mut acc)?;
+            dist::RankReduce {
+                acc,
+                device_tokens: tokens,
+                reduce_ms: 0.0,
+                reduce_overlap_ms: 0.0,
+                reduce_depth: 0,
+            }
+        } else {
+            // persistent pool of RefModel replicas — the same RankPool
+            // machinery the XLA trainers drive, created once per run
+            if self.pool.is_none() {
+                let ts = Instant::now();
+                let workers: Vec<HostWorker> = (0..n)
+                    .map(|_| HostWorker { model: self.model.clone(), run_model: self.run_model })
+                    .collect();
+                self.pool = Some(RankPool::new(workers)?);
+                self.pool_spawn_ms = ts.elapsed().as_secs_f64() * 1e3;
+            }
+            let pool = self.pool.as_mut().expect("pool created above");
+            pool.execute(&planned.plan)?
+        };
         let acc = reduced.acc;
-        // step fingerprint: step id + LR bits + the rank-ordered digest
+        // step fingerprint: step id + LR bits + the bracket-folded digest
         let mut h = 0xcbf29ce484222325u64;
         fnv1a(&mut h, &planned.step.to_le_bytes());
         fnv1a(&mut h, &planned.lr.to_bits().to_le_bytes());
         fnv1a(&mut h, &acc.hash.to_le_bytes());
         self.fingerprints.push(h);
-        if self.sgd && acc.weight_sum > 0.0 {
-            for (e, g) in self.model.embed.iter_mut().zip(&acc.d_embed) {
-                *e -= planned.lr * g / acc.weight_sum;
+        if self.sgd {
+            if acc.weight_sum > 0.0 {
+                for (e, g) in self.model.embed.iter_mut().zip(&acc.d_embed) {
+                    *e -= planned.lr * g / acc.weight_sum;
+                }
+            }
+            if let Some(pool) = &mut self.pool {
+                // replicas apply the identical update (same reduced
+                // gradient, same LR, same f64 expression) and so stay
+                // bit-identical to the primary; async on the workers
+                pool.apply(HostUpdate {
+                    lr: planned.lr,
+                    weight_sum: acc.weight_sum,
+                    d_embed: acc.d_embed.clone(),
+                })?;
             }
         }
         if let Some(floor) = self.exec_floor {
@@ -425,7 +541,13 @@ impl StepExecutor for HostExecutor {
             stall_ms: 0.0,
             ranks: planned.plan.n_ranks() as u64,
             reduce_ms: reduced.reduce_ms,
+            reduce_overlap_ms: reduced.reduce_overlap_ms,
+            reduce_depth: reduced.reduce_depth as u64,
             rank_imbalance: planned.plan.rank_imbalance(),
         })
+    }
+
+    fn pool_spawn_ms(&self) -> f64 {
+        self.pool_spawn_ms
     }
 }

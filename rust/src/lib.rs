@@ -52,14 +52,19 @@
 //!   (`pipeline_depth: 0`).
 //! * [`coordinator::dist`] — rank-aware sharded execution
 //!   (docs/distributed.md): each global batch is LPT-sharded *whole-tree*
-//!   across `ranks` data-parallel ranks by packed (post-reuse) token cost,
-//!   each rank plan runs on its own executor worker, and the per-rank
-//!   gradient buffers are reduced in **fixed rank order** (f64) before one
-//!   Eq. 5-normalized update.  `ranks: 1` is the seed single-executor
-//!   pipeline bit-for-bit; `ranks: N` matches it to f64 tolerance and is
-//!   bit-identical run-to-run.  [`distsim`] prices the *measured* per-rank
-//!   loads on the paper's 64xHopper shape instead of re-deriving its own
-//!   placement.
+//!   across `ranks` data-parallel ranks by packed (post-reuse) token cost
+//!   and executed by a **persistent rank-worker pool** — one thread per
+//!   rank for the whole run, each owning a full trainer **replica** (own
+//!   parameters, literal cache, optimizer moments, program handles; only
+//!   `Send` required, no `Sync`-shared engine).  Per-rank gradients are
+//!   folded by a **fixed log-tree bracket** (depth `ceil(log2(ranks))`,
+//!   pairing a pure function of rank ids) *on the worker threads*, off the
+//!   executor's critical path, then one Eq. 5-normalized update on the
+//!   primary engine is broadcast so replicas stay bit-identical.
+//!   `ranks: 1` is the seed single-executor pipeline bit-for-bit;
+//!   `ranks: N` matches it to f64 tolerance and is bit-identical
+//!   run-to-run.  [`distsim`] prices the *measured* per-rank loads on the
+//!   paper's 64xHopper shape instead of re-deriving its own placement.
 //!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the

@@ -35,13 +35,16 @@ COMMANDS:
                            [--mode tree|baseline] [--steps N]
                            [--trees-per-batch N] [--pipeline-depth D]
                            [--shuffle-window W] [--capacity C] [--vocab V]
-  dist-smoke               sharded execution determinism gate, hermetic:
-                           --ranks N vs --ranks 1 loss streams within f64
-                           tolerance, repeat runs bit-identical
+  dist-smoke               sharded execution determinism gate + measured
+                           sweep, hermetic: each --ranks N vs ranks 1 loss
+                           stream within f64 tolerance, repeat runs
+                           bit-identical; writes measured imbalance-vs-
+                           speedup rows into results/BENCH_distsim.json
                            --corpus FILE [--format trees|rollouts]
-                           [--mode tree|baseline] [--ranks N] [--steps N]
-                           [--trees-per-batch N] [--pipeline-depth D]
-                           [--shuffle-window W] [--capacity C] [--vocab V]
+                           [--mode tree|baseline] [--ranks N,N,..]
+                           [--steps N] [--trees-per-batch N,N,..]
+                           [--pipeline-depth D] [--shuffle-window W]
+                           [--capacity C] [--vocab V]
   fig5                     token accounting: flatten vs standard vs RF
                            [--tree-tokens N] [--capacity C]
   fig6                     agentic tree shapes + POR + depth profiles
@@ -172,13 +175,14 @@ fn main() -> anyhow::Result<()> {
                 &rest.str("format", "trees"),
                 &rest.str("mode", "tree"),
                 rest.get("steps", 12u64),
-                rest.get("trees-per-batch", 6usize),
-                rest.get("ranks", 4usize),
+                &rest.str("trees-per-batch", "6"),
+                &rest.str("ranks", "4"),
                 rest.get("pipeline-depth", 2usize),
                 rest.get("shuffle-window", 8usize),
                 rest.get("capacity", 8192usize),
                 rest.get("vocab", 256usize),
                 rest.get("seed", 0u64),
+                &out,
             )
         }
         "ingest" => {

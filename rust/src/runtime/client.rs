@@ -103,6 +103,21 @@ impl Runtime {
         if let Some(p) = self.cache.lock().unwrap().get(name) {
             return Ok(p.clone());
         }
+        let prog = self.compile(name)?;
+        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Compile a program *bypassing* the shared cache: the returned handle
+    /// (executable + stats) belongs to the caller alone.  Per-rank engine
+    /// replicas use this so no execution handle is shared across rank
+    /// worker threads — and it is the seam where per-device compilation
+    /// slots in on a multi-device PJRT backend.
+    pub fn program_replica(&self, name: &str) -> crate::Result<std::sync::Arc<Program>> {
+        self.compile(name)
+    }
+
+    fn compile(&self, name: &str) -> crate::Result<std::sync::Arc<Program>> {
         let info = self.manifest.program(name)?.clone();
         let path = self.manifest.hlo_path(&info);
         let t0 = Instant::now();
@@ -112,10 +127,7 @@ impl Runtime {
         let comp = XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         crate::info!("compiled {name} in {} ms", t0.elapsed().as_millis());
-        let prog =
-            std::sync::Arc::new(Program { info, exe, stats: Mutex::new(ExecStats::default()) });
-        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
-        Ok(prog)
+        Ok(std::sync::Arc::new(Program { info, exe, stats: Mutex::new(ExecStats::default()) }))
     }
 
     /// Compile the best-fitting program for (kind, model, capacity).

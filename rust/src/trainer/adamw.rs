@@ -18,6 +18,10 @@ impl Default for AdamWConfig {
     }
 }
 
+/// `Clone` copies the full optimizer state (step + f64 moments) — per-rank
+/// engine replicas start from an identical optimizer and stay bit-identical
+/// by applying the same reduced gradient stream (`coordinator::dist`).
+#[derive(Clone)]
 pub struct AdamW {
     pub cfg: AdamWConfig,
     step: u64,

@@ -55,6 +55,13 @@ impl BaselineTrainer {
         Ok(Self { engine: Engine::new(rt, model, opt_cfg)? })
     }
 
+    /// Per-rank replica: an independent engine ([`Engine::replicate`]) —
+    /// the rank worker state of the distributed step
+    /// (`coordinator/dist.rs`).
+    pub fn replicate(&self) -> crate::Result<Self> {
+        Ok(Self { engine: self.engine.replicate()? })
+    }
+
     pub fn params(&self) -> &[HostTensor] {
         self.engine.params()
     }
@@ -123,6 +130,8 @@ impl BaselineTrainer {
             stall_ms: 0.0,
             ranks: 1,
             reduce_ms: 0.0,
+            reduce_overlap_ms: 0.0,
+            reduce_depth: 0,
             rank_imbalance: 1.0,
         })
     }

@@ -94,6 +94,52 @@ impl Engine {
         })
     }
 
+    /// Clone this engine into an independent per-rank replica: own
+    /// parameter tensors, own literal cache, own optimizer state (step +
+    /// f64 moments), own program handles — compiled fresh through
+    /// [`Runtime::program_replica`], bypassing the shared cache, so no
+    /// execution handle is shared across rank worker threads (the seam
+    /// where per-device compilation slots in on a real multi-device PJRT
+    /// backend; see `coordinator/dist.rs`).
+    ///
+    /// The replica starts bit-identical to `self`; applying the same
+    /// reduced gradient stream with the same LR keeps it that way.  Memory
+    /// cost per replica ≈ params (f32) + cached literals + the AdamW f64
+    /// moments: ~24 bytes per parameter on top of the primary
+    /// (docs/distributed.md).
+    pub fn replicate(&self) -> crate::Result<Self> {
+        let step_prog = self.rt.program_replica(&self.step_prog.info.name)?;
+        let (fwd_prog, bwd_prog) = match (&self.fwd_prog, &self.bwd_prog) {
+            (Some(f), Some(b)) => (
+                Some(self.rt.program_replica(&f.info.name)?),
+                Some(self.rt.program_replica(&b.info.name)?),
+            ),
+            _ => (None, None),
+        };
+        let param_lits = self
+            .params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            rt: self.rt.clone(),
+            model: self.model.clone(),
+            params: self.params.clone(),
+            param_lits,
+            opt: self.opt.clone(),
+            step_prog,
+            fwd_prog,
+            bwd_prog,
+            capacity: self.capacity,
+            past_capacity: self.past_capacity,
+            n_attn: self.n_attn,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            hybrid: self.hybrid,
+            step_count: self.step_count,
+        })
+    }
+
     // ── state accessors ────────────────────────────────────────────────
 
     pub fn params(&self) -> &[HostTensor] {

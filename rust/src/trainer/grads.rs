@@ -36,8 +36,10 @@ impl GradBuffer {
 
     /// Reduce another rank's accumulator into this one (f64, element-wise).
     /// The distributed step ([`crate::coordinator::dist`]) folds rank
-    /// buffers in **fixed rank order**, so the reduced gradient is
-    /// bit-identical run-to-run regardless of executor thread scheduling.
+    /// buffers by a **fixed log-tree bracket** (pairing a pure function of
+    /// rank ids, `self` always the lower rank side), so the reduced
+    /// gradient is bit-identical run-to-run regardless of executor thread
+    /// scheduling or message arrival order.
     pub fn merge(&mut self, other: &GradBuffer) {
         debug_assert_eq!(self.grads.len(), other.grads.len());
         self.loss_sum += other.loss_sum;
@@ -50,8 +52,8 @@ impl GradBuffer {
         }
     }
 
-    /// [`Self::merge`] in the owned-rhs fold shape
-    /// [`crate::coordinator::dist::execute_ranks`] consumes.
+    /// [`Self::merge`] in the owned-rhs fold shape the
+    /// [`crate::coordinator::dist::RankPool`] reduce consumes.
     pub fn merge_owned(acc: &mut GradBuffer, other: GradBuffer) {
         acc.merge(&other);
     }

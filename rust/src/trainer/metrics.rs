@@ -32,9 +32,18 @@ pub struct StepMetrics {
     pub stall_ms: f64,
     /// Data-parallel ranks this step was sharded across (1 = unsharded).
     pub ranks: u64,
-    /// Fixed-order gradient reduction time across rank buffers (0 for a
+    /// Total merge work of the log-tree gradient reduction across rank
+    /// buffers (sum of per-merge wall times on the worker threads; 0 for a
     /// single rank: there is nothing to reduce).
     pub reduce_ms: f64,
+    /// The share of `reduce_ms` hidden off the executor's critical path:
+    /// merge work that finished before the slowest rank finished executing
+    /// (plus parallel-round work).  `reduce_ms - reduce_overlap_ms` is the
+    /// residual reduce tail the step actually paid.
+    pub reduce_overlap_ms: f64,
+    /// Rounds of the fixed binary reduce bracket: `ceil(log2(ranks))`
+    /// (0 for a single rank).
+    pub reduce_depth: u64,
     /// Max-over-mean per-rank packed token load (>= 1.0; 1.0 = balanced —
     /// also the single-rank value).
     pub rank_imbalance: f64,
@@ -61,7 +70,7 @@ impl StepMetrics {
     /// drifted twice before the two were forced through one seam.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},{:.3},{:.4}",
+            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},{:.3},{:.3},{},{:.4}",
             self.step,
             self.loss,
             self.weight_sum,
@@ -77,6 +86,8 @@ impl StepMetrics {
             self.grad_norm,
             self.ranks,
             self.reduce_ms,
+            self.reduce_overlap_ms,
+            self.reduce_depth,
             self.rank_imbalance
         )
     }
@@ -85,7 +96,7 @@ impl StepMetrics {
 /// Column schema of the per-step CSV ([`StepMetrics::csv_row`] order).
 pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,\
      reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
-     ranks,reduce_ms,rank_imbalance";
+     ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -126,6 +137,8 @@ mod tests {
             stall_ms: 0.5,
             ranks: 4,
             reduce_ms: 0.25,
+            reduce_overlap_ms: 0.125,
+            reduce_depth: 2,
             rank_imbalance: 1.125,
         }
     }
@@ -147,7 +160,14 @@ mod tests {
 
     #[test]
     fn csv_schema_includes_the_dist_columns() {
-        for col in ["ranks", "reduce_ms", "rank_imbalance", "reuse_ratio"] {
+        for col in [
+            "ranks",
+            "reduce_ms",
+            "reduce_overlap_ms",
+            "reduce_depth",
+            "rank_imbalance",
+            "reuse_ratio",
+        ] {
             assert!(
                 CSV_HEADER.split(',').any(|c| c.trim() == col),
                 "missing column {col}"
@@ -161,6 +181,8 @@ mod tests {
         };
         assert_eq!(cols[idx("ranks")], "4");
         assert_eq!(cols[idx("reduce_ms")], "0.250");
+        assert_eq!(cols[idx("reduce_overlap_ms")], "0.125");
+        assert_eq!(cols[idx("reduce_depth")], "2");
         assert_eq!(cols[idx("rank_imbalance")], "1.1250");
         assert_eq!(cols[idx("step")], "3");
     }

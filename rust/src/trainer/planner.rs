@@ -96,7 +96,10 @@ impl StepPlan {
 }
 
 /// One global batch planned as `n_ranks` per-rank [`StepPlan`]s — what flows
-/// from the planner side of the pipeline to the executor side.
+/// from the planner side of the pipeline to the executor side, where it is
+/// `Arc`-shared to the persistent rank-worker pool: worker `r` reads
+/// `ranks[r]` off the shared plan, no per-rank copy
+/// (`crate::coordinator::dist`).
 ///
 /// Trees are LPT-sharded whole across ranks by *packed* (post-reuse) token
 /// cost ([`forest::shard_by_cost`]), honoring the §3.4 constraint that a

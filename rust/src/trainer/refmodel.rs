@@ -29,6 +29,9 @@ use crate::util::rng::Rng;
 
 use super::batch::Batch;
 
+/// `Clone` replicates the full parameter state — the hermetic analog of
+/// [`super::Engine::replicate`] for per-rank executor workers.
+#[derive(Clone)]
 pub struct RefModel {
     pub vocab: usize,
     pub dim: usize,

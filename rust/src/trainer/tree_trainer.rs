@@ -60,6 +60,17 @@ impl TreeTrainer {
         })
     }
 
+    /// Per-rank replica: an independent engine
+    /// ([`Engine::replicate`]) with the same planning knobs — the rank
+    /// worker state of the distributed step (`coordinator/dist.rs`).
+    pub fn replicate(&self) -> crate::Result<Self> {
+        Ok(Self {
+            engine: self.engine.replicate()?,
+            partition_budget: self.partition_budget,
+            forest_packing: self.forest_packing,
+        })
+    }
+
     pub fn params(&self) -> &[HostTensor] {
         self.engine.params()
     }
@@ -294,6 +305,8 @@ impl TreeTrainer {
             stall_ms: 0.0,
             ranks: 1,
             reduce_ms: 0.0,
+            reduce_overlap_ms: 0.0,
+            reduce_depth: 0,
             rank_imbalance: 1.0,
         })
     }

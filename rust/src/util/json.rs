@@ -207,6 +207,46 @@ impl Json {
     }
 }
 
+/// Read-modify-write one top-level key of a JSON object file: parse the
+/// existing object, replace or append `key`, prune any other top-level key
+/// not listed in `keep` (stale sections from older schemas), write back
+/// pretty-printed.  Lets independent emitters (`tree-train distsim`'s
+/// projection, `tree-train dist-smoke`'s measured sweep) share one results
+/// file without clobbering each other's sections.
+///
+/// A missing file starts fresh; an existing but unparseable or non-object
+/// file is an **error** — never silently overwritten (a truncated write
+/// must not quietly destroy the sibling section; delete the file to
+/// reset).
+pub fn update_json_file_key(
+    path: &std::path::Path,
+    key: &str,
+    value: Json,
+    keep: &[&str],
+) -> anyhow::Result<()> {
+    let mut kv: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => anyhow::bail!("reading {}: {e}", path.display()),
+        Ok(s) => match Json::parse(&s) {
+            Ok(Json::Obj(kv)) => kv
+                .into_iter()
+                .filter(|(k, _)| k == key || keep.contains(&k.as_str()))
+                .collect(),
+            _ => anyhow::bail!(
+                "{} exists but is not a parseable JSON object — refusing to \
+                 clobber it (delete the file to reset)",
+                path.display()
+            ),
+        },
+    };
+    match kv.iter_mut().find(|(k, _)| k == key) {
+        Some((_, v)) => *v = value,
+        None => kv.push((key.to_string(), value)),
+    }
+    std::fs::write(path, Json::Obj(kv).to_string_pretty())?;
+    Ok(())
+}
+
 fn nl(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
@@ -456,5 +496,41 @@ mod tests {
     fn pretty_parses_back() {
         let v = Json::obj(vec![("x", Json::arr_i32(&[1, 2, 3])), ("y", Json::str("s"))]);
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn update_json_file_key_preserves_kept_sections_and_prunes_stale_keys() {
+        let dir = std::env::temp_dir().join(format!("tt-json-key-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merged.json");
+        // fresh file: creates the object
+        update_json_file_key(&path, "a", Json::num(1.0), &["b"]).unwrap();
+        // second key: preserves the first (listed in keep)
+        update_json_file_key(&path, "b", Json::str("x"), &["a"]).unwrap();
+        // overwrite: replaces in place, still preserving the kept sibling
+        update_json_file_key(&path, "a", Json::num(2.0), &["b"]).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        // stale keys from an older schema are pruned on the next write
+        std::fs::write(&path, r#"{"legacy": 7, "b": "x"}"#).unwrap();
+        update_json_file_key(&path, "a", Json::num(3.0), &["b"]).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(v.get("legacy").is_none(), "stale top-level keys must be pruned");
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn update_json_file_key_refuses_to_clobber_garbage() {
+        let dir = std::env::temp_dir().join(format!("tt-json-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.json");
+        std::fs::write(&path, "{\"measured_sweep\": {\"rows\": [").unwrap();
+        let err = update_json_file_key(&path, "projection", Json::num(1.0), &[]).unwrap_err();
+        assert!(err.to_string().contains("refusing to clobber"), "got: {err}");
+        // the broken file is left untouched for inspection
+        assert!(std::fs::read_to_string(&path).unwrap().starts_with("{\"measured_sweep\""));
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -231,8 +231,10 @@ fn epoch_tail_is_carried_not_dropped() {
 // ───────────────────── sharded execution (docs/distributed.md) ────────────
 //
 // One hermetic suite for the whole determinism matrix: sync ≡ pipelined ≡
-// sharded.  The sharded runs execute through the same dist::execute_ranks
-// worker pool + fixed-order reduction the XLA trainers use.
+// sharded.  The sharded runs execute through the same persistent
+// dist::RankPool (per-rank replicas + log-tree reduction on the worker
+// threads) the XLA trainers use; the deeper pool-specific properties live
+// in tests/dist_equivalence.rs.
 
 /// |a - b| within f64 summation-reassociation tolerance (the ~1e-12
 /// per-step packing error compounds through the executor's SGD updates).
@@ -262,7 +264,7 @@ fn ranks1_sharded_path_is_bit_identical_to_seed_pipeline() {
     // independent reference: the seed single-executor loop re-implemented
     // by hand — same source/shuffle, same cosine LR, but *unsharded*
     // PlanSpec::plan_tree and direct RefModel execution + SGD, touching
-    // neither ShardedPlan nor dist::execute_ranks.  The ranks-1 pipeline
+    // neither ShardedPlan nor the dist rank pool.  The ranks-1 pipeline
     // must reproduce its loss stream bit-for-bit (the ISSUE acceptance
     // criterion, guarded by code the refactor did NOT rewrite).
     let trees = corpus(10);
@@ -311,6 +313,8 @@ fn ranks1_sharded_path_is_bit_identical_to_seed_pipeline() {
     for m in &piped.0 {
         assert_eq!(m.ranks, 1);
         assert_eq!(m.reduce_ms, 0.0, "single rank has nothing to reduce");
+        assert_eq!(m.reduce_overlap_ms, 0.0);
+        assert_eq!(m.reduce_depth, 0, "single rank has no reduce tree");
         assert_eq!(m.rank_imbalance, 1.0);
     }
 }
@@ -332,9 +336,12 @@ fn sharded_matches_single_rank_within_f64_tolerance() {
             19,
         );
         assert_close(&format!("tree ranks {ranks}"), &single, &sharded);
+        let depth = (ranks as f64).log2().ceil() as u64;
         for m in &sharded.0 {
             assert_eq!(m.ranks, ranks as u64);
             assert!(m.rank_imbalance >= 1.0, "imbalance {}", m.rank_imbalance);
+            assert_eq!(m.reduce_depth, depth, "log-tree depth at ranks {ranks}");
+            assert!(m.reduce_overlap_ms <= m.reduce_ms);
         }
     }
 }

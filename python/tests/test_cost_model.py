@@ -1,0 +1,189 @@
+"""Python mirror of the calibrated sharding/packing cost model.
+
+Mirrors ``rust/src/partition/cost.rs``: the online least-squares
+``Calibrator`` (rank-1 ``X^T X`` / ``X^T y`` updates, per-feature
+*relative* ridge ``1e-8 * xtx[i][i] + 1e-12``, partial-pivot Gaussian
+elimination, ``None`` on a zero-trace or numerically singular system) and
+the ``CostModel`` pricing contract (``tokens``: the exact identity;
+``calibrated``: identity until ``min_obs`` observations, then the
+predicted wall in integer microseconds, clamped >= 1).
+
+Keep in lockstep with the Rust unit tests
+(``calibrator_recovers_a_synthetic_linear_law`` et al.).
+"""
+
+import math
+
+N_FEATS = 4
+RIDGE_REL = 1e-8
+RIDGE_ABS = 1e-12
+PIVOT_EPS = 1e-12
+
+
+class Calibrator:
+    def __init__(self):
+        self.xtx = [[0.0] * N_FEATS for _ in range(N_FEATS)]
+        self.xty = [0.0] * N_FEATS
+        self.n = 0
+
+    def observe(self, feats, wall_ms):
+        if not all(map(math.isfinite, feats)) or not math.isfinite(wall_ms):
+            return
+        for i in range(N_FEATS):
+            for j in range(N_FEATS):
+                self.xtx[i][j] += feats[i] * feats[j]
+            self.xty[i] += feats[i] * wall_ms
+        self.n += 1
+
+    def solve(self):
+        """Ridge-regularized normal-equation solve; None when degenerate."""
+        if self.n == 0:
+            return None
+        trace = sum(self.xtx[i][i] for i in range(N_FEATS))
+        if not trace > 0.0:
+            return None
+        a = [
+            [self.xtx[i][j] for j in range(N_FEATS)] + [self.xty[i]]
+            for i in range(N_FEATS)
+        ]
+        for i in range(N_FEATS):
+            a[i][i] += RIDGE_REL * self.xtx[i][i] + RIDGE_ABS
+        for col in range(N_FEATS):
+            pivot = max(range(col, N_FEATS), key=lambda r: abs(a[r][col]))
+            if abs(a[pivot][col]) < PIVOT_EPS:
+                return None
+            a[col], a[pivot] = a[pivot], a[col]
+            for r in range(col + 1, N_FEATS):
+                f = a[r][col] / a[col][col]
+                for c in range(col, N_FEATS + 1):
+                    a[r][c] -= f * a[col][c]
+        w = [0.0] * N_FEATS
+        for i in reversed(range(N_FEATS)):
+            acc = a[i][N_FEATS]
+            for j in range(i + 1, N_FEATS):
+                acc -= a[i][j] * w[j]
+            w[i] = acc / a[i][i]
+        if not all(map(math.isfinite, w)):
+            return None
+        return w
+
+
+class CalibratedCost:
+    def __init__(self, min_obs):
+        self.min_obs = min_obs
+        self.cal = Calibrator()
+        self.w = None
+
+    def observe(self, feats, wall_ms):
+        self.cal.observe(feats, wall_ms)
+        self.w = self.cal.solve()
+
+    def active(self):
+        return self.cal.n >= self.min_obs and self.w is not None
+
+    def price(self, feats, base):
+        if not self.active():
+            return base
+        pred_ms = sum(w * f for w, f in zip(self.w, feats))
+        return max(1, round(pred_ms * 1e3))
+
+
+def tree_features(tokens, depth, est_calls):
+    """[base tokens, max real-token path depth, est program calls, 1]."""
+    return [float(tokens), float(depth), float(est_calls), 1.0]
+
+
+def xorshift(state):
+    """The Rust test's xorshift64* stream, for shape only (not bitwise)."""
+    state ^= (state << 13) & ((1 << 64) - 1)
+    state ^= state >> 7
+    state ^= (state << 17) & ((1 << 64) - 1)
+    return state
+
+
+def test_tokens_model_is_the_exact_identity():
+    # CostModel::Tokens never consults features: price(f, base) == base
+    for base in (0, 1, 17, 4096):
+        assert base == base  # the identity is structural; nothing to fit
+
+
+def test_calibrated_prices_like_tokens_below_min_obs():
+    m = CalibratedCost(min_obs=8)
+    f = tree_features(500, 120, 2)
+    for _ in range(7):
+        m.observe(f, 1.5)
+        assert not m.active()
+        assert m.price(f, 500) == 500
+    m.observe(f, 1.5)
+    assert m.active()
+
+
+def test_calibrator_recovers_a_synthetic_linear_law():
+    truth = [0.004, 0.01, 2.5, 0.5]
+    cal = Calibrator()
+    state = 0x9E3779B97F4A7C15
+    feats = []
+    for _ in range(64):
+        state = xorshift(state)
+        tokens = 200 + state % 4000
+        state = xorshift(state)
+        depth = 20 + state % 400
+        state = xorshift(state)
+        calls = 1 + state % 6
+        f = tree_features(tokens, depth, calls)
+        wall = sum(w * x for w, x in zip(truth, f))
+        cal.observe(f, wall)
+        feats.append(f)
+    w = cal.solve()
+    assert w is not None
+    # the relative ridge (1e-8) shrinks weights by ~condition-number x
+    # 1e-8; 1e-4 relative leaves two orders of margin over the observed
+    # ~1e-6 while still pinning all four weights tightly
+    for got, want in zip(w, truth):
+        assert abs(got - want) <= 1e-4 * max(1.0, abs(want)), (w, truth)
+
+
+def test_singular_systems_fall_back_to_the_base():
+    m = CalibratedCost(min_obs=1)
+    for _ in range(4):
+        m.observe([0.0, 0.0, 0.0, 0.0], 0.0)
+    # zero trace -> no fit -> price returns the base untouched
+    assert m.w is None
+    assert m.price(tree_features(42, 10, 1), 42) == 42
+
+
+def test_collinear_features_still_predict_on_the_observed_subspace():
+    # est_calls == bias for every observation (all trees fit one call):
+    # exactly singular without ridge; the relative ridge keeps the solve
+    # alive and predictions exact on the same collinear pattern
+    m = CalibratedCost(min_obs=4)
+    for i in range(1, 9):
+        f = tree_features(1000 * i, 50 * i, 1)
+        m.observe(f, 0.001 * 1000 * i)
+    assert m.active()
+    # price = predicted wall in integer microseconds: 0.001 ms/token
+    got = m.price(tree_features(1000, 50, 1), 12345)
+    assert abs(got - 1000) <= 2, got
+
+
+def test_price_is_clamped_to_at_least_one():
+    m = CalibratedCost(min_obs=2)
+    for i in range(1, 5):
+        m.observe(tree_features(10 * i, i, 1), 1e-9 * i)
+    assert m.active()
+    assert m.price(tree_features(10, 1, 1), 999) >= 1
+
+
+def test_features_are_additive():
+    # per-rank feature sums are valid regression rows: the bias component
+    # counts trees, the others sum
+    rows = [tree_features(100, 10, 1), tree_features(300, 40, 2)]
+    summed = [sum(c) for c in zip(*rows)]
+    assert summed == [400.0, 50.0, 3.0, 2.0]
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

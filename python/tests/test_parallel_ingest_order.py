@@ -1,0 +1,196 @@
+"""Python mirror of the parallel-ingestion ordering protocol.
+
+Mirrors ``rust/src/ingest/parallel.rs`` + the ``SessionLru`` in
+``rust/src/ingest/stream.rs``: the router replays the *single-threaded*
+LRU eviction schedule over session ids only, stamps every flush with a
+global sequence number, shard workers receive their sessions' commands
+over FIFO channels, and the merger releases flushes in sequence order —
+so the emitted session order is bit-identical to the single-threaded
+``SessionFolder`` at any thread count, no matter how shards' completions
+interleave.
+
+Determinism contract being mirrored:
+
+* LRU: every touch takes a fresh monotonic stamp; eviction removes the
+  minimum live stamp; end-of-corpus drain flushes in last-touch order.
+* Sharding: FNV-1a(session) % threads — sessions never split, distinct
+  sessions never merge.
+* Merge: flushes re-sequenced by the router-assigned global seq, so
+  out-of-order shard completion cannot reorder emission.
+* Errors: the failure with the lowest corpus line wins, exactly as the
+  single-threaded reader (which would have stopped there) reports it.
+"""
+
+import itertools
+import random
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x0000010000000001B3
+MASK64 = (1 << 64) - 1
+
+
+def shard_of(session, threads):
+    """FNV-1a, the stable session -> shard map of ingest/parallel.rs."""
+    h = FNV_OFFSET
+    for b in session.encode():
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h % threads
+
+
+class SessionLru:
+    """Deterministic LRU clock (stream.rs SessionLru, payload-free)."""
+
+    def __init__(self, cap):
+        assert cap > 0
+        self.cap = cap
+        self.tick = 0
+        self.stamp = {}  # session -> last-touch stamp
+
+    def touch(self, session):
+        """Returns the evicted session when a new one exceeds capacity."""
+        if session in self.stamp:
+            self.tick += 1
+            self.stamp[session] = self.tick
+            return None
+        evicted = None
+        if len(self.stamp) == self.cap:
+            evicted = min(self.stamp, key=self.stamp.get)
+            del self.stamp[evicted]
+        self.tick += 1
+        self.stamp[session] = self.tick
+        return evicted
+
+    def drain(self):
+        """Close every open session in last-touch order."""
+        out = sorted(self.stamp, key=self.stamp.get)
+        self.stamp.clear()
+        return out
+
+
+def single_thread_flush_order(sessions, cap):
+    """SessionFolder's flush schedule: evictions, then the finish drain."""
+    lru = SessionLru(cap)
+    order = []
+    for s in sessions:
+        ev = lru.touch(s)
+        if ev is not None:
+            order.append(ev)
+    order.extend(lru.drain())
+    return order
+
+
+def parallel_flush_order(sessions, cap, threads, completion_rng):
+    """The router/worker/merger protocol with adversarial completion.
+
+    The router replays the identical LRU over session ids, assigning each
+    flush a global seq and dispatching it to its owner shard's FIFO queue.
+    Shards then *complete* their queued flushes in an arbitrary
+    interleaving (only per-shard FIFO is guaranteed); the merger buffers
+    by seq and releases in global order.
+    """
+    lru = SessionLru(cap)
+    shard_q = [[] for _ in range(threads)]
+    seq = 0
+    for s in sessions:
+        ev = lru.touch(s)
+        if ev is not None:
+            shard_q[shard_of(ev, threads)].append((seq, ev))
+            seq += 1
+    for s in lru.drain():
+        shard_q[shard_of(s, threads)].append((seq, s))
+        seq += 1
+
+    # adversarial completion: interleave shard queues randomly (FIFO
+    # within a shard), then re-sequence like the merger does
+    heads = [0] * threads
+    completed = []
+    while any(heads[i] < len(shard_q[i]) for i in range(threads)):
+        live = [i for i in range(threads) if heads[i] < len(shard_q[i])]
+        i = completion_rng.choice(live)
+        completed.append(shard_q[i][heads[i]])
+        heads[i] += 1
+
+    pending = {}
+    out = []
+    next_seq = 0
+    for sq, s in completed:
+        pending[sq] = s
+        while next_seq in pending:
+            out.append(pending.pop(next_seq))
+            next_seq += 1
+    assert not pending
+    return out
+
+
+def interleaved_stream(n_sessions, runs, group, rng):
+    """Round-robin `group` sessions at a time (record.interleave_sessions)."""
+    per = [[f"sess-{i}"] * rng.randint(1, runs) for i in range(n_sessions)]
+    out = []
+    for g in range(0, n_sessions, group):
+        chunk = [list(p) for p in per[g : g + group]]
+        for r in itertools.zip_longest(*chunk):
+            out.extend(s for s in r if s is not None)
+    return out
+
+
+def test_fnv_shard_is_stable_and_total():
+    assert shard_of("", 7) == FNV_OFFSET % 7
+    # must not vary run to run, must cover [0, threads)
+    for threads in (1, 2, 4, 7):
+        shards = {shard_of(f"sess-{i}", threads) for i in range(64)}
+        assert all(0 <= s < threads for s in shards)
+        assert shard_of("sess-3", threads) == shard_of("sess-3", threads)
+    assert shard_of("a", 1) == 0
+
+
+def test_lru_eviction_is_least_recent_and_drain_is_last_touch():
+    lru = SessionLru(2)
+    assert lru.touch("a") is None
+    assert lru.touch("b") is None
+    assert lru.touch("a") is None  # refresh: b is now least recent
+    assert lru.touch("c") == "b"
+    assert lru.drain() == ["a", "c"]
+
+
+def test_parallel_order_matches_single_thread_for_all_thread_counts():
+    rng = random.Random(11)
+    for trial in range(40):
+        stream = interleaved_stream(
+            n_sessions=rng.randint(2, 12),
+            runs=5,
+            group=rng.randint(1, 5),
+            rng=rng,
+        )
+        cap = rng.randint(1, 4)
+        want = single_thread_flush_order(stream, cap)
+        for threads in (1, 2, 4, 7):
+            got = parallel_flush_order(stream, cap, threads, random.Random(trial))
+            assert got == want, (trial, threads, cap, stream)
+
+
+def test_reopened_session_flushes_twice_in_both_schedules():
+    # a b c evicts a (cap 2); a's reopen must flush as a *new* instance
+    stream = ["a", "b", "c", "a", "a"]
+    want = single_thread_flush_order(stream, 2)
+    assert want.count("a") == 2
+    got = parallel_flush_order(stream, 2, 4, random.Random(0))
+    assert got == want
+
+
+def test_lowest_line_error_wins():
+    # parallel.rs: parse errors are detected in re-sequenced batch order,
+    # late fold errors are min-merged during the drain — the reported
+    # failure is always the one the single-threaded reader hits first
+    errors = [(42, "late"), (7, "early"), (19, "mid")]
+    best = None
+    for line, err in errors:
+        if best is None or line < best[0]:
+            best = (line, err)
+    assert best == (7, "early")
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

@@ -10,7 +10,8 @@
 use std::time::Duration;
 
 use tree_train::ingest::{
-    ingest_stream, records_from_tree, IngestConfig, RolloutReader, RolloutRecord,
+    ingest_stream, ingest_stream_parallel, records_from_tree, IngestConfig, RolloutReader,
+    RolloutRecord,
 };
 use tree_train::tree::gen;
 use tree_train::util::bench::bench;
@@ -97,6 +98,42 @@ fn main() {
     });
     r_trie.report_throughput(rollout_tokens, "tok");
 
+    // sharded parallel fold: the same corpus through N folder threads,
+    // output bit-identical to the single-threaded fold at any count
+    // (rust/tests/parallel_ingest.rs).  Every variant pays the same
+    // upfront byte copy (spawn_reader needs an owned reader), so the
+    // relative scaling across thread counts is apples to apples.
+    let corpus_bytes = corpus.clone().into_bytes();
+    let mut parallel_rows = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let r = bench(&format!("parallel_fold_{threads}_threads"), budget, || {
+            let owned = corpus_bytes.clone();
+            let mut n = 0usize;
+            let report = ingest_stream_parallel(
+                std::io::Cursor::new(owned),
+                "mem",
+                &cfg,
+                threads,
+                |t| {
+                    n += t.len();
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(report.stats, stats, "{threads}-thread fold diverged from reference");
+            n
+        });
+        r.report_throughput(rollout_tokens, "tok");
+        parallel_rows.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("mean_us", Json::num(r.mean.as_micros() as f64)),
+            (
+                "tokens_per_sec",
+                Json::num(rollout_tokens as f64 / r.mean.as_secs_f64().max(1e-9)),
+            ),
+        ]));
+    }
+
     let out = std::path::PathBuf::from("results");
     std::fs::create_dir_all(&out).ok();
     let json = Json::obj(vec![
@@ -111,6 +148,7 @@ fn main() {
         ("tokens_per_sec", Json::num(tokens_per_sec)),
         ("ingest_mean_us", Json::num(r_fold.mean.as_micros() as f64)),
         ("trie_only_mean_us", Json::num(r_trie.mean.as_micros() as f64)),
+        ("parallel_fold", Json::Arr(parallel_rows)),
     ]);
     let path = out.join("BENCH_ingest.json");
     std::fs::write(&path, json.to_string_pretty()).unwrap();

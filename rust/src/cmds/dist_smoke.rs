@@ -25,12 +25,20 @@
 //! speedup over ranks-1, rank imbalance, reduce cost/overlap — is written
 //! into `results/BENCH_distsim.json` under the `measured_sweep` key,
 //! preserving `tree-train distsim`'s cluster projection section.
+//!
+//! A final phase runs the largest sharded combination twice more — once
+//! under the default token cost model and once under the online calibrated
+//! model (`cost_model: "calibrated"`) — and records both post-warmup mean
+//! predicted-vs-measured imbalance errors under `measured_sweep.cost_model`,
+//! gating that calibration conserves the global batch and does not regress
+//! the prediction error (docs/distributed.md#calibrated-cost-model).
 
 use std::path::Path;
 use std::time::Instant;
 
 use tree_train::coordinator::dist;
 use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::partition::CostModel;
 use tree_train::trainer::{PlanSpec, StepMetrics};
 use tree_train::util::json::{update_json_file_key, Json};
 
@@ -179,6 +187,73 @@ pub fn run(
         }
     }
 
+    // Cost-model feedback check: the same corpus at the largest sharded
+    // combination, priced by the default token model vs the online
+    // calibrated model, scored on the per-step predicted-vs-measured
+    // rank-imbalance error (`cost_model_err`).  The calibrated run prices
+    // from wall clock, so it is not bit-identical run to run — the gates
+    // here are (a) the global batch (and thus the loss stream, up to
+    // reduce reassociation) is conserved, and (b) the post-warmup mean
+    // error does not regress catastrophically against the token baseline.
+    let cal_r = *rank_list.iter().filter(|&&r| r >= 2).max().unwrap();
+    let cal_tpb = *tpb_list.iter().max().unwrap();
+    let cal_steps = steps.max(16);
+    let min_obs = (2 * cal_r) as u64; // two full multi-rank steps of walls
+    let run_model = |sp: PlanSpec| -> anyhow::Result<Vec<StepMetrics>> {
+        let cfg = PipelineConfig {
+            mode,
+            steps: cal_steps,
+            trees_per_batch: cal_tpb,
+            depth,
+            lr: 1e-2,
+            warmup: 0,
+            ranks: cal_r,
+        };
+        let mut exec = HostExecutor::new(vocab, 8, seed);
+        let source = super::smoke_source(format, corpus, window, seed)?;
+        let (metrics, _) = pipeline::run(&cfg, sp, source, &mut exec)?;
+        Ok(metrics)
+    };
+    let tokens_run = run_model(spec.clone())?;
+    let cal_run = run_model(spec.clone().with_cost_model(CostModel::calibrated(min_obs)))?;
+    for (s, m) in tokens_run.iter().zip(&cal_run) {
+        anyhow::ensure!(
+            s.tree_tokens == m.tree_tokens && s.flat_tokens == m.flat_tokens,
+            "cost model step {}: calibrated pricing changed the global batch itself",
+            s.step
+        );
+        let err = (s.loss - m.loss).abs();
+        anyhow::ensure!(
+            err <= LOSS_RTOL * (s.loss.abs() + 1.0),
+            "cost model step {}: calibrated loss {} diverged from token-priced loss {} \
+             (|err| {err:e}) — repricing may only move trees between ranks",
+            s.step,
+            m.loss,
+            s.loss
+        );
+    }
+    // post-warmup window: by step 6 the calibrated model has seen well
+    // over `min_obs` walls even with pipelined planning lag
+    let warm = 6usize.min(cal_run.len().saturating_sub(1));
+    let mean_err = |ms: &[StepMetrics]| {
+        let tail = &ms[warm..];
+        tail.iter().map(|m| m.cost_model_err).sum::<f64>() / tail.len().max(1) as f64
+    };
+    let tokens_err = mean_err(&tokens_run);
+    let cal_err = mean_err(&cal_run);
+    // soft gate on noisy host walls: a working fit lands at or below the
+    // token baseline on average; only a grossly mispredicting model (or a
+    // broken feedback loop) clears this slack
+    anyhow::ensure!(
+        cal_err <= tokens_err + 1.0,
+        "calibrated cost model regressed: mean |pred-meas|/meas imbalance error \
+         {cal_err:.4} vs token baseline {tokens_err:.4}"
+    );
+    println!(
+        "dist smoke OK: cost model (ranks {cal_r}, tpb {cal_tpb}, {cal_steps} steps, \
+         post-warmup mean |pred-meas|/meas): tokens {tokens_err:.4}, calibrated {cal_err:.4}"
+    );
+
     std::fs::create_dir_all(out).ok();
     let path = out.join("BENCH_distsim.json");
     update_json_file_key(
@@ -193,6 +268,18 @@ pub fn run(
             ("seed", Json::num(seed as f64)),
             ("loss_rtol", Json::num(LOSS_RTOL)),
             ("rows", Json::Arr(rows)),
+            (
+                "cost_model",
+                Json::obj(vec![
+                    ("ranks", Json::num(cal_r as f64)),
+                    ("trees_per_batch", Json::num(cal_tpb as f64)),
+                    ("steps", Json::num(cal_steps as f64)),
+                    ("min_obs", Json::num(min_obs as f64)),
+                    ("warmup_steps", Json::num(warm as f64)),
+                    ("tokens_mean_err", Json::num(tokens_err)),
+                    ("calibrated_mean_err", Json::num(cal_err)),
+                ]),
+            ),
         ]),
         // `projection` is tree-train distsim's sibling section; anything
         // else (older schemas) is pruned

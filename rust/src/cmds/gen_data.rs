@@ -9,43 +9,9 @@
 //! emulating runtimes that log concurrent tasks — the shape that stresses
 //! `max_open_sessions` and the streaming-rollouts `shuffle_window`.
 
-use tree_train::ingest;
+use tree_train::ingest::{self, interleave_sessions};
 use tree_train::tree::gen::{self, Overlap};
 use tree_train::tree::{io, metrics, TrajectoryTree};
-
-/// Round-robin the records of up to `group` adjacent sessions: with
-/// per-session record runs `[a a a] [b b] [c c c]` and `group = 2` the
-/// output is `a b a b a  c c c` — deterministic, so smoke tests stay
-/// reproducible.
-fn interleave_sessions(
-    per_session: Vec<Vec<ingest::RolloutRecord>>,
-    group: usize,
-) -> Vec<ingest::RolloutRecord> {
-    let group = group.max(1);
-    let mut out = Vec::new();
-    let mut sessions = per_session.into_iter();
-    loop {
-        // consume the next group of sessions by value (no record clones)
-        let mut queues: Vec<std::collections::VecDeque<_>> =
-            sessions.by_ref().take(group).map(Into::into).collect();
-        if queues.is_empty() {
-            break;
-        }
-        loop {
-            let mut emitted = false;
-            for q in &mut queues {
-                if let Some(r) = q.pop_front() {
-                    out.push(r);
-                    emitted = true;
-                }
-            }
-            if !emitted {
-                break;
-            }
-        }
-    }
-    out
-}
 
 #[allow(clippy::too_many_arguments)]
 pub fn run(

@@ -2,14 +2,19 @@
 //!
 //! Streams `--in rollouts.jsonl` (one [`RolloutRecord`] per line) through
 //! the per-session radix trie and writes `--out trees.jsonl` tree by tree,
-//! so neither side of the conversion is ever fully resident.  Prints the
-//! measured prefix-reuse ratio; `--stats` adds the full dedup breakdown and
-//! `--stats-json FILE` persists it for CI-style assertions.
+//! so neither side of the conversion is ever fully resident.  With
+//! `--ingest-threads N` the fold runs across N session-sharded folder
+//! threads — the output file is bit-identical at any thread count, only
+//! wall time changes.  Prints the measured prefix-reuse ratio and fold
+//! throughput; `--stats` adds the full dedup breakdown (plus per-shard
+//! subtotals when threaded) and `--stats-json FILE` persists everything
+//! for CI-style assertions.
 
 use std::io::Write as _;
 use std::path::Path;
 
-use tree_train::ingest::{ingest_stream, IngestConfig, RolloutReader};
+use tree_train::ingest::{ingest_stream_parallel, IngestConfig};
+use tree_train::util::json::Json;
 
 pub fn run(
     input: &Path,
@@ -19,14 +24,22 @@ pub fn run(
     stats_json: Option<&Path>,
 ) -> anyhow::Result<()> {
     // open the input first: a bad --in must not truncate an existing --out
-    let reader = RolloutReader::open(input)?;
+    let src = std::fs::File::open(input)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", input.display()))?;
     let f = std::fs::File::create(output)?;
     let mut w = std::io::BufWriter::new(f);
-    let stats = ingest_stream(reader, &cfg, |tree| {
-        writeln!(w, "{}", tree.to_json().to_string())?;
-        Ok(())
-    })?;
+    let report = ingest_stream_parallel(
+        src,
+        &input.display().to_string(),
+        &cfg,
+        cfg.threads,
+        |tree| {
+            writeln!(w, "{}", tree.to_json().to_string())?;
+            Ok(())
+        },
+    )?;
     w.flush()?;
+    let stats = &report.stats;
 
     println!(
         "ingested {} rollouts ({} sessions) -> {} trees: {} -> {} tokens, \
@@ -37,6 +50,13 @@ pub fn run(
         stats.rollout_tokens_in,
         stats.tree_tokens_out,
         stats.reuse_ratio()
+    );
+    println!(
+        "  {} thread(s): {:.1} ms fold, {:.0} tok/s, {:.0} trees/s",
+        report.threads,
+        report.wall_ms,
+        report.tokens_per_sec(),
+        report.trees_per_sec()
     );
     if stats.reuse_ratio() <= 1.0 {
         println!(
@@ -49,9 +69,30 @@ pub fn run(
             "  nodes: {}  splits: {}  subsumed records: {}  trimmed tokens: {}",
             stats.nodes_out, stats.split_events, stats.subsumed_records, stats.trimmed_tokens
         );
+        if report.threads > 1 {
+            for (i, s) in report.per_shard.iter().enumerate() {
+                println!(
+                    "  shard {i}: {} sessions, {} records, {} tokens, {} trees",
+                    s.sessions, s.records, s.rollout_tokens, s.trees
+                );
+            }
+        }
     }
     if let Some(p) = stats_json {
-        std::fs::write(p, stats.to_json().to_string_pretty())?;
+        // the flat IngestStats keys (what ingest-smoke asserts on) plus the
+        // additive throughput/shard fields of the parallel report
+        let mut j = stats.to_json();
+        if let Json::Obj(kv) = &mut j {
+            kv.push(("threads".into(), Json::num(report.threads as f64)));
+            kv.push(("wall_ms".into(), Json::num(report.wall_ms)));
+            kv.push(("tokens_per_sec".into(), Json::num(report.tokens_per_sec())));
+            kv.push(("trees_per_sec".into(), Json::num(report.trees_per_sec())));
+            kv.push((
+                "per_shard".into(),
+                Json::Arr(report.per_shard.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
+        std::fs::write(p, j.to_string_pretty())?;
         println!("-> {}", p.display());
     }
     Ok(())

@@ -173,6 +173,10 @@ struct Subtree<B> {
     device_tokens: usize,
     /// Total merge wall time accumulated inside this subtree.
     merge_ms: f64,
+    /// Per-rank execute wall times `(rank, ms)` gathered inside this
+    /// subtree — at the root, one entry per rank: the measurement the
+    /// calibrated cost model learns from.
+    walls: Vec<(usize, f64)>,
     /// Latest execute-finish instant inside this subtree (for the
     /// overlap accounting: merges before this instant hid behind
     /// still-executing ranks).
@@ -202,6 +206,11 @@ pub struct RankReduce<B> {
     pub acc: B,
     /// Device tokens dispatched across all ranks.
     pub device_tokens: usize,
+    /// Measured per-rank execute wall (ms), indexed by rank — the feedback
+    /// signal for the calibrated cost model
+    /// ([`crate::trainer::planner::ShardedPlan::observe_walls`]) and the
+    /// measured side of the `cost_model_err` metric.
+    pub rank_walls: Vec<f64>,
     /// Total merge work across the reduce tree (sum of merge wall times on
     /// every worker; 0 for a single rank).
     pub reduce_ms: f64,
@@ -291,10 +300,12 @@ impl<W: RankWorker> RankPool<W> {
         let seq = self.seq;
         match &mut self.inner {
             PoolInner::Inline(w) => {
+                let t_exec = Instant::now();
                 let (acc, device_tokens) = w.execute(0, &plan.ranks[0])?;
                 Ok(RankReduce {
                     acc,
                     device_tokens,
+                    rank_walls: vec![t_exec.elapsed().as_secs_f64() * 1e3],
                     reduce_ms: 0.0,
                     reduce_overlap_ms: 0.0,
                     reduce_depth: 0,
@@ -317,9 +328,14 @@ impl<W: RankWorker> RankPool<W> {
                 let sub = msg.payload?;
                 let tail_ms =
                     msg.reduce_done.saturating_duration_since(sub.exec_end).as_secs_f64() * 1e3;
+                let mut rank_walls = vec![0.0f64; plan.n_ranks()];
+                for (r, w) in &sub.walls {
+                    rank_walls[*r] = *w;
+                }
                 Ok(RankReduce {
                     acc: sub.acc,
                     device_tokens: sub.device_tokens,
+                    rank_walls,
                     reduce_ms: sub.merge_ms,
                     reduce_overlap_ms: (sub.merge_ms - tail_ms).max(0.0),
                     reduce_depth: reduce_depth(plan.n_ranks()),
@@ -431,6 +447,7 @@ fn worker_loop<W: RankWorker>(
                 let mut sub: crate::Result<Subtree<W::Acc>> = match deferred.take() {
                     Some(e) => Err(e),
                     None => {
+                        let t_exec = Instant::now();
                         match catch_unwind(AssertUnwindSafe(|| {
                             state.execute(rank, &plan.ranks[rank])
                         })) {
@@ -438,6 +455,7 @@ fn worker_loop<W: RankWorker>(
                                 acc,
                                 device_tokens,
                                 merge_ms: 0.0,
+                                walls: vec![(rank, t_exec.elapsed().as_secs_f64() * 1e3)],
                                 exec_end: Instant::now(),
                             }),
                             Ok(Err(e)) => Err(e),
@@ -460,6 +478,7 @@ fn worker_loop<W: RankWorker>(
                                 acc: b_acc,
                                 device_tokens: b_tokens,
                                 merge_ms: b_merge,
+                                walls: b_walls,
                                 exec_end: b_end,
                             } = b;
                             let mut panicked = false;
@@ -472,6 +491,7 @@ fn worker_loop<W: RankWorker>(
                                 } else {
                                     a.merge_ms += t0.elapsed().as_secs_f64() * 1e3 + b_merge;
                                     a.device_tokens += b_tokens;
+                                    a.walls.extend(b_walls);
                                     if b_end > a.exec_end {
                                         a.exec_end = b_end;
                                     }
@@ -606,10 +626,12 @@ impl TrainerPool {
                     "{}-rank plan on a single-rank pool (rank count is fixed per run)",
                     sharded.n_ranks()
                 );
+                let t_exec = Instant::now();
                 let (acc, device_tokens) = run_rank(trainer, &sharded.ranks[0])?;
                 RankReduce {
                     acc,
                     device_tokens,
+                    rank_walls: vec![t_exec.elapsed().as_secs_f64() * 1e3],
                     reduce_ms: 0.0,
                     reduce_overlap_ms: 0.0,
                     reduce_depth: 0,
@@ -617,6 +639,11 @@ impl TrainerPool {
             }
             Some(pool) => pool.execute(sharded)?,
         };
+        // cost-model feedback: score the plan's predicted imbalance against
+        // the measured per-rank walls, then feed the walls back as
+        // regression rows (no-op under the default token model)
+        let cost_model_err = sharded.cost_model_err(&reduced.rank_walls);
+        sharded.observe_walls(&reduced.rank_walls);
         let loss = reduced.acc.mean_loss();
         let weight_sum = reduced.acc.weight_sum;
         let exec_calls = reduced.acc.exec_calls;
@@ -650,6 +677,8 @@ impl TrainerPool {
             reduce_overlap_ms: reduced.reduce_overlap_ms,
             reduce_depth: reduced.reduce_depth as u64,
             rank_imbalance: sharded.rank_imbalance(),
+            ingest_ms: 0.0,
+            cost_model_err,
         })
     }
 
@@ -781,6 +810,10 @@ mod tests {
         assert_eq!(r.acc, "((0+1)+(2+3))");
         assert_eq!(r.device_tokens, 4);
         assert_eq!(r.reduce_depth, 2);
+        assert_eq!(r.rank_walls.len(), 4, "one measured wall per rank");
+        assert!(r.rank_walls.iter().all(|&w| w > 0.0), "walls: {:?}", r.rank_walls);
+        // the trace workers sleep longest on rank 0: walls must reflect it
+        assert!(r.rank_walls[0] > r.rank_walls[3], "walls: {:?}", r.rank_walls);
         // and again on the same (persistent) pool
         let r2 = pool.execute(&plan).unwrap();
         assert_eq!(r2.acc, "((0+1)+(2+3))");
@@ -848,6 +881,7 @@ mod tests {
         let r = pool.execute(&plan).unwrap();
         assert_eq!(r.acc, 1);
         assert_eq!(r.device_tokens, 7);
+        assert_eq!(r.rank_walls.len(), 1);
         assert_eq!(r.reduce_ms, 0.0);
         assert_eq!(r.reduce_overlap_ms, 0.0);
         assert_eq!(r.reduce_depth, 0);
@@ -995,6 +1029,8 @@ mod tests {
                 flat_tokens: 0,
             })],
             loads: vec![0],
+            rank_feats: vec![[0.0; 4]],
+            cost: crate::partition::CostModel::Tokens,
         });
         let mut pool = RankPool::new(vec![TreeOnly]).unwrap();
         let err = pool.execute(&plan).unwrap_err();

@@ -60,8 +60,10 @@ pub struct RunConfig {
     /// radix trie at load time so a run trains straight from agentic logs.
     pub corpus_format: CorpusFormat,
     /// Ingestion knobs for the rollouts format (JSON key `ingest`:
-    /// `{"max_seq_len": N, "max_open_sessions": N}`; defaults otherwise —
-    /// raise `max_open_sessions` for heavily interleaved logs).
+    /// `{"max_seq_len": N, "max_open_sessions": N, "threads": N}`;
+    /// defaults otherwise — raise `max_open_sessions` for heavily
+    /// interleaved logs, `threads` for parallel folding with bit-identical
+    /// output).
     pub ingest: crate::ingest::IngestConfig,
     pub synthetic: Option<SyntheticSpec>,
     pub metrics_csv: Option<PathBuf>,
@@ -81,6 +83,13 @@ pub struct RunConfig {
     /// byte-for-byte; `N` runs per-rank executor workers with
     /// deterministic fixed-order gradient reduction (docs/distributed.md).
     pub ranks: usize,
+    /// Cost model pricing the sharder/packer (`"tokens"` default:
+    /// packed-token counts, bit-identical to the seed; `"calibrated"`:
+    /// an online least-squares fit of measured per-rank execute walls —
+    /// docs/distributed.md#calibrated-cost-model).  Calibrated runs price
+    /// from wall clock and are NOT run-to-run bit-identical; the global
+    /// batch (and thus the update) is unchanged, only rank placement.
+    pub cost_model: CostModelChoice,
 }
 
 impl RunConfig {
@@ -113,6 +122,7 @@ impl RunConfig {
                             .get("max_open_sessions")
                             .and_then(|x| x.as_usize())
                             .unwrap_or(crate::ingest::IngestConfig::default().max_open_sessions),
+                        threads: i.get("threads").and_then(|x| x.as_usize()).unwrap_or(1),
                     };
                     anyhow::ensure!(
                         cfg.max_seq_len != Some(0),
@@ -122,6 +132,7 @@ impl RunConfig {
                         cfg.max_open_sessions >= 1,
                         "ingest.max_open_sessions must be >= 1"
                     );
+                    anyhow::ensure!(cfg.threads >= 1, "ingest.threads must be >= 1");
                     cfg
                 }
                 None => Default::default(),
@@ -135,6 +146,11 @@ impl RunConfig {
             pipeline_depth: v.get("pipeline_depth").and_then(|x| x.as_usize()).unwrap_or(1),
             shuffle_window: v.get("shuffle_window").and_then(|x| x.as_usize()).unwrap_or(0),
             ranks: v.get("ranks").and_then(|x| x.as_usize()).unwrap_or(1),
+            cost_model: match v.get("cost_model").and_then(|x| x.as_str()).unwrap_or("tokens") {
+                "tokens" => CostModelChoice::Tokens,
+                "calibrated" => CostModelChoice::Calibrated,
+                other => anyhow::bail!("unknown cost_model {other} (tokens|calibrated)"),
+            },
         };
         anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
@@ -153,6 +169,16 @@ pub enum CorpusFormat {
     Trees,
     /// JSONL of linear `RolloutRecord`s, ingested at load time.
     Rollouts,
+}
+
+/// Which cost model prices the LPT sharder and (once warm) the FFD packer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostModelChoice {
+    /// Packed-token counts — the seed's exact behavior (default).
+    Tokens,
+    /// Online least-squares calibration from measured per-rank walls
+    /// ([`crate::partition::CostModel::calibrated`]).
+    Calibrated,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -434,7 +460,12 @@ impl Coordinator {
             warmup: self.cfg.warmup,
             ranks: self.cfg.ranks,
         };
-        let spec = self.trainer.plan_spec();
+        let mut spec = self.trainer.plan_spec();
+        if self.cfg.cost_model == CostModelChoice::Calibrated {
+            // warm-up threshold: two full multi-rank steps at ranks=4
+            // before the fit replaces token pricing
+            spec = spec.with_cost_model(crate::partition::CostModel::calibrated(8));
+        }
         // the run's persistent rank pool: replicas + worker threads are
         // created HERE, once — never per optimizer step
         let pool = dist::TrainerPool::new(&self.trainer, self.cfg.ranks)?;

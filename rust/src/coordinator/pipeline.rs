@@ -78,6 +78,10 @@ pub struct PlannedStep {
     pub plan: Arc<ShardedPlan>,
     /// Host planning time (batch assembly + sharding + packing).
     pub plan_ms: f64,
+    /// Ingest time the corpus source spent producing this step's batch
+    /// (streaming rollout folds; 0 for tree corpora) — drained from the
+    /// source so the step that triggered the fold carries its cost.
+    pub ingest_ms: f64,
 }
 
 /// The execute half of the loop: consumes plans in step order.
@@ -167,6 +171,7 @@ impl Planner {
         self.next_step += 1;
         let t0 = Instant::now();
         let batch = self.source.next_batch(self.cfg.trees_per_batch)?;
+        let ingest_ms = self.source.take_ingest_ms();
         let lr = cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
         let plan = match self.cfg.mode {
             Mode::Tree => self.spec.plan_sharded_tree(&batch, self.cfg.ranks)?,
@@ -178,6 +183,7 @@ impl Planner {
             trees: batch.len(),
             plan: Arc::new(plan),
             plan_ms: t0.elapsed().as_secs_f64() * 1e3,
+            ingest_ms,
         })
     }
 }
@@ -205,6 +211,7 @@ pub fn run<E: StepExecutor>(
             let mut m = exec.execute(&planned)?;
             m.plan_ms = planned.plan_ms;
             m.stall_ms = planned.plan_ms;
+            m.ingest_ms = planned.ingest_ms;
             plan_total += m.plan_ms;
             stall_total += m.stall_ms;
             exec.on_step(&m)?;
@@ -256,6 +263,7 @@ pub fn run<E: StepExecutor>(
             let mut m = exec.execute(&planned)?;
             m.plan_ms = planned.plan_ms;
             m.stall_ms = stall_ms;
+            m.ingest_ms = planned.ingest_ms;
             plan_total += m.plan_ms;
             stall_total += m.stall_ms;
             exec.on_step(&m)?;
@@ -469,12 +477,14 @@ impl StepExecutor for HostExecutor {
         let reduced = if n == 1 {
             // the seed single-executor path: inline on the caller thread
             // against the primary model, byte-for-byte, zero spawns
+            let t_exec = Instant::now();
             let mut acc = HostRankAcc::fresh(self.model.embed.len());
             let tokens =
                 run_host_rank(&self.model, self.run_model, &planned.plan.ranks[0], &mut acc)?;
             dist::RankReduce {
                 acc,
                 device_tokens: tokens,
+                rank_walls: vec![t_exec.elapsed().as_secs_f64() * 1e3],
                 reduce_ms: 0.0,
                 reduce_overlap_ms: 0.0,
                 reduce_depth: 0,
@@ -493,6 +503,11 @@ impl StepExecutor for HostExecutor {
             let pool = self.pool.as_mut().expect("pool created above");
             pool.execute(&planned.plan)?
         };
+        // cost-model feedback, same seam as the XLA TrainerPool: score the
+        // predicted imbalance against measured walls, then feed the walls
+        // back (no-op under the default token model)
+        let cost_model_err = planned.plan.cost_model_err(&reduced.rank_walls);
+        planned.plan.observe_walls(&reduced.rank_walls);
         let acc = reduced.acc;
         // step fingerprint: step id + LR bits + the bracket-folded digest
         let mut h = 0xcbf29ce484222325u64;
@@ -544,6 +559,8 @@ impl StepExecutor for HostExecutor {
             reduce_overlap_ms: reduced.reduce_overlap_ms,
             reduce_depth: reduced.reduce_depth as u64,
             rank_imbalance: planned.plan.rank_imbalance(),
+            ingest_ms: 0.0,
+            cost_model_err,
         })
     }
 

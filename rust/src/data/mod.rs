@@ -64,6 +64,14 @@ pub trait CorpusSource: Send {
     /// session flush for rollout corpora; the corpus size for resident).
     fn peak_resident(&self) -> usize;
 
+    /// Milliseconds spent ingesting (reading/folding rollouts) since the
+    /// last call — drained, so the planner can attribute ingest time to
+    /// the step that paid it (`StepMetrics::ingest_ms`).  Sources that
+    /// serve pre-built trees report 0.
+    fn take_ingest_ms(&mut self) -> f64 {
+        0.0
+    }
+
     /// One-line description for run logs.
     fn describe(&self) -> String;
 }

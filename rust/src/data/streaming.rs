@@ -16,7 +16,7 @@ use std::io::BufReader;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::ingest::{IngestConfig, IngestStats, RolloutReader, SessionFolder};
+use crate::ingest::{IngestConfig, IngestStats, ParallelIngest, RolloutReader, SessionFolder};
 use crate::tree::io::{load_corpus_iter, CorpusIter};
 use crate::tree::TrajectoryTree;
 use crate::util::rng::Rng;
@@ -149,11 +149,21 @@ impl CorpusSource for StreamingTreeSource {
 /// session flush in flight) + `max_open_sessions` open tries — never the
 /// corpus.  Each epoch re-folds the file; the fold is deterministic, so so
 /// is the stream.
+///
+/// With `IngestConfig::threads > 1` the fold runs through the sharded
+/// parallel ingester ([`ParallelIngest`], fresh per epoch) instead of the
+/// inline folder.  Its tree order is bit-identical to the single-threaded
+/// fold, so shard composition — and therefore the whole run — does not
+/// depend on the thread count; only ingest wall time does.
 pub struct StreamingRolloutSource {
     path: PathBuf,
     cfg: IngestConfig,
     reader: Option<RolloutReader<BufReader<std::fs::File>>>,
     folder: Option<SessionFolder>,
+    /// Live parallel ingester (`cfg.threads > 1` only; one per epoch).
+    par: Option<ParallelIngest>,
+    /// Fold/pump milliseconds since the last [`CorpusSource::take_ingest_ms`].
+    ingest_ms: f64,
     /// Folded trees not yet sharded (file order; carries the ≤ one-flush
     /// overshoot between shards).
     pending: VecDeque<Arc<TrajectoryTree>>,
@@ -178,6 +188,8 @@ impl StreamingRolloutSource {
             cfg,
             reader: None,
             folder: None,
+            par: None,
+            ingest_ms: 0.0,
             pending: VecDeque::new(),
             rollover_due: false,
             state: ShardState::new(shuffle_window, seed),
@@ -197,9 +209,59 @@ impl StreamingRolloutSource {
         self.state.peak_resident = self.state.peak_resident.max(resident);
     }
 
+    /// Log + record the first full epoch's fold statistics.
+    fn note_first_epoch(&mut self, stats: IngestStats) {
+        if self.stats.is_none() && stats.records_in > 0 {
+            crate::info!(
+                "ingest(stream): {} rollouts ({} sessions) -> {} trees, \
+                 measured prefix-reuse {:.2}x ({} -> {} tokens)",
+                stats.records_in,
+                stats.sessions,
+                stats.trees_out,
+                stats.reuse_ratio(),
+                stats.rollout_tokens_in,
+                stats.tree_tokens_out
+            );
+            self.stats = Some(stats);
+        }
+    }
+
     /// Fold records into `pending` until a full window is buffered or the
-    /// epoch ends; `true` when the epoch ended.
+    /// epoch ends; `true` when the epoch ended.  The wall time spent here
+    /// accumulates into `ingest_ms`.
     fn pump(&mut self) -> crate::Result<bool> {
+        let t0 = std::time::Instant::now();
+        let ended =
+            if self.cfg.threads > 1 { self.pump_parallel() } else { self.pump_serial() };
+        self.ingest_ms += t0.elapsed().as_secs_f64() * 1e3;
+        ended
+    }
+
+    /// Parallel fold: pull trees (in single-thread-identical order) from a
+    /// per-epoch [`ParallelIngest`]; workers pause on backpressure while
+    /// the window is full.
+    fn pump_parallel(&mut self) -> crate::Result<bool> {
+        if self.par.is_none() {
+            self.par = Some(ParallelIngest::spawn_path(&self.path, &self.cfg, self.cfg.threads)?);
+        }
+        while self.pending.len() < self.state.window {
+            // re-borrow per pull so `pending`/`track_peak` stay reachable
+            match self.par.as_mut().expect("just ensured").next_tree() {
+                Some(t) => {
+                    self.pending.push_back(Arc::new(t?));
+                    self.track_peak();
+                }
+                None => {
+                    let report = self.par.take().expect("checked above").finish()?;
+                    self.note_first_epoch(report.stats);
+                    return Ok(true);
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    fn pump_serial(&mut self) -> crate::Result<bool> {
         if self.folder.is_none() {
             self.folder = Some(SessionFolder::new(self.cfg.clone()));
             self.reader = Some(RolloutReader::open(&self.path)?);
@@ -219,19 +281,7 @@ impl StreamingRolloutSource {
                         let mut tail = Vec::new();
                         let stats = folder.finish(&mut tail);
                         debug_assert!(tail.is_empty(), "drained folder has no sessions left");
-                        if self.stats.is_none() && stats.records_in > 0 {
-                            crate::info!(
-                                "ingest(stream): {} rollouts ({} sessions) -> {} trees, \
-                                 measured prefix-reuse {:.2}x ({} -> {} tokens)",
-                                stats.records_in,
-                                stats.sessions,
-                                stats.trees_out,
-                                stats.reuse_ratio(),
-                                stats.rollout_tokens_in,
-                                stats.tree_tokens_out
-                            );
-                            self.stats = Some(stats);
-                        }
+                        self.note_first_epoch(stats);
                         return Ok(true);
                     }
                 }
@@ -281,12 +331,17 @@ impl CorpusSource for StreamingRolloutSource {
         self.state.peak_resident
     }
 
+    fn take_ingest_ms(&mut self) -> f64 {
+        std::mem::take(&mut self.ingest_ms)
+    }
+
     fn describe(&self) -> String {
         format!(
-            "streaming rollouts: {} (window {}, max_open_sessions {})",
+            "streaming rollouts: {} (window {}, max_open_sessions {}, ingest threads {})",
             self.path.display(),
             self.state.window,
-            self.cfg.max_open_sessions
+            self.cfg.max_open_sessions,
+            self.cfg.threads.max(1)
         )
     }
 }
@@ -433,6 +488,35 @@ mod tests {
             "peak {} too high for window {window}",
             src.peak_resident()
         );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rollouts_parallel_threads_do_not_change_the_stream() {
+        let dir = temp_dir("stream-rollouts-par");
+        let (path, _) = rollout_corpus(&dir);
+        let serial_cfg = IngestConfig { max_open_sessions: 3, ..Default::default() };
+        let par_cfg = IngestConfig { threads: 4, ..serial_cfg.clone() };
+        let mut serial = StreamingRolloutSource::open(&path, serial_cfg, 4, 17).unwrap();
+        let mut par = StreamingRolloutSource::open(&path, par_cfg, 4, 17).unwrap();
+        let n = {
+            let (folded, _) = crate::ingest::fold_corpus(
+                &path,
+                &IngestConfig { max_open_sessions: 3, ..Default::default() },
+            )
+            .unwrap();
+            folded.len()
+        };
+        for step in 0..n * 2 {
+            assert_eq!(
+                serial.next_tree().unwrap(),
+                par.next_tree().unwrap(),
+                "parallel ingest changed the stream at position {step}"
+            );
+        }
+        assert_eq!(serial.stats(), par.stats(), "first-epoch stats must match");
+        assert!(par.take_ingest_ms() > 0.0, "fold time must be attributed");
+        assert_eq!(par.take_ingest_ms(), 0.0, "take drains the accumulator");
         std::fs::remove_dir_all(dir).ok();
     }
 }

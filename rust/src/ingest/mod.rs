@@ -27,11 +27,15 @@
 //! Entry points: [`fold_corpus`] (in-memory), [`ingest_stream`]
 //! (tree-at-a-time sink), and the `tree-train ingest` subcommand.
 
+pub mod parallel;
 pub mod record;
 pub mod stream;
 pub mod trie;
 
-pub use record::{records_from_tree, save_rollouts, RolloutRecord};
+pub use parallel::{
+    fold_corpus_parallel, ingest_stream_parallel, ParallelIngest, ParallelIngestReport, ShardStats,
+};
+pub use record::{interleave_sessions, records_from_tree, save_rollouts, RolloutRecord};
 pub use stream::{fold_corpus, ingest_stream, RolloutReader, SessionFolder};
 pub use trie::PrefixStore;
 
@@ -45,16 +49,20 @@ pub struct IngestConfig {
     /// Bounded-memory cap on simultaneously open session tries; the
     /// least-recently-touched session is flushed beyond it.
     pub max_open_sessions: usize,
+    /// Folder threads for parallel ingestion (`ingest/parallel.rs`).
+    /// 1 (the default) folds inline; N > 1 shards sessions across N
+    /// worker threads with bit-identical output.
+    pub threads: usize,
 }
 
 impl Default for IngestConfig {
     fn default() -> Self {
-        Self { max_seq_len: None, max_open_sessions: 64 }
+        Self { max_seq_len: None, max_open_sessions: 64, threads: 1 }
     }
 }
 
 /// Corpus-level dedup accounting (tokens in vs tree tokens out).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct IngestStats {
     pub records_in: u64,
     pub rollout_tokens_in: u64,
@@ -72,6 +80,22 @@ pub struct IngestStats {
 }
 
 impl IngestStats {
+    /// Componentwise accumulate another stats block (a per-flush delta or
+    /// a per-shard subtotal).  Every counter is a sum, so accumulation
+    /// order cannot change the result — which is what makes the parallel
+    /// shard-merge stats bit-identical to the single-threaded fold.
+    pub fn absorb(&mut self, d: &IngestStats) {
+        self.records_in += d.records_in;
+        self.rollout_tokens_in += d.rollout_tokens_in;
+        self.sessions += d.sessions;
+        self.trees_out += d.trees_out;
+        self.nodes_out += d.nodes_out;
+        self.tree_tokens_out += d.tree_tokens_out;
+        self.split_events += d.split_events;
+        self.subsumed_records += d.subsumed_records;
+        self.trimmed_tokens += d.trimmed_tokens;
+    }
+
     /// Measured prefix-reuse ratio: linear tokens logged per unique tree
     /// token kept — the ingestion-side `N_flat / N_tree` (> 1.0 whenever
     /// any prefix was shared; == 1.0 for branch-free corpora).

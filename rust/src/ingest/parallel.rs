@@ -1,0 +1,779 @@
+//! Sharded parallel ingestion: N folder threads by session hash, with
+//! output **bit-identical** to the single-threaded [`fold_corpus`] at any
+//! thread count.
+//!
+//! Sessions never split across shards (distinct sessions never merge, so
+//! per-shard tries are fully independent — the same §3.4 whole-unit
+//! argument as whole-tree rank sharding).  What *could* diverge from the
+//! single-threaded fold is the LRU eviction schedule: a per-shard
+//! `max_open_sessions` cap would evict at different record counts than
+//! the global single-threaded window.  The design therefore splits roles:
+//!
+//! ```text
+//!           raw line batches (round-robin)        parsed records
+//! router ────────────────────────────────▶ workers ─────────────▶ router
+//!   │   (re-sequenced by batch id; the router replays the EXACT
+//!   │    single-threaded SessionLru schedule over session ids only)
+//!   ├── Fold{record}  ─────────────▶ owner shard (session-hash)
+//!   ├── Flush{seq, session} ───────▶ owner shard   (eviction command)
+//!   ▼
+//! workers emit (seq, trees, stats-delta) ──▶ merger (the caller), which
+//! releases trees in global seq order — the single-threaded flush order.
+//! ```
+//!
+//! * **Parsing** is data-parallel: the router round-robins raw line
+//!   batches; workers JSON-parse them off the critical path.
+//! * **Folding** is session-parallel: each worker owns the
+//!   [`PrefixStore`]s of the sessions that hash to it.
+//! * **Eviction** is centrally sequenced: the router runs the identical
+//!   [`SessionLru`](super::stream) over session ids (payload `()`), so
+//!   every flush happens after exactly the same records as the
+//!   single-threaded folder, and carries a global sequence number.
+//!   Per-shard job channels are FIFO, so a flush always lands before a
+//!   later reopen of the same session.
+//! * **Stats** are per-flush deltas (shared [`flush_delta`] accounting)
+//!   summed by the merger — sums are order-independent, so `IngestStats`
+//!   is bit-identical too.
+//! * **Errors** reproduce the single-threaded abort: the error with the
+//!   lowest line number wins (parse errors are detected in re-sequenced
+//!   order; late fold errors are min-merged during drain), decorated
+//!   `label:line` like [`JsonlReader`](crate::util::jsonl::JsonlReader).
+//!
+//! Backpressure: worker→merger flush batches flow through a bounded
+//! channel and the router caps both in-flight parse batches and
+//! outstanding (dispatched-but-unfolded) records via worker credits, so
+//! memory stays bounded by the open tries + a constant number of batches
+//! even when the consumer pauses (e.g. a streaming source whose shuffle
+//! window is full).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::record::RolloutRecord;
+use super::stream::{flush_delta, ingest_stream, RolloutReader, SessionLru};
+use super::trie::PrefixStore;
+use super::{IngestConfig, IngestStats};
+use crate::tree::TrajectoryTree;
+use crate::util::json::Json;
+use crate::util::jsonl::LineReader;
+
+/// Raw bytes per parse batch (plus a line-count cap) — large enough to
+/// amortize channel traffic, small enough to keep re-sequencing latency
+/// low.
+const BATCH_BYTES: usize = 64 * 1024;
+const BATCH_LINES: usize = 256;
+/// Worker fold-credit granularity (outstanding-record accounting).
+const CREDIT_EVERY: u64 = 32;
+/// Bounded depth of the worker→merger flush channel.
+const OUT_DEPTH: usize = 64;
+
+/// Per-shard ingestion subtotals (observability for skew: a hot session
+/// hash shows up as one shard folding most of the records).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// Session flushes this shard emitted.
+    pub sessions: u64,
+    pub records: u64,
+    pub rollout_tokens: u64,
+    pub trees: u64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sessions", Json::num(self.sessions as f64)),
+            ("records", Json::num(self.records as f64)),
+            ("rollout_tokens", Json::num(self.rollout_tokens as f64)),
+            ("trees", Json::num(self.trees as f64)),
+        ])
+    }
+}
+
+/// Outcome of a parallel ingestion run: the corpus-level stats (identical
+/// to the single-threaded fold), per-shard subtotals, and measured fold
+/// throughput.
+#[derive(Debug)]
+pub struct ParallelIngestReport {
+    pub stats: IngestStats,
+    pub threads: usize,
+    pub per_shard: Vec<ShardStats>,
+    pub wall_ms: f64,
+}
+
+impl ParallelIngestReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.stats.rollout_tokens_in as f64 / (self.wall_ms / 1e3).max(1e-9)
+    }
+
+    pub fn trees_per_sec(&self) -> f64 {
+        self.stats.trees_out as f64 / (self.wall_ms / 1e3).max(1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec())),
+            ("trees_per_sec", Json::num(self.trees_per_sec())),
+            ("stats", self.stats.to_json()),
+            (
+                "per_shard",
+                Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Stable session→shard assignment (FNV-1a; must not vary run to run, or
+/// shard subtotals would).
+fn shard_of(session: &str, threads: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in session.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % threads as u64) as usize
+}
+
+/// `(line_no, parsed record)` pairs, in line order within a batch.
+type ParsedRecords = Vec<(usize, RolloutRecord)>;
+/// An error pinned to its 1-based corpus line.
+type LineError = (usize, anyhow::Error);
+
+enum Job {
+    /// Raw line batch to JSON-parse (round-robin; `first_line` is 1-based).
+    Parse { batch_id: u64, first_line: usize, raw: Vec<u8> },
+    /// Fold one record of a session this shard owns.
+    Fold { line_no: usize, rec: RolloutRecord },
+    /// Router-commanded eviction: emit this session's store under the
+    /// global flush sequence number `seq`.
+    Flush { seq: u64, session: String },
+    Finish,
+}
+
+enum Up {
+    Parsed {
+        batch_id: u64,
+        records: ParsedRecords,
+        /// First parse failure inside the batch (later lines discarded —
+        /// the single-threaded reader would never have reached them).
+        err: Option<LineError>,
+    },
+    /// Fold-credit return: `n` dispatched records finished folding.
+    Folded { n: u64 },
+    FoldErr { line_no: usize, err: anyhow::Error },
+}
+
+enum FlushOut {
+    Trees { seq: u64, trees: Vec<TrajectoryTree>, delta: IngestStats },
+    Done { shard: usize, stats: ShardStats },
+}
+
+struct RouterOut {
+    flushes: u64,
+    err: Option<anyhow::Error>,
+}
+
+fn parse_line(line: &[u8]) -> crate::Result<RolloutRecord> {
+    let s = std::str::from_utf8(line).map_err(|e| anyhow::anyhow!("invalid utf-8: {e}"))?;
+    Json::parse(s).and_then(|v| RolloutRecord::from_json(&v))
+}
+
+fn worker(
+    shard: usize,
+    label: String,
+    max_seq_len: Option<usize>,
+    jobs: mpsc::Receiver<Job>,
+    up: mpsc::Sender<Up>,
+    out: mpsc::SyncSender<FlushOut>,
+) {
+    let mut stores: HashMap<String, PrefixStore> = HashMap::new();
+    let mut stats = ShardStats::default();
+    let mut credit = 0u64;
+    for job in jobs {
+        match job {
+            Job::Parse { batch_id, first_line, raw } => {
+                let mut records = Vec::new();
+                let mut err = None;
+                for (i, line) in raw.split(|&b| b == b'\n').enumerate() {
+                    let line_no = first_line + i;
+                    if line.iter().all(|b| b.is_ascii_whitespace()) {
+                        continue;
+                    }
+                    match parse_line(line) {
+                        Ok(rec) => records.push((line_no, rec)),
+                        Err(e) => {
+                            err = Some((line_no, anyhow::anyhow!("{label}:{line_no}: {e}")));
+                            break;
+                        }
+                    }
+                }
+                if up.send(Up::Parsed { batch_id, records, err }).is_err() {
+                    return;
+                }
+            }
+            Job::Fold { line_no, rec } => {
+                if !stores.contains_key(&rec.session) {
+                    stores.insert(rec.session.clone(), PrefixStore::new());
+                }
+                let store = stores.get_mut(&rec.session).expect("store just ensured");
+                if let Err(e) = store.insert(&rec.tokens, &rec.trainable, &rec.advantage) {
+                    let e = anyhow::anyhow!("{label}:{line_no}: {e}");
+                    if up.send(Up::FoldErr { line_no, err: e }).is_err() {
+                        return;
+                    }
+                }
+                credit += 1;
+                if credit >= CREDIT_EVERY {
+                    if up.send(Up::Folded { n: credit }).is_err() {
+                        return;
+                    }
+                    credit = 0;
+                }
+            }
+            Job::Flush { seq, session } => {
+                if credit > 0 {
+                    if up.send(Up::Folded { n: credit }).is_err() {
+                        return;
+                    }
+                    credit = 0;
+                }
+                let store = stores.remove(&session).expect("flush commanded for a closed session");
+                let (trees, delta) = flush_delta(store, max_seq_len);
+                stats.sessions += delta.sessions;
+                stats.records += delta.records_in;
+                stats.rollout_tokens += delta.rollout_tokens_in;
+                stats.trees += delta.trees_out;
+                if out.send(FlushOut::Trees { seq, trees, delta }).is_err() {
+                    return;
+                }
+            }
+            Job::Finish => break,
+        }
+    }
+    let _ = out.send(FlushOut::Done { shard, stats });
+}
+
+struct Router<R: Read> {
+    lines: LineReader<R>,
+    label: String,
+    threads: usize,
+    cap_lru: SessionLru<()>,
+    job_txs: Vec<mpsc::Sender<Job>>,
+    up_rx: mpsc::Receiver<Up>,
+    // sequencing state
+    pending: HashMap<u64, (ParsedRecords, Option<LineError>)>,
+    next_seq_batch: u64,
+    inflight_batches: usize,
+    outstanding: u64,
+    fold_cap: u64,
+    flush_seq: u64,
+    line_no: usize,
+    first_err: Option<LineError>,
+}
+
+impl<R: Read> Router<R> {
+    fn keep_err(&mut self, line_no: usize, err: anyhow::Error) {
+        match &self.first_err {
+            Some((l, _)) if *l <= line_no => {}
+            _ => self.first_err = Some((line_no, err)),
+        }
+    }
+
+    fn handle_up(&mut self, msg: Up) {
+        match msg {
+            Up::Parsed { batch_id, records, err } => {
+                self.inflight_batches -= 1;
+                self.pending.insert(batch_id, (records, err));
+            }
+            Up::Folded { n } => self.outstanding -= n,
+            Up::FoldErr { line_no, err } => self.keep_err(line_no, err),
+        }
+    }
+
+    /// Sequence parsed batches in dispatch order through the LRU replay,
+    /// dispatching folds and commanded flushes.  Returns `false` once the
+    /// run must abort (an error has been reached in line order).
+    fn sequence_ready(&mut self) -> bool {
+        while let Some((records, err)) = self.pending.remove(&self.next_seq_batch) {
+            for (line_no, rec) in records {
+                if self.cap_lru.get_mut(&rec.session).is_none() {
+                    if let Some((evicted, ())) = self.cap_lru.insert(&rec.session, ()) {
+                        let shard = shard_of(&evicted, self.threads);
+                        let seq = self.flush_seq;
+                        self.flush_seq += 1;
+                        if self.job_txs[shard].send(Job::Flush { seq, session: evicted }).is_err()
+                        {
+                            return false;
+                        }
+                    }
+                }
+                let shard = shard_of(&rec.session, self.threads);
+                self.outstanding += 1;
+                if self.job_txs[shard].send(Job::Fold { line_no, rec }).is_err() {
+                    return false;
+                }
+            }
+            if let Some((line_no, err)) = err {
+                self.keep_err(line_no, err);
+                return false;
+            }
+            self.next_seq_batch += 1;
+        }
+        self.first_err.is_none()
+    }
+
+    fn run(mut self) -> RouterOut {
+        let max_inflight = 2 * self.threads + 4;
+        let mut dispatch_id = 0u64;
+        let mut read_err: Option<LineError> = None;
+        let mut alive = true;
+
+        'read: loop {
+            // assemble one raw batch (blank lines included: they advance
+            // the line numbering exactly like the single-threaded reader)
+            let mut raw = Vec::with_capacity(BATCH_BYTES + 256);
+            let mut lines_in_batch = 0usize;
+            let first_line = self.line_no + 1;
+            loop {
+                match self.lines.next_line() {
+                    None => break,
+                    Some(Err(e)) => {
+                        read_err = Some((
+                            self.line_no + 1,
+                            anyhow::anyhow!("{}:{}: read error: {e}", self.label, self.line_no + 1),
+                        ));
+                        break;
+                    }
+                    Some(Ok(line)) => {
+                        if lines_in_batch > 0 {
+                            raw.push(b'\n');
+                        }
+                        raw.extend_from_slice(line);
+                        self.line_no += 1;
+                        lines_in_batch += 1;
+                        if raw.len() >= BATCH_BYTES || lines_in_batch >= BATCH_LINES {
+                            break;
+                        }
+                    }
+                }
+            }
+            if lines_in_batch > 0 {
+                let shard = (dispatch_id % self.threads as u64) as usize;
+                let job = Job::Parse { batch_id: dispatch_id, first_line, raw };
+                dispatch_id += 1;
+                self.inflight_batches += 1;
+                if self.job_txs[shard].send(job).is_err() {
+                    alive = false;
+                    break 'read;
+                }
+            } else {
+                break 'read; // EOF or read error: stop dispatching
+            }
+            if read_err.is_some() {
+                break 'read;
+            }
+            // stay within the in-flight windows; every wait also advances
+            // sequencing so fold/flush dispatch keeps flowing
+            while self.inflight_batches >= max_inflight || self.outstanding >= self.fold_cap {
+                match self.up_rx.recv() {
+                    Ok(m) => self.handle_up(m),
+                    Err(_) => {
+                        alive = false;
+                        break 'read;
+                    }
+                }
+                if !self.sequence_ready() {
+                    alive = false;
+                    break 'read;
+                }
+            }
+            while let Ok(m) = self.up_rx.try_recv() {
+                self.handle_up(m);
+            }
+            if !self.sequence_ready() {
+                alive = false;
+                break 'read;
+            }
+        }
+
+        // wait for in-flight parses, sequencing as they land
+        while alive && self.inflight_batches > 0 {
+            match self.up_rx.recv() {
+                Ok(m) => self.handle_up(m),
+                Err(_) => break,
+            }
+            if !self.sequence_ready() {
+                alive = false;
+            }
+        }
+        if let Some((l, e)) = read_err.take() {
+            self.keep_err(l, e);
+            alive = false;
+        }
+        if alive && self.first_err.is_none() {
+            // end of corpus: flush every open session in last-touch order
+            // — the exact SessionFolder::finish schedule
+            for (session, ()) in self.cap_lru.drain() {
+                let shard = shard_of(&session, self.threads);
+                let seq = self.flush_seq;
+                self.flush_seq += 1;
+                if self.job_txs[shard].send(Job::Flush { seq, session }).is_err() {
+                    break;
+                }
+            }
+        }
+        for tx in &self.job_txs {
+            let _ = tx.send(Job::Finish);
+        }
+        let flushed = self.flush_seq;
+        let Router { job_txs, up_rx, mut first_err, .. } = self;
+        drop(job_txs);
+        // drain stragglers so a low-line fold error can still win
+        while let Ok(m) = up_rx.recv() {
+            if let Up::FoldErr { line_no, err } = m {
+                match &first_err {
+                    Some((l, _)) if *l <= line_no => {}
+                    _ => first_err = Some((line_no, err)),
+                }
+            }
+        }
+        RouterOut { flushes: flushed, err: first_err.map(|(_, e)| e) }
+    }
+}
+
+/// Handle over a running parallel ingestion: pull trees in deterministic
+/// (single-thread-identical) order with [`Self::next_tree`], then collect
+/// the report with [`Self::finish`].
+pub struct ParallelIngest {
+    out_rx: mpsc::Receiver<FlushOut>,
+    router: Option<std::thread::JoinHandle<RouterOut>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pending: HashMap<u64, (Vec<TrajectoryTree>, IngestStats)>,
+    ready: std::collections::VecDeque<TrajectoryTree>,
+    next_seq: u64,
+    stats: IngestStats,
+    per_shard: Vec<ShardStats>,
+    threads: usize,
+    start: Instant,
+    finished: bool,
+    err: Option<anyhow::Error>,
+}
+
+impl ParallelIngest {
+    pub fn spawn_path(path: &Path, cfg: &IngestConfig, threads: usize) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(Self::spawn_reader(f, &path.display().to_string(), cfg, threads))
+    }
+
+    pub fn spawn_reader<R: Read + Send + 'static>(
+        reader: R,
+        label: &str,
+        cfg: &IngestConfig,
+        threads: usize,
+    ) -> Self {
+        let threads = threads.clamp(1, 64);
+        let (out_tx, out_rx) = mpsc::sync_channel(OUT_DEPTH);
+        let (up_tx, up_rx) = mpsc::channel();
+        let mut job_txs = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for shard in 0..threads {
+            let (tx, rx) = mpsc::channel();
+            job_txs.push(tx);
+            let up = up_tx.clone();
+            let out = out_tx.clone();
+            let label = label.to_string();
+            let max_seq_len = cfg.max_seq_len;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ingest-fold-{shard}"))
+                    .spawn(move || worker(shard, label, max_seq_len, rx, up, out))
+                    .expect("spawn ingest worker"),
+            );
+        }
+        drop(out_tx);
+        drop(up_tx);
+        let router = Router {
+            lines: LineReader::new(reader),
+            label: label.to_string(),
+            threads,
+            cap_lru: SessionLru::new(cfg.max_open_sessions),
+            job_txs,
+            up_rx,
+            pending: HashMap::new(),
+            next_seq_batch: 0,
+            inflight_batches: 0,
+            outstanding: 0,
+            fold_cap: (64 * threads as u64).max(4096),
+            flush_seq: 0,
+            line_no: 0,
+            first_err: None,
+        };
+        let router = std::thread::Builder::new()
+            .name("ingest-router".into())
+            .spawn(move || router.run())
+            .expect("spawn ingest router");
+        Self {
+            out_rx,
+            router: Some(router),
+            workers,
+            pending: HashMap::new(),
+            ready: std::collections::VecDeque::new(),
+            next_seq: 0,
+            stats: IngestStats::default(),
+            per_shard: vec![ShardStats::default(); threads],
+            threads,
+            start: Instant::now(),
+            finished: false,
+            err: None,
+        }
+    }
+
+    /// Next completed tree, in exactly the order the single-threaded fold
+    /// would emit it; `None` after the corpus (or an error, yielded once)
+    /// is exhausted.
+    pub fn next_tree(&mut self) -> Option<crate::Result<TrajectoryTree>> {
+        loop {
+            if let Some(t) = self.ready.pop_front() {
+                return Some(Ok(t));
+            }
+            if self.finished {
+                return self.err.take().map(Err);
+            }
+            match self.out_rx.recv() {
+                Ok(FlushOut::Trees { seq, trees, delta }) => {
+                    self.pending.insert(seq, (trees, delta));
+                    while let Some((trees, delta)) = self.pending.remove(&self.next_seq) {
+                        self.stats.absorb(&delta);
+                        self.ready.extend(trees);
+                        self.next_seq += 1;
+                    }
+                }
+                Ok(FlushOut::Done { shard, stats }) => self.per_shard[shard] = stats,
+                Err(_) => {
+                    // every worker exited: collect the router verdict
+                    self.finished = true;
+                    let out = self
+                        .router
+                        .take()
+                        .expect("router joined once")
+                        .join()
+                        .unwrap_or_else(|p| std::panic::resume_unwind(p));
+                    for w in self.workers.drain(..) {
+                        let _ = w.join();
+                    }
+                    if self.err.is_none() {
+                        self.err = out.err;
+                    }
+                    if self.err.is_none() && self.next_seq != out.flushes {
+                        self.err = Some(anyhow::anyhow!(
+                            "parallel ingest lost flushes: merged {} of {}",
+                            self.next_seq,
+                            out.flushes
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Final report; call after [`Self::next_tree`] returned `None` (any
+    /// undelivered trees are drained and dropped).
+    pub fn finish(mut self) -> crate::Result<ParallelIngestReport> {
+        while let Some(r) = self.next_tree() {
+            r?;
+        }
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        Ok(ParallelIngestReport {
+            stats: self.stats,
+            threads: self.threads,
+            per_shard: self.per_shard,
+            wall_ms: self.start.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// Stream a rollout source through `threads` folder shards, handing each
+/// completed tree to `sink` in single-thread-identical order.  `threads
+/// <= 1` folds inline (no worker threads) with the same report shape.
+pub fn ingest_stream_parallel<R, F>(
+    reader: R,
+    label: &str,
+    cfg: &IngestConfig,
+    threads: usize,
+    mut sink: F,
+) -> crate::Result<ParallelIngestReport>
+where
+    R: Read + Send + 'static,
+    F: FnMut(TrajectoryTree) -> crate::Result<()>,
+{
+    if threads <= 1 {
+        let start = Instant::now();
+        let stats = ingest_stream(RolloutReader::new(reader, label), cfg, sink)?;
+        let shard = ShardStats {
+            sessions: stats.sessions,
+            records: stats.records_in,
+            rollout_tokens: stats.rollout_tokens_in,
+            trees: stats.trees_out,
+        };
+        return Ok(ParallelIngestReport {
+            stats,
+            threads: 1,
+            per_shard: vec![shard],
+            wall_ms: start.elapsed().as_secs_f64() * 1e3,
+        });
+    }
+    let mut h = ParallelIngest::spawn_reader(reader, label, cfg, threads);
+    while let Some(t) = h.next_tree() {
+        sink(t?)?;
+    }
+    h.finish()
+}
+
+/// Convenience: parallel-ingest a rollout JSONL corpus fully into memory.
+pub fn fold_corpus_parallel(
+    path: &Path,
+    cfg: &IngestConfig,
+    threads: usize,
+) -> crate::Result<(Vec<TrajectoryTree>, ParallelIngestReport)> {
+    let f = std::fs::File::open(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let mut trees = Vec::new();
+    let report =
+        ingest_stream_parallel(f, &path.display().to_string(), cfg, threads, |t| {
+            trees.push(t);
+            Ok(())
+        })?;
+    Ok((trees, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::stream::ingest_stream;
+
+    fn rec(session: &str, tokens: &[i32]) -> RolloutRecord {
+        RolloutRecord::new(session, tokens.to_vec())
+    }
+
+    fn corpus_lines(records: &[RolloutRecord]) -> String {
+        records.iter().map(|r| r.to_json().to_string() + "\n").collect()
+    }
+
+    fn fold_single(src: &str, cfg: &IngestConfig) -> (Vec<TrajectoryTree>, IngestStats) {
+        let mut trees = Vec::new();
+        let stats = ingest_stream(RolloutReader::new(src.as_bytes(), "mem"), cfg, |t| {
+            trees.push(t);
+            Ok(())
+        })
+        .unwrap();
+        (trees, stats)
+    }
+
+    fn fold_parallel(
+        src: &str,
+        cfg: &IngestConfig,
+        threads: usize,
+    ) -> (Vec<TrajectoryTree>, ParallelIngestReport) {
+        let mut trees = Vec::new();
+        let owned = src.as_bytes().to_vec();
+        let report = ingest_stream_parallel(
+            std::io::Cursor::new(owned),
+            "mem",
+            cfg,
+            threads,
+            |t| {
+                trees.push(t);
+                Ok(())
+            },
+        )
+        .unwrap();
+        (trees, report)
+    }
+
+    fn tree_fingerprints(trees: &[TrajectoryTree]) -> Vec<String> {
+        trees.iter().map(|t| format!("{:?}", t.nodes)).collect()
+    }
+
+    #[test]
+    fn parallel_matches_single_thread_with_evictions() {
+        // 7 sessions interleaved, window of 3: plenty of LRU churn
+        let mut records = Vec::new();
+        for round in 0..4 {
+            for s in 0..7 {
+                let name = format!("sess-{s}");
+                records.push(rec(&name, &[s, round, 1, 2, 3]));
+                records.push(rec(&name, &[s, round, 1, 9]));
+            }
+        }
+        let src = corpus_lines(&records);
+        let cfg = IngestConfig { max_open_sessions: 3, ..Default::default() };
+        let (st_trees, st_stats) = fold_single(&src, &cfg);
+        for threads in [2usize, 4, 7] {
+            let (pt_trees, report) = fold_parallel(&src, &cfg, threads);
+            assert_eq!(
+                tree_fingerprints(&st_trees),
+                tree_fingerprints(&pt_trees),
+                "trees diverged at {threads} threads"
+            );
+            assert_eq!(st_stats, report.stats, "stats diverged at {threads} threads");
+            assert_eq!(report.threads, threads);
+            let shard_records: u64 = report.per_shard.iter().map(|s| s.records).sum();
+            assert_eq!(shard_records, st_stats.records_in);
+        }
+    }
+
+    #[test]
+    fn parse_error_aborts_with_the_single_thread_line() {
+        let good = rec("s", &[1, 2]).to_json().to_string();
+        let src = format!("{good}\n{good}\nnot json\n{good}\n");
+        let cfg = IngestConfig::default();
+        let err = fold_corpus_parallel_str(&src, &cfg, 4).unwrap_err().to_string();
+        assert!(err.contains("mem:3:"), "expected mem:3: in {err}");
+    }
+
+    #[test]
+    fn blank_lines_keep_line_numbering() {
+        let good = rec("s", &[1, 2]).to_json().to_string();
+        let src = format!("{good}\n\n  \n{good}\nboom\n");
+        let err = fold_corpus_parallel_str(&src, &IngestConfig::default(), 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mem:5:"), "expected mem:5: in {err}");
+    }
+
+    #[test]
+    fn single_thread_fallback_reports_one_shard() {
+        let records = vec![rec("a", &[1, 2, 3]), rec("a", &[1, 2, 9]), rec("b", &[5])];
+        let src = corpus_lines(&records);
+        let (trees, report) = fold_parallel(&src, &IngestConfig::default(), 1);
+        assert_eq!(trees.len(), 2);
+        assert_eq!(report.per_shard.len(), 1);
+        assert_eq!(report.per_shard[0].records, 3);
+        assert!(report.tokens_per_sec() > 0.0);
+    }
+
+    fn fold_corpus_parallel_str(
+        src: &str,
+        cfg: &IngestConfig,
+        threads: usize,
+    ) -> crate::Result<Vec<TrajectoryTree>> {
+        let mut trees = Vec::new();
+        ingest_stream_parallel(
+            std::io::Cursor::new(src.as_bytes().to_vec()),
+            "mem",
+            cfg,
+            threads,
+            |t| {
+                trees.push(t);
+                Ok(())
+            },
+        )?;
+        Ok(trees)
+    }
+}

@@ -104,6 +104,42 @@ pub fn records_from_tree(tree: &TrajectoryTree, session: &str) -> Vec<RolloutRec
         .collect()
 }
 
+/// Round-robin the records of up to `group` adjacent sessions: with
+/// per-session record runs `[a a a] [b b] [c c c]` and `group = 2` the
+/// output is `a b a b a  c c c` — deterministic, so smoke and property
+/// tests stay reproducible.  Emulates runtimes that log concurrent tasks,
+/// the shape that stresses `max_open_sessions` (used by `gen-data
+/// --linearize --interleave N` and the parallel-ingest equivalence tests).
+pub fn interleave_sessions(
+    per_session: Vec<Vec<RolloutRecord>>,
+    group: usize,
+) -> Vec<RolloutRecord> {
+    let group = group.max(1);
+    let mut out = Vec::new();
+    let mut sessions = per_session.into_iter();
+    loop {
+        // consume the next group of sessions by value (no record clones)
+        let mut queues: Vec<std::collections::VecDeque<_>> =
+            sessions.by_ref().take(group).map(Into::into).collect();
+        if queues.is_empty() {
+            break;
+        }
+        loop {
+            let mut emitted = false;
+            for q in &mut queues {
+                if let Some(r) = q.pop_front() {
+                    out.push(r);
+                    emitted = true;
+                }
+            }
+            if !emitted {
+                break;
+            }
+        }
+    }
+    out
+}
+
 /// Write a rollout corpus (one record per line).
 pub fn save_rollouts(records: &[RolloutRecord], path: &Path) -> crate::Result<()> {
     let f = std::fs::File::create(path)?;

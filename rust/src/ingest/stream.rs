@@ -8,8 +8,18 @@
 //! sharing if the evicted session id reappears later — runtimes log a
 //! session's branches back-to-back, so the window rarely matters; raise
 //! the cap for heavily interleaved logs.
+//!
+//! The LRU bookkeeping lives in [`SessionLru`], a lazy-deletion min-heap
+//! keyed by unique touch stamps: O(log open) per eviction instead of the
+//! old O(open-sessions) min-stamp scan, with the *same* fully
+//! deterministic flush order (stamps are unique, so the minimum is).  It
+//! is payload-generic because `ingest/parallel.rs` replays the identical
+//! eviction schedule with `()` payloads to command shard flushes — one
+//! implementation, one order.
 
-use std::io::BufRead;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::io::Read;
 use std::path::Path;
 
 use super::record::RolloutRecord;
@@ -20,7 +30,7 @@ use crate::util::jsonl::JsonlReader;
 
 /// Line-by-line rollout reader (bounded memory; `path:line` in errors,
 /// shared [`JsonlReader`] machinery).
-pub struct RolloutReader<R: BufRead> {
+pub struct RolloutReader<R: Read> {
     inner: JsonlReader<R>,
 }
 
@@ -30,13 +40,13 @@ impl RolloutReader<std::io::BufReader<std::fs::File>> {
     }
 }
 
-impl<R: BufRead> RolloutReader<R> {
+impl<R: Read> RolloutReader<R> {
     pub fn new(reader: R, label: &str) -> Self {
         Self { inner: JsonlReader::new(reader, label) }
     }
 }
 
-impl<R: BufRead> Iterator for RolloutReader<R> {
+impl<R: Read> Iterator for RolloutReader<R> {
     type Item = crate::Result<RolloutRecord>;
 
     fn next(&mut self) -> Option<Self::Item> {
@@ -44,30 +54,151 @@ impl<R: BufRead> Iterator for RolloutReader<R> {
     }
 }
 
+struct Slot<V> {
+    /// Open-instance id: a session evicted and reopened gets a fresh one,
+    /// which invalidates every heap entry of the closed instance.
+    inst: u64,
+    stamp: u64,
+    val: V,
+}
+
+/// Deterministic LRU clock over session ids with an arbitrary payload.
+///
+/// Every touch assigns a fresh monotonic stamp (unique, so the least
+/// recent session is unambiguous) and pushes a `(stamp, instance)` entry
+/// onto a min-heap; stale entries — superseded stamps or closed instances
+/// — are skipped on pop and purged by periodic rebuild, keeping the heap
+/// within a constant factor of the open-session count.  Eviction is
+/// therefore O(log open) amortized and *bit-identical in order* to a
+/// min-stamp scan.
+pub(crate) struct SessionLru<V> {
+    cap: usize,
+    tick: u64,
+    next_inst: u64,
+    open: HashMap<String, Slot<V>>,
+    names: HashMap<u64, String>,
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+}
+
+impl<V> SessionLru<V> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "need at least one open session");
+        Self {
+            cap,
+            tick: 0,
+            next_inst: 0,
+            open: HashMap::new(),
+            names: HashMap::new(),
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Touch an open session, returning its payload; `None` if not open.
+    pub fn get_mut(&mut self, session: &str) -> Option<&mut V> {
+        self.maybe_compact();
+        let slot = self.open.get_mut(session)?;
+        self.tick += 1;
+        slot.stamp = self.tick;
+        self.heap.push(Reverse((slot.stamp, slot.inst)));
+        Some(&mut slot.val)
+    }
+
+    /// Open a new session (the caller checked it is not open), evicting
+    /// and returning the least-recently-touched one first when at
+    /// capacity.
+    pub fn insert(&mut self, session: &str, val: V) -> Option<(String, V)> {
+        self.maybe_compact();
+        debug_assert!(!self.open.contains_key(session), "insert of an open session");
+        let evicted = if self.open.len() == self.cap { self.pop_lru() } else { None };
+        self.tick += 1;
+        self.next_inst += 1;
+        let inst = self.next_inst;
+        self.names.insert(inst, session.to_string());
+        self.heap.push(Reverse((self.tick, inst)));
+        self.open.insert(session.to_string(), Slot { inst, stamp: self.tick, val });
+        evicted
+    }
+
+    /// Remove and return the least-recently-touched open session.
+    pub fn pop_lru(&mut self) -> Option<(String, V)> {
+        while let Some(Reverse((stamp, inst))) = self.heap.pop() {
+            let Some(name) = self.names.get(&inst) else { continue }; // closed instance
+            let live = self.open.get(name).map(|s| s.inst == inst && s.stamp == stamp);
+            if live != Some(true) {
+                continue; // superseded stamp
+            }
+            let name = self.names.remove(&inst).expect("name just read");
+            let slot = self.open.remove(&name).expect("slot just read");
+            return Some((name, slot.val));
+        }
+        None
+    }
+
+    /// Close every open session, in last-touch (stamp) order — the same
+    /// deterministic order repeated [`Self::pop_lru`] calls would produce,
+    /// with one sort instead of repeated pops.
+    pub fn drain(&mut self) -> Vec<(String, V)> {
+        let mut v: Vec<(u64, String, V)> =
+            self.open.drain().map(|(k, s)| (s.stamp, k, s.val)).collect();
+        v.sort_by_key(|(stamp, _, _)| *stamp);
+        self.names.clear();
+        self.heap.clear();
+        v.into_iter().map(|(_, k, val)| (k, val)).collect()
+    }
+
+    /// Rebuild the heap from live stamps once stale entries dominate; the
+    /// rebuild is O(open) against >= 8x that many pushes, so amortized
+    /// O(1) and the heap stays bounded by the open-session count.
+    fn maybe_compact(&mut self) {
+        if self.heap.len() > 64 && self.heap.len() > 8 * self.open.len() {
+            self.heap = self.open.values().map(|s| Reverse((s.stamp, s.inst))).collect();
+        }
+    }
+}
+
+/// Emit a flushed store's trees plus the [`IngestStats`] delta it
+/// contributes.  Shared by the single-threaded folder and the parallel
+/// shard workers (`ingest/parallel.rs`) so counter accounting cannot
+/// drift between the two paths.
+pub(crate) fn flush_delta(
+    store: PrefixStore,
+    max_seq_len: Option<usize>,
+) -> (Vec<TrajectoryTree>, IngestStats) {
+    let (trees, emitted) = store.emit(max_seq_len);
+    let delta = IngestStats {
+        sessions: 1,
+        records_in: store.stats.records,
+        rollout_tokens_in: store.stats.rollout_tokens,
+        split_events: store.stats.split_events,
+        subsumed_records: store.stats.subsumed_records,
+        trees_out: emitted.trees,
+        nodes_out: emitted.nodes,
+        tree_tokens_out: emitted.tree_tokens,
+        trimmed_tokens: emitted.trimmed_tokens,
+    };
+    (trees, delta)
+}
+
 /// Bounded-memory session-to-tree folder.
 ///
-/// Open sessions live in a map keyed by session id with a monotonic
-/// last-touch stamp: the per-record hot path is one hash lookup; the
-/// O(open-sessions) min-stamp scan runs only when a *new* session arrives
-/// at capacity and the least-recently-touched one must be flushed.
+/// Open sessions live in a [`SessionLru`] keyed by session id: the
+/// per-record hot path is one hash lookup plus an O(log open) heap push;
+/// eviction runs only when a *new* session arrives at capacity and the
+/// least-recently-touched one must be flushed.
 pub struct SessionFolder {
     cfg: IngestConfig,
-    open: std::collections::HashMap<String, (u64, PrefixStore)>,
-    /// Monotonic touch counter (unique per push — also the deterministic
-    /// flush order at `finish`).
-    tick: u64,
+    lru: SessionLru<PrefixStore>,
     stats: IngestStats,
 }
 
 impl SessionFolder {
     pub fn new(cfg: IngestConfig) -> Self {
-        assert!(cfg.max_open_sessions > 0, "need at least one open session");
-        Self {
-            cfg,
-            open: std::collections::HashMap::new(),
-            tick: 0,
-            stats: IngestStats::default(),
-        }
+        let lru = SessionLru::new(cfg.max_open_sessions);
+        Self { cfg, lru, stats: IngestStats::default() }
     }
 
     /// Fold one record; any trees completed by LRU eviction land in `out`.
@@ -76,17 +207,14 @@ impl SessionFolder {
         rec: &RolloutRecord,
         out: &mut Vec<TrajectoryTree>,
     ) -> crate::Result<()> {
-        self.tick += 1;
-        if let Some((stamp, store)) = self.open.get_mut(&rec.session) {
-            *stamp = self.tick;
+        if let Some(store) = self.lru.get_mut(&rec.session) {
             return store.insert(&rec.tokens, &rec.trainable, &rec.advantage);
-        }
-        if self.open.len() == self.cfg.max_open_sessions {
-            self.flush_lru(out);
         }
         let mut store = PrefixStore::new();
         let result = store.insert(&rec.tokens, &rec.trainable, &rec.advantage);
-        self.open.insert(rec.session.clone(), (self.tick, store));
+        if let Some((_, evicted)) = self.lru.insert(&rec.session, store) {
+            self.flush_store(evicted, out);
+        }
         result
     }
 
@@ -94,36 +222,27 @@ impl SessionFolder {
     /// `false` when no session is open.  Repeated calls drain sessions in
     /// last-touch order — the same deterministic order as [`Self::finish`]
     /// — which lets streaming corpus sources emit end-of-corpus trees
-    /// shard-by-shard instead of all at once.  Each call is an
-    /// O(open-sessions) min-stamp scan (same as eviction); to drain
-    /// *everything*, [`Self::finish`] sorts once instead.
+    /// shard-by-shard instead of all at once.
     pub fn flush_lru(&mut self, out: &mut Vec<TrajectoryTree>) -> bool {
-        let Some(lru_key) = self
-            .open
-            .iter()
-            .min_by_key(|(_, (stamp, _))| *stamp)
-            .map(|(k, _)| k.clone())
-        else {
-            return false;
-        };
-        let (_, store) = self.open.remove(&lru_key).expect("key just found");
-        self.flush_store(store, out);
-        true
+        match self.lru.pop_lru() {
+            Some((_, store)) => {
+                self.flush_store(store, out);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Open sessions currently held (memory-bound observability).
     pub fn open_sessions(&self) -> usize {
-        self.open.len()
+        self.lru.len()
     }
 
     /// Flush every open session (in last-touch order — the same order as
     /// draining via [`Self::flush_lru`], but one sort instead of repeated
-    /// min-scans); returns the final corpus statistics.
+    /// pops); returns the final corpus statistics.
     pub fn finish(mut self, out: &mut Vec<TrajectoryTree>) -> IngestStats {
-        let mut remaining: Vec<(u64, PrefixStore)> =
-            std::mem::take(&mut self.open).into_values().collect();
-        remaining.sort_by_key(|(stamp, _)| *stamp);
-        for (_, store) in remaining {
+        for (_, store) in self.lru.drain() {
             self.flush_store(store, out);
         }
         self.stats
@@ -135,23 +254,15 @@ impl SessionFolder {
     }
 
     fn flush_store(&mut self, store: PrefixStore, out: &mut Vec<TrajectoryTree>) {
-        let (trees, emitted) = store.emit(self.cfg.max_seq_len);
-        self.stats.sessions += 1;
-        self.stats.records_in += store.stats.records;
-        self.stats.rollout_tokens_in += store.stats.rollout_tokens;
-        self.stats.split_events += store.stats.split_events;
-        self.stats.subsumed_records += store.stats.subsumed_records;
-        self.stats.trees_out += emitted.trees;
-        self.stats.nodes_out += emitted.nodes;
-        self.stats.tree_tokens_out += emitted.tree_tokens;
-        self.stats.trimmed_tokens += emitted.trimmed_tokens;
+        let (trees, delta) = flush_delta(store, self.cfg.max_seq_len);
+        self.stats.absorb(&delta);
         out.extend(trees);
     }
 }
 
 /// Stream a rollout source through the folder, handing each completed tree
 /// to `sink` the moment its session closes (bounded memory end to end).
-pub fn ingest_stream<R: BufRead>(
+pub fn ingest_stream<R: Read>(
     reader: RolloutReader<R>,
     cfg: &IngestConfig,
     mut sink: impl FnMut(TrajectoryTree) -> crate::Result<()>,
@@ -267,6 +378,61 @@ mod tests {
         .unwrap();
         assert_eq!(seen, 3);
         assert_eq!(stats.trees_out, 3);
+    }
+
+    #[test]
+    fn session_lru_evicts_in_exact_touch_order() {
+        let mut lru: SessionLru<u32> = SessionLru::new(3);
+        assert!(lru.insert("a", 1).is_none());
+        assert!(lru.insert("b", 2).is_none());
+        assert!(lru.insert("c", 3).is_none());
+        // touch a: order is now b, c, a
+        assert_eq!(lru.get_mut("a"), Some(&mut 1));
+        let (k, v) = lru.insert("d", 4).expect("at capacity");
+        assert_eq!((k.as_str(), v), ("b", 2));
+        // pop order: c, a, d
+        assert_eq!(lru.pop_lru().unwrap().0, "c");
+        assert_eq!(lru.pop_lru().unwrap().0, "a");
+        assert_eq!(lru.pop_lru().unwrap().0, "d");
+        assert!(lru.pop_lru().is_none());
+    }
+
+    #[test]
+    fn session_lru_reopened_session_gets_a_fresh_instance() {
+        let mut lru: SessionLru<u32> = SessionLru::new(2);
+        lru.insert("a", 1);
+        lru.insert("b", 2);
+        // evicts a (stale heap entries for a's first instance must not
+        // confuse later pops)
+        let (k, _) = lru.insert("c", 3).unwrap();
+        assert_eq!(k, "a");
+        if let Some((k, _)) = lru.insert("a", 9) {
+            assert_eq!(k, "b");
+        }
+        let order: Vec<String> = lru.drain().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(order, vec!["c".to_string(), "a".to_string()]);
+    }
+
+    #[test]
+    fn session_lru_heap_stays_bounded_under_hot_touches() {
+        let mut lru: SessionLru<()> = SessionLru::new(4);
+        for s in ["a", "b", "c", "d"] {
+            lru.insert(s, ());
+        }
+        for i in 0..10_000 {
+            let s = ["a", "b", "c", "d"][i % 4];
+            assert!(lru.get_mut(s).is_some());
+        }
+        assert!(
+            lru.heap.len() <= 8 * lru.open.len() + 64 + 1,
+            "lazy heap must be compacted: {} entries for {} sessions",
+            lru.heap.len(),
+            lru.open.len()
+        );
+        // and the order is still exact: touch order is a,b,c,d cycling,
+        // last full cycle ended on d; 10_000 % 4 == 0 so order a,b,c,d
+        assert_eq!(lru.pop_lru().unwrap().0, "a");
+        assert_eq!(lru.pop_lru().unwrap().0, "b");
     }
 
     fn fold_via_stream(

@@ -44,7 +44,14 @@ struct TrieNode {
     tokens: Vec<i32>,
     trainable: Vec<f32>,
     advantage: Vec<f32>,
-    children: Vec<usize>,
+    /// Children as `(first_token, arena_index)` pairs: the child's leading
+    /// token is duplicated inline so the descent lookup scans one
+    /// contiguous array and only dereferences a child node (a random arena
+    /// access) after its first token already matched — the supervision
+    /// channels are then checked on that single candidate.  Siblings may
+    /// share a first *token* (supervision-only divergence), so a token hit
+    /// still verifies the full (token, trainable, advantage) triple.
+    children: Vec<(i32, usize)>,
 }
 
 impl TrieNode {
@@ -127,12 +134,15 @@ impl PrefixStore {
             }
             // siblings are pairwise distinct in their first (token,
             // supervision) triple — see the split invariant below — so at
-            // most one child can continue the record.
+            // most one child can continue the record.  The inline
+            // first-token array filters candidates without touching the
+            // arena: only a token hit pays the node dereference.
+            let tok = tokens[pos];
             let next = self.nodes[cur]
                 .children
                 .iter()
-                .copied()
-                .find(|&c| matches(&self.nodes[c], 0, pos));
+                .find(|&&(t0, c)| t0 == tok && matches(&self.nodes[c], 0, pos))
+                .map(|&(_, c)| c);
             let c = match next {
                 Some(c) => c,
                 None => {
@@ -144,7 +154,7 @@ impl PrefixStore {
                     );
                     self.nodes.push(node);
                     let idx = self.nodes.len() - 1;
-                    self.nodes[cur].children.push(idx);
+                    self.nodes[cur].children.push((tok, idx));
                     return Ok(());
                 }
             };
@@ -173,15 +183,18 @@ impl PrefixStore {
                 tokens: self.nodes[c].tokens.split_off(k),
                 trainable: self.nodes[c].trainable.split_off(k),
                 advantage: self.nodes[c].advantage.split_off(k),
+                // grandchildren keep their own first tokens — moving the
+                // list under the suffix changes no leading token
                 children: std::mem::take(&mut self.nodes[c].children),
             };
+            let suffix_first = suffix.tokens[0];
             self.nodes.push(suffix);
             let suffix_idx = self.nodes.len() - 1;
             let branch =
                 TrieNode::segment_of(&tokens[pos..], &trainable[pos..], &advantage[pos..]);
             self.nodes.push(branch);
             let branch_idx = self.nodes.len() - 1;
-            self.nodes[c].children = vec![suffix_idx, branch_idx];
+            self.nodes[c].children = vec![(suffix_first, suffix_idx), (tokens[pos], branch_idx)];
             return Ok(());
         }
     }
@@ -192,7 +205,7 @@ impl PrefixStore {
         let mut stack = vec![idx];
         while let Some(i) = stack.pop() {
             sum += self.nodes[i].len() as u64;
-            stack.extend_from_slice(&self.nodes[i].children);
+            stack.extend(self.nodes[i].children.iter().map(|&(_, c)| c));
         }
         sum
     }
@@ -205,7 +218,7 @@ impl PrefixStore {
         assert!(max > 0, "max_seq_len must be positive");
         let mut stats = EmitStats::default();
         let mut out = Vec::with_capacity(self.nodes[0].children.len());
-        for &root in &self.nodes[0].children {
+        for &(_, root) in &self.nodes[0].children {
             let nodes = self.emit_tree(root, max, &mut stats);
             if nodes.is_empty() {
                 continue;
@@ -233,7 +246,7 @@ impl PrefixStore {
             };
             let mut tail = idx;
             while self.nodes[tail].children.len() == 1 {
-                tail = self.nodes[tail].children[0];
+                tail = self.nodes[tail].children[0].1;
                 seg.tokens.extend_from_slice(&self.nodes[tail].tokens);
                 seg.trainable.extend_from_slice(&self.nodes[tail].trainable);
                 seg.advantage.extend_from_slice(&self.nodes[tail].advantage);
@@ -241,7 +254,7 @@ impl PrefixStore {
             let budget = max - depth;
             if seg.tokens.len() > budget {
                 // truncate the segment and drop everything below it
-                for &c in &self.nodes[tail].children {
+                for &(_, c) in &self.nodes[tail].children {
                     stats.trimmed_tokens += self.subtree_tokens(c);
                 }
                 stats.trimmed_tokens += (seg.tokens.len() - budget) as u64;
@@ -256,12 +269,12 @@ impl PrefixStore {
             let me = (nodes.len() - 1) as i32;
             if end_depth == max {
                 // children start exactly at the limit: drop them whole
-                for &c in &self.nodes[tail].children {
+                for &(_, c) in &self.nodes[tail].children {
                     stats.trimmed_tokens += self.subtree_tokens(c);
                 }
                 continue;
             }
-            for &c in self.nodes[tail].children.iter().rev() {
+            for &(_, c) in self.nodes[tail].children.iter().rev() {
                 stack.push((c, me, end_depth));
             }
         }
@@ -402,6 +415,33 @@ mod tests {
             .collect();
         want.sort();
         assert_eq!(sig, want);
+    }
+
+    #[test]
+    fn descent_skips_token_equal_supervision_mismatched_siblings() {
+        // after a supervision-only split, both siblings begin with the SAME
+        // token — the first-token fast path must still check the full
+        // triple and descend into the supervision-matching child
+        let mut s = PrefixStore::new();
+        let toks = [1, 2, 3, 4];
+        let ones = vec![1.0f32; 4];
+        s.insert(&toks, &ones, &ones).unwrap();
+        s.insert(&toks, &[1.0, 1.0, 0.0, 0.0], &ones).unwrap();
+        let ext_tr = [1.0, 1.0, 0.0, 0.0, 0.0];
+        s.insert(&[1, 2, 3, 4, 5], &ext_tr, &[1.0f32; 5]).unwrap();
+        let (trees, es) = s.emit(None);
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.num_paths(), 2, "extension must reuse the matching branch");
+        // 2 shared + the two 2-token branches + the 1-token extension
+        assert_eq!(es.tree_tokens, 2 + 2 + 2 + 1);
+        let max_path: usize = t
+            .paths()
+            .iter()
+            .map(|p| p.iter().map(|&n| t.nodes[n].real_len()).sum())
+            .max()
+            .unwrap();
+        assert_eq!(max_path, 5);
     }
 
     #[test]

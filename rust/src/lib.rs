@@ -27,7 +27,11 @@
 //!   token *or* supervision divergence so merged prefixes restore
 //!   gradients exactly, and reports the measured prefix-reuse ratio
 //!   (rollout tokens in / tree tokens out).  Streaming with a bounded
-//!   number of open sessions, so corpus size never bounds memory.
+//!   number of open sessions, so corpus size never bounds memory.  The
+//!   fold parallelizes across session-sharded worker threads
+//!   ([`ingest::parallel`]) with bit-identical output at any thread
+//!   count — eviction order is centrally sequenced, so parallelism is a
+//!   pure wall-clock knob (docs/ingest.md).
 //! * [`data`] — corpus sources: the run loop consumes one abstraction, an
 //!   endless epoch-shuffled stream of `Arc`-shared trees.  Resident (whole
 //!   corpus in memory) and streaming (shard-based epoch shuffling: at most
@@ -65,6 +69,11 @@
 //!   `ranks: N` matches it to f64 tolerance and is bit-identical
 //!   run-to-run.  [`distsim`] prices the *measured* per-rank loads on the
 //!   paper's 64xHopper shape instead of re-deriving its own placement.
+//!   Sharding and packing cost flows through one seam
+//!   ([`partition::CostModel`]): token counts by default (seed-exact), or
+//!   an online least-squares fit of measured per-rank execute walls fed
+//!   back from the reduce (`cost_model: "calibrated"`,
+//!   docs/distributed.md#calibrated-cost-model).
 //!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the

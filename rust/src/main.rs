@@ -28,7 +28,8 @@ COMMANDS:
   ingest                   fold linear rollout logs into a tree corpus
                            --in rollouts.jsonl --out trees.jsonl [--stats]
                            [--max-seq-len N] [--max-open-sessions N]
-                           [--stats-json FILE]
+                           [--ingest-threads N  parallel folder shards,
+                            output bit-identical to 1] [--stats-json FILE]
   pipeline-smoke           streaming + pipelined run loop, hermetic (no
                            artifacts): asserts sync ≡ pipelined bit-for-bit
                            --corpus FILE [--format trees|rollouts]
@@ -204,7 +205,13 @@ fn main() -> anyhow::Result<()> {
                 })?,
                 None => tree_train::ingest::IngestConfig::default().max_open_sessions,
             };
-            let cfg = tree_train::ingest::IngestConfig { max_seq_len, max_open_sessions };
+            let threads = match rest.flags.get("ingest-threads") {
+                Some(v) => v.parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                    anyhow::anyhow!("--ingest-threads must be a positive integer, got `{v}`")
+                })?,
+                None => 1,
+            };
+            let cfg = tree_train::ingest::IngestConfig { max_seq_len, max_open_sessions, threads };
             cmds::ingest::run(
                 &PathBuf::from(input),
                 &PathBuf::from(output),

@@ -1,0 +1,347 @@
+//! Calibrated per-tree execution-cost model for sharding and packing.
+//!
+//! The LPT rank sharder ([`super::forest::shard_by_cost`]) and the FFD
+//! forest packer ([`super::forest::pack_forest`]) both order work by a
+//! scalar *cost* per tree.  The seed uses the packed token count — exact
+//! for the token-proportional parts of a step, blind to per-call overhead
+//! (program launches, gateway relays, host-side batch assembly) and to
+//! depth effects.  [`CostModel`] is the seam between those planners and a
+//! better estimate:
+//!
+//! * [`CostModel::Tokens`] — the default.  `price()` returns the token
+//!   base *unchanged*, so every seed plan, equivalence suite and
+//!   determinism gate is bit-identical to the pre-seam code.
+//! * [`CostModel::Calibrated`] — a 4-feature linear model
+//!   `wall ≈ w · [tokens, depth, est_calls, 1]` fit online by ridge-
+//!   regularized least squares from *measured per-rank execute walls*
+//!   (fed back by the executor via [`CostModel::observe`]).  Until
+//!   `min_obs` observations have accumulated it prices exactly like
+//!   `Tokens`, so warmup steps stay on the seed schedule.
+//!
+//! **Determinism caveat** (docs/distributed.md): a calibrated model prices
+//! from *measured wall clock*, so two runs of the same corpus may shard
+//! differently once calibration kicks in.  Losses stay within the f64
+//! sharding tolerance (the global batch never changes — only its rank
+//! placement), but calibrated runs are not run-to-run bit-identical the
+//! way the default is.  Every bit-exactness gate therefore runs on
+//! `Tokens`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::tree::TrajectoryTree;
+
+/// Feature-vector width: `[tokens, depth, est_calls, 1.0]`.
+pub const N_FEATS: usize = 4;
+
+/// The per-tree feature vector the calibrated model prices on:
+/// `[base, depth, est_calls, 1.0]` where `base` is the planner's token
+/// cost for the mode (`n_tree` packed tokens for tree mode, `n_flat` for
+/// the baseline), `depth` is the deepest root-to-leaf real-token path
+/// (partition-relay length and attention-window growth both scale with
+/// it), and `est_calls = ceil(base / capacity)` approximates the program
+/// invocations the tree will occupy (per-call launch overhead).
+pub fn tree_features(tree: &TrajectoryTree, base: usize, capacity: usize) -> [f64; N_FEATS] {
+    let mut depth = vec![0usize; tree.nodes.len()];
+    let mut max_depth = 0usize;
+    for (i, n) in tree.nodes.iter().enumerate() {
+        let above = if n.parent < 0 { 0 } else { depth[n.parent as usize] };
+        depth[i] = above + n.real_len();
+        max_depth = max_depth.max(depth[i]);
+    }
+    let est_calls = if capacity == 0 { 1 } else { base.div_ceil(capacity).max(1) };
+    [base as f64, max_depth as f64, est_calls as f64, 1.0]
+}
+
+/// Online normal-equation accumulator for the 4-feature linear fit.
+///
+/// `observe` is a rank-1 update of `XᵀX` and `Xᵀy`; `solve` adds a small
+/// ridge (scaled to the feature magnitudes, so near-collinear features —
+/// e.g. depth ≈ tokens on chain-shaped corpora — stay solvable) and runs
+/// Gaussian elimination with partial pivoting on the 4×4 system.
+#[derive(Debug, Clone, Default)]
+pub struct Calibrator {
+    xtx: [[f64; N_FEATS]; N_FEATS],
+    xty: [f64; N_FEATS],
+    n: u64,
+}
+
+impl Calibrator {
+    pub fn observe(&mut self, x: &[f64; N_FEATS], y: f64) {
+        if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            return;
+        }
+        for i in 0..N_FEATS {
+            for j in 0..N_FEATS {
+                self.xtx[i][j] += x[i] * x[j];
+            }
+            self.xty[i] += x[i] * y;
+        }
+        self.n += 1;
+    }
+
+    pub fn n_obs(&self) -> u64 {
+        self.n
+    }
+
+    /// Solve the ridge-regularized normal equations; `None` while the
+    /// system is empty or numerically singular even after regularization.
+    pub fn solve(&self) -> Option<[f64; N_FEATS]> {
+        if self.n == 0 {
+            return None;
+        }
+        let trace: f64 = (0..N_FEATS).map(|i| self.xtx[i][i]).sum();
+        if !(trace > 0.0) {
+            return None; // degenerate: no real feature mass observed
+        }
+        // per-feature relative ridge: invariant to feature units, strong
+        // enough to break exact collinearity (e.g. est_calls ≡ bias on a
+        // corpus where every tree fits one call), weak enough (1e-8
+        // relative) not to bias a well-conditioned fit measurably
+        let mut a = [[0.0f64; N_FEATS + 1]; N_FEATS];
+        for i in 0..N_FEATS {
+            for j in 0..N_FEATS {
+                a[i][j] = self.xtx[i][j];
+            }
+            a[i][i] += 1e-8 * self.xtx[i][i] + 1e-12;
+            a[i][N_FEATS] = self.xty[i];
+        }
+        // Gaussian elimination with partial pivoting
+        for col in 0..N_FEATS {
+            let pivot = (col..N_FEATS)
+                .max_by(|&p, &q| a[p][col].abs().total_cmp(&a[q][col].abs()))
+                .expect("non-empty pivot range");
+            if a[pivot][col].abs() < 1e-12 {
+                return None;
+            }
+            a.swap(col, pivot);
+            for row in (col + 1)..N_FEATS {
+                let f = a[row][col] / a[col][col];
+                for k in col..=N_FEATS {
+                    a[row][k] -= f * a[col][k];
+                }
+            }
+        }
+        let mut w = [0.0f64; N_FEATS];
+        for col in (0..N_FEATS).rev() {
+            let mut acc = a[col][N_FEATS];
+            for k in (col + 1)..N_FEATS {
+                acc -= a[col][k] * w[k];
+            }
+            w[col] = acc / a[col][col];
+        }
+        if w.iter().all(|v| v.is_finite()) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+/// Shared state of one calibrated model: planner threads price through it
+/// while the executor feeds measured walls back in — the `Arc` is cloned
+/// into every [`crate::trainer::planner::ShardedPlan`], so feedback needs
+/// no extra plumbing.
+#[derive(Debug)]
+pub struct CalibratedCost {
+    /// Observations required before predictions replace the token base.
+    min_obs: u64,
+    inner: Mutex<CalState>,
+}
+
+#[derive(Debug, Default)]
+struct CalState {
+    cal: Calibrator,
+    /// Last solved weights (refit on every observe — the system is 4×4,
+    /// the solve is ~100 flops).
+    w: Option<[f64; N_FEATS]>,
+}
+
+/// The cost seam consumed by rank sharding and forest packing.
+#[derive(Debug, Clone)]
+pub enum CostModel {
+    /// Price every tree at exactly its token base (the seed behavior,
+    /// bit-for-bit). `observe` is a no-op.
+    Tokens,
+    Calibrated(Arc<CalibratedCost>),
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::Tokens
+    }
+}
+
+impl CostModel {
+    /// A fresh calibrated model that prices like [`Self::Tokens`] until
+    /// `min_obs` per-rank wall observations have been absorbed.
+    pub fn calibrated(min_obs: u64) -> Self {
+        Self::Calibrated(Arc::new(CalibratedCost {
+            min_obs,
+            inner: Mutex::new(CalState::default()),
+        }))
+    }
+
+    /// Price one tree: `Tokens` returns `base` unchanged; a calibrated
+    /// model with enough observations returns the predicted wall in
+    /// integer microseconds (clamped ≥ 1 so no real tree is free).
+    pub fn price(&self, feats: &[f64; N_FEATS], base: usize) -> usize {
+        match self {
+            Self::Tokens => base,
+            Self::Calibrated(c) => {
+                let st = c.inner.lock().expect("cost model lock");
+                match (st.cal.n_obs() >= c.min_obs, &st.w) {
+                    (true, Some(w)) => {
+                        let pred: f64 = w.iter().zip(feats).map(|(a, b)| a * b).sum::<f64>() * 1e3;
+                        if pred.is_finite() {
+                            (pred.round() as i64).max(1) as usize
+                        } else {
+                            base
+                        }
+                    }
+                    _ => base,
+                }
+            }
+        }
+    }
+
+    /// Feed one measured per-rank wall (ms) for a rank whose trees summed
+    /// to `feats` (feature vectors are additive, so the rank total is a
+    /// valid regression row). No-op on `Tokens`.
+    pub fn observe(&self, feats: &[f64; N_FEATS], wall_ms: f64) {
+        if let Self::Calibrated(c) = self {
+            let mut st = c.inner.lock().expect("cost model lock");
+            st.cal.observe(feats, wall_ms);
+            st.w = st.cal.solve();
+        }
+    }
+
+    /// Are predictions live (calibrated + past `min_obs`)?  While false,
+    /// pricing — and therefore every plan — is identical to [`Self::Tokens`].
+    pub fn active(&self) -> bool {
+        match self {
+            Self::Tokens => false,
+            Self::Calibrated(c) => {
+                let st = c.inner.lock().expect("cost model lock");
+                st.cal.n_obs() >= c.min_obs && st.w.is_some()
+            }
+        }
+    }
+
+    /// Observations absorbed so far (0 for `Tokens`).
+    pub fn n_obs(&self) -> u64 {
+        match self {
+            Self::Tokens => 0,
+            Self::Calibrated(c) => c.inner.lock().expect("cost model lock").cal.n_obs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::gen;
+
+    #[test]
+    fn tokens_model_is_the_exact_identity() {
+        let m = CostModel::Tokens;
+        for base in [0usize, 1, 17, 4096, 1_000_000] {
+            assert_eq!(m.price(&[base as f64, 3.0, 1.0, 1.0], base), base);
+        }
+        assert!(!m.active());
+        m.observe(&[1.0, 1.0, 1.0, 1.0], 5.0); // no-op
+        assert_eq!(m.n_obs(), 0);
+    }
+
+    #[test]
+    fn calibrated_prices_like_tokens_below_min_obs() {
+        let m = CostModel::calibrated(8);
+        assert!(!m.active());
+        for i in 0..7u64 {
+            m.observe(&[100.0 + i as f64, 10.0, 1.0, 1.0], 1.0 + i as f64);
+            assert!(!m.active(), "obs {i}: below min_obs must stay inactive");
+            assert_eq!(m.price(&[500.0, 10.0, 1.0, 1.0], 500), 500);
+        }
+    }
+
+    #[test]
+    fn calibrator_recovers_a_synthetic_linear_law() {
+        // wall = 0.004*tokens + 0.01*depth + 2.5*calls + 0.5
+        let truth = [0.004, 0.01, 2.5, 0.5];
+        let mut cal = Calibrator::default();
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            (rng >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..64 {
+            let x = [
+                200.0 + 4000.0 * next(),
+                20.0 + 300.0 * next(),
+                1.0 + (4.0 * next()).floor(),
+                1.0,
+            ];
+            let y: f64 = truth.iter().zip(&x).map(|(a, b)| a * b).sum();
+            cal.observe(&x, y);
+        }
+        let w = cal.solve().expect("well-conditioned system must solve");
+        // the relative ridge (1e-8) shrinks weights by roughly the
+        // condition number x 1e-8 (~1e-6 here); 1e-4 leaves two orders of
+        // margin while still pinning all four weights tightly
+        for (wi, ti) in w.iter().zip(&truth) {
+            assert!(
+                (wi - ti).abs() < 1e-4 * (1.0 + ti.abs()),
+                "recovered {w:?}, expected {truth:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibrated_model_predicts_after_min_obs() {
+        // wall = 0.001*tokens (pure token-proportional): predictions must
+        // order trees exactly like the token base once active
+        let m = CostModel::calibrated(4);
+        for i in 1..=6u64 {
+            let tokens = 1000.0 * i as f64;
+            m.observe(&[tokens, 50.0 * i as f64, 1.0, 1.0], 0.001 * tokens);
+        }
+        assert!(m.active());
+        let small = m.price(&[1000.0, 50.0, 1.0, 1.0], 7);
+        let large = m.price(&[4000.0, 200.0, 1.0, 1.0], 7);
+        assert!(large > small, "prices must track the law: {small} vs {large}");
+        // 0.001*1000 ms = 1 ms = 1000 µs
+        assert!((small as i64 - 1000).abs() <= 2, "1 ms ≈ 1000 µs, got {small}");
+    }
+
+    #[test]
+    fn singular_systems_fall_back_to_the_base() {
+        // every observation identical: tokens/depth/calls are collinear
+        // with the bias up to scale, yet ridge keeps the solve finite —
+        // and if it ever went singular, price() must return base
+        let m = CostModel::calibrated(2);
+        for _ in 0..4 {
+            m.observe(&[0.0, 0.0, 0.0, 0.0], 0.0);
+        }
+        // all-zero features: XᵀX is the zero matrix, solve must refuse
+        assert_eq!(m.price(&[100.0, 1.0, 1.0, 1.0], 42), 42);
+    }
+
+    #[test]
+    fn features_are_additive_and_depth_is_the_longest_path() {
+        let t = gen::uniform(11, 9, 5, 0.6);
+        let f = tree_features(&t, t.n_tree(), 4096);
+        assert_eq!(f[0], t.n_tree() as f64);
+        let max_path = t
+            .paths()
+            .iter()
+            .map(|p| p.iter().map(|&n| t.nodes[n].real_len()).sum::<usize>())
+            .max()
+            .unwrap();
+        assert_eq!(f[1], max_path as f64, "depth = deepest root-to-leaf real tokens");
+        assert_eq!(f[2], 1.0, "tree under capacity is one call");
+        assert_eq!(f[3], 1.0, "bias feature");
+        let g = tree_features(&t, t.n_tree(), 10);
+        assert!(g[2] >= 2.0, "tiny capacity means multiple estimated calls");
+    }
+}

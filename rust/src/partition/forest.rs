@@ -222,8 +222,32 @@ pub fn pack_forest(
     capacity: usize,
     opts: &BatchOptions,
 ) -> crate::Result<Vec<ForestBatch>> {
+    let sizes: Vec<usize> = metas.iter().map(|m| m.size()).collect();
+    pack_forest_by_cost(metas, &sizes, capacity, opts)
+}
+
+/// [`pack_forest`] with an explicit per-meta *cost* ordering: metas are
+/// visited in decreasing `costs[i]` (stable — equal costs keep input
+/// order), while bin feasibility is still checked on slot size (capacity
+/// is a hard device constraint; cost only orders the fit attempts).
+/// `costs[i] = metas[i].size()` reproduces [`pack_forest`] exactly; a
+/// calibrated [`crate::partition::cost::CostModel`] supplies predicted
+/// walls instead, so the trees that dominate measured wall-clock seed the
+/// bins first (the FFD quality guarantee follows the ordering metric).
+pub fn pack_forest_by_cost(
+    metas: &[DfsMeta],
+    costs: &[usize],
+    capacity: usize,
+    opts: &BatchOptions,
+) -> crate::Result<Vec<ForestBatch>> {
+    anyhow::ensure!(
+        costs.len() == metas.len(),
+        "pack_forest_by_cost: {} costs for {} metas",
+        costs.len(),
+        metas.len()
+    );
     let mut order: Vec<usize> = (0..metas.len()).collect();
-    order.sort_by_key(|&i| std::cmp::Reverse(metas[i].size()));
+    order.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
     let mut bins: Vec<(usize, Vec<usize>)> = Vec::new(); // (used slots, meta ids)
     for &i in &order {
         let s = metas[i].size();
@@ -596,6 +620,49 @@ mod tests {
             batches.iter().flat_map(|b| b.members.iter().map(|m| m.source)).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..ms.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cost_ordered_packing_with_sizes_is_the_default_packing() {
+        let ms = metas(6);
+        let cap = 3 * ms.iter().map(|m| m.size()).max().unwrap();
+        let sizes: Vec<usize> = ms.iter().map(|m| m.size()).collect();
+        let a = pack_forest(&ms, cap, &BatchOptions::default()).unwrap();
+        let b = pack_forest_by_cost(&ms, &sizes, cap, &BatchOptions::default()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.batch, y.batch, "size costs must reproduce pack_forest exactly");
+        }
+    }
+
+    #[test]
+    fn cost_ordered_packing_reorders_by_cost_not_size() {
+        let ms = metas(6);
+        let cap = 3 * ms.iter().map(|m| m.size()).max().unwrap();
+        // reversed costs: the smallest tree is now the most expensive
+        let mut costs: Vec<usize> = ms.iter().map(|m| m.size()).collect();
+        costs.reverse();
+        let packed = pack_forest_by_cost(&ms, &costs, cap, &BatchOptions::default()).unwrap();
+        // still a complete, capacity-respecting packing of every tree
+        let mut seen: Vec<usize> =
+            packed.iter().flat_map(|b| b.members.iter().map(|m| m.source)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..ms.len()).collect::<Vec<_>>());
+        for b in &packed {
+            assert!(b.members.iter().map(|m| m.len).sum::<usize>() <= cap);
+        }
+        // and the highest-cost meta seeds the first bin
+        let max_cost = (0..ms.len()).max_by_key(|&i| (costs[i], ms.len() - i)).unwrap();
+        assert_eq!(packed[0].members[0].source, max_cost);
+    }
+
+    #[test]
+    fn cost_length_mismatch_is_an_error() {
+        let ms = metas(3);
+        let err = pack_forest_by_cost(&ms, &[1, 2], 4096, &BatchOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("costs"), "got: {err}");
     }
 
     #[test]

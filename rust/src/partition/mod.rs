@@ -17,16 +17,22 @@
 //!   Also home of [`forest::shard_by_cost`], the deterministic LPT sharder
 //!   that places whole trees onto data-parallel ranks (§3.4) for both the
 //!   training planner and the `distsim` cost model.
+//! * [`cost`] — the per-tree execution-cost seam both orderings consume:
+//!   the exact token-count default, or a least-squares model calibrated
+//!   online from measured per-rank execute walls (`cost_model:
+//!   "calibrated"`).
 
 pub mod binpack;
+pub mod cost;
 pub mod forest;
 pub mod plan;
 pub mod validate;
 
 pub use binpack::{exact_min_partitions, greedy_pack};
+pub use cost::{tree_features, Calibrator, CostModel};
 pub use forest::{
-    concat_metas, load_imbalance, pack_forest, shard_by_cost, ForestBatch, RankShards,
-    RelaySchedule,
+    concat_metas, load_imbalance, pack_forest, pack_forest_by_cost, shard_by_cost, ForestBatch,
+    RankShards, RelaySchedule,
 };
 pub use plan::{plan, PartitionSpec, Plan};
 pub use validate::validate_assignment;

@@ -133,6 +133,8 @@ impl BaselineTrainer {
             reduce_overlap_ms: 0.0,
             reduce_depth: 0,
             rank_imbalance: 1.0,
+            ingest_ms: 0.0,
+            cost_model_err: 0.0,
         })
     }
 

@@ -47,6 +47,18 @@ pub struct StepMetrics {
     /// Max-over-mean per-rank packed token load (>= 1.0; 1.0 = balanced —
     /// also the single-rank value).
     pub rank_imbalance: f64,
+    /// Milliseconds the planner spent ingesting (reading + folding raw
+    /// rollouts) for this step's batch — drained from the corpus source,
+    /// so steps that triggered an epoch's streaming fold carry its cost.
+    /// 0 for pre-built tree corpora and resident sources.
+    pub ingest_ms: f64,
+    /// Relative error of the sharder's predicted rank imbalance against
+    /// the imbalance measured from per-rank execute walls
+    /// (`|pred − meas| / meas`; 0 for a single rank).  Under the default
+    /// token cost model this scores the token≈wall assumption itself;
+    /// under `cost_model: "calibrated"` it tracks how well the fitted
+    /// model is balancing real time.
+    pub cost_model_err: f64,
 }
 
 impl StepMetrics {
@@ -70,7 +82,8 @@ impl StepMetrics {
     /// drifted twice before the two were forced through one seam.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},{:.3},{:.3},{},{:.4}",
+            "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},\
+             {:.3},{:.3},{},{:.4},{:.3},{:.4}",
             self.step,
             self.loss,
             self.weight_sum,
@@ -88,7 +101,9 @@ impl StepMetrics {
             self.reduce_ms,
             self.reduce_overlap_ms,
             self.reduce_depth,
-            self.rank_imbalance
+            self.rank_imbalance,
+            self.ingest_ms,
+            self.cost_model_err
         )
     }
 }
@@ -96,7 +111,7 @@ impl StepMetrics {
 /// Column schema of the per-step CSV ([`StepMetrics::csv_row`] order).
 pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,\
      reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
-     ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance";
+     ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance,ingest_ms,cost_model_err";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -140,6 +155,8 @@ mod tests {
             reduce_overlap_ms: 0.125,
             reduce_depth: 2,
             rank_imbalance: 1.125,
+            ingest_ms: 6.5,
+            cost_model_err: 0.0625,
         }
     }
 
@@ -185,5 +202,18 @@ mod tests {
         assert_eq!(cols[idx("reduce_depth")], "2");
         assert_eq!(cols[idx("rank_imbalance")], "1.1250");
         assert_eq!(cols[idx("step")], "3");
+    }
+
+    #[test]
+    fn csv_schema_appends_the_ingest_and_cost_columns_last() {
+        // additive-only schema growth: downstream consumers index the
+        // existing columns by position, so new columns must append
+        let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
+        assert_eq!(cols[cols.len() - 2], "ingest_ms");
+        assert_eq!(cols[cols.len() - 1], "cost_model_err");
+        let row = sample().csv_row();
+        let vals: Vec<&str> = row.split(',').collect();
+        assert_eq!(vals[vals.len() - 2], "6.500");
+        assert_eq!(vals[vals.len() - 1], "0.0625");
     }
 }

@@ -17,6 +17,7 @@
 
 use std::borrow::{Borrow, Cow};
 
+use crate::partition::cost::{self, CostModel};
 use crate::partition::forest::{self, ForestBatch, RelaySchedule};
 use crate::partition::{greedy_pack, plan, Plan};
 use crate::tree::linearize::path_chain;
@@ -110,13 +111,58 @@ impl StepPlan {
 /// would.
 pub struct ShardedPlan {
     pub ranks: Vec<StepPlan>,
-    /// Per-rank packed token load the sharder balanced on.
+    /// Per-rank model-priced load the sharder balanced on: packed token
+    /// counts under the default [`CostModel::Tokens`], predicted wall
+    /// microseconds once a calibrated model is active.
     pub loads: Vec<usize>,
+    /// Per-rank summed cost-feature vectors (`[tokens, depth, est_calls,
+    /// tree_count]` — feature vectors are additive), kept so the executor
+    /// can feed measured per-rank walls back as regression rows.
+    pub rank_feats: Vec<[f64; cost::N_FEATS]>,
+    /// The model that priced this plan (an `Arc` clone for calibrated
+    /// models, so executor-side [`Self::observe_walls`] feedback reaches
+    /// the planner's copy with no extra plumbing).
+    pub cost: CostModel,
 }
 
 impl ShardedPlan {
     pub fn n_ranks(&self) -> usize {
         self.ranks.len()
+    }
+
+    /// Relative error of the plan's *predicted* rank imbalance against the
+    /// imbalance actually measured from per-rank execute walls:
+    /// `|pred − meas| / meas`, both as max-over-mean ratios.  `0.0` for a
+    /// single rank (nothing to balance) or when no walls were measured.
+    pub fn cost_model_err(&self, walls: &[f64]) -> f64 {
+        if self.n_ranks() <= 1 || walls.len() != self.n_ranks() {
+            return 0.0;
+        }
+        let total: f64 = walls.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let mean = total / walls.len() as f64;
+        let meas = walls.iter().cloned().fold(0.0f64, f64::max) / mean;
+        if meas <= 0.0 {
+            return 0.0;
+        }
+        (self.rank_imbalance() - meas).abs() / meas
+    }
+
+    /// Feed measured per-rank execute walls (ms, indexed by rank) back
+    /// into the pricing model as regression rows.  Empty ranks are skipped
+    /// — a zero-feature row teaches nothing.  No-op under
+    /// [`CostModel::Tokens`].
+    pub fn observe_walls(&self, walls: &[f64]) {
+        if walls.len() != self.n_ranks() {
+            return;
+        }
+        for (r, &w) in walls.iter().enumerate() {
+            if self.loads[r] > 0 && w > 0.0 {
+                self.cost.observe(&self.rank_feats[r], w);
+            }
+        }
     }
 
     /// Max-over-mean rank load (`>= 1.0`; `1.0` = perfectly balanced) —
@@ -160,6 +206,12 @@ pub struct PlanSpec {
     pub partition_budget: Option<usize>,
     /// Cross-tree Forest Packing (off = seed's one-call-per-tree path).
     pub forest_packing: bool,
+    /// The per-tree cost seam rank sharding and FFD packing order by.
+    /// [`CostModel::Tokens`] (the default everywhere) prices exactly the
+    /// token base — plans are bit-identical to the pre-seam planner; a
+    /// calibrated model reprices from measured per-rank walls once warm
+    /// (`cost_model: "calibrated"`).
+    pub cost: CostModel,
 }
 
 impl PlanSpec {
@@ -176,6 +228,7 @@ impl PlanSpec {
             opts: engine.batch_options(),
             partition_budget,
             forest_packing,
+            cost: CostModel::Tokens,
         }
     }
 
@@ -191,7 +244,16 @@ impl PlanSpec {
             opts: BatchOptions::default(),
             partition_budget: None,
             forest_packing: true,
+            cost: CostModel::Tokens,
         }
+    }
+
+    /// Swap the cost seam (builder-style): `Tokens` keeps the exact seed
+    /// plans; a calibrated model starts pricing from measured walls once
+    /// it has absorbed enough observations.
+    pub fn with_cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
     }
 
     /// Chunk-pad a tree for hybrid models; borrows unchanged trees (no
@@ -225,17 +287,31 @@ impl PlanSpec {
     /// reference-counted `&[Arc<TrajectoryTree>]` batches.
     pub fn plan_tree<T: Borrow<TrajectoryTree>>(&self, trees: &[T]) -> crate::Result<GlobalPlan> {
         let mut metas = Vec::new();
+        let mut meta_costs = Vec::new();
         let mut plans = Vec::new();
+        // price the FFD ordering only once a calibrated model is live —
+        // the default (and any cold calibrated model) takes the exact
+        // pack_forest path, so seed plans stay bit-identical
+        let price_packing = self.forest_packing && self.cost.active();
         for tree in trees {
             let prepared = self.prepare(tree.borrow());
             if prepared.n_slots() <= self.capacity {
+                if price_packing {
+                    let t = tree.borrow();
+                    let feats = cost::tree_features(t, t.n_tree(), self.capacity);
+                    meta_costs.push(self.cost.price(&feats, prepared.n_slots()));
+                }
                 metas.push(crate::tree::serialize(&prepared));
             } else {
                 plans.push(self.partition_tree(&prepared)?);
             }
         }
         let forests = if self.forest_packing {
-            forest::pack_forest(&metas, self.capacity, &self.opts)?
+            if price_packing {
+                forest::pack_forest_by_cost(&metas, &meta_costs, self.capacity, &self.opts)?
+            } else {
+                forest::pack_forest(&metas, self.capacity, &self.opts)?
+            }
         } else {
             (0..metas.len())
                 .map(|i| forest::concat_metas(&metas, &[i], self.capacity, &self.opts))
@@ -322,18 +398,40 @@ impl PlanSpec {
         &self,
         trees: &[T],
         n_ranks: usize,
-        cost: impl Fn(&TrajectoryTree) -> usize,
+        base_cost: impl Fn(&TrajectoryTree) -> usize,
         plan_rank: impl Fn(&[&TrajectoryTree]) -> crate::Result<StepPlan>,
     ) -> crate::Result<ShardedPlan> {
-        let costs: Vec<usize> = trees.iter().map(|t| cost(t.borrow())).collect();
+        let feats: Vec<[f64; cost::N_FEATS]> = trees
+            .iter()
+            .map(|t| {
+                let t = t.borrow();
+                cost::tree_features(t, base_cost(t), self.capacity)
+            })
+            .collect();
+        // CostModel::Tokens returns the base unchanged, so the default LPT
+        // input — and with it every shard and load — is exactly the
+        // pre-seam token sharding, bit for bit
+        let costs: Vec<usize> = trees
+            .iter()
+            .zip(&feats)
+            .map(|(t, f)| self.cost.price(f, base_cost(t.borrow())))
+            .collect();
         let shards = forest::shard_by_cost(&costs, n_ranks)?;
         let mut ranks = Vec::with_capacity(n_ranks);
+        let mut rank_feats = Vec::with_capacity(n_ranks);
         for ids in &shards.ranks {
             let rank_trees: Vec<&TrajectoryTree> =
                 ids.iter().map(|&i| trees[i].borrow()).collect();
             ranks.push(plan_rank(&rank_trees)?);
+            let mut f = [0.0f64; cost::N_FEATS];
+            for &i in ids {
+                for (acc, v) in f.iter_mut().zip(&feats[i]) {
+                    *acc += v;
+                }
+            }
+            rank_feats.push(f);
         }
-        Ok(ShardedPlan { ranks, loads: shards.loads })
+        Ok(ShardedPlan { ranks, loads: shards.loads, rank_feats, cost: self.cost.clone() })
     }
 }
 
@@ -440,6 +538,74 @@ mod tests {
             assert!(matches!(r, StepPlan::Baseline(_)));
         }
         assert_eq!(p.flat_tokens(), trees.iter().map(|t| t.n_flat()).sum::<usize>());
+    }
+
+    #[test]
+    fn sharded_plan_carries_additive_rank_features() {
+        let trees: Vec<TrajectoryTree> = (0..6).map(|s| gen::uniform(70 + s, 9, 5, 0.6)).collect();
+        let p = spec(4096).plan_sharded_tree(&trees, 3).unwrap();
+        assert_eq!(p.rank_feats.len(), 3);
+        let tok: f64 = p.rank_feats.iter().map(|f| f[0]).sum();
+        assert_eq!(tok, trees.iter().map(|t| t.n_tree()).sum::<usize>() as f64);
+        let count: f64 = p.rank_feats.iter().map(|f| f[3]).sum();
+        assert_eq!(count, trees.len() as f64, "bias feature counts trees per rank");
+        assert!(matches!(p.cost, CostModel::Tokens), "default seam is the token model");
+    }
+
+    #[test]
+    fn cost_model_err_compares_predicted_and_measured_imbalance() {
+        let trees: Vec<TrajectoryTree> = (0..8).map(|s| gen::uniform(80 + s, 9, 5, 0.6)).collect();
+        let p = spec(4096).plan_sharded_tree(&trees, 4).unwrap();
+        // perfectly equal measured walls: measured imbalance is 1.0, so the
+        // error is exactly the predicted imbalance's excess over 1.0
+        let err = p.cost_model_err(&[5.0, 5.0, 5.0, 5.0]);
+        assert!((err - (p.rank_imbalance() - 1.0)).abs() < 1e-12);
+        // walls matching the predicted loads: zero error
+        let walls: Vec<f64> = p.loads.iter().map(|&l| l as f64).collect();
+        assert!(p.cost_model_err(&walls) < 1e-12);
+        // degenerate inputs are quiet zeros
+        assert_eq!(p.cost_model_err(&[1.0, 2.0]), 0.0, "length mismatch");
+        assert_eq!(p.cost_model_err(&[0.0, 0.0, 0.0, 0.0]), 0.0, "no measured time");
+        let single = spec(4096).plan_sharded_tree(&trees, 1).unwrap();
+        assert_eq!(single.cost_model_err(&[5.0]), 0.0, "single rank");
+    }
+
+    #[test]
+    fn observe_walls_feeds_only_nonempty_ranks() {
+        let trees: Vec<TrajectoryTree> = (0..2).map(|s| gen::uniform(s, 8, 4, 0.5)).collect();
+        let sp = spec(4096).with_cost_model(CostModel::calibrated(64));
+        let p = sp.plan_sharded_tree(&trees, 4).unwrap();
+        p.observe_walls(&[3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(sp.cost.n_obs(), 2, "two empty ranks must be skipped");
+        // Tokens: observing is a no-op
+        let q = spec(4096).plan_sharded_tree(&trees, 4).unwrap();
+        q.observe_walls(&[3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(q.cost.n_obs(), 0);
+    }
+
+    #[test]
+    fn warm_calibrated_model_reprices_sharding_but_conserves_the_batch() {
+        // teach a call-count law: wall = 1 ms per tree, blind to tokens —
+        // the opposite of the token baseline
+        let m = CostModel::calibrated(2);
+        for i in 1..=4u64 {
+            let i = i as f64;
+            m.observe(&[800.0 * i, 90.0 * i, i, i], i);
+        }
+        assert!(m.active());
+        let trees: Vec<TrajectoryTree> = (0..9).map(|s| gen::uniform(50 + s, 9, 5, 0.6)).collect();
+        let sp = spec(4096).with_cost_model(m);
+        let p = sp.plan_sharded_tree(&trees, 3).unwrap();
+        // loads are now predicted microseconds, not tokens...
+        assert!(p.loads.iter().sum::<usize>() != trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        // ...but the global batch is untouched: every tree plans exactly once
+        assert_eq!(p.tree_tokens(), trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        assert_eq!(p.flat_tokens(), trees.iter().map(|t| t.n_flat()).sum::<usize>());
+        assert_eq!(p.n_ranks(), 3);
+        // per-tree-cost law prices every tree ~equally: 9 trees over 3
+        // ranks must balance to 3 trees per rank
+        let counts: Vec<f64> = p.rank_feats.iter().map(|f| f[3]).collect();
+        assert_eq!(counts, vec![3.0, 3.0, 3.0], "call-count law balances tree counts");
     }
 
     #[test]

@@ -308,6 +308,8 @@ impl TreeTrainer {
             reduce_overlap_ms: 0.0,
             reduce_depth: 0,
             rank_imbalance: 1.0,
+            ingest_ms: 0.0,
+            cost_model_err: 0.0,
         })
     }
 

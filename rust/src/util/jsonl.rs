@@ -3,14 +3,97 @@
 //! error with `label:line` so a bad record in a million-line corpus is
 //! findable.  Typed readers supply their record parser per `next_record`
 //! call and stay thin wrappers.
+//!
+//! The read path is zero-copy per line: [`LineReader`] fills a reusable
+//! chunk buffer (growing only for oversized lines) and hands out borrowed
+//! byte slices, so the hot ingestion loop performs no per-line `String`
+//! allocation — the JSON parser reads straight out of the chunk.
 
-use std::io::BufRead;
+use std::io::Read;
 use std::path::Path;
 
 use super::json::Json;
 
-pub struct JsonlReader<R: BufRead> {
-    lines: std::io::Lines<R>,
+/// Default chunk size: large enough that refills are rare relative to
+/// lines, small enough to stay cache-friendly.
+const CHUNK: usize = 128 * 1024;
+
+/// Chunked line splitter over any [`Read`]: lines are borrowed slices into
+/// a reusable internal buffer (valid until the next call).  Handles a final
+/// line without trailing newline and strips a trailing `\r` (CRLF logs).
+pub struct LineReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    /// Next unconsumed byte / end of valid bytes in `buf`.
+    start: usize,
+    end: usize,
+    eof: bool,
+}
+
+impl<R: Read> LineReader<R> {
+    pub fn new(src: R) -> Self {
+        Self::with_capacity(CHUNK, src)
+    }
+
+    pub fn with_capacity(cap: usize, src: R) -> Self {
+        Self { src, buf: vec![0; cap.max(64)], start: 0, end: 0, eof: false }
+    }
+
+    /// Locate the next line, returning its byte range in `self.buf`.
+    /// Separated from [`Self::next_line`] so the borrow of `buf` starts
+    /// only after all mutation is done.
+    fn fill_line(&mut self) -> std::io::Result<Option<(usize, usize)>> {
+        loop {
+            if let Some(i) = self.buf[self.start..self.end].iter().position(|&b| b == b'\n') {
+                let a = self.start;
+                let mut b = self.start + i;
+                self.start = b + 1;
+                if b > a && self.buf[b - 1] == b'\r' {
+                    b -= 1;
+                }
+                return Ok(Some((a, b)));
+            }
+            if self.eof {
+                if self.start < self.end {
+                    let (a, mut b) = (self.start, self.end);
+                    self.start = self.end;
+                    if b > a && self.buf[b - 1] == b'\r' {
+                        b -= 1;
+                    }
+                    return Ok(Some((a, b)));
+                }
+                return Ok(None);
+            }
+            // no newline in the window: compact the partial line to the
+            // front, then refill the tail of the buffer
+            if self.start > 0 {
+                self.buf.copy_within(self.start..self.end, 0);
+                self.end -= self.start;
+                self.start = 0;
+            } else if self.end == self.buf.len() {
+                // one line larger than the whole buffer: grow
+                self.buf.resize(self.buf.len() * 2, 0);
+            }
+            let n = self.src.read(&mut self.buf[self.end..])?;
+            if n == 0 {
+                self.eof = true;
+            }
+            self.end += n;
+        }
+    }
+
+    /// Next line as a borrowed byte slice (no allocation); `None` at EOF.
+    pub fn next_line(&mut self) -> Option<std::io::Result<&[u8]>> {
+        match self.fill_line() {
+            Err(e) => Some(Err(e)),
+            Ok(None) => None,
+            Ok(Some((a, b))) => Some(Ok(&self.buf[a..b])),
+        }
+    }
+}
+
+pub struct JsonlReader<R: Read> {
+    lines: LineReader<R>,
     label: String,
     line_no: usize,
 }
@@ -23,19 +106,20 @@ impl JsonlReader<std::io::BufReader<std::fs::File>> {
     }
 }
 
-impl<R: BufRead> JsonlReader<R> {
+impl<R: Read> JsonlReader<R> {
     pub fn new(reader: R, label: &str) -> Self {
-        Self { lines: reader.lines(), label: label.to_string(), line_no: 0 }
+        Self { lines: LineReader::new(reader), label: label.to_string(), line_no: 0 }
     }
 
     /// Next non-blank line, JSON-parsed and fed to `parse`; errors from
-    /// either stage carry `label:line`.
+    /// either stage carry `label:line`.  The line is parsed in place out of
+    /// the chunk buffer — no per-line copy.
     pub fn next_record<T>(
         &mut self,
         parse: impl FnOnce(&Json) -> crate::Result<T>,
     ) -> Option<crate::Result<T>> {
         loop {
-            let line = match self.lines.next()? {
+            let line = match self.lines.next_line()? {
                 Ok(l) => l,
                 Err(e) => {
                     return Some(Err(anyhow::anyhow!(
@@ -46,10 +130,13 @@ impl<R: BufRead> JsonlReader<R> {
                 }
             };
             self.line_no += 1;
-            if line.trim().is_empty() {
+            if line.iter().all(|b| b.is_ascii_whitespace()) {
                 continue;
             }
-            let parsed = Json::parse(&line).and_then(|v| parse(&v));
+            let parsed = std::str::from_utf8(line)
+                .map_err(|e| anyhow::anyhow!("invalid utf-8: {e}"))
+                .and_then(Json::parse)
+                .and_then(|v| parse(&v));
             return Some(
                 parsed.map_err(|e| anyhow::anyhow!("{}:{}: {e}", self.label, self.line_no)),
             );
@@ -82,5 +169,35 @@ mod tests {
         assert!(r.next_record(|v| v.req("x").cloned()).unwrap().is_ok());
         let err = r.next_record(|v| v.req("x").cloned()).unwrap().unwrap_err().to_string();
         assert!(err.contains("f.jsonl:2:"), "{err}");
+    }
+
+    #[test]
+    fn line_reader_splits_across_chunk_boundaries() {
+        // a tiny buffer forces compaction + refill inside lines
+        let src = "alpha\nbeta-which-is-longer\r\n\ngamma";
+        let mut lr = LineReader::with_capacity(64, src.as_bytes());
+        let mut got: Vec<String> = Vec::new();
+        while let Some(l) = lr.next_line() {
+            got.push(String::from_utf8(l.unwrap().to_vec()).unwrap());
+        }
+        assert_eq!(got, vec!["alpha", "beta-which-is-longer", "", "gamma"]);
+    }
+
+    #[test]
+    fn line_reader_grows_for_oversized_lines() {
+        let long = "x".repeat(5000);
+        let src = format!("{long}\nshort\n");
+        let mut lr = LineReader::with_capacity(64, src.as_bytes());
+        assert_eq!(lr.next_line().unwrap().unwrap().len(), 5000);
+        assert_eq!(lr.next_line().unwrap().unwrap(), b"short");
+        assert!(lr.next_line().is_none());
+    }
+
+    #[test]
+    fn final_line_without_newline_is_yielded() {
+        let mut lr = LineReader::new("a\nb".as_bytes());
+        assert_eq!(lr.next_line().unwrap().unwrap(), b"a");
+        assert_eq!(lr.next_line().unwrap().unwrap(), b"b");
+        assert!(lr.next_line().is_none());
     }
 }

@@ -1,0 +1,153 @@
+//! Parallel-ingestion determinism contract (docs/ingest.md): folding a
+//! rollout corpus across N shard threads is **bit-identical** — trees,
+//! emission order, and stats — to the single-threaded [`fold_corpus`],
+//! for any thread count, on corpora that stress the parts that could
+//! plausibly diverge: heavy session interleaving, LRU eviction churn
+//! (`max_open_sessions` far below the live-session count), re-opened
+//! sessions, and `max_seq_len` trimming at flush time.
+
+use tree_train::ingest::{
+    self, fold_corpus, fold_corpus_parallel, IngestConfig, IngestStats, RolloutRecord,
+};
+use tree_train::tree::{gen, TrajectoryTree};
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+/// Bit-exact fingerprint of an emitted tree: structure plus every token
+/// and supervision bit (f32 compared as bits, so -0.0 vs 0.0 or NaN
+/// payload drift would be caught).
+type NodeSig = (i32, Vec<i32>, Vec<u32>, Vec<u32>, usize);
+
+fn fingerprint(t: &TrajectoryTree) -> Vec<NodeSig> {
+    t.nodes
+        .iter()
+        .map(|n| {
+            (
+                n.parent,
+                n.tokens.clone(),
+                n.trainable.iter().map(|w| w.to_bits()).collect(),
+                n.advantage.iter().map(|a| a.to_bits()).collect(),
+                n.pad_tail,
+            )
+        })
+        .collect()
+}
+
+fn fingerprints(trees: &[TrajectoryTree]) -> Vec<Vec<NodeSig>> {
+    trees.iter().map(fingerprint).collect()
+}
+
+fn tmp_corpus(name: &str, records: &[RolloutRecord]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("par-ingest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.jsonl"));
+    ingest::save_rollouts(records, &path).unwrap();
+    path
+}
+
+/// Single-threaded reference vs. every thread count, on one corpus file.
+/// Emission *order* matters (the run loop consumes trees in this order),
+/// so fingerprints are compared as ordered sequences, never sorted.
+fn assert_thread_invariant(name: &str, records: &[RolloutRecord], cfg: &IngestConfig) {
+    let path = tmp_corpus(name, records);
+    let (ref_trees, ref_stats): (Vec<TrajectoryTree>, IngestStats) =
+        fold_corpus(&path, cfg).unwrap();
+    let ref_fp = fingerprints(&ref_trees);
+    for threads in THREADS {
+        let (trees, report) = fold_corpus_parallel(&path, cfg, threads).unwrap();
+        assert_eq!(
+            ref_fp,
+            fingerprints(&trees),
+            "{name}: trees or emission order diverged at {threads} threads"
+        );
+        assert_eq!(ref_stats, report.stats, "{name}: stats diverged at {threads} threads");
+        assert_eq!(report.threads, threads, "{name}: report thread count");
+        assert_eq!(report.per_shard.len(), threads, "{name}: per-shard arity");
+        let shard_records: u64 = report.per_shard.iter().map(|s| s.records).sum();
+        assert_eq!(shard_records, ref_stats.records_in, "{name}: shard subtotals");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// One session per generated tree, interleaved `group` sessions at a time
+/// — the agentic-log shape that stresses the LRU window.
+fn interleaved_corpus(
+    seeds: std::ops::Range<u64>,
+    ov: gen::Overlap,
+    group: usize,
+) -> Vec<RolloutRecord> {
+    let per_session: Vec<Vec<RolloutRecord>> = seeds
+        .map(|s| {
+            let t = gen::agentic(s, ov, 6, 128);
+            ingest::records_from_tree(&t, &format!("sess-{s}"))
+        })
+        .collect();
+    ingest::interleave_sessions(per_session, group)
+}
+
+#[test]
+fn parallel_fold_is_bit_identical_across_thread_counts() {
+    // 10 sessions interleaved 4 at a time, LRU window of 3: constant
+    // eviction + re-open churn while records are still arriving
+    let records = interleaved_corpus(0..10, gen::Overlap::High, 4);
+    let cfg = IngestConfig { max_open_sessions: 3, ..Default::default() };
+    assert_thread_invariant("interleaved-high", &records, &cfg);
+}
+
+#[test]
+fn parallel_fold_matches_across_overlap_regimes() {
+    for (i, ov) in [gen::Overlap::Low, gen::Overlap::Medium].into_iter().enumerate() {
+        let records = interleaved_corpus(20..26, ov, 3);
+        let cfg = IngestConfig { max_open_sessions: 2, ..Default::default() };
+        assert_thread_invariant(&format!("regime-{i}"), &records, &cfg);
+    }
+}
+
+#[test]
+fn parallel_fold_honors_max_seq_len_trimming() {
+    // trimming happens at flush time inside the shard workers; the trimmed
+    // token accounting must still merge to the single-threaded totals
+    let records = interleaved_corpus(40..46, gen::Overlap::High, 6);
+    let longest = records.iter().map(|r| r.len()).max().unwrap();
+    let cfg = IngestConfig {
+        max_seq_len: Some((longest / 2).max(4)),
+        max_open_sessions: 2,
+        ..Default::default()
+    };
+    let path = tmp_corpus("trimmed", &records);
+    let (_, ref_stats) = fold_corpus(&path, &cfg).unwrap();
+    assert!(ref_stats.trimmed_tokens > 0, "corpus must actually trigger trimming");
+    std::fs::remove_file(&path).ok();
+    assert_thread_invariant("trimmed", &records, &cfg);
+}
+
+#[test]
+fn parallel_fold_handles_degenerate_corpora() {
+    // single session (every record lands on one shard; the other workers
+    // only parse) and a wide all-distinct-session corpus (no sharing at
+    // all) are the two boundary shapes
+    let one = ingest::records_from_tree(&gen::agentic(7, gen::Overlap::High, 8, 128), "only");
+    assert_thread_invariant("one-session", &one, &IngestConfig::default());
+
+    let wide: Vec<RolloutRecord> = (0..24)
+        .map(|i| RolloutRecord::new(&format!("w-{i}"), vec![i, i + 1, i + 2]))
+        .collect();
+    let cfg = IngestConfig { max_open_sessions: 5, ..Default::default() };
+    assert_thread_invariant("wide", &wide, &cfg);
+}
+
+#[test]
+fn parallel_fold_reports_fold_errors_at_the_single_thread_line() {
+    // a mid-corpus fold error (empty record) must abort with the same
+    // `path:line` the single-threaded reader reports, at any thread count
+    let mut records = interleaved_corpus(60..64, gen::Overlap::Medium, 4);
+    records.insert(records.len() / 2, RolloutRecord::new("bad", vec![]));
+    let path = tmp_corpus("bad-line", &records);
+    let cfg = IngestConfig { max_open_sessions: 2, ..Default::default() };
+    let ref_err = fold_corpus(&path, &cfg).unwrap_err().to_string();
+    for threads in THREADS {
+        let err = fold_corpus_parallel(&path, &cfg, threads).unwrap_err().to_string();
+        assert_eq!(ref_err, err, "error text diverged at {threads} threads");
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,342 @@
+"""Python mirror of the serve admission policy (``rust/src/serve/``).
+
+Mirrors ``live.rs`` (the ripeness state machine) and ``source.rs`` (FIFO
+ripe queue, fold credits, bounded-staleness cut path) *without* the trie
+or the trainer: trees are stood in for by record counts, because every
+claim under test is about **ordering**, not content.
+
+Three properties, each of which the Rust replay gate relies on:
+
+1. **Verdict order** — within one fold: end-marker flush, then LRU
+   evictions (ascending last-touch), then idle flushes (ascending
+   last-touch, stop at the first in-window session).  Quiesce flushes
+   ascending last-touch.  End markers for unknown sessions are no-ops.
+2. **Cut-composition invariance** — the ripe sequence is a pure function
+   of arrival order, so batch composition depends only on
+   ``(arrival order, trees_per_batch)``: an eager pump (fold to the cap
+   before every cut) and a lazy pump (fold the bare minimum per cut)
+   produce identical cut compositions on adversarial interleavings.
+   This is the theorem that makes the journal sufficient for bit-exact
+   replay: recording arrival order pins batch composition.
+3. **Bounded staleness** — with ``ripe_cap = K * trees_per_batch`` and an
+   eager pump, no entry waits more than ``K`` cuts between ripening and
+   entering a batch (one session flush may overshoot the cap by
+   ``flush_size - 1``, which the bound absorbs — same check as
+   ``source.rs``).
+
+Run directly: ``python3 python/tests/test_serve_replay.py`` (no pytest,
+no jax).  Keep in lockstep with the Rust unit tests in ``live.rs`` /
+``source.rs`` and ``rust/tests/serve_replay.rs``.
+"""
+
+import itertools
+import random
+
+END, REC = "end", "rec"
+
+
+class Folder:
+    """Mirror of ``live.rs::LiveFolder`` with record counts for trees."""
+
+    def __init__(self, max_open, idle_timeout):
+        assert max_open >= 1
+        self.max_open = max_open
+        self.idle_timeout = idle_timeout
+        self.open = {}  # session -> [n_records, last_seq]
+        self.by_touch = {}  # last_seq -> session (unique: one touch per seq)
+
+    def _flush(self, session, reason):
+        n, last = self.open.pop(session)
+        del self.by_touch[last]
+        return (session, reason, n)
+
+    def fold(self, seq, kind, session):
+        out = []
+        if kind == END:
+            if session in self.open:
+                out.append(self._flush(session, "end"))
+        else:
+            if session in self.open:
+                s = self.open[session]
+                del self.by_touch[s[1]]
+                s[0] += 1
+                s[1] = seq
+            else:
+                self.open[session] = [1, seq]
+            self.by_touch[seq] = session
+            while len(self.open) > self.max_open:
+                victim = self.by_touch[min(self.by_touch)]
+                out.append(self._flush(victim, "lru"))
+        if self.idle_timeout > 0:
+            while self.by_touch:
+                last = min(self.by_touch)
+                if seq - last <= self.idle_timeout:
+                    break
+                out.append(self._flush(self.by_touch[last], "idle"))
+        return out
+
+    def quiesce(self):
+        order = [self.by_touch[k] for k in sorted(self.by_touch)]
+        return [self._flush(s, "quiesce") for s in order]
+
+
+def ripe_sequence(arrivals, max_open=64, idle_timeout=0):
+    """Fold a whole arrival list; flat list of (session, reason, n)."""
+    f = Folder(max_open, idle_timeout)
+    out = []
+    for seq, (kind, session) in enumerate(arrivals, start=1):
+        out.extend(f.fold(seq, kind, session))
+    out.extend(f.quiesce())
+    return out
+
+
+class Source:
+    """Mirror of ``source.rs::LiveSource``: fold credits + FIFO cuts.
+
+    ``eager=True`` folds until the ripe queue reaches ``ripe_cap`` before
+    every cut (the live pump); ``eager=False`` folds only until one batch
+    can be cut (maximal laziness).  Composition must not depend on this.
+    """
+
+    def __init__(self, arrivals, cfg, eager):
+        self.arrivals = list(arrivals)
+        self.cfg = cfg
+        self.eager = eager
+        self.folder = Folder(cfg["max_open"], cfg["idle_timeout"])
+        self.ripe = []  # FIFO of (session, reason, n, ripe_cut)
+        self.seq = 0
+        self.cuts = 0
+        self.max_staleness = 0
+        self.drained = False
+
+    def _pump(self, need):
+        while not self.drained:
+            if self.eager:
+                if len(self.ripe) >= self.cfg["ripe_cap"]:
+                    return
+            elif len(self.ripe) >= need:
+                return
+            if self.seq == len(self.arrivals):
+                self.drained = True
+                for g in self.folder.quiesce():
+                    self.ripe.append(g + (self.cuts,))
+                return
+            kind, session = self.arrivals[self.seq]
+            self.seq += 1
+            for g in self.folder.fold(self.seq, kind, session):
+                self.ripe.append(g + (self.cuts,))
+            if not self.eager and len(self.ripe) >= need:
+                return
+
+    def cut(self, n):
+        self._pump(n)
+        if len(self.ripe) < n:
+            return None  # spool exhausted mid-batch
+        batch = self.ripe[:n]
+        del self.ripe[:n]
+        for (_, _, _, ripe_cut) in batch:
+            stale = self.cuts - ripe_cut
+            self.max_staleness = max(self.max_staleness, stale)
+            assert stale <= self.cfg["staleness_bound"], (
+                f"bounded-staleness contract violated: {stale} > "
+                f"{self.cfg['staleness_bound']}"
+            )
+        self.cuts += 1
+        return [(s, r, cnt) for (s, r, cnt, _) in batch]
+
+
+def run_cuts(arrivals, cfg, eager):
+    src = Source(arrivals, cfg, eager)
+    out = []
+    while True:
+        b = src.cut(cfg["tpb"])
+        if b is None:
+            return out, src.max_staleness
+        out.append(b)
+
+
+def adversarial_arrivals(seed, n_sessions=12, avg_records=4):
+    """Randomly interleaved sessions with hostile marker placement:
+    ends before any record, double ends, ends for unknown sessions,
+    post-end revivals (a new session instance under the same name)."""
+    r = random.Random(seed)
+    events = []
+    for s in range(n_sessions):
+        name = f"s{s:02d}"
+        recs = [(REC, name)] * r.randint(1, 2 * avg_records)
+        style = r.random()
+        if style < 0.25:
+            recs.append((END, name))  # well-behaved
+        elif style < 0.45:
+            recs += [(END, name), (END, name)]  # double end
+        elif style < 0.6:
+            recs.insert(0, (END, name))  # end before any record
+        elif style < 0.75:
+            cut = r.randint(1, len(recs))
+            recs.insert(cut, (END, name))  # end mid-stream, then revival
+        # else: no end marker at all (flushes via LRU/idle/quiesce)
+        events.append(recs)
+    for _ in range(3):
+        events.append([(END, f"ghost{r.randint(0, 9)}")])  # never-seen ends
+    out = []
+    live = [e for e in events if e]
+    while live:
+        pick = r.randrange(len(live))
+        out.append(live[pick].pop(0))
+        if not live[pick]:
+            live.pop(pick)
+    return out
+
+
+# ---------------------------------------------------------------- policy
+
+
+def test_end_marker_flushes_and_unknown_end_is_noop():
+    f = Folder(8, 0)
+    assert f.fold(1, REC, "a") == []
+    assert f.fold(2, REC, "a") == []
+    assert f.fold(3, END, "a") == [("a", "end", 2)]
+    assert f.fold(4, END, "a") == []  # double end: no-op
+    assert f.fold(5, END, "ghost") == []  # never seen: no-op
+    assert f.quiesce() == []
+
+
+def test_lru_evicts_least_recently_touched():
+    f = Folder(2, 0)
+    f.fold(1, REC, "a")
+    f.fold(2, REC, "b")
+    f.fold(3, REC, "a")  # refreshes a: b is now oldest
+    assert f.fold(4, REC, "c") == [("b", "lru", 1)]
+    assert sorted(f.open) == ["a", "c"]
+
+
+def test_idle_timeout_in_fold_steps_and_zero_disables():
+    f = Folder(8, 2)
+    f.fold(1, REC, "a")
+    assert f.fold(2, REC, "b") == []
+    assert f.fold(3, REC, "b") == []  # seq-last("a")=2, not > 2: in window
+    assert f.fold(4, REC, "b") == [("a", "idle", 1)]
+    g = Folder(8, 0)
+    g.fold(1, REC, "a")
+    for seq in range(2, 50):
+        assert g.fold(seq, REC, "b") == []  # 0 disables idle flushing
+
+
+def test_verdict_order_lru_before_idle_in_one_fold():
+    # mirror of live.rs::one_fold_orders_lru_before_idle
+    f = Folder(2, 3)
+    f.fold(1, REC, "idle1")
+    f.fold(2, REC, "keep")
+    out = f.fold(6, REC, "new")  # overflows max_open AND ages both out
+    assert out == [("idle1", "lru", 1), ("keep", "idle", 1)]
+
+
+def test_quiesce_flushes_in_touch_order_and_is_idempotent():
+    f = Folder(8, 0)
+    f.fold(1, REC, "b")
+    f.fold(2, REC, "a")
+    f.fold(3, REC, "b")  # b touched last
+    assert f.quiesce() == [("a", "quiesce", 1), ("b", "quiesce", 2)]
+    assert f.quiesce() == []
+
+
+def test_revival_after_flush_is_a_fresh_session_instance():
+    f = Folder(8, 0)
+    f.fold(1, REC, "a")
+    f.fold(2, END, "a")
+    assert f.fold(3, REC, "a") == []  # reopened, count restarts
+    assert f.fold(4, END, "a") == [("a", "end", 1)]
+
+
+def test_every_record_flushed_exactly_once():
+    for seed in range(20):
+        arrivals = adversarial_arrivals(seed)
+        n_records = sum(1 for k, _ in arrivals if k == REC)
+        for max_open, idle in [(64, 0), (4, 0), (64, 5), (3, 4)]:
+            groups = ripe_sequence(arrivals, max_open, idle)
+            assert sum(n for _, _, n in groups) == n_records, (seed, max_open, idle)
+
+
+# ------------------------------------------------- composition invariance
+
+
+def test_cut_composition_independent_of_pump_interleaving():
+    cfg = {"max_open": 6, "idle_timeout": 0, "tpb": 3,
+           "staleness_bound": 4, "ripe_cap": 12}
+    for seed in range(25):
+        arrivals = adversarial_arrivals(seed)
+        eager, _ = run_cuts(arrivals, cfg, eager=True)
+        lazy, _ = run_cuts(arrivals, cfg, eager=False)
+        assert eager == lazy, f"composition diverged on seed {seed}"
+
+
+def test_composition_is_replayable_from_arrival_order_alone():
+    # shuffling *when* folds happen (pump strategy) never changes what is
+    # cut; shuffling the *arrival order itself* does — the journal records
+    # exactly the part that matters.
+    cfg = {"max_open": 8, "idle_timeout": 3, "tpb": 2,
+           "staleness_bound": 8, "ripe_cap": 16}
+    arrivals = adversarial_arrivals(7)
+    reference, _ = run_cuts(arrivals, cfg, eager=True)
+    replay, _ = run_cuts(list(arrivals), cfg, eager=False)
+    assert replay == reference
+    swapped = list(arrivals)
+    i = next(k for k in range(len(swapped) - 1)
+             if swapped[k][1] != swapped[k + 1][1]
+             and swapped[k][0] == REC and swapped[k + 1][0] == REC)
+    swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+    tampered, _ = run_cuts(swapped, cfg, eager=True)
+    # not guaranteed to differ for *every* swap, but this generator's
+    # sessions are LRU/idle-sensitive enough that it must here
+    assert tampered != reference, "swap of two sessions' records went unnoticed"
+
+
+# ------------------------------------------------------ bounded staleness
+
+
+def test_staleness_bounded_by_k_with_default_cap():
+    # the by-construction bound covers steady-state ripening (end / LRU /
+    # idle verdicts, folded one credit at a time under the cap check); the
+    # producer contract (docs/serve.md) therefore requires end markers —
+    # a shutdown quiesce of many never-ended sessions floods the queue in
+    # one fold and is exactly the case the cut path's hard error catches
+    for k, tpb in itertools.product([1, 2, 4], [1, 2, 3]):
+        cfg = {"max_open": 64, "idle_timeout": 0, "tpb": tpb,
+               "staleness_bound": k, "ripe_cap": k * tpb}
+        for seed in range(10):
+            arrivals = adversarial_arrivals(seed, n_sessions=16)
+            names = {s for _, s in arrivals}
+            arrivals += [(END, s) for s in sorted(names)]  # all ended
+            _, max_stale = run_cuts(arrivals, cfg, eager=True)
+            assert max_stale <= k, (k, tpb, seed, max_stale)
+
+
+def test_quiesce_flood_of_unended_sessions_trips_the_hard_error():
+    cfg = {"max_open": 64, "idle_timeout": 0, "tpb": 1,
+           "staleness_bound": 1, "ripe_cap": 1}
+    arrivals = [(REC, f"s{s}") for s in range(6)]  # nobody ever ends
+    try:
+        run_cuts(arrivals, cfg, eager=True)
+    except AssertionError as e:
+        assert "bounded-staleness contract violated" in str(e)
+    else:
+        raise AssertionError("quiesce flood must violate a depth-1 bound")
+
+
+def test_staleness_actually_reaches_the_bound():
+    # the bound must be tight, not vacuous: with a deep cap and eager
+    # pumping, early-ripened sessions genuinely wait
+    cfg = {"max_open": 64, "idle_timeout": 0, "tpb": 1,
+           "staleness_bound": 4, "ripe_cap": 4}
+    arrivals = []
+    for s in range(12):
+        arrivals += [(REC, f"s{s}"), (END, f"s{s}")]
+    _, max_stale = run_cuts(arrivals, cfg, eager=True)
+    assert max_stale >= 2, f"bound never exercised (max {max_stale})"
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

@@ -1,0 +1,128 @@
+//! Serve-path throughput: spool tailing, live trie folding, ripeness.
+//!
+//! Builds a session-sharded spool directory (what `tree-train gen-data
+//! --spool-segments N --end-markers` writes and real producers append),
+//! then times the three stages a live `tree-train serve` run pays per
+//! record *before* any training happens:
+//!
+//! 1. `spool_tail_decode` — tail every segment in name order, split
+//!    lines, parse JSON into [`SpoolRecord`]s.
+//! 2. `live_fold_ripen`   — the same, plus the per-session radix-trie
+//!    fold and the full ripeness policy (end markers, LRU, idle scan).
+//!
+//! The gap between the two is the policy's own cost.  Results merge into
+//! `results/BENCH_serve.json` via `update_json_file_key`, so the smoke
+//! jobs' sections survive.
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use tree_train::ingest::records_from_tree;
+use tree_train::serve::live::LiveFolder;
+use tree_train::serve::spool::{SpoolRecord, SpoolWatcher};
+use tree_train::tree::gen;
+use tree_train::util::bench::bench;
+use tree_train::util::json::{update_json_file_key, Json};
+
+const SESSIONS: usize = 48;
+const SEGMENTS: usize = 4;
+
+fn build_spool(dir: &std::path::Path) -> usize {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut files: Vec<_> = (0..SEGMENTS)
+        .map(|i| std::fs::File::create(dir.join(format!("seg-{i:03}.jsonl"))).unwrap())
+        .collect();
+    let mut rollout_tokens = 0usize;
+    for s in 0..SESSIONS {
+        let ov = match s % 3 {
+            0 => gen::Overlap::High,
+            1 => gen::Overlap::Medium,
+            _ => gen::Overlap::Low,
+        };
+        let tree = gen::agentic(s as u64, ov, 6, 256);
+        let f = &mut files[s % SEGMENTS];
+        for r in records_from_tree(&tree, &format!("sess-{s:04}")) {
+            rollout_tokens += r.len();
+            writeln!(f, "{}", r.to_json().to_string()).unwrap();
+        }
+        writeln!(f, "{{\"session\":\"sess-{s:04}\",\"end\":true}}").unwrap();
+    }
+    writeln!(files[SEGMENTS - 1], "{{\"shutdown\":true}}").unwrap();
+    rollout_tokens
+}
+
+fn main() {
+    println!("== serve benches ==");
+    let dir = std::env::temp_dir().join(format!("tt-serve-bench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let rollout_tokens = build_spool(&dir);
+    println!("{SESSIONS} sessions across {SEGMENTS} segments, {rollout_tokens} rollout tokens");
+
+    let budget = Duration::from_millis(400);
+
+    // stage 1: tail + line split + JSON decode
+    let r_tail = bench("spool_tail_decode", budget, || {
+        let mut w = SpoolWatcher::open(&dir).unwrap();
+        let mut lines = 0usize;
+        while let Some(line) = w.next_line().unwrap() {
+            let rec = line.decode().unwrap();
+            lines += 1;
+            if matches!(rec, SpoolRecord::Shutdown) {
+                break;
+            }
+        }
+        lines
+    });
+    r_tail.report_throughput(rollout_tokens, "tok");
+
+    // stage 2: + live trie fold + full ripeness policy (LRU pressure on,
+    // idle scan on) — what the serve pump pays per fold credit
+    let fold_all = || {
+        let mut w = SpoolWatcher::open(&dir).unwrap();
+        let mut folder = LiveFolder::new(16, 64, None);
+        let mut seq = 0u64;
+        let mut ripe_trees = 0usize;
+        while let Some(line) = w.next_line().unwrap() {
+            let rec = line.decode().unwrap();
+            if matches!(rec, SpoolRecord::Shutdown) {
+                ripe_trees += folder.quiesce().iter().map(|g| g.trees.len()).sum::<usize>();
+                break;
+            }
+            seq += 1;
+            for g in folder.fold(seq, &rec).unwrap() {
+                ripe_trees += g.trees.len();
+            }
+        }
+        (ripe_trees, folder.stats())
+    };
+    let (ripe_trees, stats) = fold_all();
+    let reuse = stats.reuse_ratio();
+    println!(
+        "{} records -> {} ripe trees, reuse {reuse:.2}x ({} -> {} tokens)",
+        stats.records_in, ripe_trees, stats.rollout_tokens_in, stats.tree_tokens_out
+    );
+    assert!(ripe_trees > 0, "spool must ripen at least one tree");
+    assert!(reuse > 1.0, "live fold must dedup a branching corpus (got {reuse})");
+    let r_fold = bench("live_fold_ripen", budget, || fold_all().0);
+    r_fold.report_throughput(rollout_tokens, "tok");
+
+    std::fs::remove_dir_all(&dir).ok();
+
+    std::fs::create_dir_all("results").ok();
+    let section = Json::obj(vec![
+        ("sessions", Json::num(SESSIONS as f64)),
+        ("segments", Json::num(SEGMENTS as f64)),
+        ("rollout_tokens", Json::num(rollout_tokens as f64)),
+        ("ripe_trees", Json::num(ripe_trees as f64)),
+        ("reuse_ratio", Json::num(reuse)),
+        ("tail_decode_mean_us", Json::num(r_tail.mean.as_micros() as f64)),
+        ("fold_ripen_mean_us", Json::num(r_fold.mean.as_micros() as f64)),
+        (
+            "fold_tokens_per_sec",
+            Json::num(rollout_tokens as f64 / r_fold.mean.as_secs_f64().max(1e-9)),
+        ),
+    ]);
+    let path = std::path::Path::new("results/BENCH_serve.json");
+    update_json_file_key(path, "spool_fold", section, &["serve_smoke"]).unwrap();
+    println!("-> {}", path.display());
+}

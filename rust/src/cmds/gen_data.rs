@@ -8,8 +8,18 @@
 //! `--interleave N` round-robins the records of `N` sessions at a time,
 //! emulating runtimes that log concurrent tasks — the shape that stresses
 //! `max_open_sessions` and the streaming-rollouts `shuffle_window`.
+//!
+//! Serve-spool extras (docs/serve.md): `--end-markers` appends a
+//! `{"session": .., "end": true}` line after each session's last record,
+//! `--shutdown-marker` terminates the stream with `{"shutdown": true}`,
+//! and `--spool-segments N` shards *sessions* across `N` segment files
+//! inside `out` (treated as a directory; round-robin at first sight) —
+//! emulating N concurrent producers that each own whole sessions, so
+//! `tree-train serve` has something realistic to tail.
 
-use tree_train::ingest::{self, interleave_sessions};
+use std::io::Write as _;
+
+use tree_train::ingest::{self, interleave_sessions, RolloutRecord};
 use tree_train::tree::gen::{self, Overlap};
 use tree_train::tree::{io, metrics, TrajectoryTree};
 
@@ -22,8 +32,15 @@ pub fn run(
     seed: u64,
     linearize: bool,
     interleave: usize,
+    end_markers: bool,
+    shutdown_marker: bool,
+    spool_segments: usize,
     out: &std::path::Path,
 ) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        linearize || (!end_markers && !shutdown_marker && spool_segments <= 1),
+        "--end-markers / --shutdown-marker / --spool-segments only apply to --linearize output"
+    );
     let trees: Vec<TrajectoryTree> = (0..n_trees)
         .map(|i| {
             let s = seed.wrapping_add(i as u64);
@@ -46,7 +63,11 @@ pub fn run(
             .map(|(i, t)| ingest::records_from_tree(t, &format!("sess-{i:05}")))
             .collect();
         let records = interleave_sessions(per_session, interleave);
-        ingest::save_rollouts(&records, out)?;
+        if end_markers || shutdown_marker || spool_segments > 1 {
+            write_spool(&records, end_markers, shutdown_marker, spool_segments.max(1), out)?;
+        } else {
+            ingest::save_rollouts(&records, out)?;
+        }
         let rollout_tokens: usize = records.iter().map(|r| r.len()).sum();
         let tree_tokens: usize = trees.iter().map(|t| t.n_tree()).sum();
         println!(
@@ -69,5 +90,57 @@ pub fn run(
         metrics::dataset_por(&trees) * 100.0,
         1.0 / (1.0 - metrics::dataset_por(&trees))
     );
+    Ok(())
+}
+
+/// Spell the record stream as serve-spool lines.  End markers go after
+/// each session's last record; with `segments > 1`, `out` is a directory
+/// and each *session* is assigned to one segment file (round-robin at
+/// first sight) — the real producer model, where a writer owns whole
+/// sessions, and the shape that keeps a session's end marker behind its
+/// records in the watcher's name-ordered drain.  The shutdown marker is
+/// the final line of the lexicographically last segment (the last line
+/// the watcher consumes).
+fn write_spool(
+    records: &[RolloutRecord],
+    end_markers: bool,
+    shutdown_marker: bool,
+    segments: usize,
+    out: &std::path::Path,
+) -> anyhow::Result<()> {
+    // last emission index per session, so the end marker lands after the
+    // session's final record even under --interleave reordering
+    let mut last: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    for (i, r) in records.iter().enumerate() {
+        last.insert(r.session.as_str(), i);
+    }
+    let mut writers: Vec<std::io::BufWriter<std::fs::File>> = if segments <= 1 {
+        vec![std::io::BufWriter::new(std::fs::File::create(out)?)]
+    } else {
+        std::fs::create_dir_all(out)?;
+        (0..segments)
+            .map(|i| {
+                std::fs::File::create(out.join(format!("seg-{i:03}.jsonl")))
+                    .map(std::io::BufWriter::new)
+            })
+            .collect::<std::io::Result<_>>()?
+    };
+    let mut seg_of: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    let mut next_seg = 0usize;
+    for (i, r) in records.iter().enumerate() {
+        let seg = *seg_of.entry(r.session.clone()).or_insert_with(|| {
+            let s = next_seg;
+            next_seg = (next_seg + 1) % writers.len();
+            s
+        });
+        writeln!(writers[seg], "{}", r.to_json().to_string())?;
+        if end_markers && last.get(r.session.as_str()) == Some(&i) {
+            writeln!(writers[seg], "{{\"session\":\"{}\",\"end\":true}}", r.session)?;
+        }
+    }
+    if shutdown_marker {
+        let last_seg = writers.len() - 1;
+        writeln!(writers[last_seg], "{{\"shutdown\":true}}")?;
+    }
     Ok(())
 }

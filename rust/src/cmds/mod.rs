@@ -13,6 +13,7 @@ pub mod ingest;
 pub mod mem;
 pub mod pipeline_smoke;
 pub mod quality;
+pub mod serve;
 pub mod train;
 pub mod verify;
 

@@ -1,0 +1,126 @@
+//! `tree-train serve` — run the continuous-ingestion training service
+//! against a spool directory (live) or re-execute a recorded journal
+//! (`--replay`).  See `docs/serve.md` and [`tree_train::serve`].
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use tree_train::serve::{self, ServeOptions, ServeParams};
+
+/// Parse a `--key value` map into [`ServeOptions`].  Unknown keys are
+/// rejected — a typo'd policy flag silently falling back to a default
+/// would record the wrong config into the journal forever.
+pub fn options_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<ServeOptions> {
+    const KNOWN: &[&str] = &[
+        "spool",
+        "journal",
+        "replay",
+        "mode",
+        "max-steps",
+        "trees-per-batch",
+        "staleness-bound",
+        "ripe-cap",
+        "max-open-sessions",
+        "idle-timeout",
+        "max-seq-len",
+        "capacity",
+        "vocab",
+        "seed",
+        "lr",
+        "warmup",
+        "ranks",
+        "pipeline-depth",
+        "poll-ms",
+        "stall-timeout-ms",
+        "metrics-csv",
+        "cost-model-state",
+    ];
+    for k in flags.keys() {
+        anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown serve flag --{k}");
+    }
+    let get = |k: &str| flags.get(k);
+    fn num<T: std::str::FromStr>(v: Option<&String>, k: &str, d: T) -> anyhow::Result<T> {
+        match v {
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{k}: bad value `{s}`")),
+            None => Ok(d),
+        }
+    }
+    let d = ServeParams::default();
+    let trees_per_batch = num(get("trees-per-batch"), "trees-per-batch", d.trees_per_batch)?;
+    let staleness_bound = num(get("staleness-bound"), "staleness-bound", d.staleness_bound)?;
+    let params = ServeParams {
+        mode: match get("mode").map(|s| s.as_str()).unwrap_or("tree") {
+            "tree" => tree_train::coordinator::Mode::Tree,
+            "baseline" => tree_train::coordinator::Mode::Baseline,
+            other => anyhow::bail!("--mode {other}: expected tree|baseline"),
+        },
+        steps: num(get("max-steps"), "max-steps", d.steps)?,
+        trees_per_batch,
+        staleness_bound,
+        // default fold-credit pool = the depth that makes the staleness
+        // bound hold by construction (docs/serve.md#back-pressure)
+        ripe_cap: num(
+            get("ripe-cap"),
+            "ripe-cap",
+            (staleness_bound as usize).saturating_mul(trees_per_batch),
+        )?,
+        max_open_sessions: num(get("max-open-sessions"), "max-open-sessions", d.max_open_sessions)?,
+        idle_timeout: num(get("idle-timeout"), "idle-timeout", d.idle_timeout)?,
+        max_seq_len: match get("max-seq-len") {
+            Some(s) => Some(
+                s.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| anyhow::anyhow!("--max-seq-len: bad value `{s}`"))?,
+            ),
+            None => None,
+        },
+        capacity: num(get("capacity"), "capacity", d.capacity)?,
+        vocab: num(get("vocab"), "vocab", d.vocab)?,
+        seed: num(get("seed"), "seed", d.seed)?,
+        lr: num(get("lr"), "lr", d.lr)?,
+        warmup: num(get("warmup"), "warmup", d.warmup)?,
+        ranks: num(get("ranks"), "ranks", d.ranks)?,
+        pipeline_depth: num(get("pipeline-depth"), "pipeline-depth", d.pipeline_depth)?,
+        poll_ms: num(get("poll-ms"), "poll-ms", d.poll_ms)?,
+        stall_timeout_ms: num(get("stall-timeout-ms"), "stall-timeout-ms", d.stall_timeout_ms)?,
+        calibrated: false, // stamped by serve::run from cost_model_state
+    };
+    let spool = get("spool")
+        .map(PathBuf::from)
+        .ok_or_else(|| anyhow::anyhow!("serve needs --spool <dir>"))?;
+    Ok(ServeOptions {
+        spool,
+        journal: get("journal").map(PathBuf::from),
+        replay: get("replay").map(PathBuf::from),
+        params,
+        metrics_csv: get("metrics-csv").map(PathBuf::from),
+        cost_model_state: get("cost-model-state").map(PathBuf::from),
+    })
+}
+
+pub fn run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let opts = options_from_flags(flags)?;
+    let report = serve::run(&opts)?;
+    let max_stale = report.metrics.iter().map(|m| m.staleness_steps).max().unwrap_or(0);
+    let final_loss = report.metrics.last().map(|m| m.loss).unwrap_or(0.0);
+    if report.replayed {
+        println!(
+            "serve replay OK: {} steps bit-identical (losses, {} batch fingerprints, \
+             ingest stats)",
+            report.metrics.len(),
+            report.fingerprints.len()
+        );
+    } else {
+        println!(
+            "serve OK: {} steps / {} cuts, final loss {final_loss:.4}, max staleness \
+             {max_stale} steps, {} sessions ({} trees, reuse {:.2}x)",
+            report.metrics.len(),
+            report.cuts,
+            report.stats.sessions,
+            report.stats.trees_out,
+            report.stats.reuse_ratio()
+        );
+    }
+    Ok(())
+}

@@ -679,6 +679,9 @@ impl TrainerPool {
             rank_imbalance: sharded.rank_imbalance(),
             ingest_ms: 0.0,
             cost_model_err,
+            staleness_steps: 0,
+            ripe_queue_depth: 0,
+            admitted_sessions: 0,
         })
     }
 

@@ -90,6 +90,12 @@ pub struct RunConfig {
     /// from wall clock and are NOT run-to-run bit-identical; the global
     /// batch (and thus the update) is unchanged, only rank placement.
     pub cost_model: CostModelChoice,
+    /// Persisted calibration state (JSON key `cost_model_state`, requires
+    /// `cost_model: "calibrated"`): the calibrated model warm-starts from
+    /// this file's saved normal equations (missing file = cold start) and
+    /// writes the accumulated state back after the run, so restarts keep
+    /// learning instead of starting over.
+    pub cost_model_state: Option<PathBuf>,
 }
 
 impl RunConfig {
@@ -151,9 +157,14 @@ impl RunConfig {
                 "calibrated" => CostModelChoice::Calibrated,
                 other => anyhow::bail!("unknown cost_model {other} (tokens|calibrated)"),
             },
+            cost_model_state: v.get("cost_model_state").and_then(|x| x.as_str()).map(PathBuf::from),
         };
         anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
+        anyhow::ensure!(
+            cfg.cost_model_state.is_none() || cfg.cost_model == CostModelChoice::Calibrated,
+            "cost_model_state persists calibration; it requires cost_model: \"calibrated\""
+        );
         anyhow::ensure!(
             cfg.shuffle_window == 0 || cfg.corpus.is_some(),
             "shuffle_window streams a corpus file; synthetic data is generated in memory"
@@ -461,10 +472,16 @@ impl Coordinator {
             ranks: self.cfg.ranks,
         };
         let mut spec = self.trainer.plan_spec();
+        let mut cost_model = None;
         if self.cfg.cost_model == CostModelChoice::Calibrated {
             // warm-up threshold: two full multi-rank steps at ranks=4
             // before the fit replaces token pricing
-            spec = spec.with_cost_model(crate::partition::CostModel::calibrated(8));
+            let cm = match &self.cfg.cost_model_state {
+                Some(p) => crate::partition::CostModel::calibrated_from_state(8, p)?,
+                None => crate::partition::CostModel::calibrated(8),
+            };
+            spec = spec.with_cost_model(cm.clone());
+            cost_model = Some(cm);
         }
         // the run's persistent rank pool: replicas + worker threads are
         // created HERE, once — never per optimizer step
@@ -483,6 +500,11 @@ impl Coordinator {
         let finish_res = pool.finish();
         let (metrics, summary) = run_res?;
         finish_res?;
+        // persist the accumulated calibration only after a clean run, so a
+        // crashed run can't leave a half-trusted fit behind
+        if let (Some(cm), Some(path)) = (&cost_model, &self.cfg.cost_model_state) {
+            cm.save_state(path)?;
+        }
         // callers surface the one-line summary (`tree-train train` prints
         // it; see PipelineSummary::log_line)
         self.summary = Some(summary);

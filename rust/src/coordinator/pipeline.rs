@@ -82,6 +82,10 @@ pub struct PlannedStep {
     /// (streaming rollout folds; 0 for tree corpora) — drained from the
     /// source so the step that triggered the fold carries its cost.
     pub ingest_ms: f64,
+    /// Serve-mode admission accounting for this batch, drained from the
+    /// source ([`CorpusSource::take_serve_stats`]); `None` outside
+    /// `tree-train serve`.
+    pub serve: Option<crate::data::ServeStepStats>,
 }
 
 /// The execute half of the loop: consumes plans in step order.
@@ -172,6 +176,7 @@ impl Planner {
         let t0 = Instant::now();
         let batch = self.source.next_batch(self.cfg.trees_per_batch)?;
         let ingest_ms = self.source.take_ingest_ms();
+        let serve = self.source.take_serve_stats();
         let lr = cosine_lr(self.cfg.lr, step, self.cfg.warmup, self.cfg.steps);
         let plan = match self.cfg.mode {
             Mode::Tree => self.spec.plan_sharded_tree(&batch, self.cfg.ranks)?,
@@ -184,6 +189,7 @@ impl Planner {
             plan: Arc::new(plan),
             plan_ms: t0.elapsed().as_secs_f64() * 1e3,
             ingest_ms,
+            serve,
         })
     }
 }
@@ -212,6 +218,11 @@ pub fn run<E: StepExecutor>(
             m.plan_ms = planned.plan_ms;
             m.stall_ms = planned.plan_ms;
             m.ingest_ms = planned.ingest_ms;
+            if let Some(s) = planned.serve {
+                m.staleness_steps = s.staleness_steps;
+                m.ripe_queue_depth = s.ripe_queue_depth;
+                m.admitted_sessions = s.admitted_sessions;
+            }
             plan_total += m.plan_ms;
             stall_total += m.stall_ms;
             exec.on_step(&m)?;
@@ -264,6 +275,11 @@ pub fn run<E: StepExecutor>(
             m.plan_ms = planned.plan_ms;
             m.stall_ms = stall_ms;
             m.ingest_ms = planned.ingest_ms;
+            if let Some(s) = planned.serve {
+                m.staleness_steps = s.staleness_steps;
+                m.ripe_queue_depth = s.ripe_queue_depth;
+                m.admitted_sessions = s.admitted_sessions;
+            }
             plan_total += m.plan_ms;
             stall_total += m.stall_ms;
             exec.on_step(&m)?;
@@ -561,6 +577,9 @@ impl StepExecutor for HostExecutor {
             rank_imbalance: planned.plan.rank_imbalance(),
             ingest_ms: 0.0,
             cost_model_err,
+            staleness_steps: 0,
+            ripe_queue_depth: 0,
+            admitted_sessions: 0,
         })
     }
 

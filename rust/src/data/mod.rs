@@ -74,4 +74,29 @@ pub trait CorpusSource: Send {
 
     /// One-line description for run logs.
     fn describe(&self) -> String;
+
+    /// Serve-mode admission accounting for the batch most recently handed
+    /// out by [`CorpusSource::next_batch`] — drained, so the planner can
+    /// stamp the owning step ([`crate::trainer::StepMetrics`]'s
+    /// `staleness_steps` / `ripe_queue_depth` / `admitted_sessions`).
+    /// `None` for every source except the continuous-ingestion
+    /// [`crate::serve::LiveSource`].
+    fn take_serve_stats(&mut self) -> Option<ServeStepStats> {
+        None
+    }
+}
+
+/// Per-batch admission accounting from the continuous-ingestion service
+/// (`tree-train serve`, docs/serve.md), drained through
+/// [`CorpusSource::take_serve_stats`] and copied into the step's
+/// [`crate::trainer::StepMetrics`] by the pipeline driver.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStepStats {
+    /// Max optimizer steps any tree in the batch waited in the ripe queue
+    /// (0 when every tree ripened since the previous cut).
+    pub staleness_steps: u64,
+    /// Ripe trees still queued after this batch was cut.
+    pub ripe_queue_depth: u64,
+    /// Sessions whose trees ripened since the previous cut.
+    pub admitted_sessions: u64,
 }

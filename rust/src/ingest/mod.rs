@@ -120,6 +120,26 @@ impl IngestStats {
             ("reuse_ratio", Json::num(self.reuse_ratio())),
         ])
     }
+
+    /// Parse a serialized stats block (`reuse_ratio` is derived and
+    /// ignored).  Used by the serve replay log to cross-check that a
+    /// replayed run folded byte-identical input.
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let f = |k: &str| -> crate::Result<u64> {
+            v.req(k)?.as_u64().ok_or_else(|| anyhow::anyhow!("`{k}` not a u64"))
+        };
+        Ok(Self {
+            records_in: f("records_in")?,
+            rollout_tokens_in: f("rollout_tokens_in")?,
+            sessions: f("sessions")?,
+            trees_out: f("trees_out")?,
+            nodes_out: f("nodes_out")?,
+            tree_tokens_out: f("tree_tokens_out")?,
+            split_events: f("split_events")?,
+            subsumed_records: f("subsumed_records")?,
+            trimmed_tokens: f("trimmed_tokens")?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -136,5 +156,7 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("reuse_ratio").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("tree_tokens_out").unwrap().as_u64(), Some(100));
+        let back = IngestStats::from_json(&j).unwrap();
+        assert_eq!(back, s);
     }
 }

@@ -74,6 +74,16 @@
 //!   an online least-squares fit of measured per-rank execute walls fed
 //!   back from the reduce (`cost_model: "calibrated"`,
 //!   docs/distributed.md#calibrated-cost-model).
+//! * [`serve`] — the continuous-ingestion training service
+//!   (`tree-train serve`, docs/serve.md): concurrent producers append
+//!   rollouts to a spool directory; an online fold keeps live per-session
+//!   tries; a deterministic ripeness policy (end markers, idle timeout,
+//!   LRU pressure) feeds cuttable trees through a bounded FIFO queue into
+//!   the *unchanged* pipeline above, under a bounded-staleness contract
+//!   (ripe trees enter a batch within `staleness_bound` optimizer steps)
+//!   with flat memory (fold credits).  Every admission decision lands in
+//!   a replay journal; `serve --replay` re-executes the run and proves it
+//!   bit-identical (losses, batch fingerprints, ingest stats).
 //!
 //! Entry points: [`trainer::TreeTrainer`] (the paper's method),
 //! [`trainer::BaselineTrainer`] (sep-avg linearization, Eq. 1), and the
@@ -88,6 +98,7 @@ pub mod ingest;
 pub mod masks;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod trainer;
 pub mod tree;
 pub mod util;

@@ -25,6 +25,25 @@ COMMANDS:
                            [--overlap low|medium|high|por:X] [--n-trees N]
                            [--turns N] [--vocab V] [--seed S] [--linearize]
                            [--interleave N  round-robin N sessions' records]
+                           [--end-markers  session end lines for serve]
+                           [--shutdown-marker  terminal {\"shutdown\":true}]
+                           [--spool-segments N  out becomes a spool dir of
+                            N session-sharded segment files]
+  serve                    continuous-ingestion training service: tail a
+                           spool dir of rollout segments, fold live tries,
+                           cut batches under a bounded-staleness contract,
+                           journal every admission decision (docs/serve.md)
+                           --spool DIR (--journal FILE | --replay FILE)
+                           [--mode tree|baseline] [--max-steps N]
+                           [--trees-per-batch N] [--staleness-bound K]
+                           [--ripe-cap N  default K*trees-per-batch]
+                           [--max-open-sessions N] [--idle-timeout FOLDS]
+                           [--max-seq-len N] [--capacity C] [--vocab V]
+                           [--seed S] [--lr F] [--warmup N] [--ranks N]
+                           [--pipeline-depth D] [--poll-ms MS]
+                           [--stall-timeout-ms MS] [--metrics-csv FILE]
+                           [--cost-model-state FILE  calibrated warm start;
+                            incompatible with --replay]
   ingest                   fold linear rollout logs into a tree corpus
                            --in rollouts.jsonl --out trees.jsonl [--stats]
                            [--max-seq-len N] [--max-open-sessions N]
@@ -146,9 +165,13 @@ fn main() -> anyhow::Result<()> {
                 rest.get("seed", 0u64),
                 rest.has("linearize"),
                 rest.get("interleave", 1usize),
+                rest.has("end-markers"),
+                rest.has("shutdown-marker"),
+                rest.get("spool-segments", 1usize),
                 &PathBuf::from(out_file),
             )
         }
+        "serve" => cmds::serve::run(&rest.flags),
         "pipeline-smoke" => {
             let corpus = rest.str("corpus", "");
             anyhow::ensure!(

@@ -29,6 +29,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::tree::TrajectoryTree;
+use crate::util::json::Json;
 
 /// Feature-vector width: `[tokens, depth, est_calls, 1.0]`.
 pub const N_FEATS: usize = 4;
@@ -135,6 +136,42 @@ impl Calibrator {
             None
         }
     }
+
+    /// Serialize the full normal-equation state (not just the solved
+    /// weights): a warm-started run keeps *accumulating* observations on
+    /// top of the previous run's, so the fit sharpens across restarts
+    /// instead of resetting.  f64s round-trip exactly through the JSON
+    /// writer (Rust's shortest-representation `Display`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> =
+            self.xtx.iter().map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v)).collect())).collect();
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("xtx", Json::Arr(rows)),
+            ("xty", Json::Arr(self.xty.iter().map(|&v| Json::Num(v)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let n = v.req("n")?.as_u64().ok_or_else(|| anyhow::anyhow!("`n` not a number"))?;
+        let row_f64 = |r: &Json| -> crate::Result<[f64; N_FEATS]> {
+            let a = r.as_arr().ok_or_else(|| anyhow::anyhow!("expected array"))?;
+            anyhow::ensure!(a.len() == N_FEATS, "expected {N_FEATS} entries, got {}", a.len());
+            let mut out = [0.0f64; N_FEATS];
+            for (o, x) in out.iter_mut().zip(a) {
+                *o = x.as_f64().ok_or_else(|| anyhow::anyhow!("not a number"))?;
+            }
+            Ok(out)
+        };
+        let rows = v.req_arr("xtx")?;
+        anyhow::ensure!(rows.len() == N_FEATS, "`xtx` must be {N_FEATS}x{N_FEATS}");
+        let mut xtx = [[0.0f64; N_FEATS]; N_FEATS];
+        for (o, r) in xtx.iter_mut().zip(rows) {
+            *o = row_f64(r)?;
+        }
+        let xty = row_f64(v.req("xty")?)?;
+        Ok(Self { xtx, xty, n })
+    }
 }
 
 /// Shared state of one calibrated model: planner threads price through it
@@ -234,6 +271,41 @@ impl CostModel {
             Self::Calibrated(c) => c.inner.lock().expect("cost model lock").cal.n_obs(),
         }
     }
+
+    /// A calibrated model warm-started from a previous run's saved state
+    /// ([`Self::save_state`]): the persisted normal equations seed the
+    /// accumulator, so pricing can be live from the very first step (if
+    /// the saved run already had >= `min_obs` observations) instead of
+    /// re-learning from scratch — the restart path of a long-lived
+    /// `tree-train serve` process.  A missing file is not an error: the
+    /// first run of a pair has nothing to warm-start from.
+    pub fn calibrated_from_state(min_obs: u64, path: &std::path::Path) -> crate::Result<Self> {
+        let cal = match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Calibrator::default(),
+            Err(e) => anyhow::bail!("reading cost-model state {}: {e}", path.display()),
+            Ok(s) => {
+                let v = Json::parse(&s)
+                    .map_err(|e| anyhow::anyhow!("cost-model state {}: {e}", path.display()))?;
+                Calibrator::from_json(&v)
+                    .map_err(|e| anyhow::anyhow!("cost-model state {}: {e}", path.display()))?
+            }
+        };
+        let w = cal.solve();
+        Ok(Self::Calibrated(Arc::new(CalibratedCost {
+            min_obs,
+            inner: Mutex::new(CalState { cal, w }),
+        })))
+    }
+
+    /// Persist the accumulated calibration for the next run's warm start.
+    /// No-op on `Tokens` (there is nothing to save).
+    pub fn save_state(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Self::Calibrated(c) = self {
+            let st = c.inner.lock().expect("cost model lock");
+            std::fs::write(path, st.cal.to_json().to_string_pretty())?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +397,59 @@ mod tests {
         }
         // all-zero features: XᵀX is the zero matrix, solve must refuse
         assert_eq!(m.price(&[100.0, 1.0, 1.0, 1.0], 42), 42);
+    }
+
+    #[test]
+    fn calibrator_state_roundtrips_bit_exactly() {
+        let mut cal = Calibrator::default();
+        for i in 0..16 {
+            let x = [100.0 + 7.13 * i as f64, 10.0 + 0.37 * i as f64, 1.0 + (i % 3) as f64, 1.0];
+            cal.observe(&x, 0.004 * x[0] + 0.01 * x[1] + 2.5 * x[2] + 0.5);
+        }
+        let restored = Calibrator::from_json(&Json::parse(&cal.to_json().to_string()).unwrap())
+            .expect("state parses back");
+        assert_eq!(restored.n, cal.n);
+        // exact f64 round-trip, so the restored solve is bit-identical
+        assert_eq!(restored.xtx, cal.xtx);
+        assert_eq!(restored.xty, cal.xty);
+        assert_eq!(restored.solve(), cal.solve());
+    }
+
+    #[test]
+    fn saved_state_warm_starts_a_new_model() {
+        let dir = std::env::temp_dir().join(format!("tt-cost-state-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cost_model.json");
+        // run 1: learn past min_obs, save
+        let m1 = CostModel::calibrated(4);
+        for i in 1..=6u64 {
+            let tokens = 1000.0 * i as f64;
+            m1.observe(&[tokens, 50.0 * i as f64, 1.0, 1.0], 0.001 * tokens);
+        }
+        assert!(m1.active());
+        m1.save_state(&path).unwrap();
+        // run 2: warm-started model predicts from step 0 and prices
+        // identically to the model that learned live
+        let m2 = CostModel::calibrated_from_state(4, &path).unwrap();
+        assert!(m2.active(), "warm start must carry the observation count");
+        assert_eq!(m2.n_obs(), 6);
+        let feats = [2500.0, 125.0, 1.0, 1.0];
+        assert_eq!(m2.price(&feats, 7), m1.price(&feats, 7));
+        // and keeps accumulating on top of the restored equations
+        m2.observe(&[7000.0, 350.0, 1.0, 1.0], 7.0);
+        assert_eq!(m2.n_obs(), 7);
+        // a missing state file is a cold start, not an error
+        let m3 = CostModel::calibrated_from_state(4, &dir.join("absent.json")).unwrap();
+        assert!(!m3.active());
+        assert_eq!(m3.n_obs(), 0);
+        // garbage state is a hard error (never silently re-learn)
+        std::fs::write(&path, "not json").unwrap();
+        assert!(CostModel::calibrated_from_state(4, &path).is_err());
+        // Tokens has no state: save is a no-op that creates nothing
+        let none = dir.join("tokens.json");
+        CostModel::Tokens.save_state(&none).unwrap();
+        assert!(!none.exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

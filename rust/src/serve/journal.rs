@@ -1,0 +1,437 @@
+//! The serve replay journal: an append-only JSONL record of every
+//! *admission decision* the live service makes, precise enough that
+//! `tree-train serve --replay <journal>` re-executes the run bit-for-bit.
+//!
+//! What gets journaled (one JSON object per line, tagged by `"ev"`):
+//!
+//! * `config`  — the full [`super::ServeParams`] snapshot (replay ignores
+//!   the CLI's ripeness flags and trusts this header instead).
+//! * `arrive`  — one spool record folded: its fold sequence number plus the
+//!   (segment file, physical line) coordinate it was read from.  Replay
+//!   re-reads the *same spool bytes* at that coordinate, so the journal
+//!   stays small: it records positions, not payloads.
+//! * `ripe`    — a session's tree became cuttable (end marker / idle /
+//!   LRU pressure / quiesce) and its trees entered the ripe queue.
+//! * `quiesce` — the shutdown marker was folded; all open sessions were
+//!   flushed (their individual `ripe` events precede this line).
+//! * `cut`     — a batch was cut: the FIFO prefix of the ripe queue up to
+//!   `upto_seq`, fingerprinted with FNV-1a over the full tree contents.
+//! * `loss`    — the executed step's loss and LR as exact f64 bit patterns
+//!   (hex strings — JSON doubles would round-trip, but hex makes the
+//!   bit-exactness contract impossible to miss).
+//! * `stats`   — final [`IngestStats`] + executed step count, written
+//!   last; replay verifies its own totals against it.
+//!
+//! Why positions instead of payloads: the spool is already the durable
+//! record of *what* arrived; the journal is the durable record of *when it
+//! was admitted and what was decided*.  Replaying therefore needs both
+//! files — which also means replay catches spool tampering (a changed
+//! token changes a tree fingerprint and the cut check fails).
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::ingest::IngestStats;
+use crate::tree::node::TrajectoryTree;
+use crate::util::json::Json;
+use crate::Result;
+
+/// FNV-1a 64-bit.  Same constants as the coordinator's batch
+/// fingerprinter (`coordinator/pipeline.rs`), re-declared here because
+/// that helper is deliberately private to its module.
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Content fingerprint of one trajectory tree: node count, then per node
+/// the parent index, real length, real tokens, and the f32 bit patterns of
+/// the supervision vectors.  Everything the executor's loss can depend on
+/// is folded in; padding layout is not (it is derived downstream).
+pub fn tree_fingerprint(tree: &TrajectoryTree) -> u64 {
+    let mut h = fnv1a(&(tree.nodes.len() as u64).to_le_bytes(), FNV_OFFSET);
+    for n in &tree.nodes {
+        h = fnv1a(&(n.parent as i64).to_le_bytes(), h);
+        let real = n.real_len();
+        h = fnv1a(&(real as u64).to_le_bytes(), h);
+        for &t in &n.tokens[..real] {
+            h = fnv1a(&t.to_le_bytes(), h);
+        }
+        for &w in &n.trainable[..real] {
+            h = fnv1a(&w.to_bits().to_le_bytes(), h);
+        }
+        for &a in &n.advantage[..real] {
+            h = fnv1a(&a.to_bits().to_le_bytes(), h);
+        }
+    }
+    h
+}
+
+/// Fingerprint of one cut batch: the step index plus each member tree's
+/// fingerprint, in cut order.  Order-sensitive on purpose — the batch
+/// composition contract covers ordering, not just membership.
+pub fn batch_fingerprint(step: usize, trees: &[Arc<TrajectoryTree>]) -> u64 {
+    let mut h = fnv1a(&(step as u64).to_le_bytes(), FNV_OFFSET);
+    for t in trees {
+        h = fnv1a(&tree_fingerprint(t).to_le_bytes(), h);
+    }
+    h
+}
+
+/// Why a session's tree entered the ripe queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RipeReason {
+    /// Producer wrote an explicit `{"session": .., "end": true}` marker.
+    End,
+    /// No record touched the session for `idle_timeout` fold steps.
+    Idle,
+    /// Evicted by `max_open_sessions` LRU pressure.
+    Lru,
+    /// Flushed by the shutdown marker.
+    Quiesce,
+}
+
+impl RipeReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RipeReason::End => "end",
+            RipeReason::Idle => "idle",
+            RipeReason::Lru => "lru",
+            RipeReason::Quiesce => "quiesce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "end" => RipeReason::End,
+            "idle" => RipeReason::Idle,
+            "lru" => RipeReason::Lru,
+            "quiesce" => RipeReason::Quiesce,
+            other => anyhow::bail!("unknown ripe reason {other:?}"),
+        })
+    }
+}
+
+/// One journal line.  u64 bit values (`fp`, `loss`, `lr`) are serialized
+/// as `"0x…"` hex strings so no numeric round-trip is involved.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Config(Json),
+    Arrive { seq: u64, file: String, line: u64 },
+    Ripe { seq: u64, session: String, reason: RipeReason, trees: u64 },
+    Quiesce { seq: u64 },
+    Cut {
+        step: u64,
+        /// Highest fold sequence number applied before this cut — replay
+        /// pumps exactly this far, decoupling batch composition from the
+        /// live run's pump/cut thread interleaving.
+        upto_seq: u64,
+        trees: u64,
+        fp: u64,
+        max_staleness: u64,
+        queue_depth: u64,
+        admitted: u64,
+    },
+    Loss { step: u64, loss_bits: u64, lr_bits: u64 },
+    Stats { steps: u64, stats: IngestStats },
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:#018x}"))
+}
+
+fn parse_hex(v: &Json, key: &str) -> Result<u64> {
+    let s = v
+        .req_str(key)
+        .map_err(|_| anyhow::anyhow!("journal `{key}` must be a \"0x…\" string"))?;
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow::anyhow!("journal `{key}` missing 0x prefix: {s:?}"))?;
+    u64::from_str_radix(digits, 16).map_err(|e| anyhow::anyhow!("journal `{key}` {s:?}: {e}"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    v.req(key)?.as_u64().ok_or_else(|| anyhow::anyhow!("journal `{key}` not a u64"))
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Config(params) => {
+                Json::obj(vec![("ev", Json::str("config")), ("params", params.clone())])
+            }
+            Event::Arrive { seq, file, line } => Json::obj(vec![
+                ("ev", Json::str("arrive")),
+                ("seq", Json::num(*seq as f64)),
+                ("file", Json::str(file)),
+                ("line", Json::num(*line as f64)),
+            ]),
+            Event::Ripe { seq, session, reason, trees } => Json::obj(vec![
+                ("ev", Json::str("ripe")),
+                ("seq", Json::num(*seq as f64)),
+                ("session", Json::str(session)),
+                ("reason", Json::str(reason.as_str())),
+                ("trees", Json::num(*trees as f64)),
+            ]),
+            Event::Quiesce { seq } => {
+                Json::obj(vec![("ev", Json::str("quiesce")), ("seq", Json::num(*seq as f64))])
+            }
+            Event::Cut { step, upto_seq, trees, fp, max_staleness, queue_depth, admitted } => {
+                Json::obj(vec![
+                    ("ev", Json::str("cut")),
+                    ("step", Json::num(*step as f64)),
+                    ("upto_seq", Json::num(*upto_seq as f64)),
+                    ("trees", Json::num(*trees as f64)),
+                    ("fp", hex(*fp)),
+                    ("max_staleness", Json::num(*max_staleness as f64)),
+                    ("queue_depth", Json::num(*queue_depth as f64)),
+                    ("admitted", Json::num(*admitted as f64)),
+                ])
+            }
+            Event::Loss { step, loss_bits, lr_bits } => Json::obj(vec![
+                ("ev", Json::str("loss")),
+                ("step", Json::num(*step as f64)),
+                ("loss", hex(*loss_bits)),
+                ("lr", hex(*lr_bits)),
+            ]),
+            Event::Stats { steps, stats } => Json::obj(vec![
+                ("ev", Json::str("stats")),
+                ("steps", Json::num(*steps as f64)),
+                ("ingest", stats.to_json()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let ev = v.req_str("ev")?;
+        Ok(match ev {
+            "config" => Event::Config(v.req("params")?.clone()),
+            "arrive" => Event::Arrive {
+                seq: req_u64(v, "seq")?,
+                file: v.req_str("file")?.to_string(),
+                line: req_u64(v, "line")?,
+            },
+            "ripe" => Event::Ripe {
+                seq: req_u64(v, "seq")?,
+                session: v.req_str("session")?.to_string(),
+                reason: RipeReason::parse(v.req_str("reason")?)?,
+                trees: req_u64(v, "trees")?,
+            },
+            "quiesce" => Event::Quiesce { seq: req_u64(v, "seq")? },
+            "cut" => Event::Cut {
+                step: req_u64(v, "step")?,
+                upto_seq: req_u64(v, "upto_seq")?,
+                trees: req_u64(v, "trees")?,
+                fp: parse_hex(v, "fp")?,
+                max_staleness: req_u64(v, "max_staleness")?,
+                queue_depth: req_u64(v, "queue_depth")?,
+                admitted: req_u64(v, "admitted")?,
+            },
+            "loss" => Event::Loss {
+                step: req_u64(v, "step")?,
+                loss_bits: parse_hex(v, "loss")?,
+                lr_bits: parse_hex(v, "lr")?,
+            },
+            "stats" => Event::Stats {
+                steps: req_u64(v, "steps")?,
+                stats: IngestStats::from_json(v.req("ingest")?)?,
+            },
+            other => anyhow::bail!("unknown journal event {other:?}"),
+        })
+    }
+}
+
+/// Append-only journal writer.  Flushes after every event: the journal is
+/// the crash-recovery record, so a torn tail must be at most one line.
+pub struct JournalWriter {
+    w: BufWriter<File>,
+}
+
+impl JournalWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path)
+            .map_err(|e| anyhow::anyhow!("create journal {}: {e}", path.display()))?;
+        Ok(Self { w: BufWriter::new(f) })
+    }
+
+    pub fn append(&mut self, ev: &Event) -> Result<()> {
+        let line = ev.to_json().to_string();
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a whole journal back as events, with `path:line` error context.
+pub fn read_journal(path: &Path) -> Result<Vec<Event>> {
+    let mut reader = crate::util::jsonl::JsonlReader::open(path)?;
+    let mut out = Vec::new();
+    while let Some(ev) = reader.next_record(Event::from_json) {
+        out.push(ev?);
+    }
+    Ok(out)
+}
+
+/// A parsed journal split into the shapes replay consumes:
+///
+/// * `params`  — the config header (a [`super::ServeParams`] JSON blob).
+/// * `feed`    — arrive/ripe/quiesce/cut events in journal order.  These
+///   four are written by the planner-side source under one lock, so their
+///   relative order in the file is the admission order.
+/// * `losses`  — step → (loss bits, lr bits), written by the executor side
+///   (may interleave with feed events in the file; keyed lookup makes the
+///   interleaving irrelevant).
+/// * `stats`   — the final stats trailer.
+pub struct ReplayScript {
+    pub params: Json,
+    pub feed: Vec<Event>,
+    pub losses: std::collections::HashMap<u64, (u64, u64)>,
+    pub steps: u64,
+    pub stats: IngestStats,
+}
+
+impl ReplayScript {
+    pub fn load(path: &Path) -> Result<Self> {
+        let events = read_journal(path)?;
+        let mut params = None;
+        let mut feed = Vec::new();
+        let mut losses = std::collections::HashMap::new();
+        let mut trailer = None;
+        for ev in events {
+            match ev {
+                Event::Config(p) => {
+                    anyhow::ensure!(params.is_none(), "journal has two config headers");
+                    params = Some(p);
+                }
+                Event::Loss { step, loss_bits, lr_bits } => {
+                    losses.insert(step, (loss_bits, lr_bits));
+                }
+                Event::Stats { steps, stats } => {
+                    anyhow::ensure!(trailer.is_none(), "journal has two stats trailers");
+                    trailer = Some((steps, stats));
+                }
+                other => feed.push(other),
+            }
+        }
+        let params = params.ok_or_else(|| anyhow::anyhow!("journal missing config header"))?;
+        let (steps, stats) = trailer.ok_or_else(|| {
+            anyhow::anyhow!("journal missing stats trailer (did the live run finish?)")
+        })?;
+        Ok(Self { params, feed, losses, steps, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::NodeSpec;
+
+    fn tree(tokens: Vec<i32>) -> TrajectoryTree {
+        TrajectoryTree::new(vec![NodeSpec::new(-1, tokens)]).unwrap()
+    }
+
+    #[test]
+    fn fingerprint_is_content_sensitive_and_order_sensitive() {
+        let a = Arc::new(tree(vec![1, 2, 3]));
+        let b = Arc::new(tree(vec![1, 2, 4]));
+        assert_ne!(tree_fingerprint(&a), tree_fingerprint(&b));
+        assert_eq!(tree_fingerprint(&a), tree_fingerprint(&a.clone()));
+        let ab = batch_fingerprint(0, &[a.clone(), b.clone()]);
+        let ba = batch_fingerprint(0, &[b, a]);
+        assert_ne!(ab, ba, "batch fingerprint must cover ordering");
+    }
+
+    #[test]
+    fn fingerprint_covers_supervision_bits() {
+        let base = tree(vec![5, 6]);
+        let mut adv = base.clone();
+        adv.nodes[0].advantage[1] = 0.25;
+        assert_ne!(tree_fingerprint(&base), tree_fingerprint(&adv));
+        let mut tr = base.clone();
+        tr.nodes[0].trainable[0] = 0.0;
+        assert_ne!(tree_fingerprint(&base), tree_fingerprint(&tr));
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        let evs = vec![
+            Event::Config(Json::obj(vec![("steps", Json::num(4.0))])),
+            Event::Arrive { seq: 1, file: "seg-000.jsonl".into(), line: 3 },
+            Event::Ripe { seq: 1, session: "s0".into(), reason: RipeReason::End, trees: 1 },
+            Event::Quiesce { seq: 9 },
+            Event::Cut {
+                step: 0,
+                upto_seq: 7,
+                trees: 4,
+                fp: 0xdeadbeefcafef00d,
+                max_staleness: 2,
+                queue_depth: 1,
+                admitted: 3,
+            },
+            Event::Loss { step: 0, loss_bits: f64::to_bits(1.5), lr_bits: f64::to_bits(1e-3) },
+            Event::Stats { steps: 4, stats: IngestStats { records_in: 12, ..Default::default() } },
+        ];
+        for ev in &evs {
+            let j = Json::parse(&ev.to_json().to_string()).unwrap();
+            assert_eq!(&Event::from_json(&j).unwrap(), ev, "roundtrip {ev:?}");
+        }
+    }
+
+    #[test]
+    fn hex_bit_patterns_survive_exactly() {
+        // a loss whose decimal print would lose bits if anyone "helpfully"
+        // reformatted it — hex encoding sidesteps the question entirely
+        let bits = 0x3ff0000000000001u64; // 1.0 + 1 ulp
+        let ev = Event::Loss { step: 3, loss_bits: bits, lr_bits: f64::to_bits(0.1) };
+        let j = Json::parse(&ev.to_json().to_string()).unwrap();
+        match Event::from_json(&j).unwrap() {
+            Event::Loss { loss_bits, .. } => assert_eq!(loss_bits, bits),
+            other => panic!("wrong event {other:?}"),
+        }
+        assert!(j.get("loss").unwrap().as_str().unwrap().starts_with("0x"));
+    }
+
+    #[test]
+    fn writer_and_reader_roundtrip_and_script_splits() {
+        let dir = std::env::temp_dir()
+            .join(format!("tt-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        let mut w = JournalWriter::create(&path).unwrap();
+        w.append(&Event::Config(Json::obj(vec![("vocab", Json::num(64.0))]))).unwrap();
+        w.append(&Event::Arrive { seq: 1, file: "a.jsonl".into(), line: 1 }).unwrap();
+        w.append(&Event::Loss { step: 0, loss_bits: 7, lr_bits: 8 }).unwrap();
+        w.append(&Event::Ripe { seq: 1, session: "s".into(), reason: RipeReason::Lru, trees: 1 })
+            .unwrap();
+        w.append(&Event::Stats { steps: 1, stats: IngestStats::default() }).unwrap();
+        drop(w);
+        let script = ReplayScript::load(&path).unwrap();
+        assert_eq!(script.params.get("vocab").unwrap().as_u64(), Some(64));
+        assert_eq!(script.feed.len(), 2, "arrive + ripe stay in feed order");
+        assert_eq!(script.losses.get(&0), Some(&(7, 8)));
+        assert_eq!(script.steps, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn script_load_rejects_truncated_journals() {
+        let dir = std::env::temp_dir()
+            .join(format!("tt-journal-trunc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        let mut w = JournalWriter::create(&path).unwrap();
+        w.append(&Event::Config(Json::obj(vec![]))).unwrap();
+        drop(w);
+        let err = ReplayScript::load(&path).unwrap_err().to_string();
+        assert!(err.contains("stats trailer"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,279 @@
+//! The live folder: open-session tries plus the deterministic ripeness
+//! policy.
+//!
+//! Unlike the batch [`crate::ingest::SessionFolder`] (which flushes only
+//! on LRU pressure and at end-of-corpus), a serving folder must decide
+//! *while the stream is still running* when a session's tree is cuttable.
+//! Three triggers, checked in a fixed order inside each fold step so the
+//! verdict is a pure function of the arrival sequence:
+//!
+//! 1. **End marker** — the producer says the session is done.  Flush it
+//!    immediately ([`RipeReason::End`]).
+//! 2. **LRU pressure** — more than `max_open_sessions` tries are open
+//!    after applying the record.  Flush least-recently-touched until back
+//!    under the cap ([`RipeReason::Lru`]).
+//! 3. **Idle timeout** — a session untouched for more than `idle_timeout`
+//!    *fold steps* (not wall clock!  wall clock would make ripeness
+//!    timing-dependent and kill replay) is flushed ([`RipeReason::Idle`]),
+//!    scanned in ascending last-touch order.
+//!
+//! Recency is tracked by fold sequence number.  Each fold touches exactly
+//! one session, so last-touch values are unique and a
+//! `BTreeMap<last_seq, session>` gives a deterministic LRU order for free.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ingest::trie::PrefixStore;
+use crate::ingest::IngestStats;
+use crate::tree::node::TrajectoryTree;
+use crate::Result;
+
+use super::journal::RipeReason;
+use super::spool::SpoolRecord;
+
+/// One ripened session: its emitted trees plus why it ripened.  Trees are
+/// in the store's deterministic emit order.
+#[derive(Debug)]
+pub struct RipeGroup {
+    pub session: String,
+    pub reason: RipeReason,
+    pub trees: Vec<TrajectoryTree>,
+}
+
+struct OpenSession {
+    store: PrefixStore,
+    /// Fold sequence number of the last record that touched this session.
+    last_seq: u64,
+}
+
+/// Open-session state + ripeness policy.  `fold` is the only mutation
+/// entry point, which is what makes live and replay behavior identical:
+/// both sides call it with the same records in the same order.
+pub struct LiveFolder {
+    max_open: usize,
+    /// Idle flush threshold in fold steps; 0 disables idle flushing.
+    idle_timeout: u64,
+    max_seq_len: Option<usize>,
+    open: HashMap<String, OpenSession>,
+    /// last_seq → session, ascending = least recently touched first.
+    by_touch: BTreeMap<u64, String>,
+    stats: IngestStats,
+}
+
+impl LiveFolder {
+    pub fn new(max_open: usize, idle_timeout: u64, max_seq_len: Option<usize>) -> Self {
+        assert!(max_open >= 1, "need at least one open session");
+        Self {
+            max_open,
+            idle_timeout,
+            max_seq_len,
+            open: HashMap::new(),
+            by_touch: BTreeMap::new(),
+            stats: IngestStats::default(),
+        }
+    }
+
+    pub fn open_sessions(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Cumulative stats over everything flushed so far.
+    pub fn stats(&self) -> IngestStats {
+        self.stats
+    }
+
+    fn flush(&mut self, session: &str, reason: RipeReason) -> RipeGroup {
+        let s = self.open.remove(session).expect("flushing a session that is not open");
+        self.by_touch.remove(&s.last_seq);
+        let (trees, delta) = crate::ingest::stream::flush_delta(s.store, self.max_seq_len);
+        self.stats.absorb(&delta);
+        RipeGroup { session: session.to_string(), reason, trees }
+    }
+
+    /// Fold one spool record under fold sequence number `seq` (strictly
+    /// increasing, one per folded line).  Returns the sessions that
+    /// ripened, in verdict order: end-marker flush first, then LRU
+    /// evictions, then idle flushes.
+    ///
+    /// A `Shutdown` record is NOT handled here — the caller sees it in the
+    /// stream and calls [`Self::quiesce`]; keeping the terminal transition
+    /// out of `fold` means `fold` never consumes the folder.
+    pub fn fold(&mut self, seq: u64, rec: &SpoolRecord) -> Result<Vec<RipeGroup>> {
+        let mut out = Vec::new();
+        match rec {
+            SpoolRecord::Shutdown => {
+                anyhow::bail!("shutdown marker must go through LiveFolder::quiesce")
+            }
+            SpoolRecord::End { session } => {
+                // end marker for an unknown (never seen or already
+                // flushed) session is a no-op: producers may double-end
+                // defensively, and an LRU eviction can race a marker
+                if self.open.contains_key(session.as_str()) {
+                    out.push(self.flush(session, RipeReason::End));
+                }
+            }
+            SpoolRecord::Record(r) => {
+                let entry = self.open.entry(r.session.clone());
+                let s = match entry {
+                    std::collections::hash_map::Entry::Occupied(o) => {
+                        let s = o.into_mut();
+                        self.by_touch.remove(&s.last_seq);
+                        s
+                    }
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert(OpenSession { store: PrefixStore::new(), last_seq: 0 })
+                    }
+                };
+                s.store.insert(&r.tokens, &r.trainable, &r.advantage)?;
+                s.last_seq = seq;
+                self.by_touch.insert(seq, r.session.clone());
+                // LRU pressure after the insert, oldest first
+                while self.open.len() > self.max_open {
+                    let victim =
+                        self.by_touch.values().next().expect("open implies by_touch").clone();
+                    out.push(self.flush(&victim, RipeReason::Lru));
+                }
+            }
+        }
+        // idle scan last: ascending last-touch, stop at the first session
+        // inside the window (BTreeMap iteration is ordered)
+        if self.idle_timeout > 0 {
+            loop {
+                let victim = match self.by_touch.iter().next() {
+                    Some((&last, name)) if seq - last > self.idle_timeout => name.clone(),
+                    _ => break,
+                };
+                out.push(self.flush(&victim, RipeReason::Idle));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shutdown: flush every open session in ascending last-touch order.
+    pub fn quiesce(&mut self) -> Vec<RipeGroup> {
+        let order: Vec<String> = self.by_touch.values().cloned().collect();
+        order.into_iter().map(|s| self.flush(&s, RipeReason::Quiesce)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::RolloutRecord;
+
+    fn rec(session: &str, tokens: &[i32]) -> SpoolRecord {
+        SpoolRecord::Record(RolloutRecord {
+            session: session.into(),
+            tokens: tokens.to_vec(),
+            trainable: vec![1.0; tokens.len()],
+            advantage: vec![1.0; tokens.len()],
+        })
+    }
+
+    fn end(session: &str) -> SpoolRecord {
+        SpoolRecord::End { session: session.into() }
+    }
+
+    fn names(groups: &[RipeGroup]) -> Vec<(&str, RipeReason)> {
+        groups.iter().map(|g| (g.session.as_str(), g.reason)).collect()
+    }
+
+    #[test]
+    fn end_marker_flushes_immediately_and_merges_prefixes() {
+        let mut f = LiveFolder::new(8, 0, None);
+        assert!(f.fold(1, &rec("s", &[1, 2, 3])).unwrap().is_empty());
+        assert!(f.fold(2, &rec("s", &[1, 2, 4])).unwrap().is_empty());
+        let groups = f.fold(3, &end("s")).unwrap();
+        assert_eq!(names(&groups), vec![("s", RipeReason::End)]);
+        let t = &groups[0].trees[0];
+        assert!(t.nodes.len() >= 3, "shared [1,2] prefix split into a branch");
+        assert_eq!(f.open_sessions(), 0);
+        assert_eq!(f.stats().records_in, 2);
+        assert_eq!(f.stats().sessions, 1);
+        // double-end is a silent no-op
+        assert!(f.fold(4, &end("s")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn lru_pressure_evicts_least_recently_touched() {
+        let mut f = LiveFolder::new(2, 0, None);
+        f.fold(1, &rec("a", &[1])).unwrap();
+        f.fold(2, &rec("b", &[2])).unwrap();
+        f.fold(3, &rec("a", &[1, 9])).unwrap(); // refresh a: b is now oldest
+        let groups = f.fold(4, &rec("c", &[3])).unwrap();
+        assert_eq!(names(&groups), vec![("b", RipeReason::Lru)]);
+        assert_eq!(f.open_sessions(), 2);
+    }
+
+    #[test]
+    fn idle_timeout_counts_fold_steps_not_wall_clock() {
+        let mut f = LiveFolder::new(8, 2, None);
+        f.fold(1, &rec("old", &[1])).unwrap();
+        f.fold(2, &rec("hot", &[2])).unwrap();
+        assert!(f.fold(3, &rec("hot", &[2, 5])).unwrap().is_empty(), "gap 2 = in window");
+        let groups = f.fold(4, &rec("hot", &[2, 6])).unwrap();
+        assert_eq!(names(&groups), vec![("old", RipeReason::Idle)]);
+        // timeout 0 disables the scan entirely
+        let mut g = LiveFolder::new(8, 0, None);
+        g.fold(1, &rec("x", &[1])).unwrap();
+        assert!(g.fold(1000, &rec("y", &[2])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn quiesce_flushes_everything_in_touch_order() {
+        let mut f = LiveFolder::new(8, 0, None);
+        f.fold(1, &rec("b", &[1])).unwrap();
+        f.fold(2, &rec("a", &[2])).unwrap();
+        f.fold(3, &rec("b", &[1, 7])).unwrap();
+        let groups = f.quiesce();
+        assert_eq!(
+            names(&groups),
+            vec![("a", RipeReason::Quiesce), ("b", RipeReason::Quiesce)],
+            "ascending last-touch, not name order"
+        );
+        assert_eq!(f.open_sessions(), 0);
+        assert!(f.quiesce().is_empty(), "idempotent");
+    }
+
+    #[test]
+    fn verdict_order_is_deterministic_within_one_fold() {
+        // one record can trigger LRU and idle flushes in the same step;
+        // order must be: (no end) → LRU evictions → idle flushes
+        let mut f = LiveFolder::new(2, 3, None);
+        f.fold(1, &rec("idle1", &[1])).unwrap();
+        f.fold(2, &rec("keep", &[2])).unwrap();
+        // seq jumps to 6: inserting "new" overflows the cap (evict idle1,
+        // the oldest) and then the idle scan catches nothing further
+        // (keep: 6-2=4 > 3 → also idle!)
+        let groups = f.fold(6, &rec("new", &[3])).unwrap();
+        assert_eq!(
+            names(&groups),
+            vec![("idle1", RipeReason::Lru), ("keep", RipeReason::Idle)]
+        );
+    }
+
+    #[test]
+    fn shutdown_record_is_rejected_by_fold() {
+        let mut f = LiveFolder::new(2, 0, None);
+        assert!(f.fold(1, &SpoolRecord::Shutdown).is_err());
+    }
+
+    #[test]
+    fn stats_match_the_batch_folder_on_the_same_stream() {
+        // same records through LiveFolder (all end-flushed) and through
+        // flush-by-quiesce must absorb to identical totals
+        let recs =
+            [("a", vec![1, 2, 3]), ("b", vec![1, 2]), ("a", vec![1, 2, 9]), ("b", vec![1, 2])];
+        let mut f = LiveFolder::new(8, 0, None);
+        for (i, (s, t)) in recs.iter().enumerate() {
+            f.fold(i as u64 + 1, &rec(s, t)).unwrap();
+        }
+        let groups = f.quiesce();
+        let trees: usize = groups.iter().map(|g| g.trees.len()).sum();
+        let st = f.stats();
+        assert_eq!(st.records_in, 4);
+        assert_eq!(st.sessions, 2);
+        assert_eq!(st.trees_out as usize, trees);
+        assert_eq!(st.subsumed_records, 1, "b's duplicate rollout is subsumed");
+    }
+}

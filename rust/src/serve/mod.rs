@@ -1,0 +1,442 @@
+//! `tree-train serve` — the continuous-ingestion training service.
+//!
+//! Batch training (`tree-train train`) folds a finished corpus; serving
+//! trains *while producers are still writing*.  Concurrent rollout
+//! producers append records to a spool directory ([`spool`]); an online
+//! fold keeps one live radix trie per open session ([`live`]); a
+//! deterministic ripeness policy decides when a session's tree is
+//! cuttable; [`source::LiveSource`] bridges ripe trees into the existing
+//! pipelined planner/executor/rank-pool stack *unchanged* — serving is a
+//! data-layer feature, not a trainer fork.
+//!
+//! Three contracts, each enforced in code rather than by convention:
+//!
+//! * **Bounded staleness** — once ripe, a tree must enter a batch within
+//!   `staleness_bound` optimizer steps.  With the default
+//!   `ripe_cap = staleness_bound × trees_per_batch` this holds by
+//!   construction (FIFO queue, bounded depth); the cut path still hard-
+//!   errors if it is ever exceeded.
+//! * **Flat memory** — the source folds only while the ripe queue has
+//!   room; the spool on disk is the producer-side buffer, so trainer
+//!   memory is bounded by `ripe_cap` trees plus the open-session tries.
+//! * **Bit-exact replay** — every admission decision is journaled
+//!   ([`journal`]); `tree-train serve --replay <journal>` re-executes the
+//!   run and fails unless losses, batch-composition fingerprints, and
+//!   final ingest stats are identical.  The journal is the proof that a
+//!   live, timing-dependent run was equivalent to a deterministic one.
+//!
+//! See `docs/serve.md` for the operational guide.
+
+pub mod journal;
+pub mod live;
+pub mod source;
+pub mod spool;
+
+pub use source::{LiveSource, ServeShared, SourceConfig};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use crate::coordinator::{Mode, StepExecutor};
+use crate::ingest::IngestStats;
+use crate::trainer::{CsvSink, PlanSpec, StepMetrics};
+use crate::util::json::Json;
+use crate::Result;
+
+use journal::{Event, JournalWriter, ReplayScript};
+
+/// The full serve configuration, journaled verbatim as the `config`
+/// header: replay reads its policy from the journal, never the CLI, so a
+/// journal is self-describing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeParams {
+    pub mode: Mode,
+    pub steps: u64,
+    pub trees_per_batch: usize,
+    /// Max optimizer steps a ripe tree may wait before entering a batch.
+    pub staleness_bound: u64,
+    /// Ripe-queue depth at which the pump stops folding (fold credits).
+    pub ripe_cap: usize,
+    pub max_open_sessions: usize,
+    /// Idle flush threshold in fold steps; 0 disables idle flushing.
+    pub idle_timeout: u64,
+    pub max_seq_len: Option<usize>,
+    /// Packed device-batch token capacity ([`PlanSpec::for_host`]).
+    pub capacity: usize,
+    pub vocab: usize,
+    pub seed: u64,
+    pub lr: f64,
+    pub warmup: u64,
+    pub ranks: usize,
+    pub pipeline_depth: usize,
+    pub poll_ms: u64,
+    pub stall_timeout_ms: u64,
+    /// Whether the run priced sharding with the measured-wall calibrated
+    /// model.  Such runs are NOT bit-replayable (pricing feeds wall-clock
+    /// measurements back into rank placement, and rank placement changes
+    /// the loss-reduction bracket) — replay refuses these journals.
+    pub calibrated: bool,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Tree,
+            steps: 8,
+            trees_per_batch: 4,
+            staleness_bound: 8,
+            ripe_cap: 32, // staleness_bound * trees_per_batch
+            max_open_sessions: 64,
+            idle_timeout: 0,
+            max_seq_len: None,
+            capacity: 256,
+            vocab: 64,
+            seed: 17,
+            lr: 1e-2,
+            warmup: 0,
+            ranks: 1,
+            pipeline_depth: 2,
+            poll_ms: 5,
+            stall_timeout_ms: 10_000,
+            calibrated: false,
+        }
+    }
+}
+
+impl ServeParams {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(self.trees_per_batch >= 1, "trees_per_batch must be >= 1");
+        anyhow::ensure!(self.staleness_bound >= 1, "staleness_bound must be >= 1");
+        anyhow::ensure!(
+            self.ripe_cap >= self.trees_per_batch,
+            "ripe_cap {} cannot fill one batch of {} (fold credits must cover a cut)",
+            self.ripe_cap,
+            self.trees_per_batch
+        );
+        anyhow::ensure!(self.max_open_sessions >= 1, "max_open_sessions must be >= 1");
+        anyhow::ensure!(self.ranks >= 1, "ranks must be >= 1");
+        anyhow::ensure!(self.capacity >= 1, "capacity must be >= 1");
+        anyhow::ensure!(self.vocab >= 2, "vocab must be >= 2");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("mode", Json::str(match self.mode {
+                Mode::Tree => "tree",
+                Mode::Baseline => "baseline",
+            })),
+            ("steps", Json::num(self.steps as f64)),
+            ("trees_per_batch", Json::num(self.trees_per_batch as f64)),
+            ("staleness_bound", Json::num(self.staleness_bound as f64)),
+            ("ripe_cap", Json::num(self.ripe_cap as f64)),
+            ("max_open_sessions", Json::num(self.max_open_sessions as f64)),
+            ("idle_timeout", Json::num(self.idle_timeout as f64)),
+            ("capacity", Json::num(self.capacity as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", Json::Num(self.lr)),
+            ("warmup", Json::num(self.warmup as f64)),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("poll_ms", Json::num(self.poll_ms as f64)),
+            ("stall_timeout_ms", Json::num(self.stall_timeout_ms as f64)),
+            ("calibrated", Json::Bool(self.calibrated)),
+        ];
+        if let Some(m) = self.max_seq_len {
+            kv.push(("max_seq_len", Json::num(m as f64)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let u = |k: &str, dv: u64| -> Result<u64> {
+            match v.get(k) {
+                Some(x) => x.as_u64().ok_or_else(|| anyhow::anyhow!("`{k}` not a u64")),
+                None => Ok(dv),
+            }
+        };
+        let us = |k: &str, dv: usize| -> Result<usize> {
+            match v.get(k) {
+                Some(x) => x.as_usize().ok_or_else(|| anyhow::anyhow!("`{k}` not a usize")),
+                None => Ok(dv),
+            }
+        };
+        let p = Self {
+            mode: match v.get("mode").and_then(|x| x.as_str()).unwrap_or("tree") {
+                "tree" => Mode::Tree,
+                "baseline" => Mode::Baseline,
+                other => anyhow::bail!("unknown mode {other:?} (tree|baseline)"),
+            },
+            steps: u("steps", d.steps)?,
+            trees_per_batch: us("trees_per_batch", d.trees_per_batch)?,
+            staleness_bound: u("staleness_bound", d.staleness_bound)?,
+            ripe_cap: us("ripe_cap", d.ripe_cap)?,
+            max_open_sessions: us("max_open_sessions", d.max_open_sessions)?,
+            idle_timeout: u("idle_timeout", d.idle_timeout)?,
+            max_seq_len: match v.get("max_seq_len") {
+                Some(x) => {
+                    Some(x.as_usize().ok_or_else(|| anyhow::anyhow!("`max_seq_len` not a usize"))?)
+                }
+                None => None,
+            },
+            capacity: us("capacity", d.capacity)?,
+            vocab: us("vocab", d.vocab)?,
+            seed: u("seed", d.seed)?,
+            lr: match v.get("lr") {
+                Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("`lr` not a number"))?,
+                None => d.lr,
+            },
+            warmup: u("warmup", d.warmup)?,
+            ranks: us("ranks", d.ranks)?,
+            pipeline_depth: us("pipeline_depth", d.pipeline_depth)?,
+            poll_ms: u("poll_ms", d.poll_ms)?,
+            stall_timeout_ms: u("stall_timeout_ms", d.stall_timeout_ms)?,
+            calibrated: v.get("calibrated").and_then(|x| x.as_bool()).unwrap_or(false),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    fn source_config(&self) -> SourceConfig {
+        SourceConfig {
+            staleness_bound: self.staleness_bound,
+            ripe_cap: self.ripe_cap,
+            max_open_sessions: self.max_open_sessions,
+            idle_timeout: self.idle_timeout,
+            max_seq_len: self.max_seq_len,
+            poll_ms: self.poll_ms,
+            stall_timeout_ms: self.stall_timeout_ms,
+        }
+    }
+}
+
+/// Executor wrapper: delegates the actual step to the hermetic
+/// [`HostExecutor`] and journals (live) or verifies (replay) every loss as
+/// exact f64 bits.
+struct ServeExecutor {
+    inner: HostExecutor,
+    /// Live: append a `loss` event per step (executor-thread side of the
+    /// shared journal).
+    journal: Option<Arc<Mutex<JournalWriter>>>,
+    /// Replay: step → (loss bits, lr bits) to verify against.
+    expect: Option<HashMap<u64, (u64, u64)>>,
+    sink: Option<CsvSink>,
+}
+
+impl StepExecutor for ServeExecutor {
+    fn execute(&mut self, planned: &pipeline::PlannedStep) -> Result<StepMetrics> {
+        let m = self.inner.execute(planned)?;
+        let loss_bits = m.loss.to_bits();
+        let lr_bits = planned.lr.to_bits();
+        if let Some(j) = &self.journal {
+            j.lock().expect("journal lock").append(&Event::Loss {
+                step: planned.step,
+                loss_bits,
+                lr_bits,
+            })?;
+        }
+        if let Some(expect) = &self.expect {
+            let &(jl, jr) = expect.get(&planned.step).ok_or_else(|| {
+                anyhow::anyhow!("journal has no loss event for step {}", planned.step)
+            })?;
+            anyhow::ensure!(
+                jl == loss_bits && jr == lr_bits,
+                "replay diverged at step {}: loss {} (bits {loss_bits:#018x}) vs journaled \
+                 bits {jl:#018x}",
+                planned.step,
+                m.loss
+            );
+        }
+        Ok(m)
+    }
+
+    fn on_step(&mut self, m: &StepMetrics) -> Result<()> {
+        if let Some(s) = &mut self.sink {
+            s.log(m)?;
+        }
+        Ok(())
+    }
+
+    fn pool_spawn_ms(&self) -> f64 {
+        self.inner.pool_spawn_ms()
+    }
+}
+
+/// Inputs of one serve invocation (CLI or test harness).
+pub struct ServeOptions {
+    pub spool: PathBuf,
+    /// Live mode: journal output path (required unless replaying).
+    pub journal: Option<PathBuf>,
+    /// Replay mode: a recorded journal to re-execute bit-for-bit.  The
+    /// policy half of `params` is ignored (the journal header wins).
+    pub replay: Option<PathBuf>,
+    pub params: ServeParams,
+    pub metrics_csv: Option<PathBuf>,
+    /// Warm-start the calibrated cost model from this state file and save
+    /// back after the run.  Incompatible with `replay` (see
+    /// [`ServeParams::calibrated`]).
+    pub cost_model_state: Option<PathBuf>,
+}
+
+/// What a serve run produced, for the CLI summary line and the
+/// integration tests.
+pub struct ServeReport {
+    pub metrics: Vec<StepMetrics>,
+    /// One batch-composition fingerprint per executed step.
+    pub fingerprints: Vec<u64>,
+    pub stats: IngestStats,
+    pub cuts: u64,
+    pub replayed: bool,
+}
+
+/// Run the service (live or replay) to completion.  Shared by
+/// `tree-train serve` and `tests/serve_replay.rs` so the CLI and the
+/// equivalence gate exercise the identical driver.
+pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
+    let replaying = opts.replay.is_some();
+    anyhow::ensure!(
+        !(replaying && opts.cost_model_state.is_some()),
+        "--cost-model-state feeds measured wall clocks into rank placement, which changes \
+         the loss-reduction bracket — a replay could not be bit-exact; drop one of the flags"
+    );
+    let mut params = opts.params.clone();
+    params.calibrated = opts.cost_model_state.is_some();
+
+    // replay reads the authoritative config from the journal header
+    let script = match &opts.replay {
+        Some(path) => {
+            let script = ReplayScript::load(path)?;
+            params = ServeParams::from_json(&script.params)?;
+            anyhow::ensure!(
+                !params.calibrated,
+                "this journal was recorded with calibrated cost pricing and is not \
+                 bit-replayable; re-record without --cost-model-state"
+            );
+            Some(script)
+        }
+        None => None,
+    };
+    params.validate()?;
+
+    let shared = ServeShared::default();
+    let mut journal_writer = None;
+    let source: Box<dyn crate::data::CorpusSource> = match &script {
+        Some(s) => {
+            Box::new(LiveSource::replay(&opts.spool, params.source_config(), s.feed.clone(), shared.clone())?)
+        }
+        None => {
+            let jpath = opts
+                .journal
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("live serve needs --journal <path>"))?;
+            let mut w = JournalWriter::create(jpath)?;
+            w.append(&Event::Config(params.to_json()))?;
+            let w = Arc::new(Mutex::new(w));
+            journal_writer = Some(w.clone());
+            Box::new(LiveSource::live(&opts.spool, params.source_config(), w, shared.clone())?)
+        }
+    };
+
+    let mut spec = PlanSpec::for_host(params.capacity);
+    let mut cost_model = None;
+    if let Some(state) = &opts.cost_model_state {
+        let cm = crate::partition::CostModel::calibrated_from_state(8, state)?;
+        spec = spec.with_cost_model(cm.clone());
+        cost_model = Some(cm);
+    }
+
+    let pcfg = PipelineConfig {
+        mode: params.mode,
+        steps: params.steps,
+        trees_per_batch: params.trees_per_batch,
+        depth: params.pipeline_depth,
+        lr: params.lr,
+        warmup: params.warmup,
+        ranks: params.ranks,
+    };
+    let sink = match &opts.metrics_csv {
+        Some(p) => Some(CsvSink::create(p)?),
+        None => None,
+    };
+    let mut exec = ServeExecutor {
+        inner: HostExecutor::new(params.vocab, 8, params.seed),
+        journal: journal_writer.clone(),
+        expect: script.as_ref().map(|s| s.losses.clone()),
+        sink,
+    };
+    let (metrics, _summary) = pipeline::run(&pcfg, spec, source, &mut exec)?;
+
+    let (stats, cuts) = {
+        let s = shared.lock().expect("shared lock");
+        (s.stats, s.cuts)
+    };
+    if let Some(w) = &journal_writer {
+        w.lock().expect("journal lock").append(&Event::Stats {
+            steps: metrics.len() as u64,
+            stats,
+        })?;
+    }
+    if let Some(script) = &script {
+        anyhow::ensure!(
+            metrics.len() as u64 == script.steps,
+            "replay executed {} steps but the journal recorded {}",
+            metrics.len(),
+            script.steps
+        );
+        anyhow::ensure!(
+            stats == script.stats,
+            "replay diverged: final ingest stats {stats:?} != journaled {:?}",
+            script.stats
+        );
+    }
+    if let (Some(cm), Some(path)) = (&cost_model, &opts.cost_model_state) {
+        cm.save_state(path)?;
+    }
+    Ok(ServeReport {
+        fingerprints: exec.inner.fingerprints.clone(),
+        metrics,
+        stats,
+        cuts,
+        replayed: replaying,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip_and_validate() {
+        let mut p = ServeParams::default();
+        p.mode = Mode::Baseline;
+        p.max_seq_len = Some(128);
+        p.lr = 0.0125;
+        p.calibrated = true;
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        let back = ServeParams::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        // defaults fill the gaps
+        let sparse = Json::parse(r#"{"steps": 3}"#).unwrap();
+        let q = ServeParams::from_json(&sparse).unwrap();
+        assert_eq!(q.steps, 3);
+        assert_eq!(q.trees_per_batch, ServeParams::default().trees_per_batch);
+        assert_eq!(q.max_seq_len, None);
+        // a cap that cannot fill one batch is rejected
+        let bad = Json::parse(r#"{"ripe_cap": 2, "trees_per_batch": 4}"#).unwrap();
+        assert!(ServeParams::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn lr_bits_survive_the_params_roundtrip() {
+        let mut p = ServeParams::default();
+        p.lr = 0.1 + 0.2; // 0.30000000000000004 — a classic round-trip trap
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        let back = ServeParams::from_json(&j).unwrap();
+        assert_eq!(back.lr.to_bits(), p.lr.to_bits());
+    }
+}

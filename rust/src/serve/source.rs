@@ -1,0 +1,656 @@
+//! [`LiveSource`]: the [`CorpusSource`] that bridges ripe session trees
+//! into the existing pipelined planner/executor stack — plus its replay
+//! twin, which feeds the *journaled* admission sequence back through the
+//! identical fold/cut code and cross-checks every decision.
+//!
+//! ## The determinism argument
+//!
+//! The ripe queue order is a pure function of the spool *arrival order*
+//! (each fold's ripeness verdicts are deterministic — see
+//! [`super::live::LiveFolder`]), and every cut takes a FIFO prefix of the
+//! queue.  So batch composition depends only on (arrival order,
+//! trees_per_batch) — never on how the pump loop interleaved with
+//! optimizer steps.  The journal pins down the one non-deterministic
+//! input, arrival order, as a list of (file, line) coordinates; the
+//! per-cut `upto_seq` additionally freezes *how far* the pump ran before
+//! each cut so replay reproduces queue-depth and staleness metrics
+//! bit-for-bit, not just batch contents.
+//!
+//! ## Back-pressure
+//!
+//! The source folds new spool lines only while the ripe queue holds fewer
+//! than `ripe_cap` trees ("fold credits").  Producers are never blocked —
+//! the spool on disk *is* the buffer — but trainer memory stays flat:
+//! resident trees ≤ ripe_cap + one session flush.  When the queue cannot
+//! fill a batch the source stalls in `poll_ms` sleeps up to
+//! `stall_timeout_ms`, then errors out rather than hanging a CI run.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::data::{CorpusSource, ServeStepStats};
+use crate::ingest::IngestStats;
+use crate::tree::node::TrajectoryTree;
+use crate::Result;
+
+use super::journal::{batch_fingerprint, Event, JournalWriter};
+use super::live::{LiveFolder, RipeGroup};
+use super::spool::{SpoolCursors, SpoolRecord, SpoolWatcher};
+
+/// One ripe tree waiting to be cut into a batch, stamped with the cut
+/// counter at ripening time so staleness is measured in optimizer steps.
+struct RipeEntry {
+    tree: Arc<TrajectoryTree>,
+    ripe_cut: u64,
+}
+
+/// Where spool records come from.
+enum Feed {
+    /// Live tailing; arrival order is recorded to the journal.
+    Live { watcher: SpoolWatcher, poll_ms: u64, stall_timeout_ms: u64 },
+    /// Journal-driven: arrivals and cut points are dictated by the
+    /// recorded events; every decision is re-derived and cross-checked.
+    Replay { cursors: SpoolCursors, feed: VecDeque<Event> },
+}
+
+/// End-of-run state shared with the driver (the pipeline consumes the
+/// boxed source, so final stats must escape by a side channel).
+#[derive(Default)]
+pub struct ServeSharedState {
+    pub stats: IngestStats,
+    pub cuts: u64,
+}
+
+pub type ServeShared = Arc<Mutex<ServeSharedState>>;
+
+/// Knobs of the admission policy (a subset of [`super::ServeParams`],
+/// duplicated here so the source does not depend on the CLI layer).
+pub struct SourceConfig {
+    pub staleness_bound: u64,
+    pub ripe_cap: usize,
+    pub max_open_sessions: usize,
+    /// Idle flush threshold in fold steps; 0 disables.
+    pub idle_timeout: u64,
+    pub max_seq_len: Option<usize>,
+    pub poll_ms: u64,
+    pub stall_timeout_ms: u64,
+}
+
+pub struct LiveSource {
+    feed: Feed,
+    folder: LiveFolder,
+    ripe: VecDeque<RipeEntry>,
+    /// Journal writer in live mode (shared with the executor wrapper,
+    /// which appends loss events from the other pipeline thread).
+    journal: Option<Arc<Mutex<JournalWriter>>>,
+    shared: ServeShared,
+    staleness_bound: u64,
+    ripe_cap: usize,
+    /// Fold sequence number of the last folded spool line.
+    seq: u64,
+    /// Cuts performed so far == the next cut's step id.
+    cut_count: u64,
+    /// Sessions ripened since the previous cut.
+    admitted_since_cut: u64,
+    quiesced: bool,
+    peak_resident: usize,
+    ingest_ms: f64,
+    last_stats: Option<ServeStepStats>,
+}
+
+impl LiveSource {
+    pub fn live(
+        spool: &std::path::Path,
+        cfg: SourceConfig,
+        journal: Arc<Mutex<JournalWriter>>,
+        shared: ServeShared,
+    ) -> Result<Self> {
+        let watcher = SpoolWatcher::open(spool)?;
+        Ok(Self::build(
+            Feed::Live { watcher, poll_ms: cfg.poll_ms, stall_timeout_ms: cfg.stall_timeout_ms },
+            cfg,
+            Some(journal),
+            shared,
+        ))
+    }
+
+    pub fn replay(
+        spool: &std::path::Path,
+        cfg: SourceConfig,
+        feed: Vec<Event>,
+        shared: ServeShared,
+    ) -> Result<Self> {
+        let cursors = SpoolCursors::open(spool)?;
+        Ok(Self::build(Feed::Replay { cursors, feed: feed.into() }, cfg, None, shared))
+    }
+
+    fn build(
+        feed: Feed,
+        cfg: SourceConfig,
+        journal: Option<Arc<Mutex<JournalWriter>>>,
+        shared: ServeShared,
+    ) -> Self {
+        Self {
+            feed,
+            folder: LiveFolder::new(cfg.max_open_sessions, cfg.idle_timeout, cfg.max_seq_len),
+            ripe: VecDeque::new(),
+            journal,
+            shared,
+            staleness_bound: cfg.staleness_bound,
+            ripe_cap: cfg.ripe_cap,
+            seq: 0,
+            cut_count: 0,
+            admitted_since_cut: 0,
+            quiesced: false,
+            peak_resident: 0,
+            ingest_ms: 0.0,
+            last_stats: None,
+        }
+    }
+
+    fn journal_event(&self, ev: &Event) -> Result<()> {
+        if let Some(j) = &self.journal {
+            j.lock().expect("journal lock").append(ev)?;
+        }
+        Ok(())
+    }
+
+    fn publish_shared(&self) {
+        let mut s = self.shared.lock().expect("shared lock");
+        s.stats = self.folder.stats();
+        s.cuts = self.cut_count;
+    }
+
+    /// Admit one ripened group into the queue (common to live and replay).
+    fn admit(&mut self, group: RipeGroup) {
+        self.admitted_since_cut += 1;
+        for t in group.trees {
+            self.ripe.push_back(RipeEntry { tree: Arc::new(t), ripe_cut: self.cut_count });
+        }
+        self.peak_resident =
+            self.peak_resident.max(self.ripe.len() + self.folder.open_sessions());
+    }
+
+    /// Live: fold one decoded spool record; journal the arrival and every
+    /// ripeness verdict it produced.
+    fn fold_live(&mut self, file: String, line: u64, rec: SpoolRecord) -> Result<()> {
+        self.seq += 1;
+        let seq = self.seq;
+        self.journal_event(&Event::Arrive { seq, file, line })?;
+        let groups = match rec {
+            SpoolRecord::Shutdown => {
+                self.quiesced = true;
+                self.folder.quiesce()
+            }
+            other => self.folder.fold(seq, &other)?,
+        };
+        for g in groups {
+            self.journal_event(&Event::Ripe {
+                seq,
+                session: g.session.clone(),
+                reason: g.reason,
+                trees: g.trees.len() as u64,
+            })?;
+            self.admit(g);
+        }
+        if self.quiesced {
+            self.journal_event(&Event::Quiesce { seq })?;
+            self.publish_shared();
+        }
+        Ok(())
+    }
+
+    /// Live pump loop: fold while credits remain, stall-wait while the
+    /// queue cannot fill a batch.
+    fn pump_live(&mut self, need: usize) -> Result<()> {
+        let mut waited_ms: u64 = 0;
+        loop {
+            if self.quiesced || self.ripe.len() >= self.ripe_cap {
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let next = match &mut self.feed {
+                Feed::Live { watcher, .. } => watcher.next_line()?,
+                Feed::Replay { .. } => unreachable!("pump_live on a replay feed"),
+            };
+            match next {
+                Some(l) => {
+                    let rec = l.decode()?;
+                    self.fold_live(l.file, l.line, rec)?;
+                    self.ingest_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    waited_ms = 0;
+                }
+                None => {
+                    self.ingest_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    if self.ripe.len() >= need {
+                        // enough for this batch; don't wait for more
+                        return Ok(());
+                    }
+                    let (poll_ms, stall_timeout_ms) = match &self.feed {
+                        Feed::Live { poll_ms, stall_timeout_ms, .. } => {
+                            (*poll_ms, *stall_timeout_ms)
+                        }
+                        Feed::Replay { .. } => unreachable!(),
+                    };
+                    anyhow::ensure!(
+                        waited_ms < stall_timeout_ms,
+                        "spool stalled: {} ripe trees after waiting {stall_timeout_ms} ms for a \
+                         batch of {need} (producers gone? write {{\"shutdown\":true}} to end the \
+                         run)",
+                        self.ripe.len()
+                    );
+                    // sleep is intentionally outside the ingest_ms clock:
+                    // waiting for producers is not fold work
+                    std::thread::sleep(std::time::Duration::from_millis(poll_ms.max(1)));
+                    waited_ms += poll_ms.max(1);
+                }
+            }
+        }
+    }
+
+    /// Replay pump: consume journal events up to (not including) the next
+    /// `cut`, re-deriving and cross-checking every verdict.
+    fn pump_replay(&mut self) -> Result<()> {
+        loop {
+            let ev = match &mut self.feed {
+                Feed::Replay { feed, .. } => match feed.front() {
+                    Some(Event::Cut { .. }) => return Ok(()),
+                    _ => feed.pop_front(),
+                },
+                Feed::Live { .. } => unreachable!("pump_replay on a live feed"),
+            };
+            let Some(ev) = ev else {
+                anyhow::bail!(
+                    "journal ended mid-run: no cut event for step {} (truncated journal?)",
+                    self.cut_count
+                );
+            };
+            match ev {
+                Event::Arrive { seq, file, line } => {
+                    anyhow::ensure!(
+                        seq == self.seq + 1,
+                        "journal arrive seq {seq} after {} — journal corrupt",
+                        self.seq
+                    );
+                    let t0 = Instant::now();
+                    let l = match &mut self.feed {
+                        Feed::Replay { cursors, .. } => cursors.line_at(&file, line)?,
+                        Feed::Live { .. } => unreachable!(),
+                    };
+                    let rec = l.decode()?;
+                    self.seq = seq;
+                    let groups = match rec {
+                        SpoolRecord::Shutdown => {
+                            self.quiesced = true;
+                            self.folder.quiesce()
+                        }
+                        other => self.folder.fold(seq, &other)?,
+                    };
+                    // the verdicts this fold produced must match the next
+                    // journal events exactly, in order
+                    for g in groups {
+                        let expect = match &mut self.feed {
+                            Feed::Replay { feed, .. } => feed.pop_front(),
+                            Feed::Live { .. } => unreachable!(),
+                        };
+                        match expect {
+                            Some(Event::Ripe { seq: jseq, session, reason, trees }) => {
+                                anyhow::ensure!(
+                                    jseq == seq
+                                        && session == g.session
+                                        && reason == g.reason
+                                        && trees == g.trees.len() as u64,
+                                    "replay diverged at seq {seq}: derived ripe \
+                                     ({}, {:?}, {} trees) but journal says \
+                                     ({session}, {reason:?}, {trees} trees)",
+                                    g.session,
+                                    g.reason,
+                                    g.trees.len()
+                                )
+                            }
+                            other => anyhow::bail!(
+                                "replay diverged at seq {seq}: derived a ripe verdict for {} \
+                                 but journal has {other:?}",
+                                g.session
+                            ),
+                        }
+                        self.admit(g);
+                    }
+                    if self.quiesced {
+                        let expect = match &mut self.feed {
+                            Feed::Replay { feed, .. } => feed.pop_front(),
+                            Feed::Live { .. } => unreachable!(),
+                        };
+                        anyhow::ensure!(
+                            matches!(expect, Some(Event::Quiesce { seq: q }) if q == seq),
+                            "journal missing quiesce after the shutdown arrival at seq {seq}"
+                        );
+                        self.publish_shared();
+                    }
+                    self.ingest_ms += t0.elapsed().as_secs_f64() * 1e3;
+                }
+                Event::Ripe { seq, session, .. } => anyhow::bail!(
+                    "replay diverged: journal has a ripe verdict for {session} at seq {seq} \
+                     that this fold did not produce"
+                ),
+                Event::Quiesce { seq } => {
+                    anyhow::bail!("replay diverged: unexpected quiesce at seq {seq}")
+                }
+                other => anyhow::bail!("unexpected journal event in feed: {other:?}"),
+            }
+        }
+    }
+
+    /// Cut `n` trees off the FIFO front; enforce the staleness contract;
+    /// journal (live) or verify (replay) the cut record.
+    fn cut(&mut self, n: usize) -> Result<Vec<Arc<TrajectoryTree>>> {
+        anyhow::ensure!(
+            self.ripe.len() >= n,
+            "ripe queue holds {} trees, cannot cut a batch of {n}{}",
+            self.ripe.len(),
+            if self.quiesced { " (stream quiesced — lower --max-steps or feed more data)" } else { "" }
+        );
+        let step = self.cut_count;
+        let mut batch = Vec::with_capacity(n);
+        let mut max_staleness = 0u64;
+        for _ in 0..n {
+            let e = self.ripe.pop_front().expect("length checked above");
+            let staleness = step - e.ripe_cut;
+            max_staleness = max_staleness.max(staleness);
+            batch.push(e.tree);
+        }
+        anyhow::ensure!(
+            max_staleness <= self.staleness_bound,
+            "bounded-staleness contract violated: a tree waited {max_staleness} steps in the \
+             ripe queue (bound {}) — raise --staleness-bound or lower --ripe-cap",
+            self.staleness_bound
+        );
+        let fp = batch_fingerprint(step as usize, &batch);
+        let cut = Event::Cut {
+            step,
+            upto_seq: self.seq,
+            trees: n as u64,
+            fp,
+            max_staleness,
+            queue_depth: self.ripe.len() as u64,
+            admitted: self.admitted_since_cut,
+        };
+        match &mut self.feed {
+            Feed::Live { .. } => self.journal_event(&cut)?,
+            Feed::Replay { feed, .. } => {
+                let journaled = feed.pop_front();
+                anyhow::ensure!(
+                    journaled.as_ref() == Some(&cut),
+                    "replay diverged at cut {step}: derived {cut:?} but journal says \
+                     {journaled:?}"
+                );
+            }
+        }
+        self.last_stats = Some(ServeStepStats {
+            staleness_steps: max_staleness,
+            ripe_queue_depth: self.ripe.len() as u64,
+            admitted_sessions: self.admitted_since_cut,
+        });
+        self.admitted_since_cut = 0;
+        self.cut_count += 1;
+        self.publish_shared();
+        Ok(batch)
+    }
+}
+
+impl CorpusSource for LiveSource {
+    fn next_tree(&mut self) -> Result<Arc<TrajectoryTree>> {
+        // a tree-at-a-time interface would let the planner split one cut
+        // across two optimizer steps, breaking the journal's batch
+        // boundaries — refuse loudly rather than silently drifting
+        anyhow::bail!("LiveSource serves whole batches; use next_batch")
+    }
+
+    fn next_batch(&mut self, n: usize) -> Result<Vec<Arc<TrajectoryTree>>> {
+        match &self.feed {
+            Feed::Live { .. } => self.pump_live(n)?,
+            Feed::Replay { .. } => self.pump_replay()?,
+        }
+        self.cut(n)
+    }
+
+    fn epoch_len(&self) -> Option<usize> {
+        None // a live stream has no epochs
+    }
+
+    fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+
+    fn take_ingest_ms(&mut self) -> f64 {
+        std::mem::take(&mut self.ingest_ms)
+    }
+
+    fn take_serve_stats(&mut self) -> Option<ServeStepStats> {
+        self.last_stats.take()
+    }
+
+    fn describe(&self) -> String {
+        let mode = match self.feed {
+            Feed::Live { .. } => "live",
+            Feed::Replay { .. } => "replay",
+        };
+        format!(
+            "serve[{mode}]: staleness_bound={}, ripe_cap={}",
+            self.staleness_bound, self.ripe_cap
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    fn cfg() -> SourceConfig {
+        SourceConfig {
+            staleness_bound: 8,
+            ripe_cap: 16,
+            max_open_sessions: 4,
+            idle_timeout: 0,
+            max_seq_len: None,
+            poll_ms: 1,
+            stall_timeout_ms: 50,
+        }
+    }
+
+    fn spool_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tt-src-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_seg(dir: &std::path::Path, file: &str, lines: &[String]) {
+        let mut f = std::fs::File::create(dir.join(file)).unwrap();
+        for l in lines {
+            writeln!(f, "{l}").unwrap();
+        }
+    }
+
+    fn rollout(session: &str, tokens: &[i32]) -> String {
+        let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        format!("{{\"session\":\"{session}\",\"tokens\":[{}]}}", toks.join(","))
+    }
+
+    fn live_pair(dir: &std::path::Path, journal: &std::path::Path) -> (LiveSource, ServeShared) {
+        let shared = ServeShared::default();
+        let w = Arc::new(Mutex::new(JournalWriter::create(journal).unwrap()));
+        let src = LiveSource::live(dir, cfg(), w, shared.clone()).unwrap();
+        (src, shared)
+    }
+
+    #[test]
+    fn live_cut_then_replay_reproduces_everything() {
+        let dir = spool_dir("roundtrip");
+        // two sessions ending, then shutdown; s1 branches at token 3 but
+        // shares a root, so each session still emits exactly one tree
+        write_seg(
+            &dir,
+            "seg-000.jsonl",
+            &[
+                rollout("s1", &[1, 2, 3]),
+                rollout("s2", &[9, 8]),
+                rollout("s1", &[1, 2, 4]),
+                "{\"session\":\"s1\",\"end\":true}".into(),
+                "{\"session\":\"s2\",\"end\":true}".into(),
+                "{\"shutdown\":true}".into(),
+            ],
+        );
+        let journal = dir.join("journal.jsonl");
+        let (mut src, shared) = live_pair(&dir, &journal);
+        let b0 = src.next_batch(2).unwrap();
+        assert_eq!(b0.len(), 2);
+        let s0 = src.take_serve_stats().unwrap();
+        assert_eq!(s0.admitted_sessions, 2);
+        assert_eq!(s0.staleness_steps, 0);
+        assert_eq!(s0.ripe_queue_depth, 0);
+        let live_stats = shared.lock().unwrap().stats;
+        assert_eq!(live_stats.sessions, 2);
+        assert_eq!(live_stats.records_in, 3);
+        // asking for another batch after quiesce with an empty queue fails
+        assert!(src.next_batch(1).is_err());
+        drop(src);
+
+        // replay from the journal: identical batch, stats, and metrics
+        let script = super::super::journal::read_journal(&journal).unwrap();
+        let feed: Vec<Event> = script
+            .into_iter()
+            .filter(|e| !matches!(e, Event::Config(_) | Event::Loss { .. } | Event::Stats { .. }))
+            .collect();
+        let shared2 = ServeShared::default();
+        let mut rep = LiveSource::replay(&dir, cfg(), feed, shared2.clone()).unwrap();
+        let r0 = rep.next_batch(2).unwrap();
+        assert_eq!(b0.len(), r0.len());
+        for (a, b) in b0.iter().zip(&r0) {
+            assert_eq!(a.nodes, b.nodes, "replayed batch trees differ");
+        }
+        assert_eq!(rep.take_serve_stats().unwrap(), s0);
+        assert_eq!(shared2.lock().unwrap().stats, live_stats);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_detects_spool_tampering() {
+        let dir = spool_dir("tamper");
+        write_seg(
+            &dir,
+            "seg.jsonl",
+            &[
+                rollout("s", &[1, 2]),
+                "{\"session\":\"s\",\"end\":true}".into(),
+                "{\"shutdown\":true}".into(),
+            ],
+        );
+        let journal = dir.join("journal.jsonl");
+        let (mut src, _) = live_pair(&dir, &journal);
+        src.next_batch(1).unwrap();
+        drop(src);
+        // tamper: change a token after the run
+        write_seg(
+            &dir,
+            "seg.jsonl",
+            &[
+                rollout("s", &[1, 7]),
+                "{\"session\":\"s\",\"end\":true}".into(),
+                "{\"shutdown\":true}".into(),
+            ],
+        );
+        let feed: Vec<Event> = super::super::journal::read_journal(&journal)
+            .unwrap()
+            .into_iter()
+            .filter(|e| !matches!(e, Event::Config(_) | Event::Loss { .. } | Event::Stats { .. }))
+            .collect();
+        let mut rep = LiveSource::replay(&dir, cfg(), feed, ServeShared::default()).unwrap();
+        let err = rep.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("diverged"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stall_times_out_instead_of_hanging() {
+        let dir = spool_dir("stall");
+        write_seg(&dir, "seg.jsonl", &[rollout("s", &[1])]);
+        let journal = dir.join("journal.jsonl");
+        let (mut src, _) = live_pair(&dir, &journal);
+        // the lone session never ends and nothing else arrives → stall
+        let err = src.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("stalled"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staleness_is_stamped_in_cuts_not_wall_clock() {
+        let dir = spool_dir("stale");
+        // 3 sessions ripen before the first cut; batches of 1 → the third
+        // tree waits 2 cuts
+        write_seg(
+            &dir,
+            "seg.jsonl",
+            &[
+                rollout("a", &[1]),
+                "{\"session\":\"a\",\"end\":true}".into(),
+                rollout("b", &[2]),
+                "{\"session\":\"b\",\"end\":true}".into(),
+                rollout("c", &[3]),
+                "{\"session\":\"c\",\"end\":true}".into(),
+                "{\"shutdown\":true}".into(),
+            ],
+        );
+        let journal = dir.join("journal.jsonl");
+        let (mut src, _) = live_pair(&dir, &journal);
+        src.next_batch(1).unwrap();
+        assert_eq!(src.take_serve_stats().unwrap().staleness_steps, 0);
+        src.next_batch(1).unwrap();
+        assert_eq!(src.take_serve_stats().unwrap().staleness_steps, 1);
+        src.next_batch(1).unwrap();
+        assert_eq!(src.take_serve_stats().unwrap().staleness_steps, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staleness_bound_is_a_hard_error() {
+        let dir = spool_dir("bound");
+        write_seg(
+            &dir,
+            "seg.jsonl",
+            &[
+                rollout("a", &[1]),
+                "{\"session\":\"a\",\"end\":true}".into(),
+                rollout("b", &[2]),
+                "{\"session\":\"b\",\"end\":true}".into(),
+                rollout("c", &[3]),
+                "{\"session\":\"c\",\"end\":true}".into(),
+                "{\"shutdown\":true}".into(),
+            ],
+        );
+        let journal = dir.join("journal.jsonl");
+        let shared = ServeShared::default();
+        let w = Arc::new(Mutex::new(JournalWriter::create(&journal).unwrap()));
+        let mut c = cfg();
+        c.staleness_bound = 1;
+        let mut src = LiveSource::live(&dir, c, w, shared).unwrap();
+        src.next_batch(1).unwrap();
+        src.next_batch(1).unwrap(); // staleness 1 == bound: allowed
+        let err = src.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("staleness"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn next_tree_is_refused() {
+        let dir = spool_dir("whole");
+        write_seg(&dir, "seg.jsonl", &[rollout("s", &[1])]);
+        let journal = dir.join("journal.jsonl");
+        let (mut src, _) = live_pair(&dir, &journal);
+        assert!(src.next_tree().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,342 @@
+//! The ingestion spool: a watched directory of append-only JSONL segments
+//! that concurrent producers write rollout records into.
+//!
+//! Contract with producers (kept deliberately thin so any process that can
+//! append lines to a file can feed the trainer):
+//!
+//! * each producer owns one or more `*.jsonl` segment files in the spool
+//!   directory and only ever **appends whole lines** to them;
+//! * a line is either a [`crate::ingest::RolloutRecord`], a session end
+//!   marker `{"session": "...", "end": true}`, or the global shutdown
+//!   marker `{"shutdown": true}`;
+//! * files are never truncated or rewritten (rotation = start a new file).
+//!
+//! The watcher polls: it re-scans the directory for new `*.jsonl` segments
+//! and re-reads each known segment to its current EOF, buffering the bytes
+//! after the last complete newline until the producer finishes the line
+//! (torn writes are invisible to the fold).  Consumption order is
+//! **deterministic given the bytes on disk at each poll**: segments are
+//! walked in lexicographic filename order and a segment is drained to its
+//! last complete line before the next is consulted.  Live arrival order is
+//! still timing-dependent across polls — that is exactly what the journal
+//! records (file, line) coordinates to pin down for replay.
+//!
+//! These files *grow concurrently*, so this reader must stay on plain
+//! `read` calls — never [`crate::util::mmap::Mmap`], whose length is fixed
+//! at map time (see that module's docs).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+
+use crate::ingest::RolloutRecord;
+use crate::util::json::Json;
+use crate::Result;
+
+/// One decoded spool line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpoolRecord {
+    Record(RolloutRecord),
+    /// `{"session": "...", "end": true}` — the producer finished this
+    /// session; its tree is ripe now.
+    End { session: String },
+    /// `{"shutdown": true}` — quiesce: flush everything and stop pumping.
+    Shutdown,
+}
+
+impl SpoolRecord {
+    pub fn parse(v: &Json) -> Result<Self> {
+        if v.get("shutdown").and_then(|x| x.as_bool()) == Some(true) {
+            return Ok(SpoolRecord::Shutdown);
+        }
+        if v.get("end").and_then(|x| x.as_bool()) == Some(true) {
+            return Ok(SpoolRecord::End { session: v.req_str("session")?.to_string() });
+        }
+        Ok(SpoolRecord::Record(RolloutRecord::from_json(v)?))
+    }
+}
+
+/// An undecoded line with its provenance — the coordinate the journal
+/// records so replay can find the identical bytes.
+#[derive(Debug)]
+pub struct SpoolLine {
+    /// Segment basename (spool-relative, so journals relocate with the
+    /// spool directory).
+    pub file: String,
+    /// 1-based *physical* line number within the segment (blank lines
+    /// count, so the coordinate matches what an editor shows).
+    pub line: u64,
+    pub raw: String,
+}
+
+impl SpoolLine {
+    pub fn decode(&self) -> Result<SpoolRecord> {
+        Json::parse(&self.raw)
+            .and_then(|v| SpoolRecord::parse(&v))
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", self.file, self.line))
+    }
+}
+
+/// Tail state for one growing segment file.
+struct Segment {
+    f: File,
+    /// Bytes after the last newline seen so far (a torn producer write).
+    partial: Vec<u8>,
+    /// Complete lines read but not yet consumed, with physical line numbers.
+    ready: VecDeque<(u64, String)>,
+    /// Physical lines fully read off this segment so far.
+    line_no: u64,
+}
+
+impl Segment {
+    fn open(path: &Path) -> std::io::Result<Self> {
+        Ok(Self { f: File::open(path)?, partial: Vec::new(), ready: VecDeque::new(), line_no: 0 })
+    }
+
+    /// Read to the segment's current EOF, splitting complete lines into
+    /// `ready`.  Blank lines advance the physical line counter but are not
+    /// queued (the fold never sees them — mirroring the corpus reader).
+    fn refill(&mut self) -> std::io::Result<()> {
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            let n = self.f.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            self.partial.extend_from_slice(&buf[..n]);
+        }
+        while let Some(pos) = self.partial.iter().position(|&b| b == b'\n') {
+            let mut line: Vec<u8> = self.partial.drain(..=pos).collect();
+            line.pop(); // the \n
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            self.line_no += 1;
+            if line.iter().all(|b| b.is_ascii_whitespace()) {
+                continue;
+            }
+            let s = String::from_utf8(line).map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+            })?;
+            self.ready.push_back((self.line_no, s));
+        }
+        Ok(())
+    }
+}
+
+/// Polling watcher over a spool directory.
+pub struct SpoolWatcher {
+    dir: PathBuf,
+    /// Keyed by basename: BTreeMap gives the lexicographic walk order.
+    segments: BTreeMap<String, Segment>,
+}
+
+impl SpoolWatcher {
+    pub fn open(dir: &Path) -> Result<Self> {
+        anyhow::ensure!(dir.is_dir(), "spool {} is not a directory", dir.display());
+        let mut w = Self { dir: dir.to_path_buf(), segments: BTreeMap::new() };
+        w.rescan()?;
+        Ok(w)
+    }
+
+    /// Pick up newly created `*.jsonl` segments.
+    fn rescan(&mut self) -> Result<()> {
+        for entry in std::fs::read_dir(&self.dir)
+            .map_err(|e| anyhow::anyhow!("spool {}: {e}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !name.ends_with(".jsonl") || self.segments.contains_key(&name) {
+                continue;
+            }
+            self.segments.insert(name, Segment::open(&entry.path())?);
+        }
+        Ok(())
+    }
+
+    /// Next complete line, or `None` if every segment is drained to its
+    /// current EOF (the caller decides whether to sleep-and-retry or give
+    /// up — back-pressure policy lives in the source, not here).
+    ///
+    /// Two passes with a directory rescan between them, so a freshly
+    /// created segment is seen without waiting for the next poll cycle.
+    pub fn next_line(&mut self) -> Result<Option<SpoolLine>> {
+        for pass in 0..2 {
+            for (name, seg) in self.segments.iter_mut() {
+                if seg.ready.is_empty() {
+                    seg.refill().map_err(|e| anyhow::anyhow!("spool {name}: {e}"))?;
+                }
+                if let Some((line, raw)) = seg.ready.pop_front() {
+                    return Ok(Some(SpoolLine { file: name.clone(), line, raw }));
+                }
+            }
+            if pass == 0 {
+                self.rescan()?;
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// Replay-side reader: sequential cursors into *finished* spool segments,
+/// addressed by the `(file, line)` coordinates the journal recorded.
+pub struct SpoolCursors {
+    dir: PathBuf,
+    cursors: BTreeMap<String, SegmentCursor>,
+}
+
+struct SegmentCursor {
+    r: BufReader<File>,
+    line_no: u64,
+}
+
+impl SegmentCursor {
+    /// Advance to physical line `target` (1-based) and return it.  Journal
+    /// line numbers within one file are strictly increasing (the live
+    /// watcher consumes each segment front-to-back), so a plain forward
+    /// scan suffices — seeking backwards is a corrupted-journal error.
+    fn line_at(&mut self, target: u64, file: &str) -> Result<String> {
+        anyhow::ensure!(
+            target > self.line_no,
+            "journal rewinds {file} to line {target} (already at {}) — journal/spool mismatch",
+            self.line_no
+        );
+        let mut buf = String::new();
+        loop {
+            buf.clear();
+            let n = self.r.read_line(&mut buf)?;
+            anyhow::ensure!(n > 0, "{file}:{target}: spool ended early (journal/spool mismatch)");
+            self.line_no += 1;
+            if self.line_no == target {
+                while buf.ends_with('\n') || buf.ends_with('\r') {
+                    buf.pop();
+                }
+                return Ok(buf);
+            }
+        }
+    }
+}
+
+impl SpoolCursors {
+    pub fn open(dir: &Path) -> Result<Self> {
+        anyhow::ensure!(dir.is_dir(), "spool {} is not a directory", dir.display());
+        Ok(Self { dir: dir.to_path_buf(), cursors: BTreeMap::new() })
+    }
+
+    pub fn line_at(&mut self, file: &str, line: u64) -> Result<SpoolLine> {
+        if !self.cursors.contains_key(file) {
+            anyhow::ensure!(
+                !file.contains('/') && !file.contains('\\') && file != "..",
+                "journal names a non-basename segment {file:?}"
+            );
+            let path = self.dir.join(file);
+            let f = File::open(&path)
+                .map_err(|e| anyhow::anyhow!("spool segment {}: {e}", path.display()))?;
+            self.cursors
+                .insert(file.to_string(), SegmentCursor { r: BufReader::new(f), line_no: 0 });
+        }
+        let cur = self.cursors.get_mut(file).expect("just inserted");
+        let raw = cur.line_at(line, file)?;
+        Ok(SpoolLine { file: file.to_string(), line, raw })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tt-spool-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn append(dir: &Path, file: &str, text: &str) {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(file))
+            .unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_records_markers_and_shutdown() {
+        let rec = Json::parse(r#"{"session":"s","tokens":[1,2]}"#).unwrap();
+        assert!(matches!(SpoolRecord::parse(&rec).unwrap(), SpoolRecord::Record(_)));
+        let end = Json::parse(r#"{"session":"s","end":true}"#).unwrap();
+        assert_eq!(SpoolRecord::parse(&end).unwrap(), SpoolRecord::End { session: "s".into() });
+        let down = Json::parse(r#"{"shutdown":true}"#).unwrap();
+        assert_eq!(SpoolRecord::parse(&down).unwrap(), SpoolRecord::Shutdown);
+        // end:false is NOT a marker — it must parse as a record (and fail,
+        // since it has no tokens)
+        let not_end = Json::parse(r#"{"session":"s","end":false}"#).unwrap();
+        assert!(SpoolRecord::parse(&not_end).is_err());
+    }
+
+    #[test]
+    fn watcher_walks_segments_in_name_order_and_tails_growth() {
+        let dir = tmpdir("tail");
+        append(&dir, "b.jsonl", "{\"x\":3}\n");
+        append(&dir, "a.jsonl", "{\"x\":1}\n{\"x\":2}\n");
+        let mut w = SpoolWatcher::open(&dir).unwrap();
+        let got = |w: &mut SpoolWatcher| {
+            let l = w.next_line().unwrap().unwrap();
+            (l.file.clone(), l.line, l.raw.clone())
+        };
+        assert_eq!(got(&mut w), ("a.jsonl".into(), 1, "{\"x\":1}".into()));
+        assert_eq!(got(&mut w), ("a.jsonl".into(), 2, "{\"x\":2}".into()));
+        assert_eq!(got(&mut w), ("b.jsonl".into(), 1, "{\"x\":3}".into()));
+        assert!(w.next_line().unwrap().is_none(), "drained");
+        // producer appends more + a brand-new segment; same watcher sees both
+        append(&dir, "a.jsonl", "{\"x\":4}\n");
+        append(&dir, "c.jsonl", "{\"x\":5}\n");
+        assert_eq!(got(&mut w), ("a.jsonl".into(), 3, "{\"x\":4}".into()));
+        assert_eq!(got(&mut w), ("c.jsonl".into(), 1, "{\"x\":5}".into()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn watcher_holds_torn_lines_until_the_newline_lands() {
+        let dir = tmpdir("torn");
+        append(&dir, "s.jsonl", "{\"x\":1}\n{\"x\":");
+        let mut w = SpoolWatcher::open(&dir).unwrap();
+        assert_eq!(w.next_line().unwrap().unwrap().raw, "{\"x\":1}");
+        assert!(w.next_line().unwrap().is_none(), "half a line is not a line");
+        append(&dir, "s.jsonl", "2}\n");
+        let l = w.next_line().unwrap().unwrap();
+        assert_eq!((l.line, l.raw.as_str()), (2, "{\"x\":2}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blank_lines_count_physically_but_are_not_served() {
+        let dir = tmpdir("blank");
+        append(&dir, "s.jsonl", "{\"x\":1}\n\n  \n{\"x\":2}\n");
+        let mut w = SpoolWatcher::open(&dir).unwrap();
+        assert_eq!(w.next_line().unwrap().unwrap().line, 1);
+        let l = w.next_line().unwrap().unwrap();
+        assert_eq!((l.line, l.raw.as_str()), (4, "{\"x\":2}"));
+        // the replay cursor agrees on the coordinate
+        let mut c = SpoolCursors::open(&dir).unwrap();
+        assert_eq!(c.line_at("s.jsonl", 4).unwrap().raw, "{\"x\":2}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cursors_refuse_rewinds_and_short_files() {
+        let dir = tmpdir("cursor");
+        append(&dir, "s.jsonl", "{\"x\":1}\n{\"x\":2}\n");
+        let mut c = SpoolCursors::open(&dir).unwrap();
+        assert_eq!(c.line_at("s.jsonl", 2).unwrap().raw, "{\"x\":2}");
+        let err = c.line_at("s.jsonl", 1).unwrap_err().to_string();
+        assert!(err.contains("rewinds"), "got: {err}");
+        let err = c.line_at("s.jsonl", 99).unwrap_err().to_string();
+        assert!(err.contains("ended early"), "got: {err}");
+        assert!(c.line_at("../evil.jsonl", 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -135,6 +135,9 @@ impl BaselineTrainer {
             rank_imbalance: 1.0,
             ingest_ms: 0.0,
             cost_model_err: 0.0,
+            staleness_steps: 0,
+            ripe_queue_depth: 0,
+            admitted_sessions: 0,
         })
     }
 

@@ -59,6 +59,16 @@ pub struct StepMetrics {
     /// under `cost_model: "calibrated"` it tracks how well the fitted
     /// model is balancing real time.
     pub cost_model_err: f64,
+    /// Bounded-staleness accounting of `tree-train serve` (docs/serve.md):
+    /// the maximum optimizer steps any tree in this batch waited in the
+    /// ripe queue between ripening and being cut (0 outside serve, and 0
+    /// when every tree entered the very next cut).
+    pub staleness_steps: u64,
+    /// Ripe trees still queued after this batch was cut (0 outside serve).
+    pub ripe_queue_depth: u64,
+    /// Sessions whose trees ripened into the queue since the previous cut
+    /// (end-marker, idle, LRU or quiesce verdicts; 0 outside serve).
+    pub admitted_sessions: u64,
 }
 
 impl StepMetrics {
@@ -83,7 +93,7 @@ impl StepMetrics {
     pub fn csv_row(&self) -> String {
         format!(
             "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},\
-             {:.3},{:.3},{},{:.4},{:.3},{:.4}",
+             {:.3},{:.3},{},{:.4},{:.3},{:.4},{},{},{}",
             self.step,
             self.loss,
             self.weight_sum,
@@ -103,7 +113,10 @@ impl StepMetrics {
             self.reduce_depth,
             self.rank_imbalance,
             self.ingest_ms,
-            self.cost_model_err
+            self.cost_model_err,
+            self.staleness_steps,
+            self.ripe_queue_depth,
+            self.admitted_sessions
         )
     }
 }
@@ -111,7 +124,8 @@ impl StepMetrics {
 /// Column schema of the per-step CSV ([`StepMetrics::csv_row`] order).
 pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,\
      reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
-     ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance,ingest_ms,cost_model_err";
+     ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance,ingest_ms,cost_model_err,\
+     staleness_steps,ripe_queue_depth,admitted_sessions";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -157,6 +171,9 @@ mod tests {
             rank_imbalance: 1.125,
             ingest_ms: 6.5,
             cost_model_err: 0.0625,
+            staleness_steps: 2,
+            ripe_queue_depth: 7,
+            admitted_sessions: 3,
         }
     }
 
@@ -205,15 +222,40 @@ mod tests {
     }
 
     #[test]
-    fn csv_schema_appends_the_ingest_and_cost_columns_last() {
+    fn csv_schema_appends_the_ingest_and_cost_columns_before_serve() {
         // additive-only schema growth: downstream consumers index the
-        // existing columns by position, so new columns must append
+        // existing columns by position, so new columns must append — the
+        // PR-6 ingest/cost pair keeps its position ahead of the serve trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 2], "ingest_ms");
-        assert_eq!(cols[cols.len() - 1], "cost_model_err");
+        assert_eq!(cols[cols.len() - 5], "ingest_ms");
+        assert_eq!(cols[cols.len() - 4], "cost_model_err");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 2], "6.500");
-        assert_eq!(vals[vals.len() - 1], "0.0625");
+        assert_eq!(vals[vals.len() - 5], "6.500");
+        assert_eq!(vals[vals.len() - 4], "0.0625");
+    }
+
+    #[test]
+    fn csv_schema_appends_the_serve_columns_last() {
+        // the serve (continuous-ingestion) trio is the newest append and
+        // must stay last until the next additive growth
+        let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
+        assert_eq!(cols[cols.len() - 3], "staleness_steps");
+        assert_eq!(cols[cols.len() - 2], "ripe_queue_depth");
+        assert_eq!(cols[cols.len() - 1], "admitted_sessions");
+        let row = sample().csv_row();
+        let vals: Vec<&str> = row.split(',').collect();
+        assert_eq!(vals[vals.len() - 3], "2");
+        assert_eq!(vals[vals.len() - 2], "7");
+        assert_eq!(vals[vals.len() - 1], "3");
+        // non-serve constructors default the trio to zero, so pre-serve
+        // consumers reading by position see unchanged values
+        let mut m = sample();
+        m.staleness_steps = 0;
+        m.ripe_queue_depth = 0;
+        m.admitted_sessions = 0;
+        let vals: Vec<String> =
+            m.csv_row().split(',').map(str::to_string).collect();
+        assert_eq!(&vals[vals.len() - 3..], ["0", "0", "0"]);
     }
 }

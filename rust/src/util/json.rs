@@ -211,40 +211,94 @@ impl Json {
 /// existing object, replace or append `key`, prune any other top-level key
 /// not listed in `keep` (stale sections from older schemas), write back
 /// pretty-printed.  Lets independent emitters (`tree-train distsim`'s
-/// projection, `tree-train dist-smoke`'s measured sweep) share one results
-/// file without clobbering each other's sections.
+/// projection, `tree-train dist-smoke`'s measured sweep, `tree-train
+/// serve`'s bench section) share one results file without clobbering each
+/// other's sections.
 ///
 /// A missing file starts fresh; an existing but unparseable or non-object
 /// file is an **error** — never silently overwritten (a truncated write
 /// must not quietly destroy the sibling section; delete the file to
 /// reset).
+///
+/// Concurrent writers are detected, not assumed away: the file is
+/// re-read immediately before the write and, if its bytes changed since
+/// the merge snapshot, the merge is retried against the new contents (a
+/// bounded number of times) instead of silently dropping the other
+/// writer's section.  The write itself goes through a same-directory temp
+/// file + rename, so a competing reader (or the race check of a competing
+/// writer) never observes a truncated file.  The remaining
+/// re-read-to-rename window is best-effort — two smoke jobs sharing a
+/// BENCH file is the workload, not a lock-free database.
 pub fn update_json_file_key(
     path: &std::path::Path,
     key: &str,
     value: Json,
     keep: &[&str],
 ) -> anyhow::Result<()> {
-    let mut kv: Vec<(String, Json)> = match std::fs::read_to_string(path) {
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
-        Err(e) => anyhow::bail!("reading {}: {e}", path.display()),
-        Ok(s) => match Json::parse(&s) {
-            Ok(Json::Obj(kv)) => kv
-                .into_iter()
-                .filter(|(k, _)| k == key || keep.contains(&k.as_str()))
-                .collect(),
-            _ => anyhow::bail!(
-                "{} exists but is not a parseable JSON object — refusing to \
-                 clobber it (delete the file to reset)",
-                path.display()
-            ),
-        },
+    update_json_file_key_hooked(path, key, value, keep, || {})
+}
+
+/// [`update_json_file_key`] with a test seam: `between` runs after the
+/// merge snapshot is taken and before the pre-write race check, which is
+/// exactly where a concurrent writer interleaves.
+pub(crate) fn update_json_file_key_hooked(
+    path: &std::path::Path,
+    key: &str,
+    value: Json,
+    keep: &[&str],
+    mut between: impl FnMut(),
+) -> anyhow::Result<()> {
+    const ATTEMPTS: u32 = 4;
+    let read_raw = |path: &std::path::Path| -> anyhow::Result<Option<String>> {
+        match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => anyhow::bail!("reading {}: {e}", path.display()),
+            Ok(s) => Ok(Some(s)),
+        }
     };
-    match kv.iter_mut().find(|(k, _)| k == key) {
-        Some((_, v)) => *v = value,
-        None => kv.push((key.to_string(), value)),
+    for attempt in 1..=ATTEMPTS {
+        let snapshot = read_raw(path)?;
+        let mut kv: Vec<(String, Json)> = match &snapshot {
+            None => Vec::new(),
+            Some(s) => match Json::parse(s) {
+                Ok(Json::Obj(kv)) => kv
+                    .into_iter()
+                    .filter(|(k, _)| k == key || keep.contains(&k.as_str()))
+                    .collect(),
+                _ => anyhow::bail!(
+                    "{} exists but is not a parseable JSON object — refusing to \
+                     clobber it (delete the file to reset)",
+                    path.display()
+                ),
+            },
+        };
+        match kv.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value.clone(),
+            None => kv.push((key.to_string(), value.clone())),
+        }
+        between();
+        if read_raw(path)? != snapshot {
+            // another writer landed since the snapshot: re-merge against
+            // its output so both sections survive
+            anyhow::ensure!(
+                attempt < ATTEMPTS,
+                "{}: still changing underneath after {ATTEMPTS} merge \
+                 attempts — giving up rather than dropping a concurrent \
+                 writer's section",
+                path.display()
+            );
+            continue;
+        }
+        let tmp = path.with_file_name(format!(
+            "{}.tmp.{}",
+            path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default(),
+            std::process::id()
+        ));
+        std::fs::write(&tmp, Json::Obj(kv).to_string_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        return Ok(());
     }
-    std::fs::write(path, Json::Obj(kv).to_string_pretty())?;
-    Ok(())
+    unreachable!("loop returns or bails")
 }
 
 fn nl(out: &mut String, indent: Option<usize>, depth: usize) {
@@ -531,6 +585,57 @@ mod tests {
         assert!(err.to_string().contains("refusing to clobber"), "got: {err}");
         // the broken file is left untouched for inspection
         assert!(std::fs::read_to_string(&path).unwrap().starts_with("{\"measured_sweep\""));
+        // a parseable but non-object file (e.g. a bare array) is just as
+        // unmergeable and must also refuse
+        std::fs::write(&path, "[1, 2, 3]").unwrap();
+        let err = update_json_file_key(&path, "projection", Json::num(1.0), &[]).unwrap_err();
+        assert!(err.to_string().contains("refusing to clobber"), "got: {err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "[1, 2, 3]");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn update_json_file_key_remerges_after_a_concurrent_writer() {
+        let dir = std::env::temp_dir().join(format!("tt-json-race-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merged.json");
+        update_json_file_key(&path, "mine", Json::num(1.0), &["theirs"]).unwrap();
+        // a concurrent writer lands its section between our merge snapshot
+        // and our write; the naive read-merge-write would drop it
+        let mut raced = false;
+        let p2 = path.clone();
+        update_json_file_key_hooked(&path, "mine", Json::num(2.0), &["theirs"], || {
+            if !raced {
+                raced = true;
+                update_json_file_key(&p2, "theirs", Json::str("kept"), &["mine"]).unwrap();
+            }
+        })
+        .unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("mine").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            v.get("theirs").unwrap().as_str(),
+            Some("kept"),
+            "the concurrent writer's section must survive the re-merge"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn update_json_file_key_gives_up_under_sustained_interference() {
+        let dir = std::env::temp_dir().join(format!("tt-json-spin-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merged.json");
+        // the file changes on *every* attempt: the retry loop must bail
+        // with a diagnostic instead of spinning or clobbering
+        let mut n = 0u32;
+        let p2 = path.clone();
+        let err = update_json_file_key_hooked(&path, "mine", Json::num(1.0), &[], || {
+            n += 1;
+            std::fs::write(&p2, format!("{{\"spin\": {n}}}")).unwrap();
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("concurrent writer"), "got: {err}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

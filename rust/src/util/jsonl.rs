@@ -8,11 +8,23 @@
 //! chunk buffer (growing only for oversized lines) and hands out borrowed
 //! byte slices, so the hot ingestion loop performs no per-line `String`
 //! allocation — the JSON parser reads straight out of the chunk.
+//!
+//! Two line-splitting backends behind one reader:
+//!
+//! * [`MmapLineReader`] — the whole file mapped read-only
+//!   ([`super::mmap::Mmap`]); lines are slices of the page cache itself,
+//!   removing even the kernel→buffer copy of the chunked path.  The
+//!   default for [`JsonlReader::open`] on regular files.
+//! * [`LineReader`] — chunked copy into a reusable buffer; the fallback
+//!   for non-seekable inputs (in-memory tests, pipes) and for anything
+//!   still *growing* while read — an mmap's length is fixed at map time,
+//!   so live spool segments (`tree-train serve`) must use this path.
 
 use std::io::Read;
 use std::path::Path;
 
 use super::json::Json;
+use super::mmap::Mmap;
 
 /// Default chunk size: large enough that refills are rare relative to
 /// lines, small enough to stay cache-friendly.
@@ -92,14 +104,85 @@ impl<R: Read> LineReader<R> {
     }
 }
 
+/// Line splitter over a read-only mapped file: the same blank/CRLF/final-
+/// line semantics as [`LineReader`], but lines borrow the mapping directly
+/// (no copy, no read syscalls after the map).
+pub struct MmapLineReader {
+    map: Mmap,
+    pos: usize,
+}
+
+impl MmapLineReader {
+    pub fn new(map: Mmap) -> Self {
+        Self { map, pos: 0 }
+    }
+
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        Ok(Self::new(Mmap::map(&std::fs::File::open(path)?)?))
+    }
+
+    /// Next line as a slice of the mapping; `None` at end of file.
+    pub fn next_line(&mut self) -> Option<&[u8]> {
+        let bytes = self.map.bytes();
+        if self.pos >= bytes.len() {
+            return None;
+        }
+        let a = self.pos;
+        let (mut b, next) = match bytes[a..].iter().position(|&x| x == b'\n') {
+            Some(i) => (a + i, a + i + 1),
+            None => (bytes.len(), bytes.len()),
+        };
+        if b > a && bytes[b - 1] == b'\r' {
+            b -= 1;
+        }
+        self.pos = next;
+        Some(&self.map.bytes()[a..b])
+    }
+}
+
+/// The two line backends one [`JsonlReader`] can run on.
+enum Lines<R: Read> {
+    Chunked(LineReader<R>),
+    Mapped(MmapLineReader),
+}
+
+impl<R: Read> Lines<R> {
+    fn next_line(&mut self) -> Option<std::io::Result<&[u8]>> {
+        match self {
+            Lines::Chunked(lr) => lr.next_line(),
+            Lines::Mapped(m) => m.next_line().map(Ok),
+        }
+    }
+}
+
 pub struct JsonlReader<R: Read> {
-    lines: LineReader<R>,
+    lines: Lines<R>,
     label: String,
     line_no: usize,
 }
 
 impl JsonlReader<std::io::BufReader<std::fs::File>> {
+    /// Open a corpus file, mmap-backed when the platform allows it (the
+    /// chunked copy is the transparent fallback).  Only for files that are
+    /// complete on disk — a still-growing file must go through
+    /// [`Self::new`] on a plain reader instead.
     pub fn open(path: &Path) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let label = path.display().to_string();
+        match Mmap::map(&f) {
+            Ok(map) => Ok(Self {
+                lines: Lines::Mapped(MmapLineReader::new(map)),
+                label,
+                line_no: 0,
+            }),
+            Err(_) => Ok(Self::new(std::io::BufReader::new(f), &label)),
+        }
+    }
+
+    /// Open with the chunked reader unconditionally (the pre-mmap
+    /// behavior); equivalence-tested against the mapped path below.
+    pub fn open_chunked(path: &Path) -> crate::Result<Self> {
         let f = std::fs::File::open(path)
             .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
         Ok(Self::new(std::io::BufReader::new(f), &path.display().to_string()))
@@ -108,7 +191,7 @@ impl JsonlReader<std::io::BufReader<std::fs::File>> {
 
 impl<R: Read> JsonlReader<R> {
     pub fn new(reader: R, label: &str) -> Self {
-        Self { lines: LineReader::new(reader), label: label.to_string(), line_no: 0 }
+        Self { lines: Lines::Chunked(LineReader::new(reader)), label: label.to_string(), line_no: 0 }
     }
 
     /// Next non-blank line, JSON-parsed and fed to `parse`; errors from
@@ -199,5 +282,66 @@ mod tests {
         assert_eq!(lr.next_line().unwrap().unwrap(), b"a");
         assert_eq!(lr.next_line().unwrap().unwrap(), b"b");
         assert!(lr.next_line().is_none());
+    }
+
+    fn tmp_file(name: &str, contents: &str) -> std::path::PathBuf {
+        let path =
+            std::env::temp_dir().join(format!("tt-jsonl-{}-{name}", std::process::id()));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn mapped_and_chunked_readers_split_lines_identically() {
+        // every edge the chunked tests exercise, through both backends
+        let body = "alpha\nbeta-which-is-longer\r\n\ngamma\nlast-no-newline";
+        let path = tmp_file("equiv", body);
+        let mut mapped = Vec::new();
+        let mut m = MmapLineReader::open(&path).unwrap();
+        while let Some(l) = m.next_line() {
+            mapped.push(String::from_utf8(l.to_vec()).unwrap());
+        }
+        let mut chunked = Vec::new();
+        let mut lr = LineReader::with_capacity(64, body.as_bytes());
+        while let Some(l) = lr.next_line() {
+            chunked.push(String::from_utf8(l.unwrap().to_vec()).unwrap());
+        }
+        assert_eq!(mapped, chunked);
+        assert_eq!(mapped, vec!["alpha", "beta-which-is-longer", "", "gamma", "last-no-newline"]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mapped_reader_handles_the_empty_file() {
+        let path = tmp_file("empty", "");
+        let mut m = MmapLineReader::open(&path).unwrap();
+        assert!(m.next_line().is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_and_open_chunked_parse_identical_records() {
+        let body = "{\"x\": 1}\n\n{\"x\": 2}\nbad json\n{\"x\": 3}";
+        let path = tmp_file("open", body);
+        let drain = |mut r: JsonlReader<std::io::BufReader<std::fs::File>>| {
+            let mut out: Vec<String> = Vec::new();
+            while let Some(rec) = r.next_record(|v| v.req("x").and_then(|x| {
+                x.as_i64().ok_or_else(|| anyhow::anyhow!("x not a number"))
+            })) {
+                out.push(match rec {
+                    Ok(x) => format!("ok:{x}"),
+                    Err(e) => {
+                        assert!(e.to_string().contains(":4:"), "line in {e}");
+                        "err-at-line:4".to_string()
+                    }
+                });
+            }
+            out
+        };
+        let via_mmap = drain(JsonlReader::open(&path).unwrap());
+        let via_chunk = drain(JsonlReader::open_chunked(&path).unwrap());
+        assert_eq!(via_mmap, via_chunk);
+        assert_eq!(via_mmap, vec!["ok:1", "ok:2", "err-at-line:4", "ok:3"]);
+        std::fs::remove_file(path).ok();
     }
 }

@@ -1,0 +1,162 @@
+//! Read-only file memory mapping (no libc dependency: the two syscalls are
+//! declared directly).
+//!
+//! The chunked [`super::jsonl::LineReader`] still copies every byte
+//! kernel→buffer; mapping the corpus lets the line splitter and the JSON
+//! parser read straight out of the page cache (ROADMAP item 5's last
+//! read-path copy).  Only for **immutable** files: the mapping's length is
+//! fixed at map time, so a concurrently growing file (e.g. a live spool
+//! segment — see `docs/serve.md`) silently stops at the mapped length, and a
+//! truncated one faults.  Growing inputs stay on the chunked reader.
+
+use std::fs::File;
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// An owned read-only mapping of a whole file; unmapped on drop.  An empty
+/// file maps to an empty slice without touching the syscall (mmap rejects
+/// zero lengths).
+pub struct Mmap {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// The mapping is private + read-only: no aliasing mutation is possible
+// through it, so moving/sharing across threads is sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    #[cfg(unix)]
+    pub fn map(file: &File) -> std::io::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Ok(Self { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        if len > usize::MAX as u64 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "file too large to map",
+            ));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len as usize,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr, len: len as usize })
+    }
+
+    /// Non-unix targets: report unsupported and let callers fall back to
+    /// the chunked reader.
+    #[cfg(not(unix))]
+    pub fn map(_file: &File) -> std::io::Result<Self> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "mmap unavailable"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // Safety: ptr/len describe a live PROT_READ mapping owned by self.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if !self.ptr.is_null() && self.len > 0 {
+            // Safety: exactly the region mapped in `map`, unmapped once.
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let path =
+            std::env::temp_dir().join(format!("tt-mmap-{}-{name}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents_byte_for_byte() {
+        let body = b"alpha\nbeta\n\xff\x00binary tail";
+        let path = tmp("bytes", body);
+        let m = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        assert_eq!(&*m, &body[..]);
+        assert_eq!(m.len(), body.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let path = tmp("empty", b"");
+        let m = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), b"");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mapping_survives_file_deletion() {
+        // unix semantics: the pages stay valid until unmap even after the
+        // directory entry is gone — corpus readers can outlive cleanup
+        let path = tmp("unlink", b"still here");
+        let m = Mmap::map(&File::open(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(&*m, b"still here");
+    }
+}

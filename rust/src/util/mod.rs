@@ -3,6 +3,7 @@
 //!
 //! * [`json`]  — minimal JSON parser/writer (manifest, configs, corpora).
 //! * [`jsonl`] — streaming JSONL line reader with `label:line` errors.
+//! * [`mmap`]  — read-only file mapping (zero-copy corpus read path).
 //! * [`rng`]   — SplitMix64 deterministic PRNG (generators, shuffles).
 //! * [`bench`] — micro-bench harness (warmup + timed iterations, p50/mean).
 //! * [`logging`] — leveled stderr logging controlled by `TT_LOG`.
@@ -11,4 +12,5 @@ pub mod bench;
 pub mod json;
 pub mod jsonl;
 pub mod logging;
+pub mod mmap;
 pub mod rng;

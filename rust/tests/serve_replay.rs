@@ -1,0 +1,196 @@
+//! The serve bit-exact replay contract (docs/serve.md).
+//!
+//! Property: a live `tree-train serve` run — timing-dependent spool
+//! tailing, pipelined planning, rank pools and all — leaves behind a
+//! journal from which `--replay` re-executes the run **bit-for-bit**:
+//! identical per-step losses (f64 bits), identical batch-composition
+//! fingerprints, identical final ingest stats.  And the bounded-staleness
+//! contract holds throughout: no tree waits more than `staleness_bound`
+//! optimizer steps between ripening and entering a batch.
+//!
+//! Both runs go through [`tree_train::serve::run`], the same driver the
+//! CLI calls — nothing here is a test-only code path.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use tree_train::ingest::records_from_tree;
+use tree_train::serve::{self, ServeOptions, ServeParams};
+use tree_train::tree::gen;
+
+const VOCAB: usize = 64;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tt-serve-replay-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Session-sharded spool: each session's records + end marker go to one of
+/// `segments` files; the shutdown marker ends the last file.  Mirrors
+/// `tree-train gen-data --linearize --end-markers --shutdown-marker
+/// --spool-segments N`.
+fn write_spool(dir: &Path, n_sessions: usize, segments: usize) {
+    let mut files: Vec<_> = (0..segments)
+        .map(|i| std::fs::File::create(dir.join(format!("seg-{i:03}.jsonl"))).unwrap())
+        .collect();
+    for s in 0..n_sessions {
+        // vocab-bounded trees (RefModel embeds tokens < VOCAB)
+        let tree = gen::uniform(1000 + s as u64, 7, 4, 0.5);
+        let f = &mut files[s % segments];
+        for r in records_from_tree(&tree, &format!("sess-{s:04}")) {
+            writeln!(f, "{}", r.to_json().to_string()).unwrap();
+        }
+        writeln!(f, "{{\"session\":\"sess-{s:04}\",\"end\":true}}").unwrap();
+    }
+    writeln!(files[segments - 1], "{{\"shutdown\":true}}").unwrap();
+}
+
+fn params(steps: u64, tpb: usize) -> ServeParams {
+    ServeParams {
+        steps,
+        trees_per_batch: tpb,
+        vocab: VOCAB,
+        capacity: 256,
+        seed: 41,
+        lr: 5e-3,
+        warmup: 2,
+        pipeline_depth: 2,
+        poll_ms: 1,
+        stall_timeout_ms: 5_000,
+        ..ServeParams::default()
+    }
+}
+
+#[test]
+fn live_run_replays_bit_for_bit() {
+    let dir = tmp("roundtrip");
+    write_spool(&dir, 16, 3);
+    let journal = dir.join("journal.jsonl");
+
+    let live = serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: Some(journal.clone()),
+        replay: None,
+        params: params(8, 2),
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap();
+    assert_eq!(live.metrics.len(), 8);
+    assert_eq!(live.cuts, 8);
+    assert!(live.stats.reuse_ratio() > 1.0, "branching corpus must dedup");
+    for m in &live.metrics {
+        assert!(
+            m.staleness_steps <= params(8, 2).staleness_bound,
+            "staleness contract violated at step {}: {}",
+            m.step,
+            m.staleness_steps
+        );
+    }
+
+    // a second live run over the same spool: byte-identical journal modulo
+    // timing — losses and fingerprints must match exactly (determinism of
+    // the admission policy itself, not just of replay)
+    let journal2 = dir.join("journal2.jsonl");
+    let live2 = serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: Some(journal2),
+        replay: None,
+        params: params(8, 2),
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap();
+    assert_eq!(live.fingerprints, live2.fingerprints, "repeat live runs diverged");
+
+    // replay: policy comes from the journal header (note the deliberately
+    // wrong params below — they must be ignored)
+    let mut wrong = params(99, 7);
+    wrong.seed = 1234;
+    let replayed = serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: None,
+        replay: Some(journal),
+        params: wrong,
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap();
+    assert!(replayed.replayed);
+    assert_eq!(replayed.metrics.len(), live.metrics.len());
+    for (a, b) in live.metrics.iter().zip(&replayed.metrics) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss bits diverged at step {}", a.step);
+        assert_eq!(a.staleness_steps, b.staleness_steps, "staleness diverged at step {}", a.step);
+        assert_eq!(a.ripe_queue_depth, b.ripe_queue_depth, "queue depth diverged at {}", a.step);
+        assert_eq!(a.admitted_sessions, b.admitted_sessions, "admissions diverged at {}", a.step);
+    }
+    assert_eq!(live.fingerprints, replayed.fingerprints, "batch composition diverged");
+    assert_eq!(live.stats, replayed.stats, "ingest stats diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_catches_a_tampered_spool() {
+    let dir = tmp("tamper");
+    write_spool(&dir, 6, 2);
+    let journal = dir.join("journal.jsonl");
+    serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: Some(journal.clone()),
+        replay: None,
+        params: params(3, 2),
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap();
+
+    // flip one token in one spool line after the fact
+    let seg = dir.join("seg-000.jsonl");
+    let body = std::fs::read_to_string(&seg).unwrap();
+    let tampered = body.replacen("\"tokens\":[", "\"tokens\":[63,", 1);
+    assert_ne!(body, tampered, "tamper must actually change the file");
+    std::fs::write(&seg, tampered).unwrap();
+
+    let err = serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: None,
+        replay: Some(journal),
+        params: params(3, 2),
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("diverged"), "tampering must be detected, got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_rejects_cost_model_state() {
+    let dir = tmp("calib");
+    write_spool(&dir, 4, 1);
+    let journal = dir.join("journal.jsonl");
+    serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: Some(journal.clone()),
+        replay: None,
+        params: params(2, 2),
+        metrics_csv: None,
+        cost_model_state: None,
+    })
+    .unwrap();
+    let err = serve::run(&ServeOptions {
+        spool: dir.clone(),
+        journal: None,
+        replay: Some(journal),
+        params: params(2, 2),
+        metrics_csv: None,
+        cost_model_state: Some(dir.join("cal.json")),
+    })
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("cost-model-state"), "got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

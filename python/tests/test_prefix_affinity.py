@@ -1,0 +1,388 @@
+"""Python mirror of the cross-step prefix-reuse schedule tier.
+
+Mirrors ``rust/src/partition/affinity.rs`` + the cache bookkeeping of
+``rust/src/trainer/prefix_cache.rs`` (docs/prefix_reuse.md):
+
+* ``prefix_stream``: the root-chain token stream of a tree — the root node
+  and every single-child descendant, ending with (and including) the first
+  multi-child node's own tokens; nodes carrying alignment pads stop the
+  stream before their tokens.  Elements are ``(token, trainable-bits,
+  advantage-bits)`` triples — a supervision flip diverges like the ingest
+  trie's ``NodeSig``.
+* ``prefix_sig``: FNV-1a over the little-endian triple bytes (the exact
+  cache key the Rust side stamps onto forest members).
+* grouping: each tree annotates with the deepest trie node on its stream
+  shared by >= 2 trees; same node => same affine group; loners become
+  singleton groups with ``prefix_len == 0``.
+* ``affine_order`` / ``affine_bins``: group-major FFD — groups by
+  decreasing summed cost, members by decreasing cost, member prefers a bin
+  already holding its group, then first-fit, else a new bin.
+* ``shard_affine``: deterministic LPT over whole groups (summed member
+  cost), so a group never splits across ranks.
+* ``PrefixCache``: exact ``(sig, len)`` keys, strictly-monotone LRU clock
+  under a token budget, and the staleness contract — any version change
+  drops every entry (not counted as an eviction).
+
+Runs standalone (``python3 test_prefix_affinity.py``) — pure stdlib, no
+jax, so the CI job can execute it without the compile toolchain.
+"""
+
+import struct
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x0000010000000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a(h, data):
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+class Node:
+    def __init__(self, parent, tokens, trainable=None, advantage=None, pad_tail=0):
+        self.parent = parent
+        self.tokens = tokens
+        self.trainable = trainable if trainable is not None else [1.0] * len(tokens)
+        self.advantage = advantage if advantage is not None else [1.0] * len(tokens)
+        self.pad_tail = pad_tail
+
+
+def children(nodes):
+    ch = [[] for _ in nodes]
+    for i, n in enumerate(nodes):
+        if n.parent >= 0:
+            ch[n.parent].append(i)
+    return ch
+
+
+MAX_STREAM = 4096
+
+
+def prefix_stream(nodes):
+    """affinity.rs prefix_stream: the root-chain triple stream."""
+    ch = children(nodes)
+    out = []
+    cur = 0
+    while True:
+        n = nodes[cur]
+        if n.pad_tail != 0:
+            break
+        for t in range(len(n.tokens)):
+            if len(out) >= MAX_STREAM:
+                return out
+            out.append((n.tokens[t], f32_bits(n.trainable[t]), f32_bits(n.advantage[t])))
+        if len(ch[cur]) != 1:
+            break
+        cur = ch[cur][0]
+    return out
+
+
+def prefix_sig(stream, length):
+    h = FNV_OFFSET
+    for tok, tr, adv in stream[:length]:
+        h = fnv1a(h, struct.pack("<i", tok))
+        h = fnv1a(h, struct.pack("<I", tr))
+        h = fnv1a(h, struct.pack("<I", adv))
+    return h
+
+
+def build_index(trees):
+    """affinity.rs AffinityIndex::build over lists of Nodes.
+
+    Returns (annots, groups): annots[i] = (group, prefix_len, sig),
+    groups[g] = (members, prefix_len, sig).
+    """
+    streams = [prefix_stream(t) for t in trees]
+    arena = [{"children": [], "count": 0}]
+    paths = []
+    for s in streams:
+        cur = 0
+        path = []
+        for trip in s:
+            nxt = None
+            for k, c in arena[cur]["children"]:
+                if k == trip:
+                    nxt = c
+                    break
+            if nxt is None:
+                arena.append({"children": [], "count": 0})
+                nxt = len(arena) - 1
+                arena[cur]["children"].append((trip, nxt))
+            arena[nxt]["count"] += 1
+            path.append(nxt)
+            cur = nxt
+        paths.append(path)
+    group_of_node = {}
+    annots = []
+    groups = []
+    for i, path in enumerate(paths):
+        best = None
+        for d, node in enumerate(path):
+            if arena[node]["count"] >= 2:
+                best = (node, d + 1)
+        if best is not None:
+            node, depth = best
+            sig = prefix_sig(streams[i], depth)
+            if node not in group_of_node:
+                groups.append(([], depth, sig))
+                group_of_node[node] = len(groups) - 1
+            g = group_of_node[node]
+            annots.append((g, depth, sig))
+        else:
+            groups.append(([], 0, 0))
+            annots.append((len(groups) - 1, 0, 0))
+        groups[annots[-1][0]][0].append(i)
+    return annots, groups
+
+
+def affine_order(annots, groups, costs):
+    group_cost = [sum(costs[i] for i in g[0]) for g in groups]
+    gorder = sorted(range(len(groups)), key=lambda g: -group_cost[g])
+    out = []
+    for g in gorder:
+        out.extend(sorted(groups[g][0], key=lambda i: -costs[i]))
+    return out
+
+
+def affine_bins(annots, groups, sizes, costs, capacity):
+    bins = []  # (used, members, group-set)
+    for i in affine_order(annots, groups, costs):
+        s = sizes[i]
+        assert s <= capacity
+        g = annots[i][0]
+        slot = None
+        for bi, b in enumerate(bins):
+            if g in b[2] and b[0] + s <= capacity:
+                slot = bi
+                break
+        if slot is None:
+            for bi, b in enumerate(bins):
+                if b[0] + s <= capacity:
+                    slot = bi
+                    break
+        if slot is None:
+            bins.append([s, [i], {g}])
+        else:
+            bins[slot][0] += s
+            bins[slot][1].append(i)
+            bins[slot][2].add(g)
+    return [b[1] for b in bins]
+
+
+def shard_by_cost(costs, n_ranks):
+    """forest.rs LPT: stable decreasing order, lowest-rank tie-break."""
+    order = sorted(range(len(costs)), key=lambda i: -costs[i])
+    ranks = [[] for _ in range(n_ranks)]
+    loads = [0] * n_ranks
+    for i in order:
+        r = min(range(n_ranks), key=lambda k: loads[k])
+        loads[r] += costs[i]
+        ranks[r].append(i)
+    return [sorted(r) for r in ranks], loads
+
+
+def shard_affine(annots, groups, costs, n_ranks):
+    group_costs = [sum(costs[i] for i in g[0]) for g in groups]
+    granks, loads = shard_by_cost(group_costs, n_ranks)
+    ranks = [sorted(m for g in gs for m in groups[g][0]) for gs in granks]
+    return ranks, loads
+
+
+class PrefixCache:
+    """prefix_cache.rs bookkeeping (payload-free)."""
+
+    def __init__(self, budget):
+        self.budget = budget
+        self.version = 0
+        self.clock = 0
+        self.used = 0
+        self.map = {}  # (sig, len) -> stamp
+        self.hits = self.misses = self.hit_tokens = self.evictions = 0
+
+    def set_version(self, v):
+        if v != self.version:
+            self.map.clear()
+            self.used = 0
+            self.version = v
+
+    def lookup(self, sig, length):
+        if self.budget == 0 or length == 0:
+            return False
+        self.clock += 1
+        if (sig, length) in self.map:
+            self.map[(sig, length)] = self.clock
+            self.hits += 1
+            self.hit_tokens += length
+            return True
+        self.misses += 1
+        return False
+
+    def insert(self, sig, length):
+        if self.budget == 0 or length == 0 or length > self.budget:
+            return
+        if (sig, length) in self.map:
+            del self.map[(sig, length)]
+            self.used -= length
+        while self.used + length > self.budget:
+            victim = min(self.map, key=self.map.get)
+            self.used -= victim[1]
+            del self.map[victim]
+            self.evictions += 1
+        self.clock += 1
+        self.used += length
+        self.map[(sig, length)] = self.clock
+
+
+def reuse_ratio(total, hit):
+    if total == 0 or hit >= total:
+        return 1.0
+    return total / (total - hit)
+
+
+# ───────────────────────────── fixtures ──────────────────────────────────
+
+
+def chain(prefix, leaves):
+    """Root node with `prefix` tokens, one leaf node per entry."""
+    return [Node(-1, list(prefix))] + [Node(0, list(l)) for l in leaves]
+
+
+# ─────────────────────────────── tests ───────────────────────────────────
+
+
+def test_stream_follows_root_chain_and_includes_divergence_node():
+    t = [Node(-1, [1, 2]), Node(0, [3]), Node(1, [4]), Node(1, [5])]
+    assert [x[0] for x in prefix_stream(t)] == [1, 2, 3]
+    # pads stop the stream before the padded node's tokens
+    t2 = [Node(-1, [1, 2]), Node(0, [3], pad_tail=1)]
+    assert [x[0] for x in prefix_stream(t2)] == [1, 2]
+
+
+def test_sig_matches_rust_fnv_constants():
+    # empty stream hashes to the offset basis, like the Rust fingerprints
+    assert prefix_sig([], 0) == FNV_OFFSET
+    s = [(3, f32_bits(1.0), f32_bits(1.0))]
+    h = fnv1a(FNV_OFFSET, struct.pack("<i", 3))
+    h = fnv1a(h, struct.pack("<I", f32_bits(1.0)))
+    h = fnv1a(h, struct.pack("<I", f32_bits(1.0)))
+    assert prefix_sig(s, 1) == h
+    assert prefix_sig(s, 1) != FNV_OFFSET
+
+
+def test_supervision_flip_diverges_like_the_ingest_trie():
+    a = chain([7, 8, 9], [[1], [2]])
+    b = chain([7, 8, 9], [[3], [4]])
+    b[0].trainable = [1.0, 0.0, 1.0]
+    annots, _ = build_index([a, b])
+    # token 7 matches, token 8 diverges on trainable bits
+    assert annots[0][1] == 1 and annots[0][0] == annots[1][0]
+    b2 = chain([7, 8, 9], [[3], [4]])
+    annots2, _ = build_index([a, b2])
+    assert annots2[0][1] == 3
+    assert annots2[0][2] == annots2[1][2] != 0
+
+
+def test_deepest_shared_node_wins_and_loners_are_singletons():
+    a = chain([1, 2, 3, 4], [[9], [8]])
+    c = chain([1, 2, 3, 5], [[9], [8]])
+    b = chain([1, 2, 7], [[9], [8]])
+    lone = chain([40, 41], [[9]])
+    annots, groups = build_index([a, b, c, lone])
+    assert annots[0][1] == 3 and annots[2][1] == 3
+    assert annots[0][0] == annots[2][0]
+    assert annots[1][1] == 2 and annots[1][0] != annots[0][0]
+    assert annots[3] == (annots[3][0], 0, 0)
+    assert len(groups) == 3
+
+
+def test_affine_order_is_group_major_by_total_cost():
+    t0 = chain([1, 1, 1], [[2], [3]])
+    t1 = chain([1, 1, 1], [[4], [5]])
+    t2 = chain([9, 9], [[2], [3]])
+    annots, groups = build_index([t0, t1, t2])
+    assert affine_order(annots, groups, [5, 2, 6]) == [0, 1, 2]
+    assert affine_order(annots, groups, [1, 3, 9]) == [2, 1, 0]
+
+
+def test_affine_bins_colocate_groups_then_first_fit():
+    trees = [
+        chain([1, 1], [[100], [101]]),
+        chain([2, 2], [[100], [101]]),
+        chain([1, 1], [[100], [101]]),
+        chain([2, 2], [[100], [101]]),
+    ]
+    annots, groups = build_index(trees)
+    bins = affine_bins(annots, groups, [6, 6, 4, 4], [6, 6, 4, 4], 10)
+    find = lambda i: next(bi for bi, b in enumerate(bins) if i in b)
+    assert find(0) == find(2) and find(1) == find(3) and find(0) != find(1)
+    # capacity is respected and every tree lands exactly once
+    assert sorted(i for b in bins for i in b) == [0, 1, 2, 3]
+
+
+def test_shard_affine_keeps_groups_rank_local():
+    trees = [
+        chain([1, 1], [[100], [101]]),
+        chain([2, 2], [[100], [101]]),
+        chain([1, 1], [[100], [101]]),
+        chain([2, 2], [[100], [101]]),
+        chain([3, 3], [[100], [101]]),
+        chain([3, 3], [[100], [101]]),
+    ]
+    annots, groups = build_index(trees)
+    ranks, loads = shard_affine(annots, groups, [10] * 6, 3)
+    rank_of = lambda i: next(r for r, ms in enumerate(ranks) if i in ms)
+    for members, _, _ in groups:
+        assert len({rank_of(m) for m in members}) == 1
+    assert sorted(i for r in ranks for i in r) == list(range(6))
+    assert sum(loads) == 60
+
+
+def test_lpt_matches_rust_tie_breaks():
+    # equal costs keep input order; equal loads pick the lowest rank
+    ranks, loads = shard_by_cost([5, 5, 5, 5], 2)
+    assert ranks == [[0, 2], [1, 3]]
+    assert loads == [10, 10]
+
+
+def test_cache_exact_length_rule_and_lru():
+    c = PrefixCache(25)
+    assert not c.lookup(1, 10)
+    c.insert(1, 10)
+    assert not c.lookup(1, 6), "shorter prefix of the same sig is a different key"
+    c.insert(2, 10)
+    assert c.lookup(1, 10)  # refresh: sig 2 is now least recent
+    c.insert(3, 10)  # 20 + 10 > 25: evicts sig 2
+    assert not c.lookup(2, 10)
+    assert c.lookup(1, 10) and c.lookup(3, 10)
+    assert c.evictions == 1 and c.used <= 25
+
+
+def test_version_change_clears_without_counting_evictions():
+    c = PrefixCache(100)
+    c.insert(1, 10)
+    c.set_version(1)
+    assert not c.lookup(1, 10)
+    assert c.evictions == 0
+    c.insert(1, 10)
+    c.set_version(1)  # same version: no-op
+    assert c.lookup(1, 10)
+
+
+def test_reuse_ratio_definition():
+    assert reuse_ratio(0, 0) == 1.0
+    assert reuse_ratio(100, 0) == 1.0
+    assert reuse_ratio(100, 50) == 2.0
+    assert reuse_ratio(100, 100) == 1.0
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

@@ -1,0 +1,118 @@
+//! Cross-step prefix reuse: measured payoff of the trie-keyed activation
+//! cache (docs/prefix_reuse.md).
+//!
+//! Same hot-prefix corpus, same prefix-affine plans, same [`HostExecutor`]
+//! — the only variable is the cache budget.  Grafted prefixes are long
+//! (96 of ~120 member slots) and untrained, so the cached run skips the
+//! O(prefix²) attention score/softmax work per served member while CE cost
+//! is unchanged; the measured gap is the forward compute the cache
+//! eliminates.  Asserts the two runs are bit-identical (losses + batch
+//! fingerprints) and that reuse was actually measured, then emits
+//! `results/BENCH_prefix.json`.
+
+use std::time::{Duration, Instant};
+
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::coordinator::Mode;
+use tree_train::data::ResidentSource;
+use tree_train::trainer::{PlanSpec, StepMetrics};
+use tree_train::tree::gen;
+use tree_train::util::json::Json;
+
+const CAPACITY: usize = 512;
+const VOCAB: usize = 64;
+const STEPS: u64 = 12;
+const TREES_PER_BATCH: usize = 12;
+const N_TREES: usize = 48;
+const GROUPS: usize = 4;
+const PREFIX_LEN: usize = 96;
+const CACHE_TOKENS: usize = 1 << 16;
+
+fn corpus() -> Vec<tree_train::tree::TrajectoryTree> {
+    // small trained bodies under long shared untrained prefixes — the
+    // agentic shape (one system prompt, many tasks) gen-data emits under
+    // --hot-prefixes
+    (0..N_TREES)
+        .map(|i| {
+            let body = gen::uniform(300 + i as u64, 7, 4, 0.6);
+            gen::graft_prefix(&body, 0xbe9c + (i % GROUPS) as u64, PREFIX_LEN, 24, VOCAB as i32)
+        })
+        .collect()
+}
+
+fn run(cache_tokens: usize) -> (Duration, Vec<StepMetrics>, Vec<u64>) {
+    let cfg = PipelineConfig {
+        mode: Mode::Tree,
+        steps: STEPS,
+        trees_per_batch: TREES_PER_BATCH,
+        depth: 0,
+        lr: 1e-2,
+        warmup: 0,
+        ranks: 1,
+    };
+    let spec = PlanSpec::for_host(CAPACITY).with_prefix_affinity(true);
+    let source = Box::new(ResidentSource::new(corpus(), 7).unwrap());
+    let mut exec = HostExecutor::new(VOCAB, 8, 7).with_prefix_cache(cache_tokens);
+    let t0 = Instant::now();
+    let (metrics, _) = pipeline::run(&cfg, spec, source, &mut exec).unwrap();
+    (t0.elapsed(), metrics, exec.fingerprints)
+}
+
+fn main() {
+    println!("== prefix reuse bench ({STEPS} steps x {TREES_PER_BATCH} trees, prefix {PREFIX_LEN}) ==");
+
+    // warm once, then best-of-2 per config to shave scheduler noise
+    let _ = run(0);
+    let (mut off_wall, off_m, off_fp) = run(0);
+    let (mut on_wall, on_m, on_fp) = run(CACHE_TOKENS);
+    let (w_off, ..) = run(0);
+    let (w_on, ..) = run(CACHE_TOKENS);
+    off_wall = off_wall.min(w_off);
+    on_wall = on_wall.min(w_on);
+
+    // the contract under measurement: cache on ≡ off, bit for bit
+    assert_eq!(off_fp, on_fp, "cache must not change batch composition");
+    for (a, b) in off_m.iter().zip(&on_m) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "cache broke bit-identity at step {}",
+            a.step
+        );
+    }
+    let total_tokens: u64 = on_m.iter().map(|m| m.tree_tokens as u64).sum();
+    let hit_tokens: u64 = on_m.iter().map(|m| m.cache_hit_tokens).sum();
+    let evictions: u64 = on_m.iter().map(|m| m.cache_evictions).sum();
+    let mean_reuse =
+        on_m.iter().map(|m| m.xstep_reuse_ratio).sum::<f64>() / on_m.len().max(1) as f64;
+    assert!(hit_tokens > 0 && mean_reuse > 1.0, "hot corpus must produce measured reuse");
+
+    let speedup = off_wall.as_secs_f64() / on_wall.as_secs_f64();
+    println!("cache off: {off_wall:>10.3?}");
+    println!(
+        "cache on:  {on_wall:>10.3?}  ({hit_tokens}/{total_tokens} prefix tokens served, \
+         mean xstep_reuse_ratio {mean_reuse:.3}, {evictions} evictions)"
+    );
+    println!("forward-compute speedup: {speedup:.2}x");
+
+    let out = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out).ok();
+    let json = Json::obj(vec![
+        ("steps", Json::num(STEPS as f64)),
+        ("trees_per_batch", Json::num(TREES_PER_BATCH as f64)),
+        ("capacity", Json::num(CAPACITY as f64)),
+        ("prefix_len", Json::num(PREFIX_LEN as f64)),
+        ("prefix_groups", Json::num(GROUPS as f64)),
+        ("cache_tokens", Json::num(CACHE_TOKENS as f64)),
+        ("off_wall_ms", Json::num(off_wall.as_secs_f64() * 1e3)),
+        ("on_wall_ms", Json::num(on_wall.as_secs_f64() * 1e3)),
+        ("wall_speedup", Json::num(speedup)),
+        ("mean_xstep_reuse_ratio", Json::num(mean_reuse)),
+        ("hit_tokens", Json::num(hit_tokens as f64)),
+        ("tree_tokens", Json::num(total_tokens as f64)),
+        ("cache_evictions", Json::num(evictions as f64)),
+    ]);
+    let path = out.join("BENCH_prefix.json");
+    std::fs::write(&path, json.to_string_pretty()).unwrap();
+    println!("-> {}", path.display());
+}

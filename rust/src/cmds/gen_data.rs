@@ -9,6 +9,13 @@
 //! emulating runtimes that log concurrent tasks — the shape that stresses
 //! `max_open_sessions` and the streaming-rollouts `shuffle_window`.
 //!
+//! `--hot-prefixes N` grafts a shared untrained root prefix onto every
+//! tree, cycling the trees through `N` prefix groups (`--prefix-len L`
+//! tokens each, default 96; group `i % N`, chain seeded from the group
+//! alone) — the corpus shape that exercises cross-step prefix reuse
+//! (docs/prefix_reuse.md): same-group trees carry byte-identical prefixes
+//! across *different* optimizer batches.
+//!
 //! Serve-spool extras (docs/serve.md): `--end-markers` appends a
 //! `{"session": .., "end": true}` line after each session's last record,
 //! `--shutdown-marker` terminates the stream with `{"shutdown": true}`,
@@ -35,16 +42,22 @@ pub fn run(
     end_markers: bool,
     shutdown_marker: bool,
     spool_segments: usize,
+    hot_prefixes: usize,
+    prefix_len: usize,
     out: &std::path::Path,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(
         linearize || (!end_markers && !shutdown_marker && spool_segments <= 1),
         "--end-markers / --shutdown-marker / --spool-segments only apply to --linearize output"
     );
+    anyhow::ensure!(
+        hot_prefixes == 0 || prefix_len >= 1,
+        "--prefix-len must be >= 1 when --hot-prefixes is set"
+    );
     let trees: Vec<TrajectoryTree> = (0..n_trees)
         .map(|i| {
             let s = seed.wrapping_add(i as u64);
-            if let Some(p) = overlap.strip_prefix("por:") {
+            let t = if let Some(p) = overlap.strip_prefix("por:") {
                 gen::with_target_por(s, p.parse().unwrap(), 6, 600, 24, vocab)
             } else {
                 let ov = match overlap {
@@ -53,6 +66,15 @@ pub fn run(
                     _ => Overlap::High,
                 };
                 gen::agentic(s, ov, turns, vocab)
+            };
+            if hot_prefixes > 0 {
+                // group seed depends on the run seed and the group only, so
+                // same-group trees share a byte-identical prefix chain
+                let group = i % hot_prefixes;
+                let gseed = seed.wrapping_mul(0x9e3779b9).wrapping_add(group as u64);
+                gen::graft_prefix(&t, gseed, prefix_len, 24, vocab)
+            } else {
+                t
             }
         })
         .collect();

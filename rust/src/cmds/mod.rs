@@ -12,6 +12,7 @@ pub mod gen_data;
 pub mod ingest;
 pub mod mem;
 pub mod pipeline_smoke;
+pub mod prefix_smoke;
 pub mod quality;
 pub mod serve;
 pub mod train;

@@ -1,0 +1,126 @@
+//! `tree-train prefix-smoke` — the cross-step prefix reuse gate, hermetic
+//! (no artifacts, no PJRT; docs/prefix_reuse.md).
+//!
+//! Runs the same hot-prefix tree corpus through the real pipeline driver
+//! in three configurations and asserts the contracts the feature ships
+//! under:
+//!
+//! 1. **seed** — `prefix_affinity` off, cache off: the reference run.
+//! 2. **affine** — affinity on, cache off: same trees per optimizer step,
+//!    repacked group-major, so per-step losses match the seed within f64
+//!    tolerance only (regrouping reassociates the Eq. 5 sums).
+//! 3. **cached** — affinity on, cache on: must be **bit-identical** to the
+//!    affine run in losses and batch fingerprints (the cache splices rows,
+//!    it never changes an f64 op), run-to-run reproducible, and must show
+//!    `xstep_reuse_ratio > 1.0` — i.e. strictly fewer prefix-token forward
+//!    computations than the affine run performed.
+//!
+//! Per-config CSVs (`prefix_seed.csv`, `prefix_affine.csv`,
+//! `prefix_cached.csv`) land in `--csv-dir` for the CI job's column
+//! assertions.
+
+use std::path::Path;
+
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::coordinator::Mode;
+use tree_train::trainer::{CsvSink, PlanSpec, StepMetrics};
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    corpus: &Path,
+    steps: u64,
+    trees_per_batch: usize,
+    cache_tokens: usize,
+    capacity: usize,
+    vocab: usize,
+    seed: u64,
+    csv_dir: &Path,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(cache_tokens > 0, "--cache-tokens must be > 0 (0 is the seed config)");
+    let window = (trees_per_batch * 4).max(8);
+    let cfg = PipelineConfig {
+        mode: Mode::Tree,
+        steps,
+        trees_per_batch,
+        depth: 0, // pipelining determinism is `pipeline-smoke`'s gate
+        lr: 1e-2,
+        warmup: 0,
+        ranks: 1,
+    };
+    let spec = |affine: bool| PlanSpec::for_host(capacity).with_prefix_affinity(affine);
+    let source = || super::smoke_source("trees", corpus, window, seed);
+    let run_one = |affine: bool,
+                   budget: usize|
+     -> anyhow::Result<(Vec<StepMetrics>, Vec<u64>)> {
+        let mut exec = HostExecutor::new(vocab, 8, seed).with_prefix_cache(budget);
+        let (metrics, _) = pipeline::run(&cfg, spec(affine), source()?, &mut exec)?;
+        Ok((metrics, exec.fingerprints))
+    };
+
+    let (seed_m, _) = run_one(false, 0)?;
+    let (affine_m, affine_fp) = run_one(true, 0)?;
+    let (cached_m, cached_fp) = run_one(true, cache_tokens)?;
+    let (rerun_m, rerun_fp) = run_one(true, cache_tokens)?;
+
+    // cache on ≡ off: bit-identical losses and batch composition
+    anyhow::ensure!(cached_m.len() == affine_m.len(), "step count diverged");
+    for (a, c) in affine_m.iter().zip(&cached_m) {
+        anyhow::ensure!(
+            a.loss.to_bits() == c.loss.to_bits(),
+            "cache broke bit-identity at step {}: affine {} vs cached {}",
+            a.step,
+            a.loss,
+            c.loss
+        );
+    }
+    anyhow::ensure!(affine_fp == cached_fp, "cache changed batch composition");
+    // reproducibility: the cached config replays bit-for-bit
+    for (a, b) in cached_m.iter().zip(&rerun_m) {
+        anyhow::ensure!(
+            a.loss.to_bits() == b.loss.to_bits() && a.cache_hit_tokens == b.cache_hit_tokens,
+            "cached run is not reproducible at step {}",
+            a.step
+        );
+    }
+    anyhow::ensure!(cached_fp == rerun_fp, "cached rerun changed batch composition");
+    // affinity reorders whole trees within each optimizer step: same math,
+    // reassociated f64 sums, so losses track the seed within tolerance
+    for (s, a) in seed_m.iter().zip(&affine_m) {
+        let tol = 1e-6 * s.loss.abs().max(1.0);
+        anyhow::ensure!(
+            (s.loss - a.loss).abs() <= tol,
+            "affinity drifted beyond reassociation at step {}: seed {} vs affine {}",
+            s.step,
+            s.loss,
+            a.loss
+        );
+    }
+    // the payoff gate: strictly fewer prefix-token forward computations
+    let total_tokens: u64 = cached_m.iter().map(|m| m.tree_tokens as u64).sum();
+    let hit_tokens: u64 = cached_m.iter().map(|m| m.cache_hit_tokens).sum();
+    let mean_reuse =
+        cached_m.iter().map(|m| m.xstep_reuse_ratio).sum::<f64>() / cached_m.len().max(1) as f64;
+    anyhow::ensure!(
+        hit_tokens > 0 && mean_reuse > 1.0,
+        "no prefix reuse measured (hit_tokens {hit_tokens}, mean ratio {mean_reuse:.4}) — \
+         is the corpus hot-prefixed (gen-data --hot-prefixes)?"
+    );
+    anyhow::ensure!(hit_tokens < total_tokens, "hit tokens exceed forest tokens");
+
+    std::fs::create_dir_all(csv_dir)?;
+    for (name, metrics) in
+        [("prefix_seed", &seed_m), ("prefix_affine", &affine_m), ("prefix_cached", &cached_m)]
+    {
+        let mut sink = CsvSink::create(&csv_dir.join(format!("{name}.csv")))?;
+        for m in metrics {
+            sink.log(m)?;
+        }
+    }
+    println!(
+        "prefix smoke OK: {} steps, {} forest tokens, {} served from cache \
+         (mean xstep_reuse_ratio {:.4}, cache on ≡ off bit-identical)",
+        steps, total_tokens, hit_tokens, mean_reuse
+    );
+    println!("  per-config CSVs in {}", csv_dir.display());
+    Ok(())
+}

@@ -67,6 +67,7 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::trainer::planner::{ShardedPlan, StepPlan};
+use crate::trainer::prefix_cache::{reuse_ratio, CacheStats};
 use crate::trainer::{GradBuffer, StepMetrics};
 
 use super::AnyTrainer;
@@ -647,11 +648,19 @@ impl TrainerPool {
         let loss = reduced.acc.mean_loss();
         let weight_sum = reduced.acc.weight_sum;
         let exec_calls = reduced.acc.exec_calls;
-        let (grad_norm, step) = match trainer {
-            AnyTrainer::Tree(t) => (t.engine.apply_update(&reduced.acc)?, t.engine.step_count()),
-            AnyTrainer::Baseline(t) => {
-                (t.engine.apply_update(&reduced.acc)?, t.engine.step_count())
+        // prefix-reuse accounting is rank-local: only the inline single-rank
+        // path executes on the primary engine, so pooled runs report the
+        // inert trio (replicas keep their own counters; docs/prefix_reuse.md)
+        let (grad_norm, step, cache) = match trainer {
+            AnyTrainer::Tree(t) => {
+                let cache = t.engine.take_cache_stats();
+                (t.engine.apply_update(&reduced.acc)?, t.engine.step_count(), cache)
             }
+            AnyTrainer::Baseline(t) => (
+                t.engine.apply_update(&reduced.acc)?,
+                t.engine.step_count(),
+                CacheStats::default(),
+            ),
         };
         if let Some(pool) = &mut self.pool {
             // asynchronous: workers apply while the caller returns metrics
@@ -682,6 +691,9 @@ impl TrainerPool {
             staleness_steps: 0,
             ripe_queue_depth: 0,
             admitted_sessions: 0,
+            xstep_reuse_ratio: reuse_ratio(sharded.tree_tokens() as u64, cache.hit_tokens),
+            cache_hit_tokens: cache.hit_tokens,
+            cache_evictions: cache.evictions,
         })
     }
 

@@ -96,6 +96,18 @@ pub struct RunConfig {
     /// writes the accumulated state back after the run, so restarts keep
     /// learning instead of starting over.
     pub cost_model_state: Option<PathBuf>,
+    /// Prefix-affine scheduling (docs/prefix_reuse.md, schedule tier):
+    /// fingerprint shared root prefixes across the global batch, pack
+    /// same-prefix trees into the same forest batch, order steps group-major
+    /// and keep affine groups rank-local.  Default off — the seed plans,
+    /// bit-for-bit.  Losses under affinity match within f64 tolerance only
+    /// (reordering reassociates the Eq. 5 sums); the update set is unchanged.
+    pub prefix_affinity: bool,
+    /// Token budget of the trie-keyed prefix-activation cache (engine tier;
+    /// `prefix_cache_tokens` in JSON).  `0` (default) disables it.  Entries
+    /// never cross an optimizer update, so cache on ≡ off bit-for-bit
+    /// within every step; on the XLA engine the cache is accounting-only.
+    pub prefix_cache_tokens: usize,
 }
 
 impl RunConfig {
@@ -158,6 +170,11 @@ impl RunConfig {
                 other => anyhow::bail!("unknown cost_model {other} (tokens|calibrated)"),
             },
             cost_model_state: v.get("cost_model_state").and_then(|x| x.as_str()).map(PathBuf::from),
+            prefix_affinity: v.get("prefix_affinity").and_then(|x| x.as_bool()).unwrap_or(false),
+            prefix_cache_tokens: v
+                .get("prefix_cache_tokens")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
         };
         anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
@@ -434,6 +451,8 @@ impl Coordinator {
             Mode::Tree => {
                 let mut t = TreeTrainer::new(rt, &cfg.model, opt)?;
                 t.forest_packing = cfg.forest_packing;
+                t.prefix_affinity = cfg.prefix_affinity;
+                t.engine.set_prefix_cache_tokens(cfg.prefix_cache_tokens);
                 AnyTrainer::Tree(t)
             }
             Mode::Baseline => AnyTrainer::Baseline(BaselineTrainer::new(rt, &cfg.model, opt)?),

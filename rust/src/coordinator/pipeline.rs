@@ -39,7 +39,8 @@ use std::time::Instant;
 use crate::data::CorpusSource;
 use crate::trainer::adamw::cosine_lr;
 use crate::trainer::planner::{PlanSpec, ShardedPlan, StepPlan};
-use crate::trainer::refmodel::RefModel;
+use crate::trainer::prefix_cache::{reuse_ratio, CacheStats, PrefixCache};
+use crate::trainer::refmodel::{PrefixActs, RefModel};
 use crate::trainer::StepMetrics;
 
 use super::dist::{self, RankPool, RankWorker};
@@ -340,6 +341,17 @@ pub struct HostExecutor {
     /// step and reused for the rest of the run.
     pool: Option<RankPool<HostWorker>>,
     pool_spawn_ms: f64,
+    /// Trie-keyed activation cache over forest members annotated by the
+    /// affinity pass (docs/prefix_reuse.md) — the engine tier of cross-step
+    /// prefix reuse, realized for the host executor: cached prefix rows are
+    /// spliced into [`RefModel::step_cached`] bit-identically.  Budget 0
+    /// (the default) is the seed path: no lookups, no inserts, no
+    /// reordering of any f64 op.
+    prefix_cache: PrefixCache<PrefixActs>,
+    /// SGD updates applied so far — the host analog of
+    /// `Engine::step_count`, and the cache's parameter version: every
+    /// update hard-invalidates the cache (and each worker's).
+    updates: u64,
 }
 
 impl HostExecutor {
@@ -352,7 +364,16 @@ impl HostExecutor {
             fingerprints: Vec::new(),
             pool: None,
             pool_spawn_ms: 0.0,
+            prefix_cache: PrefixCache::new(0),
+            updates: 0,
         }
+    }
+
+    /// Enable the prefix-activation cache with a token budget (must be set
+    /// before the first step; `0` keeps it off).
+    pub fn with_prefix_cache(mut self, budget_tokens: usize) -> Self {
+        self.prefix_cache = PrefixCache::new(budget_tokens);
+        self
     }
 }
 
@@ -375,6 +396,8 @@ struct HostRankAcc {
     /// thread-schedule-free).
     hash: u64,
     batches: u64,
+    /// This rank's prefix-cache counters for the step (summed cross-rank).
+    cache: CacheStats,
 }
 
 impl HostRankAcc {
@@ -385,6 +408,7 @@ impl HostRankAcc {
             d_embed: vec![0.0f64; embed_len],
             hash: 0xcbf29ce484222325u64,
             batches: 0,
+            cache: CacheStats::default(),
         }
     }
 }
@@ -394,6 +418,11 @@ impl HostRankAcc {
 struct HostWorker {
     model: RefModel,
     run_model: bool,
+    /// Rank-local activation cache (same budget as the primary's; entries
+    /// are never shared across ranks — affine sharding keeps each prefix
+    /// group on one rank precisely so rank-local caches suffice).
+    cache: PrefixCache<PrefixActs>,
+    updates: u64,
 }
 
 /// The broadcast SGD update every replica applies (identical f64 math to
@@ -410,7 +439,9 @@ impl RankWorker for HostWorker {
 
     fn execute(&mut self, _rank: usize, plan: &StepPlan) -> crate::Result<(HostRankAcc, usize)> {
         let mut acc = HostRankAcc::fresh(self.model.embed.len());
-        let tokens = run_host_rank(&self.model, self.run_model, plan, &mut acc)?;
+        let tokens =
+            run_host_rank(&self.model, self.run_model, plan, &mut self.cache, &mut acc)?;
+        acc.cache = self.cache.take_stats();
         Ok((acc, tokens))
     }
 
@@ -422,6 +453,7 @@ impl RankWorker for HostWorker {
         }
         fnv1a(&mut a.hash, &b.hash.to_le_bytes());
         a.batches += b.batches;
+        a.cache.absorb(&b.cache);
     }
 
     fn apply(&mut self, u: &HostUpdate) -> crate::Result<()> {
@@ -430,57 +462,83 @@ impl RankWorker for HostWorker {
                 *e -= u.lr * g / u.weight_sum;
             }
         }
+        // the staleness contract, replica side: new parameter version,
+        // whole cache dropped (mirrors the primary's post-update bump)
+        self.updates += 1;
+        self.cache.set_version(self.updates);
         Ok(())
     }
 }
 
-/// Run one rank's plan against a (read-only) model.
+/// Fold one batch's full metadata into the composition digest: every
+/// channel the programs consume — tokens and weights, but also the
+/// attention topology (prev_idx, k_order, k_exit, k_bias) and positions — a
+/// divergence in any of them is a composition change even if token order
+/// matches.  Deliberately blind to the cache: hit or miss, the fingerprint
+/// is a function of the data alone.
+fn hash_batch(b: &crate::trainer::Batch, acc: &mut HostRankAcc) {
+    fnv1a(&mut acc.hash, &(b.capacity as u64).to_le_bytes());
+    for t in &b.tokens {
+        fnv1a(&mut acc.hash, &t.to_le_bytes());
+    }
+    for w in &b.weights {
+        fnv1a(&mut acc.hash, &w.to_bits().to_le_bytes());
+    }
+    for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
+        for x in v {
+            fnv1a(&mut acc.hash, &x.to_le_bytes());
+        }
+    }
+    for kb in &b.k_bias {
+        fnv1a(&mut acc.hash, &kb.to_bits().to_le_bytes());
+    }
+}
+
+/// Run one rank's plan against a (read-only) model.  Forest batches of a
+/// tree plan go through [`RefModel::step_cached`], serving annotated shared
+/// prefixes from `cache` bit-identically (a zero-budget cache degenerates
+/// to the plain step — the seed path).
 fn run_host_rank(
     model: &RefModel,
     run_model: bool,
     plan: &StepPlan,
+    cache: &mut PrefixCache<PrefixActs>,
     acc: &mut HostRankAcc,
 ) -> crate::Result<usize> {
-    let batches: Vec<&crate::trainer::Batch> = match plan {
+    let mut device_tokens = 0usize;
+    let mut absorb = |acc: &mut HostRankAcc, out: crate::trainer::refmodel::RefStep| {
+        acc.loss_sum += out.loss_sum;
+        acc.weight_sum += out.weight_sum;
+        for (g, d) in acc.d_embed.iter_mut().zip(&out.d_embed) {
+            *g += d;
+        }
+    };
+    match plan {
         StepPlan::Tree(p) => {
             anyhow::ensure!(
                 p.relay.is_none(),
                 "HostExecutor covers gateway-free plans (tree exceeds host capacity)"
             );
-            p.forests.iter().map(|fb| &fb.batch).collect()
-        }
-        StepPlan::Baseline(p) => p.batches.iter().collect(),
-    };
-    let mut device_tokens = 0usize;
-    for b in &batches {
-        if run_model {
-            let out = model.step(b)?;
-            acc.loss_sum += out.loss_sum;
-            acc.weight_sum += out.weight_sum;
-            for (g, d) in acc.d_embed.iter_mut().zip(&out.d_embed) {
-                *g += d;
+            for fb in &p.forests {
+                if run_model {
+                    let out = model.step_cached(fb, cache)?;
+                    absorb(acc, out);
+                }
+                device_tokens += fb.batch.capacity;
+                acc.batches += 1;
+                hash_batch(&fb.batch, acc);
             }
         }
-        device_tokens += b.capacity;
-        acc.batches += 1;
-        fnv1a(&mut acc.hash, &(b.capacity as u64).to_le_bytes());
-        // every metadata channel the programs consume: tokens and
-        // weights, but also the attention topology (prev_idx, k_order,
-        // k_exit, k_bias) and positions — a divergence in any of them
-        // is a composition change even if token order matches
-        for t in &b.tokens {
-            fnv1a(&mut acc.hash, &t.to_le_bytes());
-        }
-        for w in &b.weights {
-            fnv1a(&mut acc.hash, &w.to_bits().to_le_bytes());
-        }
-        for v in [&b.prev_idx, &b.pos_ids, &b.q_exit, &b.k_order, &b.k_exit] {
-            for x in v {
-                fnv1a(&mut acc.hash, &x.to_le_bytes());
+        StepPlan::Baseline(p) => {
+            for b in &p.batches {
+                if run_model {
+                    let out = model.step(b)?;
+                    absorb(acc, out);
+                }
+                device_tokens += b.capacity;
+                acc.batches += 1;
+                hash_batch(b, acc);
             }
-        }
-        for kb in &b.k_bias {
-            fnv1a(&mut acc.hash, &kb.to_bits().to_le_bytes());
         }
     }
     Ok(device_tokens)
@@ -495,8 +553,14 @@ impl StepExecutor for HostExecutor {
             // against the primary model, byte-for-byte, zero spawns
             let t_exec = Instant::now();
             let mut acc = HostRankAcc::fresh(self.model.embed.len());
-            let tokens =
-                run_host_rank(&self.model, self.run_model, &planned.plan.ranks[0], &mut acc)?;
+            let tokens = run_host_rank(
+                &self.model,
+                self.run_model,
+                &planned.plan.ranks[0],
+                &mut self.prefix_cache,
+                &mut acc,
+            )?;
+            acc.cache = self.prefix_cache.take_stats();
             dist::RankReduce {
                 acc,
                 device_tokens: tokens,
@@ -511,7 +575,12 @@ impl StepExecutor for HostExecutor {
             if self.pool.is_none() {
                 let ts = Instant::now();
                 let workers: Vec<HostWorker> = (0..n)
-                    .map(|_| HostWorker { model: self.model.clone(), run_model: self.run_model })
+                    .map(|_| HostWorker {
+                        model: self.model.clone(),
+                        run_model: self.run_model,
+                        cache: PrefixCache::new(self.prefix_cache.budget_tokens()),
+                        updates: self.updates,
+                    })
                     .collect();
                 self.pool = Some(RankPool::new(workers)?);
                 self.pool_spawn_ms = ts.elapsed().as_secs_f64() * 1e3;
@@ -537,6 +606,10 @@ impl StepExecutor for HostExecutor {
                     *e -= planned.lr * g / acc.weight_sum;
                 }
             }
+            // the staleness contract: parameters changed, so every cached
+            // prefix is stale — hard-invalidate before the next step
+            self.updates += 1;
+            self.prefix_cache.set_version(self.updates);
             if let Some(pool) = &mut self.pool {
                 // replicas apply the identical update (same reduced
                 // gradient, same LR, same f64 expression) and so stay
@@ -580,6 +653,12 @@ impl StepExecutor for HostExecutor {
             staleness_steps: 0,
             ripe_queue_depth: 0,
             admitted_sessions: 0,
+            xstep_reuse_ratio: reuse_ratio(
+                planned.plan.tree_tokens() as u64,
+                acc.cache.hit_tokens,
+            ),
+            cache_hit_tokens: acc.cache.hit_tokens,
+            cache_evictions: acc.cache.evictions,
         })
     }
 

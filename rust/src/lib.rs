@@ -48,6 +48,21 @@
 //!   interval attention mask is host metadata, which makes packing
 //!   numerically free — proven by `tests/forest_equivalence.rs` against
 //!   the first-principles [`trainer::refmodel::RefModel`] executor.
+//! * [`partition::affinity`] + [`trainer::prefix_cache`] — **cross-step
+//!   prefix reuse** (docs/prefix_reuse.md): agentic corpora repeat hot
+//!   prefixes *across* trees (one system prompt, many tasks), so the
+//!   planner fingerprints each tree's maximal shared root chain
+//!   (FNV over tokens + supervision) and, behind the `prefix_affinity`
+//!   knob, packs same-prefix trees into the same forest batch,
+//!   group-major and rank-local (`prefix_affinity: false` reproduces the
+//!   seed schedule bit-for-bit).  On top rides a trie-keyed LRU cache of
+//!   prefix forward activations, keyed `(prefix_sig, prefix_len)`,
+//!   hard-invalidated on every optimizer update — so within one update a
+//!   shared prefix is forwarded once and spliced into every other member
+//!   (cross-batch via the cache, within-batch via the alias path),
+//!   bit-identical to recompute because member-local attention makes
+//!   prefix rows independent of their surroundings.  Measured per step as
+//!   `xstep_reuse_ratio` / `cache_hit_tokens` / `cache_evictions`.
 //! * [`coordinator`] — global batches (§3.4) planned into streams of packed
 //!   device batches, then executed and optimizer-stepped.  The run loop is
 //!   *pipelined* ([`coordinator::pipeline`]): a planner thread assembles

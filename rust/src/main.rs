@@ -29,6 +29,9 @@ COMMANDS:
                            [--shutdown-marker  terminal {\"shutdown\":true}]
                            [--spool-segments N  out becomes a spool dir of
                             N session-sharded segment files]
+                           [--hot-prefixes N  graft a shared untrained root
+                            prefix, trees cycled through N prefix groups]
+                           [--prefix-len L  grafted prefix tokens, default 96]
   serve                    continuous-ingestion training service: tail a
                            spool dir of rollout segments, fold live tries,
                            cut batches under a bounded-staleness contract,
@@ -55,6 +58,13 @@ COMMANDS:
                            [--mode tree|baseline] [--steps N]
                            [--trees-per-batch N] [--pipeline-depth D]
                            [--shuffle-window W] [--capacity C] [--vocab V]
+  prefix-smoke             cross-step prefix reuse gate, hermetic: affinity
+                           off ≡ seed plans, cache on ≡ off bit-for-bit,
+                           xstep_reuse_ratio > 1 on a hot-prefix corpus;
+                           writes per-config CSVs (docs/prefix_reuse.md)
+                           --corpus FILE [--steps N] [--trees-per-batch N]
+                           [--cache-tokens B] [--capacity C] [--vocab V]
+                           [--seed S] [--csv-dir DIR]
   dist-smoke               sharded execution determinism gate + measured
                            sweep, hermetic: each --ranks N vs ranks 1 loss
                            stream within f64 tolerance, repeat runs
@@ -168,6 +178,8 @@ fn main() -> anyhow::Result<()> {
                 rest.has("end-markers"),
                 rest.has("shutdown-marker"),
                 rest.get("spool-segments", 1usize),
+                rest.get("hot-prefixes", 0usize),
+                rest.get("prefix-len", 96usize),
                 &PathBuf::from(out_file),
             )
         }
@@ -189,6 +201,20 @@ fn main() -> anyhow::Result<()> {
                 rest.get("capacity", 8192usize),
                 rest.get("vocab", 256usize),
                 rest.get("seed", 0u64),
+            )
+        }
+        "prefix-smoke" => {
+            let corpus = rest.str("corpus", "");
+            anyhow::ensure!(!corpus.is_empty(), "prefix-smoke needs --corpus <file.jsonl>");
+            cmds::prefix_smoke::run(
+                &PathBuf::from(corpus),
+                rest.get("steps", 8u64),
+                rest.get("trees-per-batch", 6usize),
+                rest.get("cache-tokens", 65_536usize),
+                rest.get("capacity", 8192usize),
+                rest.get("vocab", 256usize),
+                rest.get("seed", 0u64),
+                &PathBuf::from(rest.str("csv-dir", out.to_str().unwrap_or("results"))),
             )
         }
         "dist-smoke" => {

@@ -1,0 +1,479 @@
+//! Cross-tree prefix affinity: the schedule-level reuse tier.
+//!
+//! The ingest trie already merges shared prefixes *within* one session's
+//! rollouts; Forest Packing already deduplicates them *within* one packed
+//! batch.  What neither sees is that two different trees — different
+//! sessions, different tasks run from the same system prompt — often share
+//! a long token prefix, and whether that prefix is computed once or twice
+//! per optimizer step depends entirely on whether the planner lands the two
+//! trees in the same `ForestBatch` ("Schedule-Level Shared-Prefix Reuse",
+//! PAPERS.md).
+//!
+//! This module builds that signal: a token-level trie over every tree's
+//! *root-chain stream* — the `(token, trainable-bits, advantage-bits)`
+//! triples along the unique single-child path from the root, exactly the
+//! divergence discipline of the ingest trie's `NodeSig` fingerprints (a
+//! supervision flip is a divergence even when tokens agree, because merged
+//! prefixes must restore gradients exactly).  Each tree is annotated with
+//! its deepest trie node shared by at least one *other* tree; trees
+//! annotated with the same node form an **affine group** with a common
+//! `prefix_len` and an FNV-1a `prefix_sig` over the shared triples.
+//!
+//! Consumers:
+//!
+//! * [`AffinityIndex::affine_order`] / [`AffinityIndex::affine_bins`] —
+//!   group-major FFD packing, so same-prefix trees land in the same
+//!   capacity-`C` bin (and consecutive bins when a group overflows one),
+//!   maximizing within-step and adjacent-step overlap.
+//! * [`shard_affine`] — LPT sharding of whole *groups* (summed member
+//!   cost), so an affine group never splits across data-parallel ranks and
+//!   the engine-level cache ([`crate::trainer::prefix_cache`]) sees every
+//!   member of a group on one rank.
+//! * [`annotate_members`] — stamps the per-member `prefix_len`/`prefix_sig`
+//!   onto packed [`ForestBatch`]es, which is what the activation cache
+//!   keys on at execute time.
+//!
+//! DFS pre-order serialization puts the root chain in a member's *first*
+//! `prefix_len` slots, and every chain slot's visible key set is exactly
+//! the earlier chain slots (`q_exit = k_exit =` member end for the whole
+//! chain), so forward activations for those slots are a pure function of
+//! (prefix triples, positions, parameters) — the invariant the engine-level
+//! cache relies on for bit-identical reuse (docs/prefix_reuse.md).
+
+use std::borrow::Borrow;
+
+use crate::tree::TrajectoryTree;
+
+use super::forest::{ForestBatch, RankShards};
+
+/// One root-chain element: `(token, trainable f32 bits, advantage f32
+/// bits)` — the same triple the ingest trie splits on.
+pub type PrefixTriple = (i32, u32, u32);
+
+/// Root-chain streams longer than this are truncated before indexing —
+/// bounds trie memory on degenerate chain-only corpora without affecting
+/// correctness (a truncated match is still a valid shared prefix).
+pub const MAX_STREAM: usize = 4096;
+
+/// FNV-1a 64-bit offset basis (shared with the pipeline fingerprints).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// The root-chain stream of a tree: tokens of the root node and of every
+/// single-child descendant, ending with the first multi-child node's own
+/// tokens (they are shared by all its branches, hence part of the shared
+/// prefix) or the sole leaf's.  Nodes carrying alignment pads stop the
+/// stream *before* their tokens, so stream index `t` always equals member
+/// slot `t` under DFS serialization.
+pub fn prefix_stream(tree: &TrajectoryTree) -> Vec<PrefixTriple> {
+    let ch = tree.children();
+    let mut out = Vec::new();
+    let mut cur = 0usize;
+    loop {
+        let n = &tree.nodes[cur];
+        if n.pad_tail != 0 {
+            break;
+        }
+        for t in 0..n.tokens.len() {
+            if out.len() >= MAX_STREAM {
+                return out;
+            }
+            out.push((n.tokens[t], n.trainable[t].to_bits(), n.advantage[t].to_bits()));
+        }
+        if ch[cur].len() != 1 {
+            break;
+        }
+        cur = ch[cur][0];
+    }
+    out
+}
+
+/// FNV-1a fingerprint of the first `len` triples of a stream.
+pub fn prefix_sig(stream: &[PrefixTriple], len: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &(tok, tr, adv) in &stream[..len] {
+        fnv1a(&mut h, &tok.to_le_bytes());
+        fnv1a(&mut h, &tr.to_le_bytes());
+        fnv1a(&mut h, &adv.to_le_bytes());
+    }
+    h
+}
+
+/// Per-tree affinity annotation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreePrefix {
+    /// Index into [`AffinityIndex::groups`].
+    pub group: usize,
+    /// Shared-prefix length in tokens (0 = no other tree shares a prefix).
+    pub prefix_len: usize,
+    /// [`prefix_sig`] over the shared triples (0 when `prefix_len == 0`).
+    pub sig: u64,
+}
+
+/// A set of trees annotated with the same deepest shared trie node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffineGroup {
+    /// Member tree indices in ascending input order.
+    pub members: Vec<usize>,
+    pub prefix_len: usize,
+    pub sig: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TrieNode {
+    children: Vec<(PrefixTriple, usize)>,
+    count: u32,
+}
+
+/// The cross-tree prefix signature index.
+///
+/// Groups are numbered in order of first member appearance, and every
+/// tie-break below is deterministic, so the index — and everything planned
+/// from it — is reproducible run-to-run (the affinity ∘ sharding
+/// determinism gate in `tests/prefix_reuse_equivalence.rs`).
+#[derive(Debug, Clone)]
+pub struct AffinityIndex {
+    pub trees: Vec<TreePrefix>,
+    pub groups: Vec<AffineGroup>,
+}
+
+impl AffinityIndex {
+    /// Index a batch of trees (accepts `&[Tree]` or `&[Arc<Tree>]`).
+    pub fn build<T: Borrow<TrajectoryTree>>(trees: &[T]) -> Self {
+        let streams: Vec<Vec<PrefixTriple>> =
+            trees.iter().map(|t| prefix_stream(t.borrow())).collect();
+        // token-level trie with per-node pass counts
+        let mut arena: Vec<TrieNode> = vec![TrieNode::default()];
+        let mut paths: Vec<Vec<usize>> = Vec::with_capacity(streams.len());
+        for s in &streams {
+            let mut cur = 0usize;
+            let mut path = Vec::with_capacity(s.len());
+            for &trip in s {
+                let next = match arena[cur].children.iter().find(|(k, _)| *k == trip) {
+                    Some(&(_, c)) => c,
+                    None => {
+                        arena.push(TrieNode::default());
+                        let c = arena.len() - 1;
+                        arena[cur].children.push((trip, c));
+                        c
+                    }
+                };
+                arena[next].count += 1;
+                path.push(next);
+                cur = next;
+            }
+            paths.push(path);
+        }
+        // deepest node on each tree's path shared by >= 2 trees
+        let mut group_of_node: Vec<Option<usize>> = vec![None; arena.len()];
+        let mut annots = Vec::with_capacity(streams.len());
+        let mut groups: Vec<AffineGroup> = Vec::new();
+        for (i, path) in paths.iter().enumerate() {
+            let mut best: Option<(usize, usize)> = None; // (node, depth)
+            for (d, &node) in path.iter().enumerate() {
+                if arena[node].count >= 2 {
+                    best = Some((node, d + 1));
+                }
+            }
+            let (group, prefix_len, sig) = match best {
+                Some((node, depth)) => {
+                    let sig = prefix_sig(&streams[i], depth);
+                    let g = match group_of_node[node] {
+                        Some(g) => g,
+                        None => {
+                            groups.push(AffineGroup { members: Vec::new(), prefix_len: depth, sig });
+                            group_of_node[node] = Some(groups.len() - 1);
+                            groups.len() - 1
+                        }
+                    };
+                    (g, depth, sig)
+                }
+                None => {
+                    // singleton group: keeps "every tree is in exactly one
+                    // group" so ordering/sharding need no special case
+                    groups.push(AffineGroup { members: Vec::new(), prefix_len: 0, sig: 0 });
+                    (groups.len() - 1, 0, 0)
+                }
+            };
+            groups[group].members.push(i);
+            annots.push(TreePrefix { group, prefix_len, sig });
+        }
+        Self { trees: annots, groups }
+    }
+
+    /// Number of trees indexed.
+    pub fn len(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trees.is_empty()
+    }
+
+    /// Group-major visiting order: groups by decreasing summed cost (ties
+    /// keep first-appearance order), members within a group by decreasing
+    /// cost (ties keep input order).  This is the affine analogue of the
+    /// FFD decreasing-cost order — the heaviest *prefix community* seeds
+    /// the bins first, and its members are consecutive so they co-locate.
+    pub fn affine_order(&self, costs: &[usize]) -> Vec<usize> {
+        assert_eq!(costs.len(), self.trees.len(), "affine_order: cost arity");
+        let group_cost: Vec<usize> = self
+            .groups
+            .iter()
+            .map(|g| g.members.iter().map(|&i| costs[i]).sum())
+            .collect();
+        let mut gorder: Vec<usize> = (0..self.groups.len()).collect();
+        gorder.sort_by_key(|&g| std::cmp::Reverse(group_cost[g]));
+        let mut out = Vec::with_capacity(costs.len());
+        for &g in &gorder {
+            let mut ms = self.groups[g].members.clone();
+            ms.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
+            out.extend(ms);
+        }
+        out
+    }
+
+    /// Prefix-affine FFD: visit trees in [`Self::affine_order`]; each tree
+    /// prefers the first bin already holding a same-group member (so a
+    /// group overflowing one bin stays in as few bins as possible), then
+    /// plain first-fit, else opens a new bin.  Feasibility is always slot
+    /// `sizes` against the hard `capacity`; `costs` only orders.
+    pub fn affine_bins(
+        &self,
+        sizes: &[usize],
+        costs: &[usize],
+        capacity: usize,
+    ) -> crate::Result<Vec<Vec<usize>>> {
+        anyhow::ensure!(
+            sizes.len() == self.trees.len() && costs.len() == self.trees.len(),
+            "affine_bins: {} sizes / {} costs for {} trees",
+            sizes.len(),
+            costs.len(),
+            self.trees.len()
+        );
+        // (used slots, member ids, groups present)
+        let mut bins: Vec<(usize, Vec<usize>, Vec<usize>)> = Vec::new();
+        for i in self.affine_order(costs) {
+            let s = sizes[i];
+            anyhow::ensure!(
+                s <= capacity,
+                "tree of {s} slots exceeds capacity {capacity}; partition it instead"
+            );
+            let g = self.trees[i].group;
+            let slot = bins
+                .iter()
+                .position(|b| b.2.contains(&g) && b.0 + s <= capacity)
+                .or_else(|| bins.iter().position(|b| b.0 + s <= capacity));
+            match slot {
+                Some(bi) => {
+                    bins[bi].0 += s;
+                    bins[bi].1.push(i);
+                    if !bins[bi].2.contains(&g) {
+                        bins[bi].2.push(g);
+                    }
+                }
+                None => bins.push((s, vec![i], vec![g])),
+            }
+        }
+        Ok(bins.into_iter().map(|(_, ids, _)| ids).collect())
+    }
+}
+
+/// LPT-shard whole affine *groups* across ranks: group cost = summed member
+/// cost, placement via the same deterministic [`super::forest::shard_by_cost`],
+/// then each rank's groups expand to their member trees in ascending input
+/// order.  A group never splits across ranks, so the engine-level cache
+/// (per-rank state) sees every member of a group — the rank-local
+/// composition contract of docs/prefix_reuse.md.
+pub fn shard_affine(
+    index: &AffinityIndex,
+    costs: &[usize],
+    n_ranks: usize,
+) -> crate::Result<RankShards> {
+    anyhow::ensure!(costs.len() == index.trees.len(), "shard_affine: cost arity");
+    let group_costs: Vec<usize> = index
+        .groups
+        .iter()
+        .map(|g| g.members.iter().map(|&i| costs[i]).sum())
+        .collect();
+    let shards = super::forest::shard_by_cost(&group_costs, n_ranks)?;
+    let ranks: Vec<Vec<usize>> = shards
+        .ranks
+        .iter()
+        .map(|gs| {
+            let mut ms: Vec<usize> =
+                gs.iter().flat_map(|&g| index.groups[g].members.iter().copied()).collect();
+            ms.sort_unstable(); // ascending input order, like shard_by_cost
+            ms
+        })
+        .collect();
+    Ok(RankShards { ranks, loads: shards.loads })
+}
+
+/// Stamp each packed member's shared-prefix annotation (`prefix_len` /
+/// `prefix_sig`) from the index it was packed under.  Members of singleton
+/// groups keep the zero annotation — the cache never keys on them.
+pub fn annotate_members(forests: &mut [ForestBatch], index: &AffinityIndex) {
+    for fb in forests.iter_mut() {
+        for m in &mut fb.members {
+            let a = &index.trees[m.source];
+            if a.prefix_len > 0 {
+                m.prefix_len = a.prefix_len.min(m.len);
+                m.prefix_sig = a.sig;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::NodeSpec;
+
+    /// chain tree: `prefix` as the root node, then one branch node per leaf
+    fn tree_with_prefix(prefix: &[i32], leaves: &[&[i32]]) -> TrajectoryTree {
+        let mut nodes = vec![NodeSpec::new(-1, prefix.to_vec())];
+        for l in leaves {
+            nodes.push(NodeSpec::new(0, l.to_vec()));
+        }
+        TrajectoryTree::new(nodes).unwrap()
+    }
+
+    #[test]
+    fn stream_follows_the_root_chain_and_stops_at_divergence() {
+        // root [1,2] -> single child [3] -> two children
+        let t = TrajectoryTree::new(vec![
+            NodeSpec::new(-1, vec![1, 2]),
+            NodeSpec::new(0, vec![3]),
+            NodeSpec::new(1, vec![4]),
+            NodeSpec::new(1, vec![5]),
+        ])
+        .unwrap();
+        let s = prefix_stream(&t);
+        assert_eq!(s.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn supervision_flip_diverges_like_the_ingest_trie() {
+        let a = tree_with_prefix(&[7, 8, 9], &[&[1], &[2]]);
+        let mut b = tree_with_prefix(&[7, 8, 9], &[&[3], &[4]]);
+        b.nodes[0].trainable[1] = 0.0; // same tokens, different supervision
+        let idx = AffinityIndex::build(&[a.clone(), b]);
+        // token 7 matches, token 8 diverges on trainable bits
+        assert_eq!(idx.trees[0].prefix_len, 1);
+        assert_eq!(idx.trees[0].group, idx.trees[1].group);
+        // identical supervision groups at the full prefix
+        let b2 = tree_with_prefix(&[7, 8, 9], &[&[3], &[4]]);
+        let idx2 = AffinityIndex::build(&[a, b2]);
+        assert_eq!(idx2.trees[0].prefix_len, 3);
+        assert_eq!(idx2.trees[0].sig, idx2.trees[1].sig);
+    }
+
+    #[test]
+    fn deepest_shared_node_wins_and_shallow_sharers_split_off() {
+        let a = tree_with_prefix(&[1, 2, 3, 4], &[&[9], &[8]]);
+        let c = tree_with_prefix(&[1, 2, 3, 5], &[&[9], &[8]]);
+        let b = tree_with_prefix(&[1, 2, 7], &[&[9], &[8]]);
+        let idx = AffinityIndex::build(&[a, b, c]);
+        // a and c share depth 3 ([1,2,3]); b only shares depth 2 ([1,2])
+        assert_eq!(idx.trees[0].prefix_len, 3);
+        assert_eq!(idx.trees[2].prefix_len, 3);
+        assert_eq!(idx.trees[0].group, idx.trees[2].group);
+        assert_eq!(idx.trees[1].prefix_len, 2);
+        assert_ne!(idx.trees[1].group, idx.trees[0].group);
+    }
+
+    #[test]
+    fn loner_trees_get_singleton_groups() {
+        let a = tree_with_prefix(&[1, 2], &[&[3]]);
+        let b = tree_with_prefix(&[4, 5], &[&[6]]);
+        let idx = AffinityIndex::build(&[a, b]);
+        assert_eq!(idx.trees[0].prefix_len, 0);
+        assert_eq!(idx.trees[1].prefix_len, 0);
+        assert_ne!(idx.trees[0].group, idx.trees[1].group);
+        assert_eq!(idx.groups.len(), 2);
+    }
+
+    #[test]
+    fn affine_order_is_group_major_by_total_cost() {
+        // group A = {0, 1} (cost 5 + 2), group B = {2} (cost 6)
+        let t0 = tree_with_prefix(&[1, 1, 1], &[&[2], &[3]]);
+        let t1 = tree_with_prefix(&[1, 1, 1], &[&[4], &[5]]);
+        let t2 = tree_with_prefix(&[9, 9], &[&[2], &[3]]);
+        let idx = AffinityIndex::build(&[t0, t1, t2]);
+        // A totals 7 > B's 6: A first, heavier member first
+        assert_eq!(idx.affine_order(&[5, 2, 6]), vec![0, 1, 2]);
+        // flip the costs: B totals 9 > A's 4; within A, tree 1 outweighs 0
+        assert_eq!(idx.affine_order(&[1, 3, 9]), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn affine_bins_colocate_groups_then_first_fit() {
+        let t = |p: &[i32]| tree_with_prefix(p, &[&[100], &[101]]);
+        // two groups of two; sizes chosen so plain FFD would interleave
+        let trees = [t(&[1, 1]), t(&[2, 2]), t(&[1, 1]), t(&[2, 2])];
+        let idx = AffinityIndex::build(&trees);
+        let bins = idx.affine_bins(&[6, 6, 4, 4], &[6, 6, 4, 4], 10).unwrap();
+        // group {0,2} packs together, group {1,3} packs together
+        let find = |i: usize| bins.iter().position(|b| b.contains(&i)).unwrap();
+        assert_eq!(find(0), find(2));
+        assert_eq!(find(1), find(3));
+        assert_ne!(find(0), find(1));
+    }
+
+    #[test]
+    fn affine_bins_respect_capacity_and_cover_all() {
+        let t = |p: &[i32]| tree_with_prefix(p, &[&[100], &[101]]);
+        let trees = [t(&[1]), t(&[1]), t(&[1]), t(&[2]), t(&[2])];
+        let sizes = [7usize, 6, 5, 4, 3];
+        let idx = AffinityIndex::build(&trees);
+        let bins = idx.affine_bins(&sizes, &sizes, 12).unwrap();
+        let mut seen: Vec<usize> = bins.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        for b in &bins {
+            assert!(b.iter().map(|&i| sizes[i]).sum::<usize>() <= 12);
+        }
+    }
+
+    #[test]
+    fn shard_affine_keeps_groups_rank_local() {
+        let t = |p: &[i32]| tree_with_prefix(p, &[&[100], &[101]]);
+        let trees =
+            [t(&[1, 1]), t(&[2, 2]), t(&[1, 1]), t(&[2, 2]), t(&[3, 3]), t(&[3, 3])];
+        let idx = AffinityIndex::build(&trees);
+        let costs = [10usize, 10, 10, 10, 10, 10];
+        let shards = shard_affine(&idx, &costs, 3).unwrap();
+        let rank_of = |i: usize| shards.ranks.iter().position(|r| r.contains(&i)).unwrap();
+        for g in &idx.groups {
+            let r0 = rank_of(g.members[0]);
+            for &m in &g.members {
+                assert_eq!(rank_of(m), r0, "group split across ranks");
+            }
+        }
+        let mut seen: Vec<usize> = shards.ranks.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn index_is_reproducible() {
+        let trees: Vec<TrajectoryTree> = (0..12)
+            .map(|i| {
+                let p: Vec<i32> = (0..(i % 4 + 2)).map(|k| (k % 3) as i32 + 1).collect();
+                tree_with_prefix(&p, &[&[i as i32 + 50], &[i as i32 + 90]])
+            })
+            .collect();
+        let a = AffinityIndex::build(&trees);
+        let b = AffinityIndex::build(&trees);
+        assert_eq!(a.trees, b.trees);
+        assert_eq!(a.groups, b.groups);
+    }
+}

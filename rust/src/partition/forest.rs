@@ -107,6 +107,12 @@ pub struct ForestMember {
     pub slot_offset: usize,
     /// Region length (= the member meta's size).
     pub len: usize,
+    /// Shared root-chain prefix length in slots (0 = no cross-tree sharing).
+    /// Stamped by [`super::affinity::annotate_members`] after packing; the
+    /// engine-level activation cache keys its lookups on this region.
+    pub prefix_len: usize,
+    /// FNV-1a fingerprint of the shared prefix triples (0 when unshared).
+    pub prefix_sig: u64,
 }
 
 /// A packed prefix-forest `step` batch and its member layout.
@@ -161,7 +167,13 @@ pub fn concat_metas(
     for &i in ids {
         let m = &metas[i];
         let o = b.tokens.len() as i32;
-        members.push(ForestMember { source: i, slot_offset: o as usize, len: m.size() });
+        members.push(ForestMember {
+            source: i,
+            slot_offset: o as usize,
+            len: m.size(),
+            prefix_len: 0,
+            prefix_sig: 0,
+        });
         b.tokens.extend(&m.tokens);
         b.pos_ids.extend(&m.pos_ids);
         b.weights.extend(&m.weights);

@@ -21,13 +21,21 @@
 //!   the exact token-count default, or a least-squares model calibrated
 //!   online from measured per-rank execute walls (`cost_model:
 //!   "calibrated"`).
+//! * [`affinity`] — the cross-tree prefix signature index (root-chain
+//!   trie, `NodeSig`-style divergence discipline): prefix-affine FFD bins
+//!   and group-local LPT sharding so trees sharing hot prefixes land in
+//!   the same forest batch, same rank, adjacent steps — the schedule tier
+//!   of cross-step prefix reuse (docs/prefix_reuse.md), behind the
+//!   `prefix_affinity` knob (off = seed-exact plans).
 
+pub mod affinity;
 pub mod binpack;
 pub mod cost;
 pub mod forest;
 pub mod plan;
 pub mod validate;
 
+pub use affinity::{prefix_sig, prefix_stream, AffineGroup, AffinityIndex, TreePrefix};
 pub use binpack::{exact_min_partitions, greedy_pack};
 pub use cost::{tree_features, Calibrator, CostModel};
 pub use forest::{

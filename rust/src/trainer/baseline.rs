@@ -138,6 +138,10 @@ impl BaselineTrainer {
             staleness_steps: 0,
             ripe_queue_depth: 0,
             admitted_sessions: 0,
+            // the sep-avg baseline has no shared-prefix structure to reuse
+            xstep_reuse_ratio: 1.0,
+            cache_hit_tokens: 0,
+            cache_evictions: 0,
         })
     }
 

@@ -19,7 +19,7 @@
 //! *planning*: they decide which batches exist (Forest Packing, partition
 //! relays, chain packing) and feed them through the engine.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::gateway::KvCache;
 use crate::runtime::{HostTensor, Program, Runtime};
@@ -28,6 +28,7 @@ use xla::Literal;
 use super::adamw::{AdamW, AdamWConfig};
 use super::batch::{Batch, BatchOptions};
 use super::grads::GradBuffer;
+use super::prefix_cache::{CacheStats, PrefixCache};
 
 pub struct Engine {
     pub rt: Arc<Runtime>,
@@ -46,6 +47,16 @@ pub struct Engine {
     head_dim: usize,
     hybrid: Option<(usize, usize)>, // (chunk_size, conv_kernel)
     step_count: u64,
+    /// Accounting-only prefix cache (docs/prefix_reuse.md "Engine path"):
+    /// the exported `step` program recomputes every slot, so the device tier
+    /// tracks *would-be* hits — `()` payloads — to surface cross-step reuse
+    /// headroom in `StepMetrics` without changing any computed bit.  The
+    /// cache version IS `step_count`: [`Engine::apply_update`] bumps it, so
+    /// no entry (here or in any host-tier cache keyed off
+    /// [`Engine::step_count`]) survives an Eq. 5 parameter update.  Behind a
+    /// `Mutex` because dispatch paths take `&self`; contention is nil (one
+    /// lock per annotated forest member).
+    prefix_cache: Mutex<PrefixCache<()>>,
 }
 
 impl Engine {
@@ -91,6 +102,7 @@ impl Engine {
             head_dim: info.head_dim(),
             hybrid,
             step_count: 0,
+            prefix_cache: Mutex::new(PrefixCache::new(0)),
         })
     }
 
@@ -137,6 +149,11 @@ impl Engine {
             head_dim: self.head_dim,
             hybrid: self.hybrid,
             step_count: self.step_count,
+            // replicas share the budget but start cold: entries are
+            // rank-local accounting, never parameter state
+            prefix_cache: Mutex::new(PrefixCache::new(
+                self.prefix_cache.lock().unwrap().budget_tokens(),
+            )),
         })
     }
 
@@ -187,6 +204,39 @@ impl Engine {
 
     pub fn grad_buffer(&self) -> GradBuffer {
         GradBuffer::zeros(&self.params)
+    }
+
+    // ── prefix-reuse accounting (docs/prefix_reuse.md) ─────────────────
+
+    /// (Re)size the accounting prefix cache.  `0` disables it (the
+    /// default: seed-exact, zero overhead).
+    pub fn set_prefix_cache_tokens(&mut self, budget_tokens: usize) {
+        *self.prefix_cache.get_mut().unwrap() = PrefixCache::new(budget_tokens);
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache.lock().unwrap().enabled()
+    }
+
+    /// Record one annotated forest member against the accounting cache:
+    /// counts a hit (and `prefix_len` reusable slots) if the fingerprint is
+    /// live under the current parameter version, else a miss + insert.
+    /// Purely observational — the `step` program still computes every slot.
+    pub fn note_prefix(&self, sig: u64, prefix_len: usize) -> bool {
+        let mut cache = self.prefix_cache.lock().unwrap();
+        if cache.lookup(sig, prefix_len).is_some() {
+            true
+        } else {
+            cache.insert(sig, prefix_len, ());
+            false
+        }
+    }
+
+    /// Drain the accounting counters accumulated since the last drain
+    /// (the `take_ingest_ms` idiom; feeds the `xstep_reuse_ratio` /
+    /// `cache_hit_tokens` / `cache_evictions` metrics columns).
+    pub fn take_cache_stats(&self) -> CacheStats {
+        self.prefix_cache.lock().unwrap().take_stats()
     }
 
     // ── program dispatch ───────────────────────────────────────────────
@@ -321,6 +371,9 @@ impl Engine {
             .map(|p| p.to_literal())
             .collect::<crate::Result<Vec<_>>>()?;
         self.step_count += 1;
+        // the staleness contract: the new parameter version hard-invalidates
+        // every cached prefix — no entry crosses an Eq. 5 update
+        self.prefix_cache.get_mut().unwrap().set_version(self.step_count);
         Ok(grad_norm)
     }
 

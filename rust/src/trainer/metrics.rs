@@ -69,6 +69,16 @@ pub struct StepMetrics {
     /// Sessions whose trees ripened into the queue since the previous cut
     /// (end-marker, idle, LRU or quiesce verdicts; 0 outside serve).
     pub admitted_sessions: u64,
+    /// Cross-step prefix reuse of this step (docs/prefix_reuse.md):
+    /// `T / (T - H)` where `T` is the step's tree tokens and `H` the prefix
+    /// slots served (or, on the accounting-only engine path, servable) from
+    /// the trie-keyed cache.  `1.0` with the cache off or cold.
+    pub xstep_reuse_ratio: f64,
+    /// Prefix slots served from the cache this step (the `H` above).
+    pub cache_hit_tokens: u64,
+    /// Cache entries dropped by LRU budget pressure this step (version
+    /// invalidations after each optimizer update are not counted).
+    pub cache_evictions: u64,
 }
 
 impl StepMetrics {
@@ -93,7 +103,7 @@ impl StepMetrics {
     pub fn csv_row(&self) -> String {
         format!(
             "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},\
-             {:.3},{:.3},{},{:.4},{:.3},{:.4},{},{},{}",
+             {:.3},{:.3},{},{:.4},{:.3},{:.4},{},{},{},{:.4},{},{}",
             self.step,
             self.loss,
             self.weight_sum,
@@ -116,7 +126,10 @@ impl StepMetrics {
             self.cost_model_err,
             self.staleness_steps,
             self.ripe_queue_depth,
-            self.admitted_sessions
+            self.admitted_sessions,
+            self.xstep_reuse_ratio,
+            self.cache_hit_tokens,
+            self.cache_evictions
         )
     }
 }
@@ -125,7 +138,8 @@ impl StepMetrics {
 pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,flat_tokens,\
      reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
      ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance,ingest_ms,cost_model_err,\
-     staleness_steps,ripe_queue_depth,admitted_sessions";
+     staleness_steps,ripe_queue_depth,admitted_sessions,\
+     xstep_reuse_ratio,cache_hit_tokens,cache_evictions";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -174,6 +188,9 @@ mod tests {
             staleness_steps: 2,
             ripe_queue_depth: 7,
             admitted_sessions: 3,
+            xstep_reuse_ratio: 1.5,
+            cache_hit_tokens: 300,
+            cache_evictions: 1,
         }
     }
 
@@ -227,27 +244,27 @@ mod tests {
         // existing columns by position, so new columns must append — the
         // PR-6 ingest/cost pair keeps its position ahead of the serve trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 5], "ingest_ms");
-        assert_eq!(cols[cols.len() - 4], "cost_model_err");
+        assert_eq!(cols[cols.len() - 8], "ingest_ms");
+        assert_eq!(cols[cols.len() - 7], "cost_model_err");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 5], "6.500");
-        assert_eq!(vals[vals.len() - 4], "0.0625");
+        assert_eq!(vals[vals.len() - 8], "6.500");
+        assert_eq!(vals[vals.len() - 7], "0.0625");
     }
 
     #[test]
-    fn csv_schema_appends_the_serve_columns_last() {
-        // the serve (continuous-ingestion) trio is the newest append and
-        // must stay last until the next additive growth
+    fn csv_schema_keeps_the_serve_columns_ahead_of_the_cache_trio() {
+        // the serve (continuous-ingestion) trio keeps its PR-7 position
+        // ahead of the PR-8 prefix-cache trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 3], "staleness_steps");
-        assert_eq!(cols[cols.len() - 2], "ripe_queue_depth");
-        assert_eq!(cols[cols.len() - 1], "admitted_sessions");
+        assert_eq!(cols[cols.len() - 6], "staleness_steps");
+        assert_eq!(cols[cols.len() - 5], "ripe_queue_depth");
+        assert_eq!(cols[cols.len() - 4], "admitted_sessions");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 3], "2");
-        assert_eq!(vals[vals.len() - 2], "7");
-        assert_eq!(vals[vals.len() - 1], "3");
+        assert_eq!(vals[vals.len() - 6], "2");
+        assert_eq!(vals[vals.len() - 5], "7");
+        assert_eq!(vals[vals.len() - 4], "3");
         // non-serve constructors default the trio to zero, so pre-serve
         // consumers reading by position see unchanged values
         let mut m = sample();
@@ -256,6 +273,30 @@ mod tests {
         m.admitted_sessions = 0;
         let vals: Vec<String> =
             m.csv_row().split(',').map(str::to_string).collect();
-        assert_eq!(&vals[vals.len() - 3..], ["0", "0", "0"]);
+        assert_eq!(&vals[vals.len() - 6..vals.len() - 3], ["0", "0", "0"]);
+    }
+
+    #[test]
+    fn csv_schema_appends_the_prefix_cache_columns_last() {
+        // the cross-step prefix-reuse trio is the newest append and must
+        // stay last until the next additive growth
+        let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
+        assert_eq!(cols[cols.len() - 3], "xstep_reuse_ratio");
+        assert_eq!(cols[cols.len() - 2], "cache_hit_tokens");
+        assert_eq!(cols[cols.len() - 1], "cache_evictions");
+        let row = sample().csv_row();
+        let vals: Vec<&str> = row.split(',').collect();
+        assert_eq!(vals[vals.len() - 3], "1.5000");
+        assert_eq!(vals[vals.len() - 2], "300");
+        assert_eq!(vals[vals.len() - 1], "1");
+        // cache-off constructors default the trio to the inert values, so
+        // pre-cache consumers reading by position see unchanged data
+        let mut m = sample();
+        m.xstep_reuse_ratio = 1.0;
+        m.cache_hit_tokens = 0;
+        m.cache_evictions = 0;
+        let vals: Vec<String> =
+            m.csv_row().split(',').map(str::to_string).collect();
+        assert_eq!(&vals[vals.len() - 3..], ["1.0000", "0", "0"]);
     }
 }

@@ -23,6 +23,11 @@
 //! * [`refmodel::RefModel`] — first-principles f64 reference executor over
 //!   batch metadata; powers the packing equivalence property tests in
 //!   environments without the native PJRT backend.
+//! * [`prefix_cache::PrefixCache`] — trie-keyed LRU cache of prefix forward
+//!   activations (the engine tier of cross-step prefix reuse,
+//!   docs/prefix_reuse.md): entries keyed by `(prefix_sig, prefix_len)`
+//!   from the affinity pass, hard-invalidated on every Eq. 5 optimizer
+//!   update so cache on ≡ cache off bit-for-bit.
 
 pub mod adamw;
 pub mod baseline;
@@ -31,6 +36,7 @@ pub mod engine;
 pub mod grads;
 pub mod metrics;
 pub mod planner;
+pub mod prefix_cache;
 pub mod refmodel;
 pub mod tree_trainer;
 
@@ -40,5 +46,6 @@ pub use batch::{build_batch, Batch, BatchOptions};
 pub use engine::Engine;
 pub use grads::GradBuffer;
 pub use metrics::{CsvSink, StepMetrics};
+pub use prefix_cache::{reuse_ratio, CacheStats, PrefixCache};
 pub use planner::{BaselinePlan, PlanSpec, ShardedPlan, StepPlan};
 pub use tree_trainer::{GlobalPlan, TreeTrainer};

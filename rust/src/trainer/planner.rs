@@ -17,6 +17,7 @@
 
 use std::borrow::{Borrow, Cow};
 
+use crate::partition::affinity;
 use crate::partition::cost::{self, CostModel};
 use crate::partition::forest::{self, ForestBatch, RelaySchedule};
 use crate::partition::{greedy_pack, plan, Plan};
@@ -212,6 +213,15 @@ pub struct PlanSpec {
     /// calibrated model reprices from measured per-rank walls once warm
     /// (`cost_model: "calibrated"`).
     pub cost: CostModel,
+    /// Prefix-affine scheduling (docs/prefix_reuse.md): pack trees sharing
+    /// hot cross-tree prefixes into the same forest batch (and, sharded,
+    /// onto the same rank), ordering same-prefix work consecutively so the
+    /// engine-level activation cache hits across adjacent `step` calls.
+    /// Off (the default) takes the untouched seed planning path — plans
+    /// are bit-for-bit what they were before this knob existed.  Ignored
+    /// under hybrid chunk padding (pads break the slot/stream alignment
+    /// the cache keys on).
+    pub prefix_affinity: bool,
 }
 
 impl PlanSpec {
@@ -229,6 +239,7 @@ impl PlanSpec {
             partition_budget,
             forest_packing,
             cost: CostModel::Tokens,
+            prefix_affinity: false,
         }
     }
 
@@ -245,6 +256,7 @@ impl PlanSpec {
             partition_budget: None,
             forest_packing: true,
             cost: CostModel::Tokens,
+            prefix_affinity: false,
         }
     }
 
@@ -254,6 +266,19 @@ impl PlanSpec {
     pub fn with_cost_model(mut self, cost: CostModel) -> Self {
         self.cost = cost;
         self
+    }
+
+    /// Toggle prefix-affine scheduling (builder-style); off is the
+    /// seed-exact default.
+    pub fn with_prefix_affinity(mut self, on: bool) -> Self {
+        self.prefix_affinity = on;
+        self
+    }
+
+    /// Affinity is live only without hybrid chunk padding: pads break the
+    /// slot-index/prefix-stream alignment the activation cache keys on.
+    fn affine(&self) -> bool {
+        self.prefix_affinity && self.hybrid.is_none()
     }
 
     /// Chunk-pad a tree for hybrid models; borrows unchanged trees (no
@@ -288,11 +313,13 @@ impl PlanSpec {
     pub fn plan_tree<T: Borrow<TrajectoryTree>>(&self, trees: &[T]) -> crate::Result<GlobalPlan> {
         let mut metas = Vec::new();
         let mut meta_costs = Vec::new();
+        let mut fit_trees: Vec<&TrajectoryTree> = Vec::new();
         let mut plans = Vec::new();
+        let affine = self.affine();
         // price the FFD ordering only once a calibrated model is live —
         // the default (and any cold calibrated model) takes the exact
         // pack_forest path, so seed plans stay bit-identical
-        let price_packing = self.forest_packing && self.cost.active();
+        let price_packing = (self.forest_packing || affine) && self.cost.active();
         for tree in trees {
             let prepared = self.prepare(tree.borrow());
             if prepared.n_slots() <= self.capacity {
@@ -301,12 +328,37 @@ impl PlanSpec {
                     let feats = cost::tree_features(t, t.n_tree(), self.capacity);
                     meta_costs.push(self.cost.price(&feats, prepared.n_slots()));
                 }
+                if affine {
+                    fit_trees.push(tree.borrow());
+                }
                 metas.push(crate::tree::serialize(&prepared));
             } else {
                 plans.push(self.partition_tree(&prepared)?);
             }
         }
-        let forests = if self.forest_packing {
+        let forests = if affine {
+            // prefix-affine path: same-prefix trees co-locate in a bin (or
+            // in consecutive bins when a group overflows one), and members
+            // carry their prefix annotations for the activation cache
+            let idx = affinity::AffinityIndex::build(&fit_trees);
+            let sizes: Vec<usize> = metas.iter().map(|m| m.size()).collect();
+            let costs: &[usize] = if price_packing { &meta_costs } else { &sizes };
+            let mut fs = if self.forest_packing {
+                idx.affine_bins(&sizes, costs, self.capacity)?
+                    .into_iter()
+                    .map(|ids| forest::concat_metas(&metas, &ids, self.capacity, &self.opts))
+                    .collect::<crate::Result<Vec<_>>>()?
+            } else {
+                // one call per tree, but in group-major order so the cache
+                // still hits across the consecutive single-tree batches
+                idx.affine_order(costs)
+                    .into_iter()
+                    .map(|i| forest::concat_metas(&metas, &[i], self.capacity, &self.opts))
+                    .collect::<crate::Result<Vec<_>>>()?
+            };
+            affinity::annotate_members(&mut fs, &idx);
+            fs
+        } else if self.forest_packing {
             if price_packing {
                 forest::pack_forest_by_cost(&metas, &meta_costs, self.capacity, &self.opts)?
             } else {
@@ -371,25 +423,51 @@ impl PlanSpec {
     /// whole trees by packed (post-reuse, `n_tree`) token cost, then Forest
     /// Pack each rank independently.  `n_ranks == 1` is byte-identical to
     /// [`Self::plan_tree`] over the same trees.
+    ///
+    /// With [`Self::prefix_affinity`] on, whole *affine groups* are LPT-
+    /// sharded instead (summed member cost), so trees sharing a prefix
+    /// never split across ranks and each rank's activation cache sees its
+    /// whole group.
     pub fn plan_sharded_tree<T: Borrow<TrajectoryTree>>(
         &self,
         trees: &[T],
         n_ranks: usize,
     ) -> crate::Result<ShardedPlan> {
-        self.plan_sharded(trees, n_ranks, |t| t.n_tree(), |rt| {
+        self.plan_sharded(trees, n_ranks, self.affine(), |t| self.tree_base_cost(t), |rt| {
             Ok(StepPlan::Tree(self.plan_tree(rt)?))
         })
     }
 
+    /// Base sharding cost of one tree-mode tree.  A tree that fits the
+    /// `step` capacity prices its packed (post-reuse) `n_tree`.  An
+    /// oversized tree takes the partition-relay path *on whatever rank owns
+    /// it* — whole-tree sharding already pins the relay calls there — so it
+    /// prices the device slots those calls will actually occupy (estimated
+    /// call count × partition capacity, each call a full padded program
+    /// invocation).  This closes the ROADMAP item-5 leftover: relay work
+    /// rides the same [`CostModel`] seam, and LPT charges the owning rank
+    /// for the calls pinned to it instead of undercounting them as raw
+    /// tree tokens.
+    fn tree_base_cost(&self, t: &TrajectoryTree) -> usize {
+        match self.part_caps {
+            Some((pc, _)) if t.n_slots() > self.capacity => {
+                let budget = self.partition_budget.unwrap_or(pc).min(pc);
+                t.n_slots().div_ceil(budget).max(1) * pc
+            }
+            _ => t.n_tree(),
+        }
+    }
+
     /// Baseline counterpart of [`Self::plan_sharded_tree`]: the sep-avg
     /// baseline pays flattened tokens, so ranks are balanced on `n_flat` —
-    /// the load a linearizing trainer would actually execute.
+    /// the load a linearizing trainer would actually execute.  Affinity
+    /// never applies: linearized chains share no packed prefixes.
     pub fn plan_sharded_baseline<T: Borrow<TrajectoryTree>>(
         &self,
         trees: &[T],
         n_ranks: usize,
     ) -> crate::Result<ShardedPlan> {
-        self.plan_sharded(trees, n_ranks, |t| t.n_flat(), |rt| {
+        self.plan_sharded(trees, n_ranks, false, |t| t.n_flat(), |rt| {
             Ok(StepPlan::Baseline(self.plan_baseline(rt)?))
         })
     }
@@ -398,6 +476,7 @@ impl PlanSpec {
         &self,
         trees: &[T],
         n_ranks: usize,
+        affine: bool,
         base_cost: impl Fn(&TrajectoryTree) -> usize,
         plan_rank: impl Fn(&[&TrajectoryTree]) -> crate::Result<StepPlan>,
     ) -> crate::Result<ShardedPlan> {
@@ -416,7 +495,13 @@ impl PlanSpec {
             .zip(&feats)
             .map(|(t, f)| self.cost.price(f, base_cost(t.borrow())))
             .collect();
-        let shards = forest::shard_by_cost(&costs, n_ranks)?;
+        let shards = if affine {
+            let borrowed: Vec<&TrajectoryTree> = trees.iter().map(|t| t.borrow()).collect();
+            let idx = affinity::AffinityIndex::build(&borrowed);
+            affinity::shard_affine(&idx, &costs, n_ranks)?
+        } else {
+            forest::shard_by_cost(&costs, n_ranks)?
+        };
         let mut ranks = Vec::with_capacity(n_ranks);
         let mut rank_feats = Vec::with_capacity(n_ranks);
         for ids in &shards.ranks {
@@ -606,6 +691,117 @@ mod tests {
         // ranks must balance to 3 trees per rank
         let counts: Vec<f64> = p.rank_feats.iter().map(|f| f[3]).collect();
         assert_eq!(counts, vec![3.0, 3.0, 3.0], "call-count law balances tree counts");
+    }
+
+    fn prefixed(group: i32, leaf_seed: i32, prefix_len: usize) -> TrajectoryTree {
+        use crate::tree::NodeSpec;
+        let prefix: Vec<i32> = (0..prefix_len as i32).map(|k| group * 7 + k % 5 + 1).collect();
+        TrajectoryTree::new(vec![
+            NodeSpec::new(-1, prefix),
+            NodeSpec::new(0, vec![leaf_seed, leaf_seed + 1, leaf_seed + 2]),
+            NodeSpec::new(0, vec![leaf_seed + 3, leaf_seed + 4]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn affinity_packs_same_prefix_trees_together_and_annotates() {
+        // 17 slots per tree; capacity 35 fits exactly two, so plain FFD
+        // would pair input-adjacent trees — affinity must pair by prefix
+        let trees = vec![
+            prefixed(1, 10, 12),
+            prefixed(2, 20, 12),
+            prefixed(1, 30, 12),
+            prefixed(2, 40, 12),
+        ];
+        let sp = spec(35).with_prefix_affinity(true);
+        let p = sp.plan_tree(&trees).unwrap();
+        assert_eq!(p.tree_tokens, trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        let forest_of = |src: usize| {
+            p.forests
+                .iter()
+                .position(|f| f.members.iter().any(|m| m.source == src))
+                .unwrap()
+        };
+        assert_eq!(forest_of(0), forest_of(2), "group 1 co-locates");
+        assert_eq!(forest_of(1), forest_of(3), "group 2 co-locates");
+        assert_ne!(forest_of(0), forest_of(1));
+        for f in &p.forests {
+            for m in &f.members {
+                assert_eq!(m.prefix_len, 12, "shared root chain annotated");
+                assert_ne!(m.prefix_sig, 0);
+            }
+        }
+        // reproducible batch-for-batch
+        let q = sp.plan_tree(&trees).unwrap();
+        for (a, b) in p.forests.iter().zip(&q.forests) {
+            assert_eq!(a.batch, b.batch);
+        }
+    }
+
+    #[test]
+    fn affinity_without_packing_orders_group_major() {
+        let trees = vec![prefixed(1, 10, 8), prefixed(2, 20, 8), prefixed(1, 30, 8)];
+        let mut sp = spec(64).with_prefix_affinity(true);
+        sp.forest_packing = false;
+        let p = sp.plan_tree(&trees).unwrap();
+        assert_eq!(p.forests.len(), 3, "one call per tree without packing");
+        let order: Vec<usize> = p.forests.iter().map(|f| f.members[0].source).collect();
+        // group {0, 2} (2 trees) outweighs singleton {1}
+        assert_eq!(order, vec![0, 2, 1]);
+        assert_eq!(p.forests[0].members[0].prefix_len, 8);
+        assert_eq!(p.forests[2].members[0].prefix_len, 0, "loner carries no annotation");
+    }
+
+    #[test]
+    fn affine_sharding_keeps_groups_rank_local_and_reproducible() {
+        let trees = vec![
+            prefixed(1, 10, 16),
+            prefixed(2, 20, 16),
+            prefixed(1, 30, 16),
+            prefixed(2, 40, 16),
+            prefixed(3, 50, 16),
+            prefixed(3, 60, 16),
+        ];
+        let sp = spec(128).with_prefix_affinity(true);
+        let p = sp.plan_sharded_tree(&trees, 3).unwrap();
+        assert_eq!(p.tree_tokens(), trees.iter().map(|t| t.n_tree()).sum::<usize>());
+        // three equal-cost groups over three ranks: one whole group each
+        assert_eq!(p.rank_imbalance(), 1.0);
+        let per_group = trees[0].n_tree() * 2;
+        for r in &p.ranks {
+            assert_eq!(r.tree_tokens(), per_group, "each rank owns exactly one group");
+        }
+        let q = sp.plan_sharded_tree(&trees, 3).unwrap();
+        assert_eq!(p.loads, q.loads);
+        for (x, y) in p.ranks.iter().zip(&q.ranks) {
+            let (StepPlan::Tree(px), StepPlan::Tree(py)) = (x, y) else { panic!("tree mode") };
+            for (fx, fy) in px.forests.iter().zip(&py.forests) {
+                assert_eq!(fx.batch, fy.batch);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_trees_price_their_relay_calls_when_sharding() {
+        let small: Vec<TrajectoryTree> = (0..3).map(|s| gen::uniform(90 + s, 8, 4, 0.5)).collect();
+        let big = gen::with_target_por(3, 0.6, 4, 600, 24, 128);
+        let mut sp = spec(256);
+        sp.part_caps = Some((128, 1024)); // ample gateway rows: deep cuts carry per-token ancestors
+        assert!(big.n_slots() > sp.capacity, "fixture must exceed step capacity");
+        let mut trees = small.clone();
+        trees.push(big.clone());
+        let p = sp.plan_sharded_tree(&trees, 2).unwrap();
+        // the oversized tree prices its relay footprint (calls x partition
+        // capacity), not raw tokens, so LPT charges the owning rank for
+        // the partition calls pinned there
+        let expect_big = big.n_slots().div_ceil(128).max(1) * 128;
+        let expect: usize = small.iter().map(|t| t.n_tree()).sum::<usize>() + expect_big;
+        assert_eq!(p.loads.iter().sum::<usize>(), expect);
+        assert!(*p.loads.iter().max().unwrap() >= expect_big);
+        // without partition programs the base cost is untouched seed n_tree
+        let host = spec(4096).plan_sharded_tree(&small, 2).unwrap();
+        assert_eq!(host.loads.iter().sum::<usize>(), small.iter().map(|t| t.n_tree()).sum());
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Trie-keyed LRU cache of prefix forward activations: the engine tier of
+//! cross-step prefix reuse (docs/prefix_reuse.md).
+//!
+//! Entries are keyed by `(prefix_sig, prefix_len)` — the FNV-1a fingerprint
+//! and exact slot length stamped onto [`crate::partition::forest::ForestMember`]s
+//! by the affinity pass.  The *exact-length* rule is deliberate: a member
+//! annotated with a 96-token shared prefix only ever looks up the 96-token
+//! entry, never a nested 64-token one, so a hit always covers precisely the
+//! slots whose from-scratch forward is bit-reproducible (the root-chain
+//! invariant proven in `tests/prefix_reuse_equivalence.rs`).
+//!
+//! The staleness-correctness contract is one line: [`PrefixCache::set_version`]
+//! **clears the whole cache whenever the parameter version changes**, and
+//! the engine bumps its version on every Eq. 5 optimizer update — so no
+//! entry ever crosses an optimizer step, and "cache on" is bit-identical to
+//! "cache off" by construction rather than by tolerance.  Within one
+//! optimizer step the parameters are frozen, so reuse across the step's
+//! many `step` program calls (the cross-*step* in the ISSUE title) is safe.
+//!
+//! The payload is generic: the host `RefModel` path stores real attention
+//! rows ([`crate::trainer::refmodel::PrefixActs`]); the XLA `Engine` keeps
+//! an accounting-only `PrefixCache<()>` until a prefix-resume program
+//! export lands (docs/prefix_reuse.md "Engine path").  Eviction is LRU by
+//! a strictly monotone clock under a token budget, so the victim is always
+//! unique and the cache state is deterministic run-to-run.
+
+use std::collections::HashMap;
+
+/// Per-step cache counters, drained into `StepMetrics` via [`CacheStats::take`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a live entry.
+    pub hits: u64,
+    /// Lookups that found nothing (annotated members only).
+    pub misses: u64,
+    /// Prefix slots served from cache instead of recomputed.
+    pub hit_tokens: u64,
+    /// Entries dropped by LRU pressure (version clears are not evictions).
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Drain: return the accumulated counters and reset to zero — the same
+    /// idiom as `CorpusSource::take_ingest_ms`.
+    pub fn take(&mut self) -> CacheStats {
+        std::mem::take(self)
+    }
+
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.hit_tokens += other.hit_tokens;
+        self.evictions += other.evictions;
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    payload: T,
+    tokens: usize,
+    stamp: u64,
+}
+
+/// LRU prefix-activation cache under a token budget (`0` = disabled: every
+/// lookup misses silently and inserts are dropped, so a zero-budget cache
+/// is free to thread through call sites unconditionally).
+#[derive(Debug, Clone)]
+pub struct PrefixCache<T> {
+    budget_tokens: usize,
+    version: u64,
+    clock: u64,
+    used_tokens: usize,
+    map: HashMap<(u64, usize), Entry<T>>,
+    stats: CacheStats,
+}
+
+impl<T> PrefixCache<T> {
+    pub fn new(budget_tokens: usize) -> Self {
+        Self {
+            budget_tokens,
+            version: 0,
+            clock: 0,
+            used_tokens: 0,
+            map: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_tokens > 0
+    }
+
+    pub fn budget_tokens(&self) -> usize {
+        self.budget_tokens
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.used_tokens
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The staleness contract: entries are valid for exactly one parameter
+    /// version.  Any version change drops everything (not counted as
+    /// eviction — invalidation is correctness, eviction is capacity).
+    pub fn set_version(&mut self, version: u64) {
+        if version != self.version {
+            self.map.clear();
+            self.used_tokens = 0;
+            self.version = version;
+        }
+    }
+
+    /// Exact-key lookup; a hit refreshes the LRU stamp and counts
+    /// `prefix_len` slots as served-from-cache.
+    pub fn lookup(&mut self, sig: u64, prefix_len: usize) -> Option<&T> {
+        if !self.enabled() || prefix_len == 0 {
+            return None;
+        }
+        self.clock += 1;
+        match self.map.get_mut(&(sig, prefix_len)) {
+            Some(e) => {
+                e.stamp = self.clock;
+                self.stats.hits += 1;
+                self.stats.hit_tokens += prefix_len as u64;
+                Some(&e.payload)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert under the current version, evicting strictly-least-recently
+    /// used entries until the token budget holds.  Oversized payloads
+    /// (`prefix_len > budget`) are dropped — never evict the whole cache
+    /// for an entry that can't fit anyway.
+    pub fn insert(&mut self, sig: u64, prefix_len: usize, payload: T) {
+        if !self.enabled() || prefix_len == 0 || prefix_len > self.budget_tokens {
+            return;
+        }
+        if let Some(old) = self.map.remove(&(sig, prefix_len)) {
+            self.used_tokens -= old.tokens;
+        }
+        while self.used_tokens + prefix_len > self.budget_tokens {
+            // clock stamps are unique, so the LRU victim is deterministic
+            let victim = *self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k)
+                .expect("used_tokens > 0 implies entries");
+            let e = self.map.remove(&victim).unwrap();
+            self.used_tokens -= e.tokens;
+            self.stats.evictions += 1;
+        }
+        self.clock += 1;
+        self.used_tokens += prefix_len;
+        self.map.insert((sig, prefix_len), Entry { payload, tokens: prefix_len, stamp: self.clock });
+    }
+
+    /// Count a *within-batch alias* as a hit: a co-located member whose
+    /// prefix rows were copied from an earlier member of the same batch
+    /// rather than from a stored entry (docs/prefix_reuse.md).  No map
+    /// traffic — the reuse is real (the rows were not recomputed) but the
+    /// payload never round-trips through the cache.
+    pub fn count_alias(&mut self, prefix_len: usize) {
+        if self.enabled() && prefix_len > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += prefix_len as u64;
+        }
+    }
+
+    /// Drain the per-step counters (the `ingest_ms` drain idiom).
+    pub fn take_stats(&mut self) -> CacheStats {
+        self.stats.take()
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+}
+
+/// `xstep_reuse_ratio`: total prefix-forest tokens over tokens actually
+/// computed, `T / (T - H)` — `1.0` with no cache hits, `> 1.0` once any
+/// prefix slot is served from cache (the cross-step analogue of the
+/// paper's per-batch reuse ratio).
+pub fn reuse_ratio(total_tokens: u64, hit_tokens: u64) -> f64 {
+    if total_tokens == 0 || hit_tokens >= total_tokens {
+        return 1.0;
+    }
+    total_tokens as f64 / (total_tokens - hit_tokens) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(0);
+        c.insert(1, 4, 7);
+        assert_eq!(c.lookup(1, 4), None);
+        assert_eq!(c.take_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn hit_after_insert_and_stats_drain() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(100);
+        assert_eq!(c.lookup(5, 10), None); // cold miss
+        c.insert(5, 10, 42);
+        assert_eq!(c.lookup(5, 10), Some(&42));
+        let s = c.take_stats();
+        assert_eq!((s.hits, s.misses, s.hit_tokens, s.evictions), (1, 1, 10, 0));
+        assert_eq!(*c.stats(), CacheStats::default(), "drained");
+    }
+
+    #[test]
+    fn exact_length_rule_no_nested_hits() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(100);
+        c.insert(5, 10, 1);
+        assert_eq!(c.lookup(5, 6), None, "shorter prefix of same sig is a different key");
+    }
+
+    #[test]
+    fn version_change_clears_without_counting_evictions() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(100);
+        c.insert(1, 10, 1);
+        c.set_version(1);
+        assert!(c.is_empty());
+        assert_eq!(c.lookup(1, 10), None);
+        assert_eq!(c.take_stats().evictions, 0);
+        // same version again is a no-op
+        c.insert(1, 10, 2);
+        c.set_version(1);
+        assert_eq!(c.lookup(1, 10), Some(&2));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_under_budget() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(25);
+        c.insert(1, 10, 1);
+        c.insert(2, 10, 2);
+        assert_eq!(c.lookup(1, 10), Some(&1)); // refresh 1; 2 is now LRU
+        c.insert(3, 10, 3); // 20 + 10 > 25: evict 2
+        assert_eq!(c.lookup(2, 10), None);
+        assert_eq!(c.lookup(1, 10), Some(&1));
+        assert_eq!(c.lookup(3, 10), Some(&3));
+        assert_eq!(c.take_stats().evictions, 1);
+        assert!(c.used_tokens() <= 25);
+    }
+
+    #[test]
+    fn oversized_entry_is_dropped_not_thrashed() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(8);
+        c.insert(1, 4, 1);
+        c.insert(2, 9, 2); // exceeds the whole budget
+        assert_eq!(c.lookup(1, 4), Some(&1), "existing entries survive");
+        assert_eq!(c.lookup(2, 9), None);
+        assert_eq!(c.take_stats().evictions, 0);
+    }
+
+    #[test]
+    fn alias_counts_as_hit_without_map_traffic() {
+        let mut c: PrefixCache<u32> = PrefixCache::new(100);
+        c.count_alias(8);
+        assert!(c.is_empty(), "aliases never insert");
+        let s = c.take_stats();
+        assert_eq!((s.hits, s.misses, s.hit_tokens), (1, 0, 8));
+        let mut off: PrefixCache<u32> = PrefixCache::new(0);
+        off.count_alias(8);
+        assert_eq!(off.take_stats(), CacheStats::default(), "disabled cache stays inert");
+    }
+
+    #[test]
+    fn reuse_ratio_definition() {
+        assert_eq!(reuse_ratio(0, 0), 1.0);
+        assert_eq!(reuse_ratio(100, 0), 1.0);
+        assert_eq!(reuse_ratio(100, 50), 2.0);
+        assert_eq!(reuse_ratio(100, 100), 1.0, "degenerate full-hit clamps");
+    }
+}

@@ -24,10 +24,12 @@
 //! (`rust/tests/forest_equivalence.rs`).  The XLA-level analog of the same
 //! property is checked by the `#[ignore]`d artifact tests.
 
+use crate::partition::forest::ForestBatch;
 use crate::tree::dfs::NEG_INF;
 use crate::util::rng::Rng;
 
 use super::batch::Batch;
+use super::prefix_cache::PrefixCache;
 
 /// `Clone` replicates the full parameter state — the hermetic analog of
 /// [`super::Engine::replicate`] for per-rank executor workers.
@@ -47,6 +49,46 @@ pub struct RefStep {
     pub per_token_loss: Vec<f64>,
     /// f64 gradient of `loss_sum` w.r.t. the embedding table.
     pub d_embed: Vec<f64>,
+}
+
+/// Cached attention-forward rows for one shared prefix region, stored
+/// member-local (key indices relative to the member's first slot) so the
+/// same entry replays at any slot offset in any later forest batch.
+///
+/// Why copying these rows is *bit-identical* to recomputing them: a shared
+/// root-chain slot `i` (member-local, `i < prefix_len`) has
+/// `q_exit = k_exit =` the member end for the whole chain, so its visible
+/// key set is exactly the member-local slots `j <= i`; scores depend only
+/// on the prefix tokens, their depth positions and the (step-frozen)
+/// embedding table, never on the slot offset; and the softmax/output loops
+/// iterate keys in the same ascending-`j` order.  Same inputs, same f64
+/// ops, same order — same bits (docs/prefix_reuse.md, proven end-to-end by
+/// `tests/prefix_reuse_equivalence.rs`).
+#[derive(Debug, Clone)]
+pub struct PrefixActs {
+    /// Attention output rows, `[prefix_len * dim]`.
+    pub o: Vec<f64>,
+    /// Softmax rows with member-local key indices, one per prefix slot.
+    pub probs: Vec<Vec<(usize, f64)>>,
+}
+
+/// A resolved cache hit: region `[offset, offset + acts.probs.len())`
+/// copies its forward rows from `acts` instead of recomputing.
+struct PrefixHit {
+    offset: usize,
+    acts: PrefixActs,
+}
+
+/// A within-batch alias: the member at `dst` carries the same shared prefix
+/// as the (earlier, `src < dst`) member at `src`, so its first `len` rows
+/// copy from `src`'s already-computed rows — the compute-once payoff of
+/// forest co-location, when the affinity packer lands a whole prefix group
+/// in one batch.  Bit-identity holds by the same root-chain argument as
+/// [`PrefixActs`]: both regions see only their own member-local prefix.
+struct PrefixAlias {
+    dst: usize,
+    src: usize,
+    len: usize,
 }
 
 impl RefModel {
@@ -73,6 +115,90 @@ impl RefModel {
 
     /// Run one reference step over a (gateway-free) batch.
     pub fn step(&self, batch: &Batch) -> crate::Result<RefStep> {
+        self.step_full(batch, &[], &[]).map(|(s, _, _)| s)
+    }
+
+    /// [`Self::step`] over a packed forest batch with a prefix-activation
+    /// cache: members annotated by the affinity pass look up their shared
+    /// prefix rows by `(prefix_sig, prefix_len)`; hits copy the rows, cold
+    /// prefixes compute normally and insert for the next batch.  With a
+    /// disabled (zero-budget) cache this is exactly [`Self::step`].
+    pub fn step_cached(
+        &self,
+        fb: &ForestBatch,
+        cache: &mut PrefixCache<PrefixActs>,
+    ) -> crate::Result<RefStep> {
+        let mut hits: Vec<PrefixHit> = Vec::new();
+        let mut aliases: Vec<PrefixAlias> = Vec::new();
+        let mut misses: Vec<(u64, usize, usize)> = Vec::new(); // (sig, len, offset)
+        if cache.enabled() {
+            // first member of each fingerprint in this batch (members come
+            // in ascending slot_offset order from concat_metas)
+            let mut first: std::collections::HashMap<(u64, usize), usize> =
+                std::collections::HashMap::new();
+            for m in &fb.members {
+                if m.prefix_len == 0 {
+                    continue;
+                }
+                match first.entry((m.prefix_sig, m.prefix_len)) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        // co-located duplicate: serve from the earlier
+                        // member's rows in this very batch
+                        aliases.push(PrefixAlias {
+                            dst: m.slot_offset,
+                            src: *e.get(),
+                            len: m.prefix_len,
+                        });
+                        cache.count_alias(m.prefix_len);
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(m.slot_offset);
+                        match cache.lookup(m.prefix_sig, m.prefix_len) {
+                            Some(a) => {
+                                hits.push(PrefixHit { offset: m.slot_offset, acts: a.clone() })
+                            }
+                            None => misses.push((m.prefix_sig, m.prefix_len, m.slot_offset)),
+                        }
+                    }
+                }
+            }
+        }
+        let (out, o, probs) = self.step_full(&fb.batch, &hits, &aliases)?;
+        let d = self.dim;
+        for (sig, len, off) in misses {
+            let acts = PrefixActs {
+                o: o[off * d..(off + len) * d].to_vec(),
+                probs: (0..len)
+                    .map(|i| {
+                        probs[off + i]
+                            .iter()
+                            .map(|&(j, p)| {
+                                debug_assert!(
+                                    j >= off && j < off + len,
+                                    "prefix row attends outside its region"
+                                );
+                                (j - off, p)
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            };
+            cache.insert(sig, len, acts);
+        }
+        Ok(out)
+    }
+
+    /// Forward + backward over a batch, with optional cache-hit and
+    /// within-batch alias regions whose attention rows are copied instead
+    /// of recomputed.  Returns the step outputs plus the attention rows
+    /// (`o`, `probs`) so [`Self::step_cached`] can harvest cold prefixes.
+    /// With no hits/aliases this is the seed step computation, op for op.
+    fn step_full(
+        &self,
+        batch: &Batch,
+        hits: &[PrefixHit],
+        aliases: &[PrefixAlias],
+    ) -> crate::Result<(RefStep, Vec<f64>, Vec<Vec<(usize, f64)>>)> {
         anyhow::ensure!(
             batch.past_len == 0,
             "RefModel::step covers gateway-free batches (past_len = 0)"
@@ -97,9 +223,36 @@ impl RefModel {
         let visible = |i: usize, j: usize| -> bool {
             batch.k_order[j] <= i as i32 && batch.k_exit[j] >= batch.q_exit[i]
         };
+        // slot -> cache hit covering it (regions never overlap: one member,
+        // one prefix annotation)
+        let hit_of = |i: usize| -> Option<(&PrefixHit, usize)> {
+            hits.iter()
+                .find(|h| i >= h.offset && i < h.offset + h.acts.probs.len())
+                .map(|h| (h, i - h.offset))
+        };
+        let alias_of = |i: usize| -> Option<(&PrefixAlias, usize)> {
+            aliases.iter().find(|a| i >= a.dst && i < a.dst + a.len).map(|a| (a, i - a.dst))
+        };
         let mut probs: Vec<Vec<(usize, f64)>> = Vec::with_capacity(c);
         let mut o = vec![0.0f64; c * d];
         for i in 0..c {
+            if let Some((h, li)) = hit_of(i) {
+                // copy the cached rows (bit-identical to recomputing: see
+                // PrefixActs docs); keys rebase to this member's offset
+                o[i * d..(i + 1) * d].copy_from_slice(&h.acts.o[li * d..(li + 1) * d]);
+                probs.push(h.acts.probs[li].iter().map(|&(j, p)| (j + h.offset, p)).collect());
+                continue;
+            }
+            if let Some((a, li)) = alias_of(i) {
+                // copy the co-located member's rows, already computed this
+                // batch (src < dst, slots ascend); keys rebase by the
+                // offset delta
+                let si = a.src + li;
+                debug_assert!(si < i, "alias source must precede its copy");
+                o.copy_within(si * d..(si + 1) * d, i * d);
+                probs.push(probs[si].iter().map(|&(j, p)| (j + (a.dst - a.src), p)).collect());
+                continue;
+            }
             let qi = &x[i * d..(i + 1) * d];
             let mut entries: Vec<(usize, f64)> = Vec::new();
             let mut m = f64::NEG_INFINITY;
@@ -201,7 +354,7 @@ impl RefModel {
             }
         }
 
-        Ok(RefStep { loss_sum, weight_sum, per_token_loss, d_embed })
+        Ok((RefStep { loss_sum, weight_sum, per_token_loss, d_embed }, o, probs))
     }
 }
 
@@ -266,6 +419,51 @@ mod tests {
                 "coord {probe}: numeric {numeric} vs analytic {analytic}"
             );
         }
+    }
+
+    #[test]
+    fn cached_forest_step_matches_uncached_bitwise() {
+        use crate::partition::affinity::{annotate_members, AffinityIndex};
+        use crate::partition::forest::concat_metas;
+        use crate::trainer::prefix_cache::PrefixCache;
+        use crate::tree::{NodeSpec, TrajectoryTree};
+        let mk = |leaf: i32| {
+            TrajectoryTree::new(vec![
+                NodeSpec::new(-1, vec![3, 1, 4, 1, 5, 9, 2, 6]),
+                NodeSpec::new(0, vec![leaf, leaf + 1]),
+                NodeSpec::new(0, vec![leaf + 2]),
+            ])
+            .unwrap()
+        };
+        let trees = vec![mk(10), mk(20)];
+        let metas: Vec<_> = trees.iter().map(serialize).collect();
+        let idx = AffinityIndex::build(&trees);
+        let cap = metas.iter().map(|m| m.size()).sum::<usize>() + 3;
+        let mut fb = concat_metas(&metas, &[0, 1], cap, &BatchOptions::default()).unwrap();
+        annotate_members(std::slice::from_mut(&mut fb), &idx);
+        assert!(fb.members.iter().all(|m| m.prefix_len == 8 && m.prefix_sig != 0));
+        let rm = model();
+        let plain = rm.step(&fb.batch).unwrap();
+        let mut cache = PrefixCache::new(1 << 16);
+        // both members carry the same fingerprint, so even the cold pass
+        // computes the prefix once: member 0 misses + inserts, member 1
+        // aliases member 0's rows within the batch
+        let cold = rm.step_cached(&fb, &mut cache).unwrap();
+        let warm = rm.step_cached(&fb, &mut cache).unwrap(); // cache hit + alias
+        for out in [&cold, &warm] {
+            assert_eq!(out.loss_sum.to_bits(), plain.loss_sum.to_bits());
+            assert_eq!(out.weight_sum.to_bits(), plain.weight_sum.to_bits());
+            assert_eq!(out.per_token_loss.len(), plain.per_token_loss.len());
+            assert!(out
+                .d_embed
+                .iter()
+                .zip(&plain.d_embed)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        let s = cache.take_stats();
+        assert_eq!((s.hits, s.misses), (3, 1), "cold: 1 miss + 1 alias; warm: 1 hit + 1 alias");
+        assert_eq!(s.hit_tokens, 24);
+        assert_eq!(cache.len(), 1, "one stored entry serves the whole group");
     }
 
     #[test]

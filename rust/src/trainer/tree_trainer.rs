@@ -49,6 +49,10 @@ pub struct TreeTrainer {
     /// Cross-tree Forest Packing of whole trees and partition specs.
     /// On by default; off reproduces the seed's one-call-per-tree path.
     pub forest_packing: bool,
+    /// Prefix-affine scheduling (docs/prefix_reuse.md): co-locate and
+    /// group-major-order same-prefix trees so the prefix cache sees them
+    /// back-to-back.  Off by default — the seed plans, bit-for-bit.
+    pub prefix_affinity: bool,
 }
 
 impl TreeTrainer {
@@ -57,6 +61,7 @@ impl TreeTrainer {
             engine: Engine::new(rt, model, opt_cfg)?,
             partition_budget: None,
             forest_packing: true,
+            prefix_affinity: false,
         })
     }
 
@@ -68,6 +73,7 @@ impl TreeTrainer {
             engine: self.engine.replicate()?,
             partition_budget: self.partition_budget,
             forest_packing: self.forest_packing,
+            prefix_affinity: self.prefix_affinity,
         })
     }
 
@@ -85,6 +91,7 @@ impl TreeTrainer {
     /// while this trainer executes batch N.
     pub fn plan_spec(&self) -> PlanSpec {
         PlanSpec::from_engine(&self.engine, self.partition_budget, self.forest_packing)
+            .with_prefix_affinity(self.prefix_affinity)
     }
 
     /// Plan the whole global batch as packed device batches (§3.4: each
@@ -98,6 +105,16 @@ impl TreeTrainer {
     pub fn run_plan(&self, plan: &GlobalPlan, gb: &mut GradBuffer) -> crate::Result<usize> {
         let mut device_tokens = 0usize;
         for fb in &plan.forests {
+            // cross-step prefix accounting: members annotated by the
+            // affinity pass check the engine's fingerprint cache before the
+            // step call, surfacing reuse headroom without changing any bit
+            if self.engine.prefix_cache_enabled() {
+                for m in &fb.members {
+                    if m.prefix_len > 0 {
+                        self.engine.note_prefix(m.prefix_sig, m.prefix_len);
+                    }
+                }
+            }
             self.engine.run_step_into(&fb.batch, gb)?;
             device_tokens += fb.batch.capacity;
         }
@@ -289,6 +306,7 @@ impl TreeTrainer {
         let t0 = Instant::now();
         let mut gb = self.engine.grad_buffer();
         let device_tokens = self.run_plan(plan, &mut gb)?;
+        let cache = self.engine.take_cache_stats();
         let grad_norm = self.engine.apply_update(&gb)?;
         Ok(StepMetrics {
             step: self.engine.step_count(),
@@ -313,6 +331,12 @@ impl TreeTrainer {
             staleness_steps: 0,
             ripe_queue_depth: 0,
             admitted_sessions: 0,
+            xstep_reuse_ratio: super::prefix_cache::reuse_ratio(
+                plan.tree_tokens as u64,
+                cache.hit_tokens,
+            ),
+            cache_hit_tokens: cache.hit_tokens,
+            cache_evictions: cache.evictions,
         })
     }
 

@@ -117,6 +117,46 @@ pub fn with_target_por(
     reorder_preorder(nodes)
 }
 
+/// Graft a shared root-prefix chain ahead of `tree` — the synthetic analog
+/// of a hot system prompt / repo context that many independent rollouts
+/// open with.  The chain is `prefix_len` untrained tokens generated from
+/// `group_seed` alone (split into `node_len`-token nodes), so every tree
+/// grafted with the same `(group_seed, prefix_len, node_len, vocab)` carries
+/// a byte-identical prefix — exactly what the cross-step affinity pass
+/// fingerprints and the prefix cache reuses (docs/prefix_reuse.md;
+/// `gen-data --hot-prefixes`).  The original tree rides below, its root
+/// re-parented to the chain tail and all parent links shifted.
+pub fn graft_prefix(
+    tree: &TrajectoryTree,
+    group_seed: u64,
+    prefix_len: usize,
+    node_len: usize,
+    vocab: i32,
+) -> TrajectoryTree {
+    assert!(prefix_len >= 1 && node_len >= 1);
+    let mut r = rng(group_seed);
+    let mut state = r.i32(0, vocab);
+    let mut nodes: Vec<NodeSpec> = Vec::new();
+    let mut parent = -1i32;
+    let mut left = prefix_len;
+    while left > 0 {
+        let l = left.min(node_len);
+        let seg = markov_segments(&mut r, vocab, l, &mut state);
+        let n = seg.len();
+        // untrained: shared context is environment input, never supervised
+        nodes.push(NodeSpec::new(parent, seg).with_trainable(vec![0.0; n]));
+        parent = (nodes.len() - 1) as i32;
+        left -= l;
+    }
+    let shift = nodes.len() as i32;
+    for nd in &tree.nodes {
+        let mut nd = nd.clone();
+        nd.parent = if nd.parent < 0 { shift - 1 } else { nd.parent + shift };
+        nodes.push(nd);
+    }
+    TrajectoryTree::new(nodes).expect("graft preserves preorder")
+}
+
 /// Overlap regimes of the paper's Fig. 6 rollouts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Overlap {
@@ -278,6 +318,30 @@ mod tests {
             let m = super::super::dfs::serialize(&t);
             assert_eq!(m.size(), t.n_slots());
         }
+    }
+
+    #[test]
+    fn grafted_prefix_is_shared_and_untrained() {
+        let a = graft_prefix(&agentic(1, Overlap::Medium, 6, 256), 99, 96, 24, 256);
+        let b = graft_prefix(&agentic(2, Overlap::Medium, 6, 256), 99, 96, 24, 256);
+        let c = graft_prefix(&agentic(1, Overlap::Medium, 6, 256), 7, 96, 24, 256);
+        // same group seed -> byte-identical 96-token chain, zero supervision
+        let chain = |t: &TrajectoryTree| -> Vec<i32> {
+            let mut toks = Vec::new();
+            let mut i = 0usize;
+            while toks.len() < 96 {
+                assert!(t.nodes[i].trainable.iter().all(|&w| w == 0.0));
+                toks.extend_from_slice(&t.nodes[i].tokens);
+                i += 1;
+            }
+            toks.truncate(96);
+            toks
+        };
+        assert_eq!(chain(&a), chain(&b));
+        assert_ne!(chain(&a), chain(&c), "different groups diverge");
+        // the body rides intact: unique tokens grew by exactly the prefix
+        assert_eq!(a.n_tree(), agentic(1, Overlap::Medium, 6, 256).n_tree() + 96);
+        assert_eq!(a.num_paths(), agentic(1, Overlap::Medium, 6, 256).num_paths());
     }
 
     #[test]

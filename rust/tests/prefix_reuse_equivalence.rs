@@ -1,0 +1,313 @@
+//! Cross-step prefix reuse: the docs/prefix_reuse.md contracts.
+//!
+//! Two tiers, three properties:
+//!
+//! * **Schedule** (`prefix_affinity`): off must reproduce the seed planner
+//!   bit-for-bit; on must co-locate affine groups (same forest batch, same
+//!   rank) while training the exact same data — losses match the seed
+//!   within f64 reassociation tolerance only.
+//! * **Engine** (`PrefixCache`): cache on ≡ cache off **bit-identical**
+//!   within every optimizer step (rows are spliced, no f64 op changes),
+//!   and every optimizer update hard-invalidates — no entry ever crosses a
+//!   parameter version.
+//! * **Determinism**: affinity ∘ sharding ∘ caching replays bit-for-bit
+//!   run-to-run.
+//!
+//! Execution is the pure-f64 [`RefModel`]-backed [`HostExecutor`] so every
+//! property runs hermetically (no PJRT, no artifacts).
+
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::coordinator::Mode;
+use tree_train::data::ResidentSource;
+use tree_train::partition::affinity::{annotate_members, AffinityIndex};
+use tree_train::partition::forest::{concat_metas, pack_forest};
+use tree_train::trainer::refmodel::RefModel;
+use tree_train::trainer::{BatchOptions, PlanSpec, PrefixCache, StepMetrics, StepPlan};
+use tree_train::tree::{gen, serialize, NodeSpec, TrajectoryTree};
+
+const VOCAB: usize = 64;
+const CAPACITY: usize = 256;
+
+/// Hot-prefix corpus: `n` small uniform trees cycled through `groups`
+/// shared grafted prefixes (the `gen-data --hot-prefixes` shape).
+fn hot_corpus(n: usize, groups: usize, prefix_len: usize) -> Vec<TrajectoryTree> {
+    (0..n)
+        .map(|i| {
+            let body = gen::uniform(200 + i as u64, 7, 4, 0.6);
+            let gseed = 0x5eed_0000 + (i % groups) as u64;
+            gen::graft_prefix(&body, gseed, prefix_len, 8, VOCAB as i32)
+        })
+        .collect()
+}
+
+/// Deterministic group tree: shared root segment + per-tree leaves.
+fn grouped(prefix: &[i32], a: i32, b: i32) -> TrajectoryTree {
+    TrajectoryTree::new(vec![
+        NodeSpec::new(-1, prefix.to_vec()),
+        NodeSpec::new(0, vec![a, a + 1]),
+        NodeSpec::new(0, vec![b]),
+    ])
+    .unwrap()
+}
+
+fn run_once(
+    steps: u64,
+    tpb: usize,
+    ranks: usize,
+    affinity: bool,
+    cache_tokens: usize,
+    trees: &[TrajectoryTree],
+    seed: u64,
+) -> (Vec<StepMetrics>, Vec<u64>) {
+    let cfg = PipelineConfig {
+        mode: Mode::Tree,
+        steps,
+        trees_per_batch: tpb,
+        depth: 0,
+        lr: 5e-3,
+        warmup: 1,
+        ranks,
+    };
+    let spec = PlanSpec::for_host(CAPACITY).with_prefix_affinity(affinity);
+    let mut exec = HostExecutor::new(VOCAB, 8, seed).with_prefix_cache(cache_tokens);
+    let source = Box::new(ResidentSource::new(trees.to_vec(), seed).unwrap());
+    let (metrics, _) = pipeline::run(&cfg, spec, source, &mut exec).unwrap();
+    (metrics, exec.fingerprints)
+}
+
+// ───────────────────────────── schedule tier ─────────────────────────────
+
+#[test]
+fn affinity_off_reproduces_seed_plans_bit_for_bit() {
+    let trees = hot_corpus(8, 2, 12);
+    let spec = PlanSpec::for_host(CAPACITY); // affinity off: the default
+    let plan = spec.plan_tree(&trees).unwrap();
+    // the seed packer, called directly: serialize + FFD pack_forest
+    let metas: Vec<_> = trees.iter().map(serialize).collect();
+    let seed_forests = pack_forest(&metas, CAPACITY, &BatchOptions::default()).unwrap();
+    assert_eq!(plan.forests.len(), seed_forests.len());
+    for (a, b) in plan.forests.iter().zip(&seed_forests) {
+        assert_eq!(a.batch.capacity, b.batch.capacity);
+        assert_eq!(a.batch.tokens, b.batch.tokens);
+        assert_eq!(a.batch.weights, b.batch.weights);
+        assert_eq!(a.batch.prev_idx, b.batch.prev_idx);
+        assert_eq!(a.batch.pos_ids, b.batch.pos_ids);
+        assert_eq!(a.batch.q_exit, b.batch.q_exit);
+        assert_eq!(a.batch.k_order, b.batch.k_order);
+        assert_eq!(a.batch.k_exit, b.batch.k_exit);
+        assert_eq!(a.batch.k_bias, b.batch.k_bias);
+        for (ma, mb) in a.members.iter().zip(&b.members) {
+            assert_eq!((ma.source, ma.slot_offset, ma.len), (mb.source, mb.slot_offset, mb.len));
+            assert_eq!(ma.prefix_len, 0, "seed path never annotates prefixes");
+        }
+    }
+}
+
+#[test]
+fn affine_plans_colocate_groups_and_annotate_members() {
+    // two groups of three small trees each: every group fits one bin, so
+    // affinity must put each group in exactly one forest batch
+    let trees = vec![
+        grouped(&[1, 2, 3, 4, 5, 6], 10, 20),
+        grouped(&[7, 8, 9, 10, 11, 12], 30, 40),
+        grouped(&[1, 2, 3, 4, 5, 6], 11, 21),
+        grouped(&[7, 8, 9, 10, 11, 12], 31, 41),
+        grouped(&[1, 2, 3, 4, 5, 6], 12, 22),
+        grouped(&[7, 8, 9, 10, 11, 12], 32, 42),
+    ];
+    // 9 slots per tree: one 32-slot bin holds a whole 27-slot group but
+    // not both groups, so co-location is observable
+    let plan = PlanSpec::for_host(32).with_prefix_affinity(true).plan_tree(&trees).unwrap();
+    let forest_of = |src: usize| {
+        plan.forests
+            .iter()
+            .position(|fb| fb.members.iter().any(|m| m.source == src))
+            .unwrap()
+    };
+    assert_eq!(forest_of(0), forest_of(2));
+    assert_eq!(forest_of(0), forest_of(4));
+    assert_eq!(forest_of(1), forest_of(3));
+    assert_eq!(forest_of(1), forest_of(5));
+    assert_ne!(forest_of(0), forest_of(1), "different groups, different bins at cap 32");
+    for fb in &plan.forests {
+        for m in &fb.members {
+            assert_eq!(m.prefix_len, 6, "every member carries its group annotation");
+            assert_ne!(m.prefix_sig, 0);
+        }
+    }
+    // same data as the seed plan: token multiset is preserved
+    let seed_plan = PlanSpec::for_host(32).plan_tree(&trees).unwrap();
+    assert_eq!(plan.tree_tokens, seed_plan.tree_tokens);
+    assert_eq!(plan.flat_tokens, seed_plan.flat_tokens);
+}
+
+#[test]
+fn affinity_matches_seed_losses_within_f64_tolerance() {
+    let trees = hot_corpus(10, 2, 12);
+    let (seed_m, _) = run_once(7, 3, 1, false, 0, &trees, 17);
+    let (affine_m, _) = run_once(7, 3, 1, true, 0, &trees, 17);
+    assert_eq!(seed_m.len(), affine_m.len());
+    for (s, a) in seed_m.iter().zip(&affine_m) {
+        assert!(
+            (s.loss - a.loss).abs() <= 1e-8 * (s.loss.abs() + 1.0),
+            "step {}: seed {} vs affine {}",
+            s.step,
+            s.loss,
+            a.loss
+        );
+        assert_eq!(s.tree_tokens, a.tree_tokens, "same data per step");
+        assert_eq!(s.flat_tokens, a.flat_tokens);
+    }
+}
+
+#[test]
+fn sharded_affine_groups_stay_rank_local() {
+    let trees = vec![
+        grouped(&[1, 2, 3, 4, 5, 6], 10, 20),
+        grouped(&[7, 8, 9, 10, 11, 12], 30, 40),
+        grouped(&[1, 2, 3, 4, 5, 6], 11, 21),
+        grouped(&[7, 8, 9, 10, 11, 12], 31, 41),
+        grouped(&[21, 22, 23], 50, 60),
+        grouped(&[21, 22, 23], 51, 61),
+    ];
+    let spec = PlanSpec::for_host(64).with_prefix_affinity(true);
+    let sharded = spec.plan_sharded_tree(&trees, 3).unwrap();
+    // every prefix fingerprint appears on exactly one rank
+    let mut sig_rank: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    for (r, plan) in sharded.ranks.iter().enumerate() {
+        let StepPlan::Tree(p) = plan else { panic!("tree mode") };
+        for fb in &p.forests {
+            for m in &fb.members {
+                if m.prefix_sig != 0 {
+                    let prev = sig_rank.insert(m.prefix_sig, r);
+                    assert!(
+                        prev.is_none() || prev == Some(r),
+                        "group {:#x} split across ranks {:?} and {r}",
+                        m.prefix_sig,
+                        prev
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(sig_rank.len(), 3, "three distinct groups");
+}
+
+#[test]
+fn oversized_trees_price_their_relay_calls_in_affine_sharding() {
+    // ROADMAP item-5 leftover: an over-capacity tree's LPT cost is its
+    // partition-relay device occupancy (est. calls × partition capacity),
+    // not its raw token count — also under affine group sharding
+    let mut spec = PlanSpec::for_host(64).with_prefix_affinity(true);
+    spec.part_caps = Some((32, 1024));
+    // 4-node 100-token chain: nodes of 25 tokens so each fits a 32-slot
+    // partition (cuts are node boundaries)
+    let big = TrajectoryTree::new(
+        (0..4)
+            .map(|n| NodeSpec::new(n - 1, (0..25).map(|i| (n * 25 + i) % 60).collect()))
+            .collect(),
+    )
+    .unwrap();
+    assert!(big.n_slots() > 64);
+    let smalls: Vec<TrajectoryTree> =
+        (0..4).map(|i| grouped(&[1, 2, 3], 10 + i, 20 + i)).collect();
+    let mut trees = vec![big.clone()];
+    trees.extend(smalls);
+    let sharded = spec.plan_sharded_tree(&trees, 2).unwrap();
+    // priced relay load: ceil(100 / 32) × 32 = 128 device slots, which must
+    // appear verbatim as one rank's LPT load (raw n_tree would be 100)
+    let relay_cost = big.n_slots().div_ceil(32) * 32;
+    assert!(
+        sharded.loads.contains(&relay_cost),
+        "relay rank must carry the priced load {relay_cost}, got {:?}",
+        sharded.loads
+    );
+    let n_relay: usize = sharded
+        .ranks
+        .iter()
+        .map(|p| {
+            let StepPlan::Tree(t) = p else { panic!("tree mode") };
+            usize::from(t.relay.is_some())
+        })
+        .sum();
+    assert_eq!(n_relay, 1, "the oversized tree partitions on exactly one rank");
+}
+
+// ────────────────────────────── engine tier ──────────────────────────────
+
+#[test]
+fn cache_on_equals_cache_off_bitwise_through_the_pipeline() {
+    let trees = hot_corpus(10, 2, 12);
+    let (off_m, off_fp) = run_once(7, 3, 1, true, 0, &trees, 23);
+    let (on_m, on_fp) = run_once(7, 3, 1, true, 1 << 16, &trees, 23);
+    assert_eq!(off_m.len(), on_m.len());
+    for (a, b) in off_m.iter().zip(&on_m) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "cache broke bit-identity at step {} ({} vs {})",
+            a.step,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.weight_sum.to_bits(), b.weight_sum.to_bits());
+    }
+    assert_eq!(off_fp, on_fp, "cache must not change batch composition");
+    // and the payoff is real on a hot corpus: prefix slots were served
+    let hit: u64 = on_m.iter().map(|m| m.cache_hit_tokens).sum();
+    assert!(hit > 0, "hot corpus must produce cache hits");
+    assert!(on_m.iter().any(|m| m.xstep_reuse_ratio > 1.0));
+    assert!(off_m.iter().all(|m| m.cache_hit_tokens == 0), "cache off reports zero hits");
+}
+
+#[test]
+fn optimizer_update_invalidates_every_cached_prefix() {
+    // two trees, one shared 8-token prefix, packed into one forest batch
+    let trees = vec![grouped(&[3, 1, 4, 1, 5, 9, 2, 6], 10, 20), grouped(&[3, 1, 4, 1, 5, 9, 2, 6], 30, 40)];
+    let metas: Vec<_> = trees.iter().map(serialize).collect();
+    let idx = AffinityIndex::build(&trees);
+    let cap = metas.iter().map(|m| m.size()).sum::<usize>();
+    let mut fb = concat_metas(&metas, &[0, 1], cap, &BatchOptions::default()).unwrap();
+    annotate_members(std::slice::from_mut(&mut fb), &idx);
+    let mut rm = RefModel::seeded(VOCAB, 8, 42);
+    let mut cache = PrefixCache::new(1 << 16);
+    rm.step_cached(&fb, &mut cache).unwrap(); // populate under version 0
+    assert!(!cache.is_empty());
+
+    // "the optimizer step": parameters change
+    for e in rm.embed.iter_mut() {
+        *e += 0.05;
+    }
+    let fresh = rm.step(&fb.batch).unwrap();
+    // teeth: replaying the STALE entries diverges from the fresh step —
+    // without invalidation the cache would corrupt training
+    let stale = rm.step_cached(&fb, &mut cache.clone()).unwrap();
+    assert_ne!(
+        stale.loss_sum.to_bits(),
+        fresh.loss_sum.to_bits(),
+        "stale reuse must be observable, else this test is vacuous"
+    );
+    // the contract: a version bump drops everything, and the next cached
+    // step is bit-identical to the uncached one again
+    cache.set_version(1);
+    assert!(cache.is_empty(), "version change clears the cache");
+    let clean = rm.step_cached(&fb, &mut cache).unwrap();
+    assert_eq!(clean.loss_sum.to_bits(), fresh.loss_sum.to_bits());
+    assert!(clean.d_embed.iter().zip(&fresh.d_embed).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+// ────────────────────────────── determinism ──────────────────────────────
+
+#[test]
+fn affine_cached_sharded_runs_replay_bit_for_bit() {
+    let trees = hot_corpus(12, 3, 10);
+    let a = run_once(6, 4, 2, true, 1 << 16, &trees, 31);
+    let b = run_once(6, 4, 2, true, 1 << 16, &trees, 31);
+    assert_eq!(a.0.len(), b.0.len());
+    for (x, y) in a.0.iter().zip(&b.0) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "replay diverged at step {}", x.step);
+        assert_eq!(x.cache_hit_tokens, y.cache_hit_tokens, "cache behavior replayed");
+        assert_eq!(x.cache_evictions, y.cache_evictions);
+    }
+    assert_eq!(a.1, b.1, "batch composition replayed");
+}

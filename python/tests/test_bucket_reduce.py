@@ -1,0 +1,256 @@
+"""Python mirror of the Rust bucketed collective reduce.
+
+Mirrors ``rust/src/coordinator/collective/mod.rs`` (``bucket_ranges``, the
+frame wire format, the ``FrameStash``) and the bucketed fold discipline of
+``rust/src/coordinator/dist.rs::execute_bucketed``: a rank finishes its own
+accumulation first, then folds each bucket's children strictly in bracket
+round order, regardless of frame arrival order (out-of-order frames park in
+a stash keyed ``(seq, bucket, from)``).
+
+Determinism contract being mirrored: the per-element fold sequence is a
+pure function of the bracket (``test_reduce_schedule.py``) and the bucket
+boundaries only partition the index space — they never reorder any
+element's fold — so the bucketed reduce is **bit-identical** to the
+monolithic one at every bucket size, on every transport, under every
+arrival order.  Keep in lockstep with the Rust unit tests
+(``bucketed_and_socket_reduce_bit_match_the_monolithic_path`` et al.).
+"""
+
+import random
+import struct
+
+from test_reduce_schedule import reduce_children, reduce_parent, reduce_schedule
+
+# ── bucket_ranges (collective/mod.rs) ──────────────────────────────────────
+
+
+def bucket_ranges(flat_len, bucket_kb):
+    """Fixed-size bucket partition; kb == 0 means one monolithic bucket."""
+    if flat_len == 0:
+        return []
+    per = flat_len if bucket_kb == 0 else max(bucket_kb * 1024 // 8, 1)
+    return [(s, min(s + per, flat_len)) for s in range(0, flat_len, per)]
+
+
+# ── frame wire format (collective/mod.rs) ──────────────────────────────────
+
+FRAME_HEADER = struct.Struct("<QIII")  # seq, bucket, from, nelems
+
+
+def encode_frame(seq, bucket, from_, payload_bits):
+    """payload_bits: list of u64 f64 bit patterns (the Rust side encodes
+    via ``to_bits`` so NaN payloads survive the wire)."""
+    out = bytearray(FRAME_HEADER.pack(seq, bucket, from_, len(payload_bits)))
+    for b in payload_bits:
+        out += struct.pack("<Q", b)
+    return bytes(out)
+
+
+def decode_frame(buf, off=0):
+    """Returns ((seq, bucket, from, payload_bits), next_off); None at a
+    clean EOF; raises on a truncated frame."""
+    if off == len(buf):
+        return None
+    if len(buf) - off < FRAME_HEADER.size:
+        raise ValueError("stream ended mid-frame-header")
+    seq, bucket, from_, nelems = FRAME_HEADER.unpack_from(buf, off)
+    off += FRAME_HEADER.size
+    if len(buf) - off < 8 * nelems:
+        raise ValueError("stream ended mid-frame-body")
+    bits = [struct.unpack_from("<Q", buf, off + 8 * i)[0] for i in range(nelems)]
+    return (seq, bucket, from_, bits), off + 8 * nelems
+
+
+# ── stash (collective/mod.rs::FrameStash) ──────────────────────────────────
+
+
+class FrameStash:
+    def __init__(self):
+        self.map = {}
+
+    def put(self, seq, bucket, from_, data):
+        self.map[(seq, bucket, from_)] = data
+
+    def take(self, seq, bucket, from_):
+        return self.map.pop((seq, bucket, from_), None)
+
+    def gc_below(self, seq):
+        self.map = {k: v for k, v in self.map.items() if k[0] >= seq}
+
+
+# ── the bucketed reduce simulation (dist.rs::execute_bucketed) ─────────────
+
+
+def bucketed_reduce(payloads, bucket_kb, fold, rng=None, seq=7):
+    """Folds rank payloads up the log-tree bracket bucket-by-bucket.
+
+    ``payloads[r]`` is rank r's fully-accumulated flat payload (a rank's
+    own accumulation always completes before any child fold — the pump
+    only *drains* the transport at earlier units).  ``fold(a, b)`` folds a
+    child element into a parent element.  ``rng`` shuffles each rank's
+    frame arrival order; the stash-and-replay cursor makes the result
+    independent of it.  Returns rank 0's folded payload.
+    """
+    n = len(payloads)
+    flat_len = len(payloads[0])
+    ranges = bucket_ranges(flat_len, bucket_kb)
+    sent = {}  # (parent, bucket, child) -> frame payload
+    for rank in range(n - 1, -1, -1):
+        acc = list(payloads[rank])
+        children = reduce_children(rank, n)  # (round, src), round order
+        # adversarial delivery: every child frame for this rank arrives in
+        # one shuffled burst and parks in the stash
+        stash = FrameStash()
+        inbox = [
+            (b, src, sent.pop((rank, b, src)))
+            for (_, src) in children
+            for b in range(len(ranges))
+        ]
+        if rng is not None:
+            rng.shuffle(inbox)
+        for b, src, data in inbox:
+            stash.put(seq, b, src, data)
+        # the cursor: per bucket, children strictly in bracket round order
+        for bi, (start, stop) in enumerate(ranges):
+            for (_, src) in children:
+                data = stash.take(seq, bi, src)
+                assert data is not None, "frames-per-rank invariant broken"
+                for i, x in enumerate(data):
+                    acc[start + i] = fold(acc[start + i], x)
+        if rank != 0:
+            parent = reduce_parent(rank)
+            for bi, (start, stop) in enumerate(ranges):
+                sent[(parent, bi, rank)] = acc[start:stop]
+    assert not sent, "undelivered frames"
+    return acc
+
+
+def monolithic_reduce(payloads, fold):
+    """The typed-path reference: whole accumulators, same bracket."""
+    acc = [list(p) for p in payloads]
+    for rnd in reduce_schedule(len(payloads)):
+        for dst, src in rnd:
+            acc[dst] = [fold(a, b) for a, b in zip(acc[dst], acc[src])]
+    return acc[0]
+
+
+def bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+# ── tests ──────────────────────────────────────────────────────────────────
+
+
+def test_bucket_ranges_match_rust_fixtures():
+    assert bucket_ranges(0, 0) == []
+    assert bucket_ranges(12_345, 0) == [(0, 12_345)]
+    # 64 KiB of f64 = 8192 elements per bucket
+    assert bucket_ranges(20_000, 64) == [(0, 8192), (8192, 16_384), (16_384, 20_000)]
+    for flat_len, kb in [(1, 0), (10_000, 1), (100_000, 64), (513, 1)]:
+        ranges = bucket_ranges(flat_len, kb)
+        assert ranges[0][0] == 0 and ranges[-1][1] == flat_len
+        assert all(a[1] == b[0] for a, b in zip(ranges, ranges[1:]))
+        assert all(start < stop for start, stop in ranges)
+
+
+def test_bucketed_matches_monolithic_on_adversarial_arrival_orders():
+    add = lambda a, b: a + b
+    for n in [2, 3, 5, 8]:
+        rng = random.Random(n)
+        # magnitudes spread over 30 orders so any reassociation shows up
+        payloads = [
+            [rng.uniform(-1, 1) * 10 ** rng.randint(-15, 15) for _ in range(100)]
+            for _ in range(n)
+        ]
+        ref = monolithic_reduce(payloads, add)
+        for kb in [0, 1, 64]:
+            for shuffle_seed in range(4):
+                got = bucketed_reduce(
+                    payloads, kb, add, rng=random.Random(shuffle_seed)
+                )
+                assert [bits(x) for x in got] == [bits(x) for x in ref], (n, kb)
+
+
+def test_flattened_fold_order_is_rank_order_in_every_bucket():
+    # label elements: fold = concat; every element of every bucket must
+    # fold in rank order 0..n, for odd rank counts (byes) included
+    concat = lambda a, b: a + b
+    for n in [2, 3, 5, 7, 8]:
+        payloads = [[[r]] * 13 for r in range(n)]  # 13 elems, 1-elem labels
+        for kb in [0, 1]:
+            got = bucketed_reduce(payloads, kb, concat, rng=random.Random(0))
+            assert all(lab == list(range(n)) for lab in got), (n, kb)
+
+
+def test_odd_rank_byes_fold_in_the_final_round():
+    # n = 5: rank 4 is bye until the last round, but the flattened order
+    # still ends ...3, 4 — the bye changes rounds, never order
+    concat = lambda a, b: a + b
+    got = bucketed_reduce([[[r]] for r in range(5)], 1, concat)
+    assert got[0] == [0, 1, 2, 3, 4]
+
+
+def test_cancellation_fixture_bucketed_equals_tree_not_serial():
+    # the worst-case reassociation fixture shared with
+    # tests/dist_equivalence.rs and the Rust collective unit tests
+    vals = [1.0, 1e16, -1e16, 1.0]
+    serial = vals[0]
+    for v in vals[1:]:
+        serial = serial + v
+    add = lambda a, b: a + b
+    tree = monolithic_reduce([[v] for v in vals], add)[0]
+    assert serial == 1.0 and tree == 0.0, "fixture must exercise reassociation"
+    for kb in [0, 1, 64]:
+        got = bucketed_reduce([[v] for v in vals], kb, add, rng=random.Random(kb))
+        assert bits(got[0]) == bits(tree), kb
+
+
+def test_stash_replays_by_key_and_gcs_stale_steps():
+    st = FrameStash()
+    st.put(1, 0, 3, [1.0])
+    st.put(2, 0, 3, [2.0])
+    assert st.take(2, 0, 1) is None
+    assert st.take(2, 0, 3) == [2.0]
+    st.gc_below(2)
+    assert not st.map, "seq-1 residue collected"
+
+
+def test_frame_round_trip_preserves_nan_bits_and_aborts():
+    payload = [
+        bits(1.5),
+        bits(-0.0),
+        0x7FF8000000000001,  # NaN with payload: must survive the wire
+        0x7FF80000DEAD0001,
+        bits(float("inf")),
+    ]
+    wire = encode_frame(7, 3, 5, payload)
+    assert len(wire) == FRAME_HEADER.size + 8 * len(payload)
+    (seq, bucket, from_, got), off = decode_frame(wire)
+    assert (seq, bucket, from_) == (7, 3, 5)
+    assert got == payload
+    assert decode_frame(wire, off) is None, "clean EOF"
+    # abort marker (empty payload) chains with a real frame
+    chained = encode_frame(1, 0, 2, []) + encode_frame(1, 1, 2, [bits(42.0)])
+    (s, b, f, data), off = decode_frame(chained)
+    assert data == [] and (s, b, f) == (1, 0, 2)
+    (s, b, f, data), off = decode_frame(chained, off)
+    assert data == [bits(42.0)]
+    assert decode_frame(chained, off) is None
+
+
+def test_truncated_frame_is_an_error_not_a_silent_eof():
+    wire = encode_frame(1, 0, 1, [bits(1.0), bits(2.0)])
+    for cut in [FRAME_HEADER.size - 2, len(wire) - 3]:
+        try:
+            decode_frame(wire[:cut])
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"truncation at {cut} must raise")
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

@@ -1,0 +1,138 @@
+//! Bucketed collective reduce: wall clock and overlap vs the monolithic
+//! typed path (docs/distributed.md#the-collective-layer).
+//!
+//! Same corpus, same plans, same 4-rank [`HostExecutor`] pool — the only
+//! variable is how the gradient payload travels: the legacy typed channel
+//! (one monolithic accumulator per rank), the in-process collective at two
+//! bucket sizes, and the socket transport.  Equivalence is asserted on
+//! batch-composition fingerprints for every config and bit-for-bit on
+//! losses for the `bucket 0` in-process config (the seed-path contract);
+//! walls, measured in-window overlap and wire bytes are recorded into
+//! `results/BENCH_collective.json` under the `collective_reduce` key.
+
+use std::time::Instant;
+
+use tree_train::coordinator::dist::{ReduceOptions, Transport};
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::coordinator::Mode;
+use tree_train::data::ResidentSource;
+use tree_train::trainer::{PlanSpec, StepMetrics};
+use tree_train::tree::gen;
+use tree_train::util::json::{update_json_file_key, Json};
+
+const CAPACITY: usize = 1024;
+const VOCAB: usize = 256;
+const STEPS: u64 = 12;
+const TREES_PER_BATCH: usize = 48;
+const N_TREES: usize = 96;
+const RANKS: usize = 4;
+
+fn corpus() -> Vec<tree_train::tree::TrajectoryTree> {
+    (0..N_TREES as u64)
+        .map(|i| {
+            let total = 128 + (i as usize * 67) % (CAPACITY / 2);
+            let por = 0.55 + 0.35 * ((i % 9) as f64) / 9.0;
+            gen::with_target_por(i, por, 4, total, 24, VOCAB as i32)
+        })
+        .collect()
+}
+
+fn run(opts: ReduceOptions) -> (f64, Vec<StepMetrics>, Vec<u64>) {
+    let cfg = PipelineConfig {
+        mode: Mode::Tree,
+        steps: STEPS,
+        trees_per_batch: TREES_PER_BATCH,
+        depth: 2,
+        lr: 1e-2,
+        warmup: 0,
+        ranks: RANKS,
+    };
+    let source = Box::new(ResidentSource::new(corpus(), 7).unwrap());
+    let mut exec = HostExecutor::new(VOCAB, 8, 7).with_reduce(opts);
+    let t0 = Instant::now();
+    let (metrics, _) =
+        pipeline::run(&cfg, PlanSpec::for_host(CAPACITY), source, &mut exec).unwrap();
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(metrics.len(), STEPS as usize);
+    (wall, metrics, exec.fingerprints)
+}
+
+fn main() {
+    println!("== collective reduce bench ({STEPS} steps x {TREES_PER_BATCH} trees, {RANKS} ranks) ==");
+
+    let configs: &[(&str, usize, Transport)] = &[
+        ("typed_monolithic", 0, Transport::InProcess),
+        ("inprocess_kb1", 1, Transport::InProcess),
+        ("inprocess_kb64", 64, Transport::InProcess),
+        ("socket_kb1", 1, Transport::Socket),
+    ];
+
+    // warm once (page cache, allocator, thread spawns), then best-of-2
+    let _ = run(ReduceOptions::default());
+    let (ref_wall, ref_ms, ref_fp) = run(ReduceOptions::default());
+
+    let mut rows = Vec::new();
+    for &(name, kb, transport) in configs {
+        let opts = ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+        let (w_a, ms, fp) = run(opts.clone());
+        let (w_b, ms_b, _) = run(opts.clone());
+        let wall = w_a.min(w_b);
+
+        // every config runs the identical global batches...
+        assert_eq!(fp, ref_fp, "{name}: batch composition diverged");
+        // ...and folds them in the identical bracket: losses are
+        // bit-identical across configs, not merely close
+        for (a, r) in ms.iter().zip(&ref_ms) {
+            assert_eq!(
+                a.loss.to_bits(),
+                r.loss.to_bits(),
+                "{name} step {}: loss bits diverged from the typed path",
+                a.step
+            );
+        }
+        for (a, b) in ms.iter().zip(&ms_b) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name}: repeat run diverged");
+        }
+
+        let overlap: f64 = ms.iter().map(|m| m.bucket_overlap_ms).sum();
+        let bytes: u64 = ms.iter().map(|m| m.collective_bytes).sum();
+        let buckets = ms.iter().map(|m| m.reduce_buckets).max().unwrap_or(0);
+        println!(
+            "{name:>18}: wall {wall:>8.1} ms  buckets {buckets}  \
+             overlap {overlap:>7.3} ms  {bytes} bytes"
+        );
+        rows.push(Json::obj(vec![
+            ("config", Json::str(name)),
+            ("bucket_kb", Json::num(kb as f64)),
+            (
+                "transport",
+                Json::str(match transport {
+                    Transport::InProcess => "in_process",
+                    Transport::Socket => "socket",
+                }),
+            ),
+            ("wall_ms", Json::num(wall)),
+            ("buckets", Json::num(buckets as f64)),
+            ("bucket_overlap_ms", Json::num(overlap)),
+            ("collective_bytes", Json::num(bytes as f64)),
+            ("speedup_vs_typed", Json::num(ref_wall / wall.max(1e-9))),
+        ]));
+    }
+
+    let path = std::path::PathBuf::from("results").join("BENCH_collective.json");
+    update_json_file_key(
+        &path,
+        "collective_reduce",
+        Json::obj(vec![
+            ("steps", Json::num(STEPS as f64)),
+            ("trees_per_batch", Json::num(TREES_PER_BATCH as f64)),
+            ("capacity", Json::num(CAPACITY as f64)),
+            ("ranks", Json::num(RANKS as f64)),
+            ("payload_elems", Json::num((VOCAB * 8) as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+        &[],
+    )
+    .unwrap();
+    println!("-> {}", path.display());
+}

@@ -32,10 +32,25 @@
 //! predicted-vs-measured imbalance errors under `measured_sweep.cost_model`,
 //! gating that calibration conserves the global batch and does not regress
 //! the prediction error (docs/distributed.md#calibrated-cost-model).
+//!
+//! The **collective sweep** then re-runs the largest combination for every
+//! `--reduce-bucket-kb` × `--transport` pair (docs/distributed.md#the-
+//! collective-layer): `bucket_kb 0` on the in-process transport must
+//! reproduce the legacy typed path *bit-for-bit*; every collective config
+//! must be repeat-bit-identical and within `LOSS_RTOL` of legacy with
+//! identical fingerprints; configs that route payload over a collective
+//! must report `bucket_overlap_ms > 0` and nonzero `collective_bytes`.
+//! Each config's `(step, loss bits, weight bits, tokens, fingerprint)`
+//! stream is written as a wall-clock-free CSV into `--csv-dir`, so CI can
+//! byte-compare transports against each other.  A measured
+//! AdamW-vs-broadcast crossover study (fused update over n elems vs
+//! serialize + copy to N-1 replicas) lands with the sweep under
+//! `measured_sweep.collective`.
 
 use std::path::Path;
 use std::time::Instant;
 
+use tree_train::coordinator::collective::bucket_ranges;
 use tree_train::coordinator::dist;
 use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
 use tree_train::partition::CostModel;
@@ -68,6 +83,28 @@ fn parse_list(flag: &str, s: &str) -> anyhow::Result<Vec<usize>> {
     Ok(out)
 }
 
+fn parse_kb_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let v: usize = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--reduce-bucket-kb: `{part}` is not an integer"))?;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "--reduce-bucket-kb needs at least one value");
+    Ok(out)
+}
+
+fn transport_name(t: dist::Transport) -> &'static str {
+    match t {
+        dist::Transport::InProcess => "in_process",
+        dist::Transport::Socket => "socket",
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     corpus: &Path,
@@ -81,11 +118,20 @@ pub fn run(
     capacity: usize,
     vocab: usize,
     seed: u64,
+    bucket_kb: &str,
+    transports: &str,
+    csv_dir: &Path,
     out: &Path,
 ) -> anyhow::Result<()> {
     let mode = super::parse_mode(mode)?;
     let rank_list = parse_list("ranks", ranks)?;
     let tpb_list = parse_list("trees-per-batch", trees_per_batch)?;
+    let kb_list = parse_kb_list(bucket_kb)?;
+    let tr_list: Vec<dist::Transport> = transports
+        .split(',')
+        .map(|s| dist::Transport::parse(s.trim()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(!tr_list.is_empty(), "--transport needs at least one value");
     anyhow::ensure!(
         rank_list.iter().any(|&r| r >= 2),
         "--ranks needs at least one value >= 2 (1 is the reference run)"
@@ -254,6 +300,120 @@ pub fn run(
          post-warmup mean |pred-meas|/meas): tokens {tokens_err:.4}, calibrated {cal_err:.4}"
     );
 
+    // ── collective sweep: bucketed reduce × transport on the largest
+    //    sharded combination (docs/distributed.md#the-collective-layer) ──
+    let run_reduce = |opts: dist::ReduceOptions| -> anyhow::Result<(Vec<StepMetrics>, Vec<u64>, f64)> {
+        let cfg = PipelineConfig {
+            mode,
+            steps,
+            trees_per_batch: cal_tpb,
+            depth,
+            lr: 1e-2,
+            warmup: 0,
+            ranks: cal_r,
+        };
+        let mut exec = HostExecutor::new(vocab, 8, seed).with_reduce(opts);
+        let t0 = Instant::now();
+        let source = super::smoke_source(format, corpus, window, seed)?;
+        let (metrics, _) = pipeline::run(&cfg, spec.clone(), source, &mut exec)?;
+        Ok((metrics, exec.fingerprints, t0.elapsed().as_secs_f64() * 1e3))
+    };
+    // legacy reference: the typed monolithic path, no collective at all
+    let (legacy_ms, legacy_fp, _) = run_reduce(dist::ReduceOptions::default())?;
+    write_collective_csv(csv_dir, "legacy", &legacy_ms, &legacy_fp)?;
+    // the HostExecutor payload is the d_embed table: vocab rows × dim 8
+    let flat_len = vocab * 8;
+    let mut coll_rows = Vec::new();
+    for &kb in &kb_list {
+        for &tr in &tr_list {
+            let opts = dist::ReduceOptions { bucket_kb: kb, transport: tr, rendezvous: None };
+            let uses_collective = opts.uses_collective();
+            let tag = format!("kb{kb}_{}", transport_name(tr));
+            let (ms_a, fp_a, wall_a) = run_reduce(opts.clone())?;
+            let (ms_b, fp_b, _) = run_reduce(opts)?;
+            // (a) repeats are bit-identical: bucket count fixes the
+            // bracket, so arrival order never leaks into the fold
+            for (a, b) in ms_a.iter().zip(&ms_b) {
+                anyhow::ensure!(
+                    a.loss.to_bits() == b.loss.to_bits()
+                        && a.weight_sum.to_bits() == b.weight_sum.to_bits(),
+                    "collective {tag} step {}: repeat run diverged ({} vs {})",
+                    a.step,
+                    a.loss,
+                    b.loss
+                );
+            }
+            anyhow::ensure!(fp_a == fp_b, "collective {tag}: repeat fingerprints diverged");
+            // (b) against the legacy typed path
+            let bits_equal = fp_a == legacy_fp
+                && ms_a
+                    .iter()
+                    .zip(&legacy_ms)
+                    .all(|(a, l)| a.loss.to_bits() == l.loss.to_bits());
+            if !uses_collective {
+                anyhow::ensure!(
+                    bits_equal,
+                    "collective {tag}: bucket 0 on in-process must be the legacy \
+                     typed path bit-for-bit"
+                );
+            } else {
+                anyhow::ensure!(fp_a == legacy_fp, "collective {tag}: fingerprints diverged");
+                for (a, l) in ms_a.iter().zip(&legacy_ms) {
+                    let err = (a.loss - l.loss).abs();
+                    anyhow::ensure!(
+                        err <= LOSS_RTOL * (l.loss.abs() + 1.0),
+                        "collective {tag} step {}: loss {} diverged from legacy {} \
+                         (|err| {err:e})",
+                        a.step,
+                        a.loss,
+                        l.loss
+                    );
+                }
+            }
+            // (c) bucket accounting: the advertised bucket count, measured
+            // in-window overlap and nonzero wire traffic
+            let want_buckets =
+                if uses_collective { bucket_ranges(flat_len, kb).len() as u64 } else { 0 };
+            for m in &ms_a {
+                anyhow::ensure!(
+                    m.reduce_buckets == want_buckets,
+                    "collective {tag} step {}: reduce_buckets {} != {want_buckets}",
+                    m.step,
+                    m.reduce_buckets
+                );
+            }
+            let overlap: f64 = ms_a.iter().map(|m| m.bucket_overlap_ms).sum();
+            let bytes: u64 = ms_a.iter().map(|m| m.collective_bytes).sum();
+            if uses_collective {
+                anyhow::ensure!(
+                    overlap > 0.0,
+                    "collective {tag}: bucket_overlap_ms == 0 — the pump never ran \
+                     inside an execute window"
+                );
+                anyhow::ensure!(bytes > 0, "collective {tag}: no collective bytes recorded");
+            } else {
+                anyhow::ensure!(overlap == 0.0 && bytes == 0, "typed path reported bucket work");
+            }
+            write_collective_csv(csv_dir, &tag, &ms_a, &fp_a)?;
+            println!(
+                "dist smoke OK: collective {tag} (ranks {cal_r}, tpb {cal_tpb}): \
+                 {}, buckets {want_buckets}, overlap {overlap:.3} ms, {bytes} bytes, \
+                 wall {wall_a:.1} ms",
+                if bits_equal { "bit-identical to legacy" } else { "within rtol of legacy" }
+            );
+            coll_rows.push(Json::obj(vec![
+                ("bucket_kb", Json::num(kb as f64)),
+                ("transport", Json::str(transport_name(tr))),
+                ("buckets", Json::num(want_buckets as f64)),
+                ("wall_ms", Json::num(wall_a)),
+                ("bucket_overlap_ms", Json::num(overlap)),
+                ("collective_bytes", Json::num(bytes as f64)),
+                ("bit_identical_to_legacy", Json::Bool(bits_equal)),
+            ]));
+        }
+    }
+    let crossover = crossover_rows(cal_r);
+
     std::fs::create_dir_all(out).ok();
     let path = out.join("BENCH_distsim.json");
     update_json_file_key(
@@ -280,6 +440,17 @@ pub fn run(
                     ("calibrated_mean_err", Json::num(cal_err)),
                 ]),
             ),
+            (
+                "collective",
+                Json::obj(vec![
+                    ("ranks", Json::num(cal_r as f64)),
+                    ("trees_per_batch", Json::num(cal_tpb as f64)),
+                    ("steps", Json::num(steps as f64)),
+                    ("payload_elems", Json::num(flat_len as f64)),
+                    ("rows", Json::Arr(coll_rows)),
+                    ("adamw_vs_broadcast", Json::Arr(crossover)),
+                ]),
+            ),
         ]),
         // `projection` is tree-train distsim's sibling section; anything
         // else (older schemas) is pruned
@@ -294,6 +465,79 @@ pub fn run(
         path.display()
     );
     Ok(())
+}
+
+/// Write one collective config's per-step stream as a deterministic CSV:
+/// bit patterns and counts only, no wall-clock columns, so CI can byte-
+/// compare the same `bucket_kb` across transports (`cmp`-equal files ⇔
+/// bit-identical reduces).
+fn write_collective_csv(
+    dir: &Path,
+    tag: &str,
+    ms: &[StepMetrics],
+    fps: &[u64],
+) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("dist_collective_{tag}.csv"));
+    let mut s = String::from("step,loss_bits,weight_sum_bits,device_tokens,fingerprint\n");
+    for (m, fp) in ms.iter().zip(fps) {
+        s.push_str(&format!(
+            "{},{:016x},{:016x},{},{:016x}\n",
+            m.step,
+            m.loss.to_bits(),
+            m.weight_sum.to_bits(),
+            m.device_tokens,
+            fp
+        ));
+    }
+    std::fs::write(&path, s)?;
+    Ok(path)
+}
+
+/// Measured AdamW-vs-broadcast crossover (docs/distributed.md): at each
+/// parameter count, time (a) a fused AdamW-shaped update over `n` f64
+/// elements — what every rank pays when replicas apply the reduced gradient
+/// themselves — against (b) serializing `n` updated parameters and copying
+/// them to `ranks - 1` replicas — what the primary would pay to broadcast
+/// parameters instead.  Replicated-update wins while `t_update <
+/// t_broadcast`; the rows locate the crossover for this host.
+fn crossover_rows(ranks: usize) -> Vec<Json> {
+    const REPS: u32 = 5;
+    let mut rows = Vec::new();
+    for &n in &[1usize << 10, 1 << 13, 1 << 16, 1 << 19] {
+        let g: Vec<f64> = (0..n).map(|i| 1e-3 * ((i % 7) as f64 + 1.0)).collect();
+        let mut p = vec![0.5f64; n];
+        let mut m1 = vec![0.0f64; n];
+        let mut m2 = vec![0.0f64; n];
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            for i in 0..n {
+                m1[i] = 0.9 * m1[i] + 0.1 * g[i];
+                m2[i] = 0.999 * m2[i] + 0.001 * g[i] * g[i];
+                p[i] -= 1e-3 * m1[i] / (m2[i].sqrt() + 1e-8);
+            }
+        }
+        std::hint::black_box(&p);
+        let adamw_ms = t0.elapsed().as_secs_f64() * 1e3 / REPS as f64;
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            let mut wire = Vec::with_capacity(n * 8);
+            for &x in &p {
+                wire.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            let replicas: Vec<Vec<u8>> = (1..ranks).map(|_| wire.clone()).collect();
+            std::hint::black_box(&replicas);
+        }
+        let broadcast_ms = t0.elapsed().as_secs_f64() * 1e3 / REPS as f64;
+        rows.push(Json::obj(vec![
+            ("elems", Json::num(n as f64)),
+            ("ranks", Json::num(ranks as f64)),
+            ("adamw_update_ms", Json::num(adamw_ms)),
+            ("broadcast_ms", Json::num(broadcast_ms)),
+            ("replicated_update_wins", Json::Bool(adamw_ms < broadcast_ms)),
+        ]));
+    }
+    rows
 }
 
 /// One measured sweep entry: wall clock, speedup over the ranks-1 baseline

@@ -1,0 +1,136 @@
+//! In-process collective transport: the reference [`Collective`] impl.
+//!
+//! A bus of `mpsc` channels, one receiver per rank; each non-root rank
+//! holds a sender to its bracket parent.  No serialization — frames move
+//! as owned `Vec<f64>`s — but the byte accounting uses the same wire
+//! format arithmetic as the socket transport so `collective_bytes` is
+//! comparable across transports.
+
+use std::sync::mpsc;
+
+use super::{recv_frame, try_take_frame, Collective, Frame, FrameStash};
+use crate::coordinator::dist::reduce_parent;
+
+/// One rank's endpoint on the in-process bucket bus.
+pub struct ChannelCollective {
+    rank: usize,
+    n_ranks: usize,
+    parent_tx: Option<mpsc::Sender<Frame>>,
+    rx: mpsc::Receiver<Frame>,
+    stash: FrameStash,
+}
+
+impl ChannelCollective {
+    /// Build the full bus: one endpoint per rank, wired along the reduce
+    /// bracket (`endpoints[r]` is rank `r`'s).  Endpoints are `Send` and
+    /// meant to be moved onto the rank worker threads.
+    pub fn bus(n_ranks: usize) -> Vec<ChannelCollective> {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n_ranks).map(|_| mpsc::channel::<Frame>()).unzip();
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| ChannelCollective {
+                rank,
+                n_ranks,
+                parent_tx: reduce_parent(rank).map(|p| txs[p].clone()),
+                rx,
+                stash: FrameStash::default(),
+            })
+            .collect()
+    }
+}
+
+impl Collective for ChannelCollective {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn send_up(&mut self, seq: u64, bucket: u32, data: &[f64]) -> crate::Result<usize> {
+        let tx = self
+            .parent_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("rank 0 is the reduce root and has no parent"))?;
+        let bytes = Frame::wire_bytes(data.len());
+        tx.send(Frame { seq, bucket, from: self.rank as u32, data: data.to_vec() })
+            .map_err(|_| anyhow::anyhow!("collective parent of rank {} disconnected", self.rank))?;
+        Ok(bytes)
+    }
+
+    fn try_take(&mut self, seq: u64, bucket: u32, src: usize) -> Option<Frame> {
+        try_take_frame(&self.rx, &mut self.stash, seq, bucket, src)
+    }
+
+    fn recv(&mut self, seq: u64, bucket: u32, src: usize) -> crate::Result<Frame> {
+        recv_frame(&self.rx, &mut self.stash, seq, bucket, src)
+    }
+
+    fn gc_below(&mut self, seq: u64) {
+        self.stash.gc_below(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_route_to_the_bracket_parent() {
+        // n = 4 bracket: 1 → 0, 3 → 2, 2 → 0
+        let mut bus = ChannelCollective::bus(4);
+        let mut c3 = bus.remove(3);
+        let mut c2 = bus.remove(2);
+        let mut c1 = bus.remove(1);
+        let mut c0 = bus.remove(0);
+        c1.send_up(1, 0, &[10.0]).unwrap();
+        c3.send_up(1, 0, &[30.0]).unwrap();
+        let f = c2.recv(1, 0, 3).unwrap();
+        assert_eq!(f.data, vec![30.0]);
+        c2.send_up(1, 0, &[30.0 + 2.0]).unwrap();
+        assert_eq!(c0.recv(1, 0, 1).unwrap().data, vec![10.0]);
+        assert_eq!(c0.recv(1, 0, 2).unwrap().data, vec![32.0]);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_wait_in_the_stash() {
+        let mut bus = ChannelCollective::bus(2);
+        let mut c1 = bus.remove(1);
+        let mut c0 = bus.remove(0);
+        // bucket 1 lands before bucket 0; recv order is still 0 then 1
+        c1.send_up(5, 1, &[2.0]).unwrap();
+        c1.send_up(5, 0, &[1.0]).unwrap();
+        assert_eq!(c0.recv(5, 0, 1).unwrap().data, vec![1.0]);
+        assert_eq!(c0.recv(5, 1, 1).unwrap().data, vec![2.0]);
+    }
+
+    #[test]
+    fn try_take_is_non_blocking_and_keyed() {
+        let mut bus = ChannelCollective::bus(2);
+        let mut c1 = bus.remove(1);
+        let mut c0 = bus.remove(0);
+        assert!(c0.try_take(1, 0, 1).is_none());
+        c1.send_up(1, 0, &[7.0]).unwrap();
+        // wrong key leaves the frame parked
+        assert!(c0.try_take(1, 1, 1).is_none());
+        assert_eq!(c0.try_take(1, 0, 1).unwrap().data, vec![7.0]);
+    }
+
+    #[test]
+    fn root_send_is_a_protocol_error() {
+        let mut bus = ChannelCollective::bus(2);
+        let mut c0 = bus.remove(0);
+        assert!(c0.send_up(1, 0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn stale_seq_frames_are_skipped_by_recv() {
+        let mut bus = ChannelCollective::bus(2);
+        let mut c1 = bus.remove(1);
+        let mut c0 = bus.remove(0);
+        c1.send_up(1, 0, &[1.0]).unwrap(); // aborted step's frame
+        c1.send_up(2, 0, &[2.0]).unwrap();
+        assert_eq!(c0.recv(2, 0, 1).unwrap().data, vec![2.0]);
+    }
+}

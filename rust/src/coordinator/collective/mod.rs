@@ -1,0 +1,340 @@
+//! The collective layer: transport-pluggable bucket reduction frames.
+//!
+//! `coordinator/dist.rs` splits gradient reduction into two planes.  The
+//! **control plane** (typed `mpsc` channels) carries everything that is not
+//! bulk payload: errors, execute walls, merge accounting, scalar sums and
+//! digests — the machinery PR 5 proved deadlock-free and deterministic.
+//! The **data plane** — this module — carries only the f64 gradient payload,
+//! chopped into fixed parameter-range *buckets* ([`bucket_ranges`]), each
+//! flowing child → parent along the same log-tree bracket the control plane
+//! uses ([`crate::coordinator::dist::reduce_schedule`]).
+//!
+//! A [`Collective`] is one rank's endpoint on that tree.  Two transports
+//! implement it:
+//!
+//! * [`ChannelCollective`] — in-process `mpsc` bus, the reference impl.
+//! * [`SocketCollective`] — loopback TCP with a rendezvous file
+//!   (Gloo-shaped: ranks publish listener addresses, children dial their
+//!   bracket parent), multi-process capable; frames are length-prefixed
+//!   ([`Frame::encode`]) so the wire format is process- and
+//!   machine-boundary-clean.
+//!
+//! **Determinism contract.**  Frames are keyed `(seq, bucket, from)` and a
+//! receiver folds a bucket's children strictly in bracket round order — an
+//! out-of-order arrival waits in a [`FrameStash`] (the data-plane twin of
+//! the control plane's stash-and-replay).  Because every bucket is folded
+//! by the identical bracket the monolithic path uses, the per-element fold
+//! sequence — own accumulation first, then children in round order — is
+//! *identical* at every bucket size and on every transport, so bucketed
+//! and socket reductions are bit-identical to the monolithic in-process
+//! path, not merely tolerance-close (proof sketch in docs/distributed.md;
+//! python mirror: `python/tests/test_bucket_reduce.py`).
+//!
+//! **Abort frames.**  A zero-length payload is an abort marker: a rank
+//! whose execute failed still sends exactly one frame per bucket, so the
+//! frames-per-rank-per-step invariant holds and no peer blocks forever.
+//! The real error travels the control plane; an abort merely poisons the
+//! bucket so partially-folded payloads are never mistaken for results.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::ops::Range;
+
+pub mod channel;
+pub mod socket;
+
+pub use channel::ChannelCollective;
+pub use socket::SocketCollective;
+
+/// Fixed frame header: `[u64 seq][u32 bucket][u32 from][u32 nelems]`,
+/// little-endian, followed by `nelems` f64 payload words (bit-exact:
+/// encoded via `to_bits`, so NaN payloads survive the wire).
+pub const FRAME_HEADER_BYTES: usize = 8 + 4 + 4 + 4;
+
+/// One bucket payload flowing child → parent in the reduce tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Pool step sequence number (stale frames from aborted steps are
+    /// garbage-collected by [`Collective::gc_below`]).
+    pub seq: u64,
+    /// Bucket index into the step's [`bucket_ranges`].
+    pub bucket: u32,
+    /// Sending rank.
+    pub from: u32,
+    /// Folded bucket payload; **empty = abort marker**.
+    pub data: Vec<f64>,
+}
+
+impl Frame {
+    /// Abort marker: the sender's execute failed (or a child of it did),
+    /// so this bucket carries no payload — only the frame-count invariant.
+    pub fn is_abort(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes this frame occupies on the wire.
+    pub fn wire_bytes(nelems: usize) -> usize {
+        FRAME_HEADER_BYTES + 8 * nelems
+    }
+
+    /// Little-endian length-prefixed encoding (see [`FRAME_HEADER_BYTES`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::wire_bytes(self.data.len()));
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.bucket.to_le_bytes());
+        out.extend_from_slice(&self.from.to_le_bytes());
+        out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        for v in &self.data {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode one frame from a byte stream.  `Ok(None)` means the stream
+    /// ended cleanly *at* a frame boundary (peer closed); EOF mid-frame is
+    /// an error.
+    pub fn decode_from<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
+        let mut head = [0u8; FRAME_HEADER_BYTES];
+        let mut got = 0usize;
+        while got < head.len() {
+            let n = r.read(&mut head[got..])?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "collective stream ended mid-frame-header",
+                ));
+            }
+            got += n;
+        }
+        let seq = u64::from_le_bytes(head[0..8].try_into().unwrap());
+        let bucket = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let from = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        let nelems = u32::from_le_bytes(head[16..20].try_into().unwrap()) as usize;
+        let mut body = vec![0u8; 8 * nelems];
+        r.read_exact(&mut body)?;
+        let data = body
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect();
+        Ok(Some(Frame { seq, bucket, from, data }))
+    }
+}
+
+/// Split a flat payload of `flat_len` f64 elements into fixed-size buckets
+/// of `bucket_kb` KiB each (the last bucket takes the remainder).
+/// `bucket_kb == 0` means one monolithic bucket covering the whole payload
+/// — the knob's "today's path" setting.
+pub fn bucket_ranges(flat_len: usize, bucket_kb: usize) -> Vec<Range<usize>> {
+    if flat_len == 0 {
+        return Vec::new();
+    }
+    let per = if bucket_kb == 0 { flat_len } else { (bucket_kb * 1024 / 8).max(1) };
+    (0..flat_len).step_by(per).map(|s| s..(s + per).min(flat_len)).collect()
+}
+
+/// Out-of-order frame parking: frames are keyed `(seq, bucket, from)` and
+/// replayed when the receiver's bracket cursor reaches them — arrival
+/// order can change wall clock, never fold order.
+#[derive(Default)]
+pub struct FrameStash {
+    map: HashMap<(u64, u32, u32), Vec<f64>>,
+}
+
+impl FrameStash {
+    pub fn put(&mut self, f: Frame) {
+        self.map.insert((f.seq, f.bucket, f.from), f.data);
+    }
+
+    pub fn take(&mut self, seq: u64, bucket: u32, from: u32) -> Option<Vec<f64>> {
+        self.map.remove(&(seq, bucket, from))
+    }
+
+    /// Drop frames from steps older than `seq` (aborted-step residue).
+    pub fn gc_below(&mut self, seq: u64) {
+        self.map.retain(|k, _| k.0 >= seq);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// One rank's endpoint on the bucket-reduction tree.  Topology is the
+/// fixed log-tree bracket: a rank only ever sends *up* (to
+/// `reduce_parent(rank)`) and receives from its bracket children — the
+/// optimizer update stays replica-local (docs/distributed.md discusses the
+/// measured AdamW-vs-broadcast crossover behind that choice).
+pub trait Collective: Send {
+    fn rank(&self) -> usize;
+    fn n_ranks(&self) -> usize;
+
+    /// Send a fully-folded bucket to this rank's bracket parent.  Returns
+    /// the wire bytes spent.  Calling this on rank 0 (the root) is a
+    /// protocol bug and errors.
+    fn send_up(&mut self, seq: u64, bucket: u32, data: &[f64]) -> crate::Result<usize>;
+
+    /// Send the abort marker for a bucket (empty payload; see module docs).
+    fn send_abort(&mut self, seq: u64, bucket: u32) -> crate::Result<usize> {
+        self.send_up(seq, bucket, &[])
+    }
+
+    /// Non-blocking: drain any delivered frames into the stash, then take
+    /// the `(seq, bucket, src)` frame if present.
+    fn try_take(&mut self, seq: u64, bucket: u32, src: usize) -> Option<Frame>;
+
+    /// Non-blocking: drain delivered frames into the stash without taking
+    /// any (the pump's early-unit work — keeps transport buffers small
+    /// while the local accumulation is still running).  Implemented as a
+    /// `try_take` with a key no frame can carry.
+    fn drain(&mut self, seq: u64) {
+        let _ = self.try_take(seq, u32::MAX, usize::MAX);
+    }
+
+    /// Blocking receive of the `(seq, bucket, src)` frame (stash first).
+    fn recv(&mut self, seq: u64, bucket: u32, src: usize) -> crate::Result<Frame>;
+
+    /// Drop parked frames from steps older than `seq`.
+    fn gc_below(&mut self, seq: u64);
+}
+
+/// Shared receive logic for transports that deliver [`Frame`]s through an
+/// in-process channel (the channel bus directly; sockets via per-connection
+/// reader threads): stash-and-replay keyed `(seq, bucket, from)`.
+pub(crate) fn recv_frame(
+    rx: &std::sync::mpsc::Receiver<Frame>,
+    stash: &mut FrameStash,
+    seq: u64,
+    bucket: u32,
+    src: usize,
+) -> crate::Result<Frame> {
+    if let Some(data) = stash.take(seq, bucket, src as u32) {
+        return Ok(Frame { seq, bucket, from: src as u32, data });
+    }
+    loop {
+        let f = rx.recv().map_err(|_| {
+            anyhow::anyhow!("collective peer rank {src} disconnected (bucket {bucket})")
+        })?;
+        if f.seq < seq {
+            continue; // stale frame from an aborted earlier step
+        }
+        if f.seq == seq && f.bucket == bucket && f.from == src as u32 {
+            return Ok(f);
+        }
+        stash.put(f);
+    }
+}
+
+/// Shared non-blocking drain + take.
+pub(crate) fn try_take_frame(
+    rx: &std::sync::mpsc::Receiver<Frame>,
+    stash: &mut FrameStash,
+    seq: u64,
+    bucket: u32,
+    src: usize,
+) -> Option<Frame> {
+    while let Ok(f) = rx.try_recv() {
+        stash.put(f);
+    }
+    stash
+        .take(seq, bucket, src as u32)
+        .map(|data| Frame { seq, bucket, from: src as u32, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_ranges_partition_the_payload() {
+        for (len, kb) in [(0usize, 0usize), (1, 0), (10_000, 0), (10_000, 1), (100_000, 64)] {
+            let ranges = bucket_ranges(len, kb);
+            if len == 0 {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, len);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+                assert!(!w[0].is_empty());
+            }
+            assert!(!ranges.last().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn bucket_zero_is_one_monolithic_bucket() {
+        assert_eq!(bucket_ranges(12_345, 0), vec![0..12_345]);
+    }
+
+    #[test]
+    fn bucket_size_in_elements_is_kb_over_eight() {
+        // 64 KiB of f64 = 8192 elements per bucket
+        let ranges = bucket_ranges(20_000, 64);
+        assert_eq!(ranges, vec![0..8192, 8192..16_384, 16_384..20_000]);
+    }
+
+    #[test]
+    fn frame_round_trips_bit_exactly() {
+        let f = Frame {
+            seq: 7,
+            bucket: 3,
+            from: 5,
+            data: vec![1.5, -0.0, f64::NAN, f64::INFINITY, 1e-308, f64::from_bits(0x7ff80000dead0001)],
+        };
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), Frame::wire_bytes(f.data.len()));
+        let g = Frame::decode_from(&mut bytes.as_slice()).unwrap().unwrap();
+        assert_eq!(g.seq, 7);
+        assert_eq!(g.bucket, 3);
+        assert_eq!(g.from, 5);
+        // bit compare: NaN != NaN under PartialEq, the wire must keep bits
+        let a: Vec<u64> = f.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = g.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn abort_frame_round_trips_and_streams_chain() {
+        let abort = Frame { seq: 1, bucket: 0, from: 2, data: vec![] };
+        let real = Frame { seq: 1, bucket: 1, from: 2, data: vec![42.0] };
+        let mut wire = abort.encode();
+        wire.extend_from_slice(&real.encode());
+        let mut r = wire.as_slice();
+        let a = Frame::decode_from(&mut r).unwrap().unwrap();
+        assert!(a.is_abort());
+        let b = Frame::decode_from(&mut r).unwrap().unwrap();
+        assert!(!b.is_abort());
+        assert_eq!(b.data, vec![42.0]);
+        assert!(Frame::decode_from(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_silent_eof() {
+        let f = Frame { seq: 1, bucket: 0, from: 1, data: vec![1.0, 2.0] };
+        let bytes = f.encode();
+        let mut r = &bytes[..bytes.len() - 3];
+        assert!(Frame::decode_from(&mut r).is_err());
+        let mut r = &bytes[..FRAME_HEADER_BYTES - 2];
+        assert!(Frame::decode_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn stash_replays_by_key_and_gcs_stale_steps() {
+        let mut st = FrameStash::default();
+        st.put(Frame { seq: 1, bucket: 0, from: 3, data: vec![1.0] });
+        st.put(Frame { seq: 2, bucket: 0, from: 3, data: vec![2.0] });
+        assert_eq!(st.len(), 2);
+        assert!(st.take(2, 0, 1).is_none());
+        assert_eq!(st.take(2, 0, 3).unwrap(), vec![2.0]);
+        st.gc_below(2);
+        assert!(st.is_empty(), "seq-1 residue collected");
+    }
+}

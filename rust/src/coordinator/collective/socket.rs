@@ -1,0 +1,270 @@
+//! Socket collective transport: length-prefixed frames over loopback TCP
+//! with a rendezvous file — the Gloo-shaped, multi-process-capable impl.
+//!
+//! Rendezvous: every rank with bracket children binds a listener on
+//! `127.0.0.1:0` and appends `"<rank> <addr>\n"` to the rendezvous file
+//! (`O_APPEND`, one small write per rank — atomic on every platform we
+//! target).  A non-root rank polls the file for its bracket parent's line,
+//! dials it, and sends a 4-byte little-endian hello carrying its rank.
+//! Because every rank publishes *before* dialing its own parent, and a TCP
+//! connect succeeds against a bound listener's backlog even before
+//! `accept`, the rendezvous cannot deadlock; all waits are bounded by
+//! [`CONNECT_TIMEOUT`].
+//!
+//! Delivery: one reader thread per accepted child connection decodes
+//! [`Frame`]s into a shared in-process channel, so receive-side semantics
+//! (stash-and-replay keyed `(seq, bucket, from)`) are *identical* to the
+//! in-process transport — the transports differ only in how bytes move,
+//! never in fold order.  Reader threads exit on clean EOF when the child's
+//! endpoint drops at pool teardown.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::{recv_frame, try_take_frame, Collective, Frame, FrameStash};
+use crate::coordinator::dist::{reduce_children, reduce_parent};
+
+/// Upper bound on every rendezvous wait (parent line appearing, child
+/// connections arriving).  Generous for a loopback single host; a missing
+/// peer surfaces as an error here instead of a hang.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
+
+const POLL: Duration = Duration::from_millis(2);
+
+/// One rank's endpoint on the socket bucket tree.
+pub struct SocketCollective {
+    rank: usize,
+    n_ranks: usize,
+    parent: Option<TcpStream>,
+    rx: mpsc::Receiver<Frame>,
+    stash: FrameStash,
+}
+
+impl SocketCollective {
+    /// Join the rendezvous at `path` as `rank` of `n_ranks`.  Every rank
+    /// must call this concurrently (the pool runs the connects on parallel
+    /// builder threads); returns once this rank's parent link is dialed
+    /// and all child links are accepted.
+    pub fn connect(path: &Path, rank: usize, n_ranks: usize) -> crate::Result<SocketCollective> {
+        let children: Vec<usize> =
+            reduce_children(rank, n_ranks).into_iter().map(|(_, src)| src).collect();
+        // 1. publish before dialing anyone, so parents are always findable
+        let listener = if children.is_empty() {
+            None
+        } else {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            let addr = l.local_addr()?;
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            f.write_all(format!("{rank} {addr}\n").as_bytes())?;
+            Some(l)
+        };
+        // 2. dial the bracket parent (poll the rendezvous for its line)
+        let parent = match reduce_parent(rank) {
+            None => None,
+            Some(p) => {
+                let addr = wait_for_line(path, p)?;
+                let mut s = TcpStream::connect(addr.as_str())
+                    .map_err(|e| anyhow::anyhow!("rank {rank} dialing parent {p} at {addr}: {e}"))?;
+                s.set_nodelay(true)?;
+                s.write_all(&(rank as u32).to_le_bytes())?; // hello
+                Some(s)
+            }
+        };
+        // 3. accept one connection per bracket child; each gets a reader
+        // thread decoding frames into one shared channel
+        let (tx, rx) = mpsc::channel::<Frame>();
+        if let Some(l) = listener {
+            l.set_nonblocking(true)?;
+            let deadline = Instant::now() + CONNECT_TIMEOUT;
+            let mut accepted = 0usize;
+            while accepted < children.len() {
+                match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        spawn_reader(rank, s, children.clone(), tx.clone())?;
+                        accepted += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "rank {rank}: only {accepted}/{} children connected within {:?}",
+                            children.len(),
+                            CONNECT_TIMEOUT
+                        );
+                        std::thread::sleep(POLL);
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        Ok(SocketCollective { rank, n_ranks, parent, rx, stash: FrameStash::default() })
+    }
+
+    /// A fresh collision-free rendezvous path in the system temp dir.
+    pub fn fresh_rendezvous(tag: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static IDS: AtomicU64 = AtomicU64::new(0);
+        let id = IDS.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("tt-rdv-{}-{}-{tag}.txt", std::process::id(), id))
+    }
+}
+
+/// Poll the rendezvous file until `rank`'s `"<rank> <addr>"` line appears.
+fn wait_for_line(path: &Path, rank: usize) -> crate::Result<String> {
+    let prefix = format!("{rank} ");
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in text.lines() {
+                if let Some(addr) = line.strip_prefix(&prefix) {
+                    return Ok(addr.trim().to_string());
+                }
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "rendezvous {}: no line for rank {rank} within {:?}",
+            path.display(),
+            CONNECT_TIMEOUT
+        );
+        std::thread::sleep(POLL);
+    }
+}
+
+/// Reader thread: verify the hello names a bracket child, then decode
+/// frames into the shared channel until clean EOF.  A decode error or a
+/// foreign hello drops the sender, which surfaces as "peer disconnected"
+/// at the blocked receiver instead of a hang.
+fn spawn_reader(
+    rank: usize,
+    mut s: TcpStream,
+    children: Vec<usize>,
+    tx: mpsc::Sender<Frame>,
+) -> crate::Result<()> {
+    std::thread::Builder::new()
+        .name(format!("tt-coll-rx-{rank}"))
+        .spawn(move || {
+            let mut hello = [0u8; 4];
+            if std::io::Read::read_exact(&mut s, &mut hello).is_err() {
+                return;
+            }
+            let from = u32::from_le_bytes(hello) as usize;
+            if !children.contains(&from) {
+                return; // foreign connection: drop it, starve the recv
+            }
+            while let Ok(Some(f)) = Frame::decode_from(&mut s) {
+                if tx.send(f).is_err() {
+                    return; // endpoint dropped: stop reading
+                }
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("spawn collective reader: {e}"))?;
+    Ok(())
+}
+
+impl Collective for SocketCollective {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn send_up(&mut self, seq: u64, bucket: u32, data: &[f64]) -> crate::Result<usize> {
+        let rank = self.rank;
+        let s = self
+            .parent
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("rank 0 is the reduce root and has no parent"))?;
+        let frame = Frame { seq, bucket, from: rank as u32, data: data.to_vec() };
+        let bytes = frame.encode();
+        s.write_all(&bytes)
+            .map_err(|e| anyhow::anyhow!("rank {rank} bucket {bucket} send: {e}"))?;
+        Ok(bytes.len())
+    }
+
+    fn try_take(&mut self, seq: u64, bucket: u32, src: usize) -> Option<Frame> {
+        try_take_frame(&self.rx, &mut self.stash, seq, bucket, src)
+    }
+
+    fn recv(&mut self, seq: u64, bucket: u32, src: usize) -> crate::Result<Frame> {
+        recv_frame(&self.rx, &mut self.stash, seq, bucket, src)
+    }
+
+    fn gc_below(&mut self, seq: u64) {
+        self.stash.gc_below(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Connect `n` endpoints concurrently on scratch threads, returning
+    /// them rank-ordered.
+    fn mesh(n: usize, tag: &str) -> Vec<SocketCollective> {
+        let path = SocketCollective::fresh_rendezvous(tag);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let p = path.clone();
+                std::thread::spawn(move || SocketCollective::connect(&p, r, n).unwrap())
+            })
+            .collect();
+        let out = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let _ = std::fs::remove_file(&path);
+        out
+    }
+
+    #[test]
+    fn two_rank_round_trip_preserves_bits() {
+        let mut m = mesh(2, "pair");
+        let mut c1 = m.remove(1);
+        let mut c0 = m.remove(0);
+        let payload = vec![1.5, f64::NAN, -0.0, 1e300];
+        let sent = c1.send_up(3, 0, &payload).unwrap();
+        assert_eq!(sent, Frame::wire_bytes(4));
+        let f = c0.recv(3, 0, 1).unwrap();
+        let a: Vec<u64> = payload.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> = f.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn five_rank_tree_delivers_all_buckets_in_bracket_order() {
+        // bracket for n=5: children of 0 are [1, 2, 4]; of 2: [3]
+        let mut m = mesh(5, "tree");
+        let mut c4 = m.remove(4);
+        let mut c3 = m.remove(3);
+        let mut c2 = m.remove(2);
+        let mut c1 = m.remove(1);
+        let mut c0 = m.remove(0);
+        for b in 0..2u32 {
+            c3.send_up(1, b, &[3.0 + b as f64]).unwrap();
+            c4.send_up(1, b, &[4.0 + b as f64]).unwrap();
+            c1.send_up(1, b, &[1.0 + b as f64]).unwrap();
+        }
+        for b in 0..2u32 {
+            let f = c2.recv(1, b, 3).unwrap();
+            c2.send_up(1, b, &[2.0 + b as f64 + f.data[0]]).unwrap();
+        }
+        for b in 0..2u32 {
+            assert_eq!(c0.recv(1, b, 1).unwrap().data, vec![1.0 + b as f64]);
+            assert_eq!(c0.recv(1, b, 2).unwrap().data, vec![5.0 + 2.0 * b as f64]);
+            assert_eq!(c0.recv(1, b, 4).unwrap().data, vec![4.0 + b as f64]);
+        }
+    }
+
+    #[test]
+    fn abort_frames_cross_the_wire() {
+        let mut m = mesh(2, "abort");
+        let mut c1 = m.remove(1);
+        let mut c0 = m.remove(0);
+        c1.send_abort(9, 2).unwrap();
+        let f = c0.recv(9, 2, 1).unwrap();
+        assert!(f.is_abort());
+    }
+}

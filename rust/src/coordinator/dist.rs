@@ -27,6 +27,21 @@
 //!   still-executing ranks, and the executor thread blocks parked on a
 //!   channel — freeing its core for the pipeline's planner thread — instead
 //!   of spinning through an O(ranks) serial fold.
+//! * **Pluggable, bucketed collective** ([`crate::coordinator::collective`],
+//!   behind [`ReduceOptions`]).  The reduction is split into a typed
+//!   *control plane* (the channels above: errors, walls, scalar sums,
+//!   digests — all of PR 5's machinery, unchanged) and an f64 *data plane*:
+//!   the gradient payload travels as fixed parameter-range **buckets** over
+//!   a [`Collective`] transport — in-process channels or length-prefixed
+//!   frames on loopback sockets with a rendezvous file (Gloo-shaped,
+//!   multi-process capable).  Each rank folds a bucket's children strictly
+//!   in bracket round order and sends it up as soon as it is complete, from
+//!   a hook *inside* execute ([`RankWorker::execute_hooked`]) — so bucket
+//!   `b` can climb the tree while bucket `b+1` is still folding and while
+//!   slower ranks are still executing, instead of the whole payload
+//!   stalling on the last batch.  `reduce_bucket_kb = 0` with the
+//!   in-process transport is byte-for-byte today's monolithic path (no
+//!   collective is even constructed).
 //!
 //! **Determinism contract** (docs/distributed.md):
 //!
@@ -38,6 +53,13 @@
 //!   bracket above — thread scheduling and message arrival order can change
 //!   wall-clock, never bits (out-of-round arrivals are stashed and merged
 //!   in round order).
+//! * Bucketing and transport choice never change bits either: per payload
+//!   element the fold sequence — own accumulation complete first, then
+//!   children in bracket round order — is identical whether the payload is
+//!   folded whole-buffer on the typed path or bucket-by-bucket on any
+//!   collective transport, so every `(reduce_bucket_kb, transport)` config
+//!   reduces to the *same bits* (proof sketch in docs/distributed.md;
+//!   python mirror: `python/tests/test_bucket_reduce.py`).
 //! * `ranks == N` vs `ranks == 1` agree to f64 tolerance, not bitwise: the
 //!   same per-call gradients are summed in a different association.
 //! * **One-time bit change vs. PR 4:** the log-tree bracket *reassociates*
@@ -61,6 +83,7 @@
 //! created once per run (`ranks` spawns total, zero per subsequent step).
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -70,6 +93,7 @@ use crate::trainer::planner::{ShardedPlan, StepPlan};
 use crate::trainer::prefix_cache::{reuse_ratio, CacheStats};
 use crate::trainer::{GradBuffer, StepMetrics};
 
+use super::collective::{bucket_ranges, ChannelCollective, Collective, SocketCollective};
 use super::AnyTrainer;
 
 // ───────────────────────── reduce pairing schedule ─────────────────────────
@@ -145,11 +169,62 @@ pub fn thread_spawns() -> u64 {
     THREAD_SPAWNS.load(Ordering::SeqCst)
 }
 
+// ──────────────────────────── reduce options ────────────────────────────────
+
+/// Which [`Collective`] transport carries the bucket data plane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process `mpsc` bus (the reference impl; zero serialization).
+    #[default]
+    InProcess,
+    /// Length-prefixed frames over loopback TCP with a rendezvous file —
+    /// the Gloo-shaped, multi-process-capable transport.
+    Socket,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> crate::Result<Transport> {
+        match s {
+            "in_process" | "inprocess" | "channel" => Ok(Transport::InProcess),
+            "socket" => Ok(Transport::Socket),
+            other => anyhow::bail!("unknown collective transport {other:?} (in_process|socket)"),
+        }
+    }
+}
+
+/// How a [`RankPool`] reduces: bucket size and transport.  The default
+/// (`bucket_kb == 0`, in-process) is byte-for-byte the monolithic typed
+/// path — no collective is constructed at all.
+#[derive(Clone, Debug, Default)]
+pub struct ReduceOptions {
+    /// Bucket size in KiB of f64 payload (`0` = one monolithic bucket; on
+    /// the in-process transport `0` short-circuits to the legacy path).
+    pub bucket_kb: usize,
+    /// Data-plane transport.
+    pub transport: Transport,
+    /// Rendezvous file for the socket transport (auto-generated in the
+    /// system temp dir when unset).
+    pub rendezvous: Option<std::path::PathBuf>,
+}
+
+impl ReduceOptions {
+    /// Whether this config routes payloads over a [`Collective`] at all.
+    pub fn uses_collective(&self) -> bool {
+        self.bucket_kb > 0 || self.transport == Transport::Socket
+    }
+}
+
 // ───────────────────────────── worker protocol ──────────────────────────────
 
 /// Per-rank executor state owned by one pool worker thread for the whole
 /// run.  Only `Send` is required: state is *moved* into the worker at pool
 /// construction, never shared by reference across rank threads.
+///
+/// The payload methods (`flat_grad_len` / `read_payload` / `fold_payload` /
+/// `strip_payload` / `reduce_stripped` / `execute_hooked`) opt a worker
+/// into the bucketed collective data plane; the defaults leave a worker on
+/// the monolithic typed path regardless of [`ReduceOptions`], so simple
+/// workers (tests, counters) never see buckets.
 pub trait RankWorker: Send + 'static {
     /// Per-step accumulator (gradients, losses, digests).
     type Acc: Send + 'static;
@@ -166,6 +241,63 @@ pub trait RankWorker: Send + 'static {
 
     /// Apply the broadcast update to this worker's replica state.
     fn apply(&mut self, update: &Self::Update) -> crate::Result<()>;
+
+    // ── bucketed data plane (optional; defaults = monolithic path) ──
+
+    /// Length of the flat f64 payload the collective can bucket, identical
+    /// on every rank.  `None` (the default) keeps the worker on the
+    /// monolithic typed path.
+    fn flat_grad_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Copy the flat payload range into `out` (cleared first).
+    fn read_payload(_acc: &Self::Acc, _range: Range<usize>, _out: &mut Vec<f64>) {}
+
+    /// Element-wise add a child's bucket into the flat payload range.
+    fn fold_payload(_acc: &mut Self::Acc, _range: Range<usize>, _data: &[f64]) {}
+
+    /// Drop the payload before the accumulator travels the typed control
+    /// plane (its payload already went up the collective).
+    fn strip_payload(_acc: &mut Self::Acc) {}
+
+    /// Merge a payload-stripped child accumulator: scalars and digests
+    /// only.  Must fold those fields in exactly the order [`Self::reduce`]
+    /// does, so control-plane sums stay bit-identical to the monolithic
+    /// path.  The default delegates to `reduce` (correct whenever `reduce`
+    /// tolerates an empty payload).
+    fn reduce_stripped(acc: &mut Self::Acc, other: Self::Acc) {
+        Self::reduce(acc, other);
+    }
+
+    /// [`Self::execute`] with a progress hook the pool uses to pump the
+    /// collective *inside* the execute window: called after each device
+    /// batch as `on_unit(&mut acc, unit_index)`.  The default ignores the
+    /// hook (all bucket work then happens post-execute — correct, just
+    /// zero overlap).
+    fn execute_hooked(
+        &mut self,
+        rank: usize,
+        plan: &StepPlan,
+        on_unit: &mut dyn FnMut(&mut Self::Acc, usize),
+    ) -> crate::Result<(Self::Acc, usize)> {
+        let _ = on_unit;
+        self.execute(rank, plan)
+    }
+}
+
+/// Hook invocations [`RankWorker::execute_hooked`] will make for `plan`:
+/// one per forest device batch plus one for the relay (tree mode), one per
+/// packed batch (baseline).  The pump treats the last unit as the point
+/// where every bucket's own accumulation is final — with a dense gradient
+/// (the tied-softmax reference model touches every parameter row each
+/// batch) no bucket is final earlier; a sparse backward would move
+/// readiness earlier through this same seam.
+pub fn plan_units(plan: &StepPlan) -> usize {
+    match plan {
+        StepPlan::Tree(p) => p.forests.len() + usize::from(p.relay.is_some()),
+        StepPlan::Baseline(p) => p.batches.len(),
+    }
 }
 
 /// One subtree of the in-flight reduction, flowing child → parent.
@@ -182,6 +314,13 @@ struct Subtree<B> {
     /// overlap accounting: merges before this instant hid behind
     /// still-executing ranks).
     exec_end: Instant,
+    /// Collective fold + send wall spent *inside* execute windows across
+    /// this subtree (the bucketed path's overlap; 0 on the typed path).
+    bucket_overlap_ms: f64,
+    /// Wire bytes the subtree's ranks sent up the collective.
+    collective_bytes: u64,
+    /// Buckets per rank this step (0 on the monolithic typed path).
+    buckets: u32,
 }
 
 struct PeerMsg<B> {
@@ -222,6 +361,13 @@ pub struct RankReduce<B> {
     pub reduce_overlap_ms: f64,
     /// `ceil(log2(ranks))` — rounds of the fixed reduce bracket.
     pub reduce_depth: u32,
+    /// Buckets the payload was split into (0 = monolithic typed path).
+    pub reduce_buckets: u64,
+    /// Collective fold + send wall hidden inside execute windows, summed
+    /// across ranks (the bucketed path's measured overlap).
+    pub bucket_overlap_ms: f64,
+    /// Wire bytes sent over the collective, summed across ranks.
+    pub collective_bytes: u64,
 }
 
 // ─────────────────────────────── the pool ───────────────────────────────────
@@ -252,13 +398,22 @@ pub struct RankPool<W: RankWorker> {
 impl<W: RankWorker> RankPool<W> {
     /// Spawn one worker thread per rank (none for a single rank), moving
     /// each worker's state onto its thread.  `workers[r]` becomes rank `r`.
-    pub fn new(mut workers: Vec<W>) -> crate::Result<Self> {
+    /// Monolithic in-process reduction (the seed path).
+    pub fn new(workers: Vec<W>) -> crate::Result<Self> {
+        Self::new_with(workers, ReduceOptions::default())
+    }
+
+    /// [`Self::new`] with an explicit bucket size and transport.  With the
+    /// default options no collective is constructed and the pool is
+    /// byte-for-byte the legacy monolithic path.
+    pub fn new_with(mut workers: Vec<W>, opts: ReduceOptions) -> crate::Result<Self> {
         anyhow::ensure!(!workers.is_empty(), "rank pool needs at least one worker");
         let n = workers.len();
         if n == 1 {
             let w = workers.pop().expect("one worker");
             return Ok(Self { inner: PoolInner::Inline(w), n_ranks: 1, seq: 0 });
         }
+        let mut collectives = build_collectives(n, &opts)?;
         // per-rank peer channels carry subtree accumulators child → parent
         let (peer_txs, peer_rxs): (Vec<_>, Vec<_>) =
             (0..n).map(|_| mpsc::channel::<PeerMsg<W::Acc>>()).unzip();
@@ -272,10 +427,14 @@ impl<W: RankWorker> RankPool<W> {
             let root = if rank == 0 { Some(root_tx.clone()) } else { None };
             let children: Vec<usize> =
                 reduce_children(rank, n).into_iter().map(|(_, src)| src).collect();
+            let coll = collectives[rank].take();
+            let bucket_kb = opts.bucket_kb;
             THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
             let handle = std::thread::Builder::new()
                 .name(format!("tt-rank-{rank}"))
-                .spawn(move || worker_loop(worker, rank, job_rx, peer_rx, parent_tx, root, children))
+                .spawn(move || {
+                    worker_loop(worker, rank, job_rx, peer_rx, parent_tx, root, children, coll, bucket_kb)
+                })
                 .expect("spawn rank worker thread");
             handles.push(handle);
         }
@@ -310,6 +469,9 @@ impl<W: RankWorker> RankPool<W> {
                     reduce_ms: 0.0,
                     reduce_overlap_ms: 0.0,
                     reduce_depth: 0,
+                    reduce_buckets: 0,
+                    bucket_overlap_ms: 0.0,
+                    collective_bytes: 0,
                 })
             }
             PoolInner::Threads { job_txs, root_rx, .. } => {
@@ -340,6 +502,9 @@ impl<W: RankWorker> RankPool<W> {
                     reduce_ms: sub.merge_ms,
                     reduce_overlap_ms: (sub.merge_ms - tail_ms).max(0.0),
                     reduce_depth: reduce_depth(plan.n_ranks()),
+                    reduce_buckets: sub.buckets as u64,
+                    bucket_overlap_ms: sub.bucket_overlap_ms,
+                    collective_bytes: sub.collective_bytes,
                 })
             }
         }
@@ -422,6 +587,249 @@ fn recv_child<B>(
     }
 }
 
+/// Construct the per-rank collective endpoints for `opts` — or all `None`
+/// when the config stays on the monolithic typed path (the default: no
+/// collective is even allocated).  Socket endpoints must rendezvous
+/// concurrently, so they connect on parallel builder threads; a failed
+/// rendezvous surfaces here, at pool construction, not mid-step.
+fn build_collectives(
+    n: usize,
+    opts: &ReduceOptions,
+) -> crate::Result<Vec<Option<Box<dyn Collective>>>> {
+    if !opts.uses_collective() {
+        return Ok((0..n).map(|_| None).collect());
+    }
+    match opts.transport {
+        Transport::InProcess => Ok(ChannelCollective::bus(n)
+            .into_iter()
+            .map(|c| Some(Box::new(c) as Box<dyn Collective>))
+            .collect()),
+        Transport::Socket => {
+            let auto = opts.rendezvous.is_none();
+            let path = opts
+                .rendezvous
+                .clone()
+                .unwrap_or_else(|| SocketCollective::fresh_rendezvous("pool"));
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let p = path.clone();
+                    std::thread::spawn(move || SocketCollective::connect(&p, r, n))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            let mut first_err = None;
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(c)) => out.push(Some(Box::new(c) as Box<dyn Collective>)),
+                    Ok(Err(e)) => {
+                        first_err.get_or_insert(e);
+                    }
+                    Err(_) => {
+                        first_err
+                            .get_or_insert(anyhow::anyhow!("collective rendezvous thread panicked"));
+                    }
+                }
+            }
+            if auto {
+                let _ = std::fs::remove_file(&path);
+            }
+            match first_err {
+                None => Ok(out),
+                Some(e) => Err(e),
+            }
+        }
+    }
+}
+
+/// Keep the frames-per-rank invariant on a step this rank cannot execute
+/// (a deferred apply error): every bucket still gets exactly one abort
+/// frame, so the bracket parent's blocking receives never hang.  The real
+/// error travels the typed control plane as always.
+fn abort_all_buckets<W: RankWorker>(
+    state: &W,
+    coll: &mut dyn Collective,
+    seq: u64,
+    bucket_kb: usize,
+) {
+    coll.gc_below(seq);
+    if reduce_parent(coll.rank()).is_none() {
+        return;
+    }
+    let flat_len = state.flat_grad_len().unwrap_or(0);
+    for b in 0..bucket_ranges(flat_len, bucket_kb).len() {
+        let _ = coll.send_abort(seq, b as u32);
+    }
+}
+
+/// The bucketed execute: run [`RankWorker::execute_hooked`] with a pump
+/// that, after every device batch, drains arrived child frames and — once
+/// the local accumulation is final (last unit) — folds children strictly in
+/// bracket round order and sends complete buckets up, all *inside* the
+/// execute window (`bucket_overlap_ms`).  A finish phase after execute
+/// blocks for whatever is still missing and sends the remainder, so the
+/// per-step frame invariant (each bucket received once per child, sent once
+/// if non-root — abort on any failure) holds on every path out.
+fn execute_bucketed<W: RankWorker>(
+    state: &mut W,
+    rank: usize,
+    plan: &StepPlan,
+    seq: u64,
+    coll: &mut dyn Collective,
+    bucket_kb: usize,
+    children: &[usize],
+) -> crate::Result<Subtree<W::Acc>> {
+    let flat_len = state.flat_grad_len().unwrap_or(0);
+    let ranges = bucket_ranges(flat_len, bucket_kb);
+    let n_buckets = ranges.len();
+    let is_root = reduce_parent(rank).is_none();
+    let units = plan_units(plan);
+    coll.gc_below(seq);
+    // per-bucket bracket cursor into `children`, send state, poison flag
+    let mut next_child = vec![0usize; n_buckets];
+    let mut sent = vec![false; n_buckets];
+    let mut poisoned = vec![false; n_buckets];
+    let mut pump_ms = 0.0f64;
+    let mut bytes = 0u64;
+    let mut send_err: Option<anyhow::Error> = None;
+    let mut scratch: Vec<f64> = Vec::new();
+
+    let t_exec = Instant::now();
+    let result = {
+        let coll = &mut *coll;
+        let ranges = &ranges;
+        let next_child = &mut next_child;
+        let sent = &mut sent;
+        let poisoned = &mut poisoned;
+        let pump_ms = &mut pump_ms;
+        let bytes = &mut bytes;
+        let send_err = &mut send_err;
+        let scratch = &mut scratch;
+        catch_unwind(AssertUnwindSafe(|| {
+            state.execute_hooked(rank, plan, &mut |acc, unit| {
+                if send_err.is_some() {
+                    return;
+                }
+                let t0 = Instant::now();
+                coll.drain(seq);
+                if unit + 1 >= units {
+                    // local accumulation is final: fold + forward buckets
+                    for (b, range) in ranges.iter().enumerate() {
+                        while next_child[b] < children.len() {
+                            match coll.try_take(seq, b as u32, children[next_child[b]]) {
+                                None => break,
+                                Some(f) => {
+                                    if f.is_abort() {
+                                        poisoned[b] = true;
+                                    } else if !poisoned[b] {
+                                        W::fold_payload(acc, range.clone(), &f.data);
+                                    }
+                                    next_child[b] += 1;
+                                }
+                            }
+                        }
+                        if !is_root && !sent[b] && next_child[b] == children.len() {
+                            let r = if poisoned[b] {
+                                coll.send_abort(seq, b as u32)
+                            } else {
+                                W::read_payload(acc, range.clone(), scratch);
+                                coll.send_up(seq, b as u32, scratch)
+                            };
+                            sent[b] = true;
+                            match r {
+                                Ok(n) => *bytes += n as u64,
+                                Err(e) => {
+                                    *send_err = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                *pump_ms += t0.elapsed().as_secs_f64() * 1e3;
+            })
+        }))
+    };
+    let exec_wall_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+    let exec_end = Instant::now();
+    let mut out: crate::Result<(W::Acc, usize)> = match result {
+        Ok(Ok(pair)) => Ok(pair),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(anyhow::anyhow!("rank {rank} executor panicked")),
+    };
+    if let Some(e) = send_err {
+        if out.is_ok() {
+            out = Err(e);
+        }
+    }
+    // finish: block for missing child frames (fold in cursor order), then
+    // send every bucket not yet sent — real payload, or abort on failure
+    let t_fin = Instant::now();
+    let mut recv_err: Option<anyhow::Error> = None;
+    for (b, range) in ranges.iter().enumerate() {
+        while next_child[b] < children.len() {
+            match coll.recv(seq, b as u32, children[next_child[b]]) {
+                Ok(f) => {
+                    if f.is_abort() {
+                        poisoned[b] = true;
+                    } else if !poisoned[b] {
+                        if let Ok((acc, _)) = &mut out {
+                            W::fold_payload(acc, range.clone(), &f.data);
+                        }
+                    }
+                    next_child[b] += 1;
+                }
+                Err(e) => {
+                    recv_err.get_or_insert(e);
+                    poisoned[b] = true;
+                    break; // peer gone: stop waiting on this bucket
+                }
+            }
+        }
+    }
+    if let Some(e) = recv_err {
+        if out.is_ok() {
+            out = Err(e);
+        }
+    }
+    if !is_root {
+        for (b, range) in ranges.iter().enumerate() {
+            if sent[b] {
+                continue;
+            }
+            let r = if poisoned[b] || out.is_err() {
+                coll.send_abort(seq, b as u32)
+            } else {
+                let acc = &out.as_ref().expect("checked ok").0;
+                W::read_payload(acc, range.clone(), &mut scratch);
+                coll.send_up(seq, b as u32, &scratch)
+            };
+            sent[b] = true;
+            match r {
+                Ok(n) => bytes += n as u64,
+                Err(e) => {
+                    // best effort: keep aborting the rest so peers unblock
+                    if out.is_ok() {
+                        out = Err(e);
+                    }
+                }
+            }
+        }
+    }
+    let finish_ms = t_fin.elapsed().as_secs_f64() * 1e3;
+    let (acc, device_tokens) = out?;
+    Ok(Subtree {
+        acc,
+        device_tokens,
+        merge_ms: finish_ms,
+        walls: vec![(rank, exec_wall_ms)],
+        exec_end,
+        bucket_overlap_ms: pump_ms,
+        collective_bytes: bytes,
+        buckets: n_buckets as u32,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<W: RankWorker>(
     mut state: W,
     rank: usize,
@@ -430,6 +838,8 @@ fn worker_loop<W: RankWorker>(
     parent_tx: Option<mpsc::Sender<PeerMsg<W::Acc>>>,
     root_tx: Option<mpsc::Sender<RootMsg<W::Acc>>>,
     children: Vec<usize>,
+    mut collective: Option<Box<dyn Collective>>,
+    bucket_kb: usize,
 ) -> crate::Result<()> {
     let mut deferred: Option<anyhow::Error> = None;
     let mut stash: ChildStash<W::Acc> = HashMap::new();
@@ -445,8 +855,29 @@ fn worker_loop<W: RankWorker>(
                 }
             }
             Job::Execute { seq, plan } => {
+                // the bucketed data plane engages only when a collective was
+                // built for this pool AND the worker exposes a flat payload
+                // (uniform across ranks — all workers are the same type)
+                let bucketed =
+                    collective.is_some() && state.flat_grad_len().is_some_and(|l| l > 0);
                 let mut sub: crate::Result<Subtree<W::Acc>> = match deferred.take() {
-                    Some(e) => Err(e),
+                    Some(e) => {
+                        if bucketed {
+                            // still owe peers one frame per bucket
+                            let coll = collective.as_deref_mut().expect("bucketed");
+                            abort_all_buckets(&state, coll, seq, bucket_kb);
+                        }
+                        Err(e)
+                    }
+                    None if bucketed => execute_bucketed(
+                        &mut state,
+                        rank,
+                        &plan.ranks[rank],
+                        seq,
+                        collective.as_deref_mut().expect("bucketed"),
+                        bucket_kb,
+                        &children,
+                    ),
                     None => {
                         let t_exec = Instant::now();
                         match catch_unwind(AssertUnwindSafe(|| {
@@ -458,6 +889,9 @@ fn worker_loop<W: RankWorker>(
                                 merge_ms: 0.0,
                                 walls: vec![(rank, t_exec.elapsed().as_secs_f64() * 1e3)],
                                 exec_end: Instant::now(),
+                                bucket_overlap_ms: 0.0,
+                                collective_bytes: 0,
+                                buckets: 0,
                             }),
                             Ok(Err(e)) => Err(e),
                             Err(_) => Err(anyhow::anyhow!("rank {rank} executor panicked")),
@@ -466,7 +900,10 @@ fn worker_loop<W: RankWorker>(
                 };
                 // merge children in fixed round order; errors anywhere in a
                 // subtree propagate up, and the full receive schedule always
-                // runs so no peer message is left behind (deadlock-free)
+                // runs so no peer message is left behind (deadlock-free).
+                // In bucketed mode child payloads already arrived as frames,
+                // so the typed accumulators come up stripped and merge via
+                // `reduce_stripped` (scalars/digests only, same fold order).
                 for &src in &children {
                     match recv_child(&peer_rx, &mut stash, src, seq) {
                         Err(e) => {
@@ -481,12 +918,21 @@ fn worker_loop<W: RankWorker>(
                                 merge_ms: b_merge,
                                 walls: b_walls,
                                 exec_end: b_end,
+                                bucket_overlap_ms: b_overlap,
+                                collective_bytes: b_bytes,
+                                buckets: b_buckets,
                             } = b;
                             let mut panicked = false;
                             if let Ok(a) = &mut sub {
                                 let t0 = Instant::now();
-                                if catch_unwind(AssertUnwindSafe(|| W::reduce(&mut a.acc, b_acc)))
-                                    .is_err()
+                                if catch_unwind(AssertUnwindSafe(|| {
+                                    if bucketed {
+                                        W::reduce_stripped(&mut a.acc, b_acc)
+                                    } else {
+                                        W::reduce(&mut a.acc, b_acc)
+                                    }
+                                }))
+                                .is_err()
                                 {
                                     panicked = true;
                                 } else {
@@ -496,6 +942,9 @@ fn worker_loop<W: RankWorker>(
                                     if b_end > a.exec_end {
                                         a.exec_end = b_end;
                                     }
+                                    a.bucket_overlap_ms += b_overlap;
+                                    a.collective_bytes += b_bytes;
+                                    a.buckets = a.buckets.max(b_buckets);
                                 }
                             }
                             if panicked {
@@ -505,6 +954,13 @@ fn worker_loop<W: RankWorker>(
                     }
                 }
                 if let Some(tx) = &parent_tx {
+                    if bucketed {
+                        // payload already went up the collective; the typed
+                        // plane carries only scalars/digests from here
+                        if let Ok(a) = &mut sub {
+                            W::strip_payload(&mut a.acc);
+                        }
+                    }
                     let _ = tx.send(PeerMsg { seq, from: rank, payload: sub });
                 } else if let Some(tx) = &root_tx {
                     let _ = tx.send(RootMsg { seq, payload: sub, reduce_done: Instant::now() });
@@ -521,18 +977,31 @@ fn worker_loop<W: RankWorker>(
 // ───────────────────────── the XLA trainer workers ──────────────────────────
 
 /// Run one rank's plan against a trainer (replica on a worker thread, or
-/// the caller's own trainer on the inline single-rank path).
+/// the caller's own trainer on the inline single-rank path), draining the
+/// engine's prefix-cache counters into the accumulator so the pooled
+/// reduce surfaces a *live* reuse trio — summed across ranks — instead of
+/// the primary engine's inert zeros.
 fn run_rank(trainer: &AnyTrainer, plan: &StepPlan) -> crate::Result<(GradBuffer, usize)> {
-    match (trainer, plan) {
+    run_rank_hooked(trainer, plan, &mut |_, _| {})
+}
+
+/// [`run_rank`] with the collective pump hook threaded through to the
+/// trainer's per-device-batch loop ([`crate::trainer::TreeTrainer::run_plan_hooked`]).
+fn run_rank_hooked(
+    trainer: &AnyTrainer,
+    plan: &StepPlan,
+    on_unit: &mut dyn FnMut(&mut GradBuffer, usize),
+) -> crate::Result<(GradBuffer, usize)> {
+    let (mut gb, tokens) = match (trainer, plan) {
         (AnyTrainer::Tree(t), StepPlan::Tree(p)) => {
             let mut gb = t.engine.grad_buffer();
-            let tokens = t.run_plan(p, &mut gb)?;
-            Ok((gb, tokens))
+            let tokens = t.run_plan_hooked(p, &mut gb, on_unit)?;
+            (gb, tokens)
         }
         (AnyTrainer::Baseline(t), StepPlan::Baseline(p)) => {
             let mut gb = t.engine.grad_buffer();
-            let tokens = t.run_plan(p, &mut gb)?;
-            Ok((gb, tokens))
+            let tokens = t.run_plan_hooked(p, &mut gb, on_unit)?;
+            (gb, tokens)
         }
         (AnyTrainer::Tree(_), StepPlan::Baseline(_)) => {
             anyhow::bail!("baseline rank plan handed to TreeTrainer (pipeline bug)")
@@ -540,7 +1009,11 @@ fn run_rank(trainer: &AnyTrainer, plan: &StepPlan) -> crate::Result<(GradBuffer,
         (AnyTrainer::Baseline(_), StepPlan::Tree(_)) => {
             anyhow::bail!("tree rank plan handed to BaselineTrainer (pipeline bug)")
         }
-    }
+    };
+    // cache counters ride the typed control plane (never the payload
+    // buckets), so strip_payload keeps them intact
+    gb.cache.absorb(&trainer.take_cache_stats());
+    Ok((gb, tokens))
 }
 
 /// One rank's persistent executor state: a full trainer replica whose
@@ -578,6 +1051,38 @@ impl RankWorker for TrainerWorker {
         };
         Ok(())
     }
+
+    // ── bucketed data plane: flat views over the GradBuffer ──
+
+    fn flat_grad_len(&self) -> Option<usize> {
+        Some(self.trainer.grad_elems())
+    }
+
+    fn read_payload(acc: &GradBuffer, range: Range<usize>, out: &mut Vec<f64>) {
+        acc.read_flat(range, out);
+    }
+
+    fn fold_payload(acc: &mut GradBuffer, range: Range<usize>, data: &[f64]) {
+        acc.fold_flat(range, data);
+    }
+
+    fn strip_payload(acc: &mut GradBuffer) {
+        acc.strip_grads();
+    }
+
+    fn reduce_stripped(acc: &mut GradBuffer, other: GradBuffer) {
+        // exactly the scalar half of `merge`, in the same fold order
+        acc.merge_scalars(&other);
+    }
+
+    fn execute_hooked(
+        &mut self,
+        _rank: usize,
+        plan: &StepPlan,
+        on_unit: &mut dyn FnMut(&mut GradBuffer, usize),
+    ) -> crate::Result<(GradBuffer, usize)> {
+        run_rank_hooked(&self.trainer, plan, on_unit)
+    }
 }
 
 /// The distributed step driver for the XLA trainers, owned by the run loop
@@ -594,17 +1099,29 @@ pub struct TrainerPool {
 
 impl TrainerPool {
     /// Build the pool: replicate the primary trainer once per rank
-    /// (`ranks >= 2`) or do nothing (`ranks == 1`).
+    /// (`ranks >= 2`) or do nothing (`ranks == 1`).  Monolithic reduce.
     pub fn new(trainer: &AnyTrainer, ranks: usize) -> crate::Result<Self> {
+        Self::new_with(trainer, ranks, ReduceOptions::default())
+    }
+
+    /// [`Self::new`] with an explicit reduction config.  Rank `r`'s replica
+    /// compiles its programs for device ordinal `r`
+    /// ([`crate::coordinator::AnyTrainer::replicate`] — wrapped onto the
+    /// client's real device count, so a single-device host still builds).
+    pub fn new_with(
+        trainer: &AnyTrainer,
+        ranks: usize,
+        opts: ReduceOptions,
+    ) -> crate::Result<Self> {
         anyhow::ensure!(ranks >= 1, "ranks must be >= 1");
         if ranks == 1 {
             return Ok(Self { pool: None, spawn_ms: 0.0 });
         }
         let t0 = Instant::now();
         let workers = (0..ranks)
-            .map(|_| Ok(TrainerWorker { trainer: trainer.replicate()? }))
+            .map(|r| Ok(TrainerWorker { trainer: trainer.replicate(r)? }))
             .collect::<crate::Result<Vec<_>>>()?;
-        let pool = RankPool::new(workers)?;
+        let pool = RankPool::new_with(workers, opts)?;
         Ok(Self { pool: Some(pool), spawn_ms: t0.elapsed().as_secs_f64() * 1e3 })
     }
 
@@ -636,6 +1153,9 @@ impl TrainerPool {
                     reduce_ms: 0.0,
                     reduce_overlap_ms: 0.0,
                     reduce_depth: 0,
+                    reduce_buckets: 0,
+                    bucket_overlap_ms: 0.0,
+                    collective_bytes: 0,
                 }
             }
             Some(pool) => pool.execute(sharded)?,
@@ -648,19 +1168,17 @@ impl TrainerPool {
         let loss = reduced.acc.mean_loss();
         let weight_sum = reduced.acc.weight_sum;
         let exec_calls = reduced.acc.exec_calls;
-        // prefix-reuse accounting is rank-local: only the inline single-rank
-        // path executes on the primary engine, so pooled runs report the
-        // inert trio (replicas keep their own counters; docs/prefix_reuse.md)
-        let (grad_norm, step, cache) = match trainer {
-            AnyTrainer::Tree(t) => {
-                let cache = t.engine.take_cache_stats();
-                (t.engine.apply_update(&reduced.acc)?, t.engine.step_count(), cache)
+        // prefix-reuse accounting rides the reduced accumulator: each rank
+        // (replica or the inline primary) drains its own engine counters
+        // into its GradBuffer inside run_rank, and the typed reduce sums
+        // them — so multi-rank runs report the live trio, summed across
+        // ranks, not the primary engine's inert zeros (docs/prefix_reuse.md)
+        let cache: CacheStats = reduced.acc.cache;
+        let (grad_norm, step) = match trainer {
+            AnyTrainer::Tree(t) => (t.engine.apply_update(&reduced.acc)?, t.engine.step_count()),
+            AnyTrainer::Baseline(t) => {
+                (t.engine.apply_update(&reduced.acc)?, t.engine.step_count())
             }
-            AnyTrainer::Baseline(t) => (
-                t.engine.apply_update(&reduced.acc)?,
-                t.engine.step_count(),
-                CacheStats::default(),
-            ),
         };
         if let Some(pool) = &mut self.pool {
             // asynchronous: workers apply while the caller returns metrics
@@ -694,6 +1212,9 @@ impl TrainerPool {
             xstep_reuse_ratio: reuse_ratio(sharded.tree_tokens() as u64, cache.hit_tokens),
             cache_hit_tokens: cache.hit_tokens,
             cache_evictions: cache.evictions,
+            reduce_buckets: reduced.reduce_buckets,
+            bucket_overlap_ms: reduced.bucket_overlap_ms,
+            collective_bytes: reduced.collective_bytes,
         })
     }
 
@@ -1078,5 +1599,248 @@ mod tests {
         let mut pool = RankPool::new(workers).unwrap();
         let err = pool.execute(&plan).unwrap_err();
         assert!(err.to_string().contains("panicked"), "got: {err}");
+    }
+
+    // ── bucketed collective data plane ──
+
+    #[derive(Clone)]
+    struct PayAcc {
+        payload: Vec<f64>,
+        scalar: f64,
+    }
+
+    /// Payload-capable worker: exercises the bucketed data plane end to
+    /// end.  Accumulates its payload in `plan_units` pieces (so any
+    /// premature child fold — before the local accumulation is final —
+    /// would change bits), with values chosen to make f64 association
+    /// visible: `execute` and `execute_hooked` are the same math.
+    struct PayWorker {
+        len: usize,
+        /// Fail the first execute (then succeed), exercising abort frames
+        /// and next-step recovery.
+        fail_first: bool,
+        executes: u64,
+    }
+
+    impl PayWorker {
+        fn fleet(n: usize, len: usize) -> Vec<PayWorker> {
+            (0..n).map(|_| PayWorker { len, fail_first: false, executes: 0 }).collect()
+        }
+    }
+
+    impl RankWorker for PayWorker {
+        type Acc = PayAcc;
+        type Update = ();
+
+        fn execute(&mut self, rank: usize, plan: &StepPlan) -> crate::Result<(PayAcc, usize)> {
+            self.execute_hooked(rank, plan, &mut |_, _| {})
+        }
+
+        fn reduce(acc: &mut PayAcc, other: PayAcc) {
+            for (a, b) in acc.payload.iter_mut().zip(&other.payload) {
+                *a += b;
+            }
+            acc.scalar += other.scalar;
+        }
+
+        fn apply(&mut self, _u: &()) -> crate::Result<()> {
+            Ok(())
+        }
+
+        fn flat_grad_len(&self) -> Option<usize> {
+            Some(self.len)
+        }
+
+        fn read_payload(acc: &PayAcc, range: Range<usize>, out: &mut Vec<f64>) {
+            out.clear();
+            out.extend_from_slice(&acc.payload[range]);
+        }
+
+        fn fold_payload(acc: &mut PayAcc, range: Range<usize>, data: &[f64]) {
+            for (a, b) in acc.payload[range].iter_mut().zip(data) {
+                *a += b;
+            }
+        }
+
+        fn strip_payload(acc: &mut PayAcc) {
+            acc.payload = Vec::new();
+        }
+
+        fn reduce_stripped(acc: &mut PayAcc, other: PayAcc) {
+            acc.scalar += other.scalar;
+        }
+
+        fn execute_hooked(
+            &mut self,
+            rank: usize,
+            plan: &StepPlan,
+            on_unit: &mut dyn FnMut(&mut PayAcc, usize),
+        ) -> crate::Result<(PayAcc, usize)> {
+            self.executes += 1;
+            if self.fail_first && self.executes == 1 {
+                anyhow::bail!("rank {rank} exploded");
+            }
+            let units = plan_units(plan).max(1);
+            let mut acc =
+                PayAcc { payload: vec![0.0; self.len], scalar: (rank + 1) as f64 };
+            for u in 0..units {
+                for (i, v) in acc.payload.iter_mut().enumerate() {
+                    // values with non-trivial low bits, accumulated in
+                    // `units` partial pieces
+                    *v += ((rank + 1) as f64 / 3.0) * (i as f64 + 0.1) / units as f64;
+                }
+                on_unit(&mut acc, u);
+            }
+            Ok((acc, 1))
+        }
+    }
+
+    fn pay_reduce(
+        n: usize,
+        len: usize,
+        opts: ReduceOptions,
+        plan: &Arc<ShardedPlan>,
+    ) -> RankReduce<PayAcc> {
+        let mut pool = RankPool::new_with(PayWorker::fleet(n, len), opts).unwrap();
+        let r = pool.execute(plan).unwrap();
+        pool.finish().unwrap();
+        r
+    }
+
+    #[test]
+    fn bucketed_and_socket_reduce_bit_match_the_monolithic_path() {
+        const LEN: usize = 700; // 1 KiB buckets = 128 elems -> 6 buckets
+        for n in [2usize, 3, 5] {
+            let plan = sharded(2 * n, n);
+            let legacy = pay_reduce(n, LEN, ReduceOptions::default(), &plan);
+            assert_eq!(legacy.reduce_buckets, 0, "no collective on the default path");
+            assert_eq!(legacy.collective_bytes, 0);
+            for (kb, transport) in [
+                (1usize, Transport::InProcess),
+                (0, Transport::Socket),
+                (1, Transport::Socket),
+            ] {
+                let opts =
+                    ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+                let r = pay_reduce(n, LEN, opts, &plan);
+                let a: Vec<u64> = legacy.acc.payload.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u64> = r.acc.payload.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "n={n} kb={kb} {transport:?}: payload bits");
+                assert_eq!(
+                    legacy.acc.scalar.to_bits(),
+                    r.acc.scalar.to_bits(),
+                    "n={n} kb={kb} {transport:?}: control-plane scalar bits"
+                );
+                let want_buckets = bucket_ranges(LEN, kb).len() as u64;
+                assert_eq!(r.reduce_buckets, want_buckets, "n={n} kb={kb}");
+                assert!(r.collective_bytes > 0, "n={n} kb={kb}: frames moved");
+                assert_eq!(r.device_tokens, legacy.device_tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_reduce_survives_a_failed_step_and_recovers_bit_exact() {
+        const LEN: usize = 300;
+        let n = 4;
+        let plan = sharded(8, n);
+        let legacy = {
+            // legacy pool, second step (PayWorker math is step-invariant)
+            let mut pool = RankPool::new(PayWorker::fleet(n, LEN)).unwrap();
+            pool.execute(&plan).unwrap();
+            let r = pool.execute(&plan).unwrap();
+            pool.finish().unwrap();
+            r
+        };
+        for transport in [Transport::InProcess, Transport::Socket] {
+            let mut workers = PayWorker::fleet(n, LEN);
+            workers[1].fail_first = true;
+            let opts = ReduceOptions { bucket_kb: 1, transport, rendezvous: None };
+            let mut pool = RankPool::new_with(workers, opts).unwrap();
+            let err = pool.execute(&plan).unwrap_err();
+            assert!(err.to_string().contains("rank 1 exploded"), "got: {err}");
+            // abort frames kept the frame invariant: the next step must
+            // succeed and still bit-match the monolithic fold
+            let r = pool.execute(&plan).unwrap();
+            let a: Vec<u64> = legacy.acc.payload.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = r.acc.payload.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{transport:?}: post-failure step payload bits");
+            pool.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn bucketed_cancellation_fixture_matches_monolithic_bits() {
+        // PR 5's worst-case fixture: [1.0, 1e16, -1e16, 1.0] across 4
+        // ranks — the bracket ((1+1e16)+((-1e16)+1)) = 0.0 while a serial
+        // fold gives 1.0, so any fold-order slip shows up in the bits
+        struct FixWorker {
+            val: f64,
+        }
+        impl RankWorker for FixWorker {
+            type Acc = PayAcc;
+            type Update = ();
+            fn execute(&mut self, _r: usize, _p: &StepPlan) -> crate::Result<(PayAcc, usize)> {
+                Ok((PayAcc { payload: vec![self.val; 4], scalar: self.val }, 1))
+            }
+            fn reduce(acc: &mut PayAcc, other: PayAcc) {
+                PayWorker::reduce(acc, other);
+            }
+            fn apply(&mut self, _u: &()) -> crate::Result<()> {
+                Ok(())
+            }
+            fn flat_grad_len(&self) -> Option<usize> {
+                Some(4)
+            }
+            fn read_payload(acc: &PayAcc, range: Range<usize>, out: &mut Vec<f64>) {
+                PayWorker::read_payload(acc, range, out);
+            }
+            fn fold_payload(acc: &mut PayAcc, range: Range<usize>, data: &[f64]) {
+                PayWorker::fold_payload(acc, range, data);
+            }
+            fn strip_payload(acc: &mut PayAcc) {
+                PayWorker::strip_payload(acc);
+            }
+            fn reduce_stripped(acc: &mut PayAcc, other: PayAcc) {
+                PayWorker::reduce_stripped(acc, other);
+            }
+        }
+        let vals = [1.0f64, 1e16, -1e16, 1.0];
+        let plan = sharded(8, 4);
+        let fleet = || vals.iter().map(|&v| FixWorker { val: v }).collect::<Vec<_>>();
+        let mut legacy_pool = RankPool::new(fleet()).unwrap();
+        let legacy = legacy_pool.execute(&plan).unwrap();
+        legacy_pool.finish().unwrap();
+        assert_eq!(legacy.acc.payload, vec![0.0; 4], "bracket association");
+        for transport in [Transport::InProcess, Transport::Socket] {
+            let opts = ReduceOptions { bucket_kb: 1, transport, rendezvous: None };
+            let mut pool = RankPool::new_with(fleet(), opts).unwrap();
+            let r = pool.execute(&plan).unwrap();
+            assert_eq!(r.acc.payload, vec![0.0; 4], "{transport:?}");
+            assert_eq!(r.acc.scalar, 0.0, "{transport:?} scalar via typed plane");
+            pool.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn workers_without_payload_ignore_the_collective_config() {
+        // a configured collective must not disturb workers that don't
+        // expose a flat payload (flat_grad_len = None): typed path as-is
+        let plan = sharded(8, 4);
+        let opts = ReduceOptions {
+            bucket_kb: 64,
+            transport: Transport::InProcess,
+            rendezvous: None,
+        };
+        let mut pool = RankPool::new_with(
+            vec![TraceWorker, TraceWorker, TraceWorker, TraceWorker],
+            opts,
+        )
+        .unwrap();
+        let r = pool.execute(&plan).unwrap();
+        assert_eq!(r.acc, "((0+1)+(2+3))");
+        assert_eq!(r.reduce_buckets, 0);
+        assert_eq!(r.collective_bytes, 0);
+        pool.finish().unwrap();
     }
 }

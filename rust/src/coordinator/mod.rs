@@ -37,6 +37,7 @@ use crate::trainer::{AdamWConfig, BaselineTrainer, CsvSink, StepMetrics, TreeTra
 use crate::tree::TrajectoryTree;
 use crate::util::json::Json;
 
+pub mod collective;
 pub mod dist;
 pub mod pipeline;
 
@@ -108,6 +109,16 @@ pub struct RunConfig {
     /// never cross an optimizer update, so cache on ≡ off bit-for-bit
     /// within every step; on the XLA engine the cache is accounting-only.
     pub prefix_cache_tokens: usize,
+    /// Bucket size (KiB of f64 payload) the gradient reduction is split
+    /// into on the collective data plane (docs/distributed.md#collective).
+    /// `0` (default) keeps the monolithic reduce — with the in-process
+    /// transport that is the seed path bit-for-bit, no collective built.
+    pub reduce_bucket_kb: usize,
+    /// Collective transport: `"in_process"` (default) or `"socket"`
+    /// (loopback TCP frames with a rendezvous file; multi-process-shaped).
+    /// Any `(reduce_bucket_kb, collective)` config reduces to identical
+    /// bits — see the determinism contract in docs/distributed.md.
+    pub collective: dist::Transport,
 }
 
 impl RunConfig {
@@ -175,6 +186,11 @@ impl RunConfig {
                 .get("prefix_cache_tokens")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(0),
+            reduce_bucket_kb: v.get("reduce_bucket_kb").and_then(|x| x.as_usize()).unwrap_or(0),
+            collective: match v.get("collective").and_then(|x| x.as_str()) {
+                Some(s) => dist::Transport::parse(s)?,
+                None => dist::Transport::InProcess,
+            },
         };
         anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(cfg.ranks >= 1, "ranks must be >= 1");
@@ -187,6 +203,15 @@ impl RunConfig {
             "shuffle_window streams a corpus file; synthetic data is generated in memory"
         );
         Ok(cfg)
+    }
+
+    /// The reduction config handed to [`dist::TrainerPool::new_with`].
+    pub fn reduce_options(&self) -> dist::ReduceOptions {
+        dist::ReduceOptions {
+            bucket_kb: self.reduce_bucket_kb,
+            transport: self.collective,
+            rendezvous: None,
+        }
     }
 }
 
@@ -282,12 +307,33 @@ impl AnyTrainer {
 
     /// Per-rank replica: an independent trainer whose engine owns its own
     /// parameters, literal cache, optimizer moments and program handles —
-    /// the worker state of [`dist::TrainerPool`].
-    pub fn replicate(&self) -> crate::Result<Self> {
+    /// the worker state of [`dist::TrainerPool`].  `device` is the device
+    /// ordinal the replica's programs are compiled for
+    /// ([`crate::runtime::Runtime::program_replica`]); the pool passes the
+    /// rank index, wrapped onto the client's real device count.
+    pub fn replicate(&self, device: usize) -> crate::Result<Self> {
         Ok(match self {
-            Self::Tree(t) => Self::Tree(t.replicate()?),
-            Self::Baseline(t) => Self::Baseline(t.replicate()?),
+            Self::Tree(t) => Self::Tree(t.replicate(device)?),
+            Self::Baseline(t) => Self::Baseline(t.replicate(device)?),
         })
+    }
+
+    /// Drain this trainer's engine prefix-cache counters (zeros when the
+    /// cache is disabled, as on baseline engines).
+    pub fn take_cache_stats(&self) -> crate::trainer::prefix_cache::CacheStats {
+        match self {
+            Self::Tree(t) => t.engine.take_cache_stats(),
+            Self::Baseline(t) => t.engine.take_cache_stats(),
+        }
+    }
+
+    /// Total f64 gradient elements across all parameters — the flat index
+    /// space the bucketed collective addresses.
+    pub fn grad_elems(&self) -> usize {
+        match self {
+            Self::Tree(t) => t.engine.params().iter().map(|p| p.len()).sum(),
+            Self::Baseline(t) => t.engine.params().iter().map(|p| p.len()).sum(),
+        }
     }
 
     pub fn train_step(&mut self, trees: &[TrajectoryTree]) -> crate::Result<StepMetrics> {
@@ -504,7 +550,11 @@ impl Coordinator {
         }
         // the run's persistent rank pool: replicas + worker threads are
         // created HERE, once — never per optimizer step
-        let pool = dist::TrainerPool::new(&self.trainer, self.cfg.ranks)?;
+        let pool = dist::TrainerPool::new_with(
+            &self.trainer,
+            self.cfg.ranks,
+            self.cfg.reduce_options(),
+        )?;
         let mut exec = TrainerExecutor {
             trainer: &mut self.trainer,
             pool,

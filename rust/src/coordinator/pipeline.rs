@@ -352,6 +352,9 @@ pub struct HostExecutor {
     /// `Engine::step_count`, and the cache's parameter version: every
     /// update hard-invalidates the cache (and each worker's).
     updates: u64,
+    /// How the pool reduces (bucket size + collective transport).  The
+    /// default is the monolithic typed path, byte-for-byte the seed.
+    reduce: dist::ReduceOptions,
 }
 
 impl HostExecutor {
@@ -366,6 +369,7 @@ impl HostExecutor {
             pool_spawn_ms: 0.0,
             prefix_cache: PrefixCache::new(0),
             updates: 0,
+            reduce: dist::ReduceOptions::default(),
         }
     }
 
@@ -373,6 +377,13 @@ impl HostExecutor {
     /// before the first step; `0` keeps it off).
     pub fn with_prefix_cache(mut self, budget_tokens: usize) -> Self {
         self.prefix_cache = PrefixCache::new(budget_tokens);
+        self
+    }
+
+    /// Select the reduce bucket size / collective transport (must be set
+    /// before the first multi-rank step — the pool is built once).
+    pub fn with_reduce(mut self, opts: dist::ReduceOptions) -> Self {
+        self.reduce = opts;
         self
     }
 }
@@ -468,6 +479,57 @@ impl RankWorker for HostWorker {
         self.cache.set_version(self.updates);
         Ok(())
     }
+
+    // ── bucketed data plane: the flat payload is d_embed ──
+
+    fn flat_grad_len(&self) -> Option<usize> {
+        Some(self.model.embed.len())
+    }
+
+    fn read_payload(acc: &HostRankAcc, range: std::ops::Range<usize>, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&acc.d_embed[range]);
+    }
+
+    fn fold_payload(acc: &mut HostRankAcc, range: std::ops::Range<usize>, data: &[f64]) {
+        for (g, &x) in acc.d_embed[range].iter_mut().zip(data) {
+            *g += x;
+        }
+    }
+
+    fn strip_payload(acc: &mut HostRankAcc) {
+        acc.d_embed = Vec::new();
+    }
+
+    fn reduce_stripped(a: &mut HostRankAcc, b: HostRankAcc) {
+        // field order mirrors `reduce` exactly, minus the payload fold —
+        // the fingerprint digest in particular must fold child hashes in
+        // the identical bracket order
+        a.loss_sum += b.loss_sum;
+        a.weight_sum += b.weight_sum;
+        fnv1a(&mut a.hash, &b.hash.to_le_bytes());
+        a.batches += b.batches;
+        a.cache.absorb(&b.cache);
+    }
+
+    fn execute_hooked(
+        &mut self,
+        _rank: usize,
+        plan: &StepPlan,
+        on_unit: &mut dyn FnMut(&mut HostRankAcc, usize),
+    ) -> crate::Result<(HostRankAcc, usize)> {
+        let mut acc = HostRankAcc::fresh(self.model.embed.len());
+        let tokens = run_host_rank_hooked(
+            &self.model,
+            self.run_model,
+            plan,
+            &mut self.cache,
+            &mut acc,
+            on_unit,
+        )?;
+        acc.cache = self.cache.take_stats();
+        Ok((acc, tokens))
+    }
 }
 
 /// Fold one batch's full metadata into the composition digest: every
@@ -505,7 +567,22 @@ fn run_host_rank(
     cache: &mut PrefixCache<PrefixActs>,
     acc: &mut HostRankAcc,
 ) -> crate::Result<usize> {
+    run_host_rank_hooked(model, run_model, plan, cache, acc, &mut |_, _| {})
+}
+
+/// [`run_host_rank`] with a per-batch progress hook — the seam the bucketed
+/// collective pumps through ([`dist::RankWorker::execute_hooked`]): called
+/// after each device batch with the unit index ([`dist::plan_units`]).
+fn run_host_rank_hooked(
+    model: &RefModel,
+    run_model: bool,
+    plan: &StepPlan,
+    cache: &mut PrefixCache<PrefixActs>,
+    acc: &mut HostRankAcc,
+    on_unit: &mut dyn FnMut(&mut HostRankAcc, usize),
+) -> crate::Result<usize> {
     let mut device_tokens = 0usize;
+    let mut unit = 0usize;
     let mut absorb = |acc: &mut HostRankAcc, out: crate::trainer::refmodel::RefStep| {
         acc.loss_sum += out.loss_sum;
         acc.weight_sum += out.weight_sum;
@@ -527,6 +604,8 @@ fn run_host_rank(
                 device_tokens += fb.batch.capacity;
                 acc.batches += 1;
                 hash_batch(&fb.batch, acc);
+                on_unit(acc, unit);
+                unit += 1;
             }
         }
         StepPlan::Baseline(p) => {
@@ -538,6 +617,8 @@ fn run_host_rank(
                 device_tokens += b.capacity;
                 acc.batches += 1;
                 hash_batch(b, acc);
+                on_unit(acc, unit);
+                unit += 1;
             }
         }
     }
@@ -568,6 +649,9 @@ impl StepExecutor for HostExecutor {
                 reduce_ms: 0.0,
                 reduce_overlap_ms: 0.0,
                 reduce_depth: 0,
+                reduce_buckets: 0,
+                bucket_overlap_ms: 0.0,
+                collective_bytes: 0,
             }
         } else {
             // persistent pool of RefModel replicas — the same RankPool
@@ -582,7 +666,7 @@ impl StepExecutor for HostExecutor {
                         updates: self.updates,
                     })
                     .collect();
-                self.pool = Some(RankPool::new(workers)?);
+                self.pool = Some(RankPool::new_with(workers, self.reduce.clone())?);
                 self.pool_spawn_ms = ts.elapsed().as_secs_f64() * 1e3;
             }
             let pool = self.pool.as_mut().expect("pool created above");
@@ -659,6 +743,9 @@ impl StepExecutor for HostExecutor {
             ),
             cache_hit_tokens: acc.cache.hit_tokens,
             cache_evictions: acc.cache.evictions,
+            reduce_buckets: reduced.reduce_buckets,
+            bucket_overlap_ms: reduced.bucket_overlap_ms,
+            collective_bytes: reduced.collective_bytes,
         })
     }
 

@@ -89,6 +89,19 @@
 //!   an online least-squares fit of measured per-rank execute walls fed
 //!   back from the reduce (`cost_model: "calibrated"`,
 //!   docs/distributed.md#calibrated-cost-model).
+//! * [`coordinator::collective`] — the payload data plane under that
+//!   reduce (docs/distributed.md#the-collective-layer): the typed channels
+//!   stay the control plane (errors, walls, scalars, cache stats) while a
+//!   `Collective` trait carries the flat f64 gradient as **bucketed**
+//!   frames (`reduce_bucket_kb`) up the same bracket — in-process channels
+//!   or a Gloo-shaped TCP socket mesh (`collective: "socket"`, rendezvous
+//!   file, length-prefixed frames, abort markers on failure).  Buckets
+//!   enter the tree as they become ready and parents pump arriving frames
+//!   between forest batches (`bucket_overlap_ms`), but every element still
+//!   folds own-then-children-in-round-order — so any `(bucket size,
+//!   transport)` choice is bit-identical to the monolithic typed path, and
+//!   `reduce_bucket_kb: 0` constructs no collective at all (the seed path
+//!   verbatim).
 //! * [`serve`] — the continuous-ingestion training service
 //!   (`tree-train serve`, docs/serve.md): concurrent producers append
 //!   rollouts to a spool directory; an online fold keeps live per-session

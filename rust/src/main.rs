@@ -68,13 +68,18 @@ COMMANDS:
   dist-smoke               sharded execution determinism gate + measured
                            sweep, hermetic: each --ranks N vs ranks 1 loss
                            stream within f64 tolerance, repeat runs
-                           bit-identical; writes measured imbalance-vs-
-                           speedup rows into results/BENCH_distsim.json
+                           bit-identical; sweeps the bucketed collective
+                           (bucket 0 + in-process ≡ legacy bit-for-bit,
+                           per-config CSVs for cross-transport byte
+                           compares); writes measured rows + the AdamW-vs-
+                           broadcast crossover into BENCH_distsim.json
                            --corpus FILE [--format trees|rollouts]
                            [--mode tree|baseline] [--ranks N,N,..]
                            [--steps N] [--trees-per-batch N,N,..]
                            [--pipeline-depth D] [--shuffle-window W]
                            [--capacity C] [--vocab V]
+                           [--reduce-bucket-kb K,K,..  0 = monolithic]
+                           [--transport in_process,socket] [--csv-dir DIR]
   fig5                     token accounting: flatten vs standard vs RF
                            [--tree-tokens N] [--capacity C]
   fig6                     agentic tree shapes + POR + depth profiles
@@ -232,6 +237,11 @@ fn main() -> anyhow::Result<()> {
                 rest.get("capacity", 8192usize),
                 rest.get("vocab", 256usize),
                 rest.get("seed", 0u64),
+                // default exercises multi-bucket (1 KiB over the host
+                // payload) and the single-bucket collective path
+                &rest.str("reduce-bucket-kb", "0,1,64"),
+                &rest.str("transport", "in_process,socket"),
+                &PathBuf::from(rest.str("csv-dir", out.to_str().unwrap_or("results"))),
                 &out,
             )
         }

@@ -19,6 +19,9 @@ pub struct ExecStats {
 /// A compiled program: executable + manifest signature.
 pub struct Program {
     pub info: ProgramInfo,
+    /// PJRT device ordinal this executable is pinned to (0 = the default
+    /// device; per-rank replicas carry their rank's ordinal).
+    pub device: usize,
     exe: PjRtLoadedExecutable,
     stats: Mutex<ExecStats>,
 }
@@ -81,6 +84,10 @@ pub struct Runtime {
     pub manifest: Manifest,
     client: PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+    /// Parsed HLO modules by program name: replica compiles re-lower the
+    /// same module per device, so the text parse (the host-side cost that
+    /// scales with module size, not device count) is paid once.
+    protos: Mutex<HashMap<String, std::sync::Arc<HloModuleProto>>>,
 }
 
 impl Runtime {
@@ -91,7 +98,12 @@ impl Runtime {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            protos: Mutex::new(HashMap::new()),
+        })
     }
 
     pub fn from_dir(dir: &std::path::Path) -> crate::Result<Self> {
@@ -108,26 +120,60 @@ impl Runtime {
         Ok(prog)
     }
 
-    /// Compile a program *bypassing* the shared cache: the returned handle
+    /// Compile a program *bypassing* the shared executable cache, pinned to
+    /// the PJRT device `device % device_count`: the returned handle
     /// (executable + stats) belongs to the caller alone.  Per-rank engine
-    /// replicas use this so no execution handle is shared across rank
-    /// worker threads — and it is the seam where per-device compilation
-    /// slots in on a multi-device PJRT backend.
-    pub fn program_replica(&self, name: &str) -> crate::Result<std::sync::Arc<Program>> {
-        self.compile(name)
+    /// replicas pass their rank as `device`, so on a multi-device backend
+    /// each rank's programs are lowered for its own device; on the 1-device
+    /// host stub every ordinal folds to 0 and the path is identical to the
+    /// shared compile.  The parsed HLO module is cached by name — only the
+    /// per-device lowering repeats.
+    pub fn program_replica(&self, name: &str, device: usize) -> crate::Result<std::sync::Arc<Program>> {
+        let ordinal = device % self.client.device_count().max(1);
+        let info = self.manifest.program(name)?.clone();
+        let proto = self.parsed_proto(name, &info)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let t0 = Instant::now();
+        let exe = self.client.compile_with_device(&comp, ordinal)?;
+        crate::info!("compiled {name} for device {ordinal} in {} ms", t0.elapsed().as_millis());
+        Ok(std::sync::Arc::new(Program {
+            info,
+            device: ordinal,
+            exe,
+            stats: Mutex::new(ExecStats::default()),
+        }))
     }
 
     fn compile(&self, name: &str) -> crate::Result<std::sync::Arc<Program>> {
         let info = self.manifest.program(name)?.clone();
-        let path = self.manifest.hlo_path(&info);
         let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
+        let proto = self.parsed_proto(name, &info)?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         crate::info!("compiled {name} in {} ms", t0.elapsed().as_millis());
-        Ok(std::sync::Arc::new(Program { info, exe, stats: Mutex::new(ExecStats::default()) }))
+        Ok(std::sync::Arc::new(Program {
+            info,
+            device: 0,
+            exe,
+            stats: Mutex::new(ExecStats::default()),
+        }))
+    }
+
+    /// Parse (or fetch the cached parse of) a program's HLO text.
+    fn parsed_proto(
+        &self,
+        name: &str,
+        info: &ProgramInfo,
+    ) -> crate::Result<std::sync::Arc<HloModuleProto>> {
+        if let Some(p) = self.protos.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let path = self.manifest.hlo_path(info);
+        let proto = std::sync::Arc::new(HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?);
+        self.protos.lock().unwrap().insert(name.to_string(), proto.clone());
+        Ok(proto)
     }
 
     /// Compile the best-fitting program for (kind, model, capacity).

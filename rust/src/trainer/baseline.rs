@@ -55,11 +55,11 @@ impl BaselineTrainer {
         Ok(Self { engine: Engine::new(rt, model, opt_cfg)? })
     }
 
-    /// Per-rank replica: an independent engine ([`Engine::replicate`]) —
-    /// the rank worker state of the distributed step
-    /// (`coordinator/dist.rs`).
-    pub fn replicate(&self) -> crate::Result<Self> {
-        Ok(Self { engine: self.engine.replicate()? })
+    /// Per-rank replica: an independent engine ([`Engine::replicate`])
+    /// compiled for device ordinal `device` — the rank worker state of the
+    /// distributed step (`coordinator/dist.rs`).
+    pub fn replicate(&self, device: usize) -> crate::Result<Self> {
+        Ok(Self { engine: self.engine.replicate(device)? })
     }
 
     pub fn params(&self) -> &[HostTensor] {
@@ -101,10 +101,25 @@ impl BaselineTrainer {
     /// device token count.  The per-rank unit of the distributed step
     /// ([`crate::coordinator::dist`]) — mirrors `TreeTrainer::run_plan`.
     pub fn run_plan(&self, plan: &BaselinePlan, gb: &mut GradBuffer) -> crate::Result<usize> {
+        self.run_plan_hooked(plan, gb, &mut |_, _| {})
+    }
+
+    /// [`Self::run_plan`] with a per-batch progress hook — the seam the
+    /// bucketed collective pumps through
+    /// ([`crate::coordinator::dist::RankWorker::execute_hooked`]): called
+    /// after each packed batch with the unit index
+    /// ([`crate::coordinator::dist::plan_units`]).
+    pub fn run_plan_hooked(
+        &self,
+        plan: &BaselinePlan,
+        gb: &mut GradBuffer,
+        on_unit: &mut dyn FnMut(&mut GradBuffer, usize),
+    ) -> crate::Result<usize> {
         let mut device_tokens = 0usize;
-        for b in &plan.batches {
+        for (i, b) in plan.batches.iter().enumerate() {
             self.engine.run_step_into(b, gb)?;
             device_tokens += b.capacity;
+            on_unit(gb, i);
         }
         Ok(device_tokens)
     }
@@ -142,6 +157,9 @@ impl BaselineTrainer {
             xstep_reuse_ratio: 1.0,
             cache_hit_tokens: 0,
             cache_evictions: 0,
+            reduce_buckets: 0,
+            bucket_overlap_ms: 0.0,
+            collective_bytes: 0,
         })
     }
 

@@ -109,22 +109,23 @@ impl Engine {
     /// Clone this engine into an independent per-rank replica: own
     /// parameter tensors, own literal cache, own optimizer state (step +
     /// f64 moments), own program handles — compiled fresh through
-    /// [`Runtime::program_replica`], bypassing the shared cache, so no
-    /// execution handle is shared across rank worker threads (the seam
-    /// where per-device compilation slots in on a real multi-device PJRT
-    /// backend; see `coordinator/dist.rs`).
+    /// [`Runtime::program_replica`] for device ordinal
+    /// `device % device_count`, bypassing the shared cache, so no
+    /// execution handle is shared across rank worker threads and on a real
+    /// multi-device PJRT backend each rank's programs are lowered for its
+    /// own device (see `coordinator/dist.rs`, which passes the rank id).
     ///
     /// The replica starts bit-identical to `self`; applying the same
     /// reduced gradient stream with the same LR keeps it that way.  Memory
     /// cost per replica ≈ params (f32) + cached literals + the AdamW f64
     /// moments: ~24 bytes per parameter on top of the primary
     /// (docs/distributed.md).
-    pub fn replicate(&self) -> crate::Result<Self> {
-        let step_prog = self.rt.program_replica(&self.step_prog.info.name)?;
+    pub fn replicate(&self, device: usize) -> crate::Result<Self> {
+        let step_prog = self.rt.program_replica(&self.step_prog.info.name, device)?;
         let (fwd_prog, bwd_prog) = match (&self.fwd_prog, &self.bwd_prog) {
             (Some(f), Some(b)) => (
-                Some(self.rt.program_replica(&f.info.name)?),
-                Some(self.rt.program_replica(&b.info.name)?),
+                Some(self.rt.program_replica(&f.info.name, device)?),
+                Some(self.rt.program_replica(&b.info.name, device)?),
             ),
             _ => (None, None),
         };

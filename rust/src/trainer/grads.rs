@@ -1,5 +1,8 @@
 //! f64 gradient accumulation across trees / partitions in one global batch.
 
+use std::ops::Range;
+
+use super::prefix_cache::CacheStats;
 use crate::runtime::HostTensor;
 
 /// Flat per-parameter gradient accumulator (f64, App. B.5 discipline).
@@ -8,6 +11,10 @@ pub struct GradBuffer {
     pub loss_sum: f64,
     pub weight_sum: f64,
     pub exec_calls: u64,
+    /// Per-rank engine prefix-cache counters drained into the accumulator
+    /// after execute, so pooled reduces surface a *live* reuse trio instead
+    /// of the primary engine's inert zeros (docs/prefix_reuse.md).
+    pub cache: CacheStats,
 }
 
 impl GradBuffer {
@@ -17,6 +24,7 @@ impl GradBuffer {
             loss_sum: 0.0,
             weight_sum: 0.0,
             exec_calls: 0,
+            cache: CacheStats::default(),
         }
     }
 
@@ -42,9 +50,7 @@ impl GradBuffer {
     /// scheduling or message arrival order.
     pub fn merge(&mut self, other: &GradBuffer) {
         debug_assert_eq!(self.grads.len(), other.grads.len());
-        self.loss_sum += other.loss_sum;
-        self.weight_sum += other.weight_sum;
-        self.exec_calls += other.exec_calls;
+        self.merge_scalars(other);
         for (acc, g) in self.grads.iter_mut().zip(&other.grads) {
             for (a, &x) in acc.iter_mut().zip(g) {
                 *a += x;
@@ -52,10 +58,82 @@ impl GradBuffer {
         }
     }
 
+    /// The non-payload half of [`Self::merge`]: loss / weight sums, call
+    /// counts and cache counters.  The bucketed collective path folds the
+    /// gradient payload separately (in the identical bracket order) and
+    /// merges child accumulators *stripped* — this is the merge it uses.
+    pub fn merge_scalars(&mut self, other: &GradBuffer) {
+        self.loss_sum += other.loss_sum;
+        self.weight_sum += other.weight_sum;
+        self.exec_calls += other.exec_calls;
+        self.cache.absorb(&other.cache);
+    }
+
     /// [`Self::merge`] in the owned-rhs fold shape the
     /// [`crate::coordinator::dist::RankPool`] reduce consumes.
     pub fn merge_owned(acc: &mut GradBuffer, other: GradBuffer) {
         acc.merge(&other);
+    }
+
+    // ── flat bucket views (collective data plane; no copies unless a
+    //    bucket actually crosses the wire) ──
+
+    /// Total f64 payload elements across all parameter gradients — the
+    /// flat index space [`Self::read_flat`] / [`Self::fold_flat`] address.
+    pub fn flat_len(&self) -> usize {
+        self.grads.iter().map(|g| g.len()).sum()
+    }
+
+    /// Copy the flat range `range` (spanning parameter boundaries) into
+    /// `out` (cleared first).
+    pub fn read_flat(&self, range: Range<usize>, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(range.len());
+        let mut base = 0usize;
+        for g in &self.grads {
+            let lo = range.start.max(base);
+            let hi = range.end.min(base + g.len());
+            if lo < hi {
+                out.extend_from_slice(&g[lo - base..hi - base]);
+            }
+            base += g.len();
+            if base >= range.end {
+                break;
+            }
+        }
+        debug_assert_eq!(out.len(), range.len(), "flat range out of bounds");
+    }
+
+    /// Element-wise add `data` into the flat range `range` — the bucket
+    /// fold.  `data.len()` must equal `range.len()`.
+    pub fn fold_flat(&mut self, range: Range<usize>, data: &[f64]) {
+        debug_assert_eq!(data.len(), range.len());
+        let mut base = 0usize;
+        let mut off = 0usize;
+        for g in &mut self.grads {
+            let glen = g.len();
+            let lo = range.start.max(base);
+            let hi = range.end.min(base + glen);
+            if lo < hi {
+                let n = hi - lo;
+                for (a, &x) in g[lo - base..hi - base].iter_mut().zip(&data[off..off + n]) {
+                    *a += x;
+                }
+                off += n;
+            }
+            base += glen;
+            if base >= range.end {
+                break;
+            }
+        }
+        debug_assert_eq!(off, data.len(), "flat range out of bounds");
+    }
+
+    /// Drop the gradient payload, keeping scalars: what a non-root rank
+    /// sends up the typed control plane once its payload has already
+    /// traveled the collective data plane.
+    pub fn strip_grads(&mut self) {
+        self.grads = Vec::new();
     }
 
     /// Normalized gradients (divide by the global-batch weight sum): makes
@@ -122,5 +200,69 @@ mod tests {
         assert_eq!(r0.weight_sum, whole.weight_sum);
         assert_eq!(r0.exec_calls, whole.exec_calls);
         assert_eq!(r0.grads, whole.grads);
+    }
+
+    fn two_param_buffer() -> GradBuffer {
+        GradBuffer {
+            grads: vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0]],
+            loss_sum: 1.0,
+            weight_sum: 2.0,
+            exec_calls: 3,
+            cache: CacheStats::default(),
+        }
+    }
+
+    #[test]
+    fn flat_views_span_parameter_boundaries() {
+        let gb = two_param_buffer();
+        assert_eq!(gb.flat_len(), 5);
+        let mut out = Vec::new();
+        gb.read_flat(0..5, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        gb.read_flat(2..4, &mut out);
+        assert_eq!(out, vec![3.0, 4.0], "crosses the param boundary");
+        gb.read_flat(4..5, &mut out);
+        assert_eq!(out, vec![5.0]);
+    }
+
+    #[test]
+    fn fold_flat_matches_merge_per_bucket() {
+        // folding a peer bucket-by-bucket must equal the monolithic merge
+        let mut bucketed = two_param_buffer();
+        let mut monolithic = two_param_buffer();
+        let peer = GradBuffer {
+            grads: vec![vec![0.5, -1.0, 0.25], vec![10.0, -20.0]],
+            loss_sum: 0.5,
+            weight_sum: 1.0,
+            exec_calls: 1,
+            cache: CacheStats::default(),
+        };
+        monolithic.merge(&peer);
+        let mut buf = Vec::new();
+        for range in [0..2usize, 2..4, 4..5] {
+            peer.read_flat(range.clone(), &mut buf);
+            bucketed.fold_flat(range, &buf);
+        }
+        bucketed.merge_scalars(&peer);
+        assert_eq!(bucketed.grads, monolithic.grads);
+        assert_eq!(bucketed.loss_sum, monolithic.loss_sum);
+        assert_eq!(bucketed.exec_calls, monolithic.exec_calls);
+    }
+
+    #[test]
+    fn strip_keeps_scalars_and_cache() {
+        let mut gb = two_param_buffer();
+        gb.cache.hit_tokens = 7;
+        gb.strip_grads();
+        assert_eq!(gb.flat_len(), 0);
+        assert_eq!(gb.loss_sum, 1.0);
+        assert_eq!(gb.exec_calls, 3);
+        assert_eq!(gb.cache.hit_tokens, 7);
+        // merging a stripped peer through the scalar path never touches
+        // the payload (merge would debug_assert on the length mismatch)
+        let mut full = two_param_buffer();
+        full.merge_scalars(&gb);
+        assert_eq!(full.loss_sum, 2.0);
+        assert_eq!(full.grads, two_param_buffer().grads);
     }
 }

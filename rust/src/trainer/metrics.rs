@@ -79,6 +79,17 @@ pub struct StepMetrics {
     /// Cache entries dropped by LRU budget pressure this step (version
     /// invalidations after each optimizer update are not counted).
     pub cache_evictions: u64,
+    /// Buckets the gradient payload was split into on the collective data
+    /// plane (docs/distributed.md#collective; 0 = monolithic typed reduce).
+    pub reduce_buckets: u64,
+    /// Collective fold/send wall hidden *inside* rank execute windows,
+    /// summed across ranks — the bucketed reduce's measured overlap (0 on
+    /// the monolithic path).
+    pub bucket_overlap_ms: f64,
+    /// Wire bytes sent over the collective transport this step, summed
+    /// across ranks (identical accounting for both transports; 0 on the
+    /// monolithic path).
+    pub collective_bytes: u64,
 }
 
 impl StepMetrics {
@@ -103,7 +114,7 @@ impl StepMetrics {
     pub fn csv_row(&self) -> String {
         format!(
             "{},{:.6},{:.3},{},{},{},{:.4},{:.3},{:.3},{:.3},{},{},{:.5},{},\
-             {:.3},{:.3},{},{:.4},{:.3},{:.4},{},{},{},{:.4},{},{}",
+             {:.3},{:.3},{},{:.4},{:.3},{:.4},{},{},{},{:.4},{},{},{},{:.3},{}",
             self.step,
             self.loss,
             self.weight_sum,
@@ -129,7 +140,10 @@ impl StepMetrics {
             self.admitted_sessions,
             self.xstep_reuse_ratio,
             self.cache_hit_tokens,
-            self.cache_evictions
+            self.cache_evictions,
+            self.reduce_buckets,
+            self.bucket_overlap_ms,
+            self.collective_bytes
         )
     }
 }
@@ -139,7 +153,8 @@ pub const CSV_HEADER: &str = "step,loss,weight_sum,device_tokens,tree_tokens,fla
      reuse_ratio,wall_ms,plan_ms,stall_ms,exec_calls,forest_batches,grad_norm,\
      ranks,reduce_ms,reduce_overlap_ms,reduce_depth,rank_imbalance,ingest_ms,cost_model_err,\
      staleness_steps,ripe_queue_depth,admitted_sessions,\
-     xstep_reuse_ratio,cache_hit_tokens,cache_evictions";
+     xstep_reuse_ratio,cache_hit_tokens,cache_evictions,\
+     reduce_buckets,bucket_overlap_ms,collective_bytes";
 
 /// Append-only CSV sink (one row per step).
 pub struct CsvSink {
@@ -191,6 +206,9 @@ mod tests {
             xstep_reuse_ratio: 1.5,
             cache_hit_tokens: 300,
             cache_evictions: 1,
+            reduce_buckets: 6,
+            bucket_overlap_ms: 0.75,
+            collective_bytes: 4096,
         }
     }
 
@@ -244,12 +262,12 @@ mod tests {
         // existing columns by position, so new columns must append — the
         // PR-6 ingest/cost pair keeps its position ahead of the serve trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 8], "ingest_ms");
-        assert_eq!(cols[cols.len() - 7], "cost_model_err");
+        assert_eq!(cols[cols.len() - 11], "ingest_ms");
+        assert_eq!(cols[cols.len() - 10], "cost_model_err");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 8], "6.500");
-        assert_eq!(vals[vals.len() - 7], "0.0625");
+        assert_eq!(vals[vals.len() - 11], "6.500");
+        assert_eq!(vals[vals.len() - 10], "0.0625");
     }
 
     #[test]
@@ -257,14 +275,14 @@ mod tests {
         // the serve (continuous-ingestion) trio keeps its PR-7 position
         // ahead of the PR-8 prefix-cache trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 6], "staleness_steps");
-        assert_eq!(cols[cols.len() - 5], "ripe_queue_depth");
-        assert_eq!(cols[cols.len() - 4], "admitted_sessions");
+        assert_eq!(cols[cols.len() - 9], "staleness_steps");
+        assert_eq!(cols[cols.len() - 8], "ripe_queue_depth");
+        assert_eq!(cols[cols.len() - 7], "admitted_sessions");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 6], "2");
-        assert_eq!(vals[vals.len() - 5], "7");
-        assert_eq!(vals[vals.len() - 4], "3");
+        assert_eq!(vals[vals.len() - 9], "2");
+        assert_eq!(vals[vals.len() - 8], "7");
+        assert_eq!(vals[vals.len() - 7], "3");
         // non-serve constructors default the trio to zero, so pre-serve
         // consumers reading by position see unchanged values
         let mut m = sample();
@@ -273,22 +291,22 @@ mod tests {
         m.admitted_sessions = 0;
         let vals: Vec<String> =
             m.csv_row().split(',').map(str::to_string).collect();
-        assert_eq!(&vals[vals.len() - 6..vals.len() - 3], ["0", "0", "0"]);
+        assert_eq!(&vals[vals.len() - 9..vals.len() - 6], ["0", "0", "0"]);
     }
 
     #[test]
-    fn csv_schema_appends_the_prefix_cache_columns_last() {
-        // the cross-step prefix-reuse trio is the newest append and must
-        // stay last until the next additive growth
+    fn csv_schema_keeps_the_prefix_cache_trio_ahead_of_the_collective_trio() {
+        // the PR-8 cross-step prefix-reuse trio keeps its position ahead of
+        // the PR-9 collective trio
         let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
-        assert_eq!(cols[cols.len() - 3], "xstep_reuse_ratio");
-        assert_eq!(cols[cols.len() - 2], "cache_hit_tokens");
-        assert_eq!(cols[cols.len() - 1], "cache_evictions");
+        assert_eq!(cols[cols.len() - 6], "xstep_reuse_ratio");
+        assert_eq!(cols[cols.len() - 5], "cache_hit_tokens");
+        assert_eq!(cols[cols.len() - 4], "cache_evictions");
         let row = sample().csv_row();
         let vals: Vec<&str> = row.split(',').collect();
-        assert_eq!(vals[vals.len() - 3], "1.5000");
-        assert_eq!(vals[vals.len() - 2], "300");
-        assert_eq!(vals[vals.len() - 1], "1");
+        assert_eq!(vals[vals.len() - 6], "1.5000");
+        assert_eq!(vals[vals.len() - 5], "300");
+        assert_eq!(vals[vals.len() - 4], "1");
         // cache-off constructors default the trio to the inert values, so
         // pre-cache consumers reading by position see unchanged data
         let mut m = sample();
@@ -297,6 +315,30 @@ mod tests {
         m.cache_evictions = 0;
         let vals: Vec<String> =
             m.csv_row().split(',').map(str::to_string).collect();
-        assert_eq!(&vals[vals.len() - 3..], ["1.0000", "0", "0"]);
+        assert_eq!(&vals[vals.len() - 6..vals.len() - 3], ["1.0000", "0", "0"]);
+    }
+
+    #[test]
+    fn csv_schema_appends_the_collective_columns_last() {
+        // the bucketed-collective trio is the newest append and must stay
+        // last until the next additive growth
+        let cols: Vec<&str> = CSV_HEADER.split(',').map(|c| c.trim()).collect();
+        assert_eq!(cols[cols.len() - 3], "reduce_buckets");
+        assert_eq!(cols[cols.len() - 2], "bucket_overlap_ms");
+        assert_eq!(cols[cols.len() - 1], "collective_bytes");
+        let row = sample().csv_row();
+        let vals: Vec<&str> = row.split(',').collect();
+        assert_eq!(vals[vals.len() - 3], "6");
+        assert_eq!(vals[vals.len() - 2], "0.750");
+        assert_eq!(vals[vals.len() - 1], "4096");
+        // monolithic-path constructors default the trio to zero, so
+        // pre-collective consumers reading by position see unchanged data
+        let mut m = sample();
+        m.reduce_buckets = 0;
+        m.bucket_overlap_ms = 0.0;
+        m.collective_bytes = 0;
+        let vals: Vec<String> =
+            m.csv_row().split(',').map(str::to_string).collect();
+        assert_eq!(&vals[vals.len() - 3..], ["0", "0.000", "0"]);
     }
 }

@@ -66,11 +66,12 @@ impl TreeTrainer {
     }
 
     /// Per-rank replica: an independent engine
-    /// ([`Engine::replicate`]) with the same planning knobs — the rank
-    /// worker state of the distributed step (`coordinator/dist.rs`).
-    pub fn replicate(&self) -> crate::Result<Self> {
+    /// ([`Engine::replicate`]) compiled for device ordinal `device`, with
+    /// the same planning knobs — the rank worker state of the distributed
+    /// step (`coordinator/dist.rs`).
+    pub fn replicate(&self, device: usize) -> crate::Result<Self> {
         Ok(Self {
-            engine: self.engine.replicate()?,
+            engine: self.engine.replicate(device)?,
             partition_budget: self.partition_budget,
             forest_packing: self.forest_packing,
             prefix_affinity: self.prefix_affinity,
@@ -103,8 +104,22 @@ impl TreeTrainer {
     /// Execute a plan's device batches, accumulating into `gb`.  Returns the
     /// device token count (capacity slots actually dispatched).
     pub fn run_plan(&self, plan: &GlobalPlan, gb: &mut GradBuffer) -> crate::Result<usize> {
+        self.run_plan_hooked(plan, gb, &mut |_, _| {})
+    }
+
+    /// [`Self::run_plan`] with a per-batch progress hook — the seam the
+    /// bucketed collective pumps through
+    /// ([`crate::coordinator::dist::RankWorker::execute_hooked`]): called
+    /// after each forest batch, and after the partition relay, with the
+    /// unit index ([`crate::coordinator::dist::plan_units`]).
+    pub fn run_plan_hooked(
+        &self,
+        plan: &GlobalPlan,
+        gb: &mut GradBuffer,
+        on_unit: &mut dyn FnMut(&mut GradBuffer, usize),
+    ) -> crate::Result<usize> {
         let mut device_tokens = 0usize;
-        for fb in &plan.forests {
+        for (i, fb) in plan.forests.iter().enumerate() {
             // cross-step prefix accounting: members annotated by the
             // affinity pass check the engine's fingerprint cache before the
             // step call, surfacing reuse headroom without changing any bit
@@ -117,9 +132,11 @@ impl TreeTrainer {
             }
             self.engine.run_step_into(&fb.batch, gb)?;
             device_tokens += fb.batch.capacity;
+            on_unit(gb, i);
         }
         if let Some(relay) = &plan.relay {
             device_tokens += self.run_relay(relay, gb)?;
+            on_unit(gb, plan.forests.len());
         }
         Ok(device_tokens)
     }
@@ -337,6 +354,9 @@ impl TreeTrainer {
             ),
             cache_hit_tokens: cache.hit_tokens,
             cache_evictions: cache.evictions,
+            reduce_buckets: 0,
+            bucket_overlap_ms: 0.0,
+            collective_bytes: 0,
         })
     }
 

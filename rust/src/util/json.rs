@@ -294,6 +294,15 @@ pub(crate) fn update_json_file_key_hooked(
             path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default(),
             std::process::id()
         ));
+        // bench writers target results/ paths that may not exist yet (a
+        // fresh checkout, a sweep writing into --csv-dir): create the
+        // parent before the temp write, so the rename has a home
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+            }
+        }
         std::fs::write(&tmp, Json::Obj(kv).to_string_pretty())?;
         std::fs::rename(&tmp, path)?;
         return Ok(());
@@ -573,6 +582,22 @@ mod tests {
         assert!(v.get("legacy").is_none(), "stale top-level keys must be pruned");
         assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn update_json_file_key_creates_missing_parent_directories() {
+        let root = std::env::temp_dir().join(format!("tt-json-mkdir-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        // two levels deep, neither existing: the writer must create them
+        // rather than fail the temp-file write (fresh checkouts have no
+        // results/ directory yet)
+        let path = root.join("results").join("nested").join("bench.json");
+        update_json_file_key(&path, "rows", Json::arr_i32(&[1, 2]), &[]).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(v.get("rows").is_some());
+        // and an update into the now-existing directory still round-trips
+        update_json_file_key(&path, "rows", Json::arr_i32(&[3]), &[]).unwrap();
+        std::fs::remove_dir_all(root).ok();
     }
 
     #[test]

@@ -376,6 +376,93 @@ fn pool_reuse_across_steps_matches_fresh_spawn_workers() {
     assert_ne!(persistent[0].to_bits(), persistent[steps - 1].to_bits());
 }
 
+// ──────────── bucketed collective reduce ≡ the typed path ───────────────────
+
+fn run_once_with(
+    cfg: &PipelineConfig,
+    trees: &[TrajectoryTree],
+    seed: u64,
+    opts: dist::ReduceOptions,
+) -> (Vec<StepMetrics>, Vec<u64>) {
+    let source = Box::new(ResidentSource::new(trees.to_vec(), seed).unwrap());
+    let mut exec = HostExecutor::new(VOCAB, 8, seed).with_reduce(opts);
+    let (metrics, _) = pipeline::run(cfg, PlanSpec::for_host(CAPACITY), source, &mut exec).unwrap();
+    (metrics, exec.fingerprints)
+}
+
+#[test]
+fn bucketed_and_socket_reduce_reproduce_the_typed_path_bit_for_bit() {
+    let _g = gate();
+    let trees = corpus(10);
+    // VOCAB * dim payload = 512 f64; bucket_kb 1 → 128-elem buckets → 4
+    // buckets, so the multi-bucket bracket is genuinely exercised
+    let payload = VOCAB * 8;
+    for ranks in [2usize, 3, 5] {
+        let c = cfg(Mode::Tree, 5, 4, 0, ranks);
+        let (legacy, legacy_fp) = run_once(&c, &trees, 23);
+        // the PR 5 contract: bucket 0 on in-process constructs no
+        // collective at all — the legacy typed path, bit-for-bit
+        let zero = dist::ReduceOptions {
+            bucket_kb: 0,
+            transport: dist::Transport::InProcess,
+            rendezvous: None,
+        };
+        let (z, z_fp) = run_once_with(&c, &trees, 23, zero);
+        assert_bit_identical(&format!("ranks {ranks} bucket0"), &legacy, &z);
+        assert_eq!(legacy_fp, z_fp, "ranks {ranks}: bucket0 fingerprints");
+        for m in &z {
+            assert_eq!(m.reduce_buckets, 0, "typed path advertises no buckets");
+            assert_eq!(m.collective_bytes, 0);
+            assert_eq!(m.bucket_overlap_ms, 0.0);
+        }
+        // collective configs: a fixed bucket count fixes the fold order per
+        // element, so every transport × bucket size lands the same bits
+        for (kb, transport) in [
+            (1usize, dist::Transport::InProcess),
+            (0, dist::Transport::Socket),
+            (1, dist::Transport::Socket),
+        ] {
+            let opts =
+                dist::ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+            let label = format!("ranks {ranks} kb {kb} {transport:?}");
+            let (a, fp_a) = run_once_with(&c, &trees, 23, opts.clone());
+            let (b, fp_b) = run_once_with(&c, &trees, 23, opts);
+            assert_bit_identical(&format!("{label} repeat"), &a, &b);
+            assert_eq!(fp_a, fp_b, "{label}: repeat fingerprints diverged");
+            assert_bit_identical(&label, &legacy, &a);
+            assert_eq!(legacy_fp, fp_a, "{label}: fingerprints vs legacy");
+            let want =
+                tree_train::coordinator::collective::bucket_ranges(payload, kb).len() as u64;
+            for m in &a {
+                assert_eq!(m.reduce_buckets, want, "{label}: bucket count");
+                assert!(m.collective_bytes > 0, "{label}: no wire bytes recorded");
+            }
+            if kb == 1 {
+                let overlap: f64 = a.iter().map(|m| m.bucket_overlap_ms).sum();
+                assert!(
+                    overlap > 0.0,
+                    "{label}: the pump never ran inside an execute window"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bucketed_reduce_is_bit_identical_pipelined_and_synchronous() {
+    let _g = gate();
+    let trees = corpus(8);
+    let opts = dist::ReduceOptions {
+        bucket_kb: 1,
+        transport: dist::Transport::InProcess,
+        rendezvous: None,
+    };
+    let (sync, fp_s) = run_once_with(&cfg(Mode::Tree, 6, 3, 0, 3), &trees, 31, opts.clone());
+    let (piped, fp_p) = run_once_with(&cfg(Mode::Tree, 6, 3, 2, 3), &trees, 31, opts);
+    assert_bit_identical("bucketed pipelined vs sync", &sync, &piped);
+    assert_eq!(fp_s, fp_p, "bucketed pipelined fingerprints diverged");
+}
+
 // ───────────────────────────── edge cases ───────────────────────────────────
 
 #[test]

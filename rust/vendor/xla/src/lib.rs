@@ -233,6 +233,25 @@ impl PjRtClient {
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         err(NO_PJRT)
     }
+
+    /// Compile pinned to one device ordinal (xla-rs: a one-entry
+    /// `device_assignment`) — per-rank replicas compile through this so
+    /// each rank's executable lives on its own device on a real
+    /// multi-device PJRT backend.  Host-only stub: same descriptive error
+    /// as [`Self::compile`].
+    pub fn compile_with_device(
+        &self,
+        _comp: &XlaComputation,
+        device_ordinal: usize,
+    ) -> Result<PjRtLoadedExecutable> {
+        if device_ordinal >= self.device_count() {
+            return err(format!(
+                "device ordinal {device_ordinal} out of range ({} devices)",
+                self.device_count()
+            ));
+        }
+        err(NO_PJRT)
+    }
 }
 
 /// Compiled executable handle (never constructed in the vendored build).
@@ -291,5 +310,17 @@ mod tests {
         let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
         let e = client.compile(&comp).unwrap_err();
         assert!(e.to_string().contains("xla_extension"));
+    }
+
+    #[test]
+    fn per_device_compile_checks_the_ordinal_first() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
+        // in-range ordinal: the missing-backend error, same as compile()
+        let e = client.compile_with_device(&comp, 0).unwrap_err();
+        assert!(e.to_string().contains("xla_extension"));
+        // out-of-range ordinal: rejected before touching the backend
+        let e = client.compile_with_device(&comp, 99).unwrap_err();
+        assert!(e.to_string().contains("out of range"));
     }
 }

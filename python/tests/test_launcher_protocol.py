@@ -1,0 +1,594 @@
+"""Python mirror of the multi-process launcher wire protocol.
+
+Mirrors ``rust/src/coordinator/launcher.rs`` (the word codec, the
+``StarMsg``/``MeshMsg`` layouts, ``ctrl_frame`` carrying u64 words as f64
+bit patterns on ``CTRL_BUCKET``) and the hardening contracts of
+``rust/src/coordinator/collective/socket.rs``: the bounded frame decoder
+(``Frame::decode_from_bounded``), the hello-verified accept loop, and the
+complete-line / duplicate-rank / run-generation rendezvous parsing.
+
+Protocol contracts being mirrored:
+
+* control messages are sequences of u64 words carried as the f64 payload
+  of an ordinary collective frame — ``to_bits``/``from_bits`` are pure
+  transmutes, so arbitrary words (NaN bit patterns included) survive the
+  f64 round trip bit-exactly;
+* every truncation of a control message raises instead of misparsing;
+* a frame header claiming more than ``max_frame_elems`` payload elements
+  is refused *before* any allocation;
+* silent, foreign-rank, and duplicate-hello dialers never consume an
+  accept slot — the pending-children set drains only on genuine hellos;
+* only ``\\n``-terminated rendezvous lines are parsed, duplicate lines for
+  one rank are a hard error, and a ``run <id>`` header naming a different
+  generation is refused;
+* a vanished rank becomes a named-rank parent error, not a hang.
+
+Keep in lockstep with the Rust tests (``launcher.rs`` unit tests and the
+``adversarial`` suite in ``rust/tests/dist_equivalence.rs``).
+"""
+
+import contextlib
+import math
+import re
+import struct
+
+from test_bucket_reduce import FRAME_HEADER, decode_frame, encode_frame
+
+
+@contextlib.contextmanager
+def raises(exc, match=None):
+    """Minimal raises stand-in so the mirror runs standalone in CI
+    (``python3 python/tests/test_launcher_protocol.py``) and under pytest."""
+    try:
+        yield
+    except exc as e:
+        if match is not None and not re.search(match, str(e)):
+            raise AssertionError(f"raised {e!r}, no match for {match!r}") from e
+    else:
+        raise AssertionError(f"{exc} not raised")
+
+# ── tags (launcher.rs) ─────────────────────────────────────────────────────
+
+TAG_READY = 1
+TAG_HEARTBEAT = 2
+TAG_RESULT = 3
+TAG_ERR = 4
+TAG_DONE = 5
+TAG_APPLY = 6
+TAG_MESH_ACC = 8
+TAG_MESH_ERR = 9
+
+CTRL_BUCKET = 2**32 - 2  # u32::MAX - 1; u32::MAX is drain()'s no-frame key
+
+
+def f64_bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def bits_f64(b):
+    return struct.unpack("<d", struct.pack("<Q", b))[0]
+
+
+# ── word codec (launcher.rs WordWriter / WordReader) ───────────────────────
+
+
+class WordWriter:
+    def __init__(self, tag):
+        self.words = [tag]
+
+    def u64(self, v):
+        self.words.append(v)
+
+    def f64(self, v):
+        self.words.append(f64_bits(v))
+
+    def f64s(self, vs):
+        self.u64(len(vs))
+        for v in vs:
+            self.f64(v)
+
+    def str_(self, s):
+        b = s.encode("utf-8")
+        self.u64(len(b))
+        for i in range(0, len(b), 8):
+            chunk = b[i : i + 8]
+            self.words.append(struct.unpack("<Q", chunk + b"\0" * (8 - len(chunk)))[0])
+
+
+class Truncated(ValueError):
+    pass
+
+
+class WordReader:
+    def __init__(self, words):
+        self.words = words
+        self.pos = 0
+
+    def u64(self):
+        if self.pos >= len(self.words):
+            raise Truncated(f"truncated control message ({len(self.words)} words)")
+        v = self.words[self.pos]
+        self.pos += 1
+        return v
+
+    def f64(self):
+        return bits_f64(self.u64())
+
+    def f64s(self):
+        n = self.u64()
+        if n > len(self.words) - self.pos:
+            raise Truncated(f"claims {n} payload words, fewer remain")
+        return [self.f64() for _ in range(n)]
+
+    def str_(self):
+        length = self.u64()
+        nwords = -(-length // 8)
+        if nwords > len(self.words) - self.pos:
+            raise Truncated(f"claims a {length}-byte string, frame is shorter")
+        raw = b"".join(struct.pack("<Q", self.u64()) for _ in range(nwords))
+        return raw[:length].decode("utf-8", errors="replace")
+
+
+# ── StarMsg / MeshMsg layouts (launcher.rs) ────────────────────────────────
+#
+# Messages are dicts with a "tag" key; field order below IS the wire
+# layout and must match launcher.rs encode()/decode() word for word.
+
+
+def encode_star(m):
+    t = m["tag"]
+    w = WordWriter(t)
+    if t == TAG_READY or t == TAG_DONE:
+        w.u64(m["rank"])
+    elif t == TAG_HEARTBEAT:
+        w.u64(m["rank"])
+        w.u64(m["step"])
+    elif t == TAG_RESULT:
+        w.u64(m["step"])
+        w.f64(m["loss_sum"])
+        w.f64(m["weight_sum"])
+        w.f64s(m["d_embed"])
+        w.u64(m["hash"])
+        w.u64(m["batches"])
+        w.u64(m["device_tokens"])
+        for c in m["cache"]:
+            w.u64(c)
+        w.f64s(m["rank_walls"])
+        w.f64(m["reduce_ms"])
+        w.f64(m["reduce_overlap_ms"])
+        w.f64(m["bucket_overlap_ms"])
+        w.u64(m["collective_bytes"])
+        w.u64(m["buckets"])
+    elif t == TAG_ERR:
+        w.u64(m["rank"])
+        w.u64(m["step"])
+        w.str_(m["msg"])
+    elif t == TAG_APPLY:
+        w.u64(m["step"])
+        w.f64(m["lr"])
+        w.f64(m["weight_sum"])
+        w.f64s(m["d_embed"])
+    else:
+        raise ValueError(f"unknown star tag {t}")
+    return w.words
+
+
+def decode_star(words):
+    r = WordReader(words)
+    t = r.u64()
+    if t == TAG_READY or t == TAG_DONE:
+        return {"tag": t, "rank": r.u64()}
+    if t == TAG_HEARTBEAT:
+        return {"tag": t, "rank": r.u64(), "step": r.u64()}
+    if t == TAG_RESULT:
+        return {
+            "tag": t,
+            "step": r.u64(),
+            "loss_sum": r.f64(),
+            "weight_sum": r.f64(),
+            "d_embed": r.f64s(),
+            "hash": r.u64(),
+            "batches": r.u64(),
+            "device_tokens": r.u64(),
+            "cache": [r.u64() for _ in range(4)],
+            "rank_walls": r.f64s(),
+            "reduce_ms": r.f64(),
+            "reduce_overlap_ms": r.f64(),
+            "bucket_overlap_ms": r.f64(),
+            "collective_bytes": r.u64(),
+            "buckets": r.u64(),
+        }
+    if t == TAG_ERR:
+        return {"tag": t, "rank": r.u64(), "step": r.u64(), "msg": r.str_()}
+    if t == TAG_APPLY:
+        return {
+            "tag": t,
+            "step": r.u64(),
+            "lr": r.f64(),
+            "weight_sum": r.f64(),
+            "d_embed": r.f64s(),
+        }
+    raise ValueError(f"unknown star control tag {t}")
+
+
+def encode_mesh(m):
+    t = m["tag"]
+    w = WordWriter(t)
+    if t == TAG_MESH_ACC:
+        w.f64(m["loss_sum"])
+        w.f64(m["weight_sum"])
+        w.u64(m["hash"])
+        w.u64(m["batches"])
+        for c in m["cache"]:
+            w.u64(c)
+        w.u64(m["device_tokens"])
+        w.f64(m["merge_ms"])
+        w.u64(len(m["walls"]))
+        for rank, ms in m["walls"]:
+            w.u64(rank)
+            w.f64(ms)
+        w.f64(m["since_exec_end_ms"])
+        w.f64(m["bucket_overlap_ms"])
+        w.u64(m["collective_bytes"])
+        w.u64(m["buckets"])
+    elif t == TAG_MESH_ERR:
+        w.u64(m["rank"])
+        w.str_(m["msg"])
+    else:
+        raise ValueError(f"unknown mesh tag {t}")
+    return w.words
+
+
+def decode_mesh(words):
+    r = WordReader(words)
+    t = r.u64()
+    if t == TAG_MESH_ACC:
+        out = {
+            "tag": t,
+            "loss_sum": r.f64(),
+            "weight_sum": r.f64(),
+            "hash": r.u64(),
+            "batches": r.u64(),
+            "cache": [r.u64() for _ in range(4)],
+            "device_tokens": r.u64(),
+            "merge_ms": r.f64(),
+        }
+        n = r.u64()
+        out["walls"] = [(r.u64(), r.f64()) for _ in range(n)]
+        out["since_exec_end_ms"] = r.f64()
+        out["bucket_overlap_ms"] = r.f64()
+        out["collective_bytes"] = r.u64()
+        out["buckets"] = r.u64()
+        return out
+    if t == TAG_MESH_ERR:
+        return {"tag": t, "rank": r.u64(), "msg": r.str_()}
+    raise ValueError(f"unknown mesh control tag {t}")
+
+
+# ── fixtures ───────────────────────────────────────────────────────────────
+
+NAN_BITS = 0x7FF8_DEAD_BEEF_CAFE  # a payload-carrying NaN pattern
+
+
+def star_fixtures():
+    return [
+        {"tag": TAG_READY, "rank": 3},
+        {"tag": TAG_HEARTBEAT, "rank": 1, "step": 41},
+        {
+            "tag": TAG_RESULT,
+            "step": 7,
+            "loss_sum": 12.25,
+            "weight_sum": 3.5,
+            "d_embed": [0.0, -1.5, bits_f64(NAN_BITS)],
+            "hash": 0xDEAD_BEEF_0BAD_F00D,
+            "batches": 6,
+            "device_tokens": 4096,
+            "cache": [9, 2, 800, 1],
+            "rank_walls": [1.25, 0.5, 2.0],
+            "reduce_ms": 0.75,
+            "reduce_overlap_ms": 0.25,
+            "bucket_overlap_ms": 0.125,
+            "collective_bytes": 65536,
+            "buckets": 4,
+        },
+        {"tag": TAG_ERR, "rank": 2, "step": 5, "msg": "rank 2 lost its mesh peer — déjà vu ☠"},
+        {"tag": TAG_DONE, "rank": 0},
+        {
+            "tag": TAG_APPLY,
+            "step": 7,
+            "lr": 1e-2,
+            "weight_sum": 3.5,
+            "d_embed": [2.0**-52, -0.0, 1e308],
+        },
+    ]
+
+
+def mesh_fixtures():
+    return [
+        {
+            "tag": TAG_MESH_ACC,
+            "loss_sum": -4.75,
+            "weight_sum": 2.0,
+            "hash": 0x0123_4567_89AB_CDEF,
+            "batches": 3,
+            "cache": [1, 2, 3, 4],
+            "device_tokens": 777,
+            "merge_ms": 0.5,
+            "walls": [(1, 1.5), (3, 0.25)],
+            "since_exec_end_ms": 0.125,
+            "bucket_overlap_ms": 0.0625,
+            "collective_bytes": 1024,
+            "buckets": 2,
+        },
+        {"tag": TAG_MESH_ERR, "rank": 5, "msg": ""},
+    ]
+
+
+def eq_bits(a, b):
+    """Structural equality with f64s compared by bit pattern (NaN-safe)."""
+    if isinstance(a, float) and isinstance(b, float):
+        return f64_bits(a) == f64_bits(b)
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(eq_bits(x, y) for x, y in zip(a, b))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and all(eq_bits(a[k], b[k]) for k in a)
+    return a == b
+
+
+# ── round trips ────────────────────────────────────────────────────────────
+
+
+def test_star_messages_round_trip_bit_exactly():
+    for m in star_fixtures():
+        assert eq_bits(decode_star(encode_star(m)), m), m["tag"]
+
+
+def test_mesh_messages_round_trip_bit_exactly():
+    for m in mesh_fixtures():
+        assert eq_bits(decode_mesh(encode_mesh(m)), m), m["tag"]
+
+
+def test_nan_word_survives_the_f64_frame_payload():
+    # the ctrl_frame carriage: words -> f64 payload -> wire frame -> words.
+    # A NaN bit pattern must come back identical (Rust side: from_bits /
+    # to_bits transmutes; here: struct pack/unpack round trip).
+    words = [TAG_HEARTBEAT, NAN_BITS, 0]
+    payload = [f64_bits(bits_f64(w)) for w in words]
+    assert payload == words
+    frame = encode_frame(9, CTRL_BUCKET, 3, payload)
+    (seq, bucket, from_, bits), _ = decode_frame(frame)
+    assert (seq, bucket, from_) == (9, CTRL_BUCKET, 3)
+    assert bits == words
+    assert math.isnan(bits_f64(bits[1]))
+
+
+def test_every_truncation_raises_instead_of_misparsing():
+    for m in star_fixtures():
+        full = encode_star(m)
+        for cut in range(len(full)):
+            with raises((Truncated, ValueError)):
+                decode_star(full[:cut])
+    for m in mesh_fixtures():
+        full = encode_mesh(m)
+        for cut in range(len(full)):
+            with raises((Truncated, ValueError)):
+                decode_mesh(full[:cut])
+
+
+def test_hostile_length_prefixes_are_refused():
+    # a Result whose d_embed length word claims 2^60 payload words: the
+    # reader must refuse before materializing anything
+    words = [TAG_RESULT, 7, f64_bits(0.0), f64_bits(1.0), 2**60]
+    with raises(Truncated):
+        decode_star(words)
+    # same for a string length in an Err
+    words = [TAG_ERR, 1, 5, 2**60]
+    with raises(Truncated):
+        decode_star(words)
+
+
+def test_ctrl_bucket_stays_clear_of_reserved_keys():
+    assert CTRL_BUCKET == 2**32 - 2
+    assert CTRL_BUCKET != 2**32 - 1  # drain()'s reserved no-frame key
+    # dense data buckets start at 0; any realistic gradient stays far below
+    assert CTRL_BUCKET > 2**20
+
+
+# ── bounded frame decode (Frame::decode_from_bounded) ──────────────────────
+
+
+def decode_frame_bounded(buf, max_elems):
+    """Mirror of the hardened decoder: the header's claimed element count
+    is checked against the bound *before* the payload is touched."""
+    if len(buf) == 0:
+        return None
+    if len(buf) < FRAME_HEADER.size:
+        raise ValueError("stream ended mid-frame-header")
+    seq, bucket, from_, nelems = FRAME_HEADER.unpack_from(buf, 0)
+    if max_elems is not None and nelems > max_elems:
+        raise ValueError(
+            f"frame from rank {from_} claims {nelems} elems > bound {max_elems}"
+        )
+    if len(buf) - FRAME_HEADER.size < 8 * nelems:
+        raise ValueError("stream ended mid-frame-body")
+    bits = [
+        struct.unpack_from("<Q", buf, FRAME_HEADER.size + 8 * i)[0]
+        for i in range(nelems)
+    ]
+    return (seq, bucket, from_, bits)
+
+
+def test_oversized_header_is_rejected_before_the_payload():
+    evil = FRAME_HEADER.pack(1, 0, 1, 2**32 - 1)  # claims ~32 GiB
+    with raises(ValueError, match="claims"):
+        decode_frame_bounded(evil, 64)
+    # an in-bound frame still decodes, and the bound is inclusive
+    ok = encode_frame(1, 0, 1, [f64_bits(2.5)] * 64)
+    assert decode_frame_bounded(ok, 64)[3] == [f64_bits(2.5)] * 64
+    with raises(ValueError, match="claims"):
+        decode_frame_bounded(ok, 63)
+    # unbounded (None) keeps the legacy in-process behavior
+    assert decode_frame_bounded(ok, None) is not None
+    assert decode_frame_bounded(b"", 64) is None  # clean EOF
+
+
+# ── hello-verified accept loop (socket.rs connect_opts step 3) ─────────────
+
+
+def accept_loop(pending, dialers):
+    """Mirror of the accept loop: each dialer is ``None`` (silent — hello
+    read times out) or a claimed rank.  Returns (accepted, still_pending);
+    adversaries are dropped without consuming a slot."""
+    pending = list(pending)
+    accepted = []
+    for hello in dialers:
+        if not pending:
+            break
+        if hello is None:
+            continue  # silent or half-open dialer: not a child
+        if hello not in pending:
+            continue  # foreign rank or duplicate hello: drop
+        pending.remove(hello)
+        accepted.append(hello)
+    return accepted, pending
+
+
+def test_adversarial_dialers_never_consume_accept_slots():
+    # silent dialer, foreign rank 7, genuine 1, duplicate 1, genuine 2
+    accepted, pending = accept_loop([1, 2], [None, 7, 1, 1, 2])
+    assert accepted == [1, 2]
+    assert pending == []
+    # adversaries alone never complete the mesh
+    accepted, pending = accept_loop([1, 2], [None, 7, 9, None])
+    assert accepted == []
+    assert pending == [2, 1] or pending == [1, 2]
+
+
+# ── rendezvous parsing (socket.rs) ─────────────────────────────────────────
+
+
+def complete_lines(text):
+    return [l[:-1].rstrip() for l in text.splitlines(keepends=True) if l.endswith("\n")]
+
+
+def wait_for_line(text, rank):
+    """One poll iteration of socket.rs::wait_for_line: returns the address,
+    None if not yet published, or raises on a duplicate."""
+    prefix = f"{rank} "
+    found = None
+    for line in complete_lines(text):
+        if line.startswith(prefix):
+            if found is not None:
+                raise ValueError(f"duplicate line for rank {rank} — stale file")
+            found = line[len(prefix) :].strip()
+    return found
+
+
+def check_run_header(text, run_id):
+    """One poll iteration of socket.rs::wait_for_run_header."""
+    for line in complete_lines(text):
+        if line.startswith("run "):
+            seen = line[4:]
+            if seen != run_id:
+                raise ValueError(f"run generation {seen!r}, not {run_id!r}")
+            return True
+    return False
+
+
+def test_torn_final_line_is_not_parsed_until_terminated():
+    torn = "run g1\n0 127.0.0.1:45123\n1 127.0.0.1:451"
+    assert wait_for_line(torn, 0) == "127.0.0.1:45123"
+    assert wait_for_line(torn, 1) is None  # would dial a truncated port
+    assert wait_for_line(torn + "24\n", 1) == "127.0.0.1:45124"
+
+
+def test_duplicate_rank_lines_are_a_hard_error():
+    stale = "0 127.0.0.1:1000\n0 127.0.0.1:2000\n"
+    with raises(ValueError, match="duplicate"):
+        wait_for_line(stale, 0)
+    # ...but a rank whose line is unique still resolves (prefix match is
+    # exact: rank 1 does not match rank 10's line)
+    assert wait_for_line("10 a:1\n1 b:2\n", 1) == "b:2"
+
+
+def test_run_header_pins_the_generation():
+    assert check_run_header("run gen-7\n0 a:1\n", "gen-7")
+    assert not check_run_header("0 a:1\n", "gen-7")  # not yet written
+    assert not check_run_header("run gen", "gen")  # torn header line
+    with raises(ValueError, match="generation"):
+        check_run_header("run gen-OLD\n", "gen-7")
+
+
+# ── parent watchdog (launcher.rs await_result) ─────────────────────────────
+
+
+def await_result(events, step, n_ranks):
+    """Mirror of the launcher's per-step event loop: returns the Result
+    payload, or raises a named-rank error on Err / a vanished process.
+    ``events`` is the star inbox: ("msg", rank, StarMsg-dict) or
+    ("gone", rank, exit_status) entries, plus a trailing "timeout"."""
+    done = [False] * n_ranks
+    for ev in events:
+        kind = ev[0]
+        if kind == "timeout":
+            raise TimeoutError(f"no result for step {step} within the deadline")
+        _, rank, payload = ev
+        if kind == "gone":
+            if not done[rank]:
+                raise RuntimeError(
+                    f"rank {rank} process exited ({payload}) before step {step} completed"
+                )
+            continue
+        tag = payload["tag"]
+        if tag == TAG_HEARTBEAT:
+            continue
+        if tag == TAG_ERR:
+            raise RuntimeError(
+                f"rank {payload['rank']} failed at step {payload['step']}: {payload['msg']}"
+            )
+        if tag == TAG_DONE:
+            done[rank] = True
+            continue
+        if tag == TAG_RESULT and payload["step"] == step:
+            return payload
+    raise TimeoutError(f"star inbox drained before step {step}")
+
+
+def test_a_vanished_rank_becomes_a_named_rank_error():
+    hb = {"tag": TAG_HEARTBEAT, "rank": 1, "step": 3}
+    with raises(RuntimeError, match="rank 1 process exited"):
+        await_result([("msg", 1, hb), ("gone", 1, "signal: 9")], 3, 2)
+    # an Err frame from the root names the failing rank too
+    err = {"tag": TAG_ERR, "rank": 0, "step": 3, "msg": "collective peer rank 1 disconnected"}
+    with raises(RuntimeError, match="rank 0 failed at step 3"):
+        await_result([("msg", 0, err)], 3, 2)
+    # a rank that already sent Done may exit freely
+    res = {
+        "tag": TAG_RESULT,
+        "step": 3,
+        "loss_sum": 1.0,
+        "weight_sum": 1.0,
+        "d_embed": [],
+        "hash": 0,
+        "batches": 1,
+        "device_tokens": 1,
+        "cache": [0, 0, 0, 0],
+        "rank_walls": [0.0],
+        "reduce_ms": 0.0,
+        "reduce_overlap_ms": 0.0,
+        "bucket_overlap_ms": 0.0,
+        "collective_bytes": 0,
+        "buckets": 1,
+    }
+    done = {"tag": TAG_DONE, "rank": 1}
+    got = await_result(
+        [("msg", 1, done), ("gone", 1, "exit: 0"), ("msg", 0, res)], 3, 2
+    )
+    assert got["step"] == 3
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_"):
+            fn()
+            print(f"{name} OK")

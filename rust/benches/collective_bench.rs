@@ -73,7 +73,7 @@ fn main() {
 
     let mut rows = Vec::new();
     for &(name, kb, transport) in configs {
-        let opts = ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+        let opts = ReduceOptions { bucket_kb: kb, transport, ..Default::default() };
         let (w_a, ms, fp) = run(opts.clone());
         let (w_b, ms_b, _) = run(opts.clone());
         let wall = w_a.min(w_b);

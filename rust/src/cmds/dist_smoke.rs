@@ -326,7 +326,7 @@ pub fn run(
     let mut coll_rows = Vec::new();
     for &kb in &kb_list {
         for &tr in &tr_list {
-            let opts = dist::ReduceOptions { bucket_kb: kb, transport: tr, rendezvous: None };
+            let opts = dist::ReduceOptions { bucket_kb: kb, transport: tr, ..Default::default() };
             let uses_collective = opts.uses_collective();
             let tag = format!("kb{kb}_{}", transport_name(tr));
             let (ms_a, fp_a, wall_a) = run_reduce(opts.clone())?;
@@ -467,31 +467,17 @@ pub fn run(
     Ok(())
 }
 
-/// Write one collective config's per-step stream as a deterministic CSV:
-/// bit patterns and counts only, no wall-clock columns, so CI can byte-
-/// compare the same `bucket_kb` across transports (`cmp`-equal files ⇔
-/// bit-identical reduces).
+/// Write one collective config's per-step stream as a deterministic CSV
+/// (shared [`super::write_bits_csv`] schema), so CI can byte-compare the
+/// same `bucket_kb` across transports (`cmp`-equal files ⇔ bit-identical
+/// reduces).
 fn write_collective_csv(
     dir: &Path,
     tag: &str,
     ms: &[StepMetrics],
     fps: &[u64],
 ) -> anyhow::Result<std::path::PathBuf> {
-    std::fs::create_dir_all(dir)?;
-    let path = dir.join(format!("dist_collective_{tag}.csv"));
-    let mut s = String::from("step,loss_bits,weight_sum_bits,device_tokens,fingerprint\n");
-    for (m, fp) in ms.iter().zip(fps) {
-        s.push_str(&format!(
-            "{},{:016x},{:016x},{},{:016x}\n",
-            m.step,
-            m.loss.to_bits(),
-            m.weight_sum.to_bits(),
-            m.device_tokens,
-            fp
-        ));
-    }
-    std::fs::write(&path, s)?;
-    Ok(path)
+    super::write_bits_csv(dir, &format!("dist_collective_{tag}"), ms, fps)
 }
 
 /// Measured AdamW-vs-broadcast crossover (docs/distributed.md): at each

@@ -1,0 +1,233 @@
+//! `tree-train launch` — the multi-process rank launcher as a CI gate
+//! (docs/distributed.md#multi-process-launch), plus the hidden
+//! `rank-worker` entry point the launcher spawns per rank.
+//!
+//! For every `--ranks N` the same hermetic corpus is run twice:
+//!
+//! 1. **in-process reference** — the persistent [`HostExecutor`] rank pool
+//!    with the socket collective at the same `--reduce-bucket-kb`, i.e.
+//!    exactly the data-plane configuration the rank processes will use,
+//!    minus the process boundary;
+//! 2. **multi-process** — [`launcher::run_launch`]: one OS process per
+//!    rank over the same socket mesh, typed control plane as
+//!    length-prefixed frames, results and updates over the launcher star.
+//!
+//! The gate: both runs' `(step, loss bits, weight-sum bits, device tokens,
+//! fingerprint)` CSVs must be **byte-identical** (`launch_inproc_rN.csv`
+//! vs `launch_multi_rN.csv`; CI additionally `cmp`s the files).  The
+//! command asserts the same equality internally, so a bare `tree-train
+//! launch` run is already the full determinism check.
+//!
+//! `--kill-rank R [--kill-step S]` flips the command into the failure
+//! gate: the launcher kills rank R's process at step S and the run must
+//! fail fast — within the deadline — with an error naming rank R, instead
+//! of hanging in a collective recv.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use tree_train::coordinator::dist;
+use tree_train::coordinator::launcher::{self, LaunchConfig, WorkerConfig};
+use tree_train::coordinator::pipeline::{self, HostExecutor, PipelineConfig};
+use tree_train::trainer::PlanSpec;
+
+fn parse_rank_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let v: usize = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--ranks: `{part}` is not a positive integer"))?;
+        anyhow::ensure!(v >= 1, "--ranks entries must be >= 1");
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "--ranks needs at least one value");
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    corpus: &Path,
+    format: &str,
+    mode: &str,
+    steps: u64,
+    trees_per_batch: usize,
+    ranks: &str,
+    depth: usize,
+    window: usize,
+    capacity: usize,
+    vocab: usize,
+    seed: u64,
+    bucket_kb: usize,
+    deadline_ms: u64,
+    kill_rank: Option<usize>,
+    kill_step: u64,
+    csv_dir: &Path,
+) -> anyhow::Result<()> {
+    let mode = super::parse_mode(mode)?;
+    let rank_list = parse_rank_list(ranks)?;
+    let deadline = Duration::from_millis(deadline_ms.max(1));
+    let spec = PlanSpec::for_host(capacity);
+    let lr = 1e-2; // same hermetic constants as dist-smoke
+    let warmup = 0;
+
+    let launch_cfg = |n: usize, kill: Option<(usize, u64)>| LaunchConfig {
+        corpus: corpus.to_path_buf(),
+        format: format.to_string(),
+        mode,
+        steps,
+        trees_per_batch,
+        depth,
+        window,
+        capacity,
+        vocab,
+        seed,
+        lr,
+        warmup,
+        ranks: n,
+        bucket_kb,
+        deadline,
+        kill,
+    };
+
+    // ── failure gate: kill one rank, require a fast named-rank error ──
+    if let Some(kr) = kill_rank {
+        let n = *rank_list.iter().max().unwrap();
+        anyhow::ensure!(n >= 2, "--kill-rank needs a --ranks value >= 2");
+        anyhow::ensure!(kr < n, "--kill-rank {kr} out of range for {n} ranks");
+        anyhow::ensure!(kill_step < steps, "--kill-step {kill_step} >= --steps {steps}");
+        let t0 = Instant::now();
+        let err = match launcher::run_launch(&launch_cfg(n, Some((kr, kill_step))), spec, super::smoke_source(format, corpus, window, seed)?) {
+            Ok(_) => anyhow::bail!(
+                "killing rank {kr} at step {kill_step} did NOT fail the run — \
+                 the watchdog never fired"
+            ),
+            Err(e) => e,
+        };
+        let elapsed = t0.elapsed();
+        let msg = format!("{err:#}");
+        anyhow::ensure!(
+            msg.contains(&format!("rank {kr}")),
+            "run failed after killing rank {kr}, but the error does not name it: {msg}"
+        );
+        // generous CI slack on top of the protocol deadline: the point is
+        // "bounded, not a hang", not a tight latency bound
+        let bound = deadline + Duration::from_secs(60);
+        anyhow::ensure!(
+            elapsed <= bound,
+            "named-rank error took {elapsed:?} — over the {bound:?} failure bound"
+        );
+        println!(
+            "launch kill gate OK: rank {kr} killed at step {kill_step}, parent failed in \
+             {:.1} ms naming it: {msg}",
+            elapsed.as_secs_f64() * 1e3
+        );
+        return Ok(());
+    }
+
+    // ── determinism gate: multi-process ≡ in-process, per rank count ──
+    for &n in &rank_list {
+        // (1) in-process reference: same socket data plane, no processes
+        let pcfg = PipelineConfig {
+            mode,
+            steps,
+            trees_per_batch,
+            depth,
+            lr,
+            warmup,
+            ranks: n,
+        };
+        let reduce = dist::ReduceOptions {
+            bucket_kb,
+            transport: dist::Transport::Socket,
+            ..Default::default()
+        };
+        let mut exec = HostExecutor::new(vocab, launcher::HOST_DIM, seed).with_reduce(reduce);
+        let t0 = Instant::now();
+        let source = super::smoke_source(format, corpus, window, seed)?;
+        let (ref_ms, _) = pipeline::run(&pcfg, spec.clone(), source, &mut exec)?;
+        let ref_wall = t0.elapsed().as_secs_f64() * 1e3;
+        let ref_csv =
+            super::write_bits_csv(csv_dir, &format!("launch_inproc_r{n}"), &ref_ms, &exec.fingerprints)?;
+
+        // (2) multi-process: one OS process per rank
+        let t0 = Instant::now();
+        let source = super::smoke_source(format, corpus, window, seed)?;
+        let (multi_ms, _, multi_fp) =
+            launcher::run_launch(&launch_cfg(n, None), spec.clone(), source)?;
+        let multi_wall = t0.elapsed().as_secs_f64() * 1e3;
+        let multi_csv =
+            super::write_bits_csv(csv_dir, &format!("launch_multi_r{n}"), &multi_ms, &multi_fp)?;
+
+        // the gate: byte-identical CSVs (CI re-checks with cmp)
+        let a = std::fs::read(&ref_csv)?;
+        let b = std::fs::read(&multi_csv)?;
+        anyhow::ensure!(
+            a == b,
+            "ranks {n}: multi-process run diverged from the in-process pool — \
+             {} != {}",
+            ref_csv.display(),
+            multi_csv.display()
+        );
+        anyhow::ensure!(
+            exec.fingerprints == multi_fp,
+            "ranks {n}: step fingerprints diverged between in-process and multi-process"
+        );
+        println!(
+            "launch OK: ranks {n}: {steps} steps multi-process ≡ in-process bit-for-bit \
+             (bucket {bucket_kb} KiB; in-process {ref_wall:.1} ms, processes \
+             {multi_wall:.1} ms) -> {}",
+            multi_csv.display()
+        );
+    }
+    Ok(())
+}
+
+/// `tree-train rank-worker` — the per-rank child process entry point.
+/// Not a user-facing command: the flag set is the launcher's spawn
+/// contract ([`launcher::LaunchExecutor::spawn`]).  Errors exit nonzero
+/// (after the control-plane frames that let the other processes unwind),
+/// which the parent watchdog converts into a named-rank error.
+pub fn rank_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let need = |k: &str| -> anyhow::Result<&str> {
+        flags.get(k).map(|s| s.as_str()).ok_or_else(|| anyhow::anyhow!("rank-worker: missing --{k}"))
+    };
+    let num = |k: &str| -> anyhow::Result<u64> {
+        need(k)?.parse::<u64>().map_err(|_| anyhow::anyhow!("rank-worker: --{k} must be an integer"))
+    };
+    let rank = num("rank")? as usize;
+    let ranks = num("ranks")? as usize;
+    let vocab = num("vocab")? as usize;
+    let capacity = num("capacity")? as usize;
+    let window = num("shuffle-window")? as usize;
+    let seed = num("seed")?;
+    // the LR travels as its exact bit pattern — the step fingerprint folds
+    // those bits, so a decimal round trip would fork the fingerprints
+    let lr_bits = u64::from_str_radix(need("lr-bits")?, 16)
+        .map_err(|_| anyhow::anyhow!("rank-worker: --lr-bits must be 16 hex digits"))?;
+    let corpus = PathBuf::from(need("corpus")?);
+    let format = need("format")?.to_string();
+    let cfg = WorkerConfig {
+        rank,
+        ranks,
+        rendezvous: PathBuf::from(need("rendezvous")?),
+        run_id: need("run-id")?.to_string(),
+        parent_addr: need("parent-addr")?.to_string(),
+        mode: super::parse_mode(need("mode")?)?,
+        steps: num("steps")?,
+        trees_per_batch: num("trees-per-batch")? as usize,
+        depth: num("pipeline-depth")? as usize,
+        vocab,
+        seed,
+        lr: f64::from_bits(lr_bits),
+        warmup: num("warmup")?,
+        bucket_kb: num("reduce-bucket-kb")? as usize,
+        deadline: Duration::from_millis(num("deadline-ms")?.max(1)),
+    };
+    let spec = PlanSpec::for_host(capacity);
+    let source = super::smoke_source(&format, &corpus, window, seed)?;
+    launcher::run_worker(&cfg, spec, source)
+}

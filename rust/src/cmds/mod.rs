@@ -10,6 +10,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod gen_data;
 pub mod ingest;
+pub mod launch;
 pub mod mem;
 pub mod pipeline_smoke;
 pub mod prefix_smoke;
@@ -25,6 +26,7 @@ use tree_train::coordinator::Mode;
 use tree_train::data::{CorpusSource, StreamingRolloutSource, StreamingTreeSource};
 use tree_train::ingest::IngestConfig;
 use tree_train::runtime::Runtime;
+use tree_train::trainer::StepMetrics;
 
 pub fn runtime(artifacts: &std::path::Path) -> anyhow::Result<Arc<Runtime>> {
     Ok(Arc::new(Runtime::from_dir(artifacts)?))
@@ -55,4 +57,32 @@ pub fn smoke_source(
         }
         other => anyhow::bail!("unknown format {other} (trees|rollouts)"),
     })
+}
+
+/// Write one run's per-step stream as a deterministic CSV: bit patterns
+/// and counts only, no wall-clock columns, so CI can byte-compare two
+/// configurations of the same run (`cmp`-equal files ⇔ bit-identical
+/// training).  Shared by `dist-smoke` (cross-transport compares) and
+/// `launch` (multi-process vs in-process compares).
+pub fn write_bits_csv(
+    dir: &Path,
+    stem: &str,
+    ms: &[StepMetrics],
+    fps: &[u64],
+) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{stem}.csv"));
+    let mut s = String::from("step,loss_bits,weight_sum_bits,device_tokens,fingerprint\n");
+    for (m, fp) in ms.iter().zip(fps) {
+        s.push_str(&format!(
+            "{},{:016x},{:016x},{},{:016x}\n",
+            m.step,
+            m.loss.to_bits(),
+            m.weight_sum.to_bits(),
+            m.device_tokens,
+            fp
+        ));
+    }
+    std::fs::write(&path, s)?;
+    Ok(path)
 }

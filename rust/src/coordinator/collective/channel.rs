@@ -64,7 +64,9 @@ impl Collective for ChannelCollective {
     }
 
     fn recv(&mut self, seq: u64, bucket: u32, src: usize) -> crate::Result<Frame> {
-        recv_frame(&self.rx, &mut self.stash, seq, bucket, src)
+        // no deadline: a dead in-process peer drops the only sender clone,
+        // so `recv()` itself errors — the socket-only hang can't happen here
+        recv_frame(&self.rx, &mut self.stash, seq, bucket, src, None)
     }
 
     fn gc_below(&mut self, seq: u64) {

@@ -92,8 +92,22 @@ impl Frame {
 
     /// Decode one frame from a byte stream.  `Ok(None)` means the stream
     /// ended cleanly *at* a frame boundary (peer closed); EOF mid-frame is
-    /// an error.
+    /// an error.  Unbounded: trusts the wire's `nelems` — prefer
+    /// [`Frame::decode_from_bounded`] on sockets, where a corrupt or
+    /// hostile header must not drive the payload allocation.
     pub fn decode_from<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
+        Self::decode_from_bounded(r, None)
+    }
+
+    /// [`Frame::decode_from`] with an upper bound on the payload element
+    /// count.  A header claiming more than `max_elems` is rejected as
+    /// `InvalidData` *before* any payload allocation — without the bound a
+    /// single corrupt header (`nelems = u32::MAX`) asks for a 32 GiB
+    /// buffer and aborts the process.
+    pub fn decode_from_bounded<R: Read>(
+        r: &mut R,
+        max_elems: Option<usize>,
+    ) -> std::io::Result<Option<Frame>> {
         let mut head = [0u8; FRAME_HEADER_BYTES];
         let mut got = 0usize;
         while got < head.len() {
@@ -113,6 +127,17 @@ impl Frame {
         let bucket = u32::from_le_bytes(head[8..12].try_into().unwrap());
         let from = u32::from_le_bytes(head[12..16].try_into().unwrap());
         let nelems = u32::from_le_bytes(head[16..20].try_into().unwrap()) as usize;
+        if let Some(max) = max_elems {
+            if nelems > max {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "frame header from rank {from} claims {nelems} f64 elems but this \
+                         run's frames are bounded at {max} (corrupt stream or foreign dialer)"
+                    ),
+                ));
+            }
+        }
         let mut body = vec![0u8; 8 * nelems];
         r.read_exact(&mut body)?;
         let data = body
@@ -207,20 +232,46 @@ pub trait Collective: Send {
 /// Shared receive logic for transports that deliver [`Frame`]s through an
 /// in-process channel (the channel bus directly; sockets via per-connection
 /// reader threads): stash-and-replay keyed `(seq, bucket, from)`.
+///
+/// `deadline` bounds the *total* wait.  It exists for the socket transport:
+/// when a peer process dies its reader thread exits, but the other readers'
+/// sender clones keep the shared channel alive, so a plain `recv()` would
+/// block forever — exactly the multi-process hang the launcher's watchdog
+/// must not rely on the OS to break.  `None` (the in-process bus) keeps the
+/// untimed behavior: there a dead peer drops the only sender and `recv()`
+/// itself errors.
 pub(crate) fn recv_frame(
     rx: &std::sync::mpsc::Receiver<Frame>,
     stash: &mut FrameStash,
     seq: u64,
     bucket: u32,
     src: usize,
+    deadline: Option<std::time::Duration>,
 ) -> crate::Result<Frame> {
     if let Some(data) = stash.take(seq, bucket, src as u32) {
         return Ok(Frame { seq, bucket, from: src as u32, data });
     }
+    let until = deadline.map(|d| std::time::Instant::now() + d);
     loop {
-        let f = rx.recv().map_err(|_| {
-            anyhow::anyhow!("collective peer rank {src} disconnected (bucket {bucket})")
-        })?;
+        let f = match until {
+            None => rx.recv().map_err(|_| {
+                anyhow::anyhow!("collective peer rank {src} disconnected (bucket {bucket})")
+            })?,
+            Some(t) => {
+                let left = t.saturating_duration_since(std::time::Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(f) => f,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => anyhow::bail!(
+                        "collective peer rank {src}: no frame (seq {seq}, bucket {bucket}) \
+                         within {:?} — peer process dead or hung",
+                        deadline.unwrap()
+                    ),
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => anyhow::bail!(
+                        "collective peer rank {src} disconnected (bucket {bucket})"
+                    ),
+                }
+            }
+        };
         if f.seq < seq {
             continue; // stale frame from an aborted earlier step
         }
@@ -324,6 +375,28 @@ mod tests {
         assert!(Frame::decode_from(&mut r).is_err());
         let mut r = &bytes[..FRAME_HEADER_BYTES - 2];
         assert!(Frame::decode_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_header_is_rejected_before_allocation() {
+        // hand-craft a header claiming u32::MAX elements (a 32 GiB body)
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u64.to_le_bytes()); // seq
+        wire.extend_from_slice(&0u32.to_le_bytes()); // bucket
+        wire.extend_from_slice(&1u32.to_le_bytes()); // from
+        wire.extend_from_slice(&u32::MAX.to_le_bytes()); // nelems
+        let err = Frame::decode_from_bounded(&mut wire.as_slice(), Some(512)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("bounded at 512"), "{err}");
+    }
+
+    #[test]
+    fn bounded_decode_accepts_frames_at_the_bound() {
+        let f = Frame { seq: 1, bucket: 0, from: 1, data: vec![1.0, 2.0, 3.0] };
+        let bytes = f.encode();
+        let g = Frame::decode_from_bounded(&mut bytes.as_slice(), Some(3)).unwrap().unwrap();
+        assert_eq!(g.data, f.data);
+        assert!(Frame::decode_from_bounded(&mut bytes.as_slice(), Some(2)).is_err());
     }
 
     #[test]

@@ -9,7 +9,19 @@
 //! Because every rank publishes *before* dialing its own parent, and a TCP
 //! connect succeeds against a bound listener's backlog even before
 //! `accept`, the rendezvous cannot deadlock; all waits are bounded by
-//! [`CONNECT_TIMEOUT`].
+//! [`CONNECT_TIMEOUT`].  Only `\n`-terminated lines are ever parsed (a
+//! concurrent `O_APPEND` writer can be mid-flush when we `read`), a
+//! duplicate line for the same rank is a hard error (stale file from a
+//! crashed run), and a `run <id>` header pins the file to one run
+//! generation ([`SocketOptions::run_id`]).
+//!
+//! Accepting: the hello is verified *inside* the accept loop, before the
+//! connection counts against the expected-children tally — a foreign or
+//! duplicate dialer (port scanner, stale peer from a previous run) is
+//! dropped on the floor and the loop keeps waiting for the genuine
+//! children.  (It used to count at `accept()` and let the reader thread
+//! discard impostors, which permanently consumed an accept slot and turned
+//! the real child's link into a 20 s timeout.)
 //!
 //! Delivery: one reader thread per accepted child connection decodes
 //! [`Frame`]s into a shared in-process channel, so receive-side semantics
@@ -17,6 +29,14 @@
 //! in-process transport — the transports differ only in how bytes move,
 //! never in fold order.  Reader threads exit on clean EOF when the child's
 //! endpoint drops at pool teardown.
+//!
+//! Failure bounds ([`SocketOptions::deadline`]): the parent stream gets an
+//! OS write timeout (a dead parent's full socket buffer no longer blocks
+//! `write_all` forever) and `recv` waits at most the deadline for a frame
+//! (a dead *child's* reader thread exits, but the other readers' sender
+//! clones keep the shared channel alive, so an untimed `recv` would hang).
+//! Frame payload sizes are bounded by [`SocketOptions::max_frame_elems`]
+//! before allocation.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -32,7 +52,34 @@ use crate::coordinator::dist::{reduce_children, reduce_parent};
 /// peer surfaces as an error here instead of a hang.
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
 
+/// How long an accepted connection gets to produce its 4-byte hello before
+/// it is dropped as a silent foreign dialer.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(2);
+
 const POLL: Duration = Duration::from_millis(2);
+
+/// Run-scoped hardening knobs for [`SocketCollective::connect_opts`].
+/// The default (`SocketOptions::default()`) reproduces the PR 9 behavior:
+/// unbounded frames, untimed waits, no generation check.
+#[derive(Clone, Debug, Default)]
+pub struct SocketOptions {
+    /// Upper bound on a decoded frame's payload element count.  The pool
+    /// sets this to the step's flat gradient length (plus control-plane
+    /// slack), so a corrupt or hostile header cannot drive a 32 GiB
+    /// allocation.  `None` = unbounded.
+    pub max_frame_elems: Option<usize>,
+    /// Per-peer read/write deadline: `send_up` to a dead parent and `recv`
+    /// from a dead child error after this long instead of hanging.
+    /// `None` = wait forever (single-process pool threads, where a dead
+    /// peer is a panic that aborts the run anyway).
+    pub deadline: Option<Duration>,
+    /// Run generation this endpoint belongs to.  When set, the rendezvous
+    /// file must open with a matching `run <id>` header (written by the
+    /// launcher via [`write_run_header`]) — joining a stale file left by a
+    /// crashed or concurrent run is refused instead of silently dialing
+    /// its dead listeners.
+    pub run_id: Option<String>,
+}
 
 /// One rank's endpoint on the socket bucket tree.
 pub struct SocketCollective {
@@ -41,14 +88,30 @@ pub struct SocketCollective {
     parent: Option<TcpStream>,
     rx: mpsc::Receiver<Frame>,
     stash: FrameStash,
+    deadline: Option<Duration>,
 }
 
 impl SocketCollective {
-    /// Join the rendezvous at `path` as `rank` of `n_ranks`.  Every rank
-    /// must call this concurrently (the pool runs the connects on parallel
-    /// builder threads); returns once this rank's parent link is dialed
-    /// and all child links are accepted.
+    /// Join the rendezvous at `path` as `rank` of `n_ranks` with default
+    /// [`SocketOptions`].  Every rank must call this concurrently (the
+    /// pool runs the connects on parallel builder threads); returns once
+    /// this rank's parent link is dialed and all child links are accepted.
     pub fn connect(path: &Path, rank: usize, n_ranks: usize) -> crate::Result<SocketCollective> {
+        Self::connect_opts(path, rank, n_ranks, &SocketOptions::default())
+    }
+
+    /// [`SocketCollective::connect`] with explicit hardening options —
+    /// the multi-process launcher path.
+    pub fn connect_opts(
+        path: &Path,
+        rank: usize,
+        n_ranks: usize,
+        opts: &SocketOptions,
+    ) -> crate::Result<SocketCollective> {
+        // 0. refuse to join a rendezvous from a different run generation
+        if let Some(id) = &opts.run_id {
+            wait_for_run_header(path, id)?;
+        }
         let children: Vec<usize> =
             reduce_children(rank, n_ranks).into_iter().map(|(_, src)| src).collect();
         // 1. publish before dialing anyone, so parents are always findable
@@ -69,29 +132,44 @@ impl SocketCollective {
                 let mut s = TcpStream::connect(addr.as_str())
                     .map_err(|e| anyhow::anyhow!("rank {rank} dialing parent {p} at {addr}: {e}"))?;
                 s.set_nodelay(true)?;
+                // a dead parent's full socket buffer must not block
+                // `write_all` forever
+                s.set_write_timeout(opts.deadline)?;
                 s.write_all(&(rank as u32).to_le_bytes())?; // hello
                 Some(s)
             }
         };
-        // 3. accept one connection per bracket child; each gets a reader
-        // thread decoding frames into one shared channel
+        // 3. accept connections until every bracket child has identified
+        // itself by hello; each genuine child gets a reader thread
+        // decoding frames into one shared channel.  Foreign, duplicate, or
+        // silent dialers are dropped without consuming an accept slot.
         let (tx, rx) = mpsc::channel::<Frame>();
         if let Some(l) = listener {
             l.set_nonblocking(true)?;
             let deadline = Instant::now() + CONNECT_TIMEOUT;
-            let mut accepted = 0usize;
-            while accepted < children.len() {
+            let mut pending = children.clone();
+            while !pending.is_empty() {
                 match l.accept() {
-                    Ok((s, _)) => {
+                    Ok((mut s, _)) => {
                         s.set_nonblocking(false)?;
-                        spawn_reader(rank, s, children.clone(), tx.clone())?;
-                        accepted += 1;
+                        s.set_read_timeout(Some(HELLO_TIMEOUT))?;
+                        let mut hello = [0u8; 4];
+                        if std::io::Read::read_exact(&mut s, &mut hello).is_err() {
+                            continue; // silent or half-open dialer: not a child
+                        }
+                        let from = u32::from_le_bytes(hello) as usize;
+                        let Some(i) = pending.iter().position(|&c| c == from) else {
+                            continue; // foreign rank or duplicate hello: drop
+                        };
+                        pending.swap_remove(i);
+                        s.set_read_timeout(None)?;
+                        s.set_nodelay(true)?;
+                        spawn_reader(rank, from, s, tx.clone(), opts.max_frame_elems)?;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         anyhow::ensure!(
                             Instant::now() < deadline,
-                            "rank {rank}: only {accepted}/{} children connected within {:?}",
-                            children.len(),
+                            "rank {rank}: children {pending:?} did not connect within {:?}",
                             CONNECT_TIMEOUT
                         );
                         std::thread::sleep(POLL);
@@ -100,7 +178,14 @@ impl SocketCollective {
                 }
             }
         }
-        Ok(SocketCollective { rank, n_ranks, parent, rx, stash: FrameStash::default() })
+        Ok(SocketCollective {
+            rank,
+            n_ranks,
+            parent,
+            rx,
+            stash: FrameStash::default(),
+            deadline: opts.deadline,
+        })
     }
 
     /// A fresh collision-free rendezvous path in the system temp dir.
@@ -112,16 +197,73 @@ impl SocketCollective {
     }
 }
 
+/// Stamp `path` with the `run <id>` generation header.  The launcher calls
+/// this once before spawning rank processes; children pass the same id via
+/// [`SocketOptions::run_id`] and refuse any file carrying a different one.
+pub fn write_run_header(path: &Path, run_id: &str) -> crate::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(format!("run {run_id}\n").as_bytes())?;
+    Ok(())
+}
+
+/// Iterate only the *complete* (`\n`-terminated) lines of a rendezvous
+/// snapshot.  `read_to_string` races the `O_APPEND` writers, so the last
+/// line may be torn mid-address — parsing it would dial a truncated port.
+fn complete_lines(text: &str) -> impl Iterator<Item = &str> {
+    text.split_inclusive('\n').filter(|l| l.ends_with('\n')).map(|l| l.trim_end())
+}
+
+/// Poll the rendezvous file until its `run <id>` header appears, and error
+/// if it names a different generation.
+fn wait_for_run_header(path: &Path, run_id: &str) -> crate::Result<()> {
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in complete_lines(&text) {
+                if let Some(id) = line.strip_prefix("run ") {
+                    anyhow::ensure!(
+                        id == run_id,
+                        "rendezvous {} belongs to run generation {id:?}, not {run_id:?} — \
+                         stale file from another run; refusing to join",
+                        path.display()
+                    );
+                    return Ok(());
+                }
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "rendezvous {}: no `run` header within {:?}",
+            path.display(),
+            CONNECT_TIMEOUT
+        );
+        std::thread::sleep(POLL);
+    }
+}
+
 /// Poll the rendezvous file until `rank`'s `"<rank> <addr>"` line appears.
+/// Only `\n`-terminated lines count (see [`complete_lines`]); two complete
+/// lines claiming the same rank mean a stale file from a crashed run and
+/// are a hard error rather than a coin-flip dial.
 fn wait_for_line(path: &Path, rank: usize) -> crate::Result<String> {
     let prefix = format!("{rank} ");
     let deadline = Instant::now() + CONNECT_TIMEOUT;
     loop {
         if let Ok(text) = std::fs::read_to_string(path) {
-            for line in text.lines() {
+            let mut found: Option<String> = None;
+            for line in complete_lines(&text) {
                 if let Some(addr) = line.strip_prefix(&prefix) {
-                    return Ok(addr.trim().to_string());
+                    anyhow::ensure!(
+                        found.is_none(),
+                        "rendezvous {}: duplicate line for rank {rank} — stale file from a \
+                         crashed run; remove it (or use a run id) and retry",
+                        path.display()
+                    );
+                    found = Some(addr.trim().to_string());
                 }
+            }
+            if let Some(addr) = found {
+                return Ok(addr);
             }
         }
         anyhow::ensure!(
@@ -134,28 +276,21 @@ fn wait_for_line(path: &Path, rank: usize) -> crate::Result<String> {
     }
 }
 
-/// Reader thread: verify the hello names a bracket child, then decode
-/// frames into the shared channel until clean EOF.  A decode error or a
-/// foreign hello drops the sender, which surfaces as "peer disconnected"
-/// at the blocked receiver instead of a hang.
+/// Reader thread for one verified child connection: decode frames into the
+/// shared channel until clean EOF.  A decode error (torn stream, oversized
+/// header) drops the sender clone; the blocked receiver surfaces it as a
+/// deadline timeout or disconnect instead of a hang.
 fn spawn_reader(
     rank: usize,
+    from: usize,
     mut s: TcpStream,
-    children: Vec<usize>,
     tx: mpsc::Sender<Frame>,
+    max_elems: Option<usize>,
 ) -> crate::Result<()> {
     std::thread::Builder::new()
-        .name(format!("tt-coll-rx-{rank}"))
+        .name(format!("tt-coll-rx-{rank}-{from}"))
         .spawn(move || {
-            let mut hello = [0u8; 4];
-            if std::io::Read::read_exact(&mut s, &mut hello).is_err() {
-                return;
-            }
-            let from = u32::from_le_bytes(hello) as usize;
-            if !children.contains(&from) {
-                return; // foreign connection: drop it, starve the recv
-            }
-            while let Ok(Some(f)) = Frame::decode_from(&mut s) {
+            while let Ok(Some(f)) = Frame::decode_from_bounded(&mut s, max_elems) {
                 if tx.send(f).is_err() {
                     return; // endpoint dropped: stop reading
                 }
@@ -192,7 +327,7 @@ impl Collective for SocketCollective {
     }
 
     fn recv(&mut self, seq: u64, bucket: u32, src: usize) -> crate::Result<Frame> {
-        recv_frame(&self.rx, &mut self.stash, seq, bucket, src)
+        recv_frame(&self.rx, &mut self.stash, seq, bucket, src, self.deadline)
     }
 
     fn gc_below(&mut self, seq: u64) {
@@ -266,5 +401,42 @@ mod tests {
         c1.send_abort(9, 2).unwrap();
         let f = c0.recv(9, 2, 1).unwrap();
         assert!(f.is_abort());
+    }
+
+    #[test]
+    fn torn_final_line_is_not_parsed_until_terminated() {
+        let path = SocketCollective::fresh_rendezvous("torn");
+        // the O_APPEND writer is "mid-flush": address cut inside the port
+        std::fs::write(&path, "0 127.0.0.1:4").unwrap();
+        let p = path.clone();
+        let h = std::thread::spawn(move || wait_for_line(&p, 0));
+        // give the poller time to read the torn snapshot; it must keep
+        // waiting rather than return the truncated address
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!h.is_finished(), "torn line was parsed as an address");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"2567\n").unwrap();
+        drop(f);
+        assert_eq!(h.join().unwrap().unwrap(), "127.0.0.1:42567");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn duplicate_rank_lines_are_a_hard_error() {
+        let path = SocketCollective::fresh_rendezvous("dup");
+        std::fs::write(&path, "0 127.0.0.1:1111\n0 127.0.0.1:2222\n").unwrap();
+        let err = wait_for_line(&path, 0).unwrap_err();
+        assert!(err.to_string().contains("duplicate line for rank 0"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn run_header_pins_the_generation() {
+        let path = SocketCollective::fresh_rendezvous("gen");
+        write_run_header(&path, "gen-A").unwrap();
+        assert!(wait_for_run_header(&path, "gen-A").is_ok());
+        let err = wait_for_run_header(&path, "gen-B").unwrap_err();
+        assert!(err.to_string().contains("gen-A"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -205,6 +205,16 @@ pub struct ReduceOptions {
     /// Rendezvous file for the socket transport (auto-generated in the
     /// system temp dir when unset).
     pub rendezvous: Option<std::path::PathBuf>,
+    /// Upper bound on a decoded socket frame's payload element count.
+    /// `None` lets [`RankPool::new_with`] derive it from the workers'
+    /// `flat_grad_len` (plus control-plane slack), so a corrupt or hostile
+    /// frame header can never drive an unbounded allocation.
+    pub max_frame_elems: Option<usize>,
+    /// Per-peer read/write deadline on the socket transport: a blocked
+    /// `send_up` to a dead parent or `recv` from a dead child errors after
+    /// this long instead of hanging.  `None` (the default) keeps the
+    /// untimed single-process behavior.
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl ReduceOptions {
@@ -301,26 +311,28 @@ pub fn plan_units(plan: &StepPlan) -> usize {
 }
 
 /// One subtree of the in-flight reduction, flowing child → parent.
-struct Subtree<B> {
-    acc: B,
-    device_tokens: usize,
+/// `pub(crate)` so the multi-process launcher's rank-worker runtime
+/// ([`crate::coordinator::launcher`]) can drive the same bucketed execute.
+pub(crate) struct Subtree<B> {
+    pub(crate) acc: B,
+    pub(crate) device_tokens: usize,
     /// Total merge wall time accumulated inside this subtree.
-    merge_ms: f64,
+    pub(crate) merge_ms: f64,
     /// Per-rank execute wall times `(rank, ms)` gathered inside this
     /// subtree — at the root, one entry per rank: the measurement the
     /// calibrated cost model learns from.
-    walls: Vec<(usize, f64)>,
+    pub(crate) walls: Vec<(usize, f64)>,
     /// Latest execute-finish instant inside this subtree (for the
     /// overlap accounting: merges before this instant hid behind
     /// still-executing ranks).
-    exec_end: Instant,
+    pub(crate) exec_end: Instant,
     /// Collective fold + send wall spent *inside* execute windows across
     /// this subtree (the bucketed path's overlap; 0 on the typed path).
-    bucket_overlap_ms: f64,
+    pub(crate) bucket_overlap_ms: f64,
     /// Wire bytes the subtree's ranks sent up the collective.
-    collective_bytes: u64,
+    pub(crate) collective_bytes: u64,
     /// Buckets per rank this step (0 on the monolithic typed path).
-    buckets: u32,
+    pub(crate) buckets: u32,
 }
 
 struct PeerMsg<B> {
@@ -412,6 +424,13 @@ impl<W: RankWorker> RankPool<W> {
         if n == 1 {
             let w = workers.pop().expect("one worker");
             return Ok(Self { inner: PoolInner::Inline(w), n_ranks: 1, seq: 0 });
+        }
+        let mut opts = opts;
+        if opts.max_frame_elems.is_none() {
+            // bound socket frames by the step's flat gradient length: no
+            // legitimate data frame is larger, and control frames (the
+            // launcher path) are far smaller
+            opts.max_frame_elems = workers[0].flat_grad_len();
         }
         let mut collectives = build_collectives(n, &opts)?;
         // per-rank peer channels carry subtree accumulators child → parent
@@ -610,10 +629,16 @@ fn build_collectives(
                 .rendezvous
                 .clone()
                 .unwrap_or_else(|| SocketCollective::fresh_rendezvous("pool"));
+            let sopts = crate::coordinator::collective::socket::SocketOptions {
+                max_frame_elems: opts.max_frame_elems,
+                deadline: opts.deadline,
+                run_id: None,
+            };
             let handles: Vec<_> = (0..n)
                 .map(|r| {
                     let p = path.clone();
-                    std::thread::spawn(move || SocketCollective::connect(&p, r, n))
+                    let o = sopts.clone();
+                    std::thread::spawn(move || SocketCollective::connect_opts(&p, r, n, &o))
                 })
                 .collect();
             let mut out = Vec::with_capacity(n);
@@ -645,7 +670,7 @@ fn build_collectives(
 /// (a deferred apply error): every bucket still gets exactly one abort
 /// frame, so the bracket parent's blocking receives never hang.  The real
 /// error travels the typed control plane as always.
-fn abort_all_buckets<W: RankWorker>(
+pub(crate) fn abort_all_buckets<W: RankWorker>(
     state: &W,
     coll: &mut dyn Collective,
     seq: u64,
@@ -669,7 +694,7 @@ fn abort_all_buckets<W: RankWorker>(
 /// blocks for whatever is still missing and sends the remainder, so the
 /// per-step frame invariant (each bucket received once per child, sent once
 /// if non-root — abort on any failure) holds on every path out.
-fn execute_bucketed<W: RankWorker>(
+pub(crate) fn execute_bucketed<W: RankWorker>(
     state: &mut W,
     rank: usize,
     plan: &StepPlan,
@@ -1721,7 +1746,7 @@ mod tests {
                 (1, Transport::Socket),
             ] {
                 let opts =
-                    ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+                    ReduceOptions { bucket_kb: kb, transport, ..Default::default() };
                 let r = pay_reduce(n, LEN, opts, &plan);
                 let a: Vec<u64> = legacy.acc.payload.iter().map(|v| v.to_bits()).collect();
                 let b: Vec<u64> = r.acc.payload.iter().map(|v| v.to_bits()).collect();
@@ -1755,7 +1780,7 @@ mod tests {
         for transport in [Transport::InProcess, Transport::Socket] {
             let mut workers = PayWorker::fleet(n, LEN);
             workers[1].fail_first = true;
-            let opts = ReduceOptions { bucket_kb: 1, transport, rendezvous: None };
+            let opts = ReduceOptions { bucket_kb: 1, transport, ..Default::default() };
             let mut pool = RankPool::new_with(workers, opts).unwrap();
             let err = pool.execute(&plan).unwrap_err();
             assert!(err.to_string().contains("rank 1 exploded"), "got: {err}");
@@ -1813,7 +1838,7 @@ mod tests {
         legacy_pool.finish().unwrap();
         assert_eq!(legacy.acc.payload, vec![0.0; 4], "bracket association");
         for transport in [Transport::InProcess, Transport::Socket] {
-            let opts = ReduceOptions { bucket_kb: 1, transport, rendezvous: None };
+            let opts = ReduceOptions { bucket_kb: 1, transport, ..Default::default() };
             let mut pool = RankPool::new_with(fleet(), opts).unwrap();
             let r = pool.execute(&plan).unwrap();
             assert_eq!(r.acc.payload, vec![0.0; 4], "{transport:?}");
@@ -1830,7 +1855,7 @@ mod tests {
         let opts = ReduceOptions {
             bucket_kb: 64,
             transport: Transport::InProcess,
-            rendezvous: None,
+            ..Default::default()
         };
         let mut pool = RankPool::new_with(
             vec![TraceWorker, TraceWorker, TraceWorker, TraceWorker],

@@ -1,0 +1,1523 @@
+//! Multi-process rank launcher over the collective wire
+//! (docs/distributed.md#multi-process-launch).
+//!
+//! PR 9's socket [`Collective`] was built so no rank needs a shared address
+//! space; this module is the step that actually takes it there.  A parent
+//! **launcher** process spawns one `tree-train rank-worker` OS process per
+//! rank, hands each the shared run config plus the rendezvous path, and
+//! drives the same pipelined step loop the in-process pool runs — with the
+//! typed control plane (errors, execute/merge walls, scalar sums, cache
+//! stats, loss digests) serialized as length-prefixed [`Frame`]s alongside
+//! the f64 data plane, on the same sockets.
+//!
+//! Two control links exist:
+//!
+//! * **The star** — every rank dials the launcher's listener (4-byte rank
+//!   hello, then [`StarMsg`] frames both ways): `Ready`/`Heartbeat`/
+//!   `Result`/`Err`/`Done` up, the broadcast `Apply` update down.
+//! * **The mesh** — the bracket mesh of [`SocketCollective`]s, shared with
+//!   the gradient data plane: data buckets use dense indices `0..n`, the
+//!   typed per-rank accumulators (payload-stripped, [`MeshMsg`]) travel as
+//!   bucket [`CTRL_BUCKET`] up the identical bracket, so the scalar/digest
+//!   fold order is the in-process `worker_loop`'s, frame for frame.
+//!
+//! **Determinism.**  Planning is a pure function of `(seed, step)`, so
+//! every rank process re-derives the parent's plans from the same corpus
+//! and config instead of shipping them; replicas start from the same
+//! seeded model and apply the identical broadcast update expression.  With
+//! the PR 9 contract (every `(bucket, transport)` config folds bit-identically
+//! to the monolithic typed path), `launch --ranks N` reproduces the
+//! in-process pool's losses and fingerprints bit for bit — the gate
+//! `tree-train launch` enforces.  Calibrated cost models are excluded by
+//! construction (the launch path always plans with token costs): feeding
+//! *measured* walls back into placement would fork the ranks' plans.
+//!
+//! **Failure.**  Children heartbeat over the star; the parent converts a
+//! vanished process (star EOF, `try_wait` exit, heartbeat silence) into a
+//! named-rank error within the deadline.  Inside the mesh, a dead peer
+//! surfaces through the socket collective's per-peer deadline
+//! ([`SocketOptions::deadline`]) and the PR 9 abort-marker path, so
+//! surviving ranks unwind and exit instead of deadlocking; their exits are
+//! in turn caught by the watchdog.  Rendezvous files live in one GC'd
+//! directory, are keyed by a fresh run id, and carry a `run <id>` header
+//! so a rank can never join a stale generation.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::collective::socket::{self, SocketCollective, SocketOptions};
+use crate::coordinator::collective::{Collective, Frame};
+use crate::coordinator::dist::{self, reduce_children, reduce_depth, reduce_parent, RankWorker};
+use crate::coordinator::pipeline::{
+    self, fnv1a, HostRankAcc, HostUpdate, HostWorker, PipelineConfig, PipelineSummary,
+    PlannedStep, StepExecutor,
+};
+use crate::coordinator::Mode;
+use crate::data::CorpusSource;
+use crate::trainer::planner::PlanSpec;
+use crate::trainer::prefix_cache::{reuse_ratio, CacheStats, PrefixCache};
+use crate::trainer::refmodel::RefModel;
+use crate::trainer::StepMetrics;
+
+/// Bucket id of every control-plane frame on the mesh and the star.  Data
+/// buckets are dense indices from 0 and `u32::MAX` is reserved as
+/// [`Collective::drain`]'s no-frame key, so this value collides with
+/// neither.
+pub const CTRL_BUCKET: u32 = u32::MAX - 1;
+
+/// Embedding dim of the hermetic [`RefModel`] replicas (matches the
+/// `dist-smoke` harness, so flat payloads are `vocab * HOST_DIM` f64s).
+pub const HOST_DIM: usize = 8;
+
+/// Default `--deadline-ms`: per-peer read/write deadline, heartbeat
+/// staleness bound, and per-step result timeout.
+pub const DEFAULT_DEADLINE_MS: u64 = 30_000;
+
+/// Slack on top of the flat gradient length when bounding frame payloads:
+/// covers the control messages' scalar fields, walls and error strings.
+const CTRL_SLACK: usize = 4096;
+
+const HEARTBEAT: Duration = Duration::from_millis(500);
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+const RX_POLL: Duration = Duration::from_millis(100);
+const REAP_POLL: Duration = Duration::from_millis(10);
+
+/// Rendezvous files older than this in the launch directory are residue of
+/// crashed runs and get collected at the next launch.
+const STALE_RDV_AGE: Duration = Duration::from_secs(15 * 60);
+
+// ───────────────────────────── wire codec ──────────────────────────────
+//
+// Control messages are sequences of u64 words carried as the f64 payload
+// of an ordinary collective Frame (`f64::from_bits` per word — both
+// directions are pure transmutes in Rust, so arbitrary words survive the
+// f64 round trip bit-exactly, NaN patterns included).  Layouts are
+// mirrored by python/tests/test_launcher_protocol.py.
+
+pub(crate) const TAG_READY: u64 = 1;
+pub(crate) const TAG_HEARTBEAT: u64 = 2;
+pub(crate) const TAG_RESULT: u64 = 3;
+pub(crate) const TAG_ERR: u64 = 4;
+pub(crate) const TAG_DONE: u64 = 5;
+pub(crate) const TAG_APPLY: u64 = 6;
+pub(crate) const TAG_MESH_ACC: u64 = 8;
+pub(crate) const TAG_MESH_ERR: u64 = 9;
+
+struct WordWriter {
+    words: Vec<u64>,
+}
+
+impl WordWriter {
+    fn new(tag: u64) -> Self {
+        Self { words: vec![tag] }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.words.push(v);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.words.push(v.to_bits());
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.f64(*x);
+        }
+    }
+
+    /// Length + UTF-8 bytes padded to whole words (zero fill).
+    fn str(&mut self, s: &str) {
+        let b = s.as_bytes();
+        self.u64(b.len() as u64);
+        for chunk in b.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            self.words.push(u64::from_le_bytes(w));
+        }
+    }
+}
+
+struct WordReader<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> WordReader<'a> {
+    fn new(words: &'a [u64]) -> Self {
+        Self { words, pos: 0 }
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        let v = *self
+            .words
+            .get(self.pos)
+            .ok_or_else(|| anyhow::anyhow!("truncated control message ({} words)", self.words.len()))?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self) -> crate::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n <= self.words.len().saturating_sub(self.pos),
+            "control message claims {n} payload words but only {} remain",
+            self.words.len() - self.pos
+        );
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn str(&mut self) -> crate::Result<String> {
+        let len = self.u64()? as usize;
+        let nwords = len.div_ceil(8);
+        anyhow::ensure!(
+            nwords <= self.words.len().saturating_sub(self.pos),
+            "control message claims a {len}-byte string but the frame is shorter"
+        );
+        let mut bytes = Vec::with_capacity(len);
+        for _ in 0..nwords {
+            bytes.extend_from_slice(&self.u64()?.to_le_bytes());
+        }
+        bytes.truncate(len);
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+}
+
+/// Wrap control words into a wire [`Frame`] on [`CTRL_BUCKET`].
+fn ctrl_frame(seq: u64, from: u32, words: Vec<u64>) -> Frame {
+    Frame {
+        seq,
+        bucket: CTRL_BUCKET,
+        from,
+        data: words.into_iter().map(f64::from_bits).collect(),
+    }
+}
+
+/// Recover the control words from a frame's f64 payload.
+fn ctrl_words(f: &Frame) -> Vec<u64> {
+    f.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Rank 0's fully-reduced step, shipped launcher-ward over the star: the
+/// scalar sums and digests the typed control plane used to hand the root
+/// caller in-process, plus the folded flat gradient the launcher
+/// broadcasts back in the `Apply`.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct StepResult {
+    pub step: u64,
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub d_embed: Vec<f64>,
+    pub hash: u64,
+    pub batches: u64,
+    pub device_tokens: u64,
+    /// hits, misses, hit_tokens, evictions.
+    pub cache: [u64; 4],
+    /// Per-rank execute walls, indexed by rank.
+    pub rank_walls: Vec<f64>,
+    pub reduce_ms: f64,
+    pub reduce_overlap_ms: f64,
+    pub bucket_overlap_ms: f64,
+    pub collective_bytes: u64,
+    pub buckets: u64,
+}
+
+/// Control messages on the launcher star.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum StarMsg {
+    Ready { rank: u64 },
+    Heartbeat { rank: u64, step: u64 },
+    Result(Box<StepResult>),
+    Err { rank: u64, step: u64, msg: String },
+    Done { rank: u64 },
+    /// The broadcast end-of-step update (launcher → every rank).
+    Apply { step: u64, lr: f64, weight_sum: f64, d_embed: Vec<f64> },
+}
+
+impl StarMsg {
+    pub(crate) fn encode(&self) -> Vec<u64> {
+        match self {
+            StarMsg::Ready { rank } => {
+                let mut w = WordWriter::new(TAG_READY);
+                w.u64(*rank);
+                w.words
+            }
+            StarMsg::Heartbeat { rank, step } => {
+                let mut w = WordWriter::new(TAG_HEARTBEAT);
+                w.u64(*rank);
+                w.u64(*step);
+                w.words
+            }
+            StarMsg::Result(r) => {
+                let mut w = WordWriter::new(TAG_RESULT);
+                w.u64(r.step);
+                w.f64(r.loss_sum);
+                w.f64(r.weight_sum);
+                w.f64s(&r.d_embed);
+                w.u64(r.hash);
+                w.u64(r.batches);
+                w.u64(r.device_tokens);
+                for c in r.cache {
+                    w.u64(c);
+                }
+                w.f64s(&r.rank_walls);
+                w.f64(r.reduce_ms);
+                w.f64(r.reduce_overlap_ms);
+                w.f64(r.bucket_overlap_ms);
+                w.u64(r.collective_bytes);
+                w.u64(r.buckets);
+                w.words
+            }
+            StarMsg::Err { rank, step, msg } => {
+                let mut w = WordWriter::new(TAG_ERR);
+                w.u64(*rank);
+                w.u64(*step);
+                w.str(msg);
+                w.words
+            }
+            StarMsg::Done { rank } => {
+                let mut w = WordWriter::new(TAG_DONE);
+                w.u64(*rank);
+                w.words
+            }
+            StarMsg::Apply { step, lr, weight_sum, d_embed } => {
+                let mut w = WordWriter::new(TAG_APPLY);
+                w.u64(*step);
+                w.f64(*lr);
+                w.f64(*weight_sum);
+                w.f64s(d_embed);
+                w.words
+            }
+        }
+    }
+
+    pub(crate) fn decode(words: &[u64]) -> crate::Result<StarMsg> {
+        let mut r = WordReader::new(words);
+        Ok(match r.u64()? {
+            TAG_READY => StarMsg::Ready { rank: r.u64()? },
+            TAG_HEARTBEAT => StarMsg::Heartbeat { rank: r.u64()?, step: r.u64()? },
+            TAG_RESULT => StarMsg::Result(Box::new(StepResult {
+                step: r.u64()?,
+                loss_sum: r.f64()?,
+                weight_sum: r.f64()?,
+                d_embed: r.f64s()?,
+                hash: r.u64()?,
+                batches: r.u64()?,
+                device_tokens: r.u64()?,
+                cache: [r.u64()?, r.u64()?, r.u64()?, r.u64()?],
+                rank_walls: r.f64s()?,
+                reduce_ms: r.f64()?,
+                reduce_overlap_ms: r.f64()?,
+                bucket_overlap_ms: r.f64()?,
+                collective_bytes: r.u64()?,
+                buckets: r.u64()?,
+            })),
+            TAG_ERR => StarMsg::Err { rank: r.u64()?, step: r.u64()?, msg: r.str()? },
+            TAG_DONE => StarMsg::Done { rank: r.u64()? },
+            TAG_APPLY => StarMsg::Apply {
+                step: r.u64()?,
+                lr: r.f64()?,
+                weight_sum: r.f64()?,
+                d_embed: r.f64s()?,
+            },
+            t => anyhow::bail!("unknown star control tag {t}"),
+        })
+    }
+}
+
+/// The typed per-rank accumulator on the mesh (payload-stripped — the
+/// d_embed already folded up as data frames) plus the merge accounting the
+/// in-process `worker_loop` carries in its `Subtree`.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum MeshMsg {
+    Acc {
+        loss_sum: f64,
+        weight_sum: f64,
+        hash: u64,
+        batches: u64,
+        /// hits, misses, hit_tokens, evictions.
+        cache: [u64; 4],
+        device_tokens: u64,
+        merge_ms: f64,
+        /// `(rank, execute wall ms)` pairs gathered in this subtree.
+        walls: Vec<(u64, f64)>,
+        /// Elapsed ms between this subtree's latest execute-finish and the
+        /// moment of encoding — lets the receiver reconstruct a comparable
+        /// `exec_end` instant without shipping clocks across processes.
+        since_exec_end_ms: f64,
+        bucket_overlap_ms: f64,
+        collective_bytes: u64,
+        buckets: u64,
+    },
+    Err { rank: u64, msg: String },
+}
+
+impl MeshMsg {
+    pub(crate) fn encode(&self) -> Vec<u64> {
+        match self {
+            MeshMsg::Acc {
+                loss_sum,
+                weight_sum,
+                hash,
+                batches,
+                cache,
+                device_tokens,
+                merge_ms,
+                walls,
+                since_exec_end_ms,
+                bucket_overlap_ms,
+                collective_bytes,
+                buckets,
+            } => {
+                let mut w = WordWriter::new(TAG_MESH_ACC);
+                w.f64(*loss_sum);
+                w.f64(*weight_sum);
+                w.u64(*hash);
+                w.u64(*batches);
+                for c in cache {
+                    w.u64(*c);
+                }
+                w.u64(*device_tokens);
+                w.f64(*merge_ms);
+                w.u64(walls.len() as u64);
+                for (r, ms) in walls {
+                    w.u64(*r);
+                    w.f64(*ms);
+                }
+                w.f64(*since_exec_end_ms);
+                w.f64(*bucket_overlap_ms);
+                w.u64(*collective_bytes);
+                w.u64(*buckets);
+                w.words
+            }
+            MeshMsg::Err { rank, msg } => {
+                let mut w = WordWriter::new(TAG_MESH_ERR);
+                w.u64(*rank);
+                w.str(msg);
+                w.words
+            }
+        }
+    }
+
+    pub(crate) fn decode(words: &[u64]) -> crate::Result<MeshMsg> {
+        let mut r = WordReader::new(words);
+        Ok(match r.u64()? {
+            TAG_MESH_ACC => {
+                let loss_sum = r.f64()?;
+                let weight_sum = r.f64()?;
+                let hash = r.u64()?;
+                let batches = r.u64()?;
+                let cache = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+                let device_tokens = r.u64()?;
+                let merge_ms = r.f64()?;
+                let n = r.u64()? as usize;
+                anyhow::ensure!(n <= words.len(), "mesh acc claims {n} wall pairs");
+                let mut walls = Vec::with_capacity(n);
+                for _ in 0..n {
+                    walls.push((r.u64()?, r.f64()?));
+                }
+                MeshMsg::Acc {
+                    loss_sum,
+                    weight_sum,
+                    hash,
+                    batches,
+                    cache,
+                    device_tokens,
+                    merge_ms,
+                    walls,
+                    since_exec_end_ms: r.f64()?,
+                    bucket_overlap_ms: r.f64()?,
+                    collective_bytes: r.u64()?,
+                    buckets: r.u64()?,
+                }
+            }
+            TAG_MESH_ERR => MeshMsg::Err { rank: r.u64()?, msg: r.str()? },
+            t => anyhow::bail!("unknown mesh control tag {t}"),
+        })
+    }
+}
+
+// ───────────────────────────── launcher (parent) ──────────────────────────────
+
+/// Everything a launch run needs: the shared run geometry (forwarded
+/// verbatim to every rank process) plus the launcher's own knobs.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    pub corpus: PathBuf,
+    pub format: String,
+    pub mode: Mode,
+    pub steps: u64,
+    pub trees_per_batch: usize,
+    pub depth: usize,
+    pub window: usize,
+    pub capacity: usize,
+    pub vocab: usize,
+    pub seed: u64,
+    pub lr: f64,
+    pub warmup: u64,
+    pub ranks: usize,
+    pub bucket_kb: usize,
+    /// Per-peer read/write deadline, heartbeat staleness bound and
+    /// per-step result timeout ([`DEFAULT_DEADLINE_MS`]).
+    pub deadline: Duration,
+    /// Fault injection for the smoke gate: kill rank `.0`'s process when
+    /// the parent reaches step `.1` — the run must then fail with an error
+    /// naming that rank, within the deadline.
+    pub kill: Option<(usize, u64)>,
+}
+
+fn mode_name(m: Mode) -> &'static str {
+    match m {
+        Mode::Tree => "tree",
+        Mode::Baseline => "baseline",
+    }
+}
+
+fn fresh_run_id() -> String {
+    static IDS: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!("{}-{nanos:x}-{}", std::process::id(), IDS.fetch_add(1, Ordering::Relaxed))
+}
+
+/// The rendezvous directory all launches share, so stale files from
+/// crashed runs have one place to be collected from.
+fn rendezvous_dir() -> PathBuf {
+    std::env::temp_dir().join("tt-launch")
+}
+
+/// Remove rendezvous files older than [`STALE_RDV_AGE`] — residue of
+/// crashed runs.  Live runs are never touched: their files are younger,
+/// and even a collision would be caught by the `run <id>` header check.
+fn gc_stale_rendezvous(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if !(name.starts_with("rdv-") && name.ends_with(".txt")) {
+            continue;
+        }
+        let stale = e
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age > STALE_RDV_AGE);
+        if stale {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+}
+
+enum StarEvent {
+    Msg(StarMsg),
+    /// The rank's star link closed (process exit or torn stream).
+    Gone,
+}
+
+/// Parent-side reader: one thread per rank link, decoding star frames into
+/// the shared event channel; any EOF or decode error becomes `Gone`.
+fn star_reader(
+    rank: usize,
+    mut s: TcpStream,
+    tx: mpsc::Sender<(usize, StarEvent)>,
+    max_elems: Option<usize>,
+) {
+    loop {
+        match Frame::decode_from_bounded(&mut s, max_elems) {
+            Ok(Some(f)) => match StarMsg::decode(&ctrl_words(&f)) {
+                Ok(m) => {
+                    if tx.send((rank, StarEvent::Msg(m))).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    let _ = tx.send((rank, StarEvent::Gone));
+                    return;
+                }
+            },
+            Ok(None) | Err(_) => {
+                let _ = tx.send((rank, StarEvent::Gone));
+                return;
+            }
+        }
+    }
+}
+
+/// The launcher's [`StepExecutor`]: owns the rank processes and the star,
+/// and mirrors [`pipeline::HostExecutor`]'s step accounting — fingerprints
+/// included — so `launch` CSVs are byte-comparable against the in-process
+/// pool's.
+pub struct LaunchExecutor {
+    n: usize,
+    deadline: Duration,
+    kill: Option<(usize, u64)>,
+    killed: Option<usize>,
+    children: Vec<Child>,
+    writers: Vec<TcpStream>,
+    rx: mpsc::Receiver<(usize, StarEvent)>,
+    done: Vec<bool>,
+    last_hb: Vec<Instant>,
+    rendezvous: PathBuf,
+    /// Per-step fingerprints, identical in construction to
+    /// [`pipeline::HostExecutor::fingerprints`].
+    pub fingerprints: Vec<u64>,
+}
+
+impl LaunchExecutor {
+    /// Stamp a fresh rendezvous generation, spawn one `rank-worker`
+    /// process per rank, accept their star links (hello-verified) and wait
+    /// until every rank reports `Ready` (mesh connected).
+    pub fn spawn(cfg: &LaunchConfig) -> crate::Result<LaunchExecutor> {
+        anyhow::ensure!(cfg.ranks >= 1, "launch needs at least one rank");
+        if let Some((kr, _)) = cfg.kill {
+            anyhow::ensure!(kr < cfg.ranks, "kill rank {kr} out of range for {} ranks", cfg.ranks);
+        }
+        let dir = rendezvous_dir();
+        std::fs::create_dir_all(&dir)?;
+        gc_stale_rendezvous(&dir);
+        let run_id = fresh_run_id();
+        let rdv = dir.join(format!("rdv-{run_id}.txt"));
+        socket::write_run_header(&rdv, &run_id)?;
+
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let star_addr = listener.local_addr()?;
+        let exe = std::env::current_exe()?;
+        let mut children = Vec::with_capacity(cfg.ranks);
+        for r in 0..cfg.ranks {
+            let spawned = Command::new(&exe)
+                .arg("rank-worker")
+                .args(["--rank", &r.to_string()])
+                .args(["--ranks", &cfg.ranks.to_string()])
+                .args(["--rendezvous", &rdv.display().to_string()])
+                .args(["--run-id", &run_id])
+                .args(["--parent-addr", &star_addr.to_string()])
+                .args(["--corpus", &cfg.corpus.display().to_string()])
+                .args(["--format", &cfg.format])
+                .args(["--mode", mode_name(cfg.mode)])
+                .args(["--steps", &cfg.steps.to_string()])
+                .args(["--trees-per-batch", &cfg.trees_per_batch.to_string()])
+                .args(["--pipeline-depth", &cfg.depth.to_string()])
+                .args(["--shuffle-window", &cfg.window.to_string()])
+                .args(["--capacity", &cfg.capacity.to_string()])
+                .args(["--vocab", &cfg.vocab.to_string()])
+                .args(["--seed", &cfg.seed.to_string()])
+                // LR crosses the process boundary as bits, not decimal:
+                // the fingerprint folds its exact bit pattern
+                .args(["--lr-bits", &format!("{:016x}", cfg.lr.to_bits())])
+                .args(["--warmup", &cfg.warmup.to_string()])
+                .args(["--reduce-bucket-kb", &cfg.bucket_kb.to_string()])
+                .args(["--deadline-ms", &(cfg.deadline.as_millis() as u64).to_string()])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .map_err(|e| anyhow::anyhow!("spawning rank {r} worker process: {e}"));
+            match spawned {
+                Ok(c) => children.push(c),
+                Err(e) => {
+                    kill_all(&mut children);
+                    let _ = std::fs::remove_file(&rdv);
+                    return Err(e);
+                }
+            }
+        }
+        match Self::connect_star(cfg, &listener, &mut children) {
+            Ok((writers, rx)) => Ok(LaunchExecutor {
+                n: cfg.ranks,
+                deadline: cfg.deadline,
+                kill: cfg.kill,
+                killed: None,
+                children,
+                writers,
+                rx,
+                done: vec![false; cfg.ranks],
+                last_hb: vec![Instant::now(); cfg.ranks],
+                rendezvous: rdv,
+                fingerprints: Vec::new(),
+            }),
+            Err(e) => {
+                kill_all(&mut children);
+                let _ = std::fs::remove_file(&rdv);
+                Err(e)
+            }
+        }
+    }
+
+    /// Accept one hello-verified star connection per rank and wait for
+    /// every rank's `Ready`.  A rank process dying during startup is
+    /// reported by name instead of timing out anonymously.
+    fn connect_star(
+        cfg: &LaunchConfig,
+        listener: &TcpListener,
+        children: &mut [Child],
+    ) -> crate::Result<(Vec<TcpStream>, mpsc::Receiver<(usize, StarEvent)>)> {
+        let n = cfg.ranks;
+        let star_max = Some(cfg.vocab * HOST_DIM + CTRL_SLACK);
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel::<(usize, StarEvent)>();
+        let mut writers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let connect_deadline = Instant::now() + cfg.deadline.max(socket::CONNECT_TIMEOUT);
+        let mut pending: Vec<usize> = (0..n).collect();
+        while !pending.is_empty() {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(HELLO_TIMEOUT))?;
+                    let mut hello = [0u8; 4];
+                    if s.read_exact(&mut hello).is_err() {
+                        continue; // silent foreign dialer: no slot consumed
+                    }
+                    let r = u32::from_le_bytes(hello) as usize;
+                    let Some(i) = pending.iter().position(|&p| p == r) else {
+                        continue; // foreign rank or duplicate hello
+                    };
+                    pending.swap_remove(i);
+                    s.set_read_timeout(None)?;
+                    s.set_nodelay(true)?;
+                    let w = s.try_clone()?;
+                    w.set_write_timeout(Some(cfg.deadline))?;
+                    writers[r] = Some(w);
+                    let tx = tx.clone();
+                    std::thread::Builder::new()
+                        .name(format!("tt-launch-rx-{r}"))
+                        .spawn(move || star_reader(r, s, tx, star_max))
+                        .map_err(|e| anyhow::anyhow!("spawn star reader: {e}"))?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    for (r, c) in children.iter_mut().enumerate() {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            anyhow::bail!("rank {r} process exited during startup ({status})");
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < connect_deadline,
+                        "ranks {pending:?} did not dial the launcher within {:?}",
+                        cfg.deadline.max(socket::CONNECT_TIMEOUT)
+                    );
+                    std::thread::sleep(POLL_ACCEPT);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // all links up; now wait for every rank's Ready (mesh connected)
+        let mut ready = vec![false; n];
+        while ready.iter().any(|r| !r) {
+            match rx.recv_timeout(RX_POLL) {
+                Ok((r, StarEvent::Msg(StarMsg::Ready { .. }))) => ready[r] = true,
+                Ok((_, StarEvent::Msg(_))) => {}
+                Ok((r, StarEvent::Gone)) => {
+                    let status = exit_status_str(&mut children[r]);
+                    anyhow::bail!("rank {r} process exited{status} before becoming ready");
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for (r, c) in children.iter_mut().enumerate() {
+                        if !ready[r] {
+                            if let Ok(Some(status)) = c.try_wait() {
+                                anyhow::bail!("rank {r} process exited ({status}) before becoming ready");
+                            }
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < connect_deadline,
+                        "ranks {:?} never reported ready",
+                        ready
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, ok)| !**ok)
+                            .map(|(r, _)| r)
+                            .collect::<Vec<_>>()
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all star reader threads exited during startup")
+                }
+            }
+        }
+        Ok((writers.into_iter().map(|w| w.expect("accepted above")).collect(), rx))
+    }
+
+    /// Block until rank 0's result for `step`, watching heartbeats, child
+    /// exits and star EOFs the whole time — any vanished rank becomes a
+    /// named-rank error within the deadline, never a hang.
+    fn await_result(&mut self, step: u64) -> crate::Result<StepResult> {
+        let deadline_at = Instant::now() + self.deadline;
+        loop {
+            match self.rx.recv_timeout(RX_POLL) {
+                Ok((r, StarEvent::Msg(m))) => match m {
+                    StarMsg::Heartbeat { .. } => self.last_hb[r] = Instant::now(),
+                    StarMsg::Ready { .. } => {}
+                    StarMsg::Done { .. } => self.done[r] = true,
+                    StarMsg::Err { rank, step: s, msg } => {
+                        anyhow::bail!("rank {rank} failed at step {s}: {msg}")
+                    }
+                    StarMsg::Result(res) if res.step == step => {
+                        self.last_hb[r] = Instant::now();
+                        return Ok(*res);
+                    }
+                    StarMsg::Result(_) | StarMsg::Apply { .. } => {}
+                },
+                Ok((r, StarEvent::Gone)) => {
+                    if !self.done[r] {
+                        let status = exit_status_str(&mut self.children[r]);
+                        anyhow::bail!(
+                            "rank {r} process exited{status} before step {step} completed"
+                        );
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.check_liveness(step)?;
+                    anyhow::ensure!(
+                        Instant::now() < deadline_at,
+                        "no result for step {step} within {:?} — a rank is hung; aborting",
+                        self.deadline
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all rank star links closed before step {step} completed")
+                }
+            }
+        }
+    }
+
+    fn check_liveness(&mut self, step: u64) -> crate::Result<()> {
+        for r in 0..self.n {
+            if self.done[r] {
+                continue;
+            }
+            if let Ok(Some(status)) = self.children[r].try_wait() {
+                anyhow::bail!("rank {r} process exited ({status}) before step {step} completed");
+            }
+            let silent = self.last_hb[r].elapsed();
+            anyhow::ensure!(
+                silent < self.deadline,
+                "rank {r}: no heartbeat for {silent:?} (deadline {:?}) — presumed hung",
+                self.deadline
+            );
+        }
+        Ok(())
+    }
+
+    /// Drain `Done` markers and reap every rank process; a nonzero exit is
+    /// an error.  Called after the pipelined loop completes.
+    pub fn finish(&mut self) -> crate::Result<()> {
+        let deadline_at = Instant::now() + self.deadline;
+        while self.done.iter().any(|d| !d) {
+            match self.rx.recv_timeout(RX_POLL) {
+                Ok((r, StarEvent::Msg(StarMsg::Done { .. }))) => self.done[r] = true,
+                Ok((_, StarEvent::Msg(_))) => {}
+                Ok((r, StarEvent::Gone)) => {
+                    if !self.done[r] {
+                        let status = exit_status_str(&mut self.children[r]);
+                        anyhow::bail!("rank {r} process exited{status} before signalling done");
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for r in 0..self.n {
+                        if !self.done[r] {
+                            if let Ok(Some(status)) = self.children[r].try_wait() {
+                                anyhow::bail!(
+                                    "rank {r} process exited ({status}) before signalling done"
+                                );
+                            }
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline_at,
+                        "ranks {:?} never signalled done within {:?}",
+                        (0..self.n).filter(|&r| !self.done[r]).collect::<Vec<_>>(),
+                        self.deadline
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let reap_deadline = Instant::now() + self.deadline;
+        for r in 0..self.n {
+            loop {
+                match self.children[r].try_wait()? {
+                    Some(status) => {
+                        anyhow::ensure!(status.success(), "rank {r} exited with {status}");
+                        break;
+                    }
+                    None => {
+                        anyhow::ensure!(
+                            Instant::now() < reap_deadline,
+                            "rank {r} did not exit within {:?} after done",
+                            self.deadline
+                        );
+                        std::thread::sleep(REAP_POLL);
+                    }
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&self.rendezvous);
+        Ok(())
+    }
+}
+
+const POLL_ACCEPT: Duration = Duration::from_millis(2);
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        if c.try_wait().ok().flatten().is_none() {
+            let _ = c.kill();
+        }
+        let _ = c.wait();
+    }
+}
+
+fn exit_status_str(c: &mut Child) -> String {
+    match c.try_wait() {
+        Ok(Some(status)) => format!(" ({status})"),
+        _ => String::new(),
+    }
+}
+
+impl Drop for LaunchExecutor {
+    fn drop(&mut self) {
+        kill_all(&mut self.children);
+        let _ = std::fs::remove_file(&self.rendezvous);
+    }
+}
+
+impl StepExecutor for LaunchExecutor {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
+        let t0 = Instant::now();
+        // fault injection: the smoke gate kills one rank here and asserts
+        // the run fails fast with that rank named
+        if let Some((kr, ks)) = self.kill {
+            if planned.step == ks && self.killed.is_none() {
+                let _ = self.children[kr].kill();
+                self.killed = Some(kr);
+            }
+        }
+        let res = self.await_result(planned.step)?;
+        // cost-model feedback: a no-op under the token model, which is the
+        // only model the launch path plans with (calibrated placement
+        // would fork the ranks' plans)
+        let cost_model_err = planned.plan.cost_model_err(&res.rank_walls);
+        planned.plan.observe_walls(&res.rank_walls);
+        // step fingerprint: identical expression to HostExecutor's
+        let mut h = 0xcbf29ce484222325u64;
+        fnv1a(&mut h, &planned.step.to_le_bytes());
+        fnv1a(&mut h, &planned.lr.to_bits().to_le_bytes());
+        fnv1a(&mut h, &res.hash.to_le_bytes());
+        self.fingerprints.push(h);
+        // broadcast the update; every replica applies the identical f64
+        // expression, so rank models stay bit-identical to the pool's
+        let words = StarMsg::Apply {
+            step: res.step,
+            lr: planned.lr,
+            weight_sum: res.weight_sum,
+            d_embed: res.d_embed.clone(),
+        }
+        .encode();
+        let bytes = ctrl_frame(planned.step + 1, 0, words).encode();
+        for (r, w) in self.writers.iter_mut().enumerate() {
+            w.write_all(&bytes).map_err(|e| {
+                anyhow::anyhow!("rank {r}: broadcasting step {} update: {e}", res.step)
+            })?;
+        }
+        Ok(StepMetrics {
+            step: planned.step,
+            loss: if res.weight_sum > 0.0 { res.loss_sum / res.weight_sum } else { 0.0 },
+            weight_sum: res.weight_sum,
+            device_tokens: res.device_tokens as usize,
+            tree_tokens: planned.plan.tree_tokens(),
+            flat_tokens: planned.plan.flat_tokens(),
+            wall: t0.elapsed(),
+            exec_calls: res.batches,
+            forest_batches: res.batches,
+            grad_norm: 0.0,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
+            ranks: planned.plan.n_ranks() as u64,
+            reduce_ms: res.reduce_ms,
+            reduce_overlap_ms: res.reduce_overlap_ms,
+            reduce_depth: reduce_depth(planned.plan.n_ranks()) as u64,
+            rank_imbalance: planned.plan.rank_imbalance(),
+            ingest_ms: 0.0,
+            cost_model_err,
+            staleness_steps: 0,
+            ripe_queue_depth: 0,
+            admitted_sessions: 0,
+            xstep_reuse_ratio: reuse_ratio(planned.plan.tree_tokens() as u64, res.cache[2]),
+            cache_hit_tokens: res.cache[2],
+            cache_evictions: res.cache[3],
+            reduce_buckets: res.buckets,
+            bucket_overlap_ms: res.bucket_overlap_ms,
+            collective_bytes: res.collective_bytes,
+        })
+    }
+}
+
+/// Run a full multi-process training run: spawn the rank fleet, drive the
+/// pipelined plan loop (the parent plans too — it needs plan geometry for
+/// metrics, and planning is `(seed, step)`-pure so every process derives
+/// the identical schedule), then reap.  Returns per-step metrics, the
+/// pipeline summary and the step fingerprints.
+pub fn run_launch(
+    cfg: &LaunchConfig,
+    spec: PlanSpec,
+    source: Box<dyn CorpusSource>,
+) -> crate::Result<(Vec<StepMetrics>, PipelineSummary, Vec<u64>)> {
+    let mut exec = LaunchExecutor::spawn(cfg)?;
+    let pcfg = PipelineConfig {
+        mode: cfg.mode,
+        steps: cfg.steps,
+        trees_per_batch: cfg.trees_per_batch,
+        depth: cfg.depth,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        ranks: cfg.ranks,
+    };
+    let (metrics, summary) = pipeline::run(&pcfg, spec, source, &mut exec)?;
+    exec.finish()?;
+    let fps = std::mem::take(&mut exec.fingerprints);
+    Ok((metrics, summary, fps))
+}
+
+// ───────────────────────────── rank worker (child) ──────────────────────────────
+
+/// One rank process's identity + geometry, parsed from the `rank-worker`
+/// command line the launcher passes.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub rank: usize,
+    pub ranks: usize,
+    pub rendezvous: PathBuf,
+    pub run_id: String,
+    pub parent_addr: String,
+    pub mode: Mode,
+    pub steps: u64,
+    pub trees_per_batch: usize,
+    pub depth: usize,
+    pub vocab: usize,
+    pub seed: u64,
+    pub lr: f64,
+    pub warmup: u64,
+    pub bucket_kb: usize,
+    pub deadline: Duration,
+}
+
+fn send_star(w: &Arc<Mutex<TcpStream>>, seq: u64, rank: usize, msg: &StarMsg) -> crate::Result<()> {
+    let bytes = ctrl_frame(seq, rank as u32, msg.encode()).encode();
+    let mut s = w.lock().map_err(|_| anyhow::anyhow!("star writer lock poisoned"))?;
+    s.write_all(&bytes)
+        .map_err(|e| anyhow::anyhow!("rank {rank}: star send to launcher: {e}"))?;
+    Ok(())
+}
+
+/// The child-side [`StepExecutor`]: executes this rank's slice of each
+/// re-derived plan through the same `execute_bucketed` machinery the
+/// in-process pool workers run, merges bracket children's typed
+/// accumulators off the mesh in round order, forwards (or, at rank 0,
+/// reports) the result, then blocks for the broadcast `Apply`.
+struct RankStepExecutor {
+    worker: HostWorker,
+    coll: Option<Box<dyn Collective>>,
+    star_r: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    rank: usize,
+    n: usize,
+    children: Vec<usize>,
+    bucket_kb: usize,
+    cur_step: Arc<AtomicU64>,
+    star_max: Option<usize>,
+}
+
+impl RankStepExecutor {
+    fn recv_apply(&mut self, step: u64) -> crate::Result<(f64, f64, Vec<f64>)> {
+        loop {
+            let f = Frame::decode_from_bounded(&mut self.star_r, self.star_max)
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "rank {}: waiting for step {step} update from launcher: {e}",
+                        self.rank
+                    )
+                })?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "rank {}: launcher closed the control link before the step {step} update",
+                        self.rank
+                    )
+                })?;
+            match StarMsg::decode(&ctrl_words(&f))? {
+                StarMsg::Apply { step: s, lr, weight_sum, d_embed } => {
+                    anyhow::ensure!(
+                        s == step,
+                        "rank {}: update for step {s} arrived while executing step {step}",
+                        self.rank
+                    );
+                    return Ok((lr, weight_sum, d_embed));
+                }
+                // the launcher only sends Apply today; skip anything else
+                // rather than die on future protocol chatter
+                _ => continue,
+            }
+        }
+    }
+}
+
+impl StepExecutor for RankStepExecutor {
+    fn execute(&mut self, planned: &PlannedStep) -> crate::Result<StepMetrics> {
+        self.cur_step.store(planned.step, Ordering::SeqCst);
+        let seq = planned.step + 1; // matches RankPool's 1-based step seq
+        anyhow::ensure!(
+            planned.plan.n_ranks() == self.n,
+            "plan has {} ranks but this launch runs {}",
+            planned.plan.n_ranks(),
+            self.n
+        );
+        let my_plan = &planned.plan.ranks[self.rank];
+        let children = self.children.clone();
+        // execute + data-plane fold: byte-for-byte the pool workers' path
+        let mut sub: crate::Result<dist::Subtree<HostRankAcc>> = match self.coll.as_deref_mut() {
+            Some(coll) => dist::execute_bucketed(
+                &mut self.worker,
+                self.rank,
+                my_plan,
+                seq,
+                coll,
+                self.bucket_kb,
+                &children,
+            ),
+            None => {
+                let t_exec = Instant::now();
+                self.worker.execute(self.rank, my_plan).map(|(acc, device_tokens)| {
+                    dist::Subtree {
+                        acc,
+                        device_tokens,
+                        merge_ms: 0.0,
+                        walls: vec![(self.rank, t_exec.elapsed().as_secs_f64() * 1e3)],
+                        exec_end: Instant::now(),
+                        bucket_overlap_ms: 0.0,
+                        collective_bytes: 0,
+                        buckets: 0,
+                    }
+                })
+            }
+        };
+        // merge bracket children's typed accumulators in fixed round order
+        // (stripped: payloads already folded in as data frames) — the
+        // in-process worker_loop's merge, with CTRL frames as the channel
+        if let Some(coll) = self.coll.as_deref_mut() {
+            for &src in &children {
+                let msg = coll
+                    .recv(seq, CTRL_BUCKET, src)
+                    .and_then(|f| MeshMsg::decode(&ctrl_words(&f)));
+                match msg {
+                    Err(e) => {
+                        if sub.is_ok() {
+                            sub = Err(e);
+                        }
+                    }
+                    Ok(MeshMsg::Err { rank, msg }) => {
+                        if sub.is_ok() {
+                            sub = Err(anyhow::anyhow!("rank {rank}: {msg}"));
+                        }
+                    }
+                    Ok(MeshMsg::Acc {
+                        loss_sum,
+                        weight_sum,
+                        hash,
+                        batches,
+                        cache,
+                        device_tokens,
+                        merge_ms,
+                        walls,
+                        since_exec_end_ms,
+                        bucket_overlap_ms,
+                        collective_bytes,
+                        buckets,
+                    }) => {
+                        if let Ok(a) = &mut sub {
+                            let t0 = Instant::now();
+                            let b_acc = HostRankAcc {
+                                loss_sum,
+                                weight_sum,
+                                d_embed: Vec::new(),
+                                hash,
+                                batches,
+                                cache: CacheStats {
+                                    hits: cache[0],
+                                    misses: cache[1],
+                                    hit_tokens: cache[2],
+                                    evictions: cache[3],
+                                },
+                            };
+                            <HostWorker as RankWorker>::reduce_stripped(&mut a.acc, b_acc);
+                            a.merge_ms += t0.elapsed().as_secs_f64() * 1e3 + merge_ms;
+                            a.device_tokens += device_tokens as usize;
+                            a.walls.extend(walls.iter().map(|&(r, w)| (r as usize, w)));
+                            let b_end = Instant::now()
+                                .checked_sub(Duration::from_secs_f64(
+                                    (since_exec_end_ms / 1e3).max(0.0),
+                                ))
+                                .unwrap_or_else(Instant::now);
+                            if b_end > a.exec_end {
+                                a.exec_end = b_end;
+                            }
+                            a.bucket_overlap_ms += bucket_overlap_ms;
+                            a.collective_bytes += collective_bytes;
+                            a.buckets = a.buckets.max(buckets as u32);
+                        }
+                    }
+                }
+            }
+        }
+        // forward up the bracket (typed plane = CTRL frames), or report
+        if reduce_parent(self.rank).is_some() {
+            let coll = self.coll.as_deref_mut().expect("non-root rank has a mesh");
+            match &mut sub {
+                Ok(a) => {
+                    <HostWorker as RankWorker>::strip_payload(&mut a.acc);
+                    let since = Instant::now().saturating_duration_since(a.exec_end).as_secs_f64()
+                        * 1e3;
+                    let msg = MeshMsg::Acc {
+                        loss_sum: a.acc.loss_sum,
+                        weight_sum: a.acc.weight_sum,
+                        hash: a.acc.hash,
+                        batches: a.acc.batches,
+                        cache: [
+                            a.acc.cache.hits,
+                            a.acc.cache.misses,
+                            a.acc.cache.hit_tokens,
+                            a.acc.cache.evictions,
+                        ],
+                        device_tokens: a.device_tokens as u64,
+                        merge_ms: a.merge_ms,
+                        walls: a.walls.iter().map(|&(r, w)| (r as u64, w)).collect(),
+                        since_exec_end_ms: since,
+                        bucket_overlap_ms: a.bucket_overlap_ms,
+                        collective_bytes: a.collective_bytes,
+                        buckets: a.buckets as u64,
+                    };
+                    let data: Vec<f64> =
+                        msg.encode().into_iter().map(f64::from_bits).collect();
+                    if let Err(e) = coll.send_up(seq, CTRL_BUCKET, &data) {
+                        sub = Err(e);
+                    }
+                }
+                Err(e) => {
+                    // keep the one-ctrl-frame-per-child invariant so the
+                    // bracket parent never hangs waiting on this rank
+                    let msg = MeshMsg::Err { rank: self.rank as u64, msg: format!("{e:#}") };
+                    let data: Vec<f64> =
+                        msg.encode().into_iter().map(f64::from_bits).collect();
+                    let _ = coll.send_up(seq, CTRL_BUCKET, &data);
+                }
+            }
+        }
+        let mut a = match sub {
+            Ok(a) => a,
+            Err(e) => {
+                if reduce_parent(self.rank).is_none() {
+                    let _ = send_star(
+                        &self.writer,
+                        seq,
+                        self.rank,
+                        &StarMsg::Err {
+                            rank: self.rank as u64,
+                            step: planned.step,
+                            msg: format!("{e:#}"),
+                        },
+                    );
+                }
+                return Err(e);
+            }
+        };
+        if reduce_parent(self.rank).is_none() {
+            let reduce_done = Instant::now();
+            let tail_ms = reduce_done.saturating_duration_since(a.exec_end).as_secs_f64() * 1e3;
+            let mut rank_walls = vec![0.0f64; self.n];
+            for &(r, w) in &a.walls {
+                if r < self.n {
+                    rank_walls[r] = w;
+                }
+            }
+            let res = StepResult {
+                step: planned.step,
+                loss_sum: a.acc.loss_sum,
+                weight_sum: a.acc.weight_sum,
+                d_embed: std::mem::take(&mut a.acc.d_embed),
+                hash: a.acc.hash,
+                batches: a.acc.batches,
+                device_tokens: a.device_tokens as u64,
+                cache: [
+                    a.acc.cache.hits,
+                    a.acc.cache.misses,
+                    a.acc.cache.hit_tokens,
+                    a.acc.cache.evictions,
+                ],
+                rank_walls,
+                reduce_ms: a.merge_ms,
+                reduce_overlap_ms: (a.merge_ms - tail_ms).max(0.0),
+                bucket_overlap_ms: a.bucket_overlap_ms,
+                collective_bytes: a.collective_bytes,
+                buckets: a.buckets as u64,
+            };
+            send_star(&self.writer, seq, self.rank, &StarMsg::Result(Box::new(res)))?;
+        }
+        // every rank blocks for the broadcast update and applies the
+        // identical f64 expression — replicas stay bit-identical
+        let (lr, weight_sum, d_embed) = self.recv_apply(planned.step)?;
+        self.worker.apply(&HostUpdate { lr, weight_sum, d_embed })?;
+        // the parent owns reporting; the child's metrics are discarded by
+        // its local pipeline driver
+        Ok(StepMetrics {
+            step: planned.step,
+            loss: 0.0,
+            weight_sum: 0.0,
+            device_tokens: 0,
+            tree_tokens: 0,
+            flat_tokens: 0,
+            wall: Duration::ZERO,
+            exec_calls: 0,
+            forest_batches: 0,
+            grad_norm: 0.0,
+            plan_ms: 0.0,
+            stall_ms: 0.0,
+            ranks: self.n as u64,
+            reduce_ms: 0.0,
+            reduce_overlap_ms: 0.0,
+            reduce_depth: 0,
+            rank_imbalance: 1.0,
+            ingest_ms: 0.0,
+            cost_model_err: 0.0,
+            staleness_steps: 0,
+            ripe_queue_depth: 0,
+            admitted_sessions: 0,
+            xstep_reuse_ratio: 1.0,
+            cache_hit_tokens: 0,
+            cache_evictions: 0,
+            reduce_buckets: 0,
+            bucket_overlap_ms: 0.0,
+            collective_bytes: 0,
+        })
+    }
+}
+
+/// Entry point of the `tree-train rank-worker` process: wire up the star
+/// and the mesh, then drive this rank through the shared pipelined loop.
+/// Planning re-derives the launcher's schedule exactly (`(seed, step)`-
+/// pure); errors exit nonzero with the cause on stderr, after the star /
+/// mesh control frames that let the other processes unwind.
+pub fn run_worker(
+    cfg: &WorkerConfig,
+    spec: PlanSpec,
+    source: Box<dyn CorpusSource>,
+) -> crate::Result<()> {
+    let rank = cfg.rank;
+    let n = cfg.ranks;
+    anyhow::ensure!(rank < n, "rank {rank} out of range for {n} ranks");
+    let star_max = Some(cfg.vocab * HOST_DIM + CTRL_SLACK);
+    // 1. dial the launcher star and identify
+    let mut star = TcpStream::connect(&cfg.parent_addr).map_err(|e| {
+        anyhow::anyhow!("rank {rank} dialing launcher at {}: {e}", cfg.parent_addr)
+    })?;
+    star.set_nodelay(true)?;
+    star.set_write_timeout(Some(cfg.deadline))?;
+    star.set_read_timeout(Some(cfg.deadline))?;
+    star.write_all(&(rank as u32).to_le_bytes())?; // hello
+    let writer = Arc::new(Mutex::new(star.try_clone()?));
+    // 2. the gradient + typed-control mesh (none for a single rank)
+    let coll: Option<Box<dyn Collective>> = if n > 1 {
+        let sopts = SocketOptions {
+            max_frame_elems: star_max,
+            deadline: Some(cfg.deadline),
+            run_id: Some(cfg.run_id.clone()),
+        };
+        Some(Box::new(SocketCollective::connect_opts(&cfg.rendezvous, rank, n, &sopts)?))
+    } else {
+        None
+    };
+    // 3. heartbeat thread: proves this process alive between results (the
+    // writer mutex serializes it against the main thread's result sends)
+    let stop = Arc::new(AtomicBool::new(false));
+    let cur_step = Arc::new(AtomicU64::new(0));
+    let hb = {
+        let w = Arc::clone(&writer);
+        let stop = Arc::clone(&stop);
+        let cur = Arc::clone(&cur_step);
+        std::thread::Builder::new()
+            .name(format!("tt-launch-hb-{rank}"))
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let step = cur.load(Ordering::SeqCst);
+                    if send_star(&w, 0, rank, &StarMsg::Heartbeat { rank: rank as u64, step })
+                        .is_err()
+                    {
+                        return; // launcher gone; the main thread errors on its own
+                    }
+                    std::thread::sleep(HEARTBEAT);
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawn heartbeat thread: {e}"))?
+    };
+    send_star(&writer, 0, rank, &StarMsg::Ready { rank: rank as u64 })?;
+    // 4. drive the shared pipelined loop
+    let mut exec = RankStepExecutor {
+        worker: HostWorker {
+            model: RefModel::seeded(cfg.vocab, HOST_DIM, cfg.seed),
+            run_model: true,
+            cache: PrefixCache::new(0),
+            updates: 0,
+        },
+        coll,
+        star_r: star,
+        writer: Arc::clone(&writer),
+        rank,
+        n,
+        children: reduce_children(rank, n).into_iter().map(|(_, s)| s).collect(),
+        bucket_kb: cfg.bucket_kb,
+        cur_step: Arc::clone(&cur_step),
+        star_max,
+    };
+    let pcfg = PipelineConfig {
+        mode: cfg.mode,
+        steps: cfg.steps,
+        trees_per_batch: cfg.trees_per_batch,
+        depth: cfg.depth,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        ranks: n,
+    };
+    let run_res = pipeline::run(&pcfg, spec, source, &mut exec).map(|_| ());
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    run_res?;
+    send_star(&writer, cfg.steps + 1, rank, &StarMsg::Done { rank: rank as u64 })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_star(msg: StarMsg) {
+        // through the word codec AND the frame byte wire, like production
+        let frame = ctrl_frame(7, 3, msg.encode());
+        let bytes = frame.encode();
+        let back = Frame::decode_from(&mut bytes.as_slice()).unwrap().unwrap();
+        assert_eq!(back.bucket, CTRL_BUCKET);
+        assert!(!back.is_abort(), "ctrl frames always carry at least the tag word");
+        assert_eq!(StarMsg::decode(&ctrl_words(&back)).unwrap(), msg);
+    }
+
+    #[test]
+    fn star_messages_round_trip_bit_exactly() {
+        roundtrip_star(StarMsg::Ready { rank: 3 });
+        roundtrip_star(StarMsg::Heartbeat { rank: 2, step: 41 });
+        roundtrip_star(StarMsg::Done { rank: 0 });
+        roundtrip_star(StarMsg::Err {
+            rank: 1,
+            step: 9,
+            msg: "rank 1 exploded:执行失败 🚨".into(),
+        });
+        roundtrip_star(StarMsg::Apply {
+            step: 5,
+            lr: 1e-2,
+            weight_sum: 384.0,
+            d_embed: vec![1.5, -0.0, f64::NAN, f64::from_bits(0x7ff80000dead0001)],
+        });
+        roundtrip_star(StarMsg::Result(Box::new(StepResult {
+            step: 12,
+            loss_sum: 3.25,
+            weight_sum: 128.0,
+            d_embed: vec![0.5, f64::INFINITY, 1e-308],
+            hash: 0xdeadbeefcafef00d,
+            batches: 9,
+            device_tokens: 4096,
+            cache: [1, 2, 3, 4],
+            rank_walls: vec![1.5, 2.5, 3.5],
+            reduce_ms: 0.25,
+            reduce_overlap_ms: 0.125,
+            bucket_overlap_ms: 0.0625,
+            collective_bytes: 65536,
+            buckets: 4,
+        })));
+    }
+
+    #[test]
+    fn nan_payload_bits_survive_the_apply() {
+        // PartialEq is false for NaN, so check bits explicitly
+        let weird = f64::from_bits(0x7ff8_0000_0000_0001);
+        let msg =
+            StarMsg::Apply { step: 1, lr: 0.1, weight_sum: 1.0, d_embed: vec![weird, -0.0] };
+        let frame = ctrl_frame(1, 0, msg.encode());
+        let bytes = frame.encode();
+        let back = Frame::decode_from(&mut bytes.as_slice()).unwrap().unwrap();
+        match StarMsg::decode(&ctrl_words(&back)).unwrap() {
+            StarMsg::Apply { d_embed, .. } => {
+                assert_eq!(d_embed[0].to_bits(), weird.to_bits());
+                assert_eq!(d_embed[1].to_bits(), (-0.0f64).to_bits());
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mesh_messages_round_trip() {
+        let acc = MeshMsg::Acc {
+            loss_sum: 1.5,
+            weight_sum: 2.5,
+            hash: 77,
+            batches: 3,
+            cache: [9, 8, 7, 6],
+            device_tokens: 1024,
+            merge_ms: 0.5,
+            walls: vec![(1, 1.25), (3, 2.75)],
+            since_exec_end_ms: 0.03125,
+            bucket_overlap_ms: 0.125,
+            collective_bytes: 4096,
+            buckets: 2,
+        };
+        assert_eq!(MeshMsg::decode(&acc.encode()).unwrap(), acc);
+        let err = MeshMsg::Err { rank: 2, msg: "boom".into() };
+        assert_eq!(MeshMsg::decode(&err.encode()).unwrap(), err);
+    }
+
+    #[test]
+    fn truncated_control_words_error_cleanly() {
+        let msg = StarMsg::Apply { step: 1, lr: 0.1, weight_sum: 1.0, d_embed: vec![1.0; 8] };
+        let words = msg.encode();
+        for cut in 0..words.len() {
+            assert!(StarMsg::decode(&words[..cut]).is_err(), "cut at {cut} must not parse");
+        }
+    }
+
+    #[test]
+    fn ctrl_bucket_stays_clear_of_reserved_keys() {
+        // drain() uses bucket u32::MAX as its impossible stash key; data
+        // buckets are dense from 0 — CTRL_BUCKET must be neither
+        assert_eq!(CTRL_BUCKET, u32::MAX - 1);
+        assert_ne!(CTRL_BUCKET, u32::MAX);
+    }
+
+    #[test]
+    fn stale_rendezvous_gc_spares_fresh_files() {
+        let dir = std::env::temp_dir().join(format!("tt-launch-gc-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let fresh = dir.join("rdv-fresh.txt");
+        std::fs::write(&fresh, "run x\n").unwrap();
+        let other = dir.join("not-a-rendezvous.log");
+        std::fs::write(&other, "keep").unwrap();
+        gc_stale_rendezvous(&dir);
+        assert!(fresh.exists(), "fresh rendezvous must survive GC");
+        assert!(other.exists(), "non-rendezvous files are never touched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

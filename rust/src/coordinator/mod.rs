@@ -39,6 +39,7 @@ use crate::util::json::Json;
 
 pub mod collective;
 pub mod dist;
+pub mod launcher;
 pub mod pipeline;
 
 pub use crate::trainer::metrics::CsvSink as MetricsSink;
@@ -210,7 +211,7 @@ impl RunConfig {
         dist::ReduceOptions {
             bucket_kb: self.reduce_bucket_kb,
             transport: self.collective,
-            rendezvous: None,
+            ..Default::default()
         }
     }
 }

@@ -389,7 +389,7 @@ impl HostExecutor {
 }
 
 /// FNV-1a over a byte stream (stable, dependency-free).
-fn fnv1a(h: &mut u64, bytes: &[u8]) {
+pub(crate) fn fnv1a(h: &mut u64, bytes: &[u8]) {
     for &b in bytes {
         *h ^= b as u64;
         *h = h.wrapping_mul(0x100000001b3);
@@ -398,21 +398,21 @@ fn fnv1a(h: &mut u64, bytes: &[u8]) {
 
 /// Per-rank accumulator of the hermetic executor — the RefModel analog of
 /// a rank's [`crate::trainer::GradBuffer`].
-struct HostRankAcc {
-    loss_sum: f64,
-    weight_sum: f64,
-    d_embed: Vec<f64>,
+pub(crate) struct HostRankAcc {
+    pub(crate) loss_sum: f64,
+    pub(crate) weight_sum: f64,
+    pub(crate) d_embed: Vec<f64>,
     /// FNV digest of this rank's batch metadata (folded cross-rank by the
     /// fixed log-tree bracket, so the step fingerprint is
     /// thread-schedule-free).
-    hash: u64,
-    batches: u64,
+    pub(crate) hash: u64,
+    pub(crate) batches: u64,
     /// This rank's prefix-cache counters for the step (summed cross-rank).
-    cache: CacheStats,
+    pub(crate) cache: CacheStats,
 }
 
 impl HostRankAcc {
-    fn fresh(embed_len: usize) -> Self {
+    pub(crate) fn fresh(embed_len: usize) -> Self {
         Self {
             loss_sum: 0.0,
             weight_sum: 0.0,
@@ -426,22 +426,22 @@ impl HostRankAcc {
 
 /// One rank's persistent hermetic executor state: a [`RefModel`] replica —
 /// the RefModel analog of [`dist::TrainerWorker`]'s engine replica.
-struct HostWorker {
-    model: RefModel,
-    run_model: bool,
+pub(crate) struct HostWorker {
+    pub(crate) model: RefModel,
+    pub(crate) run_model: bool,
     /// Rank-local activation cache (same budget as the primary's; entries
     /// are never shared across ranks — affine sharding keeps each prefix
     /// group on one rank precisely so rank-local caches suffice).
-    cache: PrefixCache<PrefixActs>,
-    updates: u64,
+    pub(crate) cache: PrefixCache<PrefixActs>,
+    pub(crate) updates: u64,
 }
 
 /// The broadcast SGD update every replica applies (identical f64 math to
 /// the primary's update, so replicas stay bit-identical).
-struct HostUpdate {
-    lr: f64,
-    weight_sum: f64,
-    d_embed: Vec<f64>,
+pub(crate) struct HostUpdate {
+    pub(crate) lr: f64,
+    pub(crate) weight_sum: f64,
+    pub(crate) d_embed: Vec<f64>,
 }
 
 impl RankWorker for HostWorker {

@@ -102,6 +102,18 @@
 //!   transport)` choice is bit-identical to the monolithic typed path, and
 //!   `reduce_bucket_kb: 0` constructs no collective at all (the seed path
 //!   verbatim).
+//! * [`coordinator::launcher`] — the multi-process rank launcher over that
+//!   wire (`tree-train launch`, docs/distributed.md#multi-process-launch):
+//!   a parent process spawns one `rank-worker` OS process per rank; ranks
+//!   share the gradient bracket mesh with a typed control plane carried as
+//!   `CTRL_BUCKET` frames (per-rank accumulators up the bracket) and a
+//!   launcher star (heartbeats, results, errors up; the broadcast apply
+//!   down).  Plans are re-derived per process from `(seed, step)` — never
+//!   shipped — so `launch --ranks N` is bit-identical to the in-process
+//!   pool, which the command itself gates by byte-comparing CSVs; a
+//!   vanished rank becomes a named-rank parent error within the deadline
+//!   via heartbeat/child-exit watchdogs and per-peer socket deadlines,
+//!   and rendezvous files are run-id-keyed, generation-checked and GC'd.
 //! * [`serve`] — the continuous-ingestion training service
 //!   (`tree-train serve`, docs/serve.md): concurrent producers append
 //!   rollouts to a spool directory; an online fold keeps live per-session

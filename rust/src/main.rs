@@ -80,6 +80,22 @@ COMMANDS:
                            [--capacity C] [--vocab V]
                            [--reduce-bucket-kb K,K,..  0 = monolithic]
                            [--transport in_process,socket] [--csv-dir DIR]
+  launch                   multi-process rank launcher gate, hermetic: one
+                           OS process per rank over the socket collective
+                           (typed control plane as length-prefixed frames),
+                           each --ranks N byte-compared against the
+                           in-process pool (launch_*_rN.csv); --kill-rank
+                           flips to the failure gate: killing that rank's
+                           process must fail the run fast, naming the rank
+                           --corpus FILE [--format trees|rollouts]
+                           [--mode tree|baseline] [--ranks N,N,..]
+                           [--steps N] [--trees-per-batch N]
+                           [--pipeline-depth D] [--shuffle-window W]
+                           [--capacity C] [--vocab V] [--seed S]
+                           [--reduce-bucket-kb K] [--deadline-ms MS]
+                           [--kill-rank R] [--kill-step S] [--csv-dir DIR]
+  rank-worker              internal: one launch rank process (spawned by
+                           `launch`; flag set is the launcher's contract)
   fig5                     token accounting: flatten vs standard vs RF
                            [--tree-tokens N] [--capacity C]
   fig6                     agentic tree shapes + POR + depth profiles
@@ -245,6 +261,35 @@ fn main() -> anyhow::Result<()> {
                 &out,
             )
         }
+        "launch" => {
+            let corpus = rest.str("corpus", "");
+            anyhow::ensure!(!corpus.is_empty(), "launch needs --corpus <file.jsonl>");
+            let kill_rank = match rest.flags.get("kill-rank") {
+                Some(v) => Some(v.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--kill-rank must be a rank index, got `{v}`")
+                })?),
+                None => None,
+            };
+            cmds::launch::run(
+                &PathBuf::from(corpus),
+                &rest.str("format", "trees"),
+                &rest.str("mode", "tree"),
+                rest.get("steps", 12u64),
+                rest.get("trees-per-batch", 6usize),
+                &rest.str("ranks", "1,2,4"),
+                rest.get("pipeline-depth", 2usize),
+                rest.get("shuffle-window", 8usize),
+                rest.get("capacity", 8192usize),
+                rest.get("vocab", 256usize),
+                rest.get("seed", 0u64),
+                rest.get("reduce-bucket-kb", 64usize),
+                rest.get("deadline-ms", 30_000u64),
+                kill_rank,
+                rest.get("kill-step", 3u64),
+                &PathBuf::from(rest.str("csv-dir", out.to_str().unwrap_or("results"))),
+            )
+        }
+        "rank-worker" => cmds::launch::rank_worker(&rest.flags),
         "ingest" => {
             let input = rest.str("in", "");
             let output = rest.str("out", "");

@@ -405,7 +405,7 @@ fn bucketed_and_socket_reduce_reproduce_the_typed_path_bit_for_bit() {
         let zero = dist::ReduceOptions {
             bucket_kb: 0,
             transport: dist::Transport::InProcess,
-            rendezvous: None,
+            ..Default::default()
         };
         let (z, z_fp) = run_once_with(&c, &trees, 23, zero);
         assert_bit_identical(&format!("ranks {ranks} bucket0"), &legacy, &z);
@@ -423,7 +423,7 @@ fn bucketed_and_socket_reduce_reproduce_the_typed_path_bit_for_bit() {
             (1, dist::Transport::Socket),
         ] {
             let opts =
-                dist::ReduceOptions { bucket_kb: kb, transport, rendezvous: None };
+                dist::ReduceOptions { bucket_kb: kb, transport, ..Default::default() };
             let label = format!("ranks {ranks} kb {kb} {transport:?}");
             let (a, fp_a) = run_once_with(&c, &trees, 23, opts.clone());
             let (b, fp_b) = run_once_with(&c, &trees, 23, opts);
@@ -455,7 +455,7 @@ fn bucketed_reduce_is_bit_identical_pipelined_and_synchronous() {
     let opts = dist::ReduceOptions {
         bucket_kb: 1,
         transport: dist::Transport::InProcess,
-        rendezvous: None,
+        ..Default::default()
     };
     let (sync, fp_s) = run_once_with(&cfg(Mode::Tree, 6, 3, 0, 3), &trees, 31, opts.clone());
     let (piped, fp_p) = run_once_with(&cfg(Mode::Tree, 6, 3, 2, 3), &trees, 31, opts);
@@ -489,4 +489,259 @@ fn sgd_losses_actually_evolve_under_the_pool() {
     let first = metrics.first().unwrap().loss;
     let last = metrics.last().unwrap().loss;
     assert!(first != last, "replica SGD updates must change the loss ({first} == {last})");
+}
+
+// ─────────── adversarial socket transport (launcher hardening) ──────────────
+//
+// The multi-process launcher shares the rendezvous file and the bracket
+// mesh with hostile neighbors: stray processes dialing published
+// listeners, corrupt frame headers, ranks dying mid-step, and torn
+// `O_APPEND` lines.  These tests drive the *real* `SocketCollective`
+// endpoints (no mocks) through each of those conditions.  A Python mirror
+// of the same scenarios lives in python/tests/test_launcher_protocol.py.
+
+mod adversarial {
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::path::Path;
+    use std::time::{Duration, Instant};
+
+    use tree_train::coordinator::collective::socket::{
+        write_run_header, SocketCollective, SocketOptions,
+    };
+    use tree_train::coordinator::collective::Collective;
+
+    /// Poll the rendezvous until `rank`'s *complete* line appears, then
+    /// return its address — the adversary's view of the mesh.
+    fn published_addr(path: &Path, rank: usize) -> String {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                for line in text.split_inclusive('\n').filter(|l| l.ends_with('\n')) {
+                    if let Some(addr) = line.trim_end().strip_prefix(&format!("{rank} ")) {
+                        return addr.to_string();
+                    }
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "rank {rank} never published a rendezvous line"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn foreign_and_silent_dialers_do_not_consume_accept_slots() {
+        let path = SocketCollective::fresh_rendezvous("adv-foreign");
+        let p0 = path.clone();
+        let root = std::thread::spawn(move || {
+            SocketCollective::connect_opts(&p0, 0, 2, &SocketOptions::default()).unwrap()
+        });
+        let addr = published_addr(&path, 0);
+
+        // adversaries dial first: one never says hello (held open so the
+        // accept loop must time its hello read out), one claims a rank
+        // that is not a pending child
+        let _silent = TcpStream::connect(addr.as_str()).unwrap();
+        let mut foreign = TcpStream::connect(addr.as_str()).unwrap();
+        foreign.write_all(&7u32.to_le_bytes()).unwrap();
+
+        // the genuine child connects afterwards and must still be accepted
+        let p1 = path.clone();
+        let child = std::thread::spawn(move || {
+            SocketCollective::connect_opts(&p1, 1, 2, &SocketOptions::default()).unwrap()
+        });
+        let mut c1 = child.join().unwrap();
+        let mut c0 = root.join().unwrap();
+
+        // and the link carries bit-exact payloads end to end
+        let payload = [42.5f64, f64::from_bits(0x7ff8_dead_beef_cafe)];
+        c1.send_up(1, 0, &payload).unwrap();
+        let got = c0.recv(1, 0, 1).unwrap();
+        assert_eq!(got.data.len(), 2);
+        assert_eq!(got.data[0].to_bits(), payload[0].to_bits());
+        assert_eq!(got.data[1].to_bits(), payload[1].to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn oversized_frame_header_is_rejected_within_the_deadline() {
+        let path = SocketCollective::fresh_rendezvous("adv-oversize");
+        let opts = SocketOptions {
+            max_frame_elems: Some(64),
+            deadline: Some(Duration::from_millis(300)),
+            run_id: None,
+        };
+        let o = opts.clone();
+        let p0 = path.clone();
+        let root = std::thread::spawn(move || {
+            SocketCollective::connect_opts(&p0, 0, 2, &o).unwrap()
+        });
+        let addr = published_addr(&path, 0);
+
+        // a dialer with a valid hello but a hostile header: nelems =
+        // u32::MAX claims a ~32 GiB payload.  The bounded decoder must
+        // refuse it *before* allocating, and the root's recv must surface
+        // a named-rank error instead of hanging.
+        let mut evil = TcpStream::connect(addr.as_str()).unwrap();
+        evil.write_all(&1u32.to_le_bytes()).unwrap();
+        let mut c0 = root.join().unwrap();
+        let mut header = Vec::new();
+        header.extend_from_slice(&1u64.to_le_bytes()); // seq
+        header.extend_from_slice(&0u32.to_le_bytes()); // bucket
+        header.extend_from_slice(&1u32.to_le_bytes()); // from
+        header.extend_from_slice(&u32::MAX.to_le_bytes()); // nelems
+        evil.write_all(&header).unwrap();
+
+        let t0 = Instant::now();
+        let err = c0.recv(1, 0, 1).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(waited < Duration::from_secs(5), "recv hung for {waited:?}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "error must name the peer: {msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn a_vanished_peer_fails_recv_within_the_deadline() {
+        let path = SocketCollective::fresh_rendezvous("adv-dead");
+        write_run_header(&path, "adv-dead-gen").unwrap();
+        let opts = SocketOptions {
+            max_frame_elems: Some(64),
+            deadline: Some(Duration::from_millis(400)),
+            run_id: Some("adv-dead-gen".to_string()),
+        };
+        let spawn = |r: usize| {
+            let p = path.clone();
+            let o = opts.clone();
+            std::thread::spawn(move || SocketCollective::connect_opts(&p, r, 3, &o).unwrap())
+        };
+        let (h0, h1, h2) = (spawn(0), spawn(1), spawn(2));
+        let mut c0 = h0.join().unwrap();
+        let c1 = h1.join().unwrap();
+        let mut c2 = h2.join().unwrap();
+
+        // rank 2 contributes its bucket; rank 1 is "killed" mid-step —
+        // link torn down, frame never sent
+        c2.send_up(1, 0, &[2.0]).unwrap();
+        drop(c1);
+        assert_eq!(c0.recv(1, 0, 2).unwrap().data, vec![2.0]);
+
+        let t0 = Instant::now();
+        let err = c0.recv(1, 0, 1).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(5),
+            "dead peer hung the recv for {waited:?} instead of the 400 ms deadline"
+        );
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "error must name the dead rank: {msg}");
+        drop(c2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_rendezvous_line_is_not_dialed_until_terminated() {
+        let path = SocketCollective::fresh_rendezvous("adv-torn");
+        let parent = TcpListener::bind("127.0.0.1:0").unwrap();
+        let full = format!("0 {}\n", parent.local_addr().unwrap());
+        // a torn O_APPEND flush: the line is missing its last 3 bytes, so
+        // the visible prefix ends mid-port — dialing it would hit the
+        // wrong listener (or nothing)
+        let (head, tail) = full.split_at(full.len() - 3);
+        std::fs::write(&path, head).unwrap();
+
+        let p = path.clone();
+        let child = std::thread::spawn(move || {
+            SocketCollective::connect_opts(&p, 1, 2, &SocketOptions::default()).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(!child.is_finished(), "child dialed a truncated address");
+
+        // the flush completes; the child must now dial the real listener
+        // and identify itself with its rank hello
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(tail.as_bytes()).unwrap();
+        drop(f);
+        let (mut s, _) = parent.accept().unwrap();
+        let mut hello = [0u8; 4];
+        s.read_exact(&mut hello).unwrap();
+        assert_eq!(u32::from_le_bytes(hello), 1, "child sent a wrong hello");
+        let _c1 = child.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+// ─────────────── multi-process launch: end-to-end CLI gates ─────────────────
+
+mod launch_cli {
+    use std::path::PathBuf;
+    use std::process::Command;
+
+    const EXE: &str = env!("CARGO_BIN_EXE_tree-train");
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tt-launch-test-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn gen_corpus(dir: &std::path::Path) -> PathBuf {
+        let corpus = dir.join("corpus.jsonl");
+        let out = Command::new(EXE)
+            .args(["gen-data", corpus.to_str().unwrap()])
+            .args(["--overlap", "high", "--n-trees", "12", "--turns", "4"])
+            .args(["--vocab", "64", "--seed", "7"])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "gen-data: {}", String::from_utf8_lossy(&out.stderr));
+        corpus
+    }
+
+    #[test]
+    fn launch_multi_process_is_bit_identical_to_in_process() {
+        let dir = scratch("bits");
+        let corpus = gen_corpus(&dir);
+        let out = Command::new(EXE)
+            .args(["launch", "--corpus", corpus.to_str().unwrap()])
+            .args(["--steps", "3", "--trees-per-batch", "3", "--ranks", "1,2"])
+            .args(["--capacity", "4096", "--vocab", "64", "--pipeline-depth", "1"])
+            .args(["--csv-dir", dir.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "launch failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        for n in [1, 2] {
+            let a = std::fs::read(dir.join(format!("launch_inproc_r{n}.csv"))).unwrap();
+            let b = std::fs::read(dir.join(format!("launch_multi_r{n}.csv"))).unwrap();
+            assert!(!a.is_empty() && a == b, "ranks {n}: CSVs diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn launch_kill_gate_names_the_dead_rank() {
+        let dir = scratch("kill");
+        let corpus = gen_corpus(&dir);
+        let out = Command::new(EXE)
+            .args(["launch", "--corpus", corpus.to_str().unwrap()])
+            .args(["--steps", "4", "--trees-per-batch", "3", "--ranks", "2"])
+            .args(["--capacity", "4096", "--vocab", "64", "--pipeline-depth", "1"])
+            .args(["--kill-rank", "1", "--kill-step", "1", "--deadline-ms", "8000"])
+            .args(["--csv-dir", dir.to_str().unwrap()])
+            .output()
+            .unwrap();
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success() && stdout.contains("launch kill gate OK"),
+            "kill gate did not pass:\n{stdout}\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
